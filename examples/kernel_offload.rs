@@ -1,0 +1,109 @@
+//! Three-layer composition: the AOT Pallas predicate kernel on the
+//! DPU data path.
+//!
+//! Builds a real cuckoo cache table (L3), exports its dense slot
+//! arrays, and evaluates GetPage@LSN offload predicates for a batch of
+//! requests with the AOT-compiled Pallas kernel via PJRT (L1/L2),
+//! verifying every decision against the scalar rust path — then runs
+//! the checksum kernel over the pages an offloaded batch would serve.
+//!
+//! Requires `make artifacts` first.
+//!
+//! Run: `cargo run --release --offline --example kernel_offload`
+
+use dds::cache::{CacheItem, CuckooCache};
+use dds::metrics::bench::{time_for, black_box};
+use dds::metrics::fmt_ops;
+use dds::runtime::{checksum_ref, KernelRuntime, CHECKSUM_BATCH, CHECKSUM_PAGE, PREDICATE_BATCH, PREDICATE_SLOTS};
+use dds::sim::Rng;
+use std::time::Duration;
+
+fn main() -> anyhow::Result<()> {
+    let dir = KernelRuntime::artifacts_dir();
+    let mut rt = KernelRuntime::cpu()?;
+    let loaded = rt.load_dir(&dir)?;
+    println!("loaded kernels: {loaded:?}");
+
+    // --- build a real cache table sized for the kernel's AOT shape ----
+    // PREDICATE_SLOTS slots = buckets*4; CuckooCache::new sizes buckets
+    // = next_pow2(2*capacity/4), so capacity = SLOTS/2 gives exactly
+    // PREDICATE_SLOTS slots.
+    let cache = CuckooCache::new(PREDICATE_SLOTS / 2);
+    let mut rng = Rng::new(42);
+    let mut inserted = Vec::new();
+    for _ in 0..PREDICATE_SLOTS / 4 {
+        let page_id = rng.next_range(1 << 40) + 1;
+        let lsn = rng.next_range(1000) + 1;
+        let item = CacheItem::new(lsn, 1, page_id * 8192, 8192);
+        if cache.insert(page_id, item) {
+            inserted.push((page_id, lsn));
+        }
+    }
+    let dense = cache.export_dense();
+    anyhow::ensure!(dense.keys.len() == PREDICATE_SLOTS);
+    println!("cache table: {} entries exported to dense arrays", cache.len());
+
+    // --- batch of GetPage@LSN requests --------------------------------
+    let mut keys = Vec::with_capacity(PREDICATE_BATCH);
+    let mut lsns = Vec::with_capacity(PREDICATE_BATCH);
+    for i in 0..PREDICATE_BATCH {
+        if i % 3 == 0 {
+            // Unknown page → host.
+            keys.push(rng.next_range(1 << 40) + (1 << 50));
+            lsns.push(0);
+        } else {
+            let (page, lsn) = inserted[rng.next_range(inserted.len() as u64) as usize];
+            keys.push(page);
+            // Mix of fresh-enough and too-new requests.
+            lsns.push(if i % 3 == 1 { lsn } else { lsn + 1 });
+        }
+    }
+
+    // --- kernel vs scalar rust ----------------------------------------
+    let hits = rt.predicate_batch(&dense, &keys, &lsns)?;
+    let mut offloaded = 0;
+    for (i, hit) in hits.iter().enumerate() {
+        let scalar = match cache.get(keys[i]) {
+            Some(item) if item.a >= lsns[i] => Some(item),
+            _ => None,
+        };
+        match (hit.offload, scalar) {
+            (true, Some(item)) => {
+                anyhow::ensure!(
+                    (hit.a, hit.b, hit.c, hit.d) == (item.a, item.b, item.c, item.d),
+                    "item mismatch at {i}"
+                );
+                offloaded += 1;
+            }
+            (false, None) => {}
+            // Chained entries are not exported; kernel says host,
+            // scalar says offload — allowed (documented fallback).
+            (false, Some(_)) => {}
+            (true, None) => anyhow::bail!("kernel offloads a request rust would not ({i})"),
+        }
+    }
+    println!(
+        "predicate kernel: {offloaded}/{PREDICATE_BATCH} offloadable, all decisions sound"
+    );
+
+    // --- throughput of the batched predicate path ----------------------
+    let r = time_for(Duration::from_secs(1), |_| {
+        black_box(rt.predicate_batch(&dense, &keys, &lsns).unwrap());
+    });
+    println!(
+        "predicate batches: {:.0}/s → {} predicate evaluations/s (B={PREDICATE_BATCH})",
+        r.ops_per_sec(),
+        fmt_ops(r.ops_per_sec() * PREDICATE_BATCH as f64),
+    );
+
+    // --- checksum the pages an offloaded batch would serve -------------
+    let pages: Vec<u8> =
+        (0..CHECKSUM_BATCH * CHECKSUM_PAGE).map(|i| (i % 251) as u8).collect();
+    let sums = rt.checksum_batch(&pages)?;
+    for (i, page) in pages.chunks(CHECKSUM_PAGE).enumerate() {
+        anyhow::ensure!(sums[i] == checksum_ref(page), "checksum mismatch {i}");
+    }
+    println!("checksum kernel: {} pages verified against rust reference", sums.len());
+    println!("kernel_offload OK");
+    Ok(())
+}

@@ -1,0 +1,66 @@
+//! §Perf probe: wallclock micro-measurements of the L3 hot paths the
+//! optimization pass tracks (EXPERIMENTS.md §Perf).
+//!
+//! Run: `cargo run --release --offline --example perf_probe`
+
+use std::time::Duration;
+
+use dds::dma::DmaChannel;
+use dds::metrics::bench::{black_box, time_for};
+use dds::metrics::fmt_ops;
+use dds::proto::{FileRequest, FileResponse, Status};
+use dds::ring::{ProgressRing, RequestRing, ResponseRing, RingStatus};
+
+fn ring_roundtrip(msg_len: usize, batch: usize) -> f64 {
+    let ring = ProgressRing::new(1 << 22, 1 << 20);
+    let dma = DmaChannel::new();
+    let msg = vec![0xabu8; msg_len];
+    let mut sink = 0u64;
+    let r = time_for(Duration::from_millis(600), |_| {
+        for _ in 0..batch {
+            assert_eq!(ring.try_push(&msg), RingStatus::Ok);
+        }
+        let n = ring.pop_batch_dma(&dma, &mut |m| sink += m[0] as u64);
+        assert_eq!(n, batch);
+    });
+    black_box(sink);
+    r.ops_per_sec() * batch as f64
+}
+
+fn resp_ring_roundtrip(msg_len: usize) -> f64 {
+    let ring = ResponseRing::new(1 << 22);
+    let dma = DmaChannel::new();
+    let msg = vec![0xcdu8; msg_len];
+    let mut sink = 0u64;
+    let r = time_for(Duration::from_millis(600), |_| {
+        assert_eq!(ring.push_dma(&dma, &msg), RingStatus::Ok);
+        ring.pop(&mut |m| sink += m[0] as u64);
+    });
+    black_box(sink);
+    r.ops_per_sec()
+}
+
+fn proto_roundtrip() -> f64 {
+    let payload = vec![7u8; 1024];
+    let r = time_for(Duration::from_millis(400), |i| {
+        let req = FileRequest::write(i, 1, 0, payload.clone());
+        let enc = req.encode();
+        black_box(FileRequest::decode(&enc).unwrap());
+        let resp = FileResponse { req_id: i, status: Status::Ok, data: payload.clone() };
+        black_box(FileResponse::decode(&resp.encode()).unwrap());
+    });
+    r.ops_per_sec()
+}
+
+fn main() {
+    println!("== L3 hot-path probe (single core) ==");
+    for (label, len, batch) in
+        [("8 B msgs, batch 32", 8, 32), ("1 KB msgs, batch 8", 1024, 8), ("8 KB msgs, batch 8", 8192, 8)]
+    {
+        println!("req ring  {label:>20}: {} msgs/s", fmt_ops(ring_roundtrip(len, batch)));
+    }
+    for (label, len) in [("64 B", 64), ("1 KB", 1024), ("8 KB", 8192)] {
+        println!("resp ring {label:>20}: {} msgs/s", fmt_ops(resp_ring_roundtrip(len)));
+    }
+    println!("proto enc/dec (1 KB w+r)  : {} pairs/s", fmt_ops(proto_roundtrip()));
+}

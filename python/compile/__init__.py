@@ -1,0 +1,4 @@
+"""Build-time Python for DDS: Layer-2 JAX models over Layer-1 Pallas
+kernels, AOT-lowered to HLO text by ``compile.aot``. Never imported at
+runtime — the rust coordinator executes the artifacts via PJRT.
+"""

@@ -1,0 +1,65 @@
+"""AOT lowering: JAX models → HLO **text** artifacts for the rust PJRT
+runtime.
+
+HLO text — not ``lowered.compile()`` serialization — is the interchange
+format: jax ≥ 0.5 emits HloModuleProtos with 64-bit instruction ids
+that the xla crate's xla_extension 0.5.1 rejects (``proto.id() <=
+INT_MAX``); the text parser reassigns ids and round-trips cleanly.
+See /opt/xla-example/README.md.
+
+Usage: ``python -m compile.aot --outdir ../artifacts``
+The Makefile invokes this once; rust never touches Python again.
+"""
+
+import argparse
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+jax.config.update("jax_enable_x64", True)
+
+
+def to_hlo_text(lowered) -> str:
+    """Convert a jax lowering to XLA HLO text via stablehlo."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+ARTIFACTS = {
+    "predicate": (model.predicate_model, model.predicate_example_args),
+    "checksum": (model.checksum_model, model.checksum_example_args),
+}
+
+
+def build(outdir: str, only=None) -> list[str]:
+    os.makedirs(outdir, exist_ok=True)
+    written = []
+    for name, (fn, args_fn) in ARTIFACTS.items():
+        if only and name not in only:
+            continue
+        lowered = jax.jit(fn).lower(*args_fn())
+        text = to_hlo_text(lowered)
+        path = os.path.join(outdir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {name}: {len(text)} chars -> {path}")
+        written.append(path)
+    return written
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--outdir", default="../artifacts", help="artifact directory")
+    ap.add_argument("--only", nargs="*", help="subset of artifact names")
+    args = ap.parse_args()
+    build(args.outdir, args.only)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,14 @@
+"""Layer-1 Pallas kernels for the DDS DPU data path.
+
+Kernels mirror (bit-exactly) the rust DPU components they accelerate:
+
+- ``cuckoo``    — batched two-choice cuckoo-hash lookup over the DPU
+                  cache table's dense slot arrays (§6.1).
+- ``predicate`` — the GetPage@LSN offload predicate fused on top of the
+                  lookup (§9.1): ``offload = found & (cached_lsn >= lsn)``.
+- ``checksum``  — Fletcher-style page integrity checksum, the stand-in
+                  for the DPU's data-path hardware accelerators (§2).
+
+All kernels are lowered with ``interpret=True`` — the CPU PJRT plugin
+cannot execute Mosaic custom-calls (see DESIGN.md §Hardware-Adaptation).
+"""

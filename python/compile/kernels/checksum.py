@@ -1,0 +1,49 @@
+"""Pallas kernel: Fletcher-style page checksum.
+
+Stand-in for the BF-2 data-path accelerators (§2: "executing
+corresponding workloads in hardware accelerators can be orders of
+magnitude faster") — the DPU can checksum pages as it serves them.
+
+Math: over little-endian u32 words w_0..w_{N-1},
+  s1 = Σ w_i            mod 2^32
+  s2 = Σ (N - i) * w_i  mod 2^32     (≡ sum of prefix sums)
+result = s2 << 32 | s1.
+Deferring the modulo to the end is exact in u64: products ≤ 2^43 and
+N ≤ 2^11 keep the accumulation below 2^54.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+jax.config.update("jax_enable_x64", True)
+
+
+def _checksum_kernel(pages_ref, out_ref):
+    pages = pages_ref[...].astype(jnp.uint64)  # [Bt, W]
+    w = pages.shape[1]
+    s1 = jnp.sum(pages, axis=1) & jnp.uint64(0xFFFFFFFF)
+    # Weights N, N-1, …, 1 — generated with iota INSIDE the kernel
+    # (pallas rejects captured host constants).
+    iota = jax.lax.broadcasted_iota(jnp.uint64, (w,), 0)
+    weights = jnp.uint64(w) - iota
+    s2 = jnp.sum(pages * weights[None, :], axis=1) & jnp.uint64(0xFFFFFFFF)
+    out_ref[...] = (s2 << jnp.uint64(32)) | s1
+
+
+@functools.partial(jax.jit, static_argnames=("block_b",))
+def page_checksum(pages_u32, *, block_b=4):
+    """Checksum a batch of pages: uint32[B, W] → uint64[B]."""
+    b, w = pages_u32.shape
+    assert b % block_b == 0
+    grid = (b // block_b,)
+    return pl.pallas_call(
+        _checksum_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((block_b, w), lambda i: (i, 0))],
+        out_specs=[pl.BlockSpec((block_b,), lambda i: (i,))],
+        out_shape=[jax.ShapeDtypeStruct((b,), jnp.uint64)],
+        interpret=True,
+    )(pages_u32)[0]

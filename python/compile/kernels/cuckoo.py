@@ -1,0 +1,88 @@
+"""Pallas kernel: batched two-choice cuckoo lookup (§6.1).
+
+TPU adaptation of the DPU cache-table probe (DESIGN.md
+§Hardware-Adaptation): instead of per-packet scalar probes on Arm
+cores, the traffic director batches request keys and evaluates one
+vectorized lookup. The dense table tile (8192 slots × 8 B keys + 32 B
+items ≈ 320 KB) fits comfortably in VMEM; the batch dimension is tiled
+by ``BlockSpec`` so each grid step processes ``block_b`` keys.
+
+The kernel is gather/compare-bound — the roofline target is memory
+bandwidth, not MXU.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import H1_MUL, H1_SHIFT, H2_MUL, H2_SHIFT, H2_XOR_SHIFT, SLOTS
+
+jax.config.update("jax_enable_x64", True)
+
+
+def _lookup_kernel(tk_ref, ti_ref, keys_ref, found_ref, items_ref):
+    """One batch tile: probe both candidate buckets of each key."""
+    tk = tk_ref[...]  # [S]           table keys (VMEM-resident tile)
+    ti = ti_ref[...]  # [S, 4]        table items
+    k = keys_ref[...]  # [Bt]
+
+    nbuckets = tk.shape[0] // SLOTS
+    mask = jnp.uint64(nbuckets - 1)
+    b1 = (k * H1_MUL >> jnp.uint64(H1_SHIFT)) & mask
+    x = k ^ (k >> jnp.uint64(H2_XOR_SHIFT))
+    b2 = (x * H2_MUL >> jnp.uint64(H2_SHIFT)) & mask
+
+    offs = jnp.arange(SLOTS, dtype=jnp.uint64)
+    # [Bt, 2*SLOTS] flat candidate slots.
+    cand = jnp.concatenate(
+        [
+            b1[:, None] * jnp.uint64(SLOTS) + offs[None, :],
+            b2[:, None] * jnp.uint64(SLOTS) + offs[None, :],
+        ],
+        axis=1,
+    ).astype(jnp.int32)
+    cand_keys = tk[cand]  # gather [Bt, 8]
+    match = cand_keys == k[:, None]
+    found = jnp.any(match, axis=1)
+    first = jnp.argmax(match, axis=1)
+    rows = cand[jnp.arange(cand.shape[0]), first]
+    items = ti[rows]  # [Bt, 4]
+    items = jnp.where(found[:, None], items, jnp.uint64(0))
+
+    found_ref[...] = found.astype(jnp.uint64)
+    items_ref[...] = items
+
+
+@functools.partial(jax.jit, static_argnames=("block_b",))
+def cuckoo_lookup(table_keys, table_items, keys, *, block_b=256):
+    """Batched lookup.
+
+    table_keys : uint64[S], table_items: uint64[S,4], keys: uint64[B]
+    → (found uint64[B], items uint64[B,4]). B must divide by block_b.
+    """
+    b = keys.shape[0]
+    s = table_keys.shape[0]
+    assert b % block_b == 0, f"batch {b} not divisible by block {block_b}"
+    grid = (b // block_b,)
+    return pl.pallas_call(
+        _lookup_kernel,
+        grid=grid,
+        in_specs=[
+            # The table tile is replicated to every grid step (index_map
+            # pins block 0) — it lives in VMEM across the whole sweep.
+            pl.BlockSpec((s,), lambda i: (0,)),
+            pl.BlockSpec((s, 4), lambda i: (0, 0)),
+            pl.BlockSpec((block_b,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_b,), lambda i: (i,)),
+            pl.BlockSpec((block_b, 4), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b,), jnp.uint64),
+            jax.ShapeDtypeStruct((b, 4), jnp.uint64),
+        ],
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(table_keys, table_items, keys)

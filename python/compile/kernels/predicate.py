@@ -1,0 +1,92 @@
+"""Pallas kernel: fused GetPage@LSN offload predicate (§6.1, §9.1).
+
+Fuses the cuckoo lookup with the freshness check so one kernel sweep
+answers, per request: *can the DPU serve this page?* — ``offload =
+found & (cached_lsn >= requested_lsn)`` — and if so, where the page
+lives (`file_id`, `offset`, `size` from the cache item).
+
+Output contract (matches `rust/src/runtime::predicate_batch`):
+    (mask u64[B], a u64[B], b u64[B], cd u64[B,2])
+with item words zeroed when ``mask == 0``.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import H1_MUL, H1_SHIFT, H2_MUL, H2_SHIFT, H2_XOR_SHIFT, SLOTS
+
+jax.config.update("jax_enable_x64", True)
+
+
+def _predicate_kernel(tk_ref, ti_ref, keys_ref, lsns_ref, mask_ref, a_ref, b_ref, cd_ref):
+    tk = tk_ref[...]
+    ti = ti_ref[...]
+    k = keys_ref[...]
+    lsns = lsns_ref[...]
+
+    nbuckets = tk.shape[0] // SLOTS
+    bmask = jnp.uint64(nbuckets - 1)
+    b1 = (k * H1_MUL >> jnp.uint64(H1_SHIFT)) & bmask
+    x = k ^ (k >> jnp.uint64(H2_XOR_SHIFT))
+    b2 = (x * H2_MUL >> jnp.uint64(H2_SHIFT)) & bmask
+
+    offs = jnp.arange(SLOTS, dtype=jnp.uint64)
+    cand = jnp.concatenate(
+        [
+            b1[:, None] * jnp.uint64(SLOTS) + offs[None, :],
+            b2[:, None] * jnp.uint64(SLOTS) + offs[None, :],
+        ],
+        axis=1,
+    ).astype(jnp.int32)
+    cand_keys = tk[cand]
+    match = cand_keys == k[:, None]
+    found = jnp.any(match, axis=1)
+    first = jnp.argmax(match, axis=1)
+    rows = cand[jnp.arange(cand.shape[0]), first]
+    items = ti[rows]
+
+    # Fused freshness check: the cached LSN (item word a) must cover the
+    # requested LSN.
+    fresh = items[:, 0] >= lsns
+    mask = jnp.logical_and(found, fresh)
+    m64 = mask.astype(jnp.uint64)
+
+    mask_ref[...] = m64
+    a_ref[...] = items[:, 0] * m64
+    b_ref[...] = items[:, 1] * m64
+    cd_ref[...] = items[:, 2:4] * m64[:, None]
+
+
+@functools.partial(jax.jit, static_argnames=("block_b",))
+def offload_predicate(table_keys, table_items, keys, lsns, *, block_b=256):
+    """Fused lookup + predicate over a batch of requests."""
+    b = keys.shape[0]
+    s = table_keys.shape[0]
+    assert b % block_b == 0
+    grid = (b // block_b,)
+    return pl.pallas_call(
+        _predicate_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((s,), lambda i: (0,)),
+            pl.BlockSpec((s, 4), lambda i: (0, 0)),
+            pl.BlockSpec((block_b,), lambda i: (i,)),
+            pl.BlockSpec((block_b,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_b,), lambda i: (i,)),
+            pl.BlockSpec((block_b,), lambda i: (i,)),
+            pl.BlockSpec((block_b,), lambda i: (i,)),
+            pl.BlockSpec((block_b, 2), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b,), jnp.uint64),
+            jax.ShapeDtypeStruct((b,), jnp.uint64),
+            jax.ShapeDtypeStruct((b,), jnp.uint64),
+            jax.ShapeDtypeStruct((b, 2), jnp.uint64),
+        ],
+        interpret=True,
+    )(table_keys, table_items, keys, lsns)

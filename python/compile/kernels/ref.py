@@ -1,0 +1,131 @@
+"""Pure-numpy correctness oracles for the Pallas kernels.
+
+These are the single source of truth for kernel semantics; pytest
+asserts kernel == ref across randomized shapes and values (hypothesis),
+and the rust side re-implements the same functions
+(``rust/src/cache/table.rs`` hashes, ``rust/src/runtime`` checksum) so
+the whole three-layer stack agrees bit-for-bit.
+"""
+
+import numpy as np
+
+# Hash constants — keep in sync with rust/src/cache/table.rs.
+H1_MUL = np.uint64(0x9E3779B97F4A7C15)
+H1_SHIFT = np.uint64(17)
+H2_MUL = np.uint64(0xC2B2AE3D27D4EB4F)
+H2_SHIFT = np.uint64(13)
+H2_XOR_SHIFT = np.uint64(33)
+
+SLOTS = 4
+EMPTY = np.uint64(0xFFFFFFFFFFFFFFFF)
+
+
+def h1(keys: np.ndarray, nbuckets: int) -> np.ndarray:
+    """First cuckoo bucket index (multiply-shift)."""
+    keys = keys.astype(np.uint64)
+    with np.errstate(over="ignore"):
+        return (keys * H1_MUL >> H1_SHIFT) & np.uint64(nbuckets - 1)
+
+
+def h2(keys: np.ndarray, nbuckets: int) -> np.ndarray:
+    """Second cuckoo bucket index (xor-fold multiply-shift)."""
+    keys = keys.astype(np.uint64)
+    with np.errstate(over="ignore"):
+        x = keys ^ (keys >> H2_XOR_SHIFT)
+        return (x * H2_MUL >> H2_SHIFT) & np.uint64(nbuckets - 1)
+
+
+def cuckoo_lookup_ref(table_keys, table_items, keys):
+    """Reference lookup.
+
+    table_keys : uint64[S]      (S = nbuckets * SLOTS; EMPTY = free)
+    table_items: uint64[S, 4]
+    keys       : uint64[B]
+
+    Returns (found uint64[B], items uint64[B, 4]); items are zero on
+    miss.
+    """
+    table_keys = np.asarray(table_keys, dtype=np.uint64)
+    table_items = np.asarray(table_items, dtype=np.uint64)
+    keys = np.asarray(keys, dtype=np.uint64)
+    nbuckets = table_keys.shape[0] // SLOTS
+
+    b1 = h1(keys, nbuckets)
+    b2 = h2(keys, nbuckets)
+    offs = np.arange(SLOTS, dtype=np.uint64)
+    # [B, 2*SLOTS] candidate flat slot indices.
+    cand = np.concatenate(
+        [
+            (b1[:, None] * np.uint64(SLOTS)) + offs[None, :],
+            (b2[:, None] * np.uint64(SLOTS)) + offs[None, :],
+        ],
+        axis=1,
+    ).astype(np.int64)
+    cand_keys = table_keys[cand]  # [B, 8]
+    match = cand_keys == keys[:, None]
+    found = match.any(axis=1)
+    first = match.argmax(axis=1)
+    items = table_items[cand[np.arange(len(keys)), first]]  # [B, 4]
+    items = np.where(found[:, None], items, np.uint64(0))
+    return found.astype(np.uint64), items
+
+
+def predicate_ref(table_keys, table_items, keys, lsns):
+    """Reference offload predicate (§9.1).
+
+    Returns (mask, a, b, cd) with cd packing (c, d) as uint64[B, 2] —
+    the exact output contract of the AOT `predicate` artifact.
+    ``mask = found & (item.a >= lsn)``.
+    """
+    lsns = np.asarray(lsns, dtype=np.uint64)
+    found, items = cuckoo_lookup_ref(table_keys, table_items, keys)
+    mask = (found != 0) & (items[:, 0] >= lsns)
+    mask64 = mask.astype(np.uint64)
+    a = items[:, 0] * mask64
+    b = items[:, 1] * mask64
+    cd = items[:, 2:4] * mask64[:, None]
+    return mask64, a, b, cd
+
+
+def checksum_ref(pages_u32):
+    """Reference Fletcher-style checksum over little-endian u32 words.
+
+    pages_u32: uint32[B, W]. Returns uint64[B]: (s2 << 32) | s1 with
+    s1 = sum(w) mod 2^32 and s2 = sum of prefix sums mod 2^32.
+    """
+    pages = np.asarray(pages_u32, dtype=np.uint64)
+    w = pages.shape[1]
+    s1 = pages.sum(axis=1) & np.uint64(0xFFFFFFFF)
+    weights = np.arange(w, 0, -1, dtype=np.uint64)  # N, N-1, …, 1
+    s2 = (pages * weights[None, :]).sum(axis=1) & np.uint64(0xFFFFFFFF)
+    return (s2 << np.uint64(32)) | s1
+
+
+def build_dense_table(entries, nbuckets):
+    """Place (key, item) pairs into dense slot arrays using the same
+    two-choice discipline as the rust table (slots only, no chains).
+
+    Returns (table_keys uint64[S], table_items uint64[S,4], placed) —
+    `placed` lists the entries that fit (the rest would chain on the
+    real table and miss in the kernel, which is the documented
+    fall-back-to-host behaviour).
+    """
+    S = nbuckets * SLOTS
+    table_keys = np.full(S, EMPTY, dtype=np.uint64)
+    table_items = np.zeros((S, 4), dtype=np.uint64)
+    placed = []
+    for key, item in entries:
+        key_arr = np.array([key], dtype=np.uint64)
+        done = False
+        for b in (int(h1(key_arr, nbuckets)[0]), int(h2(key_arr, nbuckets)[0])):
+            for s in range(SLOTS):
+                flat = b * SLOTS + s
+                if table_keys[flat] == EMPTY:
+                    table_keys[flat] = np.uint64(key)
+                    table_items[flat] = np.asarray(item, dtype=np.uint64)
+                    placed.append((int(key), tuple(int(x) for x in item)))
+                    done = True
+                    break
+            if done:
+                break
+    return table_keys, table_items, placed

@@ -1,0 +1,79 @@
+"""Toeplitz RSS hash, vectorized (§7 core steering).
+
+Pure-jnp (no pallas): the hash is bit-serial by nature; the vectorized
+formulation processes a batch of 12-byte normalized flow tuples at
+once. Kept build-time only — the rust director has its own scalar
+implementation (`rust/src/director/rss.rs`); this module documents the
+math and lets pytest cross-check the two (same key, same semantics) so
+the steering decision can be batch-evaluated on the DPU data path if a
+deployment wants it.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+jax.config.update("jax_enable_x64", True)
+
+# The Microsoft RSS reference key — identical to rust/src/director/rss.rs.
+KEY = np.array(
+    [
+        0x6D, 0x5A, 0x56, 0xDA, 0x25, 0x5B, 0x0E, 0xC2, 0x41, 0x67, 0x25, 0x3D, 0x43,
+        0xA3, 0x8F, 0xB0, 0xD0, 0xCA, 0x2B, 0xCB, 0xAE, 0x7B, 0x30, 0xB4, 0x77, 0xCB,
+        0x2D, 0xA3, 0x80, 0x30, 0xF2, 0x0C, 0x6A, 0x42, 0xB7, 0x3B, 0xBE, 0xAC, 0x01,
+        0xFA,
+    ],
+    dtype=np.uint8,
+)
+
+
+def _key_windows(n_bits: int) -> np.ndarray:
+    """32-bit key window for each input bit position (precomputed)."""
+    key_bits = np.unpackbits(KEY)
+    windows = np.zeros(n_bits, dtype=np.uint64)
+    for i in range(n_bits):
+        w = 0
+        for j in range(32):
+            bit = key_bits[i + j] if i + j < len(key_bits) else 0
+            w = (w << 1) | int(bit)
+        windows[i] = w
+    return windows
+
+
+def toeplitz_hash_batch(tuples_u8: np.ndarray) -> np.ndarray:
+    """Hash a batch of byte tuples: uint8[B, N] → uint32[B].
+
+    result[b] = XOR over set bits i of window(i) — the standard Toeplitz
+    formulation, vectorized as a masked XOR-reduction.
+    """
+    tuples_u8 = np.asarray(tuples_u8, dtype=np.uint8)
+    b, n = tuples_u8.shape
+    bits = np.unpackbits(tuples_u8, axis=1).astype(np.uint64)  # [B, 8N]
+    windows = _key_windows(8 * n)  # [8N]
+    masked = jnp.asarray(bits) * jnp.asarray(windows)[None, :]
+    # XOR-reduce along the bit axis.
+    out = jax.lax.reduce(
+        masked, jnp.uint64(0), lambda a, c: jnp.bitwise_xor(a, c), dimensions=[1]
+    )
+    return np.asarray(out, dtype=np.uint64).astype(np.uint32)
+
+
+def normalize_tuple(client_ip, client_port, server_ip, server_port) -> np.ndarray:
+    """Order-normalized 12-byte tuple — both flow directions produce the
+    same bytes (symmetric steering, §7); mirrors
+    `rust/src/director/rss.rs::rss_core`."""
+    a = (int(client_ip), int(client_port))
+    b = (int(server_ip), int(server_port))
+    lo, hi = (a, b) if a <= b else (b, a)
+    out = np.zeros(12, dtype=np.uint8)
+    out[0:4] = np.frombuffer(int(lo[0]).to_bytes(4, "big"), dtype=np.uint8)
+    out[4:8] = np.frombuffer(int(hi[0]).to_bytes(4, "big"), dtype=np.uint8)
+    out[8:10] = np.frombuffer(int(lo[1]).to_bytes(2, "big"), dtype=np.uint8)
+    out[10:12] = np.frombuffer(int(hi[1]).to_bytes(2, "big"), dtype=np.uint8)
+    return out
+
+
+def rss_core_batch(tuples, cores: int) -> np.ndarray:
+    """Steer a batch of (cip, cport, sip, sport) tuples to cores."""
+    normalized = np.stack([normalize_tuple(*t) for t in tuples])
+    return toeplitz_hash_batch(normalized).astype(np.uint64) % np.uint64(cores)

@@ -1,0 +1,55 @@
+"""Layer-2 JAX models: the compute graphs the rust coordinator executes.
+
+Each model is a jitted JAX function calling the Layer-1 Pallas kernels;
+``compile.aot`` lowers them once to HLO text. Shapes are fixed at AOT
+time (PJRT executables are monomorphic); the rust runtime pads batches
+to these shapes (see ``rust/src/runtime``).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.checksum import page_checksum
+from .kernels.predicate import offload_predicate
+
+jax.config.update("jax_enable_x64", True)
+
+# AOT shapes — keep in sync with rust/src/runtime/mod.rs constants.
+PREDICATE_BATCH = 1024
+PREDICATE_SLOTS = 8192
+PREDICATE_BLOCK = 256
+CHECKSUM_BATCH = 16
+CHECKSUM_PAGE_WORDS = 8192 // 4
+CHECKSUM_BLOCK = 4
+
+
+def predicate_model(table_keys, table_items, keys, lsns):
+    """The traffic-director batch predicate (§5.1/§6.1 on TPU idioms).
+
+    One fused kernel sweep: cuckoo lookup + LSN freshness. Returns the
+    4-tuple contract described in ``kernels.predicate``.
+    """
+    mask, a, b, cd = offload_predicate(
+        table_keys, table_items, keys, lsns, block_b=PREDICATE_BLOCK
+    )
+    return mask, a, b, cd
+
+
+def checksum_model(pages_u32):
+    """Batch page-integrity checksum (accelerator stand-in)."""
+    return (page_checksum(pages_u32, block_b=CHECKSUM_BLOCK),)
+
+
+def predicate_example_args():
+    """ShapeDtypeStructs for AOT lowering of the predicate model."""
+    u64 = jnp.uint64
+    return (
+        jax.ShapeDtypeStruct((PREDICATE_SLOTS,), u64),
+        jax.ShapeDtypeStruct((PREDICATE_SLOTS, 4), u64),
+        jax.ShapeDtypeStruct((PREDICATE_BATCH,), u64),
+        jax.ShapeDtypeStruct((PREDICATE_BATCH,), u64),
+    )
+
+
+def checksum_example_args():
+    return (jax.ShapeDtypeStruct((CHECKSUM_BATCH, CHECKSUM_PAGE_WORDS), jnp.uint32),)

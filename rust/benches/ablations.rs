@@ -1,0 +1,140 @@
+//! Ablations of DDS design choices called out in DESIGN.md (REAL
+//! measurements on the functional plane).
+//!
+//! 1. **Maximum allowable progress (M)** — §4.1's batching knob: DMA
+//!    ops per message and message rate vs M.
+//! 2. **Cache-table load factor** — lookup rate and chain occupancy as
+//!    the table fills (the §6.1 chained-bucket fallback).
+//! 3. **Response delivery batch (TailB−TailC threshold)** — §4.3's
+//!    batched DMA-write of responses: completion latency vs host-ring
+//!    write amortization on the real storage path.
+
+use std::time::{Duration, Instant};
+
+use dds::cache::{CacheItem, CuckooCache};
+use dds::coordinator::{StorageServer, StorageServerConfig};
+use dds::dma::DmaChannel;
+use dds::fileservice::FileServiceConfig;
+use dds::metrics::bench::black_box;
+use dds::metrics::{fmt_ns, fmt_ops, Table};
+use dds::ring::{ProgressRing, RequestRing};
+
+fn ablate_max_progress() {
+    let mut t = Table::new(
+        "Ablation 1 — max allowable progress M (8 B msgs, REAL)",
+        &["M (msgs)", "msgs/s", "DMA ops/msg"],
+    );
+    for m_msgs in [1usize, 4, 16, 64, 256] {
+        let ring = ProgressRing::new(1 << 20, m_msgs * 16);
+        let dma = DmaChannel::new();
+        let mut sink = 0u64;
+        let mut msgs = 0u64;
+        let start = Instant::now();
+        while start.elapsed() < Duration::from_millis(300) {
+            for _ in 0..m_msgs {
+                let _ = ring.try_push(&[7u8; 8]);
+            }
+            msgs += ring.pop_batch_dma(&dma, &mut |m| sink += m[0] as u64) as u64;
+        }
+        black_box(sink);
+        let rate = msgs as f64 / start.elapsed().as_secs_f64();
+        t.row(&[
+            m_msgs.to_string(),
+            fmt_ops(rate),
+            format!("{:.2}", dma.ops() as f64 / msgs.max(1) as f64),
+        ]);
+    }
+    t.print();
+    println!("larger M amortizes the 3-DMA drain across more messages (§4.1).");
+}
+
+fn ablate_load_factor() {
+    let mut t = Table::new(
+        "Ablation 2 — cache-table load factor (REAL)",
+        &["fill %", "items", "chained", "lookups/s"],
+    );
+    let cap = 1 << 14;
+    for fill_pct in [25usize, 50, 75, 100] {
+        let table = CuckooCache::new(cap);
+        let n = cap * fill_pct / 100;
+        for k in 1..=n as u64 {
+            table.insert(k, CacheItem::new(k, k, k, k));
+        }
+        let stats = table.stats();
+        let mut hits = 0u64;
+        let mut i = 0u64;
+        let start = Instant::now();
+        while start.elapsed() < Duration::from_millis(300) {
+            for _ in 0..64 {
+                let k = 1 + (i.wrapping_mul(0x9E3779B1) % (n as u64));
+                if table.get(k).is_some() {
+                    hits += 1;
+                }
+                i += 1;
+            }
+        }
+        black_box(hits);
+        t.row(&[
+            fill_pct.to_string(),
+            stats.items.to_string(),
+            stats.chain_items.to_string(),
+            fmt_ops(i as f64 / start.elapsed().as_secs_f64()),
+        ]);
+    }
+    t.print();
+    println!("chains absorb collisions near capacity; lookups stay O(1)-ish (§6.1).");
+}
+
+fn ablate_delivery_batch() {
+    let mut t = Table::new(
+        "Ablation 3 — response delivery batch TailB−TailC (1 KB reads, REAL storage path)",
+        &["batch", "IOPS", "p50 per-op wait"],
+    );
+    for batch in [1usize, 8, 32] {
+        let mut cfg = StorageServerConfig::default();
+        cfg.service = FileServiceConfig { delivery_batch: batch, ..Default::default() };
+        let s = StorageServer::build(cfg, None).unwrap();
+        let fe = s.front_end();
+        let dir = fe.create_directory("a").unwrap();
+        let mut f = fe.create_file(dir, "f").unwrap();
+        let g = fe.create_poll().unwrap();
+        fe.poll_add(&mut f, &g);
+        fe.ensure_size(&f, 8 << 20).unwrap();
+
+        let mut done = 0u64;
+        let mut lat = dds::metrics::Histogram::new();
+        let start = Instant::now();
+        while start.elapsed() < Duration::from_millis(600) {
+            // Issue a window of `batch` reads, wait for all.
+            let t0 = Instant::now();
+            let mut ids: Vec<u64> = Vec::new();
+            for i in 0..batch as u64 {
+                if let Ok(id) = fe.read_file(&f, (done + i) % 8000 * 1024, 1024) {
+                    ids.push(id);
+                }
+            }
+            while !ids.is_empty() {
+                for ev in g.poll_wait(Duration::from_millis(20)) {
+                    ids.retain(|&x| x != ev.req_id);
+                }
+            }
+            done += batch as u64;
+            lat.record(t0.elapsed().as_nanos() as u64 / batch as u64);
+        }
+        t.row(&[
+            batch.to_string(),
+            fmt_ops(done as f64 / start.elapsed().as_secs_f64()),
+            fmt_ns(lat.p50()),
+        ]);
+    }
+    t.print();
+    println!("batched DMA-writes amortize doorbells/poll wakeups; on this host the");
+    println!("wakeup cost dominates, so larger batches win on BOTH axes — on real");
+    println!("hardware batch=1 would minimize per-op delivery delay (§4.3).");
+}
+
+fn main() {
+    ablate_max_progress();
+    ablate_load_factor();
+    ablate_delivery_batch();
+}

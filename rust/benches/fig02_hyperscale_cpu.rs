@@ -1,0 +1,29 @@
+//! E02 — Fig 2: CPU cost of the Hyperscale page server for reads.
+//!
+//! Paper: serving 8 KB page reads costs up to 17 cores at 156 K
+//! pages/s, and the DBMS's internal network module is the largest
+//! component.
+
+use dds::baselines::appsim::hyperscale_baseline;
+use dds::metrics::{fmt_ops, Table};
+use dds::sim::Params;
+
+fn main() {
+    let p = Params::paper();
+    let mut t = Table::new(
+        "Fig 2 — Hyperscale page server CPU vs read throughput (8 KB pages)",
+        &["pages/s", "dbms-net cores", "os-net cores", "file+other cores", "total"],
+    );
+    for window in [8usize, 16, 32, 64, 128, 512, 4096] {
+        let (pt, _, _) = hyperscale_baseline(window, &p);
+        t.row(&[
+            fmt_ops(pt.throughput),
+            format!("{:.1}", pt.dbms_net_cores),
+            format!("{:.1}", pt.os_net_cores),
+            format!("{:.1}", pt.file_cores),
+            format!("{:.1}", pt.total()),
+        ]);
+    }
+    t.print();
+    println!("\npaper anchors: ~17 cores total at ~156K pages/s; DBMS net module largest.");
+}

@@ -1,0 +1,26 @@
+//! E04 — Fig 4: responding to TCP messages on host vs on DPU.
+//!
+//! Paper: "the DPU can halve the latency by avoiding forwarding the
+//! message to the host".
+
+use dds::baselines::netlat::fig4_series;
+use dds::metrics::{fmt_ns, Table};
+use dds::sim::Params;
+
+fn main() {
+    let p = Params::paper();
+    let mut t = Table::new(
+        "Fig 4 — TCP echo round-trip: host responds vs DPU responds",
+        &["msg bytes", "host RTT", "DPU RTT", "speedup"],
+    );
+    for (size, host, dpu) in fig4_series(&p) {
+        t.row(&[
+            size.to_string(),
+            fmt_ns(host),
+            fmt_ns(dpu),
+            format!("{:.2}x", host as f64 / dpu as f64),
+        ]);
+    }
+    t.print();
+    println!("\npaper anchor: DPU roughly halves the round trip across sizes.");
+}

@@ -1,0 +1,27 @@
+//! E05 — Fig 5: FASTER RMW throughput on host vs on DPU.
+//!
+//! Paper: "FASTER runs up to 4.5× slower on the DPU than on the host
+//! and can only scale to 8 threads."
+
+use dds::baselines::appsim::faster_rmw;
+use dds::metrics::{fmt_ops, Table};
+use dds::sim::Params;
+
+fn main() {
+    let p = Params::paper();
+    let mut t = Table::new(
+        "Fig 5 — FASTER YCSB RMW throughput (op/s)",
+        &["threads", "host", "DPU", "host/DPU"],
+    );
+    for threads in [1usize, 2, 4, 8, 16, 32, 48, 64] {
+        let (host, dpu) = faster_rmw(threads, &p);
+        t.row(&[
+            threads.to_string(),
+            fmt_ops(host),
+            fmt_ops(dpu),
+            format!("{:.1}x", host / dpu),
+        ]);
+    }
+    t.print();
+    println!("\npaper anchors: ≤8 DPU threads; up to 4.5x slower per-thread on the DPU.");
+}

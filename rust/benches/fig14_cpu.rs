@@ -1,0 +1,50 @@
+//! E14 — Fig 14a/b: achieved throughput vs host CPU cores consumed.
+//!
+//! Paper anchors (1 KB random I/O): reads — baseline 10.7 cores @
+//! 390 K IOPS; DDS files 6.5 cores @ 580 K; DDS offload ~0 cores @
+//! 730 K. Writes — no offload; DDS files still saves >5 cores above
+//! 200 K IOPS.
+
+use dds::baselines::{run_stack, IoDir, StackKind};
+use dds::metrics::{fmt_ops, Table};
+use dds::sim::Params;
+
+fn sweep(dir: IoDir, kinds: &[(StackKind, &str)], p: &Params) {
+    let title = match dir {
+        IoDir::Read => "Fig 14a — reads (1 KB): throughput vs server CPU cores",
+        IoDir::Write => "Fig 14b — writes (1 KB): throughput vs server CPU cores",
+    };
+    let mut t = Table::new(title, &["stack", "window", "IOPS", "host cores", "dpu cores"]);
+    for &(kind, label) in kinds {
+        for window in [32usize, 128, 512, 2048] {
+            let r = run_stack(kind, dir, 1024, window, 8, p);
+            t.row(&[
+                label.to_string(),
+                window.to_string(),
+                fmt_ops(r.throughput),
+                format!("{:.2}", r.server_cores),
+                format!("{:.2}", r.dpu_cores),
+            ]);
+        }
+    }
+    t.print();
+}
+
+fn main() {
+    let p = Params::paper();
+    sweep(
+        IoDir::Read,
+        &[
+            (StackKind::TcpNtfs, "baseline"),
+            (StackKind::TcpDds, "DDS file"),
+            (StackKind::DdsOffloadTcp, "DDS offload"),
+        ],
+        &p,
+    );
+    sweep(
+        IoDir::Write,
+        &[(StackKind::TcpNtfs, "baseline"), (StackKind::TcpDds, "DDS file")],
+        &p,
+    );
+    println!("\npaper anchors: reads 390K@10.7 / 580K@6.5 / 730K@~0 cores; writes 210K vs 290K, >5 cores saved.");
+}

@@ -1,0 +1,49 @@
+//! E15 — Fig 15a/b: achieved throughput vs latency (p50 and p99).
+//!
+//! Paper anchors: reads — baseline 11 ms @ 390 K IOPS vs DDS offload
+//! 780 µs @ 730 K (order of magnitude); DDS files ~6× below baseline.
+//! Writes — baseline tail 48 ms @ 210 K; DDS files 3 ms @ 290 K.
+
+use dds::baselines::{run_stack, IoDir, StackKind};
+use dds::metrics::{fmt_ns, fmt_ops, Table};
+use dds::sim::Params;
+
+fn sweep(dir: IoDir, kinds: &[(StackKind, &str)], p: &Params) {
+    let title = match dir {
+        IoDir::Read => "Fig 15a — reads (1 KB): throughput vs latency",
+        IoDir::Write => "Fig 15b — writes (1 KB): throughput vs latency",
+    };
+    let mut t = Table::new(title, &["stack", "window", "IOPS", "p50", "p99"]);
+    for &(kind, label) in kinds {
+        for window in [32usize, 128, 512, 2048, 8192] {
+            let r = run_stack(kind, dir, 1024, window, 8, p);
+            t.row(&[
+                label.to_string(),
+                window.to_string(),
+                fmt_ops(r.throughput),
+                fmt_ns(r.p50_ns),
+                fmt_ns(r.p99_ns),
+            ]);
+        }
+    }
+    t.print();
+}
+
+fn main() {
+    let p = Params::paper();
+    sweep(
+        IoDir::Read,
+        &[
+            (StackKind::TcpNtfs, "baseline"),
+            (StackKind::TcpDds, "DDS file"),
+            (StackKind::DdsOffloadTcp, "DDS offload"),
+        ],
+        &p,
+    );
+    sweep(
+        IoDir::Write,
+        &[(StackKind::TcpNtfs, "baseline"), (StackKind::TcpDds, "DDS file")],
+        &p,
+    );
+    println!("\npaper anchors: reads 11ms@390K vs 780µs@730K; writes 48ms tail vs 3ms.");
+}

@@ -1,0 +1,183 @@
+//! E17 — Fig 17a/b: DMA ring-buffer performance.
+//!
+//! Two-part methodology (this container exposes a SINGLE CPU core, so
+//! parallel speedups cannot be *measured*; see DESIGN.md §1):
+//!
+//! 1. REAL single-threaded measurement of each design's per-message
+//!    costs: producer push, consumer drain, and — crucially — the DMA
+//!    operations per message (the paper's whole argument): the progress
+//!    ring moves a batch with 3 DMA ops, FaRM-style pays ≥2 DMA ops
+//!    *per message* plus empty polls, the locked ring batches but
+//!    serializes producers.
+//! 2. The measured constants + the calibrated PCIe round-trip feed the
+//!    queueing testbed to produce the Fig 17 curves (throughput and
+//!    median latency vs producer count).
+//!
+//! Paper anchors (8 B messages): FaRM-style peaks at 64 K op/s;
+//! lock-based 22 M at 1 producer → 1.4 M at 64; progress ring 6.5 M at
+//! 64 producers (10× / 4.5× better).
+
+use std::time::Duration;
+
+use dds::dma::DmaChannel;
+use dds::metrics::bench::time_for;
+use dds::metrics::{fmt_ns, fmt_ops, Table};
+use dds::ring::{FarmRing, LockedRing, ProgressRing, RequestRing, RingStatus};
+use dds::sim::{Engine, FlowSpec, Params, Stage, StageChain, MS, SEC};
+
+const MSG: [u8; 8] = [7u8; 8];
+const BATCH: u64 = 32; // M = 32 messages
+
+/// Measured per-design costs, ns.
+#[derive(Debug, Clone, Copy)]
+struct Costs {
+    /// Producer-side cost to insert one message (uncontended).
+    push_ns: u64,
+    /// Consumer-side CPU to drain one message, excluding DMA waits.
+    drain_ns: u64,
+    /// DMA ops per message (fractional for batched designs).
+    dma_ops_per_msg: f64,
+    /// Serialized producer critical section (lock designs), ns; 0 if
+    /// producers don't serialize.
+    serial_ns: u64,
+}
+
+fn measure_progress() -> Costs {
+    let ring = ProgressRing::new(1 << 20, (BATCH * 16) as usize);
+    let dma = DmaChannel::new();
+    // Alternate fill-batch / drain-batch; attribute costs.
+    let mut sink = 0u64;
+    let push = time_for(Duration::from_millis(300), |_| {
+        if ring.try_push(&MSG) != RingStatus::Ok {
+            ring.pop_batch_dma(&dma, &mut |m| sink += m[0] as u64);
+        }
+    });
+    // Pure drain cost: prefill then drain.
+    let ring = ProgressRing::new(1 << 20, (BATCH * 16) as usize);
+    dma.reset();
+    let mut msgs = 0u64;
+    let drain = time_for(Duration::from_millis(300), |_| {
+        for _ in 0..BATCH {
+            let _ = ring.try_push(&MSG);
+        }
+        msgs += ring.pop_batch_dma(&dma, &mut |m| sink += m[0] as u64) as u64;
+    });
+    std::hint::black_box(sink);
+    let dma_per_msg = dma.ops() as f64 / msgs.max(1) as f64;
+    Costs {
+        push_ns: push.ns_per_op() as u64,
+        drain_ns: (drain.ns_per_op() / BATCH as f64) as u64,
+        dma_ops_per_msg: dma_per_msg,
+        serial_ns: 0,
+    }
+}
+
+fn measure_farm() -> Costs {
+    let ring = FarmRing::new(1 << 12, 16);
+    let dma = DmaChannel::new();
+    let mut sink = 0u64;
+    let mut msgs = 0u64;
+    let r = time_for(Duration::from_millis(300), |_| {
+        let _ = ring.try_push(&MSG);
+        msgs += ring.pop_one_dma(&dma, &mut |m| sink += m[0] as u64) as u64;
+    });
+    std::hint::black_box(sink);
+    Costs {
+        push_ns: (r.ns_per_op() / 2.0) as u64,
+        drain_ns: (r.ns_per_op() / 2.0) as u64,
+        dma_ops_per_msg: dma.ops() as f64 / msgs.max(1) as f64,
+        serial_ns: 0,
+    }
+}
+
+fn measure_locked() -> Costs {
+    let ring = LockedRing::new(1 << 14);
+    let mut sink = 0u64;
+    let push = time_for(Duration::from_millis(300), |i| {
+        if ring.try_push(&MSG) != RingStatus::Ok || i % (BATCH * 4) == 0 {
+            ring.pop_batch(&mut |m| sink += m[0] as u64);
+        }
+    });
+    std::hint::black_box(sink);
+    let per_op = push.ns_per_op() as u64;
+    Costs {
+        push_ns: per_op,
+        drain_ns: per_op / 4,
+        // Consumer drains whole backlog per DMA batch: same 3-op batch
+        // pattern as the progress design.
+        dma_ops_per_msg: 3.0 / BATCH as f64,
+        serial_ns: per_op, // the mutex critical section serializes producers
+    }
+}
+
+/// Compose the Fig 17 curves on the testbed from measured costs.
+fn simulate(c: Costs, producers: usize, p: &Params) -> (f64, u64) {
+    let mut e = Engine::new(11).with_warmup(5 * MS);
+    // Producer cores: the host has plenty; each producer thread is a
+    // flow with one token (it blocks until its message is consumed —
+    // closed loop matches the paper's message-exchange benchmark).
+    let serial = if c.serial_ns > 0 { Some(e.add_resource("lock", 1)) } else { None };
+    // Mutex handoff cost grows with contenders (cache-line bouncing +
+    // futex wake chains) — the effect that collapses the lock-based
+    // ring in Fig 17a.
+    let serial_ns = c.serial_ns * (1 + producers as u64 / 4);
+    // The consumer (DPU DMA thread) is one core; per message it pays
+    // drain CPU + its share of DMA ops at PCIe latency.
+    let consumer = e.add_resource("consumer", 1);
+    let dma_ns = (c.dma_ops_per_msg * p.dma_op_ns as f64) as u64;
+    let mut flows = Vec::new();
+    for _ in 0..producers {
+        let chain_serial = serial;
+        let push = c.push_ns;
+        let drain = c.drain_ns;
+        flows.push(FlowSpec::new(1, move |_| {
+            let mut st = Vec::new();
+            match chain_serial {
+                Some(lock) => st.push(Stage::Use { res: lock, ns: serial_ns.max(push) }),
+                None => st.push(Stage::Delay(push)),
+            }
+            st.push(Stage::Use { res: consumer, ns: drain + dma_ns });
+            StageChain::new(0, st)
+        }));
+    }
+    let rep = e.run(flows, 1, SEC / 5);
+    (rep.total_throughput(), rep.latency[0].p50())
+}
+
+fn main() {
+    println!("measuring single-threaded ring costs (REAL)…");
+    let designs = [
+        ("progress-lockfree", measure_progress()),
+        ("farm-style", measure_farm()),
+        ("lock-based", measure_locked()),
+    ];
+    let mut tc = Table::new(
+        "Measured per-design costs (single core — see bench header)",
+        &["design", "push", "drain/msg", "DMA ops/msg", "serialized"],
+    );
+    for (name, c) in &designs {
+        tc.row(&[
+            name.to_string(),
+            fmt_ns(c.push_ns),
+            fmt_ns(c.drain_ns),
+            format!("{:.2}", c.dma_ops_per_msg),
+            if c.serial_ns > 0 { fmt_ns(c.serial_ns) } else { "no".into() },
+        ]);
+    }
+    tc.print();
+
+    let p = Params::paper();
+    let mut t = Table::new(
+        "Fig 17a/b — message rate and median transfer time vs producers (composed)",
+        &["design", "producers", "msgs/s", "median"],
+    );
+    for (name, c) in &designs {
+        for producers in [1usize, 4, 16, 64] {
+            let (ops, p50) = simulate(*c, producers, &p);
+            t.row(&[name.to_string(), producers.to_string(), fmt_ops(ops), fmt_ns(p50)]);
+        }
+    }
+    t.print();
+    println!("\npaper anchors: farm ≤ ~64K (≥2 DMA round-trips per message);");
+    println!("locked collapses under producer contention; progress ring dominates at 64 producers.");
+}

@@ -1,0 +1,27 @@
+//! E18 — Fig 18: DPU-backed file I/O throughput, zero-copy vs copy.
+//!
+//! Paper: "DDS zero-copy design increases file throughput by up to 93%".
+
+use dds::baselines::appsim::fileio_throughput;
+use dds::metrics::{fmt_ops, Table};
+use dds::sim::Params;
+
+fn main() {
+    let p = Params::paper();
+    let mut t = Table::new(
+        "Fig 18 — DPU file service throughput vs request size",
+        &["io bytes", "zero-copy IOPS", "copy IOPS", "gain"],
+    );
+    for io in [1usize << 10, 4 << 10, 8 << 10, 16 << 10, 32 << 10, 64 << 10] {
+        let zc = fileio_throughput(io, true, 512, &p);
+        let cp = fileio_throughput(io, false, 512, &p);
+        t.row(&[
+            io.to_string(),
+            fmt_ops(zc),
+            fmt_ops(cp),
+            format!("{:+.0}%", (zc / cp - 1.0) * 100.0),
+        ]);
+    }
+    t.print();
+    println!("\npaper anchor: up to +93% from eliminating staging copies (§4.3).");
+}

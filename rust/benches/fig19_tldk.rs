@@ -1,0 +1,29 @@
+//! E19 — Fig 19: efficiency of TLDK for TCP splitting.
+//!
+//! Paper: Linux TCP on the DPU *offsets* the offloading benefit (worse
+//! than host echo); TLDK is ~3× lower latency than Linux-on-DPU and
+//! ~2.5× lower than the vanilla host echo.
+
+use dds::baselines::netlat::fig19_series;
+use dds::metrics::{fmt_ns, Table};
+use dds::sim::Params;
+
+fn main() {
+    let p = Params::paper();
+    let mut t = Table::new(
+        "Fig 19 — echo RTT: host vs DPU(Linux TCP) vs DPU(TLDK)",
+        &["msg bytes", "host", "DPU Linux", "DPU TLDK", "TLDK vs Linux", "TLDK vs host"],
+    );
+    for (size, host, linux, tldk) in fig19_series(&p) {
+        t.row(&[
+            size.to_string(),
+            fmt_ns(host),
+            fmt_ns(linux),
+            fmt_ns(tldk),
+            format!("{:.1}x", linux as f64 / tldk as f64),
+            format!("{:.1}x", host as f64 / tldk as f64),
+        ]);
+    }
+    t.print();
+    println!("\npaper anchors: Linux-on-DPU > vanilla host; TLDK ≈3x under Linux, ≈2.5x under host.");
+}

@@ -1,0 +1,27 @@
+//! E20 — Fig 20: TLDK on the host vs TLDK on the DPU.
+//!
+//! Paper: "processing large messages with TLDK on the DPU is faster"
+//! — the NIC→host round trip is avoided and DPU memory is more
+//! efficient for payload processing.
+
+use dds::baselines::netlat::fig20_series;
+use dds::metrics::{fmt_ns, Table};
+use dds::sim::Params;
+
+fn main() {
+    let p = Params::paper();
+    let mut t = Table::new(
+        "Fig 20 — echo RTT with TLDK: host vs DPU",
+        &["msg bytes", "TLDK@host", "TLDK@DPU", "DPU speedup"],
+    );
+    for (size, host, dpu) in fig20_series(&p) {
+        t.row(&[
+            size.to_string(),
+            fmt_ns(host),
+            fmt_ns(dpu),
+            format!("{:.2}x", host as f64 / dpu as f64),
+        ]);
+    }
+    t.print();
+    println!("\npaper shape: comparable for small messages; DPU wins as payloads grow.");
+}

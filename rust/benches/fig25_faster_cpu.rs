@@ -1,0 +1,26 @@
+//! E25 — Fig 25: disaggregated FASTER CPU cost (YCSB uniform reads).
+//!
+//! Paper: 340 K op/s costs 20 host cores on the baseline; FASTER with
+//! DDS achieves 970 K op/s "with zero host CPU investment".
+
+use dds::baselines::appsim::faster_disaggregated;
+use dds::metrics::{fmt_ops, Table};
+use dds::sim::Params;
+
+fn main() {
+    let p = Params::paper();
+    let mut t = Table::new(
+        "Fig 25 — disaggregated FASTER: throughput vs host CPU cores",
+        &["system", "window", "op/s", "host cores"],
+    );
+    for window in [64usize, 256, 1024, 4096] {
+        let (tput, _, _, cores) = faster_disaggregated(window, false, &p);
+        t.row(&["baseline".into(), window.to_string(), fmt_ops(tput), format!("{cores:.1}")]);
+    }
+    for window in [64usize, 256, 1024, 4096] {
+        let (tput, _, _, cores) = faster_disaggregated(window, true, &p);
+        t.row(&["DDS".into(), window.to_string(), fmt_ops(tput), format!("{cores:.2}")]);
+    }
+    t.print();
+    println!("\npaper anchors: baseline 340K @ 20 cores; DDS 970K @ ~0 host cores.");
+}

@@ -1,0 +1,385 @@
+//! FASTER-style key-value store (§9.2).
+//!
+//! A miniature hybrid-log KV: records live in a log that spans main
+//! memory and secondary storage. The in-memory tail supports in-place
+//! updates; older records are flushed to an *IDevice* — here a DDS file
+//! accessed through the front-end library, exactly the integration the
+//! paper describes ("we first implement an IDevice with its front-end
+//! library"). A hash index maps keys to memory or file addresses.
+//!
+//! The DDS offload logic caches `{key → (file id, file offset, record
+//! size)}` on flush writes and invalidates keys the host reads back for
+//! RMW, so remote `KvGet`s of storage-resident records execute entirely
+//! on the DPU (§9.2: 970 K op/s with zero host CPU).
+//!
+//! On-device record layout: `[key u64 | len u32 | value…]`.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::cache::{CacheItem, CuckooCache};
+use crate::dpufs::FileId;
+use crate::filelib::{DdsClient, DdsFile, PollGroup};
+use crate::offload::{OffloadLogic, ReadOp, RoutedReq, WriteOp};
+use crate::proto::{AppRequest, NetMsg, NetResp};
+
+use super::HostApp;
+
+/// Record header bytes on the device.
+pub const REC_HEADER: usize = 12;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Addr {
+    /// Index into the in-memory tail.
+    Mem(usize),
+    /// Location on the IDevice.
+    Disk { offset: u64, len: u32 },
+}
+
+/// The mini FASTER store.
+pub struct MiniFaster {
+    pub client: DdsClient,
+    pub file: DdsFile,
+    pub group: Arc<PollGroup>,
+    /// DPU cache table handle for explicit invalidation: when a record
+    /// moves back into the mutable tail (disk read for RMW / re-upsert)
+    /// the DPU must stop serving it (§9.2 invalidate-on-read). The
+    /// generic offset-keyed `Invalidate` hook cannot recover the KV key
+    /// from a raw read, so the integration invalidates by key here —
+    /// same effect, same trigger (the host read).
+    cache: Option<Arc<CuckooCache>>,
+    index: HashMap<u64, Addr>,
+    /// In-memory mutable tail: (key, value).
+    tail: Vec<(u64, Vec<u8>)>,
+    tail_bytes: usize,
+    /// Flush the tail to the IDevice beyond this budget (a small budget
+    /// forces the storage-resident behaviour of §9.2).
+    pub mem_budget: usize,
+    /// Next append offset on the device.
+    log_end: u64,
+    /// Stats.
+    pub flushes: u64,
+    pub disk_reads: u64,
+    pub mem_hits: u64,
+}
+
+impl MiniFaster {
+    pub fn new(
+        client: DdsClient,
+        mut file: DdsFile,
+        group: Arc<PollGroup>,
+        mem_budget: usize,
+    ) -> Self {
+        client.poll_add(&mut file, &group);
+        MiniFaster {
+            client,
+            file,
+            group,
+            cache: None,
+            index: HashMap::new(),
+            tail: Vec::new(),
+            tail_bytes: 0,
+            mem_budget,
+            log_end: 0,
+            flushes: 0,
+            disk_reads: 0,
+            mem_hits: 0,
+        }
+    }
+
+    /// Attach the DPU cache table for key invalidation (DDS mode).
+    pub fn with_cache(mut self, cache: Arc<CuckooCache>) -> Self {
+        self.cache = Some(cache);
+        self
+    }
+
+    fn wait_for(&self, req_id: u64) -> anyhow::Result<Vec<u8>> {
+        let deadline = std::time::Instant::now() + Duration::from_secs(5);
+        loop {
+            for ev in self.group.poll_wait(Duration::from_millis(50)) {
+                if ev.req_id == req_id {
+                    anyhow::ensure!(ev.ok, "IDevice op failed");
+                    return Ok(ev.data);
+                }
+            }
+            anyhow::ensure!(std::time::Instant::now() < deadline, "IDevice op timeout");
+        }
+    }
+
+    /// Upsert: in-place if the record is in the mutable tail, otherwise
+    /// append a new version.
+    pub fn upsert(&mut self, key: u64, value: Vec<u8>) -> anyhow::Result<()> {
+        // A storage-resident record is being superseded by an in-memory
+        // version: the DPU must not serve the old image.
+        if matches!(self.index.get(&key), Some(Addr::Disk { .. })) {
+            if let Some(cache) = &self.cache {
+                cache.remove(key);
+            }
+        }
+        match self.index.get(&key) {
+            Some(Addr::Mem(i)) => {
+                let i = *i;
+                self.tail_bytes = self.tail_bytes - self.tail[i].1.len() + value.len();
+                self.tail[i].1 = value;
+            }
+            _ => {
+                self.tail_bytes += value.len() + REC_HEADER;
+                self.tail.push((key, value));
+                self.index.insert(key, Addr::Mem(self.tail.len() - 1));
+            }
+        }
+        if self.tail_bytes > self.mem_budget {
+            self.flush()?;
+        }
+        Ok(())
+    }
+
+    /// Read-modify-write (the §2/Fig 5 workload): fetch (memory or
+    /// IDevice), bump every byte, write back in place or re-append.
+    pub fn rmw(&mut self, key: u64, f: impl FnOnce(&mut Vec<u8>)) -> anyhow::Result<bool> {
+        match self.index.get(&key).copied() {
+            Some(Addr::Mem(i)) => {
+                self.mem_hits += 1;
+                let before = self.tail[i].1.len();
+                f(&mut self.tail[i].1);
+                self.tail_bytes = self.tail_bytes - before + self.tail[i].1.len();
+                Ok(true)
+            }
+            Some(Addr::Disk { offset, len }) => {
+                let mut value = self.read_disk(key, offset, len)?;
+                f(&mut value);
+                self.upsert(key, value)?;
+                Ok(true)
+            }
+            None => Ok(false),
+        }
+    }
+
+    /// Point read.
+    pub fn get(&mut self, key: u64) -> anyhow::Result<Option<Vec<u8>>> {
+        match self.index.get(&key).copied() {
+            Some(Addr::Mem(i)) => {
+                self.mem_hits += 1;
+                Ok(Some(self.tail[i].1.clone()))
+            }
+            Some(Addr::Disk { offset, len }) => Ok(Some(self.read_disk(key, offset, len)?)),
+            None => Ok(None),
+        }
+    }
+
+    fn read_disk(&mut self, key: u64, offset: u64, len: u32) -> anyhow::Result<Vec<u8>> {
+        // Invalidate-on-read (§9.2): the host pulling a record back is
+        // the signal it may change.
+        if let Some(cache) = &self.cache {
+            cache.remove(key);
+        }
+        let req = self
+            .client
+            .read_file(&self.file, offset, len)
+            .map_err(|e| anyhow::anyhow!("read_file: {e}"))?;
+        let rec = self.wait_for(req)?;
+        self.disk_reads += 1;
+        anyhow::ensure!(rec.len() as u32 == len, "short read");
+        let k = u64::from_le_bytes(rec[..8].try_into().unwrap());
+        anyhow::ensure!(k == key, "index/record key mismatch");
+        let vlen = u32::from_le_bytes(rec[8..12].try_into().unwrap()) as usize;
+        Ok(rec[REC_HEADER..REC_HEADER + vlen].to_vec())
+    }
+
+    /// Flush the tail to the IDevice as one gathered write; records
+    /// become storage-resident and the index is repointed (§9.2: "older
+    /// records are flushed to IDevice if memory is insufficient").
+    pub fn flush(&mut self) -> anyhow::Result<()> {
+        if self.tail.is_empty() {
+            return Ok(());
+        }
+        let mut blob = Vec::with_capacity(self.tail_bytes);
+        let mut locations = Vec::with_capacity(self.tail.len());
+        for (key, value) in &self.tail {
+            let rec_off = self.log_end + blob.len() as u64;
+            let rec_len = (REC_HEADER + value.len()) as u32;
+            blob.extend_from_slice(&key.to_le_bytes());
+            blob.extend_from_slice(&(value.len() as u32).to_le_bytes());
+            blob.extend_from_slice(value);
+            locations.push((*key, rec_off, rec_len));
+        }
+        let req = self
+            .client
+            .write_file(&self.file, self.log_end, &blob)
+            .map_err(|e| anyhow::anyhow!("write_file: {e}"))?;
+        self.wait_for(req)?;
+        self.log_end += blob.len() as u64;
+        for (key, offset, len) in locations {
+            self.index.insert(key, Addr::Disk { offset, len });
+        }
+        self.tail.clear();
+        self.tail_bytes = 0;
+        self.flushes += 1;
+        Ok(())
+    }
+
+    pub fn len(&self) -> usize {
+        self.index.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.index.is_empty()
+    }
+}
+
+impl HostApp for MiniFaster {
+    fn handle(&mut self, msg: &NetMsg) -> Vec<NetResp> {
+        let mut out = Vec::with_capacity(msg.requests.len());
+        for (i, r) in msg.requests.iter().enumerate() {
+            let idx = i as u16;
+            let resp = match r {
+                AppRequest::KvGet { key } => match self.get(*key) {
+                    Ok(Some(v)) => NetResp { msg_id: msg.msg_id, idx, status: NetResp::OK, payload: v },
+                    _ => NetResp { msg_id: msg.msg_id, idx, status: NetResp::ERR, payload: vec![] },
+                },
+                AppRequest::KvUpsert { key, value } => match self.upsert(*key, value.clone()) {
+                    Ok(()) => NetResp { msg_id: msg.msg_id, idx, status: NetResp::OK, payload: vec![] },
+                    Err(_) => NetResp { msg_id: msg.msg_id, idx, status: NetResp::ERR, payload: vec![] },
+                },
+                _ => NetResp { msg_id: msg.msg_id, idx, status: NetResp::ERR, payload: vec![] },
+            };
+            out.push(resp);
+        }
+        out
+    }
+}
+
+/// The §9.2 offload logic: cache `{key, file id, file offset, record
+/// size}` on IDevice writes; offload `KvGet`s whose key is cached.
+///
+/// Cache item layout: `a = file_id`, `b = offset`, `c = record len`,
+/// `d = unused`.
+pub struct FasterOffload {
+    pub idevice_file: FileId,
+}
+
+impl OffloadLogic for FasterOffload {
+    fn off_pred(&self, msg: &NetMsg, cache: &CuckooCache) -> (Vec<RoutedReq>, Vec<RoutedReq>) {
+        let mut host = Vec::new();
+        let mut dpu = Vec::new();
+        for (i, r) in msg.requests.iter().enumerate() {
+            let routed = RoutedReq { msg_id: msg.msg_id, idx: i as u16, req: r.clone() };
+            match r {
+                AppRequest::KvGet { key } if cache.get(*key).is_some() => dpu.push(routed),
+                _ => host.push(routed),
+            }
+        }
+        (host, dpu)
+    }
+
+    fn off_func(&self, req: &AppRequest, cache: &CuckooCache) -> Option<ReadOp> {
+        match req {
+            AppRequest::KvGet { key } => {
+                let item = cache.get(*key)?;
+                Some(ReadOp { file_id: FileId(item.a as u32), offset: item.b, size: item.c as u32 })
+            }
+            _ => None,
+        }
+    }
+
+    /// Cache-on-write: parse the flushed record blob.
+    fn cache(&self, w: &WriteOp) -> Vec<(u64, CacheItem)> {
+        if w.file_id != self.idevice_file {
+            return Vec::new();
+        }
+        let mut out = Vec::new();
+        let mut at = 0usize;
+        while at + REC_HEADER <= w.data.len() {
+            let key = u64::from_le_bytes(w.data[at..at + 8].try_into().unwrap());
+            let vlen = u32::from_le_bytes(w.data[at + 8..at + 12].try_into().unwrap()) as usize;
+            let rec_len = REC_HEADER + vlen;
+            if at + rec_len > w.data.len() {
+                break;
+            }
+            out.push((
+                key,
+                CacheItem::new(
+                    self.idevice_file.0 as u64,
+                    w.offset + at as u64,
+                    rec_len as u64,
+                    0,
+                ),
+            ));
+            at += rec_len;
+        }
+        out
+    }
+
+    /// Invalidate-on-read: the host is pulling the record back (e.g. to
+    /// RMW it) — stop serving it from the DPU.
+    fn invalidate(&self, _r: &ReadOp) -> Vec<u64> {
+        // Keys are not derivable from a raw (offset, size) read without
+        // the record header; the host read path resolves this by reading
+        // whole records, and the file service invalidates by scanning
+        // the cache via the read offset is not possible in O(1). The
+        // paper's FASTER integration invalidates the key it reads; we
+        // model that in MiniFaster::read_disk via explicit removal in
+        // integration wiring (see coordinator). Returning nothing here
+        // keeps the hook total.
+        Vec::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn flush_blob_roundtrips_through_cache_hook() {
+        let off = FasterOffload { idevice_file: FileId(9) };
+        // Build a blob of three records at base offset 1000.
+        let mut blob = Vec::new();
+        let mut expect = Vec::new();
+        let mut at = 0usize;
+        for (k, v) in [(1u64, vec![7u8; 5]), (2, vec![8u8; 3]), (3, vec![9u8; 11])] {
+            blob.extend_from_slice(&k.to_le_bytes());
+            blob.extend_from_slice(&(v.len() as u32).to_le_bytes());
+            blob.extend_from_slice(&v);
+            expect.push((k, 1000 + at as u64, (REC_HEADER + v.len()) as u64));
+            at += REC_HEADER + v.len();
+        }
+        let items = off.cache(&WriteOp { file_id: FileId(9), offset: 1000, data: &blob });
+        assert_eq!(items.len(), 3);
+        for ((k, item), (ek, eoff, elen)) in items.iter().zip(&expect) {
+            assert_eq!(k, ek);
+            assert_eq!(item.b, *eoff);
+            assert_eq!(item.c, *elen);
+        }
+    }
+
+    #[test]
+    fn off_pred_requires_cached_key() {
+        let off = FasterOffload { idevice_file: FileId(9) };
+        let cache = CuckooCache::new(64);
+        cache.insert(42, CacheItem::new(9, 0, 20, 0));
+        let msg = NetMsg {
+            msg_id: 1,
+            requests: vec![
+                AppRequest::KvGet { key: 42 },
+                AppRequest::KvGet { key: 43 },
+                AppRequest::KvUpsert { key: 42, value: vec![1] },
+            ],
+        };
+        let (host, dpu) = off.off_pred(&msg, &cache);
+        assert_eq!(dpu.len(), 1);
+        assert_eq!(dpu[0].idx, 0);
+        assert_eq!(host.len(), 2);
+    }
+
+    #[test]
+    fn truncated_blob_is_safe() {
+        let off = FasterOffload { idevice_file: FileId(9) };
+        let mut blob = Vec::new();
+        blob.extend_from_slice(&7u64.to_le_bytes());
+        blob.extend_from_slice(&100u32.to_le_bytes()); // claims 100 bytes
+        blob.extend_from_slice(&[1, 2, 3]); // but only 3 present
+        let items = off.cache(&WriteOp { file_id: FileId(9), offset: 0, data: &blob });
+        assert!(items.is_empty());
+    }
+}

@@ -1,0 +1,98 @@
+//! Host-side storage applications (§8.1 benchmark app, §9 production
+//! integrations) plus their DDS offload logic.
+
+pub mod faster;
+pub mod page_server;
+
+pub use faster::{FasterOffload, MiniFaster};
+pub use page_server::{PageServer, PageServerOffload, PAGE_SIZE};
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::filelib::{DdsClient, DdsFile, PollGroup};
+use crate::proto::{AppRequest, NetMsg, NetResp};
+
+/// A host application: consumes application messages (from the traffic
+/// director's host connection, or directly in baseline mode) and
+/// produces responses.
+pub trait HostApp {
+    fn handle(&mut self, msg: &NetMsg) -> Vec<NetResp>;
+}
+
+/// The §8.1 benchmark application on the host: executes raw file
+/// reads/writes with the DDS front-end library.
+pub struct RawFileApp {
+    pub client: DdsClient,
+    pub file: DdsFile,
+    pub group: Arc<PollGroup>,
+}
+
+impl RawFileApp {
+    /// Issue a whole batch, then poll until every completion arrives
+    /// (sleeping mode — zero CPU while waiting, §4.2).
+    fn run_batch(&mut self, ops: Vec<(u16, u64)>) -> Vec<(u16, bool, Vec<u8>)> {
+        let mut remaining = ops.len();
+        let mut by_req: std::collections::HashMap<u64, u16> =
+            ops.into_iter().map(|(idx, req_id)| (req_id, idx)).collect();
+        let mut out = Vec::with_capacity(remaining);
+        while remaining > 0 {
+            for ev in self.group.poll_wait(Duration::from_secs(5)) {
+                if let Some(idx) = by_req.remove(&ev.req_id) {
+                    out.push((idx, ev.ok, ev.data));
+                    remaining -= 1;
+                }
+            }
+        }
+        out
+    }
+}
+
+impl HostApp for RawFileApp {
+    fn handle(&mut self, msg: &NetMsg) -> Vec<NetResp> {
+        let mut issued: Vec<(u16, u64)> = Vec::new();
+        let mut immediate: Vec<NetResp> = Vec::new();
+        for (i, r) in msg.requests.iter().enumerate() {
+            let idx = i as u16;
+            let res = match r {
+                AppRequest::Read { offset, size, .. } => {
+                    self.client.read_file(&self.file, *offset, *size)
+                }
+                AppRequest::Write { offset, data, .. } => {
+                    self.client.write_file(&self.file, *offset, data)
+                }
+                _ => {
+                    immediate.push(NetResp {
+                        msg_id: msg.msg_id,
+                        idx,
+                        status: NetResp::ERR,
+                        payload: Vec::new(),
+                    });
+                    continue;
+                }
+            };
+            match res {
+                Ok(req_id) => issued.push((idx, req_id)),
+                Err(_) => immediate.push(NetResp {
+                    msg_id: msg.msg_id,
+                    idx,
+                    status: NetResp::ERR,
+                    payload: Vec::new(),
+                }),
+            }
+        }
+        let mut done = self.run_batch(issued);
+        done.sort_by_key(|(idx, ..)| *idx);
+        let mut out = immediate;
+        for (idx, ok, data) in done {
+            out.push(NetResp {
+                msg_id: msg.msg_id,
+                idx,
+                status: if ok { NetResp::OK } else { NetResp::ERR },
+                payload: data,
+            });
+        }
+        out.sort_by_key(|r| r.idx);
+        out
+    }
+}

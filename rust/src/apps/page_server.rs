@@ -1,0 +1,313 @@
+//! Azure-SQL-Hyperscale-style page server (§9.1).
+//!
+//! Stores a partition of the database as 8 KB pages in an RBPEX-like
+//! file managed through the DDS front-end library, replays log records
+//! to refresh pages, and serves `GetPage@LSN` requests. The DDS
+//! integration is exactly the paper's: `Cache` caches `(lsn, offset)`
+//! keyed by page id on every RBPEX write; `Invalidate` drops the entry
+//! when the host reads a page (it may be modified in the host buffer
+//! pool); `OffPred` offloads a read when the cached LSN ≥ the requested
+//! LSN; `OffFunc` builds the RBPEX file read.
+//!
+//! Page layout: `[page_id u64 | lsn u64 | payload…]` — the header is
+//! what `Cache` parses out of the write payload.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::cache::{CacheItem, CuckooCache};
+use crate::dpufs::FileId;
+use crate::filelib::{DdsClient, DdsFile, PollGroup};
+use crate::offload::{OffloadLogic, ReadOp, RoutedReq, WriteOp};
+use crate::proto::{AppRequest, NetMsg, NetResp};
+
+use super::HostApp;
+
+/// Database page size (Hyperscale uses 8 KB pages).
+pub const PAGE_SIZE: usize = 8192;
+
+/// Page-header length (page id + LSN).
+pub const PAGE_HEADER: usize = 16;
+
+/// The host-side page server.
+pub struct PageServer {
+    pub client: DdsClient,
+    pub file: DdsFile,
+    pub group: Arc<PollGroup>,
+    /// page id -> latest applied LSN (host's authoritative view).
+    pub page_lsn: HashMap<u64, u64>,
+    pub n_pages: u64,
+    /// Stats.
+    pub host_served: u64,
+    pub logs_replayed: u64,
+}
+
+impl PageServer {
+    /// Create and initialize `n_pages` pages at LSN 1.
+    pub fn new(
+        client: DdsClient,
+        mut file: DdsFile,
+        group: Arc<PollGroup>,
+        n_pages: u64,
+    ) -> anyhow::Result<Self> {
+        client.poll_add(&mut file, &group);
+        let mut ps = PageServer {
+            client,
+            file,
+            group,
+            page_lsn: HashMap::new(),
+            n_pages,
+            host_served: 0,
+            logs_replayed: 0,
+        };
+        for page in 0..n_pages {
+            ps.write_page(page, 1, 0xA5)?;
+        }
+        Ok(ps)
+    }
+
+    fn page_offset(page_id: u64) -> u64 {
+        page_id * PAGE_SIZE as u64
+    }
+
+    /// Materialize a full page image.
+    pub fn page_image(page_id: u64, lsn: u64, fill: u8) -> Vec<u8> {
+        let mut page = vec![fill; PAGE_SIZE];
+        page[..8].copy_from_slice(&page_id.to_le_bytes());
+        page[8..16].copy_from_slice(&lsn.to_le_bytes());
+        page
+    }
+
+    fn write_page(&mut self, page_id: u64, lsn: u64, fill: u8) -> anyhow::Result<()> {
+        let page = Self::page_image(page_id, lsn, fill);
+        let req = self
+            .client
+            .write_file(&self.file, Self::page_offset(page_id), &page)
+            .map_err(|e| anyhow::anyhow!("write_file: {e}"))?;
+        self.wait_for(req)?;
+        self.page_lsn.insert(page_id, lsn);
+        Ok(())
+    }
+
+    /// Replay one log record: read-modify-write the page at a new LSN
+    /// (§9.1: the page server "replays logs retrieved from the log
+    /// servers to refresh the pages").
+    pub fn replay_log(&mut self, page_id: u64, lsn: u64) -> anyhow::Result<()> {
+        // Host read (this is what triggers invalidate-on-read on the
+        // DPU — the page is now "hot" on the host).
+        let req = self
+            .client
+            .read_file(&self.file, Self::page_offset(page_id), PAGE_SIZE as u32)
+            .map_err(|e| anyhow::anyhow!("read_file: {e}"))?;
+        let _old = self.wait_for(req)?;
+        // Apply the update and write back at the new LSN (write-back
+        // re-caches the page on the DPU via cache-on-write).
+        self.write_page(page_id, lsn, (lsn % 251) as u8)?;
+        self.logs_replayed += 1;
+        Ok(())
+    }
+
+    fn wait_for(&self, req_id: u64) -> anyhow::Result<Vec<u8>> {
+        let deadline = std::time::Instant::now() + Duration::from_secs(5);
+        loop {
+            for ev in self.group.poll_wait(Duration::from_millis(50)) {
+                if ev.req_id == req_id {
+                    anyhow::ensure!(ev.ok, "file op failed");
+                    return Ok(ev.data);
+                }
+            }
+            anyhow::ensure!(std::time::Instant::now() < deadline, "file op timeout");
+        }
+    }
+
+    /// Serve GetPage@LSN on the host path.
+    fn get_page(&mut self, page_id: u64, lsn: u64) -> anyhow::Result<Vec<u8>> {
+        let current = *self
+            .page_lsn
+            .get(&page_id)
+            .ok_or_else(|| anyhow::anyhow!("no such page {page_id}"))?;
+        anyhow::ensure!(current >= lsn, "page {page_id} behind requested LSN");
+        let req = self
+            .client
+            .read_file(&self.file, Self::page_offset(page_id), PAGE_SIZE as u32)
+            .map_err(|e| anyhow::anyhow!("read_file: {e}"))?;
+        self.host_served += 1;
+        self.wait_for(req)
+    }
+}
+
+impl HostApp for PageServer {
+    fn handle(&mut self, msg: &NetMsg) -> Vec<NetResp> {
+        let mut out = Vec::with_capacity(msg.requests.len());
+        for (i, r) in msg.requests.iter().enumerate() {
+            let idx = i as u16;
+            match r {
+                AppRequest::GetPage { page_id, lsn } => match self.get_page(*page_id, *lsn) {
+                    Ok(page) => out.push(NetResp {
+                        msg_id: msg.msg_id,
+                        idx,
+                        status: NetResp::OK,
+                        payload: page,
+                    }),
+                    Err(_) => out.push(NetResp {
+                        msg_id: msg.msg_id,
+                        idx,
+                        status: NetResp::ERR,
+                        payload: Vec::new(),
+                    }),
+                },
+                _ => out.push(NetResp {
+                    msg_id: msg.msg_id,
+                    idx,
+                    status: NetResp::ERR,
+                    payload: Vec::new(),
+                }),
+            }
+        }
+        out
+    }
+}
+
+/// The §9.1 offload logic for the page server.
+///
+/// Cache item layout: `a = lsn`, `b = file_id`, `c = offset`,
+/// `d = size`; key = page id.
+pub struct PageServerOffload {
+    pub rbpex_file: FileId,
+}
+
+impl OffloadLogic for PageServerOffload {
+    fn off_pred(&self, msg: &NetMsg, cache: &CuckooCache) -> (Vec<RoutedReq>, Vec<RoutedReq>) {
+        let mut host = Vec::new();
+        let mut dpu = Vec::new();
+        for (i, r) in msg.requests.iter().enumerate() {
+            let routed = RoutedReq { msg_id: msg.msg_id, idx: i as u16, req: r.clone() };
+            match r {
+                AppRequest::GetPage { page_id, lsn } => {
+                    // Offload iff the cached LSN is fresh enough (§9.1).
+                    match cache.get(*page_id) {
+                        Some(item) if item.a >= *lsn => dpu.push(routed),
+                        _ => host.push(routed),
+                    }
+                }
+                _ => host.push(routed),
+            }
+        }
+        (host, dpu)
+    }
+
+    fn off_func(&self, req: &AppRequest, cache: &CuckooCache) -> Option<ReadOp> {
+        match req {
+            AppRequest::GetPage { page_id, .. } => {
+                let item = cache.get(*page_id)?;
+                Some(ReadOp {
+                    file_id: FileId(item.b as u32),
+                    offset: item.c,
+                    size: item.d as u32,
+                })
+            }
+            _ => None,
+        }
+    }
+
+    /// Cache-on-write: parse `(page_id, lsn)` out of every page-aligned
+    /// page image written to the RBPEX file.
+    fn cache(&self, w: &WriteOp) -> Vec<(u64, CacheItem)> {
+        if w.file_id != self.rbpex_file {
+            return Vec::new();
+        }
+        let mut out = Vec::new();
+        let mut at = 0usize;
+        while at + PAGE_SIZE <= w.data.len() {
+            let page_id = u64::from_le_bytes(w.data[at..at + 8].try_into().unwrap());
+            let lsn = u64::from_le_bytes(w.data[at + 8..at + 16].try_into().unwrap());
+            out.push((
+                page_id,
+                CacheItem::new(lsn, self.rbpex_file.0 as u64, w.offset + at as u64, PAGE_SIZE as u64),
+            ));
+            at += PAGE_SIZE;
+        }
+        out
+    }
+
+    /// Invalidate-on-read: a host read means the page may be about to
+    /// change in the host buffer pool.
+    fn invalidate(&self, r: &ReadOp) -> Vec<u64> {
+        if r.file_id != self.rbpex_file {
+            return Vec::new();
+        }
+        let first = r.offset / PAGE_SIZE as u64;
+        let last = (r.offset + r.size as u64).div_ceil(PAGE_SIZE as u64);
+        (first..last).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cache_on_write_parses_pages() {
+        let off = PageServerOffload { rbpex_file: FileId(3) };
+        let mut data = PageServer::page_image(7, 42, 1);
+        data.extend(PageServer::page_image(8, 43, 2));
+        let items = off.cache(&WriteOp { file_id: FileId(3), offset: 7 * PAGE_SIZE as u64, data: &data });
+        assert_eq!(items.len(), 2);
+        assert_eq!(items[0].0, 7);
+        assert_eq!(items[0].1.a, 42);
+        assert_eq!(items[0].1.c, 7 * PAGE_SIZE as u64);
+        assert_eq!(items[1].0, 8);
+        assert_eq!(items[1].1.c, 8 * PAGE_SIZE as u64);
+    }
+
+    #[test]
+    fn cache_ignores_other_files() {
+        let off = PageServerOffload { rbpex_file: FileId(3) };
+        let data = PageServer::page_image(7, 42, 1);
+        assert!(off.cache(&WriteOp { file_id: FileId(4), offset: 0, data: &data }).is_empty());
+    }
+
+    #[test]
+    fn invalidate_covers_touched_pages() {
+        let off = PageServerOffload { rbpex_file: FileId(3) };
+        let keys = off.invalidate(&ReadOp {
+            file_id: FileId(3),
+            offset: PAGE_SIZE as u64 - 10,
+            size: 20,
+        });
+        assert_eq!(keys, vec![0, 1]);
+    }
+
+    #[test]
+    fn off_pred_honours_lsn() {
+        let off = PageServerOffload { rbpex_file: FileId(3) };
+        let cache = CuckooCache::new(64);
+        cache.insert(5, CacheItem::new(10, 3, 5 * PAGE_SIZE as u64, PAGE_SIZE as u64));
+        let msg = NetMsg {
+            msg_id: 1,
+            requests: vec![
+                AppRequest::GetPage { page_id: 5, lsn: 9 },  // cached LSN 10 ≥ 9 → DPU
+                AppRequest::GetPage { page_id: 5, lsn: 11 }, // too fresh → host
+                AppRequest::GetPage { page_id: 6, lsn: 1 },  // not cached → host
+            ],
+        };
+        let (host, dpu) = off.off_pred(&msg, &cache);
+        assert_eq!(dpu.len(), 1);
+        assert_eq!(dpu[0].idx, 0);
+        assert_eq!(host.len(), 2);
+    }
+
+    #[test]
+    fn off_func_builds_rbpex_read() {
+        let off = PageServerOffload { rbpex_file: FileId(3) };
+        let cache = CuckooCache::new(64);
+        cache.insert(9, CacheItem::new(10, 3, 9 * PAGE_SIZE as u64, PAGE_SIZE as u64));
+        let op = off
+            .off_func(&AppRequest::GetPage { page_id: 9, lsn: 2 }, &cache)
+            .unwrap();
+        assert_eq!(op.file_id, FileId(3));
+        assert_eq!(op.offset, 9 * PAGE_SIZE as u64);
+        assert_eq!(op.size, PAGE_SIZE as u32);
+    }
+}

@@ -1,0 +1,352 @@
+//! Production-integration scenarios on the testbed: the Hyperscale
+//! page server (Figs 2, 24), FASTER (Figs 5, 25, 26), and the §8.5
+//! component ablations that need hardware timing (Figs 18, 23).
+
+use crate::sim::{Engine, FlowSpec, Params, Stage, StageChain, Ns, MS, SEC};
+
+// ---------------------------------------------------------------- Fig 2
+
+/// One Fig 2 sample: achieved page throughput and the CPU split the
+/// figure stacks (DBMS network module / OS network stack / file+other).
+#[derive(Debug, Clone)]
+pub struct HyperscaleCpuPoint {
+    pub throughput: f64,
+    pub dbms_net_cores: f64,
+    pub os_net_cores: f64,
+    pub file_cores: f64,
+}
+
+impl HyperscaleCpuPoint {
+    pub fn total(&self) -> f64 {
+        self.dbms_net_cores + self.os_net_cores + self.file_cores
+    }
+}
+
+/// Run the baseline Hyperscale page server at one load point
+/// (8 KB random page reads over TCP + Windows files, §1/§9.1).
+pub fn hyperscale_baseline(window: usize, p: &Params) -> (HyperscaleCpuPoint, u64, u64) {
+    let mut e = Engine::new(2).with_warmup(20 * MS);
+    let dbms = e.add_resource("hs_dbms", p.hs_parallel);
+    let osnet = e.add_resource("hs_osnet", p.host_tcp_parallel);
+    let file = e.add_resource("hs_file", p.win_io_parallel * 2);
+    let ssd = e.add_resource("ssd", p.ssd_channels);
+    let page = 8192usize;
+    let params = p.clone();
+    let flow = FlowSpec::new(window, move |rng| {
+        let p = &params;
+        let jit = rng.next_range(2_000);
+        StageChain::new(
+            0,
+            vec![
+                Stage::Delay(p.wire_delay_ns + p.wire_ns(64) + jit),
+                Stage::Use { res: osnet, ns: p.hs_os_net_ns / 2 },
+                Stage::Use { res: dbms, ns: p.hs_dbms_net_ns },
+                Stage::Use { res: file, ns: p.hs_file_ns },
+                Stage::Delay(p.ssd_read_lat_ns * 3 / 4 + rng.exp_ns(p.ssd_read_lat_ns as f64 / 4.0)),
+                Stage::Use { res: ssd, ns: p.ssd_read_service_ns(page) },
+                Stage::Use { res: osnet, ns: p.hs_os_net_ns / 2 },
+                Stage::Delay(p.wire_delay_ns + p.wire_ns(page)),
+            ],
+        )
+    });
+    let rep = e.run(vec![flow], 1, SEC / 2);
+    (
+        HyperscaleCpuPoint {
+            throughput: rep.throughput(0),
+            dbms_net_cores: rep.cores("hs_dbms"),
+            os_net_cores: rep.cores("hs_osnet"),
+            file_cores: rep.cores("hs_file"),
+        },
+        rep.latency[0].p50(),
+        rep.latency[0].p99(),
+    )
+}
+
+/// The DDS page server (§9.1): GetPage@LSN offloaded to the DPU.
+/// `offload_frac` is the fraction of requests whose cached LSN is fresh
+/// (the rest bounce to the host path).
+pub fn pageserver_dds(window: usize, offload_frac: f64, p: &Params) -> (f64, u64, u64, f64) {
+    let mut e = Engine::new(3).with_warmup(20 * MS);
+    let dir = e.add_resource("dpu_dir", 1);
+    let svc = e.add_resource("dpu_svc", 1);
+    let ssd = e.add_resource("ssd", p.ssd_channels);
+    let dbms = e.add_resource("hs_dbms", p.hs_parallel);
+    let osnet = e.add_resource("hs_osnet", p.host_tcp_parallel);
+    let page = 8192usize;
+    let params = p.clone();
+    let flow = FlowSpec::new(window, move |rng| {
+        let p = &params;
+        let offloaded = rng.next_f64() < offload_frac;
+        let ssd_lat =
+            p.ssd_read_lat_ns * 3 / 4 + rng.exp_ns(p.ssd_read_lat_ns as f64 / 4.0);
+        let mut st = vec![Stage::Delay(p.wire_delay_ns + p.wire_ns(64))];
+        if offloaded {
+            st.push(Stage::Use {
+                res: dir,
+                ns: p.dpu_director_req_ns / 2 + p.dpu_tldk_seg_ns / 4,
+            });
+            st.push(Stage::Use { res: svc, ns: p.dpu_offload_req_ns });
+            st.push(Stage::Delay(ssd_lat));
+            st.push(Stage::Use { res: ssd, ns: p.ssd_read_service_ns(page) });
+            // 8 KB responses cross the director as ~6 TLDK segments.
+            st.push(Stage::Use {
+                res: dir,
+                ns: p.dpu_director_req_ns / 2
+                    + (p.segments(page) as Ns - 1) * p.dpu_tldk_seg_ns / 4,
+            });
+        } else {
+            // Bounced to the host over the PEP's second connection.
+            st.push(Stage::Use { res: dir, ns: p.dpu_director_req_ns });
+            st.push(Stage::Use { res: osnet, ns: p.hs_os_net_ns / 2 });
+            st.push(Stage::Use { res: dbms, ns: p.hs_dbms_net_ns });
+            st.push(Stage::Delay(ssd_lat));
+            st.push(Stage::Use { res: ssd, ns: p.ssd_read_service_ns(page) });
+            st.push(Stage::Use { res: osnet, ns: p.hs_os_net_ns / 2 });
+        }
+        st.push(Stage::Delay(p.wire_delay_ns + p.wire_ns(page)));
+        StageChain::new(0, st)
+    });
+    let rep = e.run(vec![flow], 1, SEC / 2);
+    (
+        rep.throughput(0),
+        rep.latency[0].p50(),
+        rep.latency[0].p99(),
+        rep.cores_prefix("hs_"),
+    )
+}
+
+// ---------------------------------------------------------------- Fig 5
+
+/// FASTER in-memory RMW throughput at `threads` (YCSB RMW, §2).
+/// Returns (host_ops, dpu_ops); the DPU caps at its 8 wimpy cores and
+/// runs each op `rmw_dpu_slowdown`× slower.
+pub fn faster_rmw(threads: usize, p: &Params) -> (f64, f64) {
+    let host_threads = threads.min(p.host_cores) as f64;
+    // Mild contention: beyond 32 threads each extra thread yields 60%.
+    let host_eff = if host_threads <= 32.0 {
+        host_threads
+    } else {
+        32.0 + (host_threads - 32.0) * 0.6
+    };
+    let host = host_eff * 1e9 / p.faster_rmw_ns as f64;
+    let dpu_threads = threads.min(p.dpu_cores) as f64;
+    let dpu = dpu_threads * 1e9 / (p.faster_rmw_ns as f64 * p.rmw_dpu_slowdown);
+    (host, dpu)
+}
+
+// ----------------------------------------------------------- Figs 25/26
+
+/// Disaggregated FASTER under YCSB uniform reads (§9.2).
+/// Returns (throughput, p50, p99, host_cores).
+pub fn faster_disaggregated(window: usize, dds: bool, p: &Params) -> (f64, u64, u64, f64) {
+    let mut e = Engine::new(4).with_warmup(20 * MS);
+    let record = 64usize; // 8 B key + 8 B value + header, block-rounded
+    let params = p.clone();
+    if dds {
+        let dir = e.add_resource("dpu_dir", 1);
+        let svc = e.add_resource("dpu_svc", 1);
+        let ssd = e.add_resource("ssd", p.ssd_channels);
+        let flow = FlowSpec::new(window, move |rng| {
+            let p = &params;
+            let ssd_lat =
+                p.ssd_read_lat_ns * 3 / 4 + rng.exp_ns(p.ssd_read_lat_ns as f64 / 4.0);
+            StageChain::new(
+                0,
+                vec![
+                    Stage::Delay(p.wire_delay_ns + p.wire_ns(32)),
+                    Stage::Use { res: dir, ns: p.dpu_director_req_ns / 2 },
+                    Stage::Use { res: svc, ns: p.dpu_offload_req_ns / 2 },
+                    Stage::Delay(ssd_lat),
+                    Stage::Use { res: ssd, ns: p.ssd_read_service_ns(record) },
+                    Stage::Use { res: dir, ns: p.dpu_director_req_ns / 2 },
+                    Stage::Delay(p.wire_delay_ns + p.wire_ns(record)),
+                ],
+            )
+        });
+        let rep = e.run(vec![flow], 1, SEC / 2);
+        (rep.throughput(0), rep.latency[0].p50(), rep.latency[0].p99(), rep.cores_prefix("srv_"))
+    } else {
+        // Host FASTER: network module + index + IDevice via NTFS path.
+        let srv = e.add_resource("srv_faster", 20);
+        let ssd = e.add_resource("ssd", p.ssd_channels);
+        let flow = FlowSpec::new(window, move |rng| {
+            let p = &params;
+            let ssd_lat =
+                p.ssd_read_lat_ns * 3 / 4 + rng.exp_ns(p.ssd_read_lat_ns as f64 / 4.0);
+            StageChain::new(
+                0,
+                vec![
+                    Stage::Delay(p.wire_delay_ns + p.wire_ns(32)),
+                    Stage::Use {
+                        res: srv,
+                        ns: p.faster_net_ns + p.faster_core_ns + p.faster_idevice_ns,
+                    },
+                    Stage::Delay(ssd_lat),
+                    Stage::Use { res: ssd, ns: p.ssd_read_service_ns(record) },
+                    Stage::Delay(p.wire_delay_ns + p.wire_ns(record)),
+                ],
+            )
+        });
+        let rep = e.run(vec![flow], 1, SEC / 2);
+        (rep.throughput(0), rep.latency[0].p50(), rep.latency[0].p99(), rep.cores("srv_faster"))
+    }
+}
+
+// ------------------------------------------------------------ Figs 18/23
+
+/// Fig 18: DPU-backed file I/O throughput vs request size, zero-copy vs
+/// extra-copy. Returns IOPS.
+pub fn fileio_throughput(io_bytes: usize, zero_copy: bool, window: usize, p: &Params) -> f64 {
+    let mut e = Engine::new(5).with_warmup(10 * MS);
+    let dma = e.add_resource("dpu_dma", 1);
+    let svc = e.add_resource("dpu_svc", 1);
+    let ssd = e.add_resource("ssd", p.ssd_channels);
+    let pcie = e.add_resource("pcie", 1);
+    let params = p.clone();
+    let flow = FlowSpec::new(window, move |rng| {
+        let p = &params;
+        let mut svc_ns = p.dpu_file_svc_ns;
+        if !zero_copy {
+            // Straw-man: the service core memcpys the payload between
+            // the DMA buffer and the I/O buffer (both directions of the
+            // §4.3 argument).
+            svc_ns += p.dpu_memcpy_ns(io_bytes);
+        }
+        StageChain::new(
+            0,
+            vec![
+                Stage::Use { res: dma, ns: p.dma_op_ns / 8 },
+                Stage::Use { res: pcie, ns: p.dma_ns(64) },
+                Stage::Use { res: svc, ns: svc_ns },
+                Stage::Delay(
+                    p.ssd_read_lat_ns * 3 / 4 + rng.exp_ns(p.ssd_read_lat_ns as f64 / 4.0),
+                ),
+                Stage::Use { res: ssd, ns: p.ssd_read_service_ns(io_bytes) },
+                Stage::Use { res: pcie, ns: p.dma_ns(io_bytes) },
+                Stage::Use { res: dma, ns: p.dma_op_ns / 8 },
+            ],
+        )
+    });
+    let rep = e.run(vec![flow], 1, SEC / 4);
+    rep.throughput(0)
+}
+
+/// Fig 23: offload-engine zero-copy ablation. Returns (IOPS, p50 ns).
+pub fn offload_zero_copy(zero_copy: bool, window: usize, p: &Params) -> (f64, u64) {
+    let mut e = Engine::new(6).with_warmup(10 * MS);
+    let dir = e.add_resource("dpu_dir", 1);
+    let svc = e.add_resource("dpu_svc", 1);
+    let ssd = e.add_resource("ssd", p.ssd_channels);
+    let io = 1024usize;
+    let params = p.clone();
+    let flow = FlowSpec::new(window, move |rng| {
+        let p = &params;
+        let mut engine_ns = p.dpu_offload_req_ns;
+        if !zero_copy {
+            // Straw-man of §6.2: copy file service → read buffer, then
+            // read buffer → packet buffer (two copies).
+            engine_ns += 2 * p.dpu_memcpy_ns(io);
+        }
+        StageChain::new(
+            0,
+            vec![
+                Stage::Delay(p.wire_delay_ns + p.wire_ns(64)),
+                Stage::Use { res: dir, ns: p.dpu_director_req_ns / 2 },
+                Stage::Use { res: svc, ns: engine_ns },
+                Stage::Delay(
+                    p.ssd_read_lat_ns * 3 / 4 + rng.exp_ns(p.ssd_read_lat_ns as f64 / 4.0),
+                ),
+                Stage::Use { res: ssd, ns: p.ssd_read_service_ns(io) },
+                Stage::Use { res: dir, ns: p.dpu_director_req_ns / 2 },
+                Stage::Delay(p.wire_delay_ns + p.wire_ns(io)),
+            ],
+        )
+    });
+    let rep = e.run(vec![flow], 1, SEC / 4);
+    (rep.throughput(0), rep.latency[0].p50())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn p() -> Params {
+        Params::paper()
+    }
+
+    /// Fig 2 anchors: ~17 cores at ~156 K pages/s, DBMS net module the
+    /// largest component.
+    #[test]
+    fn fig2_anchor() {
+        let (pt, _, _) = hyperscale_baseline(4096, &p());
+        assert!(pt.throughput > 130_000.0, "tput {:.0}", pt.throughput);
+        assert!((pt.total() - 17.0).abs() < 3.0, "total {:.1}", pt.total());
+        assert!(pt.dbms_net_cores > pt.os_net_cores);
+        assert!(pt.dbms_net_cores > pt.file_cores);
+    }
+
+    /// Fig 24 anchors: baseline ~90 K @ ~4.4 ms p99 vs DDS ~160 K @
+    /// ~1.3 ms p99.
+    #[test]
+    fn fig24_shape() {
+        let (_, _, base_p99) = hyperscale_baseline(512, &p());
+        let base = hyperscale_baseline(512, &p()).0.throughput;
+        let (dds_tput, _, dds_p99, host_cores) = pageserver_dds(256, 0.95, &p());
+        assert!(dds_tput > base, "dds {dds_tput:.0} !> base {base:.0}");
+        assert!(dds_p99 < base_p99, "dds p99 {dds_p99} !< base {base_p99}");
+        assert!(host_cores < 2.0, "host cores {host_cores:.1}");
+    }
+
+    /// Fig 5 anchors: DPU ≈4.5× slower per thread, capped at 8 threads.
+    #[test]
+    fn fig5_shape() {
+        let pp = p();
+        let (h8, d8) = faster_rmw(8, &pp);
+        assert!((h8 / d8 - pp.rmw_dpu_slowdown).abs() < 0.1);
+        let (_, d16) = faster_rmw(16, &pp);
+        assert_eq!(d8, d16, "DPU cannot scale past 8 threads");
+        let (h48, _) = faster_rmw(48, &pp);
+        assert!(h48 > h8 * 4.0);
+    }
+
+    /// Fig 25/26 anchors: baseline ~340 K @ ~20 cores, ms-scale
+    /// latency; DDS near 1 M with ~0 host cores, µs-scale latency.
+    #[test]
+    fn fig25_26_shape() {
+        let pp = p();
+        let (bt, bp50, _, bc) = faster_disaggregated(4096, false, &pp);
+        assert!((300_000.0..400_000.0).contains(&bt), "baseline {bt:.0}");
+        assert!((bc - 20.0).abs() < 3.0, "baseline cores {bc:.1}");
+        assert!(bp50 > 5 * crate::sim::MS, "baseline p50 {bp50}");
+        let (dt, dp50, _, dc) = faster_disaggregated(256, true, &pp);
+        assert!(dt > 900_000.0, "dds {dt:.0}");
+        assert!(dc < 0.1, "dds host cores {dc:.2}");
+        assert!(dp50 < crate::sim::MS, "dds p50 {dp50}");
+    }
+
+    /// Fig 18 anchor: zero-copy wins up to ~93% at large sizes.
+    #[test]
+    fn fig18_shape() {
+        let pp = p();
+        let mut best_gain = 0.0f64;
+        for io in [1 << 10, 4 << 10, 16 << 10, 64 << 10] {
+            let zc = fileio_throughput(io, true, 512, &pp);
+            let cp = fileio_throughput(io, false, 512, &pp);
+            assert!(zc >= cp * 0.99, "zero-copy can't lose (io {io})");
+            best_gain = best_gain.max(zc / cp - 1.0);
+        }
+        assert!((0.5..1.5).contains(&best_gain), "peak gain {best_gain:.2}");
+    }
+
+    /// Fig 23 anchors: ~520 K→730 K IOPS and lower latency at peak.
+    #[test]
+    fn fig23_shape() {
+        let pp = p();
+        let (zc_t, zc_l) = offload_zero_copy(true, 512, &pp);
+        let (cp_t, cp_l) = offload_zero_copy(false, 512, &pp);
+        assert!(zc_t > cp_t * 1.2, "zc {zc_t:.0} vs copy {cp_t:.0}");
+        assert!(zc_l < cp_l, "zc lat {zc_l} vs {cp_l}");
+        assert!((650_000.0..800_000.0).contains(&zc_t));
+        assert!((380_000.0..620_000.0).contains(&cp_t));
+    }
+}

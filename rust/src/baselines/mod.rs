@@ -1,0 +1,16 @@
+//! Baseline storage stacks and the testbed scenario builders (§8.4).
+//!
+//! Every disaggregated-storage configuration the evaluation compares —
+//! local NTFS, local DDS files, SMB, SMB Direct, TCP/Redy × Windows/DDS
+//! files, and DDS offloading over TCP/RDMA — is expressed as a
+//! composition of stage chains over the calibrated queueing testbed
+//! ([`crate::sim`]). The figure benches sweep load (window size) and
+//! report achieved throughput, latency and CPU cores, exactly like the
+//! paper's client does with batching/outstanding-message knobs (§8.1).
+
+pub mod appsim;
+pub mod netlat;
+pub mod stacks;
+
+pub use netlat::EchoMode;
+pub use stacks::{peak, run_stack, IoDir, StackKind, StackReport};

@@ -1,0 +1,153 @@
+//! Network-path latency scenarios (Figs 4, 19, 20) on the testbed.
+//!
+//! These are latency-only experiments (one outstanding message): a
+//! client sends a TCP message, the server echoes it back; the question
+//! is *who* echoes — the host through the kernel stack, or the DPU via
+//! Linux TCP / TLDK (§2 Fig 4, §8.5 Figs 19-20).
+
+use crate::sim::{Ns, Params};
+
+/// Who terminates and echoes the message.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EchoMode {
+    /// Forwarded through the DPU to the host; host kernel TCP echoes.
+    Host,
+    /// DPU echoes using Linux kernel TCP on the Arm cores (Fig 19 "OS").
+    DpuLinuxTcp,
+    /// DPU echoes using userspace TLDK (Fig 19 "userspace").
+    DpuTldk,
+    /// TLDK running on the HOST (Fig 20 comparison).
+    HostTldk,
+}
+
+/// Round-trip time of one echo of `msg_bytes` (unloaded, p50).
+pub fn echo_rtt(mode: EchoMode, msg_bytes: usize, p: &Params) -> Ns {
+    let segs = p.segments(msg_bytes) as Ns;
+    let wire = 2 * (p.wire_delay_ns + p.wire_ns(msg_bytes)); // both ways
+    match mode {
+        EchoMode::Host => {
+            // NIC → (off-path DPU forwards via Arm core, §5.3) → host
+            // kernel TCP rx, app echo, tx. Per-segment cost is
+            // sublinear (GRO/LRO coalesce bursts).
+            let fwd = 2 * p.dpu_forward_ns;
+            let per_msg = (p.host_tcp_pkt_ns as f64 * (0.75 + 0.25 * segs as f64)) as Ns;
+            wire + fwd + 2 * per_msg + 2_000
+        }
+        EchoMode::DpuLinuxTcp => {
+            // Kernel overhead exacerbated by wimpy cores (§5.3): worse
+            // than forwarding to the host for small messages.
+            wire + 2 * (p.dpu_linux_tcp_msg_ns + segs * p.dpu_linux_per_seg_ns)
+        }
+        EchoMode::DpuTldk => {
+            // Userspace stack on the DPU: ~3× cheaper than Linux-on-DPU.
+            wire + 2 * (p.dpu_tldk_msg_ns + segs * p.tldk_per_seg_ns)
+        }
+        EchoMode::HostTldk => {
+            // TLDK on the host: faster cores (lower base), but pays the
+            // NIC→host PCIe hop and host-DDR payload processing
+            // (§8.5: the DPU wins when memory-intensive).
+            let pcie = 2 * (p.dma_op_ns + (msg_bytes as f64 / p.dma_bytes_per_ns) as Ns);
+            let mem_penalty = (msg_bytes as f64 * p.host_mem_penalty_ns_per_byte) as Ns;
+            wire + pcie + 2 * (p.host_tldk_msg_ns + segs * p.tldk_per_seg_ns) + mem_penalty
+        }
+    }
+}
+
+/// Fig 4 series: host-respond vs DPU-respond (TLDK) across sizes.
+pub fn fig4_series(p: &Params) -> Vec<(usize, Ns, Ns)> {
+    [64usize, 256, 1024, 4096, 16384]
+        .iter()
+        .map(|&s| (s, echo_rtt(EchoMode::Host, s, p), echo_rtt(EchoMode::DpuTldk, s, p)))
+        .collect()
+}
+
+/// Fig 19 series: vanilla host vs DPU(Linux) vs DPU(TLDK).
+pub fn fig19_series(p: &Params) -> Vec<(usize, Ns, Ns, Ns)> {
+    [64usize, 512, 1460, 4096, 16384]
+        .iter()
+        .map(|&s| {
+            (
+                s,
+                echo_rtt(EchoMode::Host, s, p),
+                echo_rtt(EchoMode::DpuLinuxTcp, s, p),
+                echo_rtt(EchoMode::DpuTldk, s, p),
+            )
+        })
+        .collect()
+}
+
+/// Fig 20 series: TLDK on host vs TLDK on DPU.
+pub fn fig20_series(p: &Params) -> Vec<(usize, Ns, Ns)> {
+    [64usize, 1460, 8192, 65536, 262144]
+        .iter()
+        .map(|&s| (s, echo_rtt(EchoMode::HostTldk, s, p), echo_rtt(EchoMode::DpuTldk, s, p)))
+        .collect()
+}
+
+/// Fig 21: traffic-director Gbps vs number of DPU cores (RSS scaling).
+/// Derived from the per-request director cost; linear by construction
+/// of RSS (no shared state across cores, §7).
+pub fn fig21_series(p: &Params, resp_bytes: usize) -> Vec<(usize, f64)> {
+    let per_req_ns = p.dpu_director_req_ns + p.dpu_tldk_seg_ns / 4;
+    let per_core_reqs = 1e9 / per_req_ns as f64;
+    let gbps_per_core = per_core_reqs * (resp_bytes as f64 * 8.0) / 1e9;
+    (1..=8).map(|c| (c, gbps_per_core * c as f64)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn p() -> Params {
+        Params::paper()
+    }
+
+    /// Fig 4 shape: the DPU halves the RTT by not forwarding to host.
+    #[test]
+    fn fig4_dpu_halves_latency() {
+        for (sz, host, dpu) in fig4_series(&p()) {
+            assert!(dpu < host, "size {sz}: dpu {dpu} !< host {host}");
+            let ratio = host as f64 / dpu as f64;
+            assert!(ratio > 1.5 && ratio < 4.0, "size {sz}: ratio {ratio:.2}");
+        }
+    }
+
+    /// Fig 19 shape: Linux-on-DPU is WORSE than the vanilla host path
+    /// for small messages; TLDK beats both (≈3× under Linux TCP,
+    /// ≈2.5× under vanilla).
+    #[test]
+    fn fig19_shape() {
+        let rows = fig19_series(&p());
+        let (_, host, linux, tldk) = rows[0];
+        assert!(linux > host, "Linux TCP on DPU must offset the offload benefit");
+        let vs_linux = linux as f64 / tldk as f64;
+        let vs_host = host as f64 / tldk as f64;
+        assert!((2.0..5.0).contains(&vs_linux), "vs linux {vs_linux:.2}");
+        assert!((1.7..4.0).contains(&vs_host), "vs host {vs_host:.2}");
+    }
+
+    /// Fig 20 shape: TLDK-on-DPU wins for LARGE (memory-intensive)
+    /// messages; small messages are comparable.
+    #[test]
+    fn fig20_shape() {
+        let rows = fig20_series(&p());
+        let (_, host_small, dpu_small) = rows[0];
+        let (_, host_big, dpu_big) = rows[rows.len() - 1];
+        let small_gap = (host_small as f64 - dpu_small as f64).abs() / host_small as f64;
+        assert!(small_gap < 0.5, "small messages comparable: {small_gap:.2}");
+        assert!(dpu_big < host_big, "DPU must win for large messages");
+    }
+
+    /// Fig 21 shape: ~6.4 Gbps on one core, linear scaling to 8.
+    #[test]
+    fn fig21_linear_scaling() {
+        let rows = fig21_series(&p(), 1024);
+        let (c1, g1) = rows[0];
+        assert_eq!(c1, 1);
+        assert!((4.0..9.0).contains(&g1), "one-core Gbps {g1:.1}");
+        for (c, g) in &rows {
+            let lin = g1 * *c as f64;
+            assert!((g - lin).abs() / lin < 1e-9, "non-linear at {c} cores");
+        }
+    }
+}

@@ -1,0 +1,355 @@
+//! Cuckoo hash table with per-bucket seqlocks and overflow chains.
+
+use std::cell::UnsafeCell;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Slots per bucket (common cuckoo arrangement).
+pub const SLOTS: usize = 4;
+/// Maximum cuckoo displacement path before falling back to chaining.
+const MAX_KICKS: usize = 64;
+/// Reserved key meaning "empty slot".
+pub const EMPTY: u64 = u64::MAX;
+
+// Hash constants — shared verbatim with the Pallas kernel
+// (`python/compile/kernels/cuckoo.py`), which evaluates the same
+// two-choice lookup on the DPU data path.
+pub const H1_MUL: u64 = 0x9E37_79B9_7F4A_7C15;
+pub const H1_SHIFT: u32 = 17;
+pub const H2_MUL: u64 = 0xC2B2_AE3D_27D4_EB4F;
+pub const H2_SHIFT: u32 = 13;
+pub const H2_XOR_SHIFT: u32 = 33;
+
+/// A fixed 32-byte cache item — in the Hyperscale integration `(lsn,
+/// file_id, offset, size)` keyed by page id; in the FASTER integration
+/// `(file_id, offset, record_size, _)` keyed by the KV key (§9).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct CacheItem {
+    pub a: u64,
+    pub b: u64,
+    pub c: u64,
+    pub d: u64,
+}
+
+impl CacheItem {
+    pub fn new(a: u64, b: u64, c: u64, d: u64) -> Self {
+        CacheItem { a, b, c, d }
+    }
+}
+
+struct Bucket {
+    /// Seqlock version: odd = write in progress.
+    version: AtomicU64,
+    keys: [AtomicU64; SLOTS],
+    items: UnsafeCell<[CacheItem; SLOTS]>,
+    /// Overflow chain (§6.1 "chain items in a bucket"). Guarded by the
+    /// bucket seqlock for readers and the writer mutex for writers.
+    chain: UnsafeCell<Vec<(u64, CacheItem)>>,
+}
+
+// SAFETY: readers validate every access with the seqlock version;
+// writers are serialized by `CuckooCache::write_lock` and publish via
+// version bumps with Release ordering.
+unsafe impl Send for Bucket {}
+unsafe impl Sync for Bucket {}
+
+impl Bucket {
+    fn new() -> Self {
+        Bucket {
+            version: AtomicU64::new(0),
+            keys: std::array::from_fn(|_| AtomicU64::new(EMPTY)),
+            items: UnsafeCell::new([CacheItem::default(); SLOTS]),
+            chain: UnsafeCell::new(Vec::new()),
+        }
+    }
+}
+
+/// Dense slot-array snapshot consumed by the AOT predicate kernel.
+#[derive(Debug, Clone)]
+pub struct DenseTable {
+    /// `buckets * SLOTS` keys; EMPTY marks a free slot.
+    pub keys: Vec<u64>,
+    /// `buckets * SLOTS * 4` item words (a,b,c,d per slot).
+    pub items: Vec<u64>,
+    pub buckets: usize,
+}
+
+/// Table occupancy statistics.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CacheStats {
+    pub items: usize,
+    pub slot_items: usize,
+    pub chain_items: usize,
+    pub buckets: usize,
+    pub capacity: usize,
+}
+
+/// The concurrent cuckoo cache table.
+pub struct CuckooCache {
+    buckets: Box<[Bucket]>,
+    mask: u64,
+    capacity: usize,
+    len: AtomicUsize,
+    chain_len: AtomicUsize,
+    /// Single writer at a time (the DPU file service, Table 2).
+    write_lock: Mutex<()>,
+}
+
+impl CuckooCache {
+    /// Create a table that can hold up to `capacity` items. Memory is
+    /// reserved up front — the table never resizes (§6.1).
+    pub fn new(capacity: usize) -> Self {
+        assert!(capacity >= SLOTS);
+        // Bucket count sized for ~50% slot load factor at capacity, so
+        // most items live in slots and chains stay short.
+        let nbuckets = (2 * capacity / SLOTS).next_power_of_two();
+        let buckets = (0..nbuckets).map(|_| Bucket::new()).collect::<Vec<_>>().into_boxed_slice();
+        CuckooCache {
+            buckets,
+            mask: nbuckets as u64 - 1,
+            capacity,
+            len: AtomicUsize::new(0),
+            chain_len: AtomicUsize::new(0),
+            write_lock: Mutex::new(()),
+        }
+    }
+
+    #[inline]
+    fn h1(&self, key: u64) -> usize {
+        (key.wrapping_mul(H1_MUL) >> H1_SHIFT & self.mask) as usize
+    }
+
+    #[inline]
+    fn h2(&self, key: u64) -> usize {
+        // Independent multiply-shift; xor-fold for avalanche.
+        let x = key ^ (key >> H2_XOR_SHIFT);
+        (x.wrapping_mul(H2_MUL) >> H2_SHIFT & self.mask) as usize
+    }
+
+    /// Lock-free lookup with worst-case-constant bucket probes.
+    pub fn get(&self, key: u64) -> Option<CacheItem> {
+        debug_assert_ne!(key, EMPTY);
+        for &bi in &[self.h1(key), self.h2(key)] {
+            let b = &self.buckets[bi];
+            loop {
+                let v0 = b.version.load(Ordering::Acquire);
+                if v0 & 1 == 1 {
+                    std::hint::spin_loop();
+                    continue; // write in progress
+                }
+                let mut found: Option<CacheItem> = None;
+                for s in 0..SLOTS {
+                    if b.keys[s].load(Ordering::Acquire) == key {
+                        // SAFETY: validated by the seqlock re-check below.
+                        found = Some(unsafe { (*b.items.get())[s] });
+                        break;
+                    }
+                }
+                if found.is_none() {
+                    // SAFETY: chain reads validated by the version
+                    // re-check below; writers only mutate the chain
+                    // while the version is odd.
+                    let chain = unsafe { &*b.chain.get() };
+                    found = chain.iter().find(|(k, _)| *k == key).map(|(_, v)| *v);
+                }
+                let v1 = b.version.load(Ordering::Acquire);
+                if v0 == v1 {
+                    if found.is_some() {
+                        return found;
+                    }
+                    break; // consistent miss in this bucket
+                }
+                // Torn read; retry this bucket.
+            }
+        }
+        None
+    }
+
+    fn begin_write(b: &Bucket) -> u64 {
+        let v = b.version.fetch_add(1, Ordering::AcqRel);
+        debug_assert_eq!(v & 1, 0, "nested bucket write");
+        v + 1
+    }
+
+    fn end_write(b: &Bucket) {
+        b.version.fetch_add(1, Ordering::AcqRel);
+    }
+
+    /// Insert or update. Returns false only when the table is at
+    /// capacity (and the key is not already present).
+    pub fn insert(&self, key: u64, item: CacheItem) -> bool {
+        debug_assert_ne!(key, EMPTY);
+        let _g = self.write_lock.lock().unwrap();
+
+        // Update in place if present (either bucket, slot or chain).
+        for &bi in &[self.h1(key), self.h2(key)] {
+            let b = &self.buckets[bi];
+            for s in 0..SLOTS {
+                if b.keys[s].load(Ordering::Relaxed) == key {
+                    Self::begin_write(b);
+                    // SAFETY: serialized writer, seqlock held (odd).
+                    unsafe { (*b.items.get())[s] = item };
+                    Self::end_write(b);
+                    return true;
+                }
+            }
+            // SAFETY: serialized writer.
+            let chain = unsafe { &mut *b.chain.get() };
+            if let Some(e) = chain.iter_mut().find(|(k, _)| *k == key) {
+                Self::begin_write(b);
+                e.1 = item;
+                Self::end_write(b);
+                return true;
+            }
+        }
+
+        if self.len.load(Ordering::Relaxed) >= self.capacity {
+            return false;
+        }
+
+        // Try an empty slot in either bucket.
+        for &bi in &[self.h1(key), self.h2(key)] {
+            if self.try_place(bi, key, item) {
+                self.len.fetch_add(1, Ordering::Relaxed);
+                return true;
+            }
+        }
+
+        // Cuckoo displacement: kick a victim along its alternate bucket.
+        let mut cur_key = key;
+        let mut cur_item = item;
+        let mut bi = self.h1(key);
+        for kick in 0..MAX_KICKS {
+            let b = &self.buckets[bi];
+            let victim = kick % SLOTS;
+            Self::begin_write(b);
+            let vk = b.keys[victim].load(Ordering::Relaxed);
+            // SAFETY: serialized writer, seqlock held.
+            let vi = unsafe { (*b.items.get())[victim] };
+            unsafe { (*b.items.get())[victim] = cur_item };
+            b.keys[victim].store(cur_key, Ordering::Release);
+            Self::end_write(b);
+            debug_assert_ne!(vk, EMPTY);
+            cur_key = vk;
+            cur_item = vi;
+            // Victim goes to its alternate bucket.
+            let alt = if self.h1(cur_key) == bi { self.h2(cur_key) } else { self.h1(cur_key) };
+            if self.try_place(alt, cur_key, cur_item) {
+                self.len.fetch_add(1, Ordering::Relaxed);
+                return true;
+            }
+            bi = alt;
+        }
+
+        // Chain fallback (§6.1): append to the displaced key's bucket.
+        let b = &self.buckets[bi];
+        Self::begin_write(b);
+        // SAFETY: serialized writer, seqlock held.
+        unsafe { (*b.chain.get()).push((cur_key, cur_item)) };
+        Self::end_write(b);
+        self.chain_len.fetch_add(1, Ordering::Relaxed);
+        self.len.fetch_add(1, Ordering::Relaxed);
+        true
+    }
+
+    /// Place into an empty slot of bucket `bi` if one exists.
+    fn try_place(&self, bi: usize, key: u64, item: CacheItem) -> bool {
+        let b = &self.buckets[bi];
+        for s in 0..SLOTS {
+            if b.keys[s].load(Ordering::Relaxed) == EMPTY {
+                Self::begin_write(b);
+                // SAFETY: serialized writer, seqlock held.
+                unsafe { (*b.items.get())[s] = item };
+                b.keys[s].store(key, Ordering::Release);
+                Self::end_write(b);
+                return true;
+            }
+        }
+        false
+    }
+
+    /// Remove a key (invalidate-on-read). Returns whether it existed.
+    pub fn remove(&self, key: u64) -> bool {
+        debug_assert_ne!(key, EMPTY);
+        let _g = self.write_lock.lock().unwrap();
+        for &bi in &[self.h1(key), self.h2(key)] {
+            let b = &self.buckets[bi];
+            for s in 0..SLOTS {
+                if b.keys[s].load(Ordering::Relaxed) == key {
+                    Self::begin_write(b);
+                    b.keys[s].store(EMPTY, Ordering::Release);
+                    Self::end_write(b);
+                    self.len.fetch_sub(1, Ordering::Relaxed);
+                    return true;
+                }
+            }
+            // SAFETY: serialized writer.
+            let chain = unsafe { &mut *b.chain.get() };
+            if let Some(pos) = chain.iter().position(|(k, _)| *k == key) {
+                Self::begin_write(b);
+                chain.swap_remove(pos);
+                Self::end_write(b);
+                self.chain_len.fetch_sub(1, Ordering::Relaxed);
+                self.len.fetch_sub(1, Ordering::Relaxed);
+                return true;
+            }
+        }
+        false
+    }
+
+    pub fn len(&self) -> usize {
+        self.len.load(Ordering::Relaxed)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Number of buckets (the kernel's table size is `buckets * SLOTS`).
+    pub fn num_buckets(&self) -> usize {
+        self.buckets.len()
+    }
+
+    /// Export the slot arrays densely for the AOT predicate kernel:
+    /// `keys[b*SLOTS+s]` (EMPTY for free slots) and flattened 4-word
+    /// items. Chained items are *not* exported — kernel misses on them
+    /// fall back to the host path, preserving correctness.
+    pub fn export_dense(&self) -> DenseTable {
+        let _g = self.write_lock.lock().unwrap(); // quiesce writers
+        let n = self.buckets.len() * SLOTS;
+        let mut keys = vec![EMPTY; n];
+        let mut items = vec![0u64; n * 4];
+        for (bi, b) in self.buckets.iter().enumerate() {
+            for s in 0..SLOTS {
+                let k = b.keys[s].load(Ordering::Acquire);
+                if k != EMPTY {
+                    let flat = bi * SLOTS + s;
+                    keys[flat] = k;
+                    // SAFETY: writer lock held; no concurrent mutation.
+                    let item = unsafe { (*b.items.get())[s] };
+                    items[flat * 4] = item.a;
+                    items[flat * 4 + 1] = item.b;
+                    items[flat * 4 + 2] = item.c;
+                    items[flat * 4 + 3] = item.d;
+                }
+            }
+        }
+        DenseTable { keys, items, buckets: self.buckets.len() }
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        let chain_items = self.chain_len.load(Ordering::Relaxed);
+        let items = self.len();
+        CacheStats {
+            items,
+            slot_items: items - chain_items,
+            chain_items,
+            buckets: self.buckets.len(),
+            capacity: self.capacity,
+        }
+    }
+}

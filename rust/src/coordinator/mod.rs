@@ -1,0 +1,287 @@
+//! Storage-server assembly and end-to-end wiring.
+//!
+//! [`StorageServer`] builds the DPU stack (SSD → file system → file
+//! service → cache table) and hands the host a [`DdsClient`] front end —
+//! the §4 unified storage path.
+//!
+//! [`DisaggregatedServer`] adds the §5/§6 network path: a traffic
+//! director with PEP-split connections, an offload engine, and a host
+//! application, all pumpable from an in-process [`ClientConn`]. This is
+//! the full DDS deployment used by the examples and integration tests:
+//! client → (TCP) → DPU director → {offload engine | host app} → client.
+
+use std::sync::{mpsc, Arc, RwLock};
+
+use crate::apps::HostApp;
+use crate::cache::CuckooCache;
+use crate::director::{AppSignature, TrafficDirector};
+use crate::dpufs::{DpuFs, FsConfig};
+use crate::filelib::DdsClient;
+use crate::fileservice::{ControlMsg, FileService, FileServiceConfig, FileServiceHandle};
+use crate::net::tcp::{Segment, TcpEndpoint};
+use crate::net::FiveTuple;
+use crate::offload::{NoOffload, OffloadEngine, OffloadEngineConfig, OffloadLogic};
+use crate::proto::{framing, NetMsg, NetResp};
+use crate::ssd::{AsyncSsd, Ssd};
+
+/// Storage-server build options.
+#[derive(Clone)]
+pub struct StorageServerConfig {
+    pub ssd_bytes: u64,
+    pub segment_size: u64,
+    pub cache_items: usize,
+    pub service: FileServiceConfig,
+}
+
+impl Default for StorageServerConfig {
+    fn default() -> Self {
+        StorageServerConfig {
+            ssd_bytes: 256 << 20,
+            segment_size: 1 << 20,
+            cache_items: 1 << 16,
+            service: FileServiceConfig::default(),
+        }
+    }
+}
+
+/// The unified storage path: DPU-owned SSD + file system + file service,
+/// host-side front end.
+pub struct StorageServer {
+    pub ssd: Arc<Ssd>,
+    pub dpufs: Arc<RwLock<DpuFs>>,
+    pub cache: Arc<CuckooCache>,
+    pub handle: FileServiceHandle,
+    ctrl: mpsc::Sender<ControlMsg>,
+    /// Build options (kept for introspection / future rebuilds).
+    pub cfg: StorageServerConfig,
+}
+
+impl StorageServer {
+    /// Format the device and spawn the file service.
+    pub fn build(
+        cfg: StorageServerConfig,
+        logic: Option<Arc<dyn OffloadLogic>>,
+    ) -> anyhow::Result<Self> {
+        let ssd = Arc::new(Ssd::new(cfg.ssd_bytes, 512));
+        let fs = DpuFs::format(ssd.clone(), FsConfig { segment_size: cfg.segment_size })
+            .map_err(|e| anyhow::anyhow!("format: {e}"))?;
+        let dpufs = Arc::new(RwLock::new(fs));
+        let cache = Arc::new(CuckooCache::new(cfg.cache_items));
+        let aio = AsyncSsd::new(ssd.clone(), cfg.service.ssd_workers);
+        let (service, ctrl) =
+            FileService::new(dpufs.clone(), aio, cfg.service.clone(), logic, cache.clone());
+        let handle = service.spawn(ctrl.clone());
+        Ok(StorageServer { ssd, dpufs, cache, handle, ctrl, cfg })
+    }
+
+    /// A host-side front-end client (§4.2). Create one per application.
+    pub fn front_end(&self) -> DdsClient {
+        DdsClient::new(self.ctrl.clone())
+    }
+
+    /// An SPDK-like async handle for the offload engine (the engine
+    /// shares the device with the file service, §6.2). Inline polled
+    /// mode: the engine colocates with the director on one DPU core
+    /// (§7), and the perf pass showed worker handoff dominating the
+    /// single-core profile (EXPERIMENTS.md §Perf L3-3).
+    pub fn engine_aio(&self) -> AsyncSsd {
+        AsyncSsd::new_inline(self.ssd.clone())
+    }
+}
+
+/// One client connection speaking the app protocol over the simulated
+/// transport.
+pub struct ClientConn {
+    pub ep: TcpEndpoint,
+    pub tuple: FiveTuple,
+    rx: framing::StreamBuf,
+}
+
+impl ClientConn {
+    pub fn new(tuple: FiveTuple) -> Self {
+        ClientConn { ep: TcpEndpoint::new(), tuple, rx: framing::StreamBuf::new() }
+    }
+
+    /// Frame and segment a message for the wire.
+    pub fn send_msg(&mut self, msg: &NetMsg) -> Vec<Segment> {
+        let mut stream = Vec::new();
+        framing::write_frame(&mut stream, &msg.encode());
+        self.ep.send(&stream)
+    }
+
+    /// Absorb server segments; returns decoded responses (and emits the
+    /// ACKs to send back via `out`).
+    pub fn on_segments(&mut self, segs: &[Segment], out: &mut Vec<Segment>) -> Vec<NetResp> {
+        for s in segs {
+            out.extend(self.ep.on_segment(s));
+        }
+        self.rx.extend(&self.ep.deliver());
+        let mut resps = Vec::new();
+        while let Some(frame) = self.rx.read_frame() {
+            if let Some(r) = NetResp::decode(&frame) {
+                resps.push(r);
+            }
+        }
+        resps
+    }
+}
+
+/// The complete DDS storage server: storage path + network path +
+/// offload engine + host application.
+pub struct DisaggregatedServer<A: HostApp> {
+    pub storage: StorageServer,
+    pub director: TrafficDirector,
+    pub engine: OffloadEngine,
+    pub app: A,
+    /// Host's endpoint of the PEP's second connection.
+    host_ep: TcpEndpoint,
+    host_rx: framing::StreamBuf,
+}
+
+impl<A: HostApp> DisaggregatedServer<A> {
+    pub fn new(
+        storage: StorageServer,
+        logic: Arc<dyn OffloadLogic>,
+        signature: AppSignature,
+        engine_cfg: OffloadEngineConfig,
+        app: A,
+    ) -> Self {
+        let engine = OffloadEngine::new(
+            logic.clone(),
+            storage.cache.clone(),
+            storage.dpufs.clone(),
+            storage.engine_aio(),
+            engine_cfg,
+        );
+        let director = TrafficDirector::new(signature, logic, storage.cache.clone());
+        DisaggregatedServer {
+            storage,
+            director,
+            engine,
+            app,
+            host_ep: TcpEndpoint::new(),
+            host_rx: framing::StreamBuf::new(),
+        }
+    }
+
+    /// Build with offloading disabled (baseline mode: everything goes
+    /// to the host application).
+    pub fn baseline(storage: StorageServer, signature: AppSignature, app: A) -> Self {
+        Self::new(
+            storage,
+            Arc::new(NoOffload),
+            signature,
+            OffloadEngineConfig::default(),
+            app,
+        )
+    }
+
+    /// Process client packets through the whole server; returns the
+    /// segments flowing back to the client. Internally pumps the PEP
+    /// host connection and the host application to quiescence.
+    pub fn step(&mut self, tuple: &FiveTuple, segs: Vec<Segment>) -> Vec<Segment> {
+        let mut to_client = Vec::new();
+        let out = self.director.on_client_packets(tuple, segs, &mut self.engine);
+        to_client.extend(out.to_client);
+        self.pump_host(out.to_host, &mut to_client);
+        // Drain engine completions that were in flight.
+        let out = self.director.pump_completions(&mut self.engine);
+        to_client.extend(out.to_client);
+        self.pump_host(out.to_host, &mut to_client);
+        to_client
+    }
+
+    /// Poll for late engine completions (SSD workers are asynchronous).
+    pub fn poll(&mut self) -> Vec<Segment> {
+        let mut to_client = Vec::new();
+        let out = self.director.pump_completions(&mut self.engine);
+        to_client.extend(out.to_client);
+        self.pump_host(out.to_host, &mut to_client);
+        to_client
+    }
+
+    /// Deliver director→host segments into the host app and return its
+    /// responses to the director.
+    fn pump_host(&mut self, mut to_host: Vec<Segment>, to_client: &mut Vec<Segment>) {
+        while !to_host.is_empty() {
+            let mut back_to_dpu = Vec::new();
+            for s in &to_host {
+                back_to_dpu.extend(self.host_ep.on_segment(s));
+            }
+            self.host_rx.extend(&self.host_ep.deliver());
+            // Host app handles complete messages.
+            let mut responses = Vec::new();
+            while let Some(frame) = self.host_rx.read_frame() {
+                if let Some(msg) = NetMsg::decode(&frame) {
+                    responses.extend(self.app.handle(&msg));
+                }
+            }
+            if !responses.is_empty() {
+                let mut stream = Vec::new();
+                for r in responses {
+                    framing::write_frame(&mut stream, &r.encode());
+                }
+                back_to_dpu.extend(self.host_ep.send(&stream));
+            }
+            // Feed host segments (ACKs + responses) back to the
+            // director.
+            let out = self.director.on_host_packets(back_to_dpu);
+            to_client.extend(out.to_client);
+            to_host = out.to_host;
+        }
+    }
+}
+
+/// Drive a client request fully through a server, waiting for `expect`
+/// responses (test/example helper).
+pub fn run_request<A: HostApp>(
+    client: &mut ClientConn,
+    server: &mut DisaggregatedServer<A>,
+    msg: &NetMsg,
+    timeout: std::time::Duration,
+) -> anyhow::Result<Vec<NetResp>> {
+    let expect = msg.requests.len();
+    let mut out: Vec<NetResp> = Vec::new();
+    let mut seen = vec![false; expect];
+    let mut wire = client.send_msg(msg);
+    let deadline = std::time::Instant::now() + timeout;
+    let absorb = |resps: Vec<NetResp>, out: &mut Vec<NetResp>, seen: &mut Vec<bool>| {
+        for r in resps {
+            // Late/duplicate responses from earlier messages (or TCP
+            // retransmits) must not be attributed to this request.
+            if r.msg_id != msg.msg_id {
+                continue;
+            }
+            let idx = r.idx as usize;
+            if idx < expect && !seen[idx] {
+                seen[idx] = true;
+                out.push(r);
+            }
+        }
+    };
+    loop {
+        let back = server.step(&client.tuple, std::mem::take(&mut wire));
+        let mut acks = Vec::new();
+        let resps = client.on_segments(&back, &mut acks);
+        absorb(resps, &mut out, &mut seen);
+        wire = acks;
+        if out.len() >= expect {
+            // Final ACK exchange.
+            let _ = server.step(&client.tuple, wire);
+            out.sort_by_key(|r| r.idx);
+            return Ok(out);
+        }
+        if wire.is_empty() {
+            // Nothing in flight on the wire: wait for async completions.
+            let back = server.poll();
+            if back.is_empty() {
+                std::thread::yield_now();
+            }
+            let mut acks = Vec::new();
+            let resps = client.on_segments(&back, &mut acks);
+            absorb(resps, &mut out, &mut seen);
+            wire = acks;
+        }
+        anyhow::ensure!(std::time::Instant::now() < deadline, "request timed out");
+    }
+}

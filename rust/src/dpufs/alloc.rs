@@ -1,0 +1,117 @@
+//! Segment bitmap allocator (§4.3: "use a bitmap to track their
+//! availability").
+
+/// Fixed-size bitmap with first-fit allocation and a rotating cursor to
+/// avoid rescanning the full prefix on every alloc.
+#[derive(Debug, Clone)]
+pub struct SegmentBitmap {
+    words: Vec<u64>,
+    len: usize,
+    used: usize,
+    cursor: usize,
+}
+
+impl SegmentBitmap {
+    pub fn new(len: usize) -> Self {
+        SegmentBitmap { words: vec![0; len.div_ceil(64)], len, used: 0, cursor: 0 }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn used(&self) -> usize {
+        self.used
+    }
+
+    pub fn free(&self) -> usize {
+        self.len - self.used
+    }
+
+    pub fn get(&self, i: usize) -> bool {
+        assert!(i < self.len);
+        self.words[i / 64] >> (i % 64) & 1 == 1
+    }
+
+    pub fn set(&mut self, i: usize, v: bool) {
+        assert!(i < self.len);
+        let was = self.get(i);
+        if v {
+            self.words[i / 64] |= 1 << (i % 64);
+        } else {
+            self.words[i / 64] &= !(1 << (i % 64));
+        }
+        match (was, v) {
+            (false, true) => self.used += 1,
+            (true, false) => self.used -= 1,
+            _ => {}
+        }
+    }
+
+    /// Allocate the next free segment, or `None` when full.
+    pub fn alloc(&mut self) -> Option<usize> {
+        if self.used == self.len {
+            return None;
+        }
+        for step in 0..self.len {
+            let i = (self.cursor + step) % self.len;
+            if !self.get(i) {
+                self.set(i, true);
+                self.cursor = (i + 1) % self.len;
+                return Some(i);
+            }
+        }
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alloc_all_then_none() {
+        let mut b = SegmentBitmap::new(130);
+        let mut got = Vec::new();
+        while let Some(i) = b.alloc() {
+            got.push(i);
+        }
+        assert_eq!(got.len(), 130);
+        got.sort_unstable();
+        got.dedup();
+        assert_eq!(got.len(), 130);
+        assert_eq!(b.alloc(), None);
+        assert_eq!(b.free(), 0);
+    }
+
+    #[test]
+    fn free_and_realloc() {
+        let mut b = SegmentBitmap::new(8);
+        for _ in 0..8 {
+            b.alloc();
+        }
+        b.set(3, false);
+        b.set(5, false);
+        assert_eq!(b.free(), 2);
+        let a = b.alloc().unwrap();
+        let c = b.alloc().unwrap();
+        let mut pair = vec![a, c];
+        pair.sort_unstable();
+        assert_eq!(pair, vec![3, 5]);
+    }
+
+    #[test]
+    fn counts_track_sets() {
+        let mut b = SegmentBitmap::new(64);
+        b.set(0, true);
+        b.set(0, true); // idempotent
+        assert_eq!(b.used(), 1);
+        b.set(0, false);
+        b.set(0, false);
+        assert_eq!(b.used(), 0);
+    }
+}

@@ -1,0 +1,195 @@
+//! Metadata encoding for segment 0 (§4.3: "One of the segments is
+//! reserved to persistently store the metadata of directories and files,
+//! as well as the file mapping").
+//!
+//! Simple length-checked binary format:
+//! `magic u32 | next_dir u32 | next_file u32 | ndirs u32 | nfiles u32 |
+//!  dirs[] | files[]`.
+
+use std::collections::HashMap;
+
+use super::FsError;
+
+/// Directory identifier.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct DirId(pub u32);
+
+/// File identifier — what request encodings carry on the wire (Fig 9).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct FileId(pub u32);
+
+/// Per-file metadata including the file mapping (segment vector).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FileMeta {
+    pub id: FileId,
+    pub dir: DirId,
+    pub name: String,
+    pub size: u64,
+    /// The file mapping: i-th file segment -> SSD segment index.
+    pub segments: Vec<u32>,
+}
+
+const MAGIC: u32 = 0xDD5_F500;
+
+struct Writer(Vec<u8>);
+
+impl Writer {
+    fn u32(&mut self, v: u32) {
+        self.0.extend_from_slice(&v.to_le_bytes());
+    }
+    fn u64(&mut self, v: u64) {
+        self.0.extend_from_slice(&v.to_le_bytes());
+    }
+    fn str(&mut self, s: &str) {
+        self.u32(s.len() as u32);
+        self.0.extend_from_slice(s.as_bytes());
+    }
+}
+
+struct Reader<'a> {
+    buf: &'a [u8],
+    at: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8], FsError> {
+        if self.at + n > self.buf.len() {
+            return Err(FsError::Corrupt("truncated metadata".into()));
+        }
+        let s = &self.buf[self.at..self.at + n];
+        self.at += n;
+        Ok(s)
+    }
+    fn u32(&mut self) -> Result<u32, FsError> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+    fn u64(&mut self) -> Result<u64, FsError> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+    fn str(&mut self) -> Result<String, FsError> {
+        let n = self.u32()? as usize;
+        let b = self.take(n)?;
+        String::from_utf8(b.to_vec()).map_err(|_| FsError::Corrupt("bad utf8".into()))
+    }
+}
+
+/// Serialize metadata; fails if it does not fit the metadata segment.
+pub fn encode(
+    dirs: &HashMap<DirId, String>,
+    files: &HashMap<FileId, FileMeta>,
+    next_dir: u32,
+    next_file: u32,
+    segment_size: usize,
+) -> Result<Vec<u8>, FsError> {
+    let mut w = Writer(Vec::new());
+    w.u32(MAGIC);
+    w.u32(next_dir);
+    w.u32(next_file);
+    w.u32(dirs.len() as u32);
+    w.u32(files.len() as u32);
+    // Deterministic order for reproducible images.
+    let mut ds: Vec<_> = dirs.iter().collect();
+    ds.sort_by_key(|(id, _)| **id);
+    for (id, name) in ds {
+        w.u32(id.0);
+        w.str(name);
+    }
+    let mut fsv: Vec<_> = files.values().collect();
+    fsv.sort_by_key(|f| f.id);
+    for f in fsv {
+        w.u32(f.id.0);
+        w.u32(f.dir.0);
+        w.str(&f.name);
+        w.u64(f.size);
+        w.u32(f.segments.len() as u32);
+        for &s in &f.segments {
+            w.u32(s);
+        }
+    }
+    if w.0.len() > segment_size {
+        return Err(FsError::NoSpace);
+    }
+    Ok(w.0)
+}
+
+/// Deserialize metadata from a segment-0 image.
+#[allow(clippy::type_complexity)]
+pub fn decode(
+    buf: &[u8],
+) -> Result<(HashMap<DirId, String>, HashMap<FileId, FileMeta>, u32, u32), FsError> {
+    let mut r = Reader { buf, at: 0 };
+    if r.u32()? != MAGIC {
+        return Err(FsError::Corrupt("bad magic (not a DDS filesystem)".into()));
+    }
+    let next_dir = r.u32()?;
+    let next_file = r.u32()?;
+    let ndirs = r.u32()? as usize;
+    let nfiles = r.u32()? as usize;
+    let mut dirs = HashMap::with_capacity(ndirs);
+    for _ in 0..ndirs {
+        let id = DirId(r.u32()?);
+        dirs.insert(id, r.str()?);
+    }
+    let mut files = HashMap::with_capacity(nfiles);
+    for _ in 0..nfiles {
+        let id = FileId(r.u32()?);
+        let dir = DirId(r.u32()?);
+        let name = r.str()?;
+        let size = r.u64()?;
+        let nseg = r.u32()? as usize;
+        let mut segments = Vec::with_capacity(nseg);
+        for _ in 0..nseg {
+            segments.push(r.u32()?);
+        }
+        files.insert(id, FileMeta { id, dir, name, size, segments });
+    }
+    Ok((dirs, files, next_dir, next_file))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let mut dirs = HashMap::new();
+        dirs.insert(DirId(1), "db".to_string());
+        let mut files = HashMap::new();
+        files.insert(
+            FileId(7),
+            FileMeta {
+                id: FileId(7),
+                dir: DirId(1),
+                name: "rbpex".into(),
+                size: 123456,
+                segments: vec![3, 9, 12],
+            },
+        );
+        let buf = encode(&dirs, &files, 2, 8, 1 << 20).unwrap();
+        let (d2, f2, nd, nf) = decode(&buf).unwrap();
+        assert_eq!(d2, dirs);
+        assert_eq!(f2, files);
+        assert_eq!((nd, nf), (2, 8));
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        let buf = vec![0u8; 64];
+        assert!(matches!(decode(&buf), Err(FsError::Corrupt(_))));
+    }
+
+    #[test]
+    fn truncation_rejected() {
+        let mut dirs = HashMap::new();
+        dirs.insert(DirId(1), "a-directory-name".to_string());
+        let buf = encode(&dirs, &HashMap::new(), 2, 1, 1 << 20).unwrap();
+        assert!(matches!(decode(&buf[..buf.len() - 4]), Err(FsError::Corrupt(_))));
+    }
+
+    #[test]
+    fn size_limit_enforced() {
+        let mut dirs = HashMap::new();
+        dirs.insert(DirId(1), "x".repeat(100));
+        assert!(matches!(encode(&dirs, &HashMap::new(), 2, 1, 64), Err(FsError::NoSpace)));
+    }
+}

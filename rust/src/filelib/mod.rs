@@ -1,0 +1,336 @@
+//! The DDS host file library (§4.2) — the front end of the unified
+//! storage path.
+//!
+//! Offers the familiar file API the paper describes so that adopting
+//! DDS "requires minimal DBMS modification": `CreateDirectory`,
+//! `CreateFile`, `CreatePoll`, `PollAdd`, `ReadFile`, `WriteFile`,
+//! gathered writes / scattered reads, and `PollWait` with both
+//! *non-blocking* (zero wait) and *sleeping* (driver-interrupt) modes.
+//!
+//! All data-plane operations are non-blocking: a read/write is
+//! book-kept in its notification group, encoded per Fig 9, and inserted
+//! into the group's DMA-registered request ring; completions are pulled
+//! from the response ring by `PollWait`. The host never executes file
+//! I/O — that is the DPU file service's job.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::Duration;
+
+use crate::dpufs::{DirId, FileId, FsError};
+use crate::fileservice::{ControlMsg, Doorbell, GroupChannel};
+use crate::proto::{FileOpKind, FileRequest, FileResponse, Status};
+use crate::ring::{ProgressRing, RequestRing, ResponseRing, RingStatus};
+
+/// Library errors.
+#[derive(Debug)]
+pub enum LibError {
+    Fs(FsError),
+    ServiceGone,
+    RingFull,
+    NotInGroup,
+    /// Request record exceeds the ring's maximum allowable progress —
+    /// split the I/O (write payloads are inlined per Fig 9).
+    TooLarge { bytes: usize, max: usize },
+}
+
+impl std::fmt::Display for LibError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{self:?}")
+    }
+}
+
+impl std::error::Error for LibError {}
+
+impl From<FsError> for LibError {
+    fn from(e: FsError) -> Self {
+        LibError::Fs(e)
+    }
+}
+
+/// A completed file operation returned by `PollWait`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct CompletionEvent {
+    pub req_id: u64,
+    pub file_id: FileId,
+    pub kind: FileOpKind,
+    pub ok: bool,
+    /// Read payload (empty for writes). For scattered reads, use
+    /// [`CompletionEvent::scatter`] to split it back.
+    pub data: Vec<u8>,
+    /// Scatter sizes recorded at issue time (scattered reads only).
+    pub scatter_sizes: Vec<u32>,
+}
+
+impl CompletionEvent {
+    /// Split a scattered read's payload into the caller's buffers.
+    pub fn scatter(&self) -> Vec<&[u8]> {
+        if self.scatter_sizes.is_empty() {
+            return vec![&self.data[..]];
+        }
+        let mut out = Vec::with_capacity(self.scatter_sizes.len());
+        let mut at = 0usize;
+        for &s in &self.scatter_sizes {
+            let end = (at + s as usize).min(self.data.len());
+            out.push(&self.data[at..end]);
+            at = end;
+        }
+        out
+    }
+}
+
+struct PendingOp {
+    file_id: FileId,
+    kind: FileOpKind,
+    scatter_sizes: Vec<u32>,
+}
+
+/// An epoll-like notification group (§4.2): owns a request ring and a
+/// response ring, pre-registered for DPU DMA at creation.
+pub struct PollGroup {
+    chan: Arc<GroupChannel>,
+    pending: Mutex<HashMap<u64, PendingOp>>,
+    next_id: AtomicU64,
+}
+
+impl PollGroup {
+    /// Poll completions (§4.2 "Polling responses").
+    ///
+    /// * `timeout == 0` → non-blocking mode: return whatever is ready.
+    /// * `timeout > 0` → sleeping mode: block on the doorbell (the DPU
+    ///   driver interrupt) until a response arrives or timeout.
+    pub fn poll_wait(&self, timeout: Duration) -> Vec<CompletionEvent> {
+        let mut out = self.drain();
+        if !out.is_empty() || timeout.is_zero() {
+            return out;
+        }
+        let deadline = std::time::Instant::now() + timeout;
+        loop {
+            let seen = self.chan.doorbell.seq();
+            out = self.drain();
+            if !out.is_empty() {
+                return out;
+            }
+            let now = std::time::Instant::now();
+            if now >= deadline {
+                return out;
+            }
+            self.chan.doorbell.wait(seen, deadline - now);
+        }
+    }
+
+    fn drain(&self) -> Vec<CompletionEvent> {
+        let mut out = Vec::new();
+        loop {
+            let mut got: Option<FileResponse> = None;
+            let st = self.chan.resp_ring.pop(&mut |bytes| {
+                got = FileResponse::decode(bytes);
+            });
+            if st != RingStatus::Ok {
+                break;
+            }
+            let Some(resp) = got else { continue };
+            // Locate the book-kept operation by request id (§4.2).
+            let op = self.pending.lock().unwrap().remove(&resp.req_id);
+            let Some(op) = op else { continue };
+            out.push(CompletionEvent {
+                req_id: resp.req_id,
+                file_id: op.file_id,
+                kind: op.kind,
+                ok: resp.status == Status::Ok,
+                data: resp.data,
+                scatter_sizes: op.scatter_sizes,
+            });
+        }
+        out
+    }
+
+    /// Operations issued but not yet completed.
+    pub fn in_flight(&self) -> usize {
+        self.pending.lock().unwrap().len()
+    }
+
+    fn issue(&self, req: FileRequest, op: PendingOp) -> Result<u64, LibError> {
+        let id = req.req_id;
+        let encoded = req.encode();
+        let max = self.chan.req_ring.max_progress() as usize;
+        if encoded.len() + 12 > max {
+            return Err(LibError::TooLarge { bytes: encoded.len(), max });
+        }
+        self.pending.lock().unwrap().insert(id, op);
+        // Non-blocking insert; on RETRY (backlog at max allowable
+        // progress) undo the bookkeeping and surface RingFull.
+        match self.chan.req_ring.try_push(&encoded) {
+            RingStatus::Ok => Ok(id),
+            _ => {
+                self.pending.lock().unwrap().remove(&id);
+                Err(LibError::RingFull)
+            }
+        }
+    }
+}
+
+/// A DDS file handle. Data-plane ops go through the file's poll group
+/// (set with [`DdsClient::poll_add`]).
+#[derive(Clone)]
+pub struct DdsFile {
+    pub id: FileId,
+    group: Option<Arc<PollGroup>>,
+}
+
+/// The host-side client: control-plane calls to the DPU file service
+/// plus poll-group management.
+pub struct DdsClient {
+    ctrl: mpsc::Sender<ControlMsg>,
+    /// Ring sizing for new poll groups: (req ring bytes, max progress,
+    /// resp ring bytes).
+    pub req_ring_bytes: usize,
+    pub max_progress: usize,
+    pub resp_ring_bytes: usize,
+}
+
+macro_rules! ctrl_call {
+    ($self:expr, $variant:ident { $($field:ident : $value:expr),* }) => {{
+        let (tx, rx) = mpsc::channel();
+        $self
+            .ctrl
+            .send(ControlMsg::$variant { $($field: $value,)* reply: tx })
+            .map_err(|_| LibError::ServiceGone)?;
+        rx.recv().map_err(|_| LibError::ServiceGone)?
+    }};
+}
+
+impl DdsClient {
+    pub fn new(ctrl: mpsc::Sender<ControlMsg>) -> Self {
+        DdsClient {
+            ctrl,
+            req_ring_bytes: 1 << 20,
+            max_progress: 1 << 18,
+            resp_ring_bytes: 1 << 22,
+        }
+    }
+
+    /// `CreateDirectory` (§4.2).
+    pub fn create_directory(&self, name: &str) -> Result<DirId, LibError> {
+        Ok(ctrl_call!(self, CreateDirectory { name: name.to_string() })?)
+    }
+
+    /// `CreateFile` — returns a file handle (§4.2).
+    pub fn create_file(&self, dir: DirId, name: &str) -> Result<DdsFile, LibError> {
+        let id = ctrl_call!(self, CreateFile { dir: dir, name: name.to_string() })?;
+        Ok(DdsFile { id, group: None })
+    }
+
+    /// Pre-size a file (convenience for apps that preallocate).
+    pub fn ensure_size(&self, file: &DdsFile, size: u64) -> Result<(), LibError> {
+        Ok(ctrl_call!(self, EnsureSize { file: file.id, size: size })?)
+    }
+
+    /// Current file size.
+    pub fn file_size(&self, file: &DdsFile) -> Result<u64, LibError> {
+        Ok(ctrl_call!(self, FileSize { file: file.id })?)
+    }
+
+    pub fn delete_file(&self, file: DdsFile) -> Result<(), LibError> {
+        Ok(ctrl_call!(self, DeleteFile { file: file.id })?)
+    }
+
+    pub fn remove_directory(&self, dir: DirId) -> Result<(), LibError> {
+        Ok(ctrl_call!(self, RemoveDirectory { dir: dir })?)
+    }
+
+    /// Persist DPU file-system metadata.
+    pub fn sync_metadata(&self) -> Result<(), LibError> {
+        Ok(ctrl_call!(self, SyncMetadata {})?)
+    }
+
+    /// `CreatePoll` (§4.2): allocate request/response rings for the
+    /// group and register them with the DPU driver for DMA.
+    pub fn create_poll(&self) -> Result<Arc<PollGroup>, LibError> {
+        let chan = Arc::new(GroupChannel {
+            req_ring: ProgressRing::new(self.req_ring_bytes, self.max_progress),
+            resp_ring: ResponseRing::new(self.resp_ring_bytes),
+            doorbell: Doorbell::new(),
+        });
+        let (tx, rx) = mpsc::channel();
+        self.ctrl
+            .send(ControlMsg::CreatePoll { group: chan.clone(), reply: tx })
+            .map_err(|_| LibError::ServiceGone)?;
+        let _gid = rx.recv().map_err(|_| LibError::ServiceGone)?;
+        Ok(Arc::new(PollGroup {
+            chan,
+            pending: Mutex::new(HashMap::new()),
+            next_id: AtomicU64::new(1),
+        }))
+    }
+
+    /// `PollAdd`: attach a file to a notification group (§4.2).
+    pub fn poll_add(&self, file: &mut DdsFile, group: &Arc<PollGroup>) {
+        file.group = Some(group.clone());
+    }
+
+    /// `ReadFile`: non-blocking scattered/normal read (§4.2). Returns
+    /// the request id for matching the completion.
+    pub fn read_file(&self, file: &DdsFile, offset: u64, size: u32) -> Result<u64, LibError> {
+        let group = file.group.as_ref().ok_or(LibError::NotInGroup)?;
+        let id = group.next_id.fetch_add(1, Ordering::Relaxed);
+        group.issue(
+            FileRequest::read(id, file.id.0, offset, size),
+            PendingOp { file_id: file.id, kind: FileOpKind::Read, scatter_sizes: Vec::new() },
+        )
+    }
+
+    /// Scattered read: one file I/O whose payload is later split into
+    /// the given destination sizes (§4.2 "scattered reads").
+    pub fn scatter_read(
+        &self,
+        file: &DdsFile,
+        offset: u64,
+        sizes: &[u32],
+    ) -> Result<u64, LibError> {
+        let group = file.group.as_ref().ok_or(LibError::NotInGroup)?;
+        let id = group.next_id.fetch_add(1, Ordering::Relaxed);
+        let total: u32 = sizes.iter().sum();
+        group.issue(
+            FileRequest::read(id, file.id.0, offset, total),
+            PendingOp {
+                file_id: file.id,
+                kind: FileOpKind::Read,
+                scatter_sizes: sizes.to_vec(),
+            },
+        )
+    }
+
+    /// `WriteFile`: non-blocking write; the payload is inlined in the
+    /// ring record so one DMA-read moves the whole request (Fig 9).
+    pub fn write_file(&self, file: &DdsFile, offset: u64, data: &[u8]) -> Result<u64, LibError> {
+        let group = file.group.as_ref().ok_or(LibError::NotInGroup)?;
+        let id = group.next_id.fetch_add(1, Ordering::Relaxed);
+        group.issue(
+            FileRequest::write(id, file.id.0, offset, data.to_vec()),
+            PendingOp { file_id: file.id, kind: FileOpKind::Write, scatter_sizes: Vec::new() },
+        )
+    }
+
+    /// Gathered write: an array of source buffers written as one file
+    /// I/O (§4.2 "gathered writes").
+    pub fn gather_write(
+        &self,
+        file: &DdsFile,
+        offset: u64,
+        bufs: &[&[u8]],
+    ) -> Result<u64, LibError> {
+        let group = file.group.as_ref().ok_or(LibError::NotInGroup)?;
+        let id = group.next_id.fetch_add(1, Ordering::Relaxed);
+        let total: usize = bufs.iter().map(|b| b.len()).sum();
+        let mut data = Vec::with_capacity(total);
+        for b in bufs {
+            data.extend_from_slice(b);
+        }
+        group.issue(
+            FileRequest::write(id, file.id.0, offset, data),
+            PendingOp { file_id: file.id, kind: FileOpKind::Write, scatter_sizes: Vec::new() },
+        )
+    }
+}

@@ -1,0 +1,280 @@
+//! Ordered response staging — the TailA/TailB/TailC machinery of §4.3.
+//!
+//! * `TailA` (**allocated**): end of pre-allocated response slots; a
+//!   slot is allocated, with status *pending*, **before** its I/O is
+//!   submitted, so the SSD DMA has a destination and no response copy is
+//!   ever needed.
+//! * `TailB` (**buffered**): end of the in-order prefix of completed
+//!   responses. The service "periodically checks the status of the
+//!   pre-allocated responses ... advances TailB until a pending
+//!   response".
+//! * `TailC` (**completed/delivered**): end of responses DMA-written to
+//!   the host response ring. `TailB - TailC ≥ batch` triggers delivery.
+
+use crate::dpufs::Extent;
+
+/// Status of one pre-allocated response slot.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StagedStatus {
+    Pending,
+    Done,
+    Failed,
+}
+
+#[derive(Debug)]
+struct Slot {
+    req_id: u64,
+    status: StagedStatus,
+    /// Pre-allocated response payload buffer (read data lands here).
+    data: Vec<u8>,
+    extents_remaining: usize,
+    /// Byte offset in `data` where each extent starts.
+    extent_offsets: Vec<usize>,
+}
+
+/// Fixed-capacity ring of pre-allocated response slots with the three
+/// tail pointers.
+pub struct OrderedStaging {
+    slots: Vec<Option<Slot>>,
+    /// TailA: next slot to allocate (monotonic).
+    tail_a: u64,
+    /// TailB: end of in-order completed prefix.
+    tail_b: u64,
+    /// TailC: delivered to the host.
+    tail_c: u64,
+}
+
+impl OrderedStaging {
+    pub fn new(capacity: usize) -> Self {
+        let mut slots = Vec::with_capacity(capacity);
+        slots.resize_with(capacity, || None);
+        OrderedStaging { slots, tail_a: 0, tail_b: 0, tail_c: 0 }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn free_slots(&self) -> usize {
+        self.capacity() - (self.tail_a - self.tail_c) as usize
+    }
+
+    /// Completed-but-undelivered responses (`TailB - TailC`).
+    pub fn buffered(&self) -> usize {
+        (self.tail_b - self.tail_c) as usize
+    }
+
+    /// Allocated-but-not-complete (`TailA - TailB`).
+    pub fn outstanding(&self) -> usize {
+        (self.tail_a - self.tail_b) as usize
+    }
+
+    /// TailA advance: pre-allocate a response of `expected_len` payload
+    /// bytes for `req_id`, status pending. Returns the slot index, or
+    /// `None` when the ring is full.
+    pub fn allocate(&mut self, req_id: u64, expected_len: usize) -> Option<u64> {
+        if self.free_slots() == 0 {
+            return None;
+        }
+        let idx = self.tail_a;
+        let pos = (idx % self.capacity() as u64) as usize;
+        // expected_len counts header + payload; the payload buffer is
+        // what the device writes into.
+        let payload = expected_len.saturating_sub(crate::proto::FileResponse::HEADER_LEN);
+        self.slots[pos] = Some(Slot {
+            req_id,
+            status: StagedStatus::Pending,
+            data: vec![0u8; payload],
+            extents_remaining: usize::MAX, // until set_extents
+            extent_offsets: Vec::new(),
+        });
+        self.tail_a += 1;
+        Some(idx)
+    }
+
+    /// Record the extent layout for a slot (defines where each extent's
+    /// bytes land in the pre-allocated buffer).
+    pub fn set_extents(&mut self, slot: u64, extents: &[Extent]) {
+        let pos = (slot % self.capacity() as u64) as usize;
+        let s = self.slots[pos].as_mut().expect("slot allocated");
+        let mut offsets = Vec::with_capacity(extents.len());
+        let mut acc = 0usize;
+        for e in extents {
+            offsets.push(acc);
+            acc += e.len as usize;
+        }
+        s.extent_offsets = offsets;
+        s.extents_remaining = extents.len();
+        if extents.is_empty() {
+            s.status = StagedStatus::Done;
+        }
+    }
+
+    /// Mark one extent of `slot` complete, placing `data` at its
+    /// recorded offset. `extra_copy` models the straw-man that stages
+    /// the payload once more before placing it (Fig 18 ablation).
+    pub fn complete_extent(&mut self, slot: u64, extent: usize, data: &[u8], extra_copy: bool) {
+        if slot < self.tail_c || slot >= self.tail_a {
+            return; // stale completion
+        }
+        let pos = (slot % self.capacity() as u64) as usize;
+        let Some(s) = self.slots[pos].as_mut() else { return };
+        if s.status == StagedStatus::Failed {
+            return;
+        }
+        let staged;
+        let src: &[u8] = if extra_copy {
+            staged = data.to_vec();
+            &staged
+        } else {
+            data
+        };
+        if !src.is_empty() {
+            let start = s.extent_offsets.get(extent).copied().unwrap_or(0);
+            let end = (start + src.len()).min(s.data.len());
+            if start < end {
+                s.data[start..end].copy_from_slice(&src[..end - start]);
+            }
+        }
+        s.extents_remaining = s.extents_remaining.saturating_sub(1);
+        if s.extents_remaining == 0 {
+            s.status = StagedStatus::Done;
+        }
+    }
+
+    /// Mark a slot failed (error code instead of pending, §4.3).
+    pub fn fail(&mut self, slot: u64) {
+        let pos = (slot % self.capacity() as u64) as usize;
+        if let Some(s) = self.slots[pos].as_mut() {
+            s.status = StagedStatus::Failed;
+        }
+    }
+
+    /// TailB advance: extend the in-order completed prefix.
+    pub fn advance_buffered(&mut self) {
+        while self.tail_b < self.tail_a {
+            let pos = (self.tail_b % self.capacity() as u64) as usize;
+            match self.slots[pos].as_ref() {
+                Some(s) if s.status != StagedStatus::Pending => self.tail_b += 1,
+                _ => break,
+            }
+        }
+    }
+
+    /// Next deliverable response (at TailC), if TailC < TailB.
+    pub fn peek_deliverable(&self) -> Option<(u64, StagedStatus, Vec<u8>)> {
+        if self.tail_c >= self.tail_b {
+            return None;
+        }
+        let pos = (self.tail_c % self.capacity() as u64) as usize;
+        let s = self.slots[pos].as_ref().expect("slot in [TailC, TailB)");
+        let data = if s.status == StagedStatus::Done { s.data.clone() } else { Vec::new() };
+        Some((s.req_id, s.status, data))
+    }
+
+    /// TailC advance after a successful DMA-write to the host ring.
+    pub fn pop_delivered(&mut self) {
+        assert!(self.tail_c < self.tail_b, "nothing deliverable");
+        let pos = (self.tail_c % self.capacity() as u64) as usize;
+        self.slots[pos] = None;
+        self.tail_c += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ext(addr: u64, len: u64) -> Extent {
+        Extent { addr, len }
+    }
+
+    #[test]
+    fn in_order_single_extent() {
+        let mut st = OrderedStaging::new(8);
+        let a = st.allocate(1, crate::proto::FileResponse::HEADER_LEN + 4).unwrap();
+        let b = st.allocate(2, crate::proto::FileResponse::HEADER_LEN + 4).unwrap();
+        st.set_extents(a, &[ext(0, 4)]);
+        st.set_extents(b, &[ext(4, 4)]);
+        // Complete b FIRST — must not be delivered before a.
+        st.complete_extent(b, 0, &[2, 2, 2, 2], false);
+        st.advance_buffered();
+        assert_eq!(st.buffered(), 0);
+        assert!(st.peek_deliverable().is_none());
+        // Complete a — now both become deliverable in order.
+        st.complete_extent(a, 0, &[1, 1, 1, 1], false);
+        st.advance_buffered();
+        assert_eq!(st.buffered(), 2);
+        let (id1, s1, d1) = st.peek_deliverable().unwrap();
+        assert_eq!((id1, s1, d1), (1, StagedStatus::Done, vec![1, 1, 1, 1]));
+        st.pop_delivered();
+        let (id2, _, d2) = st.peek_deliverable().unwrap();
+        assert_eq!((id2, d2), (2, vec![2, 2, 2, 2]));
+        st.pop_delivered();
+        assert!(st.peek_deliverable().is_none());
+    }
+
+    #[test]
+    fn multi_extent_assembles_at_offsets() {
+        let mut st = OrderedStaging::new(4);
+        let a = st.allocate(7, crate::proto::FileResponse::HEADER_LEN + 10).unwrap();
+        st.set_extents(a, &[ext(0, 6), ext(100, 4)]);
+        // Second extent completes first.
+        st.complete_extent(a, 1, &[9, 9, 9, 9], false);
+        st.advance_buffered();
+        assert_eq!(st.buffered(), 0);
+        st.complete_extent(a, 0, &[1, 2, 3, 4, 5, 6], false);
+        st.advance_buffered();
+        let (_, status, data) = st.peek_deliverable().unwrap();
+        assert_eq!(status, StagedStatus::Done);
+        assert_eq!(data, vec![1, 2, 3, 4, 5, 6, 9, 9, 9, 9]);
+    }
+
+    #[test]
+    fn capacity_enforced() {
+        let mut st = OrderedStaging::new(2);
+        st.allocate(1, 16).unwrap();
+        st.allocate(2, 16).unwrap();
+        assert!(st.allocate(3, 16).is_none());
+        assert_eq!(st.free_slots(), 0);
+    }
+
+    #[test]
+    fn failed_slot_delivers_error_in_order() {
+        let mut st = OrderedStaging::new(4);
+        let a = st.allocate(1, 32).unwrap();
+        st.set_extents(a, &[ext(0, 19)]);
+        st.fail(a);
+        st.advance_buffered();
+        let (id, status, data) = st.peek_deliverable().unwrap();
+        assert_eq!(id, 1);
+        assert_eq!(status, StagedStatus::Failed);
+        assert!(data.is_empty());
+    }
+
+    #[test]
+    fn stale_completion_ignored() {
+        let mut st = OrderedStaging::new(2);
+        let a = st.allocate(1, 16).unwrap();
+        st.set_extents(a, &[ext(0, 3)]);
+        st.complete_extent(a, 0, &[1, 2, 3], false);
+        st.advance_buffered();
+        st.pop_delivered();
+        // Late duplicate completion for a recycled slot index: no panic,
+        // no state corruption.
+        st.complete_extent(a, 0, &[9, 9, 9], false);
+        assert_eq!(st.buffered(), 0);
+    }
+
+    #[test]
+    fn write_slot_zero_extents_completes_via_counter() {
+        let mut st = OrderedStaging::new(2);
+        let a = st.allocate(5, crate::proto::FileResponse::HEADER_LEN).unwrap();
+        st.set_extents(a, &[ext(0, 8)]);
+        st.complete_extent(a, 0, &[], false); // write completion: no data
+        st.advance_buffered();
+        let (id, status, data) = st.peek_deliverable().unwrap();
+        assert_eq!((id, status), (5, StagedStatus::Done));
+        assert!(data.is_empty());
+    }
+}

@@ -1,0 +1,43 @@
+//! # DDS: DPU-optimized Disaggregated Storage — reproduction
+//!
+//! Reproduction of *DDS: DPU-optimized Disaggregated Storage* (Zhang,
+//! Bernstein, Chandramouli, Hu, Zheng — VLDB 2024, extended report).
+//!
+//! The library is organised in two planes that share wire formats,
+//! workloads, and calibration constants:
+//!
+//! * **Functional plane** — real bytes end to end: the progress-pointer
+//!   DMA ring buffers ([`ring`]), the DPU flat file system ([`dpufs`]) over
+//!   an in-memory NVMe model ([`ssd`]), the host file library ([`filelib`])
+//!   and DPU file service ([`fileservice`]), the sequenced-transport
+//!   network with a TCP-splitting PEP ([`net`], [`director`]), the offload
+//!   engine with its context ring and user-supplied offload logic
+//!   ([`offload`], [`cache`]), and the PJRT runtime that executes the
+//!   AOT-compiled Pallas kernels from the hot path ([`runtime`]).
+//! * **Calibrated testbed plane** ([`sim`], [`baselines`]) — a
+//!   discrete-virtual-time queueing testbed standing in for the paper's
+//!   BlueField-2 + EPYC + NVMe + 100 GbE hardware, calibrated against the
+//!   constants the paper itself reports. Every figure of the evaluation
+//!   (§8, §9) is regenerated from this plane by the `rust/benches/fig*`
+//!   targets.
+//!
+//! See `DESIGN.md` for the substitution ledger and the experiment index.
+
+pub mod apps;
+pub mod baselines;
+pub mod cache;
+pub mod coordinator;
+pub mod director;
+pub mod dma;
+pub mod dpufs;
+pub mod filelib;
+pub mod fileservice;
+pub mod metrics;
+pub mod net;
+pub mod offload;
+pub mod proto;
+pub mod ring;
+pub mod runtime;
+pub mod sim;
+pub mod ssd;
+pub mod workload;

@@ -1,0 +1,177 @@
+//! DDS leader binary: CLI for running the functional server demo, the
+//! kernel runtime smoke test, and quick testbed scenarios.
+//!
+//! (CLI parsing is hand-rolled: the build environment is offline and
+//! has no clap.)
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use dds::apps::RawFileApp;
+use dds::baselines::{run_stack, IoDir, StackKind};
+use dds::coordinator::{
+    run_request, ClientConn, DisaggregatedServer, StorageServer, StorageServerConfig,
+};
+use dds::director::AppSignature;
+use dds::metrics::{fmt_ns, fmt_ops};
+use dds::net::FiveTuple;
+use dds::offload::{OffloadEngineConfig, RawFileOffload};
+use dds::runtime::KernelRuntime;
+use dds::sim::Params;
+use dds::workload::RandomIoGen;
+
+const USAGE: &str = "\
+dds — DPU-optimized Disaggregated Storage (reproduction)
+
+USAGE:
+    dds serve [--requests N] [--batch B] [--io BYTES] [--no-offload]
+        run the full functional server (client → director → offload
+        engine / host app → SSD) in-process and report throughput
+    dds kernels
+        load artifacts/*.hlo.txt into the PJRT runtime and smoke-test
+    dds stack <1..10> [--io BYTES] [--window W] [--write]
+        run one §8.4 storage-stack configuration on the testbed
+    dds help
+";
+
+fn arg_val(args: &[String], flag: &str) -> Option<String> {
+    args.iter().position(|a| a == flag).and_then(|i| args.get(i + 1).cloned())
+}
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match args.first().map(|s| s.as_str()) {
+        Some("serve") => serve(&args),
+        Some("kernels") => kernels(),
+        Some("stack") => stack(&args),
+        _ => {
+            print!("{USAGE}");
+            Ok(())
+        }
+    }
+}
+
+fn serve(args: &[String]) -> anyhow::Result<()> {
+    let n_requests: usize =
+        arg_val(args, "--requests").map_or(2000, |v| v.parse().unwrap_or(2000));
+    let batch: usize = arg_val(args, "--batch").map_or(8, |v| v.parse().unwrap_or(8));
+    let io: u32 = arg_val(args, "--io").map_or(1024, |v| v.parse().unwrap_or(1024));
+    let offload = !args.iter().any(|a| a == "--no-offload");
+
+    println!("building storage server (offload={offload}, io={io}B, batch={batch})…");
+    let logic = Arc::new(RawFileOffload);
+    let storage = StorageServer::build(StorageServerConfig::default(), Some(logic.clone()))?;
+
+    // Host application with a data file.
+    let fe = storage.front_end();
+    let dir = fe.create_directory("bench").map_err(|e| anyhow::anyhow!("{e}"))?;
+    let mut file = fe.create_file(dir, "data").map_err(|e| anyhow::anyhow!("{e}"))?;
+    let group = fe.create_poll().map_err(|e| anyhow::anyhow!("{e}"))?;
+    fe.poll_add(&mut file, &group);
+    let file_bytes: u64 = 32 << 20;
+    // Fill the file in 128 KiB writes (inlined payloads must fit the
+    // ring's max allowable progress).
+    let chunk = 128 << 10;
+    let mut pending = std::collections::HashSet::new();
+    for off in (0..file_bytes).step_by(chunk) {
+        let fill: Vec<u8> = (off..off + chunk as u64).map(|i| (i % 253) as u8).collect();
+        // Non-blocking issue with RingFull backpressure: drain
+        // completions until the ring admits the next write.
+        loop {
+            match fe.write_file(&file, off, &fill) {
+                Ok(id) => {
+                    pending.insert(id);
+                    break;
+                }
+                Err(dds::filelib::LibError::RingFull) => {
+                    for ev in group.poll_wait(Duration::from_millis(20)) {
+                        pending.remove(&ev.req_id);
+                    }
+                }
+                Err(e) => anyhow::bail!("write_file: {e}"),
+            }
+        }
+    }
+    while !pending.is_empty() {
+        for ev in group.poll_wait(Duration::from_millis(100)) {
+            pending.remove(&ev.req_id);
+        }
+    }
+    let file_id = file.id;
+
+    let app = RawFileApp { client: fe, file, group };
+    let signature = AppSignature::server_port(5000);
+    let mut server = if offload {
+        DisaggregatedServer::new(storage, logic, signature, OffloadEngineConfig::default(), app)
+    } else {
+        DisaggregatedServer::baseline(storage, signature, app)
+    };
+
+    let tuple = FiveTuple::new(0x0a00_0001, 40001, 0x0a00_00ff, 5000);
+    let mut client = ClientConn::new(tuple);
+    let mut gen = RandomIoGen::new(file_id.0, file_bytes, io, 1.0, batch, 42);
+
+    let t0 = std::time::Instant::now();
+    let mut done = 0usize;
+    while done < n_requests {
+        let msg = gen.next_msg();
+        let resps = run_request(&mut client, &mut server, &msg, Duration::from_secs(10))?;
+        anyhow::ensure!(resps.iter().all(|r| r.status == 0), "request failed");
+        done += resps.len();
+    }
+    let dt = t0.elapsed();
+    let rate = done as f64 / dt.as_secs_f64();
+    println!(
+        "served {done} requests in {dt:.2?} → {} IOPS (functional in-proc path)",
+        fmt_ops(rate)
+    );
+    println!(
+        "director: offloaded={} to_host={}",
+        server.director.reqs_offloaded, server.director.reqs_to_host
+    );
+    Ok(())
+}
+
+fn kernels() -> anyhow::Result<()> {
+    let dir = KernelRuntime::artifacts_dir();
+    println!("loading kernels from {dir:?}…");
+    let mut rt = KernelRuntime::cpu()?;
+    let names = rt.load_dir(&dir)?;
+    anyhow::ensure!(!names.is_empty(), "no artifacts found — run `make artifacts`");
+    println!("loaded: {names:?}");
+    // Smoke: run the checksum kernel against the rust reference.
+    let pages: Vec<u8> = (0..dds::runtime::CHECKSUM_BATCH * dds::runtime::CHECKSUM_PAGE)
+        .map(|i| (i % 251) as u8)
+        .collect();
+    let sums = rt.checksum_batch(&pages)?;
+    for (i, chunk) in pages.chunks(dds::runtime::CHECKSUM_PAGE).enumerate() {
+        anyhow::ensure!(
+            sums[i] == dds::runtime::checksum_ref(chunk),
+            "checksum mismatch on page {i}"
+        );
+    }
+    println!("checksum kernel OK ({} pages)", sums.len());
+    Ok(())
+}
+
+fn stack(args: &[String]) -> anyhow::Result<()> {
+    let idx: usize = args
+        .get(1)
+        .and_then(|v| v.parse().ok())
+        .filter(|v| (1..=10).contains(v))
+        .ok_or_else(|| anyhow::anyhow!("stack index must be 1..10"))?;
+    let io: usize = arg_val(args, "--io").map_or(1024, |v| v.parse().unwrap_or(1024));
+    let window: usize = arg_val(args, "--window").map_or(256, |v| v.parse().unwrap_or(256));
+    let dir = if args.iter().any(|a| a == "--write") { IoDir::Write } else { IoDir::Read };
+    let kind = StackKind::ALL[idx - 1];
+    let p = Params::paper();
+    let r = run_stack(kind, dir, io, window, 8, &p);
+    println!("{}", kind.label());
+    println!("  throughput : {} IOPS", fmt_ops(r.throughput));
+    println!("  p50 / p99  : {} / {}", fmt_ns(r.p50_ns), fmt_ns(r.p99_ns));
+    println!(
+        "  cores      : server {:.2}  client {:.2}  dpu {:.2}",
+        r.server_cores, r.client_cores, r.dpu_cores
+    );
+    Ok(())
+}

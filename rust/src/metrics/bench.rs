@@ -1,0 +1,86 @@
+//! Minimal wallclock micro-bench harness (criterion is unavailable in
+//! this offline environment).
+//!
+//! Used by the `rust/benches/*` targets for the *real* (non-simulated)
+//! measurements: ring throughput, cache-table ops, kernel dispatch.
+
+use std::time::{Duration, Instant};
+
+/// Prevent the optimizer from discarding a value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    // Stable-rust black box.
+    std::hint::black_box(x)
+}
+
+/// Result of a timed run.
+#[derive(Debug, Clone, Copy)]
+pub struct BenchResult {
+    pub iters: u64,
+    pub elapsed: Duration,
+}
+
+impl BenchResult {
+    pub fn ops_per_sec(&self) -> f64 {
+        self.iters as f64 / self.elapsed.as_secs_f64()
+    }
+
+    pub fn ns_per_op(&self) -> f64 {
+        self.elapsed.as_nanos() as f64 / self.iters as f64
+    }
+}
+
+/// Run `f` repeatedly for at least `min_time`, after a warm-up; returns
+/// the measured result. `f` receives the iteration index.
+pub fn time_for(min_time: Duration, mut f: impl FnMut(u64)) -> BenchResult {
+    // Warm-up ~10% of budget.
+    let warm_until = Instant::now() + min_time / 10;
+    let mut i = 0u64;
+    while Instant::now() < warm_until {
+        f(i);
+        i += 1;
+    }
+    let start = Instant::now();
+    let until = start + min_time;
+    let mut iters = 0u64;
+    while Instant::now() < until {
+        // Batch 64 calls between clock reads to amortize Instant cost.
+        for _ in 0..64 {
+            f(iters);
+            iters += 1;
+        }
+    }
+    BenchResult { iters, elapsed: start.elapsed() }
+}
+
+/// Time a fixed number of iterations.
+pub fn time_n(iters: u64, mut f: impl FnMut(u64)) -> BenchResult {
+    let start = Instant::now();
+    for i in 0..iters {
+        f(i);
+    }
+    BenchResult { iters, elapsed: start.elapsed() }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_n_counts() {
+        let mut n = 0u64;
+        let r = time_n(1000, |_| n += 1);
+        assert_eq!(n, 1000);
+        assert_eq!(r.iters, 1000);
+        assert!(r.ops_per_sec() > 0.0);
+    }
+
+    #[test]
+    fn time_for_runs_at_least_budget() {
+        let r = time_for(Duration::from_millis(30), |i| {
+            black_box(i * 2);
+        });
+        assert!(r.elapsed >= Duration::from_millis(30));
+        assert!(r.iters > 0);
+    }
+}

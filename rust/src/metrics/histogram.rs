@@ -1,0 +1,205 @@
+//! HDR-style log-bucketed histogram for nanosecond latencies.
+//!
+//! Buckets have ~1.5 % relative width (64 sub-buckets per power of two),
+//! which is plenty for p50/p99 reporting, with O(1) record.
+
+/// Log-bucketed histogram over `u64` values (typically ns).
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    /// counts[b*SUB + s]: bucket b = floor(log2(v)), sub-bucket s.
+    counts: Vec<u64>,
+    total: u64,
+    min: u64,
+    max: u64,
+    sum: u128,
+}
+
+const SUB_BITS: u32 = 6;
+const SUB: usize = 1 << SUB_BITS; // 64 sub-buckets per octave
+const OCTAVES: usize = 64;
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Histogram {
+            counts: vec![0; OCTAVES * SUB],
+            total: 0,
+            min: u64::MAX,
+            max: 0,
+            sum: 0,
+        }
+    }
+
+    #[inline]
+    fn index(v: u64) -> usize {
+        let v = v.max(1);
+        let b = 63 - v.leading_zeros() as usize; // floor(log2 v)
+        let s = if b >= SUB_BITS as usize {
+            ((v >> (b - SUB_BITS as usize)) as usize) & (SUB - 1)
+        } else {
+            // Small values: spread over low sub-buckets.
+            (v as usize) & (SUB - 1)
+        };
+        b * SUB + s
+    }
+
+    /// Lower bound of the bucket at flat index `i`.
+    fn bucket_value(i: usize) -> u64 {
+        let b = i / SUB;
+        let s = (i % SUB) as u64;
+        if b >= SUB_BITS as usize {
+            (1u64 << b) + (s << (b - SUB_BITS as usize))
+        } else {
+            s.max(1)
+        }
+    }
+
+    /// Record one observation.
+    #[inline]
+    pub fn record(&mut self, v: u64) {
+        self.counts[Self::index(v)] += 1;
+        self.total += 1;
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+        self.sum += v as u128;
+    }
+
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    pub fn min(&self) -> u64 {
+        if self.total == 0 {
+            0
+        } else {
+            self.min
+        }
+    }
+
+    pub fn max(&self) -> u64 {
+        self.max
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.total as f64
+        }
+    }
+
+    /// Value at quantile `q` in `[0, 1]` (bucket lower bound; exact min/max
+    /// at the extremes).
+    pub fn quantile(&self, q: f64) -> u64 {
+        if self.total == 0 {
+            return 0;
+        }
+        if q <= 0.0 {
+            return self.min();
+        }
+        let target = ((q * self.total as f64).ceil() as u64).clamp(1, self.total);
+        let mut acc = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            acc += c;
+            if acc >= target {
+                return Self::bucket_value(i).clamp(self.min(), self.max);
+            }
+        }
+        self.max
+    }
+
+    pub fn p50(&self) -> u64 {
+        self.quantile(0.5)
+    }
+
+    pub fn p99(&self) -> u64 {
+        self.quantile(0.99)
+    }
+
+    /// Merge another histogram into this one.
+    pub fn merge(&mut self, other: &Histogram) {
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += *b;
+        }
+        self.total += other.total;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+        self.sum += other.sum;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty() {
+        let h = Histogram::new();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.quantile(0.5), 0);
+        assert_eq!(h.mean(), 0.0);
+    }
+
+    #[test]
+    fn constant_values() {
+        let mut h = Histogram::new();
+        for _ in 0..1000 {
+            h.record(5000);
+        }
+        let p50 = h.p50();
+        assert!((p50 as f64 - 5000.0).abs() / 5000.0 < 0.02, "p50={p50}");
+        assert_eq!(h.min(), 5000);
+        assert_eq!(h.max(), 5000);
+    }
+
+    #[test]
+    fn quantiles_monotone_and_accurate() {
+        let mut h = Histogram::new();
+        for v in 1..=100_000u64 {
+            h.record(v);
+        }
+        let p50 = h.quantile(0.5);
+        let p99 = h.quantile(0.99);
+        assert!((p50 as f64 - 50_000.0).abs() / 50_000.0 < 0.03, "p50={p50}");
+        assert!((p99 as f64 - 99_000.0).abs() / 99_000.0 < 0.03, "p99={p99}");
+        assert!(p50 <= p99);
+    }
+
+    #[test]
+    fn mean_exact() {
+        let mut h = Histogram::new();
+        for v in [10u64, 20, 30] {
+            h.record(v);
+        }
+        assert!((h.mean() - 20.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn merge_combines() {
+        let mut a = Histogram::new();
+        let mut b = Histogram::new();
+        for v in 1..=1000u64 {
+            a.record(v);
+            b.record(v + 1000);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), 2000);
+        let p50 = a.quantile(0.5);
+        assert!((p50 as f64 - 1000.0).abs() / 1000.0 < 0.05, "p50={p50}");
+    }
+
+    #[test]
+    fn extremes() {
+        let mut h = Histogram::new();
+        h.record(1);
+        h.record(u64::MAX / 2);
+        assert_eq!(h.min(), 1);
+        assert_eq!(h.max(), u64::MAX / 2);
+        assert!(h.quantile(1.0) >= h.quantile(0.0));
+    }
+}

@@ -1,0 +1,9 @@
+//! Measurement utilities: log-bucketed latency histograms and series
+//! formatting shared by the functional plane and the testbed.
+
+pub mod bench;
+mod histogram;
+mod series;
+
+pub use histogram::Histogram;
+pub use series::{fmt_ns, fmt_ops, Row, Table};

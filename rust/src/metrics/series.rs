@@ -1,0 +1,129 @@
+//! Paper-style table/series formatting for the figure benches.
+//!
+//! Each `fig*` bench prints the series a paper figure plots, one row per
+//! x-value, so `cargo bench` output can be diffed against the paper.
+
+/// Human-readable ns: "780 µs", "11.0 ms", "450 ns".
+pub fn fmt_ns(ns: u64) -> String {
+    if ns >= 1_000_000_000 {
+        format!("{:.2} s", ns as f64 / 1e9)
+    } else if ns >= 1_000_000 {
+        format!("{:.2} ms", ns as f64 / 1e6)
+    } else if ns >= 1_000 {
+        format!("{:.1} µs", ns as f64 / 1e3)
+    } else {
+        format!("{ns} ns")
+    }
+}
+
+/// Human-readable op/s: "730 K", "15.7 M".
+pub fn fmt_ops(ops: f64) -> String {
+    if ops >= 1e9 {
+        format!("{:.2} G", ops / 1e9)
+    } else if ops >= 1e6 {
+        format!("{:.2} M", ops / 1e6)
+    } else if ops >= 1e3 {
+        format!("{:.0} K", ops / 1e3)
+    } else {
+        format!("{ops:.0}")
+    }
+}
+
+/// One row of a printed series.
+#[derive(Debug, Clone)]
+pub struct Row {
+    pub cells: Vec<String>,
+}
+
+/// A named series table printed in aligned columns.
+#[derive(Debug, Clone)]
+pub struct Table {
+    title: String,
+    header: Vec<String>,
+    rows: Vec<Row>,
+}
+
+impl Table {
+    pub fn new(title: impl Into<String>, header: &[&str]) -> Self {
+        Table {
+            title: title.into(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.header.len(), "row arity mismatch");
+        self.rows.push(Row { cells: cells.to_vec() });
+    }
+
+    pub fn rows(&self) -> &[Row] {
+        &self.rows
+    }
+
+    /// Render with aligned columns.
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for r in &self.rows {
+            for (i, c) in r.cells.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        out.push_str(&format!("\n## {}\n", self.title));
+        let fmt_line = |cells: &[String], widths: &[usize]| -> String {
+            cells
+                .iter()
+                .zip(widths)
+                .map(|(c, w)| format!("{c:>w$}", w = w))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        out.push_str(&fmt_line(&self.header, &widths));
+        out.push('\n');
+        out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * (widths.len() - 1)));
+        out.push('\n');
+        for r in &self.rows {
+            out.push_str(&fmt_line(&r.cells, &widths));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Print to stdout.
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fmt_helpers() {
+        assert_eq!(fmt_ns(450), "450 ns");
+        assert_eq!(fmt_ns(780_000), "780.0 µs");
+        assert_eq!(fmt_ns(11_000_000), "11.00 ms");
+        assert_eq!(fmt_ops(730_000.0), "730 K");
+        assert_eq!(fmt_ops(15_700_000.0), "15.70 M");
+    }
+
+    #[test]
+    fn table_renders() {
+        let mut t = Table::new("Fig X", &["x", "y"]);
+        t.row(&["1".into(), "2".into()]);
+        t.row(&["10".into(), "20".into()]);
+        let s = t.render();
+        assert!(s.contains("Fig X"));
+        assert!(s.contains("10  20"));
+        assert_eq!(t.rows().len(), 2);
+    }
+
+    #[test]
+    #[should_panic]
+    fn arity_checked() {
+        let mut t = Table::new("t", &["a", "b"]);
+        t.row(&["only-one".into()]);
+    }
+}

@@ -1,0 +1,40 @@
+//! Transport simulation (§5).
+//!
+//! A reliable, sequenced, TCP-like byte stream between two endpoints,
+//! with exactly the machinery the paper's network path interacts with:
+//! cumulative ACKs, out-of-order buffering, duplicate-ACK fast
+//! retransmit (Fig 11), and MSS segmentation.
+//!
+//! The traffic director uses these endpoints to implement the
+//! performance-enhancing proxy (§5.2): instead of letting client
+//! segments through to the host (which breaks the host's sequence space
+//! when the DPU consumes some of them — the Fig 11 pathology), the PEP
+//! *terminates* the client connection on the DPU and re-originates a
+//! second connection to the host.
+
+pub mod tcp;
+
+pub use tcp::{Segment, TcpEndpoint};
+
+/// Transport protocol selector in signatures/tuples.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Proto {
+    Tcp,
+    Udp,
+}
+
+/// A flow 5-tuple (§5.1: application signatures filter on it).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct FiveTuple {
+    pub client_ip: u32,
+    pub client_port: u16,
+    pub server_ip: u32,
+    pub server_port: u16,
+    pub proto: Proto,
+}
+
+impl FiveTuple {
+    pub fn new(client_ip: u32, client_port: u16, server_ip: u32, server_port: u16) -> Self {
+        FiveTuple { client_ip, client_port, server_ip, server_port, proto: Proto::Tcp }
+    }
+}

@@ -1,0 +1,331 @@
+//! Minimal sequenced reliable stream with duplicate-ACK fast retransmit.
+//!
+//! Models the TCP behaviours the paper's design interacts with (§5.2,
+//! Fig 11): byte sequence numbers, cumulative ACKs, out-of-order
+//! segment buffering, and the 3-dup-ACK fast-retransmit rule that makes
+//! naive partial offloading pathological — when the DPU consumes
+//! segments mid-stream, the host receiver sees a sequence gap, duplicate
+//! ACKs pile up, and the client retransmits everything the DPU already
+//! handled.
+
+use std::collections::BTreeMap;
+
+/// Maximum segment size (payload bytes per segment).
+pub const MSS: usize = 1460;
+
+/// A TCP-like segment. `seq`/`payload` carry data; `ack` is cumulative.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Segment {
+    pub seq: u64,
+    pub payload: Vec<u8>,
+    pub ack: u64,
+}
+
+impl Segment {
+    pub fn is_pure_ack(&self) -> bool {
+        self.payload.is_empty()
+    }
+
+    /// Exclusive end of this segment's sequence range.
+    pub fn seq_end(&self) -> u64 {
+        self.seq + self.payload.len() as u64
+    }
+}
+
+/// One side of a connection.
+#[derive(Debug)]
+pub struct TcpEndpoint {
+    /// Next sequence number to assign to new data.
+    snd_nxt: u64,
+    /// Oldest unacknowledged byte.
+    snd_una: u64,
+    /// Unacked outgoing segments, keyed by seq (retransmit queue).
+    unacked: BTreeMap<u64, Vec<u8>>,
+    /// Next expected incoming byte.
+    rcv_nxt: u64,
+    /// Out-of-order incoming segments.
+    ooo: BTreeMap<u64, Vec<u8>>,
+    /// In-order bytes ready for the application.
+    deliverable: Vec<u8>,
+    /// Duplicate-ACK counter (for fast retransmit).
+    dup_acks: u32,
+    /// Stats: segments retransmitted (the Fig 11 pathology metric).
+    pub retransmitted_segments: u64,
+    /// Stats: duplicate ACKs sent by our receiver side.
+    pub dup_acks_sent: u64,
+}
+
+impl Default for TcpEndpoint {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl TcpEndpoint {
+    pub fn new() -> Self {
+        TcpEndpoint {
+            snd_nxt: 0,
+            snd_una: 0,
+            unacked: BTreeMap::new(),
+            rcv_nxt: 0,
+            ooo: BTreeMap::new(),
+            deliverable: Vec::new(),
+            dup_acks: 0,
+            retransmitted_segments: 0,
+            dup_acks_sent: 0,
+        }
+    }
+
+    /// Queue application data; returns the segments to put on the wire.
+    pub fn send(&mut self, data: &[u8]) -> Vec<Segment> {
+        let mut out = Vec::new();
+        for chunk in data.chunks(MSS) {
+            let seg = Segment { seq: self.snd_nxt, payload: chunk.to_vec(), ack: self.rcv_nxt };
+            self.unacked.insert(self.snd_nxt, chunk.to_vec());
+            self.snd_nxt += chunk.len() as u64;
+            out.push(seg);
+        }
+        out
+    }
+
+    /// Process an incoming segment; returns segments to send back
+    /// (ACKs and/or fast retransmissions).
+    pub fn on_segment(&mut self, seg: &Segment) -> Vec<Segment> {
+        let mut out = Vec::new();
+
+        // --- sender side: process cumulative ACK ---
+        if seg.ack > self.snd_una {
+            self.snd_una = seg.ack;
+            self.dup_acks = 0;
+            // Drop fully acked segments from the retransmit queue.
+            // Cumulative ACKs cover a prefix of the seq-ordered map, so
+            // popping from the front needs no scan and no allocation
+            // (perf pass L3-5).
+            while let Some((&s, p)) = self.unacked.first_key_value() {
+                if s + p.len() as u64 <= seg.ack {
+                    self.unacked.pop_first();
+                } else {
+                    break;
+                }
+            }
+        } else if seg.ack == self.snd_una && seg.is_pure_ack() && !self.unacked.is_empty() {
+            // Duplicate ACK.
+            self.dup_acks += 1;
+            if self.dup_acks >= 3 {
+                // Fast retransmit: resend everything from snd_una
+                // (Fig 11: "the client will resend all the requests that
+                // have been offloaded to the DPU").
+                for (seq, payload) in self.unacked.range(self.snd_una..) {
+                    out.push(Segment {
+                        seq: *seq,
+                        payload: payload.clone(),
+                        ack: self.rcv_nxt,
+                    });
+                    self.retransmitted_segments += 1;
+                }
+                self.dup_acks = 0;
+            }
+        }
+
+        // --- receiver side: process payload ---
+        if !seg.payload.is_empty() {
+            if seg.seq == self.rcv_nxt {
+                self.deliverable.extend_from_slice(&seg.payload);
+                self.rcv_nxt = seg.seq_end();
+                // Pull any contiguous out-of-order segments.
+                while let Some(payload) = self.ooo.remove(&self.rcv_nxt) {
+                    self.rcv_nxt += payload.len() as u64;
+                    self.deliverable.extend_from_slice(&payload);
+                }
+                out.push(self.pure_ack());
+            } else if seg.seq > self.rcv_nxt {
+                // Gap: buffer and emit a duplicate ACK for the hole.
+                self.ooo.entry(seg.seq).or_insert_with(|| seg.payload.clone());
+                self.dup_acks_sent += 1;
+                out.push(self.pure_ack());
+            } else {
+                // Old/overlapping data: re-ACK.
+                out.push(self.pure_ack());
+            }
+        }
+        out
+    }
+
+    fn pure_ack(&self) -> Segment {
+        Segment { seq: self.snd_nxt, payload: Vec::new(), ack: self.rcv_nxt }
+    }
+
+    /// Drain bytes delivered in order to the application.
+    pub fn deliver(&mut self) -> Vec<u8> {
+        std::mem::take(&mut self.deliverable)
+    }
+
+    /// Retransmit everything outstanding (timeout path; used by tests to
+    /// guarantee progress after loss).
+    pub fn retransmit_all(&mut self) -> Vec<Segment> {
+        let mut out = Vec::new();
+        for (seq, payload) in self.unacked.range(self.snd_una..) {
+            out.push(Segment { seq: *seq, payload: payload.clone(), ack: self.rcv_nxt });
+            self.retransmitted_segments += 1;
+        }
+        out
+    }
+
+    /// Bytes sent but not yet acknowledged.
+    pub fn bytes_in_flight(&self) -> u64 {
+        self.snd_nxt - self.snd_una
+    }
+
+    /// Next expected receive sequence (visible for the director's
+    /// sequence bookkeeping).
+    pub fn rcv_nxt(&self) -> u64 {
+        self.rcv_nxt
+    }
+}
+
+/// Deliver `segs` from one endpoint to its peer, collecting replies;
+/// loops until both directions quiesce. Test/functional-plane helper.
+pub fn exchange(a: &mut TcpEndpoint, b: &mut TcpEndpoint, segs: Vec<Segment>) {
+    let mut a_to_b = segs;
+    let mut b_to_a: Vec<Segment> = Vec::new();
+    while !a_to_b.is_empty() || !b_to_a.is_empty() {
+        let mut next_b_to_a = Vec::new();
+        for s in a_to_b.drain(..) {
+            next_b_to_a.extend(b.on_segment(&s));
+        }
+        let mut next_a_to_b = Vec::new();
+        for s in b_to_a.drain(..) {
+            next_a_to_b.extend(a.on_segment(&s));
+        }
+        a_to_b = next_a_to_b;
+        b_to_a = next_b_to_a;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn in_order_delivery() {
+        let mut a = TcpEndpoint::new();
+        let mut b = TcpEndpoint::new();
+        let data: Vec<u8> = (0..5000).map(|i| (i % 256) as u8).collect();
+        let segs = a.send(&data);
+        assert_eq!(segs.len(), data.len().div_ceil(MSS));
+        exchange(&mut a, &mut b, segs);
+        assert_eq!(b.deliver(), data);
+        assert_eq!(a.bytes_in_flight(), 0);
+        assert_eq!(a.retransmitted_segments, 0);
+    }
+
+    #[test]
+    fn out_of_order_reassembly() {
+        let mut a = TcpEndpoint::new();
+        let mut b = TcpEndpoint::new();
+        let data: Vec<u8> = (0..4 * MSS).map(|i| (i % 251) as u8).collect();
+        let mut segs = a.send(&data);
+        segs.reverse(); // worst-case reordering
+        for s in &segs {
+            b.on_segment(s);
+        }
+        assert_eq!(b.deliver(), data);
+    }
+
+    #[test]
+    fn lost_segment_recovered_by_fast_retransmit() {
+        let mut a = TcpEndpoint::new();
+        let mut b = TcpEndpoint::new();
+        let data: Vec<u8> = (0..6 * MSS).map(|i| (i % 249) as u8).collect();
+        let segs = a.send(&data);
+        // Drop segment 1; deliver the rest — receiver dup-ACKs.
+        let mut replies = Vec::new();
+        for (i, s) in segs.iter().enumerate() {
+            if i == 1 {
+                continue;
+            }
+            replies.extend(b.on_segment(s));
+        }
+        assert!(b.dup_acks_sent >= 3);
+        // Feed dup-ACKs back to the sender: fast retransmit fires.
+        let mut retrans = Vec::new();
+        for r in &replies {
+            retrans.extend(a.on_segment(r));
+        }
+        assert!(a.retransmitted_segments > 0);
+        // Deliver retransmissions; stream completes.
+        exchange(&mut a, &mut b, retrans);
+        assert_eq!(b.deliver(), data);
+    }
+
+    /// The Fig 11 pathology: a middlebox consumes ("offloads") segments
+    /// mid-stream without splitting the connection. The host receiver
+    /// sees a hole and forces the client to retransmit the offloaded
+    /// bytes.
+    #[test]
+    fn partial_offload_without_pep_causes_retransmission_storm() {
+        let mut client = TcpEndpoint::new();
+        let mut host = TcpEndpoint::new();
+        let data: Vec<u8> = (0..8 * MSS).map(|i| (i % 241) as u8).collect();
+        let segs = client.send(&data);
+        // DPU "offloads" (consumes) segments 1..=4 — they never reach
+        // the host.
+        let mut replies = Vec::new();
+        for (i, s) in segs.iter().enumerate() {
+            if (1..=4).contains(&i) {
+                continue; // consumed by the DPU
+            }
+            replies.extend(host.on_segment(s));
+        }
+        // Host TCP dup-ACKed the gap.
+        assert!(host.dup_acks_sent >= 3);
+        let mut retrans = Vec::new();
+        for r in &replies {
+            retrans.extend(client.on_segment(r));
+        }
+        // Client retransmits ALL offloaded segments — wasted work.
+        assert!(client.retransmitted_segments >= 4, "{}", client.retransmitted_segments);
+    }
+
+    /// With PEP splitting (§5.2) the DPU terminates the client
+    /// connection, so offloaded requests are acked on connection 1 and
+    /// only host-bound requests travel on connection 2 — no
+    /// retransmissions anywhere.
+    #[test]
+    fn pep_split_avoids_retransmission() {
+        let mut client = TcpEndpoint::new();
+        let mut dpu_client_side = TcpEndpoint::new(); // conn 1 terminus
+        let mut dpu_host_side = TcpEndpoint::new(); // conn 2 originator
+        let mut host = TcpEndpoint::new();
+
+        let data: Vec<u8> = (0..8 * MSS).map(|i| (i % 239) as u8).collect();
+        let segs = client.send(&data);
+        exchange(&mut client, &mut dpu_client_side, segs);
+        let stream = dpu_client_side.deliver();
+        assert_eq!(stream, data);
+
+        // DPU offloads half, forwards half on the second connection.
+        let host_bound = &stream[stream.len() / 2..];
+        let fwd = dpu_host_side.send(host_bound);
+        exchange(&mut dpu_host_side, &mut host, fwd);
+        assert_eq!(host.deliver(), host_bound);
+
+        assert_eq!(client.retransmitted_segments, 0);
+        assert_eq!(dpu_host_side.retransmitted_segments, 0);
+        assert_eq!(host.dup_acks_sent, 0);
+    }
+
+    #[test]
+    fn timeout_retransmit_covers_tail_loss() {
+        let mut a = TcpEndpoint::new();
+        let mut b = TcpEndpoint::new();
+        let data = vec![3u8; 2 * MSS];
+        let segs = a.send(&data);
+        // Lose the LAST segment (no dup-ACKs possible).
+        b.on_segment(&segs[0]);
+        assert!(a.bytes_in_flight() > 0);
+        let retrans = a.retransmit_all();
+        exchange(&mut a, &mut b, retrans);
+        assert_eq!(b.deliver(), data);
+    }
+}

@@ -1,0 +1,173 @@
+//! The DDS offload API (§6.1, Table 1).
+//!
+//! Users customize offloading by implementing [`OffloadLogic`], the
+//! four functions of Table 1:
+//!
+//! | Function            | Return                 | Paper name  |
+//! |---------------------|------------------------|-------------|
+//! | offload predicate   | (HostReqs, DPUReqs)    | `OffPred`   |
+//! | offload function    | `Option<ReadOp>`       | `OffFunc`   |
+//! | cache-on-write      | items to insert        | `Cache`     |
+//! | invalidate-on-read  | keys to remove         | `Invalidate`|
+//!
+//! `OffPred` splits a network message (which may batch many requests)
+//! into a host list and a DPU list. `OffFunc` translates an offloadable
+//! request into a concrete file read. `Cache`/`Invalidate` maintain the
+//! DPU cache table as the host writes/reads files. Like the paper's
+//! offload functions, implementations are expected to be small,
+//! allocation-free and non-blocking — they run on the DPU packet path.
+
+use crate::cache::{CacheItem, CuckooCache};
+use crate::dpufs::FileId;
+use crate::proto::{AppRequest, NetMsg};
+
+/// A file read operation produced by `OffFunc`:
+/// `ReadOp {FileId, Offset, Size}` (§6.2).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ReadOp {
+    pub file_id: FileId,
+    pub offset: u64,
+    pub size: u32,
+}
+
+/// A host file write, as seen by `Cache` (cache-on-write).
+#[derive(Debug, Clone)]
+pub struct WriteOp<'a> {
+    pub file_id: FileId,
+    pub offset: u64,
+    pub data: &'a [u8],
+}
+
+/// One request routed by the offload predicate, tagged with its position
+/// in the originating message so responses can be matched up.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct RoutedReq {
+    pub msg_id: u64,
+    pub idx: u16,
+    pub req: AppRequest,
+}
+
+/// User-supplied offloading logic (Table 1).
+pub trait OffloadLogic: Send + Sync {
+    /// `OffPred(Msg, CacheTable)` → `(HostReqs, DPUReqs)`. Either list
+    /// may be empty. Batched messages are split request by request.
+    fn off_pred(
+        &self,
+        msg: &NetMsg,
+        cache: &CuckooCache,
+    ) -> (Vec<RoutedReq>, Vec<RoutedReq>);
+
+    /// `OffFunc(Req, CacheTable)` → `ReadOp`. `None` means "cannot
+    /// translate after all — bounce to the host".
+    fn off_func(&self, req: &AppRequest, cache: &CuckooCache) -> Option<ReadOp>;
+
+    /// `Cache(WriteOp)` → keys + items to insert on a host file write.
+    fn cache(&self, _w: &WriteOp) -> Vec<(u64, CacheItem)> {
+        Vec::new()
+    }
+
+    /// `Invalidate(ReadOp)` → keys to remove on a host file read.
+    fn invalidate(&self, _r: &ReadOp) -> Vec<u64> {
+        Vec::new()
+    }
+}
+
+/// Offloading disabled: every request goes to the host (the baseline
+/// configurations of §8).
+pub struct NoOffload;
+
+impl OffloadLogic for NoOffload {
+    fn off_pred(&self, msg: &NetMsg, _cache: &CuckooCache) -> (Vec<RoutedReq>, Vec<RoutedReq>) {
+        let host = msg
+            .requests
+            .iter()
+            .enumerate()
+            .map(|(i, r)| RoutedReq { msg_id: msg.msg_id, idx: i as u16, req: r.clone() })
+            .collect();
+        (host, Vec::new())
+    }
+
+    fn off_func(&self, _req: &AppRequest, _cache: &CuckooCache) -> Option<ReadOp> {
+        None
+    }
+}
+
+/// The benchmark application's logic (§8.2): the request itself encodes
+/// file id, offset and size, so reads offload unconditionally and
+/// writes go to the host — "a 30-line OffloadPred and a 20-line
+/// OffloadFunc", with `Cache`/`Invalidate` not needed.
+pub struct RawFileOffload;
+
+impl OffloadLogic for RawFileOffload {
+    fn off_pred(&self, msg: &NetMsg, _cache: &CuckooCache) -> (Vec<RoutedReq>, Vec<RoutedReq>) {
+        let mut host = Vec::new();
+        let mut dpu = Vec::new();
+        for (i, r) in msg.requests.iter().enumerate() {
+            let routed = RoutedReq { msg_id: msg.msg_id, idx: i as u16, req: r.clone() };
+            match r {
+                AppRequest::Read { .. } => dpu.push(routed),
+                _ => host.push(routed),
+            }
+        }
+        (host, dpu)
+    }
+
+    fn off_func(&self, req: &AppRequest, _cache: &CuckooCache) -> Option<ReadOp> {
+        match req {
+            AppRequest::Read { file_id, offset, size } => {
+                Some(ReadOp { file_id: FileId(*file_id), offset: *offset, size: *size })
+            }
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn msg() -> NetMsg {
+        NetMsg {
+            msg_id: 1,
+            requests: vec![
+                AppRequest::Read { file_id: 1, offset: 0, size: 512 },
+                AppRequest::Write { file_id: 1, offset: 0, data: vec![0; 8] },
+                AppRequest::Read { file_id: 2, offset: 1024, size: 256 },
+            ],
+        }
+    }
+
+    #[test]
+    fn no_offload_sends_everything_to_host() {
+        let cache = CuckooCache::new(16);
+        let (host, dpu) = NoOffload.off_pred(&msg(), &cache);
+        assert_eq!(host.len(), 3);
+        assert!(dpu.is_empty());
+        assert_eq!(host[2].idx, 2);
+    }
+
+    #[test]
+    fn raw_offload_splits_reads_from_writes() {
+        let cache = CuckooCache::new(16);
+        let (host, dpu) = RawFileOffload.off_pred(&msg(), &cache);
+        assert_eq!(host.len(), 1);
+        assert_eq!(dpu.len(), 2);
+        assert!(matches!(host[0].req, AppRequest::Write { .. }));
+        // Positions inside the message are preserved for response
+        // matching.
+        assert_eq!(dpu[0].idx, 0);
+        assert_eq!(dpu[1].idx, 2);
+    }
+
+    #[test]
+    fn raw_off_func_translates_directly() {
+        let cache = CuckooCache::new(16);
+        let op = RawFileOffload
+            .off_func(&AppRequest::Read { file_id: 3, offset: 64, size: 128 }, &cache)
+            .unwrap();
+        assert_eq!(op, ReadOp { file_id: FileId(3), offset: 64, size: 128 });
+        assert!(RawFileOffload
+            .off_func(&AppRequest::KvUpsert { key: 1, value: vec![] }, &cache)
+            .is_none());
+    }
+}

@@ -1,0 +1,450 @@
+//! The offload execution engine (§6.2, Figs 12 & 13).
+//!
+//! Receives offloadable requests from the traffic director, translates
+//! them to file reads with the user's `OffFunc`, executes them against
+//! the DPU file system/SSD asynchronously, and emits client responses
+//! **in request order** via a ring of contexts:
+//!
+//! * a context bookkeeps `{client (msg_id, idx), ReadOp, completion
+//!   status, read buffer}` (Fig 13 lines 8-12);
+//! * if the context ring is full the request — and the rest of the
+//!   batch — bounces to the host (lines 5-7);
+//! * completions are processed from the head and stop at the first
+//!   pending context, enforcing ordered responses (lines 18-27).
+//!
+//! Zero-copy (Fig 12): read buffers come from the pre-allocated
+//! [`MemPool`] and become the response payload without intermediate
+//! copies; `copy_mode` adds the straw-man's extra copy for the §8.5
+//! ablation (Fig 23).
+
+use std::sync::{Arc, RwLock};
+
+use super::api::{OffloadLogic, RoutedReq};
+use super::mempool::{MemPool, PooledBuf};
+use crate::cache::CuckooCache;
+use crate::dpufs::DpuFs;
+use crate::proto::NetResp;
+use crate::ssd::{AsyncSsd, SsdOp};
+
+/// Completion status of a context (§6.2).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ContextStatus {
+    Pending,
+    Complete,
+    Failed,
+}
+
+struct Context {
+    msg_id: u64,
+    idx: u16,
+    /// Multi-extent assembly buffer (pool-backed). Single-extent reads
+    /// — the overwhelmingly common case — skip it: the completion
+    /// buffer the "device DMA" wrote is moved straight into `payload`
+    /// (perf pass L3-4: the staging copy was pure overhead; the
+    /// completion buffer IS the pre-allocated read buffer of Fig 12).
+    buf: Option<PooledBuf>,
+    /// Zero-copy payload for the single-extent path.
+    payload: Vec<u8>,
+    status: ContextStatus,
+    extents_remaining: usize,
+    /// Start position of each extent's bytes within `buf`.
+    extent_offsets: Vec<usize>,
+}
+
+/// Engine configuration.
+#[derive(Debug, Clone)]
+pub struct OffloadEngineConfig {
+    /// Context-ring capacity (outstanding offloaded reads).
+    pub contexts: usize,
+    /// Buffers in the mem pool (Fig 12 ①).
+    pub pool_bufs: usize,
+    /// Pool buffer size — also the largest offloadable read.
+    pub pool_buf_size: usize,
+    /// Straw-man mode with the extra data copy (Fig 23 ablation).
+    pub copy_mode: bool,
+}
+
+impl Default for OffloadEngineConfig {
+    fn default() -> Self {
+        OffloadEngineConfig {
+            contexts: 256,
+            pool_bufs: 256,
+            pool_buf_size: 64 << 10,
+            copy_mode: false,
+        }
+    }
+}
+
+/// The offload engine. Single-threaded by design — it colocates with
+/// the traffic director on one DPU core (§7 "Resource utilization").
+pub struct OffloadEngine {
+    logic: Arc<dyn OffloadLogic>,
+    cache: Arc<CuckooCache>,
+    dpufs: Arc<RwLock<DpuFs>>,
+    aio: AsyncSsd,
+    pool: MemPool,
+    pool_buf_size: usize,
+    ring: Vec<Option<Context>>,
+    head: u64,
+    tail: u64,
+    copy_mode: bool,
+    /// Stats.
+    pub offloaded: u64,
+    pub bounced_full: u64,
+    pub bounced_untranslatable: u64,
+}
+
+impl OffloadEngine {
+    pub fn new(
+        logic: Arc<dyn OffloadLogic>,
+        cache: Arc<CuckooCache>,
+        dpufs: Arc<RwLock<DpuFs>>,
+        aio: AsyncSsd,
+        cfg: OffloadEngineConfig,
+    ) -> Self {
+        let mut ring = Vec::with_capacity(cfg.contexts);
+        ring.resize_with(cfg.contexts, || None);
+        OffloadEngine {
+            logic,
+            cache,
+            dpufs,
+            aio,
+            pool: MemPool::new(cfg.pool_bufs, cfg.pool_buf_size),
+            pool_buf_size: cfg.pool_buf_size,
+            ring,
+            head: 0,
+            tail: 0,
+            copy_mode: cfg.copy_mode,
+            offloaded: 0,
+            bounced_full: 0,
+            bounced_untranslatable: 0,
+        }
+    }
+
+    fn cap(&self) -> u64 {
+        self.ring.len() as u64
+    }
+
+    /// Fig 13 main loop body for one batch of requests from the traffic
+    /// director. Returns `(responses, host_bounces)` — responses emitted
+    /// by completions processed this round, plus any requests that must
+    /// go to the host instead.
+    pub fn execute(
+        &mut self,
+        reqs: Vec<RoutedReq>,
+        responses: &mut Vec<NetResp>,
+    ) -> Vec<RoutedReq> {
+        let mut bounced = Vec::new();
+        let mut reqs = reqs.into_iter();
+        while let Some(routed) = reqs.next() {
+            // Fig 13 line 4: make room by processing completions first.
+            self.complete_pending(responses);
+            // Lines 5-7: ring full → current and remaining requests go
+            // to the host.
+            if self.tail - self.head >= self.cap() {
+                self.bounced_full += 1;
+                bounced.push(routed);
+                bounced.extend(reqs);
+                break;
+            }
+            // Line 8: OffFunc.
+            let Some(op) = self.logic.off_func(&routed.req, &self.cache) else {
+                self.bounced_untranslatable += 1;
+                bounced.push(routed);
+                continue;
+            };
+            // Map through the file system; per-extent SSD reads with the
+            // context index as the completion tag.
+            let extents = {
+                let fs = self.dpufs.read().unwrap();
+                match fs.map_extents(op.file_id, op.offset, op.size as u64) {
+                    Ok(e) => e,
+                    Err(_) => {
+                        self.bounced_untranslatable += 1;
+                        bounced.push(routed);
+                        continue;
+                    }
+                }
+            };
+            // Line 9: pre-allocated read buffer — only needed for
+            // multi-extent assembly; single-extent reads use the
+            // completion buffer directly (see Context docs). Oversize
+            // requests bounce (pool class is the max offloadable read).
+            let buf = if extents.len() > 1 {
+                match self.pool.allocate(op.size as usize) {
+                    Some(b) => Some(b),
+                    None => {
+                        self.bounced_untranslatable += 1;
+                        bounced.push(routed);
+                        continue;
+                    }
+                }
+            } else {
+                if op.size as usize > self.pool_buf_size() {
+                    self.bounced_untranslatable += 1;
+                    bounced.push(routed);
+                    continue;
+                }
+                None
+            };
+            // Lines 10-13: bookkeep in the context at tail, mark
+            // pending, advance tail.
+            let slot = (self.tail % self.cap()) as usize;
+            let ctx_idx = self.tail;
+            let mut extent_offsets = Vec::with_capacity(extents.len());
+            let mut acc = 0usize;
+            for e in &extents {
+                extent_offsets.push(acc);
+                acc += e.len as usize;
+            }
+            self.ring[slot] = Some(Context {
+                msg_id: routed.msg_id,
+                idx: routed.idx,
+                buf,
+                payload: Vec::new(),
+                status: ContextStatus::Pending,
+                extents_remaining: extents.len(),
+                extent_offsets,
+            });
+            self.tail += 1;
+            self.offloaded += 1;
+            // Line 14: submit to the file service (extent reads).
+            for (ei, e) in extents.iter().enumerate() {
+                let tag = ctx_idx << 16 | ei as u64;
+                self.aio.submit(tag, SsdOp::Read { addr: e.addr, len: e.len as usize });
+            }
+        }
+        // Line 16: keep draining completions.
+        self.complete_pending(responses);
+        bounced
+    }
+
+    /// Fig 13 `CompletePending()`: absorb SSD completions, then emit
+    /// responses from the head of the context ring, stopping at the
+    /// first still-pending context (ordering guarantee).
+    pub fn complete_pending(&mut self, responses: &mut Vec<NetResp>) {
+        // Absorb SSD completions into contexts.
+        for c in self.aio.poll(usize::MAX.min(1 << 14)) {
+            let ctx_idx = c.tag >> 16;
+            let extent = (c.tag & 0xffff) as usize;
+            if ctx_idx < self.head || ctx_idx >= self.tail {
+                continue; // stale
+            }
+            let slot = (ctx_idx % self.cap()) as usize;
+            let Some(ctx) = self.ring[slot].as_mut() else { continue };
+            if c.result.is_err() {
+                ctx.status = ContextStatus::Failed;
+                ctx.extents_remaining = ctx.extents_remaining.saturating_sub(1);
+                continue;
+            }
+            // Zero-copy: the SSD "DMA" lands in the pre-allocated read
+            // buffer (Fig 12 ②) — moved for single-extent reads,
+            // placed at the extent's recorded position otherwise.
+            if let Some(buf) = ctx.buf.as_mut() {
+                let start = ctx.extent_offsets.get(extent).copied().unwrap_or(0);
+                let end = (start + c.data.len()).min(buf.len());
+                if start < end {
+                    buf.as_mut_slice()[start..end]
+                        .copy_from_slice(&c.data[..end - start]);
+                }
+            } else {
+                ctx.payload = c.data;
+            }
+            if ctx.status != ContextStatus::Failed {
+                ctx.extents_remaining -= 1;
+                if ctx.extents_remaining == 0 {
+                    ctx.status = ContextStatus::Complete;
+                }
+            }
+        }
+        // Emit in order from the head (Fig 13 lines 19-27).
+        while self.head < self.tail {
+            let slot = (self.head % self.cap()) as usize;
+            let done = match self.ring[slot].as_ref() {
+                Some(ctx) => ctx.status != ContextStatus::Pending,
+                None => false,
+            };
+            if !done {
+                break;
+            }
+            let ctx = self.ring[slot].take().unwrap();
+            let payload = match ctx.status {
+                ContextStatus::Complete => {
+                    let base = match ctx.buf {
+                        // Multi-extent: materialize from the assembly
+                        // buffer.
+                        Some(buf) => buf.take_copy(),
+                        // Single-extent zero-copy: the packet payload IS
+                        // the read buffer (Fig 12 ③) — moved, never
+                        // duplicated.
+                        None => ctx.payload,
+                    };
+                    if self.copy_mode {
+                        // Straw-man ablation: the §6.2 extra copy.
+                        base.clone()
+                    } else {
+                        base
+                    }
+                }
+                _ => Vec::new(),
+            };
+            responses.push(NetResp {
+                msg_id: ctx.msg_id,
+                idx: ctx.idx,
+                status: if ctx.status == ContextStatus::Complete {
+                    NetResp::OK
+                } else {
+                    NetResp::ERR
+                },
+                payload,
+            });
+            self.head += 1;
+        }
+    }
+
+    fn pool_buf_size(&self) -> usize {
+        self.pool_buf_size
+    }
+
+    /// Outstanding offloaded reads.
+    pub fn outstanding(&self) -> u64 {
+        self.tail - self.head
+    }
+
+    /// The engine's cache table handle (shared with director/service).
+    pub fn cache(&self) -> &Arc<CuckooCache> {
+        &self.cache
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dpufs::{DpuFs, FsConfig};
+    use crate::offload::api::RawFileOffload;
+    use crate::proto::AppRequest;
+    use crate::ssd::Ssd;
+
+    fn setup(contexts: usize) -> (OffloadEngine, u32) {
+        let ssd = Arc::new(Ssd::new(64 << 20, 512));
+        let mut fs = DpuFs::format(ssd.clone(), FsConfig::default()).unwrap();
+        let d = fs.create_directory("d").unwrap();
+        let f = fs.create_file(d, "f").unwrap();
+        let data: Vec<u8> = (0..1 << 20).map(|i| (i % 253) as u8).collect();
+        fs.write(f, 0, &data).unwrap();
+        let dpufs = Arc::new(RwLock::new(fs));
+        let aio = AsyncSsd::new(ssd, 2);
+        let engine = OffloadEngine::new(
+            Arc::new(RawFileOffload),
+            Arc::new(CuckooCache::new(1024)),
+            dpufs,
+            aio,
+            OffloadEngineConfig { contexts, ..Default::default() },
+        );
+        (engine, f.0)
+    }
+
+    fn wait_responses(
+        engine: &mut OffloadEngine,
+        responses: &mut Vec<NetResp>,
+        n: usize,
+    ) {
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(5);
+        while responses.len() < n {
+            engine.complete_pending(responses);
+            assert!(std::time::Instant::now() < deadline, "timed out");
+            std::thread::yield_now();
+        }
+    }
+
+    #[test]
+    fn offloaded_read_returns_correct_bytes() {
+        let (mut engine, f) = setup(64);
+        let mut responses = Vec::new();
+        let reqs = vec![RoutedReq {
+            msg_id: 1,
+            idx: 0,
+            req: AppRequest::Read { file_id: f, offset: 1000, size: 512 },
+        }];
+        let bounced = engine.execute(reqs, &mut responses);
+        assert!(bounced.is_empty());
+        wait_responses(&mut engine, &mut responses, 1);
+        assert_eq!(responses[0].status, NetResp::OK);
+        let expect: Vec<u8> = (1000..1512u64).map(|i| (i % 253) as u8).collect();
+        assert_eq!(responses[0].payload, expect);
+    }
+
+    #[test]
+    fn responses_preserve_request_order() {
+        let (mut engine, f) = setup(128);
+        let mut responses = Vec::new();
+        let reqs: Vec<RoutedReq> = (0..64u16)
+            .map(|i| RoutedReq {
+                msg_id: 9,
+                idx: i,
+                req: AppRequest::Read {
+                    file_id: f,
+                    offset: (i as u64) * 777,
+                    size: 256,
+                },
+            })
+            .collect();
+        let bounced = engine.execute(reqs, &mut responses);
+        assert!(bounced.is_empty());
+        wait_responses(&mut engine, &mut responses, 64);
+        // Ordered emission despite out-of-order SSD completions.
+        let idxs: Vec<u16> = responses.iter().map(|r| r.idx).collect();
+        assert_eq!(idxs, (0..64).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn full_ring_bounces_remainder_to_host() {
+        let (mut engine, f) = setup(4);
+        let mut responses = Vec::new();
+        let reqs: Vec<RoutedReq> = (0..16u16)
+            .map(|i| RoutedReq {
+                msg_id: 1,
+                idx: i,
+                req: AppRequest::Read { file_id: f, offset: 0, size: 128 },
+            })
+            .collect();
+        let bounced = engine.execute(reqs, &mut responses);
+        // With a 4-slot ring and slow completion draining, at least one
+        // request bounces once the ring is full; order preserved in the
+        // bounce list.
+        wait_responses(&mut engine, &mut responses, 16 - bounced.len());
+        if !bounced.is_empty() {
+            assert!(engine.bounced_full > 0);
+            for w in bounced.windows(2) {
+                assert!(w[0].idx < w[1].idx);
+            }
+        }
+    }
+
+    #[test]
+    fn untranslatable_bounces() {
+        let (mut engine, _) = setup(8);
+        let mut responses = Vec::new();
+        let reqs = vec![RoutedReq {
+            msg_id: 1,
+            idx: 0,
+            req: AppRequest::KvGet { key: 1 }, // RawFileOffload can't map it
+        }];
+        let bounced = engine.execute(reqs, &mut responses);
+        assert_eq!(bounced.len(), 1);
+        assert_eq!(engine.bounced_untranslatable, 1);
+    }
+
+    #[test]
+    fn out_of_range_read_bounces_not_crashes() {
+        let (mut engine, f) = setup(8);
+        let mut responses = Vec::new();
+        let reqs = vec![RoutedReq {
+            msg_id: 1,
+            idx: 0,
+            req: AppRequest::Read { file_id: f, offset: 1 << 40, size: 128 },
+        }];
+        let bounced = engine.execute(reqs, &mut responses);
+        assert_eq!(bounced.len(), 1);
+    }
+}

@@ -1,0 +1,10 @@
+//! DPU offloading (§6): the user-facing offload API and the execution
+//! engine that runs offloaded reads on the DPU with zero copies.
+
+pub mod api;
+pub mod engine;
+pub mod mempool;
+
+pub use api::{NoOffload, OffloadLogic, RawFileOffload, ReadOp, RoutedReq, WriteOp};
+pub use engine::{OffloadEngine, OffloadEngineConfig};
+pub use mempool::MemPool;

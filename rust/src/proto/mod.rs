@@ -1,0 +1,443 @@
+//! Wire encodings.
+//!
+//! * [`FileRequest`]/[`FileResponse`] — the host↔DPU ring records of
+//!   Fig 9: a request header with the write payload *inlined* (so one
+//!   DMA-read moves the whole request), and a response header with the
+//!   read payload inlined.
+//! * [`NetMsg`]/[`NetResp`] — the client↔server application protocol of
+//!   the evaluation app (§8.1): length-prefixed frames, each carrying a
+//!   batch of requests (batching is how the client controls load).
+//!
+//! Everything is hand-rolled little-endian — the hot path never touches
+//! a serde-style framework.
+
+pub mod wire;
+
+use wire::{Reader, Writer};
+
+/// File operation kind.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FileOpKind {
+    Read = 0,
+    Write = 1,
+}
+
+/// Request record on the request ring (Fig 9 top).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FileRequest {
+    pub req_id: u64,
+    pub file_id: u32,
+    pub kind: FileOpKind,
+    pub offset: u64,
+    /// Read size (reads) — writes carry `data.len()` implicitly.
+    pub size: u32,
+    /// Inlined write payload (empty for reads).
+    pub data: Vec<u8>,
+}
+
+impl FileRequest {
+    pub fn read(req_id: u64, file_id: u32, offset: u64, size: u32) -> Self {
+        FileRequest { req_id, file_id, kind: FileOpKind::Read, offset, size, data: Vec::new() }
+    }
+
+    pub fn write(req_id: u64, file_id: u32, offset: u64, data: Vec<u8>) -> Self {
+        FileRequest {
+            req_id,
+            file_id,
+            kind: FileOpKind::Write,
+            offset,
+            size: data.len() as u32,
+            data,
+        }
+    }
+
+    pub fn encode(&self) -> Vec<u8> {
+        let mut w = Writer::with_capacity(29 + self.data.len());
+        w.u64(self.req_id);
+        w.u32(self.file_id);
+        w.u8(self.kind as u8);
+        w.u64(self.offset);
+        w.u32(self.size);
+        w.u32(self.data.len() as u32);
+        w.bytes(&self.data);
+        w.into_vec()
+    }
+
+    pub fn decode(buf: &[u8]) -> Option<Self> {
+        let mut r = Reader::new(buf);
+        let req_id = r.u64()?;
+        let file_id = r.u32()?;
+        let kind = match r.u8()? {
+            0 => FileOpKind::Read,
+            1 => FileOpKind::Write,
+            _ => return None,
+        };
+        let offset = r.u64()?;
+        let size = r.u32()?;
+        let dlen = r.u32()? as usize;
+        let data = r.take(dlen)?.to_vec();
+        Some(FileRequest { req_id, file_id, kind, offset, size, data })
+    }
+
+    /// Size of the expected response record — what the DPU file service
+    /// uses to pre-allocate response space before submitting the I/O
+    /// (§4.3: "for read requests we use the requested size as the read
+    /// data size").
+    pub fn expected_response_len(&self) -> usize {
+        match self.kind {
+            FileOpKind::Read => FileResponse::HEADER_LEN + self.size as usize,
+            FileOpKind::Write => FileResponse::HEADER_LEN,
+        }
+    }
+}
+
+/// Completion status codes on the response ring.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Status {
+    /// §4.3: pre-allocated responses start as *pending*.
+    Pending = 0,
+    Ok = 1,
+    Error = 2,
+}
+
+/// Response record on the response ring (Fig 9 bottom).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FileResponse {
+    pub req_id: u64,
+    pub status: Status,
+    /// Inlined read payload (empty for writes).
+    pub data: Vec<u8>,
+}
+
+impl FileResponse {
+    pub const HEADER_LEN: usize = 8 + 1 + 4;
+
+    pub fn encode(&self) -> Vec<u8> {
+        let mut w = Writer::with_capacity(Self::HEADER_LEN + self.data.len());
+        w.u64(self.req_id);
+        w.u8(self.status as u8);
+        w.u32(self.data.len() as u32);
+        w.bytes(&self.data);
+        w.into_vec()
+    }
+
+    pub fn decode(buf: &[u8]) -> Option<Self> {
+        let mut r = Reader::new(buf);
+        let req_id = r.u64()?;
+        let status = match r.u8()? {
+            0 => Status::Pending,
+            1 => Status::Ok,
+            2 => Status::Error,
+            _ => return None,
+        };
+        let dlen = r.u32()? as usize;
+        let data = r.take(dlen)?.to_vec();
+        Some(FileResponse { req_id, status, data })
+    }
+}
+
+/// One application-level request inside a network message.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum AppRequest {
+    /// Raw remote file read (the §8.1 benchmark app).
+    Read { file_id: u32, offset: u64, size: u32 },
+    /// Raw remote file write.
+    Write { file_id: u32, offset: u64, data: Vec<u8> },
+    /// Hyperscale-style GetPage@LSN (§9.1).
+    GetPage { page_id: u64, lsn: u64 },
+    /// FASTER-style point read (§9.2).
+    KvGet { key: u64 },
+    /// FASTER-style upsert / read-modify-write (host-only).
+    KvUpsert { key: u64, value: Vec<u8> },
+}
+
+impl AppRequest {
+    /// True when this request kind is even a candidate for DPU
+    /// offloading (writes/updates never are, §3).
+    pub fn is_read(&self) -> bool {
+        matches!(self, AppRequest::Read { .. } | AppRequest::GetPage { .. } | AppRequest::KvGet { .. })
+    }
+
+    fn encode_into(&self, w: &mut Writer) {
+        match self {
+            AppRequest::Read { file_id, offset, size } => {
+                w.u8(0);
+                w.u32(*file_id);
+                w.u64(*offset);
+                w.u32(*size);
+            }
+            AppRequest::Write { file_id, offset, data } => {
+                w.u8(1);
+                w.u32(*file_id);
+                w.u64(*offset);
+                w.u32(data.len() as u32);
+                w.bytes(data);
+            }
+            AppRequest::GetPage { page_id, lsn } => {
+                w.u8(2);
+                w.u64(*page_id);
+                w.u64(*lsn);
+            }
+            AppRequest::KvGet { key } => {
+                w.u8(3);
+                w.u64(*key);
+            }
+            AppRequest::KvUpsert { key, value } => {
+                w.u8(4);
+                w.u64(*key);
+                w.u32(value.len() as u32);
+                w.bytes(value);
+            }
+        }
+    }
+
+    fn decode_from(r: &mut Reader) -> Option<Self> {
+        Some(match r.u8()? {
+            0 => AppRequest::Read { file_id: r.u32()?, offset: r.u64()?, size: r.u32()? },
+            1 => {
+                let file_id = r.u32()?;
+                let offset = r.u64()?;
+                let n = r.u32()? as usize;
+                AppRequest::Write { file_id, offset, data: r.take(n)?.to_vec() }
+            }
+            2 => AppRequest::GetPage { page_id: r.u64()?, lsn: r.u64()? },
+            3 => AppRequest::KvGet { key: r.u64()? },
+            4 => {
+                let key = r.u64()?;
+                let n = r.u32()? as usize;
+                AppRequest::KvUpsert { key, value: r.take(n)?.to_vec() }
+            }
+            _ => return None,
+        })
+    }
+}
+
+/// A client→server message: a batch of requests (§8.1: "the number of
+/// requests batched in a message").
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct NetMsg {
+    pub msg_id: u64,
+    pub requests: Vec<AppRequest>,
+}
+
+impl NetMsg {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut w = Writer::with_capacity(16);
+        w.u64(self.msg_id);
+        w.u16(self.requests.len() as u16);
+        for req in &self.requests {
+            req.encode_into(&mut w);
+        }
+        w.into_vec()
+    }
+
+    pub fn decode(buf: &[u8]) -> Option<Self> {
+        let mut r = Reader::new(buf);
+        let msg_id = r.u64()?;
+        let n = r.u16()? as usize;
+        let mut requests = Vec::with_capacity(n);
+        for _ in 0..n {
+            requests.push(AppRequest::decode_from(&mut r)?);
+        }
+        Some(NetMsg { msg_id, requests })
+    }
+}
+
+/// A server→client per-request response.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct NetResp {
+    pub msg_id: u64,
+    /// Index of the request within its message.
+    pub idx: u16,
+    pub status: u8,
+    pub payload: Vec<u8>,
+}
+
+impl NetResp {
+    pub const OK: u8 = 0;
+    pub const ERR: u8 = 1;
+
+    pub fn encode(&self) -> Vec<u8> {
+        let mut w = Writer::with_capacity(15 + self.payload.len());
+        w.u64(self.msg_id);
+        w.u16(self.idx);
+        w.u8(self.status);
+        w.u32(self.payload.len() as u32);
+        w.bytes(&self.payload);
+        w.into_vec()
+    }
+
+    pub fn decode(buf: &[u8]) -> Option<Self> {
+        let mut r = Reader::new(buf);
+        let msg_id = r.u64()?;
+        let idx = r.u16()?;
+        let status = r.u8()?;
+        let n = r.u32()? as usize;
+        Some(NetResp { msg_id, idx, status, payload: r.take(n)?.to_vec() })
+    }
+}
+
+/// Length-prefixed framing over a byte stream: `u32 len | frame`.
+pub mod framing {
+    /// Append one frame to `out`.
+    pub fn write_frame(out: &mut Vec<u8>, frame: &[u8]) {
+        out.extend_from_slice(&(frame.len() as u32).to_le_bytes());
+        out.extend_from_slice(frame);
+    }
+
+    /// Try to split one frame off the front of `buf`; returns the frame
+    /// and consumes it from `buf`.
+    pub fn read_frame(buf: &mut Vec<u8>) -> Option<Vec<u8>> {
+        if buf.len() < 4 {
+            return None;
+        }
+        let len = u32::from_le_bytes(buf[..4].try_into().unwrap()) as usize;
+        if buf.len() < 4 + len {
+            return None;
+        }
+        let frame = buf[4..4 + len].to_vec();
+        buf.drain(..4 + len);
+        Some(frame)
+    }
+
+    /// Reassembly buffer with offset-based consumption: consuming a
+    /// frame advances a cursor instead of memmoving the remainder
+    /// (perf pass L3-6); the buffer compacts lazily.
+    #[derive(Debug, Default)]
+    pub struct StreamBuf {
+        buf: Vec<u8>,
+        pos: usize,
+    }
+
+    impl StreamBuf {
+        pub fn new() -> Self {
+            Self::default()
+        }
+
+        pub fn extend(&mut self, bytes: &[u8]) {
+            self.buf.extend_from_slice(bytes);
+        }
+
+        pub fn len(&self) -> usize {
+            self.buf.len() - self.pos
+        }
+
+        pub fn is_empty(&self) -> bool {
+            self.len() == 0
+        }
+
+        /// Pop one complete frame, if present.
+        pub fn read_frame(&mut self) -> Option<Vec<u8>> {
+            let avail = &self.buf[self.pos..];
+            if avail.len() < 4 {
+                self.maybe_compact();
+                return None;
+            }
+            let len = u32::from_le_bytes(avail[..4].try_into().unwrap()) as usize;
+            if avail.len() < 4 + len {
+                self.maybe_compact();
+                return None;
+            }
+            let frame = avail[4..4 + len].to_vec();
+            self.pos += 4 + len;
+            self.maybe_compact();
+            Some(frame)
+        }
+
+        fn maybe_compact(&mut self) {
+            if self.pos == self.buf.len() {
+                self.buf.clear();
+                self.pos = 0;
+            } else if self.pos > 4096 && self.pos * 2 > self.buf.len() {
+                self.buf.drain(..self.pos);
+                self.pos = 0;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn file_request_roundtrip() {
+        let r = FileRequest::read(42, 7, 4096, 1024);
+        assert_eq!(FileRequest::decode(&r.encode()), Some(r));
+        let w = FileRequest::write(43, 7, 0, vec![1, 2, 3]);
+        assert_eq!(FileRequest::decode(&w.encode()), Some(w));
+    }
+
+    #[test]
+    fn file_response_roundtrip() {
+        let resp = FileResponse { req_id: 9, status: Status::Ok, data: vec![5; 100] };
+        assert_eq!(FileResponse::decode(&resp.encode()), Some(resp));
+    }
+
+    #[test]
+    fn expected_response_len_matches_encoding() {
+        // The pre-allocation contract: expected_response_len must equal
+        // the encoded length of the eventual response.
+        let req = FileRequest::read(1, 1, 0, 512);
+        let resp = FileResponse { req_id: 1, status: Status::Ok, data: vec![0; 512] };
+        assert_eq!(req.expected_response_len(), resp.encode().len());
+        let wreq = FileRequest::write(2, 1, 0, vec![0; 100]);
+        let wresp = FileResponse { req_id: 2, status: Status::Ok, data: Vec::new() };
+        assert_eq!(wreq.expected_response_len(), wresp.encode().len());
+    }
+
+    #[test]
+    fn net_msg_roundtrip_all_kinds() {
+        let m = NetMsg {
+            msg_id: 77,
+            requests: vec![
+                AppRequest::Read { file_id: 1, offset: 8192, size: 1024 },
+                AppRequest::Write { file_id: 2, offset: 0, data: vec![9; 64] },
+                AppRequest::GetPage { page_id: 12, lsn: 99 },
+                AppRequest::KvGet { key: 0xdead },
+                AppRequest::KvUpsert { key: 0xbeef, value: vec![1; 8] },
+            ],
+        };
+        assert_eq!(NetMsg::decode(&m.encode()), Some(m));
+    }
+
+    #[test]
+    fn net_resp_roundtrip() {
+        let r = NetResp { msg_id: 5, idx: 3, status: NetResp::OK, payload: vec![7; 9] };
+        assert_eq!(NetResp::decode(&r.encode()), Some(r));
+    }
+
+    #[test]
+    fn framing_handles_partial_input() {
+        let mut stream = Vec::new();
+        framing::write_frame(&mut stream, b"hello");
+        framing::write_frame(&mut stream, b"world");
+        // Deliver byte by byte.
+        let mut rx = Vec::new();
+        let mut frames = Vec::new();
+        for b in stream {
+            rx.push(b);
+            while let Some(f) = framing::read_frame(&mut rx) {
+                frames.push(f);
+            }
+        }
+        assert_eq!(frames, vec![b"hello".to_vec(), b"world".to_vec()]);
+    }
+
+    #[test]
+    fn truncated_decode_is_none() {
+        let r = FileRequest::write(1, 2, 3, vec![0; 50]);
+        let enc = r.encode();
+        assert_eq!(FileRequest::decode(&enc[..enc.len() - 1]), None);
+        assert_eq!(NetMsg::decode(&[0u8; 3]), None);
+    }
+
+    #[test]
+    fn is_read_classification() {
+        assert!(AppRequest::Read { file_id: 0, offset: 0, size: 0 }.is_read());
+        assert!(AppRequest::GetPage { page_id: 0, lsn: 0 }.is_read());
+        assert!(AppRequest::KvGet { key: 0 }.is_read());
+        assert!(!AppRequest::Write { file_id: 0, offset: 0, data: vec![] }.is_read());
+        assert!(!AppRequest::KvUpsert { key: 0, value: vec![] }.is_read());
+    }
+}

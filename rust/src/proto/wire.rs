@@ -1,0 +1,133 @@
+//! Minimal little-endian byte writer/reader shared by the wire formats.
+
+/// Append-only byte writer.
+#[derive(Debug, Default)]
+pub struct Writer(Vec<u8>);
+
+impl Writer {
+    pub fn new() -> Self {
+        Writer(Vec::new())
+    }
+
+    pub fn with_capacity(n: usize) -> Self {
+        Writer(Vec::with_capacity(n))
+    }
+
+    #[inline]
+    pub fn u8(&mut self, v: u8) {
+        self.0.push(v);
+    }
+
+    #[inline]
+    pub fn u16(&mut self, v: u16) {
+        self.0.extend_from_slice(&v.to_le_bytes());
+    }
+
+    #[inline]
+    pub fn u32(&mut self, v: u32) {
+        self.0.extend_from_slice(&v.to_le_bytes());
+    }
+
+    #[inline]
+    pub fn u64(&mut self, v: u64) {
+        self.0.extend_from_slice(&v.to_le_bytes());
+    }
+
+    #[inline]
+    pub fn bytes(&mut self, b: &[u8]) {
+        self.0.extend_from_slice(b);
+    }
+
+    pub fn len(&self) -> usize {
+        self.0.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.0.is_empty()
+    }
+
+    pub fn into_vec(self) -> Vec<u8> {
+        self.0
+    }
+}
+
+/// Bounds-checked byte reader; every accessor returns `None` past the
+/// end instead of panicking (wire data is untrusted).
+#[derive(Debug)]
+pub struct Reader<'a> {
+    buf: &'a [u8],
+    at: usize,
+}
+
+impl<'a> Reader<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        Reader { buf, at: 0 }
+    }
+
+    #[inline]
+    pub fn take(&mut self, n: usize) -> Option<&'a [u8]> {
+        if self.at + n > self.buf.len() {
+            return None;
+        }
+        let s = &self.buf[self.at..self.at + n];
+        self.at += n;
+        Some(s)
+    }
+
+    #[inline]
+    pub fn u8(&mut self) -> Option<u8> {
+        self.take(1).map(|b| b[0])
+    }
+
+    #[inline]
+    pub fn u16(&mut self) -> Option<u16> {
+        self.take(2).map(|b| u16::from_le_bytes(b.try_into().unwrap()))
+    }
+
+    #[inline]
+    pub fn u32(&mut self) -> Option<u32> {
+        self.take(4).map(|b| u32::from_le_bytes(b.try_into().unwrap()))
+    }
+
+    #[inline]
+    pub fn u64(&mut self) -> Option<u64> {
+        self.take(8).map(|b| u64::from_le_bytes(b.try_into().unwrap()))
+    }
+
+    /// Bytes remaining.
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.at
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_all_widths() {
+        let mut w = Writer::new();
+        w.u8(1);
+        w.u16(2);
+        w.u32(3);
+        w.u64(4);
+        w.bytes(b"xyz");
+        let v = w.into_vec();
+        let mut r = Reader::new(&v);
+        assert_eq!(r.u8(), Some(1));
+        assert_eq!(r.u16(), Some(2));
+        assert_eq!(r.u32(), Some(3));
+        assert_eq!(r.u64(), Some(4));
+        assert_eq!(r.take(3), Some(&b"xyz"[..]));
+        assert_eq!(r.remaining(), 0);
+        assert_eq!(r.u8(), None);
+    }
+
+    #[test]
+    fn overread_is_none_not_panic() {
+        let mut r = Reader::new(&[1, 2]);
+        assert_eq!(r.u32(), None);
+        // Failed read consumes nothing.
+        assert_eq!(r.u16(), Some(0x0201));
+    }
+}

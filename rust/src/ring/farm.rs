@@ -1,0 +1,193 @@
+//! FaRM-style ring baseline (§8.5, Fig 17).
+//!
+//! Fixed-size slots; each carries a valid flag the producer sets after
+//! writing the message. The consumer polls the flag of the head slot
+//! (a DMA read per poll — hits and misses alike), copies the message,
+//! and must DMA-write the slot header back to zero to release it for
+//! reuse ("the DPU ... releases the space on the host ring buffer ...
+//! by clearing its bits"). No batching: every message costs at least
+//! one DMA read + one DMA write, which is why Fig 17 shows it peaking
+//! at ~64 K op/s.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use super::{CacheLine, RequestRing, RingStatus};
+use crate::dma::{DmaChannel, DmaDir};
+
+struct Slot {
+    /// 0 = free; otherwise `len + 1` of the stored message.
+    hdr: AtomicU64,
+    data: std::cell::UnsafeCell<Box<[u8]>>,
+}
+
+/// FaRM-style flag-per-slot MPSC ring.
+pub struct FarmRing {
+    slots: Box<[Slot]>,
+    tail: CacheLine<AtomicU64>,
+    head: CacheLine<AtomicU64>,
+    slot_size: usize,
+}
+
+// SAFETY: a slot's data is written only by the producer that claimed it
+// (hdr == 0 -> claimed via tail CAS) and read only by the single consumer
+// after observing hdr != 0 with Acquire.
+unsafe impl Send for FarmRing {}
+unsafe impl Sync for FarmRing {}
+
+impl FarmRing {
+    pub fn new(num_slots: usize, slot_size: usize) -> Self {
+        assert!(num_slots.is_power_of_two());
+        let slots = (0..num_slots)
+            .map(|_| Slot {
+                hdr: AtomicU64::new(0),
+                data: std::cell::UnsafeCell::new(vec![0u8; slot_size].into_boxed_slice()),
+            })
+            .collect::<Vec<_>>()
+            .into_boxed_slice();
+        FarmRing {
+            slots,
+            tail: CacheLine(AtomicU64::new(0)),
+            head: CacheLine(AtomicU64::new(0)),
+            slot_size,
+        }
+    }
+
+    fn mask(&self) -> u64 {
+        self.slots.len() as u64 - 1
+    }
+
+    /// Consume up to one message through the DMA channel (poll → read →
+    /// release). Returns messages consumed (0 or 1).
+    pub fn pop_one_dma(&self, dma: &DmaChannel, f: &mut dyn FnMut(&[u8])) -> usize {
+        let head = self.head.0.load(Ordering::Relaxed);
+        let slot = &self.slots[(head & self.mask()) as usize];
+        // Poll the flag: costs a DMA read whether or not it is set.
+        dma.op(DmaDir::Read, 8);
+        let hdr = slot.hdr.load(Ordering::Acquire);
+        if hdr == 0 {
+            return 0;
+        }
+        let len = (hdr - 1) as usize;
+        dma.op(DmaDir::Read, len);
+        // SAFETY: hdr != 0 ⇒ producer finished writing (Release store).
+        let data = unsafe { &*slot.data.get() };
+        f(&data[..len]);
+        // Release: clear the flag with a DMA write.
+        dma.op(DmaDir::Write, 8);
+        slot.hdr.store(0, Ordering::Release);
+        self.head.0.store(head + 1, Ordering::Relaxed);
+        1
+    }
+}
+
+impl RequestRing for FarmRing {
+    fn try_push(&self, msg: &[u8]) -> RingStatus {
+        assert!(msg.len() <= self.slot_size);
+        loop {
+            // Head loaded before tail — see ProgressRing::try_push_inner
+            // for why the opposite order can underflow.
+            let head = self.head.0.load(Ordering::Acquire);
+            let tail = self.tail.0.load(Ordering::Acquire);
+            if tail - head >= self.slots.len() as u64 {
+                return RingStatus::Retry;
+            }
+            let slot = &self.slots[(tail & self.mask()) as usize];
+            if slot.hdr.load(Ordering::Acquire) != 0 {
+                // Slot not yet released by the consumer.
+                return RingStatus::Retry;
+            }
+            if self
+                .tail
+                .0
+                .compare_exchange_weak(tail, tail + 1, Ordering::AcqRel, Ordering::Relaxed)
+                .is_err()
+            {
+                continue;
+            }
+            // SAFETY: tail CAS gives us exclusive claim on this slot.
+            let data = unsafe { &mut *slot.data.get() };
+            data[..msg.len()].copy_from_slice(msg);
+            slot.hdr.store(msg.len() as u64 + 1, Ordering::Release);
+            return RingStatus::Ok;
+        }
+    }
+
+    fn pop_batch(&self, f: &mut dyn FnMut(&[u8])) -> usize {
+        thread_local! {
+            static NULL_DMA: DmaChannel = DmaChannel::new();
+        }
+        NULL_DMA.with(|d| self.pop_one_dma(d, f))
+    }
+
+    fn name(&self) -> &'static str {
+        "farm-style"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn per_message_dma_cost() {
+        // Each message costs ≥2 DMA ops (poll-read + release-write) —
+        // the design deficiency Fig 17 exposes.
+        let r = FarmRing::new(16, 64);
+        let dma = DmaChannel::new();
+        for _ in 0..4 {
+            r.try_push(&[9u8; 8]);
+        }
+        let mut n = 0;
+        while r.pop_one_dma(&dma, &mut |_| n += 1) == 1 {}
+        assert_eq!(n, 4);
+        assert!(dma.reads() >= 8); // 4 polls-with-data + 4 payload reads + 1 empty poll
+        assert_eq!(dma.writes(), 4);
+    }
+
+    #[test]
+    fn full_ring_retries() {
+        let r = FarmRing::new(4, 16);
+        for _ in 0..4 {
+            assert_eq!(r.try_push(&[1u8; 4]), RingStatus::Ok);
+        }
+        assert_eq!(r.try_push(&[1u8; 4]), RingStatus::Retry);
+    }
+
+    #[test]
+    fn mpsc_roundtrip() {
+        let r = Arc::new(FarmRing::new(256, 16));
+        let mut handles = Vec::new();
+        for p in 0..4u64 {
+            let r = r.clone();
+            handles.push(std::thread::spawn(move || {
+                for i in 0..1000u64 {
+                    let v = p << 32 | i;
+                    while r.try_push(&v.to_le_bytes()) != RingStatus::Ok {
+                        std::hint::spin_loop();
+                    }
+                }
+            }));
+        }
+        let consumer = {
+            let r = r.clone();
+            std::thread::spawn(move || {
+                let mut total = 0;
+                let mut seen = [0u64; 4];
+                while total < 4000 {
+                    total += r.pop_batch(&mut |m| {
+                        let v = u64::from_le_bytes(m.try_into().unwrap());
+                        let p = (v >> 32) as usize;
+                        assert_eq!(v & 0xffff_ffff, seen[p]);
+                        seen[p] += 1;
+                    });
+                }
+                total
+            })
+        };
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(consumer.join().unwrap(), 4000);
+    }
+}

@@ -1,0 +1,96 @@
+//! Host↔DPU message rings (§4.1, Figs 7/8/17).
+//!
+//! Three implementations share the [`RequestRing`] interface so the
+//! Fig 17 bench can compare them head-to-head:
+//!
+//! * [`ProgressRing`] — the paper's contribution: a DMA-backed lock-free
+//!   MPSC ring with a third *progress* pointer that lets concurrent
+//!   producers publish in order and lets the single consumer drain whole
+//!   batches with a single pointer check (one DMA read covers both
+//!   `P` and `T` because `P` is laid out immediately before `T`).
+//! * [`FarmRing`] — FaRM-style baseline: per-message valid flags, no
+//!   batching, consumer polls flags and must DMA-write to release each
+//!   slot.
+//! * [`LockedRing`] — mutex-protected ring with batching.
+//!
+//! The response direction (single DPU producer, multiple host consumers)
+//! is provided by [`ResponseRing`].
+
+mod farm;
+mod locked;
+mod progress;
+mod response;
+
+pub use farm::FarmRing;
+pub use locked::LockedRing;
+pub use progress::ProgressRing;
+pub use response::ResponseRing;
+
+/// Result of a non-blocking ring operation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RingStatus {
+    Ok,
+    /// Ring full / batch limit reached / consumer should retry.
+    Retry,
+    /// Nothing to consume.
+    Empty,
+}
+
+/// Common interface of the three request-ring designs (host-side
+/// producers, one DPU-side consumer).
+pub trait RequestRing: Send + Sync {
+    /// Try to insert one message; non-blocking.
+    fn try_push(&self, msg: &[u8]) -> RingStatus;
+
+    /// Drain available messages into `f`; returns the number consumed.
+    /// Non-blocking; `Retry` conditions yield 0.
+    fn pop_batch(&self, f: &mut dyn FnMut(&[u8])) -> usize;
+
+    /// Ring name for reports.
+    fn name(&self) -> &'static str;
+}
+
+/// Pad-to-cache-line wrapper used by all ring pointer words.
+#[repr(align(64))]
+#[derive(Default)]
+pub(crate) struct CacheLine<T>(pub T);
+
+/// Round a record length up to 8-byte alignment.
+#[inline]
+pub(crate) fn align8(n: usize) -> usize {
+    (n + 7) & !7
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    fn roundtrip(ring: Arc<dyn RequestRing>) {
+        // Simple single-thread roundtrip for every implementation.
+        for i in 0..100u32 {
+            let msg = i.to_le_bytes();
+            assert_eq!(ring.try_push(&msg), RingStatus::Ok, "push {i}");
+            let mut got = Vec::new();
+            while ring.pop_batch(&mut |m| got.push(u32::from_le_bytes(m.try_into().unwrap())))
+                == 0
+            {}
+            assert_eq!(got, vec![i]);
+        }
+    }
+
+    #[test]
+    fn roundtrip_all_designs() {
+        roundtrip(Arc::new(ProgressRing::new(1 << 12, 1 << 10)));
+        roundtrip(Arc::new(FarmRing::new(64, 64)));
+        roundtrip(Arc::new(LockedRing::new(1 << 10)));
+    }
+
+    #[test]
+    fn align8_works() {
+        assert_eq!(align8(0), 0);
+        assert_eq!(align8(1), 8);
+        assert_eq!(align8(8), 8);
+        assert_eq!(align8(9), 16);
+    }
+}

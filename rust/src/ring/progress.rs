@@ -1,0 +1,351 @@
+//! The progress-pointer lock-free ring (§4.1, Figs 7 & 8).
+//!
+//! Layout mirrors Figure 7 (right): a pointer area holding `Head`,
+//! `Progress`, `Tail` — each cache-line aligned, with **`P` placed
+//! immediately before `T`** so the consumer's `P == T` check (Fig 8b)
+//! needs a single DMA read of one contiguous region — followed by the
+//! data buffer.
+//!
+//! Pointers are monotonically increasing byte offsets (never wrapped);
+//! the data index is `offset & (capacity-1)`. Records are
+//! `u32 len | payload | pad-to-8`.
+//!
+//! Producer (Fig 8a): check `Tail - Head < M` (M = max allowable
+//! progress — bounds both backlog and batch size), CAS-reserve `Tail`,
+//! copy the record, then publish by CAS-advancing `Progress` from the
+//! reserved start to its end — which naturally spins until all earlier
+//! reservations have published, giving in-order visibility without locks.
+//!
+//! Consumer (Fig 8b, single thread, DPU side): load `P` and `T` (one DMA
+//! read), if `P != T` some producer is mid-insert → RETRY; otherwise read
+//! `[H, P)` in one DMA and advance `H`.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use super::{align8, CacheLine, RequestRing, RingStatus};
+use crate::dma::{DmaChannel, DmaDir};
+
+/// DMA-backed lock-free MPSC byte ring with a progress pointer.
+pub struct ProgressRing {
+    /// Consumer-owned: start of unconsumed data.
+    head: CacheLine<AtomicU64>,
+    /// Publish frontier: everything below is fully written.
+    /// NOTE: laid out before `tail` (see module docs).
+    progress: CacheLine<AtomicU64>,
+    /// Reservation frontier.
+    tail: CacheLine<AtomicU64>,
+    buf: Box<[std::cell::UnsafeCell<u8>]>,
+    mask: u64,
+    /// Maximum allowable progress (bytes of outstanding backlog).
+    max_progress: u64,
+}
+
+// SAFETY: all mutable buffer accesses are disjoint by construction —
+// producers write only their CAS-reserved [start, end) slice before
+// publishing it via `progress`, and the consumer reads only fully
+// published regions `[head, progress)`.
+unsafe impl Send for ProgressRing {}
+unsafe impl Sync for ProgressRing {}
+
+impl ProgressRing {
+    /// `capacity` must be a power of two; `max_progress` (the paper's M)
+    /// bounds outstanding bytes and must be ≤ capacity.
+    pub fn new(capacity: usize, max_progress: usize) -> Self {
+        assert!(capacity.is_power_of_two(), "capacity must be a power of two");
+        assert!(max_progress <= capacity && max_progress >= 16);
+        let buf = (0..capacity)
+            .map(|_| std::cell::UnsafeCell::new(0u8))
+            .collect::<Vec<_>>()
+            .into_boxed_slice();
+        ProgressRing {
+            head: CacheLine(AtomicU64::new(0)),
+            progress: CacheLine(AtomicU64::new(0)),
+            tail: CacheLine(AtomicU64::new(0)),
+            buf,
+            mask: capacity as u64 - 1,
+            max_progress: max_progress as u64,
+        }
+    }
+
+    /// Copy into the ring with at most two `memcpy`s (wrap split).
+    /// Perf pass L3-1: the original byte-at-a-time loop with per-byte
+    /// masking capped 8 KB messages at ~1 GB/s (EXPERIMENTS.md §Perf).
+    #[inline]
+    fn write_bytes(&self, at: u64, data: &[u8]) {
+        let cap = self.buf.len();
+        let start = (at & self.mask) as usize;
+        let first = data.len().min(cap - start);
+        // SAFETY: region [at, at+len) is exclusively reserved by the
+        // caller's successful tail CAS; UnsafeCell<u8> slices are
+        // layout-compatible with u8.
+        unsafe {
+            let base = self.buf.as_ptr() as *mut u8;
+            std::ptr::copy_nonoverlapping(data.as_ptr(), base.add(start), first);
+            if first < data.len() {
+                std::ptr::copy_nonoverlapping(
+                    data.as_ptr().add(first),
+                    base,
+                    data.len() - first,
+                );
+            }
+        }
+    }
+
+    #[inline]
+    fn read_bytes(&self, at: u64, out: &mut [u8]) {
+        let cap = self.buf.len();
+        let start = (at & self.mask) as usize;
+        let first = out.len().min(cap - start);
+        // SAFETY: region is published (below progress) and unreleased
+        // (above head); producers cannot touch it until head passes.
+        unsafe {
+            let base = self.buf.as_ptr() as *const u8;
+            std::ptr::copy_nonoverlapping(base.add(start), out.as_mut_ptr(), first);
+            if first < out.len() {
+                std::ptr::copy_nonoverlapping(base, out.as_mut_ptr().add(first), out.len() - first);
+            }
+        }
+    }
+
+    /// Fig 8a with an explicit DMA channel (host side: plain loads —
+    /// channel unused; kept for symmetric benches).
+    pub fn try_push_inner(&self, msg: &[u8]) -> RingStatus {
+        let need = align8(4 + msg.len()) as u64;
+        assert!(need <= self.max_progress, "message larger than max progress");
+        loop {
+            // NOTE: Fig 8a lists `LoadTail` before `LoadHead`; we load
+            // head FIRST. With the paper's order, a concurrent consumer
+            // can advance `head` past our stale `tail` snapshot between
+            // the two loads and `tail - head` underflows. Loading head
+            // first keeps the snapshot conservative (head only moves
+            // forward, so we may see *more* backlog than exists — never
+            // less) and the check sound.
+            let head = self.head.0.load(Ordering::Acquire);
+            let tail = self.tail.0.load(Ordering::Acquire);
+            // Fig 8a line 3: backlog / batch bound.
+            if tail - head + need > self.max_progress {
+                return RingStatus::Retry;
+            }
+            // Fig 8a line 4: IncTail(N) — reserve.
+            if self
+                .tail
+                .0
+                .compare_exchange_weak(tail, tail + need, Ordering::AcqRel, Ordering::Relaxed)
+                .is_err()
+            {
+                continue;
+            }
+            // Fig 8a line 5: insert the request.
+            let len = (msg.len() as u32).to_le_bytes();
+            self.write_bytes(tail, &len);
+            self.write_bytes(tail + 4, msg);
+            // Fig 8a line 6: IncProg(N) — publish in order. CAS spins
+            // until progress reaches our start.
+            while self
+                .progress
+                .0
+                .compare_exchange_weak(tail, tail + need, Ordering::AcqRel, Ordering::Relaxed)
+                .is_err()
+            {
+                std::hint::spin_loop();
+            }
+            return RingStatus::Ok;
+        }
+    }
+
+    /// Fig 8b: consume the full published batch via a DMA channel.
+    ///
+    /// Counts exactly the DMA ops the paper's design performs: one read
+    /// covering `P`+`T` (adjacent lines), one read for the batch data,
+    /// one write for the head update.
+    pub fn pop_batch_dma(&self, dma: &DmaChannel, f: &mut dyn FnMut(&[u8])) -> usize {
+        // One DMA read fetches both P and T (layout: P immediately
+        // before T).
+        dma.op(DmaDir::Read, 16);
+        let prog = self.progress.0.load(Ordering::Acquire);
+        let tail = self.tail.0.load(Ordering::Acquire);
+        let head = self.head.0.load(Ordering::Acquire); // DPU-local copy
+        if prog != tail {
+            // Fig 8b: reservation in flight — RETRY.
+            return 0;
+        }
+        if prog == head {
+            return 0;
+        }
+        let batch = (prog - head) as usize;
+        dma.op(DmaDir::Read, batch);
+        // Perf pass L3-2: reuse the DPU-side staging buffer across
+        // drains (the copy itself is semantic — it IS the DMA read into
+        // DPU memory — but reallocating it per batch is not).
+        thread_local! {
+            static SCRATCH: std::cell::RefCell<Vec<u8>> = const { std::cell::RefCell::new(Vec::new()) };
+        }
+        SCRATCH.with(|s| {
+            let mut tmp = s.borrow_mut();
+            if tmp.len() < batch {
+                tmp.resize(batch, 0);
+            }
+            let tmp = &mut tmp[..batch];
+            self.read_bytes(head, tmp);
+            let mut consumed = 0usize;
+            let mut n = 0usize;
+            while consumed < batch {
+                let len =
+                    u32::from_le_bytes(tmp[consumed..consumed + 4].try_into().unwrap()) as usize;
+                f(&tmp[consumed + 4..consumed + 4 + len]);
+                consumed += align8(4 + len);
+                n += 1;
+            }
+            // Fig 8b line 6: IncHead — one DMA write of the head word.
+            dma.op(DmaDir::Write, 8);
+            self.head.0.store(prog, Ordering::Release);
+            n
+        })
+    }
+
+    /// Bytes currently reserved but unconsumed.
+    pub fn backlog(&self) -> u64 {
+        self.tail.0.load(Ordering::Acquire) - self.head.0.load(Ordering::Acquire)
+    }
+
+    /// The configured maximum allowable progress (M).
+    pub fn max_progress(&self) -> u64 {
+        self.max_progress
+    }
+}
+
+impl RequestRing for ProgressRing {
+    fn try_push(&self, msg: &[u8]) -> RingStatus {
+        self.try_push_inner(msg)
+    }
+
+    fn pop_batch(&self, f: &mut dyn FnMut(&[u8])) -> usize {
+        // Accounting-only channel for the trait path.
+        thread_local! {
+            static NULL_DMA: DmaChannel = DmaChannel::new();
+        }
+        NULL_DMA.with(|d| self.pop_batch_dma(d, f))
+    }
+
+    fn name(&self) -> &'static str {
+        "progress-lockfree"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicBool;
+    use std::sync::Arc;
+
+    #[test]
+    fn push_pop_single() {
+        let r = ProgressRing::new(1024, 256);
+        assert_eq!(r.try_push(b"hello"), RingStatus::Ok);
+        assert_eq!(r.try_push(b"world!"), RingStatus::Ok);
+        let mut got = Vec::new();
+        let n = r.pop_batch(&mut |m| got.push(m.to_vec()));
+        assert_eq!(n, 2);
+        assert_eq!(got, vec![b"hello".to_vec(), b"world!".to_vec()]);
+    }
+
+    #[test]
+    fn batch_limit_returns_retry() {
+        let r = ProgressRing::new(1024, 64);
+        // Each 8-byte msg occupies align8(12)=16 bytes; 4 fit in M=64.
+        for _ in 0..4 {
+            assert_eq!(r.try_push(&[7u8; 8]), RingStatus::Ok);
+        }
+        assert_eq!(r.try_push(&[7u8; 8]), RingStatus::Retry);
+        // Drain unblocks producers.
+        let mut cnt = 0;
+        r.pop_batch(&mut |_| cnt += 1);
+        assert_eq!(cnt, 4);
+        assert_eq!(r.try_push(&[7u8; 8]), RingStatus::Ok);
+    }
+
+    #[test]
+    fn wraparound_preserves_data() {
+        let r = ProgressRing::new(128, 64);
+        for round in 0..100u32 {
+            let msg = [round as u8; 24];
+            assert_eq!(r.try_push(&msg), RingStatus::Ok);
+            let mut got = Vec::new();
+            assert_eq!(r.pop_batch(&mut |m| got.push(m.to_vec())), 1);
+            assert_eq!(got[0], msg);
+        }
+    }
+
+    #[test]
+    fn dma_op_counts_match_design() {
+        // One batched drain = 1 pointer read + 1 data read + 1 head write,
+        // regardless of how many messages are in the batch (§4.1).
+        let r = ProgressRing::new(4096, 1024);
+        for _ in 0..10 {
+            r.try_push(&[1u8; 8]);
+        }
+        let dma = DmaChannel::new();
+        let mut n = 0;
+        r.pop_batch_dma(&dma, &mut |_| n += 1);
+        assert_eq!(n, 10);
+        assert_eq!(dma.reads(), 2);
+        assert_eq!(dma.writes(), 1);
+    }
+
+    #[test]
+    fn mpsc_no_loss_no_dup() {
+        let r = Arc::new(ProgressRing::new(1 << 16, 1 << 12));
+        let producers = 8;
+        let per = 5_000u64;
+        let stop = Arc::new(AtomicBool::new(false));
+        let mut handles = Vec::new();
+        for p in 0..producers {
+            let r = r.clone();
+            handles.push(std::thread::spawn(move || {
+                for i in 0..per {
+                    let v = (p as u64) << 32 | i;
+                    loop {
+                        if r.try_push(&v.to_le_bytes()) == RingStatus::Ok {
+                            break;
+                        }
+                        std::hint::spin_loop();
+                    }
+                }
+            }));
+        }
+        let consumer = {
+            let r = r.clone();
+            let stop = stop.clone();
+            std::thread::spawn(move || {
+                let mut seen = vec![0u64; producers]; // next expected per producer
+                let mut total = 0u64;
+                while total < per * producers as u64 {
+                    // Read `stop` BEFORE popping: stop ⇒ all producers
+                    // joined ⇒ everything is published, so an empty pop
+                    // now really means the ring is drained. (Checking
+                    // stop after an empty pop races with in-flight
+                    // insertions and can exit early.)
+                    let stopped = stop.load(Ordering::Relaxed);
+                    let n = r.pop_batch(&mut |m| {
+                        let v = u64::from_le_bytes(m.try_into().unwrap());
+                        let p = (v >> 32) as usize;
+                        let i = v & 0xffff_ffff;
+                        assert_eq!(i, seen[p], "per-producer FIFO order violated");
+                        seen[p] += 1;
+                    });
+                    total += n as u64;
+                    if stopped && n == 0 {
+                        break;
+                    }
+                }
+                total
+            })
+        };
+        for h in handles {
+            h.join().unwrap();
+        }
+        stop.store(true, Ordering::Relaxed);
+        let total = consumer.join().unwrap();
+        assert_eq!(total, per * producers as u64);
+    }
+}

@@ -1,0 +1,209 @@
+//! Response ring: single DPU producer, multiple host consumers (§4.1:
+//! "Response rings are similarly designed: the DPU is the single
+//! producer, and the host application threads are the consumers").
+//!
+//! Records are length-prefixed like the request ring. Consumers claim
+//! records by CAS on the head offset; the producer (the DPU DMA thread)
+//! appends batches and advances the tail with a single release store —
+//! on hardware that store is the completion of a batched DMA-write
+//! (§4.3 TailC advance).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use super::{align8, CacheLine, RingStatus};
+use crate::dma::{DmaChannel, DmaDir};
+
+/// SPMC byte ring for responses.
+pub struct ResponseRing {
+    head: CacheLine<AtomicU64>,
+    tail: CacheLine<AtomicU64>,
+    buf: Box<[std::cell::UnsafeCell<u8>]>,
+    mask: u64,
+}
+
+// SAFETY: the producer writes only [tail, tail+need) before publishing
+// via the tail store; consumers read only below tail, and each record is
+// claimed by exactly one consumer through the head CAS. Claimed space is
+// not reused until head passes it (capacity check on push).
+unsafe impl Send for ResponseRing {}
+unsafe impl Sync for ResponseRing {}
+
+impl ResponseRing {
+    pub fn new(capacity: usize) -> Self {
+        assert!(capacity.is_power_of_two());
+        ResponseRing {
+            head: CacheLine(AtomicU64::new(0)),
+            tail: CacheLine(AtomicU64::new(0)),
+            buf: (0..capacity)
+                .map(|_| std::cell::UnsafeCell::new(0u8))
+                .collect::<Vec<_>>()
+                .into_boxed_slice(),
+            mask: capacity as u64 - 1,
+        }
+    }
+
+    fn capacity(&self) -> u64 {
+        self.mask + 1
+    }
+
+    /// Wrap-splitting memcpy (perf pass L3-1; see
+    /// `ProgressRing::write_bytes`).
+    #[inline]
+    fn write_bytes(&self, at: u64, data: &[u8]) {
+        let cap = self.buf.len();
+        let start = (at & self.mask) as usize;
+        let first = data.len().min(cap - start);
+        // SAFETY: see struct-level invariants.
+        unsafe {
+            let base = self.buf.as_ptr() as *mut u8;
+            std::ptr::copy_nonoverlapping(data.as_ptr(), base.add(start), first);
+            if first < data.len() {
+                std::ptr::copy_nonoverlapping(
+                    data.as_ptr().add(first),
+                    base,
+                    data.len() - first,
+                );
+            }
+        }
+    }
+
+    #[inline]
+    fn read_bytes(&self, at: u64, out: &mut [u8]) {
+        let cap = self.buf.len();
+        let start = (at & self.mask) as usize;
+        let first = out.len().min(cap - start);
+        // SAFETY: see struct-level invariants.
+        unsafe {
+            let base = self.buf.as_ptr() as *const u8;
+            std::ptr::copy_nonoverlapping(base.add(start), out.as_mut_ptr(), first);
+            if first < out.len() {
+                std::ptr::copy_nonoverlapping(base, out.as_mut_ptr().add(first), out.len() - first);
+            }
+        }
+    }
+
+    /// Producer (DPU DMA thread): append one response; `dma` accounts the
+    /// DMA write of the record.
+    pub fn push_dma(&self, dma: &DmaChannel, msg: &[u8]) -> RingStatus {
+        let need = align8(4 + msg.len()) as u64;
+        let tail = self.tail.0.load(Ordering::Relaxed); // single producer
+        let head = self.head.0.load(Ordering::Acquire);
+        if tail - head + need > self.capacity() {
+            return RingStatus::Retry;
+        }
+        dma.op(DmaDir::Write, need as usize);
+        self.write_bytes(tail, &(msg.len() as u32).to_le_bytes());
+        self.write_bytes(tail + 4, msg);
+        self.tail.0.store(tail + need, Ordering::Release);
+        RingStatus::Ok
+    }
+
+    /// Non-DMA producer path (tests / host-local use).
+    pub fn push(&self, msg: &[u8]) -> RingStatus {
+        thread_local! {
+            static NULL_DMA: DmaChannel = DmaChannel::new();
+        }
+        NULL_DMA.with(|d| self.push_dma(d, msg))
+    }
+
+    /// Consumer (host application thread): claim and read one response.
+    /// Purely local memory operations on the host — no DMA, no locks
+    /// (§4.1 goal 2).
+    pub fn pop(&self, f: &mut dyn FnMut(&[u8])) -> RingStatus {
+        loop {
+            let head = self.head.0.load(Ordering::Acquire);
+            let tail = self.tail.0.load(Ordering::Acquire);
+            if head == tail {
+                return RingStatus::Empty;
+            }
+            let mut len4 = [0u8; 4];
+            self.read_bytes(head, &mut len4);
+            let len = u32::from_le_bytes(len4) as usize;
+            let need = align8(4 + len) as u64;
+            // Claim the record before reading the payload.
+            if self
+                .head
+                .0
+                .compare_exchange_weak(head, head + need, Ordering::AcqRel, Ordering::Relaxed)
+                .is_err()
+            {
+                continue;
+            }
+            let mut payload = vec![0u8; len];
+            self.read_bytes(head + 4, &mut payload);
+            f(&payload);
+            return RingStatus::Ok;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn spmc_roundtrip() {
+        let r = ResponseRing::new(1024);
+        for i in 0..10u32 {
+            assert_eq!(r.push(&i.to_le_bytes()), RingStatus::Ok);
+        }
+        let mut got = Vec::new();
+        while r.pop(&mut |m| got.push(u32::from_le_bytes(m.try_into().unwrap())))
+            == RingStatus::Ok
+        {}
+        assert_eq!(got, (0..10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn full_retry() {
+        let r = ResponseRing::new(64);
+        let mut pushed = 0;
+        while r.push(&[0u8; 8]) == RingStatus::Ok {
+            pushed += 1;
+        }
+        assert_eq!(pushed, 4); // 64 / align8(12)=16
+    }
+
+    #[test]
+    fn concurrent_consumers_unique_claims() {
+        use std::sync::atomic::AtomicU32;
+        let r = Arc::new(ResponseRing::new(1 << 16));
+        let total = 20_000u32;
+        let consumed = Arc::new(AtomicU32::new(0));
+        let producer = {
+            let r = r.clone();
+            std::thread::spawn(move || {
+                for i in 0..total {
+                    while r.push(&i.to_le_bytes()) != RingStatus::Ok {
+                        std::hint::spin_loop();
+                    }
+                }
+            })
+        };
+        let mut consumers = Vec::new();
+        for _ in 0..4 {
+            let r = r.clone();
+            let consumed = consumed.clone();
+            consumers.push(std::thread::spawn(move || {
+                let mut got = Vec::new();
+                while consumed.load(Ordering::Relaxed) < total {
+                    if r.pop(&mut |m| got.push(u32::from_le_bytes(m.try_into().unwrap())))
+                        == RingStatus::Ok
+                    {
+                        consumed.fetch_add(1, Ordering::Relaxed);
+                    } else {
+                        std::hint::spin_loop();
+                    }
+                }
+                got
+            }));
+        }
+        producer.join().unwrap();
+        let mut all: Vec<u32> =
+            consumers.into_iter().flat_map(|c| c.join().unwrap()).collect();
+        all.sort_unstable();
+        // Every record delivered exactly once across consumers.
+        assert_eq!(all, (0..total).collect::<Vec<_>>());
+    }
+}

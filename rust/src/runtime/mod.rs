@@ -1,0 +1,237 @@
+//! PJRT runtime: load and execute the AOT-compiled kernels.
+//!
+//! Python runs once at build time (`make artifacts`): Layer-2 JAX
+//! programs calling Layer-1 Pallas kernels are lowered to **HLO text**
+//! (`artifacts/*.hlo.txt`) by `python/compile/aot.py`. This module loads
+//! each artifact into a PJRT CPU client and executes it from the rust
+//! hot path — Python is never on the request path.
+//!
+//! Interchange is HLO *text*, not serialized protos: jax ≥ 0.5 emits
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects, while the
+//! text parser reassigns ids (see /opt/xla-example/README.md).
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::cache::DenseTable;
+
+/// A PJRT client plus the loaded kernel executables.
+pub struct KernelRuntime {
+    client: xla::PjRtClient,
+    kernels: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+/// The standard artifact directory (relative to the repo root).
+pub const DEFAULT_ARTIFACTS: &str = "artifacts";
+
+/// Batch size the predicate kernel is AOT-compiled for.
+pub const PREDICATE_BATCH: usize = 1024;
+/// Dense table slots the predicate kernel is AOT-compiled for.
+pub const PREDICATE_SLOTS: usize = 8192;
+/// Page bytes the checksum kernel is AOT-compiled for.
+pub const CHECKSUM_PAGE: usize = 8192;
+/// Pages per checksum batch.
+pub const CHECKSUM_BATCH: usize = 16;
+
+impl KernelRuntime {
+    /// Create a CPU PJRT client with no kernels loaded.
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
+        Ok(KernelRuntime { client, kernels: HashMap::new() })
+    }
+
+    /// Load one HLO-text artifact under `name`.
+    pub fn load(&mut self, name: &str, path: &Path) -> Result<()> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow!("parse {path:?}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compile {name}: {e:?}"))?;
+        self.kernels.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Load every `<name>.hlo.txt` in a directory.
+    pub fn load_dir(&mut self, dir: &Path) -> Result<Vec<String>> {
+        let mut loaded = Vec::new();
+        for entry in std::fs::read_dir(dir).with_context(|| format!("read {dir:?}"))? {
+            let path = entry?.path();
+            let fname = path.file_name().and_then(|s| s.to_str()).unwrap_or("");
+            if let Some(name) = fname.strip_suffix(".hlo.txt") {
+                self.load(name, &path)?;
+                loaded.push(name.to_string());
+            }
+        }
+        loaded.sort();
+        Ok(loaded)
+    }
+
+    /// Locate the artifacts directory: `$DDS_ARTIFACTS` or ./artifacts.
+    pub fn artifacts_dir() -> PathBuf {
+        std::env::var_os("DDS_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|| PathBuf::from(DEFAULT_ARTIFACTS))
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        let mut v: Vec<&str> = self.kernels.keys().map(|s| s.as_str()).collect();
+        v.sort();
+        v
+    }
+
+    fn kernel(&self, name: &str) -> Result<&xla::PjRtLoadedExecutable> {
+        self.kernels
+            .get(name)
+            .ok_or_else(|| anyhow!("kernel {name} not loaded (run `make artifacts`)"))
+    }
+
+    /// Execute the offload-predicate kernel (`predicate.hlo.txt`) on up
+    /// to [`PREDICATE_BATCH`] queries against a dense cache-table
+    /// snapshot whose slot count must equal [`PREDICATE_SLOTS`].
+    ///
+    /// Returns, per query: `(offload, item_a, item_b, item_c, item_d)` —
+    /// for GetPage@LSN offloading, `offload = found && cached_lsn >=
+    /// req_lsn` and the items carry `(lsn, file_id, offset, size)`.
+    pub fn predicate_batch(
+        &self,
+        table: &DenseTable,
+        keys: &[u64],
+        lsns: &[u64],
+    ) -> Result<Vec<PredicateHit>> {
+        anyhow::ensure!(keys.len() == lsns.len(), "keys/lsns length mismatch");
+        anyhow::ensure!(keys.len() <= PREDICATE_BATCH, "batch too large");
+        anyhow::ensure!(
+            table.keys.len() == PREDICATE_SLOTS,
+            "table has {} slots; kernel compiled for {}",
+            table.keys.len(),
+            PREDICATE_SLOTS
+        );
+        let exe = self.kernel("predicate")?;
+        // Pad the batch to the compiled shape with never-matching keys.
+        let mut qk = vec![crate::cache::EMPTY - 1; PREDICATE_BATCH];
+        let mut ql = vec![u64::MAX; PREDICATE_BATCH];
+        qk[..keys.len()].copy_from_slice(keys);
+        ql[..lsns.len()].copy_from_slice(lsns);
+
+        let t_keys = xla::Literal::vec1(&table.keys);
+        let t_items = xla::Literal::vec1(&table.items)
+            .reshape(&[PREDICATE_SLOTS as i64, 4])
+            .map_err(|e| anyhow!("reshape items: {e:?}"))?;
+        let l_keys = xla::Literal::vec1(&qk);
+        let l_lsns = xla::Literal::vec1(&ql);
+
+        let result = exe
+            .execute::<xla::Literal>(&[t_keys, t_items, l_keys, l_lsns])
+            .map_err(|e| anyhow!("execute predicate: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch result: {e:?}"))?;
+        let (mask, a, b, cd) = result
+            .to_tuple4()
+            .map_err(|e| anyhow!("untuple: {e:?}"))?;
+        let mask = mask.to_vec::<u64>().map_err(|e| anyhow!("mask: {e:?}"))?;
+        let a = a.to_vec::<u64>().map_err(|e| anyhow!("a: {e:?}"))?;
+        let b = b.to_vec::<u64>().map_err(|e| anyhow!("b: {e:?}"))?;
+        let cd = cd.to_vec::<u64>().map_err(|e| anyhow!("cd: {e:?}"))?;
+        // cd packs (c,d) as [B, 2].
+        let mut out = Vec::with_capacity(keys.len());
+        for i in 0..keys.len() {
+            out.push(PredicateHit {
+                offload: mask[i] != 0,
+                a: a[i],
+                b: b[i],
+                c: cd[2 * i],
+                d: cd[2 * i + 1],
+            });
+        }
+        Ok(out)
+    }
+
+    /// Execute the page-checksum kernel (`checksum.hlo.txt`) over a
+    /// batch of [`CHECKSUM_BATCH`] pages of [`CHECKSUM_PAGE`] bytes.
+    /// Returns one 64-bit Fletcher-style checksum per page.
+    pub fn checksum_batch(&self, pages: &[u8]) -> Result<Vec<u64>> {
+        anyhow::ensure!(
+            pages.len() == CHECKSUM_BATCH * CHECKSUM_PAGE,
+            "expected {} bytes",
+            CHECKSUM_BATCH * CHECKSUM_PAGE
+        );
+        let exe = self.kernel("checksum")?;
+        // u8 → u32 words on the rust side (stable layout for the kernel).
+        let words: Vec<u32> = pages
+            .chunks_exact(4)
+            .map(|c| u32::from_le_bytes(c.try_into().unwrap()))
+            .collect();
+        let lit = xla::Literal::vec1(&words)
+            .reshape(&[CHECKSUM_BATCH as i64, (CHECKSUM_PAGE / 4) as i64])
+            .map_err(|e| anyhow!("reshape pages: {e:?}"))?;
+        let result = exe
+            .execute::<xla::Literal>(&[lit])
+            .map_err(|e| anyhow!("execute checksum: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch: {e:?}"))?;
+        let sums = result
+            .to_tuple1()
+            .map_err(|e| anyhow!("untuple: {e:?}"))?
+            .to_vec::<u64>()
+            .map_err(|e| anyhow!("sums: {e:?}"))?;
+        Ok(sums)
+    }
+}
+
+/// One predicate-kernel result row.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PredicateHit {
+    pub offload: bool,
+    pub a: u64,
+    pub b: u64,
+    pub c: u64,
+    pub d: u64,
+}
+
+/// Reference checksum matching the kernel (and `kernels/ref.py`):
+/// Fletcher-style over little-endian u32 words, mod 2^32 lanes packed
+/// into a u64.
+pub fn checksum_ref(page: &[u8]) -> u64 {
+    let mut s1: u64 = 0;
+    let mut s2: u64 = 0;
+    for c in page.chunks_exact(4) {
+        let w = u32::from_le_bytes(c.try_into().unwrap()) as u64;
+        s1 = (s1 + w) & 0xffff_ffff;
+        s2 = (s2 + s1) & 0xffff_ffff;
+    }
+    s2 << 32 | s1
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn checksum_ref_properties() {
+        let a = checksum_ref(&[0u8; 64]);
+        assert_eq!(a, 0);
+        let mut page = vec![0u8; 64];
+        page[0] = 1;
+        let b = checksum_ref(&page);
+        assert_ne!(b, 0);
+        // Order sensitivity (s2 lane).
+        let mut p1 = vec![0u8; 8];
+        p1[0] = 1;
+        let mut p2 = vec![0u8; 8];
+        p2[4] = 1;
+        assert_ne!(checksum_ref(&p1), checksum_ref(&p2));
+    }
+
+    #[test]
+    fn artifacts_dir_env_override() {
+        // Default (no env var set in tests unless CI sets it).
+        let d = KernelRuntime::artifacts_dir();
+        assert!(d.as_os_str().len() > 0);
+    }
+}

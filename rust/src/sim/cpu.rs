@@ -1,0 +1,96 @@
+//! CPU pools: host (fast EPYC cores) vs DPU (wimpy Arm cores).
+//!
+//! A [`CpuPool`] is a thin typed layer over [`Resource`] that applies the
+//! wimpy-core slowdown when work calibrated in host-ns runs on the DPU,
+//! and converts busy time into the paper's "CPU cores consumed" metric.
+
+use super::params::Params;
+use super::resource::Resource;
+use super::Ns;
+
+/// Which silicon the pool models.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CpuKind {
+    /// Host server cores (service times used as-is).
+    Host,
+    /// DPU Arm cores (host-calibrated service times are stretched by
+    /// `Params::dpu_slowdown`).
+    Dpu,
+}
+
+/// A pool of cores with busy-time accounting.
+#[derive(Debug, Clone)]
+pub struct CpuPool {
+    res: Resource,
+    kind: CpuKind,
+    slowdown: f64,
+}
+
+impl CpuPool {
+    pub fn new(name: impl Into<String>, cores: usize, kind: CpuKind, p: &Params) -> Self {
+        CpuPool {
+            res: Resource::new(name, cores),
+            kind,
+            slowdown: p.dpu_slowdown,
+        }
+    }
+
+    /// Scale host-calibrated work to this pool's cycle time.
+    #[inline]
+    pub fn scaled(&self, host_ns: Ns) -> Ns {
+        match self.kind {
+            CpuKind::Host => host_ns,
+            CpuKind::Dpu => (host_ns as f64 * self.slowdown) as Ns,
+        }
+    }
+
+    /// Execute `host_ns` of host-calibrated work starting no earlier than
+    /// `now`; returns `(start, end)`.
+    pub fn exec(&mut self, now: Ns, host_ns: Ns) -> (Ns, Ns) {
+        let ns = self.scaled(host_ns);
+        self.res.acquire(now, ns)
+    }
+
+    pub fn kind(&self) -> CpuKind {
+        self.kind
+    }
+
+    pub fn cores_consumed(&self, horizon_ns: Ns) -> f64 {
+        self.res.cores_consumed(horizon_ns)
+    }
+
+    pub fn utilization(&self, horizon_ns: Ns) -> f64 {
+        self.res.utilization(horizon_ns)
+    }
+
+    pub fn resource(&self) -> &Resource {
+        &self.res
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dpu_is_slower() {
+        let p = Params::paper();
+        let mut host = CpuPool::new("h", 4, CpuKind::Host, &p);
+        let mut dpu = CpuPool::new("d", 4, CpuKind::Dpu, &p);
+        let (_, he) = host.exec(0, 1000);
+        let (_, de) = dpu.exec(0, 1000);
+        assert_eq!(he, 1000);
+        assert_eq!(de, (1000.0 * p.dpu_slowdown) as u64);
+    }
+
+    #[test]
+    fn cores_metric_passthrough() {
+        let p = Params::paper();
+        let mut pool = CpuPool::new("h", 8, CpuKind::Host, &p);
+        for _ in 0..1000 {
+            pool.exec(0, 1_000);
+        }
+        let cores = pool.cores_consumed(1_000_000);
+        assert!((cores - 1.0).abs() < 1e-9);
+    }
+}

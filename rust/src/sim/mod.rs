@@ -1,0 +1,35 @@
+//! Discrete-virtual-time queueing testbed.
+//!
+//! The paper's testbed (two EPYC-7325 servers, a BlueField-2 DPU, a 1 TB
+//! NVMe SSD, 100 GbE) is not available here, so every experiment that
+//! depends on hardware latencies or CPU burn is run on this calibrated
+//! simulator instead (DESIGN.md §1). The model is a tandem queueing
+//! network: each request is a *token* that walks a chain of [`Stage`]s
+//! through k-server [`Resource`]s; tokens are advanced in non-decreasing
+//! virtual-time order by the closed-loop [`Engine`]. CPU pools account
+//! busy time, which divided by the horizon yields the paper's
+//! "CPU cores consumed" metric.
+
+pub mod cpu;
+pub mod engine;
+pub mod params;
+pub mod resource;
+pub mod rng;
+
+pub use cpu::CpuPool;
+pub use engine::{Engine, FlowSpec, RunReport, Stage, StageChain};
+pub use params::Params;
+pub use resource::{Resource, ResourceId};
+pub use rng::Rng;
+
+/// Virtual time in nanoseconds.
+pub type Ns = u64;
+
+/// One second in virtual nanoseconds.
+pub const SEC: Ns = 1_000_000_000;
+
+/// One millisecond in virtual nanoseconds.
+pub const MS: Ns = 1_000_000;
+
+/// One microsecond in virtual nanoseconds.
+pub const US: Ns = 1_000;

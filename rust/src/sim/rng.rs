@@ -1,0 +1,118 @@
+//! Deterministic pseudo-random numbers for the testbed.
+//!
+//! xorshift64* — fast, no external deps, and fully deterministic so every
+//! figure regenerates identically run to run.
+
+/// Deterministic xorshift64* generator.
+#[derive(Debug, Clone)]
+pub struct Rng(u64);
+
+impl Rng {
+    /// Create a generator from a non-zero seed (zero is remapped).
+    pub fn new(seed: u64) -> Self {
+        Rng(if seed == 0 { 0x9E37_79B9_7F4A_7C15 } else { seed })
+    }
+
+    /// Next raw 64-bit value.
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let mut x = self.0;
+        x ^= x >> 12;
+        x ^= x << 25;
+        x ^= x >> 27;
+        self.0 = x;
+        x.wrapping_mul(0x2545_F491_4F6C_DD1D)
+    }
+
+    /// Uniform in `[0, 1)`.
+    #[inline]
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 / (1u64 << 53) as f64
+    }
+
+    /// Uniform integer in `[0, n)`. `n` must be non-zero.
+    #[inline]
+    pub fn next_range(&mut self, n: u64) -> u64 {
+        debug_assert!(n > 0);
+        // Multiply-shift; bias is negligible for simulation purposes.
+        ((self.next_u64() as u128 * n as u128) >> 64) as u64
+    }
+
+    /// Exponentially distributed value with the given mean.
+    #[inline]
+    pub fn exp(&mut self, mean: f64) -> f64 {
+        let u = 1.0 - self.next_f64(); // avoid ln(0)
+        -mean * u.ln()
+    }
+
+    /// Exponential service time in ns, clamped to at least 1 ns.
+    #[inline]
+    pub fn exp_ns(&mut self, mean_ns: f64) -> u64 {
+        self.exp(mean_ns).max(1.0) as u64
+    }
+
+    /// Zipf-ish skewed choice used by YCSB-style workloads: with
+    /// probability `hot_frac_access` pick uniformly among the first
+    /// `hot_n` items, otherwise uniformly among the rest.
+    pub fn hotcold(&mut self, n: u64, hot_n: u64, hot_access: f64) -> u64 {
+        if n <= 1 {
+            return 0;
+        }
+        let hot_n = hot_n.clamp(1, n);
+        if self.next_f64() < hot_access {
+            self.next_range(hot_n)
+        } else {
+            hot_n + self.next_range(n - hot_n)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..1000 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn uniform_mean() {
+        let mut r = Rng::new(7);
+        let n = 100_000;
+        let mean: f64 = (0..n).map(|_| r.next_f64()).sum::<f64>() / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean={mean}");
+    }
+
+    #[test]
+    fn exp_mean() {
+        let mut r = Rng::new(9);
+        let n = 200_000;
+        let mean: f64 = (0..n).map(|_| r.exp(100.0)).sum::<f64>() / n as f64;
+        assert!((mean - 100.0).abs() < 2.0, "mean={mean}");
+    }
+
+    #[test]
+    fn range_bounds() {
+        let mut r = Rng::new(3);
+        for _ in 0..10_000 {
+            assert!(r.next_range(17) < 17);
+        }
+    }
+
+    #[test]
+    fn hotcold_skew() {
+        let mut r = Rng::new(5);
+        let n = 100_000;
+        let hot = (0..n)
+            .map(|_| r.hotcold(1000, 100, 0.9))
+            .filter(|&k| k < 100)
+            .count();
+        let frac = hot as f64 / n as f64;
+        assert!((frac - 0.9).abs() < 0.01, "frac={frac}");
+    }
+}

@@ -1,0 +1,223 @@
+//! SPDK-like asynchronous submission/completion facade (§7: the DMA
+//! thread sends operations to SPDK workers via `spdk_thread_send_msg`;
+//! workers submit `spdk_bdev_read/write` and populate the response on
+//! completion).
+//!
+//! Worker threads execute ops against the in-memory [`Ssd`] and post
+//! [`Completion`]s to a shared queue the file service polls. With more
+//! than one worker, completions genuinely arrive out of submission
+//! order, exercising the TailA/TailB/TailC ordered-delivery logic.
+
+use std::collections::VecDeque;
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+use super::{Ssd, SsdError};
+
+/// A submitted operation. Buffers travel with the op (the functional
+/// analog of pointing the driver at request/response buffer memory).
+#[derive(Debug)]
+pub enum SsdOp {
+    Read { addr: u64, len: usize },
+    Write { addr: u64, data: Vec<u8> },
+}
+
+/// Completion posted by a worker.
+#[derive(Debug)]
+pub struct Completion {
+    /// Caller-chosen tag (e.g. response-buffer slot index).
+    pub tag: u64,
+    /// Read payload (empty for writes).
+    pub data: Vec<u8>,
+    pub result: Result<(), SsdError>,
+}
+
+enum Job {
+    Op { tag: u64, op: SsdOp },
+    Stop,
+}
+
+/// Async facade over [`Ssd`] with `workers` SPDK-like worker threads.
+///
+/// `workers == 0` selects **inline (polled) mode**: operations execute
+/// synchronously at submit time on the caller's thread and only the
+/// completion queue is deferred. This mirrors SPDK's polled-mode
+/// driver and is the right choice on few-core hosts — the perf pass
+/// found the worker handoff (mutex + context switch) dominating the
+/// single-core profile (EXPERIMENTS.md §Perf L3-3). Completions still
+/// flow through `poll()`, so callers exercise the same
+/// pending→complete machinery.
+pub struct AsyncSsd {
+    tx: Option<mpsc::Sender<Job>>,
+    /// Inline-mode execution target.
+    inline_ssd: Option<Arc<Ssd>>,
+    completions: Arc<Mutex<VecDeque<Completion>>>,
+    handles: Vec<JoinHandle<()>>,
+    workers: usize,
+}
+
+impl AsyncSsd {
+    /// Inline (polled) mode — see struct docs.
+    pub fn new_inline(ssd: Arc<Ssd>) -> Self {
+        AsyncSsd {
+            tx: None,
+            inline_ssd: Some(ssd),
+            completions: Arc::new(Mutex::new(VecDeque::new())),
+            handles: Vec::new(),
+            workers: 0,
+        }
+    }
+
+    pub fn new(ssd: Arc<Ssd>, workers: usize) -> Self {
+        if workers == 0 {
+            return Self::new_inline(ssd);
+        }
+        let (tx, rx) = mpsc::channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let completions = Arc::new(Mutex::new(VecDeque::new()));
+        let mut handles = Vec::new();
+        for _ in 0..workers {
+            let rx = rx.clone();
+            let ssd = ssd.clone();
+            let completions = completions.clone();
+            handles.push(std::thread::spawn(move || loop {
+                let job = { rx.lock().unwrap().recv() };
+                match job {
+                    Ok(Job::Op { tag, op }) => {
+                        let completion = match op {
+                            SsdOp::Read { addr, len } => {
+                                let mut buf = vec![0u8; len];
+                                let result = ssd.read_into(addr, &mut buf);
+                                Completion { tag, data: buf, result }
+                            }
+                            SsdOp::Write { addr, data } => {
+                                let result = ssd.write_from(addr, &data);
+                                Completion { tag, data: Vec::new(), result }
+                            }
+                        };
+                        completions.lock().unwrap().push_back(completion);
+                    }
+                    Ok(Job::Stop) | Err(_) => break,
+                }
+            }));
+        }
+        AsyncSsd { tx: Some(tx), inline_ssd: None, completions, handles, workers }
+    }
+
+    /// Submit an operation with a caller tag; returns immediately in
+    /// worker mode, after synchronous execution in inline mode.
+    pub fn submit(&self, tag: u64, op: SsdOp) {
+        if let Some(ssd) = &self.inline_ssd {
+            let completion = match op {
+                SsdOp::Read { addr, len } => {
+                    let mut buf = vec![0u8; len];
+                    let result = ssd.read_into(addr, &mut buf);
+                    Completion { tag, data: buf, result }
+                }
+                SsdOp::Write { addr, data } => {
+                    let result = ssd.write_from(addr, &data);
+                    Completion { tag, data: Vec::new(), result }
+                }
+            };
+            self.completions.lock().unwrap().push_back(completion);
+            return;
+        }
+        self.tx.as_ref().unwrap().send(Job::Op { tag, op }).expect("ssd workers alive");
+    }
+
+    /// Poll completed operations (drains up to `max`).
+    pub fn poll(&self, max: usize) -> Vec<Completion> {
+        let mut q = self.completions.lock().unwrap();
+        let n = q.len().min(max);
+        q.drain(..n).collect()
+    }
+
+    /// Number of worker threads.
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+}
+
+impl Drop for AsyncSsd {
+    fn drop(&mut self) {
+        if let Some(tx) = &self.tx {
+            for _ in 0..self.handles.len() {
+                let _ = tx.send(Job::Stop);
+            }
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn async_roundtrip() {
+        let ssd = Arc::new(Ssd::new(1 << 20, 512));
+        let aio = AsyncSsd::new(ssd, 2);
+        aio.submit(1, SsdOp::Write { addr: 0, data: vec![42u8; 512] });
+        // Wait for write completion.
+        let mut done = Vec::new();
+        while done.is_empty() {
+            done = aio.poll(16);
+        }
+        assert_eq!(done[0].tag, 1);
+        assert!(done[0].result.is_ok());
+
+        aio.submit(2, SsdOp::Read { addr: 0, len: 512 });
+        let mut done = Vec::new();
+        while done.is_empty() {
+            done = aio.poll(16);
+        }
+        assert_eq!(done[0].tag, 2);
+        assert_eq!(done[0].data, vec![42u8; 512]);
+    }
+
+    #[test]
+    fn many_outstanding_all_complete() {
+        let ssd = Arc::new(Ssd::new(1 << 20, 512));
+        let aio = AsyncSsd::new(ssd, 4);
+        let n = 256;
+        for i in 0..n {
+            aio.submit(i, SsdOp::Write { addr: (i % 128) * 512, data: vec![i as u8; 512] });
+        }
+        let mut tags = Vec::new();
+        while tags.len() < n as usize {
+            for c in aio.poll(64) {
+                assert!(c.result.is_ok());
+                tags.push(c.tag);
+            }
+        }
+        tags.sort_unstable();
+        assert_eq!(tags, (0..n).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn inline_mode_same_contract() {
+        let ssd = Arc::new(Ssd::new(1 << 20, 512));
+        let aio = AsyncSsd::new_inline(ssd);
+        aio.submit(1, SsdOp::Write { addr: 0, data: vec![9u8; 512] });
+        aio.submit(2, SsdOp::Read { addr: 0, len: 512 });
+        let done = aio.poll(16);
+        assert_eq!(done.len(), 2);
+        assert_eq!(done[1].data, vec![9u8; 512]);
+        assert_eq!(aio.workers(), 0);
+    }
+
+    #[test]
+    fn errors_propagate() {
+        let ssd = Arc::new(Ssd::new(4096, 512));
+        let aio = AsyncSsd::new(ssd, 1);
+        aio.submit(9, SsdOp::Read { addr: 1 << 30, len: 512 });
+        let mut done = Vec::new();
+        while done.is_empty() {
+            done = aio.poll(4);
+        }
+        assert!(done[0].result.is_err());
+    }
+}

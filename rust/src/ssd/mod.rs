@@ -1,0 +1,125 @@
+//! NVMe SSD model.
+//!
+//! The paper's storage servers carry a 1 TB NVMe SSD driven through SPDK
+//! from the DPU (§4.3, §7). Here the device is an in-memory block store
+//! with the same interface shape:
+//!
+//! * [`Ssd`] — the device: block-addressed, byte-payload reads/writes
+//!   with optional injected latency (for functional-plane timing tests).
+//! * [`AsyncSsd`] — an SPDK-like asynchronous submission/completion
+//!   facade over worker threads, used by the DPU file service to exercise
+//!   its pending→complete ordered-delivery machinery (§4.3 "Ordered
+//!   execution") against genuinely out-of-order completions.
+//!
+//! Data round-trips for real, so the whole functional plane (file system,
+//! file service, offload engine, applications) is testable end to end.
+
+mod r#async;
+
+pub use r#async::{AsyncSsd, Completion, SsdOp};
+
+use std::sync::RwLock;
+
+/// Errors surfaced by the device.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum SsdError {
+    OutOfRange { addr: u64, len: usize, capacity: u64 },
+}
+
+impl std::fmt::Display for SsdError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SsdError::OutOfRange { addr, len, capacity } => {
+                write!(f, "I/O out of range: addr={addr} len={len} capacity={capacity}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for SsdError {}
+
+/// In-memory NVMe-like block device.
+pub struct Ssd {
+    data: RwLock<Box<[u8]>>,
+    block_size: usize,
+    capacity: u64,
+}
+
+impl Ssd {
+    /// Create a device of `capacity` bytes with the given block size.
+    pub fn new(capacity: u64, block_size: usize) -> Self {
+        assert!(block_size.is_power_of_two());
+        assert_eq!(capacity % block_size as u64, 0);
+        Ssd {
+            data: RwLock::new(vec![0u8; capacity as usize].into_boxed_slice()),
+            block_size,
+            capacity,
+        }
+    }
+
+    pub fn capacity(&self) -> u64 {
+        self.capacity
+    }
+
+    pub fn block_size(&self) -> usize {
+        self.block_size
+    }
+
+    fn check(&self, addr: u64, len: usize) -> Result<(), SsdError> {
+        if addr.checked_add(len as u64).map(|e| e <= self.capacity) != Some(true) {
+            return Err(SsdError::OutOfRange { addr, len, capacity: self.capacity });
+        }
+        Ok(())
+    }
+
+    /// Read `buf.len()` bytes at `addr` directly into the caller's buffer
+    /// (the zero-copy contract of §4.3: the driver writes into the
+    /// pre-allocated response space).
+    pub fn read_into(&self, addr: u64, buf: &mut [u8]) -> Result<(), SsdError> {
+        self.check(addr, buf.len())?;
+        let data = self.data.read().unwrap();
+        buf.copy_from_slice(&data[addr as usize..addr as usize + buf.len()]);
+        Ok(())
+    }
+
+    /// Write the caller's buffer at `addr` (driver reads directly from
+    /// the request buffer — no staging copy).
+    pub fn write_from(&self, addr: u64, buf: &[u8]) -> Result<(), SsdError> {
+        self.check(addr, buf.len())?;
+        let mut data = self.data.write().unwrap();
+        data[addr as usize..addr as usize + buf.len()].copy_from_slice(buf);
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let ssd = Ssd::new(1 << 20, 512);
+        let payload: Vec<u8> = (0..4096).map(|i| (i % 251) as u8).collect();
+        ssd.write_from(8192, &payload).unwrap();
+        let mut out = vec![0u8; 4096];
+        ssd.read_into(8192, &mut out).unwrap();
+        assert_eq!(out, payload);
+    }
+
+    #[test]
+    fn bounds_checked() {
+        let ssd = Ssd::new(4096, 512);
+        let mut buf = [0u8; 64];
+        assert!(ssd.read_into(4090, &mut buf).is_err());
+        assert!(ssd.write_from(u64::MAX - 2, &buf[..8]).is_err());
+        assert!(ssd.read_into(4032, &mut buf).is_ok());
+    }
+
+    #[test]
+    fn unwritten_reads_zero() {
+        let ssd = Ssd::new(1 << 16, 512);
+        let mut buf = [0xffu8; 128];
+        ssd.read_into(0, &mut buf).unwrap();
+        assert!(buf.iter().all(|&b| b == 0));
+    }
+}

@@ -1,0 +1,184 @@
+//! Workload generators (§8.1 benchmark app, §9 YCSB / GetPage@LSN).
+
+use crate::proto::{AppRequest, NetMsg};
+use crate::sim::Rng;
+
+/// Random-file-I/O client of the §8.1 evaluation app: random offsets in
+/// a fixed file, configurable I/O size, read fraction, and batching.
+pub struct RandomIoGen {
+    pub file_id: u32,
+    pub file_bytes: u64,
+    pub io_bytes: u32,
+    /// Fraction of reads in [0,1]; the §8 experiments use 1.0 or 0.0.
+    pub read_frac: f64,
+    pub batch: usize,
+    rng: Rng,
+    next_msg: u64,
+}
+
+impl RandomIoGen {
+    pub fn new(file_id: u32, file_bytes: u64, io_bytes: u32, read_frac: f64, batch: usize, seed: u64) -> Self {
+        assert!(file_bytes >= io_bytes as u64);
+        RandomIoGen { file_id, file_bytes, io_bytes, read_frac, batch, rng: Rng::new(seed), next_msg: 1 }
+    }
+
+    /// Next batched message. Offsets are aligned to the I/O size like
+    /// page-granular storage traffic.
+    pub fn next_msg(&mut self) -> NetMsg {
+        let slots = self.file_bytes / self.io_bytes as u64;
+        let mut requests = Vec::with_capacity(self.batch);
+        for _ in 0..self.batch {
+            let offset = self.rng.next_range(slots) * self.io_bytes as u64;
+            let is_read = self.rng.next_f64() < self.read_frac;
+            requests.push(if is_read {
+                AppRequest::Read { file_id: self.file_id, offset, size: self.io_bytes }
+            } else {
+                let data = vec![(offset % 251) as u8; self.io_bytes as usize];
+                AppRequest::Write { file_id: self.file_id, offset, data }
+            });
+        }
+        let msg = NetMsg { msg_id: self.next_msg, requests };
+        self.next_msg += 1;
+        msg
+    }
+
+    /// The payload expected from a read at `offset` issued by a client
+    /// whose writer used this generator's fill pattern.
+    pub fn expected_fill(offset: u64, len: usize) -> Vec<u8> {
+        (offset..offset + len as u64).map(|i| (i % 253) as u8).collect()
+    }
+}
+
+/// YCSB-style KV workload (§9.2): uniform or hot/cold key choice.
+pub struct YcsbGen {
+    pub n_keys: u64,
+    pub read_frac: f64,
+    pub value_bytes: usize,
+    pub batch: usize,
+    /// `None` = uniform (the paper's §9.2 read workload);
+    /// `Some((hot_keys, hot_access))` = skewed.
+    pub skew: Option<(u64, f64)>,
+    rng: Rng,
+    next_msg: u64,
+}
+
+impl YcsbGen {
+    pub fn uniform(n_keys: u64, read_frac: f64, value_bytes: usize, batch: usize, seed: u64) -> Self {
+        YcsbGen { n_keys, read_frac, value_bytes, batch, skew: None, rng: Rng::new(seed), next_msg: 1 }
+    }
+
+    pub fn next_key(&mut self) -> u64 {
+        match self.skew {
+            None => self.rng.next_range(self.n_keys),
+            Some((hot, acc)) => self.rng.hotcold(self.n_keys, hot, acc),
+        }
+    }
+
+    pub fn next_msg(&mut self) -> NetMsg {
+        let mut requests = Vec::with_capacity(self.batch);
+        for _ in 0..self.batch {
+            let key = self.next_key();
+            let is_read = self.rng.next_f64() < self.read_frac;
+            requests.push(if is_read {
+                AppRequest::KvGet { key }
+            } else {
+                AppRequest::KvUpsert { key, value: vec![(key % 256) as u8; self.value_bytes] }
+            });
+        }
+        let msg = NetMsg { msg_id: self.next_msg, requests };
+        self.next_msg += 1;
+        msg
+    }
+}
+
+/// GetPage@LSN workload (§9.1): random pages; requested LSN trails the
+/// latest applied LSN so a configurable fraction is DPU-serviceable.
+pub struct GetPageGen {
+    pub n_pages: u64,
+    pub batch: usize,
+    /// Current global LSN (advance with [`GetPageGen::advance_lsn`]).
+    pub current_lsn: u64,
+    rng: Rng,
+    next_msg: u64,
+}
+
+impl GetPageGen {
+    pub fn new(n_pages: u64, batch: usize, seed: u64) -> Self {
+        GetPageGen { n_pages, batch, current_lsn: 1, rng: Rng::new(seed), next_msg: 1 }
+    }
+
+    pub fn advance_lsn(&mut self) -> u64 {
+        self.current_lsn += 1;
+        self.current_lsn
+    }
+
+    pub fn next_msg(&mut self) -> NetMsg {
+        let mut requests = Vec::with_capacity(self.batch);
+        for _ in 0..self.batch {
+            let page_id = self.rng.next_range(self.n_pages);
+            requests.push(AppRequest::GetPage { page_id, lsn: self.current_lsn });
+        }
+        let msg = NetMsg { msg_id: self.next_msg, requests };
+        self.next_msg += 1;
+        msg
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn random_io_respects_bounds_and_batch() {
+        let mut g = RandomIoGen::new(1, 1 << 20, 1024, 1.0, 16, 7);
+        for _ in 0..100 {
+            let m = g.next_msg();
+            assert_eq!(m.requests.len(), 16);
+            for r in &m.requests {
+                match r {
+                    AppRequest::Read { offset, size, .. } => {
+                        assert_eq!(offset % 1024, 0);
+                        assert!(offset + *size as u64 <= 1 << 20);
+                    }
+                    _ => panic!("read_frac=1.0 must generate only reads"),
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn msg_ids_monotonic() {
+        let mut g = RandomIoGen::new(1, 1 << 20, 512, 0.5, 1, 3);
+        let a = g.next_msg().msg_id;
+        let b = g.next_msg().msg_id;
+        assert!(b > a);
+    }
+
+    #[test]
+    fn ycsb_uniform_coverage() {
+        let mut g = YcsbGen::uniform(100, 1.0, 8, 1, 11);
+        let mut seen = std::collections::HashSet::new();
+        for _ in 0..5000 {
+            seen.insert(g.next_key());
+        }
+        assert!(seen.len() > 95, "uniform should cover keyspace: {}", seen.len());
+    }
+
+    #[test]
+    fn getpage_lsn_monotone() {
+        let mut g = GetPageGen::new(64, 4, 5);
+        let l1 = g.current_lsn;
+        g.advance_lsn();
+        assert_eq!(g.current_lsn, l1 + 1);
+        let m = g.next_msg();
+        for r in &m.requests {
+            match r {
+                AppRequest::GetPage { page_id, lsn } => {
+                    assert!(*page_id < 64);
+                    assert_eq!(*lsn, g.current_lsn);
+                }
+                _ => unreachable!(),
+            }
+        }
+    }
+}

@@ -1,0 +1,196 @@
+//! Integration: the production-system integrations of §9 — page server
+//! (Hyperscale) and MiniFaster (KV) on the full DDS stack.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use dds::apps::{FasterOffload, MiniFaster, PageServer, PageServerOffload, PAGE_SIZE};
+use dds::coordinator::{run_request, ClientConn, DisaggregatedServer, StorageServer, StorageServerConfig};
+use dds::director::AppSignature;
+use dds::dpufs::FileId;
+use dds::net::FiveTuple;
+use dds::offload::OffloadEngineConfig;
+use dds::proto::{AppRequest, NetMsg};
+
+fn tuple(port: u16) -> FiveTuple {
+    FiveTuple::new(0x0a000001, 40000, 0x0a0000ff, port)
+}
+
+fn build_page_server(n_pages: u64) -> (DisaggregatedServer<PageServer>, Arc<PageServerOffload>) {
+    let rbpex_file = FileId(1);
+    let logic = Arc::new(PageServerOffload { rbpex_file });
+    let storage =
+        StorageServer::build(StorageServerConfig::default(), Some(logic.clone())).unwrap();
+    let fe = storage.front_end();
+    let dir = fe.create_directory("db").unwrap();
+    let file = fe.create_file(dir, "rbpex").unwrap();
+    assert_eq!(file.id, rbpex_file);
+    let group = fe.create_poll().unwrap();
+    let app = PageServer::new(fe, file, group, n_pages).unwrap();
+    let server = DisaggregatedServer::new(
+        storage,
+        logic.clone(),
+        AppSignature::server_port(1433),
+        OffloadEngineConfig { pool_buf_size: PAGE_SIZE + 64, ..Default::default() },
+        app,
+    );
+    (server, logic)
+}
+
+#[test]
+fn getpage_offloads_when_lsn_fresh_enough() {
+    let (mut server, _) = build_page_server(32);
+    let mut client = ClientConn::new(tuple(1433));
+    let msg = NetMsg {
+        msg_id: 1,
+        requests: (0..8u64).map(|p| AppRequest::GetPage { page_id: p, lsn: 1 }).collect(),
+    };
+    let resps = run_request(&mut client, &mut server, &msg, Duration::from_secs(5)).unwrap();
+    assert_eq!(resps.len(), 8);
+    for (resp, req) in resps.iter().zip(&msg.requests) {
+        let AppRequest::GetPage { page_id, .. } = req else { unreachable!() };
+        assert_eq!(resp.status, 0);
+        assert_eq!(resp.payload.len(), PAGE_SIZE);
+        assert_eq!(u64::from_le_bytes(resp.payload[..8].try_into().unwrap()), *page_id);
+    }
+    assert_eq!(server.director.reqs_offloaded, 8);
+    assert_eq!(server.director.reqs_to_host, 0);
+}
+
+#[test]
+fn getpage_too_new_lsn_bounces_to_host_and_fails_cleanly() {
+    let (mut server, _) = build_page_server(8);
+    let mut client = ClientConn::new(tuple(1433));
+    // Requested LSN 99 > applied LSN 1: the predicate must not offload
+    // (cached lsn < requested), and the host rejects it (page behind).
+    let msg = NetMsg { msg_id: 2, requests: vec![AppRequest::GetPage { page_id: 3, lsn: 99 }] };
+    let resps = run_request(&mut client, &mut server, &msg, Duration::from_secs(5)).unwrap();
+    assert_eq!(server.director.reqs_offloaded, 0);
+    assert_eq!(server.director.reqs_to_host, 1);
+    assert_eq!(resps[0].status, 1, "host must refuse a page behind the LSN");
+}
+
+#[test]
+fn log_replay_refreshes_page_and_dpu_serves_new_lsn() {
+    let (mut server, _) = build_page_server(8);
+    // Replay a log record for page 5 at LSN 7.
+    server.app.replay_log(5, 7).unwrap();
+    let mut client = ClientConn::new(tuple(1433));
+    // Request at LSN 7: the write-back re-cached the page with LSN 7 →
+    // offloadable, and the payload must carry the new LSN.
+    let msg = NetMsg { msg_id: 3, requests: vec![AppRequest::GetPage { page_id: 5, lsn: 7 }] };
+    let resps = run_request(&mut client, &mut server, &msg, Duration::from_secs(5)).unwrap();
+    assert_eq!(resps[0].status, 0);
+    let lsn = u64::from_le_bytes(resps[0].payload[8..16].try_into().unwrap());
+    assert_eq!(lsn, 7);
+    assert_eq!(server.director.reqs_offloaded, 1);
+}
+
+fn build_kv(n_keys: u64) -> DisaggregatedServer<MiniFaster> {
+    let idevice = FileId(1);
+    let logic = Arc::new(FasterOffload { idevice_file: idevice });
+    let storage =
+        StorageServer::build(StorageServerConfig::default(), Some(logic.clone())).unwrap();
+    let fe = storage.front_end();
+    let dir = fe.create_directory("kv").unwrap();
+    let file = fe.create_file(dir, "idevice").unwrap();
+    assert_eq!(file.id, idevice);
+    let group = fe.create_poll().unwrap();
+    let mut kv = MiniFaster::new(fe, file, group, 4 << 10).with_cache(storage.cache.clone());
+    for k in 0..n_keys {
+        kv.upsert(k, format!("value-{k}-v1").into_bytes()).unwrap();
+    }
+    kv.flush().unwrap();
+    DisaggregatedServer::new(
+        storage,
+        logic,
+        AppSignature::server_port(6379),
+        OffloadEngineConfig::default(),
+        kv,
+    )
+}
+
+fn kv_value(payload: &[u8]) -> &[u8] {
+    // DPU path returns the whole record (header + value); host path the
+    // bare value.
+    if payload.len() > dds::apps::faster::REC_HEADER
+        && u32::from_le_bytes(payload[8..12].try_into().unwrap()) as usize
+            == payload.len() - dds::apps::faster::REC_HEADER
+    {
+        &payload[dds::apps::faster::REC_HEADER..]
+    } else {
+        payload
+    }
+}
+
+#[test]
+fn kv_gets_offload_after_flush() {
+    let mut server = build_kv(100);
+    assert_eq!(server.storage.cache.len(), 100, "flush must cache every record");
+    let mut client = ClientConn::new(tuple(6379));
+    let msg = NetMsg {
+        msg_id: 1,
+        requests: (0..10u64).map(|k| AppRequest::KvGet { key: k * 7 }).collect(),
+    };
+    let resps = run_request(&mut client, &mut server, &msg, Duration::from_secs(5)).unwrap();
+    for (resp, req) in resps.iter().zip(&msg.requests) {
+        let AppRequest::KvGet { key } = req else { unreachable!() };
+        assert_eq!(resp.status, 0);
+        assert_eq!(kv_value(&resp.payload), format!("value-{key}-v1").as_bytes());
+    }
+    assert_eq!(server.director.reqs_offloaded, 10);
+}
+
+#[test]
+fn rmw_invalidates_and_remote_read_sees_new_value() {
+    let mut server = build_kv(50);
+    // RMW key 21 on the host: bumps to v2 in the mutable tail and must
+    // invalidate the DPU entry.
+    server
+        .app
+        .rmw(21, |v| {
+            let s = String::from_utf8(v.clone()).unwrap().replace("-v1", "-v2");
+            *v = s.into_bytes();
+        })
+        .unwrap();
+    assert!(server.storage.cache.get(21).is_none(), "RMW must invalidate the key");
+
+    let mut client = ClientConn::new(tuple(6379));
+    let msg = NetMsg {
+        msg_id: 1,
+        requests: vec![AppRequest::KvGet { key: 21 }, AppRequest::KvGet { key: 22 }],
+    };
+    let resps = run_request(&mut client, &mut server, &msg, Duration::from_secs(5)).unwrap();
+    // Key 21: host path, NEW value. Key 22: DPU path, old value.
+    assert_eq!(kv_value(&resps[0].payload), b"value-21-v2");
+    assert_eq!(kv_value(&resps[1].payload), b"value-22-v1");
+    assert_eq!(server.director.reqs_offloaded, 1);
+    assert_eq!(server.director.reqs_to_host, 1);
+}
+
+#[test]
+fn missing_key_errors_via_host() {
+    let mut server = build_kv(10);
+    let mut client = ClientConn::new(tuple(6379));
+    let msg = NetMsg { msg_id: 1, requests: vec![AppRequest::KvGet { key: 12345 }] };
+    let resps = run_request(&mut client, &mut server, &msg, Duration::from_secs(5)).unwrap();
+    assert_eq!(resps[0].status, 1);
+    assert_eq!(server.director.reqs_to_host, 1);
+}
+
+#[test]
+fn upsert_then_flush_recaches_new_version() {
+    let mut server = build_kv(10);
+    // Upsert key 3 (disk → invalidate, tail holds v2), then flush →
+    // cache-on-write re-caches the NEW location.
+    server.app.upsert(3, b"value-3-v2".to_vec()).unwrap();
+    assert!(server.storage.cache.get(3).is_none());
+    server.app.flush().unwrap();
+    assert!(server.storage.cache.get(3).is_some(), "flush re-caches");
+
+    let mut client = ClientConn::new(tuple(6379));
+    let msg = NetMsg { msg_id: 9, requests: vec![AppRequest::KvGet { key: 3 }] };
+    let resps = run_request(&mut client, &mut server, &msg, Duration::from_secs(5)).unwrap();
+    assert_eq!(kv_value(&resps[0].payload), b"value-3-v2");
+    assert_eq!(server.director.reqs_offloaded, 1, "served by the DPU");
+}

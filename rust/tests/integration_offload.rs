@@ -1,0 +1,200 @@
+//! Integration: the network path + offload engine (§5, §6) — full
+//! DisaggregatedServer pumps with partial offloading.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use dds::apps::RawFileApp;
+use dds::coordinator::{run_request, ClientConn, DisaggregatedServer, StorageServer, StorageServerConfig};
+use dds::director::AppSignature;
+use dds::net::FiveTuple;
+use dds::offload::{OffloadEngineConfig, RawFileOffload};
+use dds::proto::{AppRequest, NetMsg};
+use dds::workload::RandomIoGen;
+
+const FILE_BYTES: u64 = 4 << 20;
+
+fn build(offload: bool, engine_cfg: OffloadEngineConfig) -> (DisaggregatedServer<RawFileApp>, u32) {
+    let logic = Arc::new(RawFileOffload);
+    let storage = StorageServer::build(StorageServerConfig::default(), Some(logic.clone()))
+        .expect("storage");
+    let fe = storage.front_end();
+    let dir = fe.create_directory("bench").unwrap();
+    let mut file = fe.create_file(dir, "data").unwrap();
+    let group = fe.create_poll().unwrap();
+    fe.poll_add(&mut file, &group);
+    // Fill with a deterministic pattern.
+    let chunk = 64 << 10;
+    let mut ids = Vec::new();
+    for off in (0..FILE_BYTES).step_by(chunk) {
+        let data: Vec<u8> = (off..off + chunk as u64).map(|i| (i % 253) as u8).collect();
+        loop {
+            match fe.write_file(&file, off, &data) {
+                Ok(id) => {
+                    ids.push(id);
+                    break;
+                }
+                Err(dds::filelib::LibError::RingFull) => {
+                    for ev in group.poll_wait(Duration::from_millis(10)) {
+                        ids.retain(|&x| x != ev.req_id);
+                    }
+                }
+                Err(e) => panic!("{e}"),
+            }
+        }
+    }
+    while !ids.is_empty() {
+        for ev in group.poll_wait(Duration::from_millis(20)) {
+            ids.retain(|&x| x != ev.req_id);
+        }
+    }
+    let fid = file.id.0;
+    let app = RawFileApp { client: fe, file, group };
+    let sig = AppSignature::server_port(5000);
+    let server = if offload {
+        DisaggregatedServer::new(storage, logic, sig, engine_cfg, app)
+    } else {
+        DisaggregatedServer::baseline(storage, sig, app)
+    };
+    (server, fid)
+}
+
+fn tuple() -> FiveTuple {
+    FiveTuple::new(0x0a000001, 44444, 0x0a0000ff, 5000)
+}
+
+#[test]
+fn offloaded_reads_return_correct_data() {
+    let (mut server, fid) = build(true, OffloadEngineConfig::default());
+    let mut client = ClientConn::new(tuple());
+    let mut gen = RandomIoGen::new(fid, FILE_BYTES, 1024, 1.0, 8, 3);
+    for _ in 0..20 {
+        let msg = gen.next_msg();
+        let resps = run_request(&mut client, &mut server, &msg, Duration::from_secs(5)).unwrap();
+        assert_eq!(resps.len(), msg.requests.len());
+        for (resp, req) in resps.iter().zip(&msg.requests) {
+            let AppRequest::Read { offset, size, .. } = req else { unreachable!() };
+            assert_eq!(resp.status, 0);
+            let expect: Vec<u8> =
+                (*offset..offset + *size as u64).map(|i| (i % 253) as u8).collect();
+            assert_eq!(resp.payload, expect, "offset {offset}");
+        }
+    }
+    assert!(server.director.reqs_offloaded >= 150, "reads should offload");
+    assert_eq!(server.director.reqs_to_host, 0);
+}
+
+#[test]
+fn mixed_batches_split_between_dpu_and_host() {
+    let (mut server, fid) = build(true, OffloadEngineConfig::default());
+    let mut client = ClientConn::new(tuple());
+    // Batch with interleaved reads and writes: writes must go to the
+    // host, reads to the DPU, and responses must line up per index.
+    let msg = NetMsg {
+        msg_id: 1,
+        requests: vec![
+            AppRequest::Read { file_id: fid, offset: 0, size: 64 },
+            AppRequest::Write { file_id: fid, offset: 1 << 20, data: vec![9u8; 64] },
+            AppRequest::Read { file_id: fid, offset: 1024, size: 64 },
+            AppRequest::Write { file_id: fid, offset: (1 << 20) + 64, data: vec![8u8; 64] },
+            AppRequest::Read { file_id: fid, offset: 2048, size: 64 },
+        ],
+    };
+    let resps = run_request(&mut client, &mut server, &msg, Duration::from_secs(5)).unwrap();
+    assert_eq!(resps.len(), 5);
+    for r in &resps {
+        assert_eq!(r.status, 0, "idx {}", r.idx);
+    }
+    assert_eq!(server.director.reqs_offloaded, 3);
+    assert_eq!(server.director.reqs_to_host, 2);
+    // Verify the writes actually landed by reading them back.
+    let msg2 = NetMsg {
+        msg_id: 2,
+        requests: vec![AppRequest::Read { file_id: fid, offset: 1 << 20, size: 64 }],
+    };
+    let resps = run_request(&mut client, &mut server, &msg2, Duration::from_secs(5)).unwrap();
+    assert_eq!(resps[0].payload, vec![9u8; 64]);
+}
+
+#[test]
+fn baseline_mode_sends_everything_to_host() {
+    let (mut server, fid) = build(false, OffloadEngineConfig::default());
+    let mut client = ClientConn::new(tuple());
+    let mut gen = RandomIoGen::new(fid, FILE_BYTES, 512, 1.0, 4, 9);
+    for _ in 0..5 {
+        let msg = gen.next_msg();
+        let resps = run_request(&mut client, &mut server, &msg, Duration::from_secs(5)).unwrap();
+        assert!(resps.iter().all(|r| r.status == 0));
+    }
+    assert_eq!(server.director.reqs_offloaded, 0);
+    assert_eq!(server.director.reqs_to_host, 20);
+}
+
+#[test]
+fn non_matching_flow_is_forwarded_untouched() {
+    let (mut server, _fid) = build(true, OffloadEngineConfig::default());
+    // Signature is port 5000; this flow targets port 9999.
+    let other = FiveTuple::new(0x0a000001, 44444, 0x0a0000ff, 9999);
+    let mut client = ClientConn::new(other);
+    let msg = NetMsg { msg_id: 1, requests: vec![AppRequest::KvGet { key: 1 }] };
+    let segs = client.send_msg(&msg);
+    let n_segs = segs.len() as u64;
+    let out = server.director.on_client_packets(&other, segs, &mut server.engine);
+    assert_eq!(out.forwarded, n_segs, "bump-in-the-wire passthrough");
+    assert!(out.to_client.is_empty());
+    assert_eq!(server.director.msgs_in, 0, "payload never inspected");
+}
+
+#[test]
+fn tiny_context_ring_bounces_overflow_to_host() {
+    let cfg = OffloadEngineConfig { contexts: 2, pool_bufs: 2, ..Default::default() };
+    let (mut server, fid) = build(true, cfg.clone());
+    // The default engine uses inline polled-mode SSD (completions drain
+    // at submit), so a 2-slot ring never fills. Swap in a worker-mode
+    // AsyncSsd so completions are genuinely deferred and the Fig 13
+    // ring-full bounce path (lines 5-7) triggers.
+    server.engine = dds::offload::OffloadEngine::new(
+        Arc::new(RawFileOffload),
+        server.storage.cache.clone(),
+        server.storage.dpufs.clone(),
+        dds::ssd::AsyncSsd::new(server.storage.ssd.clone(), 2),
+        cfg,
+    );
+    let mut client = ClientConn::new(tuple());
+    // 16 reads with only 2 contexts: the overflow must be served by the
+    // host — and every response must still be correct.
+    let msg = NetMsg {
+        msg_id: 7,
+        requests: (0..16u64)
+            .map(|i| AppRequest::Read { file_id: fid, offset: i * 4096, size: 256 })
+            .collect(),
+    };
+    let resps = run_request(&mut client, &mut server, &msg, Duration::from_secs(5)).unwrap();
+    assert_eq!(resps.len(), 16);
+    for (resp, req) in resps.iter().zip(&msg.requests) {
+        let AppRequest::Read { offset, size, .. } = req else { unreachable!() };
+        let expect: Vec<u8> =
+            (*offset..offset + *size as u64).map(|i| (i % 253) as u8).collect();
+        assert_eq!(resp.status, 0);
+        assert_eq!(resp.payload, expect);
+    }
+    assert!(server.director.reqs_to_host > 0, "overflow must bounce");
+    assert!(server.engine.bounced_full > 0);
+}
+
+#[test]
+fn pep_prevents_client_retransmissions() {
+    // End-to-end: after a full mixed workload, the client's TCP
+    // endpoint must have retransmitted nothing (the PEP terminates
+    // connection 1 on the DPU; offloading never creates gaps — §5.2).
+    let (mut server, fid) = build(true, OffloadEngineConfig::default());
+    let mut client = ClientConn::new(tuple());
+    let mut gen = RandomIoGen::new(fid, FILE_BYTES, 1024, 0.7, 8, 21);
+    for _ in 0..10 {
+        let msg = gen.next_msg();
+        let resps = run_request(&mut client, &mut server, &msg, Duration::from_secs(5)).unwrap();
+        assert!(resps.iter().all(|r| r.status == 0));
+    }
+    assert_eq!(client.ep.retransmitted_segments, 0);
+    assert_eq!(client.ep.dup_acks_sent, 0);
+}

@@ -1,0 +1,119 @@
+//! Integration: the L1↔L3 bridge — AOT Pallas kernels executed from
+//! rust via PJRT against the rust-native implementations.
+//!
+//! Requires `make artifacts`; every test skips (with a message) when
+//! artifacts are absent so `cargo test` works standalone.
+
+use dds::cache::{CacheItem, CuckooCache};
+use dds::runtime::{checksum_ref, KernelRuntime, CHECKSUM_BATCH, CHECKSUM_PAGE, PREDICATE_BATCH, PREDICATE_SLOTS};
+use dds::sim::Rng;
+
+fn runtime() -> Option<KernelRuntime> {
+    let dir = KernelRuntime::artifacts_dir();
+    let mut rt = KernelRuntime::cpu().ok()?;
+    match rt.load_dir(&dir) {
+        Ok(names) if !names.is_empty() => Some(rt),
+        _ => {
+            eprintln!("SKIP: no artifacts in {dir:?} — run `make artifacts`");
+            None
+        }
+    }
+}
+
+fn table_with(entries: usize, seed: u64) -> (CuckooCache, Vec<(u64, u64)>) {
+    let cache = CuckooCache::new(PREDICATE_SLOTS / 2);
+    let mut rng = Rng::new(seed);
+    let mut placed = Vec::new();
+    for _ in 0..entries {
+        let key = rng.next_range(1 << 48) + 1;
+        let lsn = rng.next_range(10_000) + 1;
+        if cache.insert(key, CacheItem::new(lsn, 7, key * 8192, 8192)) {
+            placed.push((key, lsn));
+        }
+    }
+    (cache, placed)
+}
+
+#[test]
+fn predicate_kernel_agrees_with_scalar_cuckoo() {
+    let Some(rt) = runtime() else { return };
+    for seed in [1u64, 2, 3] {
+        let (cache, placed) = table_with(PREDICATE_SLOTS / 4, seed);
+        let dense = cache.export_dense();
+        assert_eq!(dense.keys.len(), PREDICATE_SLOTS);
+        let mut rng = Rng::new(seed * 31);
+        let keys: Vec<u64> = (0..PREDICATE_BATCH)
+            .map(|i| match i % 3 {
+                0 => rng.next_range(1 << 48) + (1 << 55), // miss
+                _ => placed[rng.next_range(placed.len() as u64) as usize].0,
+            })
+            .collect();
+        let lsns: Vec<u64> = keys.iter().map(|_| rng.next_range(12_000)).collect();
+        let hits = rt.predicate_batch(&dense, &keys, &lsns).unwrap();
+        for (i, hit) in hits.iter().enumerate() {
+            let scalar = cache.get(keys[i]).filter(|item| item.a >= lsns[i]);
+            match (hit.offload, scalar) {
+                (true, Some(item)) => {
+                    assert_eq!((hit.a, hit.b, hit.c, hit.d), (item.a, item.b, item.c, item.d));
+                }
+                (false, None) => {}
+                // Kernel may miss chained entries (dense export skips
+                // chains) — conservative toward the host, never wrong.
+                (false, Some(_)) => {}
+                (true, None) => panic!("kernel offloaded a request rust rejects (i={i})"),
+            }
+        }
+    }
+}
+
+#[test]
+fn predicate_kernel_partial_batch_padding() {
+    let Some(rt) = runtime() else { return };
+    let (cache, placed) = table_with(100, 9);
+    let dense = cache.export_dense();
+    // A batch smaller than the AOT shape: padding must not fabricate
+    // offloads.
+    let keys: Vec<u64> = placed.iter().take(5).map(|(k, _)| *k).collect();
+    let lsns: Vec<u64> = placed.iter().take(5).map(|(_, l)| *l).collect();
+    let hits = rt.predicate_batch(&dense, &keys, &lsns).unwrap();
+    assert_eq!(hits.len(), 5);
+    for hit in &hits {
+        assert!(hit.offload, "exact-LSN request must offload");
+    }
+}
+
+#[test]
+fn predicate_kernel_rejects_wrong_table_size() {
+    let Some(rt) = runtime() else { return };
+    let cache = CuckooCache::new(64); // wrong dense size
+    let dense = cache.export_dense();
+    assert!(rt.predicate_batch(&dense, &[1], &[1]).is_err());
+}
+
+#[test]
+fn checksum_kernel_matches_rust_reference() {
+    let Some(rt) = runtime() else { return };
+    let mut rng = Rng::new(4);
+    let pages: Vec<u8> =
+        (0..CHECKSUM_BATCH * CHECKSUM_PAGE).map(|_| rng.next_range(256) as u8).collect();
+    let sums = rt.checksum_batch(&pages).unwrap();
+    for (i, page) in pages.chunks(CHECKSUM_PAGE).enumerate() {
+        assert_eq!(sums[i], checksum_ref(page), "page {i}");
+    }
+}
+
+#[test]
+fn checksum_kernel_detects_single_byte_flip() {
+    let Some(rt) = runtime() else { return };
+    let mut pages = vec![3u8; CHECKSUM_BATCH * CHECKSUM_PAGE];
+    let base = rt.checksum_batch(&pages).unwrap();
+    pages[5 * CHECKSUM_PAGE + 1234] ^= 0x40;
+    let flipped = rt.checksum_batch(&pages).unwrap();
+    for i in 0..CHECKSUM_BATCH {
+        if i == 5 {
+            assert_ne!(base[i], flipped[i]);
+        } else {
+            assert_eq!(base[i], flipped[i]);
+        }
+    }
+}

@@ -1,0 +1,309 @@
+//! Integration: the unified storage path (§4) end to end —
+//! host file library ⇄ DMA rings ⇄ DPU file service ⇄ file system ⇄ SSD.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use dds::coordinator::{StorageServer, StorageServerConfig};
+use dds::dpufs::{DpuFs, FsConfig};
+use dds::filelib::LibError;
+use dds::fileservice::FileServiceConfig;
+
+fn server(cfg: StorageServerConfig) -> StorageServer {
+    StorageServer::build(cfg, None).expect("build storage server")
+}
+
+fn wait_all(group: &dds::filelib::PollGroup, mut ids: Vec<u64>) -> Vec<dds::filelib::CompletionEvent> {
+    let mut out = Vec::new();
+    let deadline = std::time::Instant::now() + Duration::from_secs(10);
+    while !ids.is_empty() {
+        assert!(std::time::Instant::now() < deadline, "timed out waiting for completions");
+        for ev in group.poll_wait(Duration::from_millis(50)) {
+            ids.retain(|&id| id != ev.req_id);
+            out.push(ev);
+        }
+    }
+    out
+}
+
+#[test]
+fn write_read_roundtrip_through_rings() {
+    let s = server(StorageServerConfig::default());
+    let fe = s.front_end();
+    let dir = fe.create_directory("t").unwrap();
+    let mut f = fe.create_file(dir, "data").unwrap();
+    let g = fe.create_poll().unwrap();
+    fe.poll_add(&mut f, &g);
+
+    let payload: Vec<u8> = (0..50_000).map(|i| (i % 251) as u8).collect();
+    let w = fe.write_file(&f, 1234, &payload).unwrap();
+    let evs = wait_all(&g, vec![w]);
+    assert!(evs[0].ok);
+
+    let r = fe.read_file(&f, 1234, payload.len() as u32).unwrap();
+    let evs = wait_all(&g, vec![r]);
+    assert!(evs[0].ok);
+    assert_eq!(evs[0].data, payload);
+}
+
+#[test]
+fn many_outstanding_requests_ordered_and_complete() {
+    let s = server(StorageServerConfig::default());
+    let fe = s.front_end();
+    let dir = fe.create_directory("t").unwrap();
+    let mut f = fe.create_file(dir, "data").unwrap();
+    let g = fe.create_poll().unwrap();
+    fe.poll_add(&mut f, &g);
+
+    // Preallocate and fill.
+    let n = 200u64;
+    let io = 512u32;
+    fe.ensure_size(&f, n * io as u64).unwrap();
+    let mut ids = Vec::new();
+    for i in 0..n {
+        let data = vec![(i % 256) as u8; io as usize];
+        loop {
+            match fe.write_file(&f, i * io as u64, &data) {
+                Ok(id) => {
+                    ids.push(id);
+                    break;
+                }
+                Err(LibError::RingFull) => {
+                    let _ = g.poll_wait(Duration::from_millis(5));
+                    ids.retain(|_| true);
+                    // Drain bookkeeping: wait_all at the end picks up rest.
+                    for ev in g.poll_wait(Duration::from_millis(5)) {
+                        ids.retain(|&x| x != ev.req_id);
+                    }
+                }
+                Err(e) => panic!("{e}"),
+            }
+        }
+    }
+    wait_all(&g, ids);
+
+    // Read everything back, many outstanding.
+    let mut ids = Vec::new();
+    for i in 0..n {
+        loop {
+            match fe.read_file(&f, i * io as u64, io) {
+                Ok(id) => {
+                    ids.push((i, id));
+                    break;
+                }
+                Err(LibError::RingFull) => {
+                    std::thread::yield_now();
+                    for _ev in g.poll_wait(Duration::from_millis(5)) {}
+                }
+                Err(e) => panic!("{e}"),
+            }
+        }
+    }
+    // Collect and verify each read's content matches its offset.
+    let mut remaining: std::collections::HashMap<u64, u64> = ids.iter().map(|&(i, id)| (id, i)).collect();
+    let deadline = std::time::Instant::now() + Duration::from_secs(10);
+    while !remaining.is_empty() {
+        assert!(std::time::Instant::now() < deadline, "timeout");
+        for ev in g.poll_wait(Duration::from_millis(50)) {
+            if let Some(i) = remaining.remove(&ev.req_id) {
+                assert!(ev.ok);
+                assert!(ev.data.iter().all(|&b| b == (i % 256) as u8), "data mismatch at {i}");
+            }
+        }
+    }
+}
+
+#[test]
+fn concurrent_host_threads_share_one_group() {
+    let s = server(StorageServerConfig::default());
+    let fe = Arc::new(s.front_end());
+    let dir = fe.create_directory("t").unwrap();
+    let mut f = fe.create_file(dir, "data").unwrap();
+    let g = fe.create_poll().unwrap();
+    fe.poll_add(&mut f, &g);
+    fe.ensure_size(&f, 1 << 20).unwrap();
+    let f = Arc::new(f);
+
+    // 4 producer threads issue interleaved writes; a collector thread
+    // polls the shared group (multi-producer request ring +
+    // multi-consumer response ring).
+    let mut handles = Vec::new();
+    let issued = Arc::new(std::sync::Mutex::new(std::collections::HashSet::new()));
+    for tix in 0..4u64 {
+        let fe = fe.clone();
+        let f = f.clone();
+        let g = g.clone();
+        let issued = issued.clone();
+        handles.push(std::thread::spawn(move || {
+            for i in 0..50u64 {
+                let off = (tix * 50 + i) * 1024;
+                let data = vec![(tix + 1) as u8; 1024];
+                loop {
+                    match fe.write_file(&f, off, &data) {
+                        Ok(id) => {
+                            issued.lock().unwrap().insert(id);
+                            break;
+                        }
+                        Err(LibError::RingFull) => std::thread::yield_now(),
+                        Err(e) => panic!("{e}"),
+                    }
+                }
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    let mut pending: std::collections::HashSet<u64> = issued.lock().unwrap().clone();
+    let deadline = std::time::Instant::now() + Duration::from_secs(10);
+    while !pending.is_empty() {
+        assert!(std::time::Instant::now() < deadline, "timeout");
+        for ev in g.poll_wait(Duration::from_millis(50)) {
+            assert!(ev.ok);
+            pending.remove(&ev.req_id);
+        }
+    }
+}
+
+#[test]
+fn gathered_write_scattered_read() {
+    let s = server(StorageServerConfig::default());
+    let fe = s.front_end();
+    let dir = fe.create_directory("t").unwrap();
+    let mut f = fe.create_file(dir, "gs").unwrap();
+    let g = fe.create_poll().unwrap();
+    fe.poll_add(&mut f, &g);
+
+    let a = vec![1u8; 100];
+    let b = vec![2u8; 200];
+    let c = vec![3u8; 50];
+    let w = fe.gather_write(&f, 0, &[&a, &b, &c]).unwrap();
+    wait_all(&g, vec![w]);
+
+    let r = fe.scatter_read(&f, 0, &[100, 200, 50]).unwrap();
+    let evs = wait_all(&g, vec![r]);
+    let parts = evs[0].scatter();
+    assert_eq!(parts[0], &a[..]);
+    assert_eq!(parts[1], &b[..]);
+    assert_eq!(parts[2], &c[..]);
+}
+
+#[test]
+fn out_of_range_read_reports_error_not_hang() {
+    let s = server(StorageServerConfig::default());
+    let fe = s.front_end();
+    let dir = fe.create_directory("t").unwrap();
+    let mut f = fe.create_file(dir, "small").unwrap();
+    let g = fe.create_poll().unwrap();
+    fe.poll_add(&mut f, &g);
+    let w = fe.write_file(&f, 0, &[1u8; 100]).unwrap();
+    wait_all(&g, vec![w]);
+
+    let r = fe.read_file(&f, 90, 100).unwrap(); // beyond EOF
+    let evs = wait_all(&g, vec![r]);
+    assert!(!evs[0].ok, "out-of-range read must complete with an error");
+}
+
+#[test]
+fn too_large_write_rejected_cleanly() {
+    let s = server(StorageServerConfig::default());
+    let fe = s.front_end();
+    let dir = fe.create_directory("t").unwrap();
+    let mut f = fe.create_file(dir, "big").unwrap();
+    let g = fe.create_poll().unwrap();
+    fe.poll_add(&mut f, &g);
+    let huge = vec![0u8; 1 << 20];
+    match fe.write_file(&f, 0, &huge) {
+        Err(LibError::TooLarge { .. }) => {}
+        other => panic!("expected TooLarge, got {other:?}"),
+    }
+    assert_eq!(g.in_flight(), 0, "failed issue must not leak bookkeeping");
+}
+
+#[test]
+fn delivery_batching_still_delivers_everything() {
+    // TailB - TailC >= batch threshold before DMA-write (§4.3).
+    let mut cfg = StorageServerConfig::default();
+    cfg.service = FileServiceConfig { delivery_batch: 16, ..Default::default() };
+    let s = server(cfg);
+    let fe = s.front_end();
+    let dir = fe.create_directory("t").unwrap();
+    let mut f = fe.create_file(dir, "batched").unwrap();
+    let g = fe.create_poll().unwrap();
+    fe.poll_add(&mut f, &g);
+    fe.ensure_size(&f, 1 << 20).unwrap();
+    let ids: Vec<u64> =
+        (0..64u64).map(|i| fe.read_file(&f, i * 512, 512).unwrap()).collect();
+    wait_all(&g, ids);
+}
+
+#[test]
+fn extra_copy_mode_is_functionally_identical() {
+    let mut cfg = StorageServerConfig::default();
+    cfg.service = FileServiceConfig { extra_copy: true, ..Default::default() };
+    let s = server(cfg);
+    let fe = s.front_end();
+    let dir = fe.create_directory("t").unwrap();
+    let mut f = fe.create_file(dir, "copy").unwrap();
+    let g = fe.create_poll().unwrap();
+    fe.poll_add(&mut f, &g);
+    let payload: Vec<u8> = (0..10_000).map(|i| (i % 241) as u8).collect();
+    let w = fe.write_file(&f, 5, &payload).unwrap();
+    wait_all(&g, vec![w]);
+    let r = fe.read_file(&f, 5, payload.len() as u32).unwrap();
+    let evs = wait_all(&g, vec![r]);
+    assert_eq!(evs[0].data, payload);
+}
+
+#[test]
+fn worker_mode_out_of_order_completions_delivered_in_order() {
+    // ssd_workers > 0 → genuinely out-of-order completions; the
+    // TailA/B/C staging must still deliver responses in request order
+    // and nothing may be lost.
+    let mut cfg = StorageServerConfig::default();
+    cfg.service = FileServiceConfig { ssd_workers: 3, ..Default::default() };
+    let s = server(cfg);
+    let fe = s.front_end();
+    let dir = fe.create_directory("t").unwrap();
+    let mut f = fe.create_file(dir, "ooo").unwrap();
+    let g = fe.create_poll().unwrap();
+    fe.poll_add(&mut f, &g);
+    fe.ensure_size(&f, 1 << 20).unwrap();
+    let ids: Vec<u64> =
+        (0..128u64).map(|i| fe.read_file(&f, i * 4096, 1024).unwrap()).collect();
+    // Responses arrive in request order on the response ring; the
+    // library hands them out as polled. Verify order by req id
+    // monotonicity of the drain.
+    let mut seen = Vec::new();
+    let deadline = std::time::Instant::now() + Duration::from_secs(10);
+    while seen.len() < ids.len() {
+        assert!(std::time::Instant::now() < deadline, "timeout");
+        for ev in g.poll_wait(Duration::from_millis(50)) {
+            assert!(ev.ok);
+            seen.push(ev.req_id);
+        }
+    }
+    assert_eq!(seen, ids, "responses must be delivered in request order");
+}
+
+#[test]
+fn metadata_persists_across_remount() {
+    // Build a server, write, sync metadata, then remount the same
+    // device image with a fresh DpuFs and read directly.
+    let s = server(StorageServerConfig::default());
+    let fe = s.front_end();
+    let dir = fe.create_directory("db").unwrap();
+    let mut f = fe.create_file(dir, "f").unwrap();
+    let g = fe.create_poll().unwrap();
+    fe.poll_add(&mut f, &g);
+    let payload = vec![0x5au8; 4096];
+    let w = fe.write_file(&f, 8192, &payload).unwrap();
+    wait_all(&g, vec![w]);
+    fe.sync_metadata().unwrap();
+
+    let ssd = s.ssd.clone();
+    let fs2 = DpuFs::mount(ssd, FsConfig::default()).expect("remount");
+    let mut out = vec![0u8; 4096];
+    fs2.read(f.id, 8192, &mut out).unwrap();
+    assert_eq!(out, payload);
+}

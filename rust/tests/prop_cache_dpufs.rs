@@ -1,0 +1,181 @@
+//! Property tests: cuckoo cache table vs a HashMap model, and the DPU
+//! file system vs a flat byte-array model. (Hand-rolled generators —
+//! no proptest offline; seeds printed on failure.)
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use dds::cache::{CacheItem, CuckooCache};
+use dds::dpufs::{DpuFs, FsConfig};
+use dds::sim::Rng;
+use dds::ssd::Ssd;
+
+#[test]
+fn cache_matches_hashmap_model() {
+    for seed in 1..=15u64 {
+        let mut rng = Rng::new(seed);
+        let cap = 512usize;
+        let table = CuckooCache::new(cap);
+        let mut model: HashMap<u64, CacheItem> = HashMap::new();
+        for step in 0..5000 {
+            let key = 1 + rng.next_range(300);
+            match rng.next_range(10) {
+                0..=4 => {
+                    let item = CacheItem::new(rng.next_u64(), rng.next_u64(), step, key);
+                    let want_ok = model.contains_key(&key) || model.len() < cap;
+                    let ok = table.insert(key, item);
+                    assert_eq!(ok, want_ok, "seed {seed} step {step}: insert admission");
+                    if ok {
+                        model.insert(key, item);
+                    }
+                }
+                5..=7 => {
+                    assert_eq!(
+                        table.get(key),
+                        model.get(&key).copied(),
+                        "seed {seed} step {step}: get({key})"
+                    );
+                }
+                _ => {
+                    assert_eq!(
+                        table.remove(key),
+                        model.remove(&key).is_some(),
+                        "seed {seed} step {step}: remove({key})"
+                    );
+                }
+            }
+            assert_eq!(table.len(), model.len(), "seed {seed} step {step}: len");
+        }
+        // Final full-content check.
+        for (k, v) in &model {
+            assert_eq!(table.get(*k), Some(*v), "seed {seed}: final get({k})");
+        }
+    }
+}
+
+#[test]
+fn cache_dense_export_covers_slot_entries() {
+    for seed in 20..=25u64 {
+        let mut rng = Rng::new(seed);
+        let table = CuckooCache::new(1024);
+        let mut keys = Vec::new();
+        for _ in 0..700 {
+            let k = 1 + rng.next_range(1 << 40);
+            if table.insert(k, CacheItem::new(k, 1, 2, 3)) {
+                keys.push(k);
+            }
+        }
+        let dense = table.export_dense();
+        let stats = table.stats();
+        let exported = dense.keys.iter().filter(|&&k| k != dds::cache::EMPTY).count();
+        assert_eq!(exported, stats.slot_items, "seed {seed}");
+        // Every exported key sits in one of its two hash buckets and
+        // carries its item.
+        for (flat, &k) in dense.keys.iter().enumerate() {
+            if k == dds::cache::EMPTY {
+                continue;
+            }
+            assert_eq!(dense.items[flat * 4], k, "seed {seed}: item a");
+            let item = table.get(k).expect("exported key must be present");
+            assert_eq!(item.a, k);
+        }
+    }
+}
+
+#[test]
+fn dpufs_matches_flat_file_model() {
+    for seed in 1..=8u64 {
+        let mut rng = Rng::new(seed);
+        let ssd = Arc::new(Ssd::new(32 << 20, 512));
+        let mut fs = DpuFs::format(ssd, FsConfig { segment_size: 1 << 18 }).unwrap();
+        let dir = fs.create_directory("d").unwrap();
+        let file = fs.create_file(dir, "f").unwrap();
+        let max = 4 << 20;
+        let mut model = vec![0u8; max];
+        let mut written_end = 0usize;
+        for step in 0..300 {
+            let off = rng.next_range((max - 1) as u64) as usize;
+            let len = 1 + rng.next_range(20_000.min((max - off) as u64)) as usize;
+            if rng.next_f64() < 0.6 {
+                let data: Vec<u8> = (0..len).map(|_| rng.next_range(256) as u8).collect();
+                fs.write(file, off as u64, &data).unwrap();
+                model[off..off + len].copy_from_slice(&data);
+                written_end = written_end.max(off + len);
+            } else if written_end > 0 {
+                let off = off.min(written_end - 1);
+                let len = len.min(written_end - off);
+                let mut out = vec![0u8; len];
+                fs.read(file, off as u64, &mut out).unwrap();
+                assert_eq!(
+                    out,
+                    &model[off..off + len],
+                    "seed {seed} step {step}: read({off},{len})"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn dpufs_extents_partition_every_request() {
+    for seed in 30..=36u64 {
+        let mut rng = Rng::new(seed);
+        let ssd = Arc::new(Ssd::new(32 << 20, 512));
+        let mut fs = DpuFs::format(ssd, FsConfig { segment_size: 1 << 16 }).unwrap();
+        let dir = fs.create_directory("d").unwrap();
+        let file = fs.create_file(dir, "f").unwrap();
+        fs.ensure_size(file, 8 << 20).unwrap();
+        let seg = 1u64 << 16;
+        for _ in 0..500 {
+            let off = rng.next_range(8 << 20);
+            let len = 1 + rng.next_range((8 << 20) - off);
+            let extents = fs.map_extents(file, off, len).unwrap();
+            // Lengths sum to the request.
+            assert_eq!(extents.iter().map(|e| e.len).sum::<u64>(), len, "seed {seed}");
+            // No extent crosses a segment boundary; none lands in the
+            // metadata segment.
+            for e in &extents {
+                assert!(e.addr >= seg, "seed {seed}: extent in metadata segment");
+                assert_eq!(
+                    e.addr / seg,
+                    (e.addr + e.len - 1) / seg,
+                    "seed {seed}: extent crosses a segment"
+                );
+            }
+            // Interior extents are segment-aligned runs.
+            for w in extents.windows(2) {
+                assert_eq!((w[1].addr) % seg, 0, "seed {seed}: follow-up extent misaligned");
+            }
+        }
+    }
+}
+
+#[test]
+fn dpufs_mount_roundtrip_random_trees() {
+    for seed in 40..=45u64 {
+        let mut rng = Rng::new(seed);
+        let ssd = Arc::new(Ssd::new(32 << 20, 512));
+        let mut files = Vec::new();
+        {
+            let mut fs = DpuFs::format(ssd.clone(), FsConfig::default()).unwrap();
+            for d in 0..1 + rng.next_range(4) {
+                let dir = fs.create_directory(&format!("dir{d}")).unwrap();
+                for f in 0..1 + rng.next_range(5) {
+                    let id = fs.create_file(dir, &format!("file{f}")).unwrap();
+                    let len = 1 + rng.next_range(100_000) as usize;
+                    let fill = (seed + d + f) as u8;
+                    fs.write(id, 0, &vec![fill; len]).unwrap();
+                    files.push((id, len, fill));
+                }
+            }
+            fs.sync_metadata().unwrap();
+        }
+        let fs = DpuFs::mount(ssd, FsConfig::default()).unwrap();
+        for (id, len, fill) in files {
+            let mut out = vec![0u8; len];
+            fs.read(id, 0, &mut out).unwrap();
+            assert!(out.iter().all(|&b| b == fill), "seed {seed}: file {id:?}");
+            assert_eq!(fs.file_meta(id).unwrap().size, len as u64);
+        }
+    }
+}

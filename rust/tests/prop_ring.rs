@@ -1,0 +1,209 @@
+//! Property tests for the ring buffers (hand-rolled generator — this
+//! offline environment has no proptest; `dds::sim::Rng` provides the
+//! deterministic randomness, and every case prints its seed on failure).
+
+use std::collections::VecDeque;
+
+use dds::dma::DmaChannel;
+use dds::ring::{FarmRing, LockedRing, ProgressRing, RequestRing, ResponseRing, RingStatus};
+use dds::sim::Rng;
+
+/// Model-based check: a ring driven by a random push/pop schedule must
+/// behave exactly like a bounded FIFO queue.
+fn check_against_model(ring: &dyn RequestRing, seed: u64, can_reject_any: bool) {
+    let mut rng = Rng::new(seed);
+    let mut model: VecDeque<Vec<u8>> = VecDeque::new();
+    let mut next = 0u64;
+    for step in 0..3000 {
+        if rng.next_f64() < 0.6 {
+            // Push a random-size message.
+            let len = 1 + rng.next_range(64) as usize;
+            let mut msg = vec![0u8; len];
+            msg[..8.min(len)].copy_from_slice(&next.to_le_bytes()[..8.min(len)]);
+            match ring.try_push(&msg) {
+                RingStatus::Ok => {
+                    model.push_back(msg);
+                    next += 1;
+                }
+                RingStatus::Retry => {
+                    // Backpressure is allowed; it must not lose data.
+                    assert!(
+                        can_reject_any || !model.is_empty(),
+                        "seed {seed} step {step}: empty ring rejected a push"
+                    );
+                }
+                RingStatus::Empty => unreachable!(),
+            }
+        } else {
+            let mut got: Vec<Vec<u8>> = Vec::new();
+            ring.pop_batch(&mut |m| got.push(m.to_vec()));
+            for g in got {
+                let want = model
+                    .pop_front()
+                    .unwrap_or_else(|| panic!("seed {seed} step {step}: spurious message"));
+                assert_eq!(g, want, "seed {seed} step {step}: FIFO violated");
+            }
+        }
+    }
+    // Drain and confirm nothing is lost.
+    let mut tail: Vec<Vec<u8>> = Vec::new();
+    for _ in 0..1000 {
+        ring.pop_batch(&mut |m| tail.push(m.to_vec()));
+        if model.len() == tail.len() {
+            break;
+        }
+    }
+    assert_eq!(tail.len(), model.len(), "seed {seed}: lost messages at drain");
+    for (g, want) in tail.iter().zip(model.iter()) {
+        assert_eq!(g, want, "seed {seed}: tail drain mismatch");
+    }
+}
+
+#[test]
+fn progress_ring_matches_fifo_model() {
+    for seed in 1..=20u64 {
+        let ring = ProgressRing::new(1 << 12, 1 << 10);
+        check_against_model(&ring, seed, false);
+    }
+}
+
+#[test]
+fn farm_ring_matches_fifo_model() {
+    for seed in 1..=20u64 {
+        let ring = FarmRing::new(64, 80);
+        check_against_model(&ring, seed, false);
+    }
+}
+
+#[test]
+fn locked_ring_matches_fifo_model() {
+    for seed in 1..=20u64 {
+        let ring = LockedRing::new(256);
+        check_against_model(&ring, seed, false);
+    }
+}
+
+/// Invariant: the progress ring's backlog never exceeds M, for any
+/// schedule.
+#[test]
+fn progress_backlog_bounded_by_max_progress() {
+    for seed in 30..=45u64 {
+        let m = 256usize;
+        let ring = ProgressRing::new(1 << 12, m);
+        let mut rng = Rng::new(seed);
+        for _ in 0..2000 {
+            if rng.next_f64() < 0.7 {
+                let len = 1 + rng.next_range(32) as usize;
+                let _ = ring.try_push(&vec![7u8; len]);
+            } else {
+                ring.pop_batch(&mut |_| {});
+            }
+            assert!(
+                ring.backlog() <= m as u64,
+                "seed {seed}: backlog {} > M {m}",
+                ring.backlog()
+            );
+        }
+    }
+}
+
+/// Invariant: a batched drain costs exactly 3 DMA ops regardless of
+/// batch size (the §4.1 design claim).
+#[test]
+fn progress_drain_dma_cost_constant() {
+    for batch in [1usize, 2, 7, 30] {
+        let ring = ProgressRing::new(1 << 12, 1 << 10);
+        for i in 0..batch {
+            assert_eq!(ring.try_push(&[i as u8; 8]), RingStatus::Ok);
+        }
+        let dma = DmaChannel::new();
+        let mut n = 0;
+        ring.pop_batch_dma(&dma, &mut |_| n += 1);
+        assert_eq!(n, batch);
+        assert_eq!(dma.reads(), 2, "batch {batch}");
+        assert_eq!(dma.writes(), 1, "batch {batch}");
+    }
+}
+
+/// Response ring (SPMC): random interleavings of one producer and
+/// model-checked claims; every record delivered exactly once, in order
+/// for a single consumer.
+#[test]
+fn response_ring_fifo_and_exactly_once() {
+    for seed in 50..=60u64 {
+        let ring = ResponseRing::new(1 << 12);
+        let mut rng = Rng::new(seed);
+        let mut model: VecDeque<u64> = VecDeque::new();
+        let mut next = 0u64;
+        for _ in 0..2000 {
+            if rng.next_f64() < 0.55 {
+                if ring.push(&next.to_le_bytes()) == RingStatus::Ok {
+                    model.push_back(next);
+                    next += 1;
+                }
+            } else {
+                let mut got = None;
+                if ring.pop(&mut |m| got = Some(u64::from_le_bytes(m.try_into().unwrap())))
+                    == RingStatus::Ok
+                {
+                    assert_eq!(got, model.pop_front(), "seed {seed}");
+                }
+            }
+        }
+        while ring.pop(&mut |m| {
+            let v = u64::from_le_bytes(m.try_into().unwrap());
+            assert_eq!(Some(v), model.pop_front());
+        }) == RingStatus::Ok
+        {}
+        assert!(model.is_empty(), "seed {seed}: records lost");
+    }
+}
+
+/// Concurrent smoke under the single-core scheduler: preemption still
+/// interleaves producers mid-insert, exercising the progress-pointer
+/// publish ordering.
+#[test]
+fn progress_ring_concurrent_interleavings() {
+    use std::sync::Arc;
+    let ring = Arc::new(ProgressRing::new(1 << 14, 1 << 10));
+    let producers = 4;
+    let per = 2_000u64;
+    let mut handles = Vec::new();
+    for p in 0..producers {
+        let ring = ring.clone();
+        handles.push(std::thread::spawn(move || {
+            for i in 0..per {
+                let v = (p as u64) << 32 | i;
+                loop {
+                    if ring.try_push(&v.to_le_bytes()) == RingStatus::Ok {
+                        break;
+                    }
+                    std::thread::yield_now();
+                }
+            }
+        }));
+    }
+    let consumer = {
+        let ring = ring.clone();
+        std::thread::spawn(move || {
+            let mut seen = vec![0u64; producers];
+            let mut total = 0u64;
+            while total < per * producers as u64 {
+                let n = ring.pop_batch(&mut |m| {
+                    let v = u64::from_le_bytes(m.try_into().unwrap());
+                    let p = (v >> 32) as usize;
+                    assert_eq!(v & 0xffff_ffff, seen[p], "per-producer FIFO violated");
+                    seen[p] += 1;
+                });
+                if n == 0 {
+                    std::thread::yield_now();
+                }
+                total += n as u64;
+            }
+        })
+    };
+    for h in handles {
+        h.join().unwrap();
+    }
+    consumer.join().unwrap();
+}
