@@ -8,6 +8,8 @@ no tolerance needed).
 
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")  # skip, don't abort collection, when absent
 from hypothesis import given, settings, strategies as st
 
 from compile.kernels import ref

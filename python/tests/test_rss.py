@@ -2,6 +2,9 @@
 rust scalar implementation guarantees (same key, same normalization)."""
 
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")  # skip, don't abort collection, when absent
 from hypothesis import given, settings, strategies as st
 
 from compile.kernels.rss import normalize_tuple, rss_core_batch, toeplitz_hash_batch

@@ -29,15 +29,55 @@ pub struct RawFileApp {
 }
 
 impl RawFileApp {
+    /// Total wall-clock budget for one batch before the missing
+    /// completions are surfaced as errors instead of waiting forever.
+    pub const BATCH_TIMEOUT: Duration = Duration::from_secs(5);
+
+    /// The canonical host-app factory (one per shard in the sharded
+    /// deployment): a fresh front end and a dedicated poll group over
+    /// an existing file, so the file service gets one notification
+    /// group per app instance to drain.
+    pub fn over(
+        storage: &crate::coordinator::StorageServer,
+        file: &DdsFile,
+    ) -> anyhow::Result<RawFileApp> {
+        let client = storage.front_end();
+        let mut file = file.clone();
+        let group = client.create_poll().map_err(|e| anyhow::anyhow!("{e}"))?;
+        client.poll_add(&mut file, &group);
+        Ok(RawFileApp { client, file, group })
+    }
+
     /// Issue a whole batch, then poll until every completion arrives
     /// (sleeping mode — zero CPU while waiting, §4.2).
+    ///
+    /// The wait is bounded: [`Self::BATCH_TIMEOUT`] without *any*
+    /// progress (the budget resets on every completion, so a large but
+    /// steadily-completing batch is never cut off) means the remaining
+    /// operations are lost — they are reported as failed
+    /// (`ok == false`) rather than spinning on `poll_wait` forever.
     fn run_batch(&mut self, ops: Vec<(u16, u64)>) -> Vec<(u16, bool, Vec<u8>)> {
         let mut remaining = ops.len();
         let mut by_req: std::collections::HashMap<u64, u16> =
             ops.into_iter().map(|(idx, req_id)| (req_id, idx)).collect();
         let mut out = Vec::with_capacity(remaining);
+        let mut deadline = std::time::Instant::now() + Self::BATCH_TIMEOUT;
         while remaining > 0 {
-            for ev in self.group.poll_wait(Duration::from_secs(5)) {
+            let now = std::time::Instant::now();
+            if now >= deadline {
+                // Stalled: surface an error per lost operation.
+                for (_req_id, idx) in by_req.drain() {
+                    out.push((idx, false, Vec::new()));
+                }
+                break;
+            }
+            let wait = (deadline - now).min(Duration::from_millis(250));
+            let events = self.group.poll_wait(wait);
+            if !events.is_empty() {
+                // Progress: reset the stall budget.
+                deadline = std::time::Instant::now() + Self::BATCH_TIMEOUT;
+            }
+            for ev in events {
                 if let Some(idx) = by_req.remove(&ev.req_id) {
                     out.push((idx, ev.ok, ev.data));
                     remaining -= 1;

@@ -9,6 +9,21 @@
 //! application, all pumpable from an in-process [`ClientConn`]. This is
 //! the full DDS deployment used by the examples and integration tests:
 //! client → (TCP) → DPU director → {offload engine | host app} → client.
+//! It is the N = 1, single-flow, synchronous special case of the
+//! sharded data plane.
+//!
+//! [`ShardedServer`] (in [`sharded`]) is the N-core generalization
+//! (§7): RSS steers every flow to one of N share-nothing shards, each
+//! running the whole DPU data path — per-flow split-TCP PEPs, its own
+//! offload engine over its own SSD queue, and its own host-app
+//! instance draining a dedicated file-service poll group — on its own
+//! OS thread.
+
+pub mod sharded;
+
+pub use sharded::{
+    run_sharded_request, tuple_for_shard, ShardDriver, ShardedServer, ShardedServerConfig,
+};
 
 use std::sync::{mpsc, Arc, RwLock};
 
@@ -87,6 +102,103 @@ impl StorageServer {
     pub fn engine_aio(&self) -> AsyncSsd {
         AsyncSsd::new_inline(self.ssd.clone())
     }
+
+    /// Per-shard SPDK-like queues over the shared device (§7): each
+    /// shard's engine submits and polls on its own queue, so shards
+    /// never contend on a shared submission/completion queue.
+    /// `workers_per_queue == 0` keeps every queue in inline polled mode.
+    pub fn shard_aios(&self, shards: usize, workers_per_queue: usize) -> Vec<AsyncSsd> {
+        AsyncSsd::shard_queues(&self.ssd, shards, workers_per_queue)
+    }
+
+    /// Create `dir_name/file_name` and fill it with the deterministic
+    /// benchmark pattern (`i % 253` — the one
+    /// [`crate::workload::RandomIoGen::expected_fill`] reproduces)
+    /// using ring-friendly chunked writes with `RingFull`
+    /// backpressure. The canonical setup step of the benches, tests,
+    /// examples, and the `serve` CLI.
+    pub fn create_filled_file(
+        &self,
+        dir_name: &str,
+        file_name: &str,
+        bytes: u64,
+    ) -> anyhow::Result<crate::filelib::DdsFile> {
+        use std::time::Duration;
+        let fe = self.front_end();
+        let dir = fe.create_directory(dir_name).map_err(|e| anyhow::anyhow!("{e}"))?;
+        let mut file = fe.create_file(dir, file_name).map_err(|e| anyhow::anyhow!("{e}"))?;
+        let group = fe.create_poll().map_err(|e| anyhow::anyhow!("{e}"))?;
+        fe.poll_add(&mut file, &group);
+        let chunk = 64usize << 10;
+        let mut pending = std::collections::HashSet::new();
+        let deadline = std::time::Instant::now() + Duration::from_secs(60);
+        for off in (0..bytes).step_by(chunk) {
+            let len = chunk.min((bytes - off) as usize);
+            let data: Vec<u8> = (off..off + len as u64).map(|i| (i % 253) as u8).collect();
+            // Non-blocking issue with RingFull backpressure: drain
+            // completions until the ring admits the next write.
+            loop {
+                match fe.write_file(&file, off, &data) {
+                    Ok(id) => {
+                        pending.insert(id);
+                        break;
+                    }
+                    Err(crate::filelib::LibError::RingFull) => {
+                        for ev in group.poll_wait(Duration::from_millis(10)) {
+                            anyhow::ensure!(ev.ok, "fill write failed");
+                            pending.remove(&ev.req_id);
+                        }
+                        anyhow::ensure!(
+                            std::time::Instant::now() < deadline,
+                            "fill stalled on ring backpressure"
+                        );
+                    }
+                    Err(e) => anyhow::bail!("fill write: {e}"),
+                }
+            }
+        }
+        while !pending.is_empty() {
+            for ev in group.poll_wait(Duration::from_millis(50)) {
+                anyhow::ensure!(ev.ok, "fill write failed");
+                pending.remove(&ev.req_id);
+            }
+            anyhow::ensure!(std::time::Instant::now() < deadline, "fill completions lost");
+        }
+        Ok(file)
+    }
+}
+
+/// Deliver DPU→host segments into a host application through the given
+/// host-side endpoint: absorb the segments, hand complete frames to the
+/// app, and return the segments (ACKs + framed responses) the host puts
+/// back on the wire toward the DPU. Shared by the singleton
+/// [`DisaggregatedServer`] pump and the per-shard pump in [`sharded`].
+pub(crate) fn host_exchange<A: HostApp>(
+    app: &mut A,
+    ep: &mut TcpEndpoint,
+    rx: &mut framing::StreamBuf,
+    segs: &[Segment],
+) -> Vec<Segment> {
+    let mut back_to_dpu = Vec::new();
+    for s in segs {
+        back_to_dpu.extend(ep.on_segment(s));
+    }
+    rx.extend(&ep.deliver());
+    // Host app handles complete messages.
+    let mut responses = Vec::new();
+    while let Some(frame) = rx.read_frame() {
+        if let Some(msg) = NetMsg::decode(&frame) {
+            responses.extend(app.handle(&msg));
+        }
+    }
+    if !responses.is_empty() {
+        let mut stream = Vec::new();
+        for r in responses {
+            framing::write_frame(&mut stream, &r.encode());
+        }
+        back_to_dpu.extend(ep.send(&stream));
+    }
+    back_to_dpu
 }
 
 /// One client connection speaking the app protocol over the simulated
@@ -204,25 +316,8 @@ impl<A: HostApp> DisaggregatedServer<A> {
     /// responses to the director.
     fn pump_host(&mut self, mut to_host: Vec<Segment>, to_client: &mut Vec<Segment>) {
         while !to_host.is_empty() {
-            let mut back_to_dpu = Vec::new();
-            for s in &to_host {
-                back_to_dpu.extend(self.host_ep.on_segment(s));
-            }
-            self.host_rx.extend(&self.host_ep.deliver());
-            // Host app handles complete messages.
-            let mut responses = Vec::new();
-            while let Some(frame) = self.host_rx.read_frame() {
-                if let Some(msg) = NetMsg::decode(&frame) {
-                    responses.extend(self.app.handle(&msg));
-                }
-            }
-            if !responses.is_empty() {
-                let mut stream = Vec::new();
-                for r in responses {
-                    framing::write_frame(&mut stream, &r.encode());
-                }
-                back_to_dpu.extend(self.host_ep.send(&stream));
-            }
+            let back_to_dpu =
+                host_exchange(&mut self.app, &mut self.host_ep, &mut self.host_rx, &to_host);
             // Feed host segments (ACKs + responses) back to the
             // director.
             let out = self.director.on_host_packets(back_to_dpu);

@@ -1,0 +1,540 @@
+//! The sharded functional data plane (§7): N share-nothing shards, one
+//! OS thread each, RSS-steered.
+//!
+//! The paper's scaling claim — "the traffic director can direct
+//! 6.4 Gbps with a single DPU core and, due to RSS, scale linearly when
+//! more cores are added" — rests on the data path being replicated per
+//! core with nothing shared on the packet path. [`ShardedServer`] is
+//! that deployment for the functional plane:
+//!
+//! * **Steering** — every client packet batch is routed to
+//!   `rss_core(tuple, N)`; the hash is symmetric, so both directions of
+//!   a connection and its split host connection land on the same shard
+//!   and no connection state ever crosses a shard boundary.
+//! * **Per-shard data path** — each shard owns a [`DirectorShard`]
+//!   (per-flow split-TCP PEPs + the colocated [`OffloadEngine`] with
+//!   its own context ring and mem-pool partition), a private SSD
+//!   submission queue ([`crate::ssd::AsyncSsd::shard_queues`]), per-flow
+//!   host-side
+//!   endpoints of the split connection, and its own host-application
+//!   instance whose poll group the (single) DPU file service drains
+//!   round-robin alongside every other shard's group.
+//! * **Shared, deliberately** — the SSD device, the DPU file system
+//!   mapping, and the cache table (§6.1) are the read-mostly structures
+//!   the paper also shares across cores.
+//!
+//! [`super::DisaggregatedServer`] is the N = 1, single-flow,
+//! synchronous special case of this design.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use super::{host_exchange, ClientConn, StorageServer, StorageServerConfig};
+use crate::apps::HostApp;
+use crate::director::{rss_core, AppSignature, DirectorShard, DirectorShardStats};
+use crate::net::tcp::{Segment, TcpEndpoint};
+use crate::net::FiveTuple;
+use crate::offload::{OffloadEngine, OffloadEngineConfig, OffloadLogic};
+use crate::proto::{framing, NetMsg, NetResp};
+
+/// One routed batch of wire segments.
+pub type PacketBatch = (FiveTuple, Vec<Segment>);
+
+/// Build options for the sharded server.
+#[derive(Clone)]
+pub struct ShardedServerConfig {
+    /// Number of DPU cores to shard the data plane across.
+    pub shards: usize,
+    /// Storage-path build options (one storage path, shared).
+    pub server: StorageServerConfig,
+    /// Whole-DPU offload-engine budget; partitioned across shards with
+    /// [`OffloadEngineConfig::per_shard`].
+    pub engine_total: OffloadEngineConfig,
+    /// SPDK-like workers per shard SSD queue (0 = inline polled mode,
+    /// the right choice when shards already have a thread each).
+    pub queue_workers: usize,
+}
+
+impl Default for ShardedServerConfig {
+    fn default() -> Self {
+        ShardedServerConfig {
+            shards: 1,
+            server: StorageServerConfig::default(),
+            engine_total: OffloadEngineConfig::default(),
+            queue_workers: 0,
+        }
+    }
+}
+
+/// Host-side terminus of one flow's split connection (connection 2 of
+/// the PEP), shard-local.
+struct HostConn {
+    ep: TcpEndpoint,
+    rx: framing::StreamBuf,
+}
+
+impl HostConn {
+    fn new() -> Self {
+        HostConn { ep: TcpEndpoint::new(), rx: framing::StreamBuf::new() }
+    }
+}
+
+/// Lock-free published counters of one shard (written by the shard
+/// thread, read by anyone holding the server).
+#[derive(Default)]
+pub struct ShardStats {
+    flows: AtomicU64,
+    flows_created: AtomicU64,
+    msgs_in: AtomicU64,
+    reqs_offloaded: AtomicU64,
+    reqs_to_host: AtomicU64,
+    forwarded_packets: AtomicU64,
+}
+
+impl ShardStats {
+    fn publish(&self, s: &DirectorShardStats) {
+        self.flows.store(s.flows, Ordering::Relaxed);
+        self.flows_created.store(s.flows_created, Ordering::Relaxed);
+        self.msgs_in.store(s.msgs_in, Ordering::Relaxed);
+        self.reqs_offloaded.store(s.reqs_offloaded, Ordering::Relaxed);
+        self.reqs_to_host.store(s.reqs_to_host, Ordering::Relaxed);
+        self.forwarded_packets.store(s.forwarded_packets, Ordering::Relaxed);
+    }
+
+    fn snapshot(&self, shard: usize) -> DirectorShardStats {
+        DirectorShardStats {
+            shard,
+            flows: self.flows.load(Ordering::Relaxed),
+            flows_created: self.flows_created.load(Ordering::Relaxed),
+            msgs_in: self.msgs_in.load(Ordering::Relaxed),
+            reqs_offloaded: self.reqs_offloaded.load(Ordering::Relaxed),
+            reqs_to_host: self.reqs_to_host.load(Ordering::Relaxed),
+            forwarded_packets: self.forwarded_packets.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// One shard's complete data path: the DPU side ([`DirectorShard`]) plus
+/// the host side of its split connections and its host-app instance.
+/// Runs synchronously; [`ShardedServer`] gives each one a thread.
+struct Shard<A: HostApp> {
+    director: DirectorShard,
+    app: A,
+    host_conns: HashMap<FiveTuple, HostConn>,
+    stats: Arc<ShardStats>,
+}
+
+impl<A: HostApp> Shard<A> {
+    /// Process one batch of client packets for `tuple`; append every
+    /// (tuple, segments-to-client) this produces to `out`.
+    fn step(&mut self, tuple: &FiveTuple, segs: Vec<Segment>, out: &mut Vec<PacketBatch>) {
+        if !self.director.matches(tuple) {
+            // §5.1 stage-1 miss: forwarded verbatim toward the host NIC
+            // stack, which lies outside this model. Only counted — no
+            // PEP, no host connection, NO per-flow state of any kind
+            // (the same invariant the director layer asserts), so a
+            // port scan can't grow shard memory.
+            let _ = self.director.on_client_packets(tuple, segs);
+            self.publish_stats();
+            return;
+        }
+        let dout = self.director.on_client_packets(tuple, segs);
+        let mut to_client = dout.to_client;
+        self.pump_flow_host(tuple, dout.to_host, &mut to_client);
+        if !to_client.is_empty() {
+            out.push((*tuple, to_client));
+        }
+        self.drain_completions(out);
+        self.publish_stats();
+    }
+
+    /// Poll for late engine completions (async SSD queues).
+    fn poll(&mut self, out: &mut Vec<PacketBatch>) {
+        self.drain_completions(out);
+        self.publish_stats();
+    }
+
+    fn drain_completions(&mut self, out: &mut Vec<PacketBatch>) {
+        for (t, o) in self.director.pump_completions() {
+            let mut to_client = o.to_client;
+            self.pump_flow_host(&t, o.to_host, &mut to_client);
+            if !to_client.is_empty() {
+                out.push((t, to_client));
+            }
+        }
+    }
+
+    /// Pump one flow's split host connection to quiescence (the shard
+    /// analog of `DisaggregatedServer::pump_host`).
+    fn pump_flow_host(
+        &mut self,
+        tuple: &FiveTuple,
+        mut to_host: Vec<Segment>,
+        to_client: &mut Vec<Segment>,
+    ) {
+        while !to_host.is_empty() {
+            let conn = self.host_conns.entry(*tuple).or_insert_with(HostConn::new);
+            let back_to_dpu =
+                host_exchange(&mut self.app, &mut conn.ep, &mut conn.rx, &to_host);
+            let o = self.director.on_host_packets(tuple, back_to_dpu);
+            to_client.extend(o.to_client);
+            to_host = o.to_host;
+        }
+    }
+
+    fn publish_stats(&self) {
+        self.stats.publish(&self.director.stats());
+    }
+}
+
+fn shard_loop<A: HostApp>(
+    shard: &mut Shard<A>,
+    rx: &mpsc::Receiver<PacketBatch>,
+    tx: &mpsc::Sender<PacketBatch>,
+    stop: &AtomicBool,
+) {
+    let mut outs: Vec<PacketBatch> = Vec::new();
+    loop {
+        let mut done = false;
+        match rx.recv_timeout(Duration::from_millis(1)) {
+            Ok((tuple, segs)) => {
+                shard.step(&tuple, segs, &mut outs);
+                // Opportunistically drain a bounded amount of queued
+                // input before flushing output (batching without extra
+                // latency) — bounded so a producer that outpaces this
+                // shard can't starve the response path indefinitely.
+                for _ in 0..64 {
+                    match rx.try_recv() {
+                        Ok((t, s)) => shard.step(&t, s, &mut outs),
+                        Err(_) => break,
+                    }
+                }
+            }
+            Err(mpsc::RecvTimeoutError::Timeout) => {
+                shard.poll(&mut outs);
+                done = stop.load(Ordering::Relaxed);
+            }
+            Err(mpsc::RecvTimeoutError::Disconnected) => {
+                // Input gone: collect any final engine completions so
+                // in-flight responses still reach their clients.
+                shard.poll(&mut outs);
+                done = true;
+            }
+        }
+        // Flush BEFORE exiting — responses gathered by the final poll
+        // must not be dropped on shutdown.
+        for o in outs.drain(..) {
+            if tx.send(o).is_err() {
+                return;
+            }
+        }
+        if done {
+            return;
+        }
+    }
+}
+
+/// The N-shard DDS deployment: one thread per shard running the whole
+/// DPU data path, fed through per-shard input queues and drained
+/// through per-shard output queues.
+pub struct ShardedServer {
+    /// The shared storage path (SSD + DpuFs + cache + file service).
+    pub storage: StorageServer,
+    /// Shard count, fixed at build time (stable across shutdown so
+    /// steering queries never divide by zero).
+    shards: usize,
+    inputs: Vec<mpsc::Sender<PacketBatch>>,
+    outputs: Vec<Mutex<mpsc::Receiver<PacketBatch>>>,
+    stats: Vec<Arc<ShardStats>>,
+    joins: Vec<JoinHandle<()>>,
+    stop: Arc<AtomicBool>,
+}
+
+impl ShardedServer {
+    /// Build the storage path and spawn `cfg.shards` shard threads.
+    /// `mk_app(shard, &storage)` builds each shard's host-application
+    /// instance — typically with its own poll group, giving the file
+    /// service one group per shard to drain round-robin.
+    pub fn build<A, F>(
+        cfg: ShardedServerConfig,
+        logic: Arc<dyn OffloadLogic>,
+        signature: AppSignature,
+        mk_app: F,
+    ) -> anyhow::Result<Self>
+    where
+        A: HostApp + Send + 'static,
+        F: FnMut(usize, &StorageServer) -> anyhow::Result<A>,
+    {
+        let storage = StorageServer::build(cfg.server.clone(), Some(logic.clone()))?;
+        Self::over(storage, cfg, logic, signature, mk_app)
+    }
+
+    /// Spawn the shards over an existing storage path (lets callers
+    /// create and pre-populate files before the shards start).
+    /// `cfg.server` is NOT consumed here — it only describes how
+    /// [`Self::build`] would construct the storage path; the `storage`
+    /// argument is used as-is.
+    pub fn over<A, F>(
+        storage: StorageServer,
+        cfg: ShardedServerConfig,
+        logic: Arc<dyn OffloadLogic>,
+        signature: AppSignature,
+        mut mk_app: F,
+    ) -> anyhow::Result<Self>
+    where
+        A: HostApp + Send + 'static,
+        F: FnMut(usize, &StorageServer) -> anyhow::Result<A>,
+    {
+        anyhow::ensure!(cfg.shards >= 1, "need at least one shard");
+        let n = cfg.shards;
+        let engine_cfg = cfg.engine_total.per_shard(n);
+        let queues = storage.shard_aios(n, cfg.queue_workers);
+        let stop = Arc::new(AtomicBool::new(false));
+        let mut inputs = Vec::with_capacity(n);
+        let mut outputs = Vec::with_capacity(n);
+        let mut stats = Vec::with_capacity(n);
+        let mut joins = Vec::with_capacity(n);
+        for (i, aio) in queues.into_iter().enumerate() {
+            let engine = OffloadEngine::new(
+                logic.clone(),
+                storage.cache.clone(),
+                storage.dpufs.clone(),
+                aio,
+                engine_cfg.clone(),
+            );
+            let director =
+                DirectorShard::new(i, signature, logic.clone(), storage.cache.clone(), engine);
+            let app = mk_app(i, &storage)?;
+            let shard_stats = Arc::new(ShardStats::default());
+            let mut shard = Shard {
+                director,
+                app,
+                host_conns: HashMap::new(),
+                stats: shard_stats.clone(),
+            };
+            let (in_tx, in_rx) = mpsc::channel();
+            let (out_tx, out_rx) = mpsc::channel();
+            let stop2 = stop.clone();
+            let join = std::thread::Builder::new()
+                .name(format!("dds-shard-{i}"))
+                .spawn(move || shard_loop(&mut shard, &in_rx, &out_tx, &stop2))
+                .map_err(|e| anyhow::anyhow!("spawn shard {i}: {e}"))?;
+            inputs.push(in_tx);
+            outputs.push(Mutex::new(out_rx));
+            stats.push(shard_stats);
+            joins.push(join);
+        }
+        Ok(ShardedServer { storage, shards: n, inputs, outputs, stats, joins, stop })
+    }
+
+    /// Number of shards.
+    pub fn num_shards(&self) -> usize {
+        self.shards
+    }
+
+    /// RSS steering: the shard that owns `tuple`.
+    pub fn shard_of(&self, tuple: &FiveTuple) -> usize {
+        rss_core(tuple, self.shards)
+    }
+
+    /// Route one batch of client segments to its flow's shard.
+    /// Errors (does not panic) once the server has been shut down.
+    pub fn send(&self, tuple: &FiveTuple, segs: Vec<Segment>) -> anyhow::Result<()> {
+        let shard = self.shard_of(tuple);
+        anyhow::ensure!(!self.inputs.is_empty(), "server is shut down");
+        self.inputs[shard]
+            .send((*tuple, segs))
+            .map_err(|_| anyhow::anyhow!("shard {shard} is gone"))
+    }
+
+    /// Wait up to `timeout` for one batch of segments headed back to a
+    /// client of `shard`. `None` for an out-of-range shard (no panic,
+    /// matching [`Self::send`]).
+    pub fn recv_timeout(&self, shard: usize, timeout: Duration) -> Option<PacketBatch> {
+        self.outputs.get(shard)?.lock().unwrap().recv_timeout(timeout).ok()
+    }
+
+    /// Non-blocking variant of [`Self::recv_timeout`].
+    pub fn try_recv(&self, shard: usize) -> Option<PacketBatch> {
+        self.outputs.get(shard)?.lock().unwrap().try_recv().ok()
+    }
+
+    /// Per-shard counter snapshots.
+    pub fn shard_stats(&self) -> Vec<DirectorShardStats> {
+        self.stats.iter().enumerate().map(|(i, s)| s.snapshot(i)).collect()
+    }
+
+    /// Aggregate counters across every shard.
+    pub fn stats(&self) -> DirectorShardStats {
+        let mut acc = DirectorShardStats::default();
+        for s in self.shard_stats() {
+            acc = acc.merge(&s);
+        }
+        acc
+    }
+
+    /// Stop and join every shard thread (idempotent; also runs on drop).
+    pub fn shutdown(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        self.inputs.clear(); // disconnects every shard's input queue
+        for j in self.joins.drain(..) {
+            let _ = j.join();
+        }
+    }
+}
+
+impl Drop for ShardedServer {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// Find a client tuple that RSS steers to `shard` out of `shards`, by
+/// scanning client ports from `base_port` (panics if no port maps —
+/// impossible in practice for any healthy hash).
+pub fn tuple_for_shard(
+    shard: usize,
+    shards: usize,
+    client_ip: u32,
+    base_port: u16,
+    server_ip: u32,
+    server_port: u16,
+) -> FiveTuple {
+    assert!(shard < shards);
+    let mut port = base_port;
+    loop {
+        let t = FiveTuple::new(client_ip, port, server_ip, server_port);
+        if rss_core(&t, shards) == shard {
+            return t;
+        }
+        port = port.wrapping_add(1);
+        assert!(port != base_port, "no client port steers to shard {shard}/{shards}");
+    }
+}
+
+/// Client-side pump for one shard: owns the [`ClientConn`]s of every
+/// connection steered to that shard and exchanges segments with the
+/// server on their behalf. A batch received for a tuple this driver
+/// does not own is an error — which is exactly the "no cross-shard
+/// leakage" property the integration tests assert.
+pub struct ShardDriver {
+    shard: usize,
+    conns: HashMap<FiveTuple, ClientConn>,
+}
+
+impl ShardDriver {
+    pub fn new(shard: usize) -> Self {
+        ShardDriver { shard, conns: HashMap::new() }
+    }
+
+    pub fn shard(&self) -> usize {
+        self.shard
+    }
+
+    /// Register a connection; the tuple must steer to this driver's
+    /// shard.
+    pub fn connect(&mut self, server: &ShardedServer, tuple: FiveTuple) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            server.shard_of(&tuple) == self.shard,
+            "tuple steers to shard {}, driver owns shard {}",
+            server.shard_of(&tuple),
+            self.shard
+        );
+        self.conns.insert(tuple, ClientConn::new(tuple));
+        Ok(())
+    }
+
+    /// Frame `msg` on `tuple`'s connection and put it on the wire.
+    pub fn send(
+        &mut self,
+        server: &ShardedServer,
+        tuple: &FiveTuple,
+        msg: &NetMsg,
+    ) -> anyhow::Result<()> {
+        let conn = self
+            .conns
+            .get_mut(tuple)
+            .ok_or_else(|| anyhow::anyhow!("unknown connection {tuple:?}"))?;
+        let segs = conn.send_msg(msg);
+        server.send(tuple, segs)
+    }
+
+    /// Wait up to `timeout` for server segments, absorb them (sending
+    /// ACKs back), and return every decoded response with its tuple.
+    pub fn pump(
+        &mut self,
+        server: &ShardedServer,
+        timeout: Duration,
+    ) -> anyhow::Result<Vec<(FiveTuple, NetResp)>> {
+        let mut got = Vec::new();
+        let Some((t, segs)) = server.recv_timeout(self.shard, timeout) else {
+            return Ok(got);
+        };
+        self.absorb(server, t, segs, &mut got)?;
+        while let Some((t, segs)) = server.try_recv(self.shard) {
+            self.absorb(server, t, segs, &mut got)?;
+        }
+        Ok(got)
+    }
+
+    fn absorb(
+        &mut self,
+        server: &ShardedServer,
+        tuple: FiveTuple,
+        segs: Vec<Segment>,
+        got: &mut Vec<(FiveTuple, NetResp)>,
+    ) -> anyhow::Result<()> {
+        let conn = self.conns.get_mut(&tuple).ok_or_else(|| {
+            anyhow::anyhow!(
+                "shard {} emitted segments for a connection it does not own: {tuple:?}",
+                self.shard
+            )
+        })?;
+        let mut acks = Vec::new();
+        let resps = conn.on_segments(&segs, &mut acks);
+        if !acks.is_empty() {
+            server.send(&tuple, acks)?;
+        }
+        got.extend(resps.into_iter().map(|r| (tuple, r)));
+        Ok(())
+    }
+}
+
+/// Drive one message fully through a sharded server and wait for all of
+/// its responses (test/example helper; the sharded analog of
+/// [`super::run_request`]).
+pub fn run_sharded_request(
+    server: &ShardedServer,
+    driver: &mut ShardDriver,
+    tuple: &FiveTuple,
+    msg: &NetMsg,
+    timeout: Duration,
+) -> anyhow::Result<Vec<NetResp>> {
+    let expect = msg.requests.len();
+    let mut seen = vec![false; expect];
+    let mut out: Vec<NetResp> = Vec::new();
+    driver.send(server, tuple, msg)?;
+    let deadline = Instant::now() + timeout;
+    while out.len() < expect {
+        let now = Instant::now();
+        anyhow::ensure!(now < deadline, "request timed out");
+        let wait = (deadline - now).min(Duration::from_millis(50));
+        for (t, r) in driver.pump(server, wait)? {
+            // Late/duplicate responses (TCP retransmits, earlier
+            // messages) must not be attributed to this request.
+            if t != *tuple || r.msg_id != msg.msg_id {
+                continue;
+            }
+            let idx = r.idx as usize;
+            if idx < expect && !seen[idx] {
+                seen[idx] = true;
+                out.push(r);
+            }
+        }
+    }
+    out.sort_by_key(|r| r.idx);
+    Ok(out)
+}

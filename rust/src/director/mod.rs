@@ -18,9 +18,11 @@
 
 pub mod multiflow;
 pub mod rss;
+pub mod shard;
 
 pub use multiflow::MultiFlowDirector;
 pub use rss::{rss_core, toeplitz_hash};
+pub use shard::{DirectorShard, DirectorShardStats};
 
 use std::sync::Arc;
 

@@ -1,140 +1,116 @@
-//! Multi-flow traffic direction (§7).
+//! Multi-flow, multi-core traffic direction (§7).
 //!
 //! A real storage server terminates many client connections at once —
 //! the §8.1 client's third load knob is "the number of concurrent
-//! connections". [`MultiFlowDirector`] owns one PEP
-//! ([`TrafficDirector`]) per matching flow, created on first packet,
-//! and steers each flow to a DPU core with the symmetric RSS hash so
-//! a core never touches another core's connection state (§7: "avoids
-//! sharing connection states between cores on the DPU").
+//! connections". [`MultiFlowDirector`] is the single-threaded core
+//! array: it owns one [`DirectorShard`] per DPU core (each with its own
+//! per-flow PEPs *and* its own colocated offload engine, §7) and steers
+//! every packet with the symmetric RSS hash so a core never touches
+//! another core's connection state.
 //!
-//! The offload engine is per-core too (one engine colocated with each
-//! director core, §7), so the whole packet path is share-nothing
-//! across cores.
+//! This type drives all shards from one thread (benches, tests, the
+//! deterministic examples). The threaded deployment — one OS thread per
+//! shard — is [`crate::coordinator::ShardedServer`], which owns its
+//! `DirectorShard`s directly.
 
-use std::collections::HashMap;
 use std::sync::Arc;
 
 use super::rss::rss_core;
-use super::{AppSignature, DirectorOut, TrafficDirector};
+use super::shard::{DirectorShard, DirectorShardStats};
+use super::{AppSignature, DirectorOut};
 use crate::cache::CuckooCache;
 use crate::net::tcp::Segment;
 use crate::net::FiveTuple;
-use crate::offload::OffloadEngine;
-use crate::offload::OffloadLogic;
+use crate::offload::{OffloadEngine, OffloadLogic};
 
-/// Per-core state: the flows steered to this core.
-struct CoreState {
-    flows: HashMap<FiveTuple, TrafficDirector>,
-}
-
-/// Director array across DPU cores.
+/// Director array across DPU cores; one shard (director + engine) per
+/// core.
 pub struct MultiFlowDirector {
-    signature: AppSignature,
-    logic: Arc<dyn OffloadLogic>,
-    cache: Arc<CuckooCache>,
-    cores: Vec<CoreState>,
-    /// Stats.
-    pub flows_created: u64,
-    pub forwarded_packets: u64,
+    shards: Vec<DirectorShard>,
 }
 
 impl MultiFlowDirector {
+    /// One shard per engine; `engines[i]` becomes the engine colocated
+    /// with core `i`.
     pub fn new(
         signature: AppSignature,
         logic: Arc<dyn OffloadLogic>,
         cache: Arc<CuckooCache>,
-        cores: usize,
+        engines: Vec<OffloadEngine>,
     ) -> Self {
-        assert!(cores >= 1);
+        assert!(!engines.is_empty(), "at least one core");
         MultiFlowDirector {
-            signature,
-            logic,
-            cache,
-            cores: (0..cores).map(|_| CoreState { flows: HashMap::new() }).collect(),
-            flows_created: 0,
-            forwarded_packets: 0,
+            shards: engines
+                .into_iter()
+                .enumerate()
+                .map(|(id, engine)| {
+                    DirectorShard::new(id, signature, logic.clone(), cache.clone(), engine)
+                })
+                .collect(),
         }
     }
 
     /// Number of DPU cores configured.
     pub fn num_cores(&self) -> usize {
-        self.cores.len()
+        self.shards.len()
     }
 
-    /// RSS core for a tuple (exposed for tests / engines-per-core
-    /// wiring).
+    /// RSS core for a tuple (exposed for tests / client steering).
     pub fn core_of(&self, tuple: &FiveTuple) -> usize {
-        rss_core(tuple, self.cores.len())
+        rss_core(tuple, self.shards.len())
     }
 
-    /// Ingress from the client NIC: steer to the flow's core, create
-    /// the PEP on first contact, process. `engines[core_of(tuple)]`
-    /// must be the engine colocated with that core.
-    pub fn on_client_packets(
-        &mut self,
-        tuple: &FiveTuple,
-        segs: Vec<Segment>,
-        engines: &mut [OffloadEngine],
-    ) -> DirectorOut {
-        assert_eq!(engines.len(), self.cores.len(), "one engine per core");
-        if !self.signature.matches(tuple) {
-            self.forwarded_packets += segs.len() as u64;
-            return DirectorOut { to_host: segs, forwarded: 1, ..Default::default() };
-        }
+    /// Ingress from the client NIC: steer to the flow's shard, create
+    /// the PEP on first contact, process with that shard's engine.
+    pub fn on_client_packets(&mut self, tuple: &FiveTuple, segs: Vec<Segment>) -> DirectorOut {
         let core = self.core_of(tuple);
-        let dir = match self.cores[core].flows.entry(*tuple) {
-            std::collections::hash_map::Entry::Occupied(e) => e.into_mut(),
-            std::collections::hash_map::Entry::Vacant(e) => {
-                self.flows_created += 1;
-                e.insert(TrafficDirector::new(
-                    self.signature,
-                    self.logic.clone(),
-                    self.cache.clone(),
-                ))
-            }
-        };
-        dir.on_client_packets(tuple, segs, &mut engines[core])
+        self.shards[core].on_client_packets(tuple, segs)
     }
 
     /// Host-side packets for one flow's split connection.
     pub fn on_host_packets(&mut self, tuple: &FiveTuple, segs: Vec<Segment>) -> DirectorOut {
         let core = self.core_of(tuple);
-        match self.cores[core].flows.get_mut(tuple) {
-            Some(dir) => dir.on_host_packets(segs),
-            None => DirectorOut::default(),
-        }
+        self.shards[core].on_host_packets(tuple, segs)
     }
 
     /// Drain late engine completions for every flow on every core.
-    pub fn pump_completions(&mut self, engines: &mut [OffloadEngine]) -> Vec<(FiveTuple, DirectorOut)> {
+    pub fn pump_completions(&mut self) -> Vec<(FiveTuple, DirectorOut)> {
         let mut outs = Vec::new();
-        for (core, state) in self.cores.iter_mut().enumerate() {
-            for (tuple, dir) in state.flows.iter_mut() {
-                let out = dir.pump_completions(&mut engines[core]);
-                if !out.to_client.is_empty() || !out.to_host.is_empty() {
-                    outs.push((*tuple, out));
-                }
-            }
+        for shard in &mut self.shards {
+            outs.extend(shard.pump_completions());
         }
         outs
     }
 
-    /// Flow count per core (load-balance introspection).
-    pub fn flows_per_core(&self) -> Vec<usize> {
-        self.cores.iter().map(|c| c.flows.len()).collect()
+    /// Direct access to one core's shard.
+    pub fn shard(&self, core: usize) -> &DirectorShard {
+        &self.shards[core]
     }
 
-    /// Aggregate director stats across flows: (msgs_in, offloaded,
-    /// to_host).
-    pub fn stats(&self) -> (u64, u64, u64) {
-        let mut acc = (0, 0, 0);
-        for c in &self.cores {
-            for d in c.flows.values() {
-                acc.0 += d.msgs_in;
-                acc.1 += d.reqs_offloaded;
-                acc.2 += d.reqs_to_host;
-            }
+    pub fn shard_mut(&mut self, core: usize) -> &mut DirectorShard {
+        &mut self.shards[core]
+    }
+
+    /// Flow count per core (load-balance introspection).
+    pub fn flows_per_core(&self) -> Vec<usize> {
+        self.shards.iter().map(|s| s.num_flows()).collect()
+    }
+
+    /// Total flows created across cores.
+    pub fn flows_created(&self) -> u64 {
+        self.shards.iter().map(|s| s.stats().flows_created).sum()
+    }
+
+    /// Total stage-1 misses forwarded verbatim.
+    pub fn forwarded_packets(&self) -> u64 {
+        self.shards.iter().map(|s| s.stats().forwarded_packets).sum()
+    }
+
+    /// Aggregate counters across all cores.
+    pub fn stats(&self) -> DirectorShardStats {
+        let mut acc = DirectorShardStats::default();
+        for s in &self.shards {
+            acc = acc.merge(&s.stats());
         }
         acc
     }
@@ -143,14 +119,34 @@ impl MultiFlowDirector {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::offload::NoOffload;
+    use crate::dpufs::{DpuFs, FsConfig};
+    use crate::offload::{NoOffload, OffloadEngineConfig};
+    use crate::ssd::{AsyncSsd, Ssd};
+    use std::sync::RwLock;
+
+    fn engines(cores: usize) -> Vec<OffloadEngine> {
+        let cache = Arc::new(CuckooCache::new(16));
+        (0..cores)
+            .map(|_| {
+                let ssd = Arc::new(Ssd::new(4 << 20, 512));
+                let fs = DpuFs::format(ssd.clone(), FsConfig::default()).unwrap();
+                OffloadEngine::new(
+                    Arc::new(NoOffload),
+                    cache.clone(),
+                    Arc::new(RwLock::new(fs)),
+                    AsyncSsd::new_inline(ssd),
+                    OffloadEngineConfig::default(),
+                )
+            })
+            .collect()
+    }
 
     fn mfd(cores: usize) -> MultiFlowDirector {
         MultiFlowDirector::new(
             AppSignature::server_port(5000),
             Arc::new(NoOffload),
             Arc::new(CuckooCache::new(64)),
-            cores,
+            engines(cores),
         )
     }
 
@@ -168,63 +164,44 @@ mod tests {
     #[test]
     fn non_matching_flows_forwarded_without_flow_state() {
         let mut d = mfd(2);
-        let mut engines = Vec::new(); // unused on forward path? we must pass correct len
-        let cache = Arc::new(CuckooCache::new(16));
-        let ssd = Arc::new(crate::ssd::Ssd::new(4 << 20, 512));
-        let fs = crate::dpufs::DpuFs::format(ssd.clone(), Default::default()).unwrap();
-        for _ in 0..2 {
-            engines.push(OffloadEngine::new(
-                Arc::new(NoOffload),
-                cache.clone(),
-                Arc::new(std::sync::RwLock::new(
-                    crate::dpufs::DpuFs::format(
-                        Arc::new(crate::ssd::Ssd::new(4 << 20, 512)),
-                        Default::default(),
-                    )
-                    .unwrap(),
-                )),
-                crate::ssd::AsyncSsd::new_inline(ssd.clone()),
-                Default::default(),
-            ));
-        }
-        drop(fs);
         let other = FiveTuple::new(1, 2, 3, 9999);
         let seg = Segment { seq: 0, payload: vec![1, 2, 3], ack: 0 };
-        let out = d.on_client_packets(&other, vec![seg], &mut engines);
+        let out = d.on_client_packets(&other, vec![seg]);
         assert_eq!(out.forwarded, 1);
         assert_eq!(out.to_host.len(), 1);
-        assert_eq!(d.flows_created, 0, "no PEP state for uninteresting flows");
-        assert_eq!(d.forwarded_packets, 1);
+        assert_eq!(d.flows_created(), 0, "no PEP state for uninteresting flows");
+        assert_eq!(d.forwarded_packets(), 1);
     }
 
     #[test]
-    fn flow_created_once_per_tuple() {
+    fn flow_created_once_per_tuple_on_its_core() {
         let mut d = mfd(2);
-        let cache = Arc::new(CuckooCache::new(16));
-        let ssd = Arc::new(crate::ssd::Ssd::new(4 << 20, 512));
-        let mut engines: Vec<OffloadEngine> = (0..2)
-            .map(|_| {
-                OffloadEngine::new(
-                    Arc::new(NoOffload),
-                    cache.clone(),
-                    Arc::new(std::sync::RwLock::new(
-                        crate::dpufs::DpuFs::format(
-                            Arc::new(crate::ssd::Ssd::new(4 << 20, 512)),
-                            Default::default(),
-                        )
-                        .unwrap(),
-                    )),
-                    crate::ssd::AsyncSsd::new_inline(ssd.clone()),
-                    Default::default(),
-                )
-            })
-            .collect();
         let t = FiveTuple::new(10, 20, 30, 5000);
         for _ in 0..5 {
             let seg = Segment { seq: 0, payload: Vec::new(), ack: 0 };
-            d.on_client_packets(&t, vec![seg], &mut engines);
+            d.on_client_packets(&t, vec![seg]);
         }
-        assert_eq!(d.flows_created, 1);
+        assert_eq!(d.flows_created(), 1);
         assert_eq!(d.flows_per_core().iter().sum::<usize>(), 1);
+        // The flow lives on exactly the RSS core.
+        assert_eq!(d.flows_per_core()[d.core_of(&t)], 1);
+    }
+
+    #[test]
+    fn stats_aggregate_across_cores() {
+        let mut d = mfd(3);
+        for i in 0..12u32 {
+            let t = FiveTuple::new(100 + i, 200, 300, 5000);
+            let seg = Segment { seq: 0, payload: Vec::new(), ack: 0 };
+            d.on_client_packets(&t, vec![seg]);
+        }
+        let st = d.stats();
+        assert_eq!(st.flows_created, 12);
+        assert_eq!(st.flows, 12);
+        assert_eq!(
+            d.flows_per_core().iter().sum::<usize>(),
+            12,
+            "every flow landed on some core"
+        );
     }
 }

@@ -1,0 +1,259 @@
+//! One DPU core's share of the data plane (§7).
+//!
+//! A [`DirectorShard`] is the unit of scaling for the traffic director:
+//! it owns the split-TCP state of every flow RSS steers to its core
+//! *and* the offload engine colocated with that core, so nothing on the
+//! packet path is shared between shards — the paper's "avoids sharing
+//! connection states between cores on the DPU". The only cross-shard
+//! structures are the read-mostly ones the design shares deliberately:
+//! the cache table (§6.1), the file-system mapping, and the SSD device
+//! behind each shard's private submission queue.
+//!
+//! Steering is the symmetric Toeplitz [`rss_core`] hash of the 5-tuple,
+//! so both directions of a connection — and the split host connection —
+//! land on the same shard (verified in `fig21_scaling.rs` and the
+//! steering tests).
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use super::rss::rss_core;
+use super::{AppSignature, DirectorOut, TrafficDirector};
+use crate::cache::CuckooCache;
+use crate::net::tcp::Segment;
+use crate::net::FiveTuple;
+use crate::offload::{OffloadEngine, OffloadLogic};
+
+/// Point-in-time counters of one shard (all monotonic).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct DirectorShardStats {
+    pub shard: usize,
+    /// Live flows steered to this shard.
+    pub flows: u64,
+    pub flows_created: u64,
+    pub msgs_in: u64,
+    pub reqs_offloaded: u64,
+    pub reqs_to_host: u64,
+    /// Stage-1 misses forwarded verbatim (§5.1).
+    pub forwarded_packets: u64,
+}
+
+impl DirectorShardStats {
+    /// Element-wise sum (for aggregating across shards; `shard` keeps
+    /// the left-hand side's id and is meaningless on aggregates).
+    pub fn merge(&self, other: &DirectorShardStats) -> DirectorShardStats {
+        DirectorShardStats {
+            shard: self.shard,
+            flows: self.flows + other.flows,
+            flows_created: self.flows_created + other.flows_created,
+            msgs_in: self.msgs_in + other.msgs_in,
+            reqs_offloaded: self.reqs_offloaded + other.reqs_offloaded,
+            reqs_to_host: self.reqs_to_host + other.reqs_to_host,
+            forwarded_packets: self.forwarded_packets + other.forwarded_packets,
+        }
+    }
+}
+
+/// One core's traffic director + offload engine: per-flow PEPs created
+/// on first packet, all state shard-local.
+pub struct DirectorShard {
+    id: usize,
+    signature: AppSignature,
+    logic: Arc<dyn OffloadLogic>,
+    cache: Arc<CuckooCache>,
+    engine: OffloadEngine,
+    flows: HashMap<FiveTuple, TrafficDirector>,
+    flows_created: u64,
+    forwarded_packets: u64,
+    /// Shard-level running sums of the per-flow counters, maintained
+    /// incrementally so `stats()` is O(1) on the packet path (no
+    /// per-call iteration over the flow table).
+    agg_msgs_in: u64,
+    agg_reqs_offloaded: u64,
+    agg_reqs_to_host: u64,
+}
+
+impl DirectorShard {
+    pub fn new(
+        id: usize,
+        signature: AppSignature,
+        logic: Arc<dyn OffloadLogic>,
+        cache: Arc<CuckooCache>,
+        engine: OffloadEngine,
+    ) -> Self {
+        DirectorShard {
+            id,
+            signature,
+            logic,
+            cache,
+            engine,
+            flows: HashMap::new(),
+            flows_created: 0,
+            forwarded_packets: 0,
+            agg_msgs_in: 0,
+            agg_reqs_offloaded: 0,
+            agg_reqs_to_host: 0,
+        }
+    }
+
+    /// This shard's core index.
+    pub fn id(&self) -> usize {
+        self.id
+    }
+
+    /// First-stage signature match (§5.1).
+    pub fn matches(&self, tuple: &FiveTuple) -> bool {
+        self.signature.matches(tuple)
+    }
+
+    /// Whether RSS steers `tuple` to this shard in an `shards`-wide
+    /// deployment (sanity check for steering layers above).
+    pub fn owns(&self, tuple: &FiveTuple, shards: usize) -> bool {
+        rss_core(tuple, shards) == self.id
+    }
+
+    /// Ingress from the client NIC for a flow steered to this shard.
+    /// Creates the flow's PEP on first contact; non-matching flows are
+    /// forwarded verbatim without creating flow state.
+    pub fn on_client_packets(&mut self, tuple: &FiveTuple, segs: Vec<Segment>) -> DirectorOut {
+        if !self.signature.matches(tuple) {
+            // `forwarded` counts PACKETS, matching TrafficDirector.
+            let n = segs.len() as u64;
+            self.forwarded_packets += n;
+            return DirectorOut { to_host: segs, forwarded: n, ..Default::default() };
+        }
+        let dir = match self.flows.entry(*tuple) {
+            std::collections::hash_map::Entry::Occupied(e) => e.into_mut(),
+            std::collections::hash_map::Entry::Vacant(e) => {
+                self.flows_created += 1;
+                e.insert(TrafficDirector::new(
+                    self.signature,
+                    self.logic.clone(),
+                    self.cache.clone(),
+                ))
+            }
+        };
+        // Fold this call's counter deltas into the shard-level sums
+        // (only on_client_packets ever advances them).
+        let before = (dir.msgs_in, dir.reqs_offloaded, dir.reqs_to_host);
+        let out = dir.on_client_packets(tuple, segs, &mut self.engine);
+        self.agg_msgs_in += dir.msgs_in - before.0;
+        self.agg_reqs_offloaded += dir.reqs_offloaded - before.1;
+        self.agg_reqs_to_host += dir.reqs_to_host - before.2;
+        out
+    }
+
+    /// Host-side packets of one flow's split connection.
+    pub fn on_host_packets(&mut self, tuple: &FiveTuple, segs: Vec<Segment>) -> DirectorOut {
+        match self.flows.get_mut(tuple) {
+            Some(dir) => dir.on_host_packets(segs),
+            None => DirectorOut::default(),
+        }
+    }
+
+    /// Drain late engine completions for every flow on this shard.
+    pub fn pump_completions(&mut self) -> Vec<(FiveTuple, DirectorOut)> {
+        let mut outs = Vec::new();
+        for (tuple, dir) in self.flows.iter_mut() {
+            let out = dir.pump_completions(&mut self.engine);
+            if !out.to_client.is_empty() || !out.to_host.is_empty() {
+                outs.push((*tuple, out));
+            }
+        }
+        outs
+    }
+
+    /// The engine colocated with this shard.
+    pub fn engine(&self) -> &OffloadEngine {
+        &self.engine
+    }
+
+    pub fn engine_mut(&mut self) -> &mut OffloadEngine {
+        &mut self.engine
+    }
+
+    /// Live flow count.
+    pub fn num_flows(&self) -> usize {
+        self.flows.len()
+    }
+
+    /// Counter snapshot. O(1): the per-flow counters are folded into
+    /// shard-level sums as they advance, so this is safe to call on
+    /// every packet batch.
+    pub fn stats(&self) -> DirectorShardStats {
+        DirectorShardStats {
+            shard: self.id,
+            flows: self.flows.len() as u64,
+            flows_created: self.flows_created,
+            forwarded_packets: self.forwarded_packets,
+            msgs_in: self.agg_msgs_in,
+            reqs_offloaded: self.agg_reqs_offloaded,
+            reqs_to_host: self.agg_reqs_to_host,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dpufs::{DpuFs, FsConfig};
+    use crate::offload::{NoOffload, OffloadEngineConfig};
+    use crate::ssd::{AsyncSsd, Ssd};
+    use std::sync::RwLock;
+
+    fn shard(id: usize) -> DirectorShard {
+        let ssd = Arc::new(Ssd::new(4 << 20, 512));
+        let fs = DpuFs::format(ssd.clone(), FsConfig::default()).unwrap();
+        let engine = OffloadEngine::new(
+            Arc::new(NoOffload),
+            Arc::new(CuckooCache::new(64)),
+            Arc::new(RwLock::new(fs)),
+            AsyncSsd::new_inline(ssd),
+            OffloadEngineConfig::default(),
+        );
+        DirectorShard::new(
+            id,
+            AppSignature::server_port(5000),
+            Arc::new(NoOffload),
+            Arc::new(CuckooCache::new(64)),
+            engine,
+        )
+    }
+
+    #[test]
+    fn non_matching_forwarded_without_flow_state() {
+        let mut s = shard(0);
+        let other = FiveTuple::new(1, 2, 3, 9999);
+        let seg = Segment { seq: 0, payload: vec![1, 2, 3], ack: 0 };
+        let out = s.on_client_packets(&other, vec![seg]);
+        assert_eq!(out.forwarded, 1);
+        assert_eq!(out.to_host.len(), 1);
+        assert_eq!(s.num_flows(), 0, "no PEP state for uninteresting flows");
+        assert_eq!(s.stats().forwarded_packets, 1);
+    }
+
+    #[test]
+    fn flow_created_once_and_counted() {
+        let mut s = shard(0);
+        let t = FiveTuple::new(10, 20, 30, 5000);
+        for _ in 0..5 {
+            let seg = Segment { seq: 0, payload: Vec::new(), ack: 0 };
+            s.on_client_packets(&t, vec![seg]);
+        }
+        let st = s.stats();
+        assert_eq!(st.flows_created, 1);
+        assert_eq!(st.flows, 1);
+        assert_eq!(s.num_flows(), 1);
+    }
+
+    #[test]
+    fn ownership_follows_rss() {
+        let shards = 4usize;
+        let t = FiveTuple::new(0x0a000001, 41000, 0x0a0000ff, 5000);
+        let core = rss_core(&t, shards);
+        for id in 0..shards {
+            let s = shard(id);
+            assert_eq!(s.owns(&t, shards), id == core);
+        }
+    }
+}

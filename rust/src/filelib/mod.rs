@@ -19,7 +19,7 @@ use std::sync::{mpsc, Arc, Mutex};
 use std::time::Duration;
 
 use crate::dpufs::{DirId, FileId, FsError};
-use crate::fileservice::{ControlMsg, Doorbell, GroupChannel};
+use crate::fileservice::{ControlMsg, Doorbell, GroupChannel, GroupCounters};
 use crate::proto::{FileOpKind, FileRequest, FileResponse, Status};
 use crate::ring::{ProgressRing, RequestRing, ResponseRing, RingStatus};
 
@@ -243,6 +243,14 @@ impl DdsClient {
     /// Persist DPU file-system metadata.
     pub fn sync_metadata(&self) -> Result<(), LibError> {
         Ok(ctrl_call!(self, SyncMetadata {})?)
+    }
+
+    /// Per-poll-group service counters (requests drained, responses
+    /// delivered, outstanding), indexed by registration order. Lets
+    /// multi-group deployments (one group per shard/thread) verify the
+    /// service is draining every group.
+    pub fn group_stats(&self) -> Result<Vec<GroupCounters>, LibError> {
+        Ok(ctrl_call!(self, GroupStats {}))
     }
 
     /// `CreatePoll` (§4.2): allocate request/response rings for the

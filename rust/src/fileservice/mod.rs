@@ -4,7 +4,10 @@
 //! One service thread per DPU (the paper dedicates one Arm core):
 //!
 //! 1. DMA-reads batches of [`FileRequest`]s from each poll group's host
-//!    request ring (the progress-ring drain of Fig 8b);
+//!    request ring (the progress-ring drain of Fig 8b) — groups are
+//!    visited round-robin from a rotating start so a backlogged group
+//!    (one notification group per host thread/shard, §4.2) can never
+//!    starve the others;
 //! 2. translates file addresses through the [`DpuFs`] file mapping and
 //!    submits per-extent ops to the SPDK-like [`AsyncSsd`] — pointing
 //!    the driver directly at request/response buffer memory (zero-copy,
@@ -86,8 +89,22 @@ pub enum ControlMsg {
     FileSize { file: FileId, reply: mpsc::Sender<Result<u64, FsError>> },
     /// Register a poll group's rings with the service.
     CreatePoll { group: Arc<GroupChannel>, reply: mpsc::Sender<usize> },
+    /// Per-group service counters (requests drained / responses
+    /// delivered / in flight), indexed by group id.
+    GroupStats { reply: mpsc::Sender<Vec<GroupCounters>> },
     SyncMetadata { reply: mpsc::Sender<Result<(), FsError>> },
     Shutdown,
+}
+
+/// Per-poll-group counters reported by [`ControlMsg::GroupStats`].
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct GroupCounters {
+    /// Requests drained from the group's request ring.
+    pub requests: u64,
+    /// Responses DMA-written to the group's response ring.
+    pub delivered: u64,
+    /// Requests accepted but not yet delivered.
+    pub outstanding: usize,
 }
 
 /// The shared rings + doorbell of one notification group.
@@ -134,6 +151,10 @@ impl Default for FileServiceConfig {
 struct ServiceGroup {
     chan: Arc<GroupChannel>,
     staging: OrderedStaging,
+    /// Requests drained from this group's ring.
+    requests: u64,
+    /// Responses delivered to this group's ring.
+    delivered: u64,
 }
 
 /// Handle for a spawned service; stops the thread on drop.
@@ -167,6 +188,10 @@ pub struct FileService {
     dma: DmaChannel,
     cfg: FileServiceConfig,
     groups: Vec<ServiceGroup>,
+    /// Rotating round-robin starts for request intake and response
+    /// delivery (fairness across poll groups).
+    rr_intake: usize,
+    rr_deliver: usize,
     ctrl_rx: mpsc::Receiver<ControlMsg>,
     logic: Option<Arc<dyn OffloadLogic>>,
     cache: Arc<CuckooCache>,
@@ -188,7 +213,18 @@ impl FileService {
             DmaChannel::new()
         };
         (
-            FileService { dpufs, aio, dma, cfg, groups: Vec::new(), ctrl_rx: rx, logic, cache },
+            FileService {
+                dpufs,
+                aio,
+                dma,
+                cfg,
+                groups: Vec::new(),
+                rr_intake: 0,
+                rr_deliver: 0,
+                ctrl_rx: rx,
+                logic,
+                cache,
+            },
             tx,
         )
     }
@@ -253,9 +289,25 @@ impl FileService {
                 }
                 ControlMsg::CreatePoll { group, reply } => {
                     let slots = self.cfg.staging_slots;
-                    self.groups
-                        .push(ServiceGroup { chan: group, staging: OrderedStaging::new(slots) });
+                    self.groups.push(ServiceGroup {
+                        chan: group,
+                        staging: OrderedStaging::new(slots),
+                        requests: 0,
+                        delivered: 0,
+                    });
                     let _ = reply.send(self.groups.len() - 1);
+                }
+                ControlMsg::GroupStats { reply } => {
+                    let stats = self
+                        .groups
+                        .iter()
+                        .map(|g| GroupCounters {
+                            requests: g.requests,
+                            delivered: g.delivered,
+                            outstanding: g.staging.outstanding(),
+                        })
+                        .collect();
+                    let _ = reply.send(stats);
                 }
                 ControlMsg::SyncMetadata { reply } => {
                     let r = self.dpufs.write().unwrap().sync_metadata();
@@ -268,9 +320,18 @@ impl FileService {
     }
 
     /// Drain request rings; submit I/O with pre-allocated responses.
+    /// Groups are visited round-robin from a rotating start so the
+    /// service divides its drain bandwidth fairly across poll groups.
     fn intake_requests(&mut self) -> bool {
+        let n = self.groups.len();
+        if n == 0 {
+            return false;
+        }
+        let start = self.rr_intake % n;
+        self.rr_intake = self.rr_intake.wrapping_add(1);
         let mut any = false;
-        for gi in 0..self.groups.len() {
+        for k in 0..n {
+            let gi = (start + k) % n;
             // Don't drain more than staging can absorb (preserves the
             // §4.3 no-overlap invariant).
             if self.groups[gi].staging.free_slots() < 64 {
@@ -297,6 +358,7 @@ impl FileService {
                 continue;
             }
             any = true;
+            self.groups[gi].requests += batch.len() as u64;
             for req in batch {
                 self.execute_request(gi, req);
             }
@@ -393,10 +455,18 @@ impl FileService {
 
     /// Advance TailB over completed slots; once the batch threshold is
     /// reached, DMA-write responses to the host ring (TailC advance) and
-    /// ring the doorbell.
+    /// ring the group's doorbell. Round-robined like intake so one
+    /// group's full response ring can't delay everyone else's doorbell.
     fn deliver_responses(&mut self) -> bool {
+        let n = self.groups.len();
+        if n == 0 {
+            return false;
+        }
+        let start = self.rr_deliver % n;
+        self.rr_deliver = self.rr_deliver.wrapping_add(1);
         let mut any = false;
-        for g in &mut self.groups {
+        for k in 0..n {
+            let g = &mut self.groups[(start + k) % n];
             g.staging.advance_buffered();
             if g.staging.buffered() < self.cfg.delivery_batch {
                 continue;
@@ -411,6 +481,7 @@ impl FileService {
                 match g.chan.resp_ring.push_dma(&self.dma, &resp.encode()) {
                     RingStatus::Ok => {
                         g.staging.pop_delivered();
+                        g.delivered += 1;
                         delivered = true;
                     }
                     _ => break, // host ring full; retry next iteration

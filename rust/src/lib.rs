@@ -12,8 +12,10 @@
 //!   and DPU file service ([`fileservice`]), the sequenced-transport
 //!   network with a TCP-splitting PEP ([`net`], [`director`]), the offload
 //!   engine with its context ring and user-supplied offload logic
-//!   ([`offload`], [`cache`]), and the PJRT runtime that executes the
-//!   AOT-compiled Pallas kernels from the hot path ([`runtime`]).
+//!   ([`offload`], [`cache`]), the PJRT runtime that executes the
+//!   AOT-compiled Pallas kernels from the hot path ([`runtime`]), and
+//!   the RSS-sharded deployment that runs the whole data path once per
+//!   DPU core ([`director::shard`], [`coordinator::sharded`]).
 //! * **Calibrated testbed plane** ([`sim`], [`baselines`]) — a
 //!   discrete-virtual-time queueing testbed standing in for the paper's
 //!   BlueField-2 + EPYC + NVMe + 100 GbE hardware, calibrated against the
@@ -21,7 +23,8 @@
 //!   (§8, §9) is regenerated from this plane by the `rust/benches/fig*`
 //!   targets.
 //!
-//! See `DESIGN.md` for the substitution ledger and the experiment index.
+//! See `DESIGN.md` (repo root) for the substitution ledger, the shard
+//! architecture, and the experiment index.
 
 pub mod apps;
 pub mod baselines;

@@ -25,8 +25,11 @@ dds — DPU-optimized Disaggregated Storage (reproduction)
 
 USAGE:
     dds serve [--requests N] [--batch B] [--io BYTES] [--no-offload]
+              [--shards N]
         run the full functional server (client → director → offload
-        engine / host app → SSD) in-process and report throughput
+        engine / host app → SSD) in-process and report throughput;
+        --shards > 1 runs the RSS-sharded data plane (one shard
+        thread per DPU core, one client pipeline per shard)
     dds kernels
         load artifacts/*.hlo.txt into the PJRT runtime and smoke-test
     dds stack <1..10> [--io BYTES] [--window W] [--write]
@@ -57,49 +60,24 @@ fn serve(args: &[String]) -> anyhow::Result<()> {
     let batch: usize = arg_val(args, "--batch").map_or(8, |v| v.parse().unwrap_or(8));
     let io: u32 = arg_val(args, "--io").map_or(1024, |v| v.parse().unwrap_or(1024));
     let offload = !args.iter().any(|a| a == "--no-offload");
+    let shards: usize = arg_val(args, "--shards").map_or(1, |v| v.parse().unwrap_or(1));
 
-    println!("building storage server (offload={offload}, io={io}B, batch={batch})…");
+    println!(
+        "building storage server (offload={offload}, io={io}B, batch={batch}, shards={shards})…"
+    );
     let logic = Arc::new(RawFileOffload);
     let storage = StorageServer::build(StorageServerConfig::default(), Some(logic.clone()))?;
 
-    // Host application with a data file.
-    let fe = storage.front_end();
-    let dir = fe.create_directory("bench").map_err(|e| anyhow::anyhow!("{e}"))?;
-    let mut file = fe.create_file(dir, "data").map_err(|e| anyhow::anyhow!("{e}"))?;
-    let group = fe.create_poll().map_err(|e| anyhow::anyhow!("{e}"))?;
-    fe.poll_add(&mut file, &group);
+    // Host application with a pre-filled data file.
     let file_bytes: u64 = 32 << 20;
-    // Fill the file in 128 KiB writes (inlined payloads must fit the
-    // ring's max allowable progress).
-    let chunk = 128 << 10;
-    let mut pending = std::collections::HashSet::new();
-    for off in (0..file_bytes).step_by(chunk) {
-        let fill: Vec<u8> = (off..off + chunk as u64).map(|i| (i % 253) as u8).collect();
-        // Non-blocking issue with RingFull backpressure: drain
-        // completions until the ring admits the next write.
-        loop {
-            match fe.write_file(&file, off, &fill) {
-                Ok(id) => {
-                    pending.insert(id);
-                    break;
-                }
-                Err(dds::filelib::LibError::RingFull) => {
-                    for ev in group.poll_wait(Duration::from_millis(20)) {
-                        pending.remove(&ev.req_id);
-                    }
-                }
-                Err(e) => anyhow::bail!("write_file: {e}"),
-            }
-        }
-    }
-    while !pending.is_empty() {
-        for ev in group.poll_wait(Duration::from_millis(100)) {
-            pending.remove(&ev.req_id);
-        }
-    }
+    let file = storage.create_filled_file("bench", "data", file_bytes)?;
     let file_id = file.id;
 
-    let app = RawFileApp { client: fe, file, group };
+    if shards > 1 {
+        return serve_sharded(storage, logic, offload, file, n_requests, batch, io, file_bytes, shards);
+    }
+
+    let app = RawFileApp::over(&storage, &file)?;
     let signature = AppSignature::server_port(5000);
     let mut server = if offload {
         DisaggregatedServer::new(storage, logic, signature, OffloadEngineConfig::default(), app)
@@ -129,6 +107,96 @@ fn serve(args: &[String]) -> anyhow::Result<()> {
         "director: offloaded={} to_host={}",
         server.director.reqs_offloaded, server.director.reqs_to_host
     );
+    Ok(())
+}
+
+/// The RSS-sharded serve path: N shard threads, one client pipeline
+/// per shard, aggregate IOPS across all of them.
+#[allow(clippy::too_many_arguments)]
+fn serve_sharded(
+    storage: StorageServer,
+    logic: Arc<RawFileOffload>,
+    offload: bool,
+    file: dds::filelib::DdsFile,
+    n_requests: usize,
+    batch: usize,
+    io: u32,
+    file_bytes: u64,
+    shards: usize,
+) -> anyhow::Result<()> {
+    use dds::coordinator::{
+        run_sharded_request, tuple_for_shard, ShardDriver, ShardedServer, ShardedServerConfig,
+    };
+    use dds::offload::{NoOffload, OffloadLogic};
+
+    let logic_dyn: Arc<dyn OffloadLogic> =
+        if offload { logic } else { Arc::new(NoOffload) };
+    let cfg = ShardedServerConfig { shards, ..Default::default() };
+    let server = ShardedServer::over(
+        storage,
+        cfg,
+        logic_dyn,
+        AppSignature::server_port(5000),
+        |_shard, st| RawFileApp::over(st, &file),
+    )?;
+
+    let fid = file.id.0;
+    let per_shard = n_requests.div_ceil(shards).max(1);
+    let t0 = std::time::Instant::now();
+    let total = std::thread::scope(|scope| -> anyhow::Result<u64> {
+        let mut handles = Vec::new();
+        for s in 0..shards {
+            let server = &server;
+            handles.push(scope.spawn(move || -> anyhow::Result<u64> {
+                let mut driver = ShardDriver::new(s);
+                let t = tuple_for_shard(
+                    s,
+                    shards,
+                    0x0a00_0001,
+                    40_001 + s as u16 * 131,
+                    0x0a00_00ff,
+                    5000,
+                );
+                driver.connect(server, t)?;
+                let mut gen = RandomIoGen::new(fid, file_bytes, io, 1.0, batch, 42 + s as u64);
+                let mut done = 0u64;
+                while (done as usize) < per_shard {
+                    let msg = gen.next_msg();
+                    let resps = run_sharded_request(
+                        server,
+                        &mut driver,
+                        &t,
+                        &msg,
+                        Duration::from_secs(10),
+                    )?;
+                    anyhow::ensure!(resps.iter().all(|r| r.status == 0), "request failed");
+                    done += resps.len() as u64;
+                }
+                Ok(done)
+            }));
+        }
+        let mut total = 0u64;
+        for h in handles {
+            total += h.join().expect("shard driver panicked")?;
+        }
+        Ok(total)
+    })?;
+    let dt = t0.elapsed();
+    println!(
+        "served {total} requests across {shards} shards in {dt:.2?} → {} IOPS (functional sharded path)",
+        fmt_ops(total as f64 / dt.as_secs_f64())
+    );
+    let agg = server.stats();
+    println!(
+        "aggregate: offloaded={} to_host={} flows={}",
+        agg.reqs_offloaded, agg.reqs_to_host, agg.flows
+    );
+    for st in server.shard_stats() {
+        println!(
+            "  shard {}: msgs={} offloaded={} to_host={}",
+            st.shard, st.msgs_in, st.reqs_offloaded, st.reqs_to_host
+        );
+    }
     Ok(())
 }
 

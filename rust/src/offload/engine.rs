@@ -75,6 +75,28 @@ impl Default for OffloadEngineConfig {
     }
 }
 
+impl OffloadEngineConfig {
+    /// Floor for the per-shard context-ring / pool partitions, so a
+    /// high shard count can't starve a shard below a useful batch.
+    pub const MIN_PER_SHARD: usize = 8;
+
+    /// Partition a whole-DPU configuration across `shards` engines.
+    ///
+    /// The context ring and the mem pool model fixed DPU resources
+    /// (pinned DMA-able memory, §6.2), so N shards each get `1/N` of
+    /// them rather than N copies of the whole budget; the buffer size
+    /// class and copy-mode ablation flag apply to every shard alike.
+    pub fn per_shard(&self, shards: usize) -> OffloadEngineConfig {
+        assert!(shards >= 1);
+        OffloadEngineConfig {
+            contexts: (self.contexts / shards).max(Self::MIN_PER_SHARD),
+            pool_bufs: (self.pool_bufs / shards).max(Self::MIN_PER_SHARD),
+            pool_buf_size: self.pool_buf_size,
+            copy_mode: self.copy_mode,
+        }
+    }
+}
+
 /// The offload engine. Single-threaded by design — it colocates with
 /// the traffic director on one DPU core (§7 "Resource utilization").
 pub struct OffloadEngine {
@@ -355,6 +377,20 @@ mod tests {
             assert!(std::time::Instant::now() < deadline, "timed out");
             std::thread::yield_now();
         }
+    }
+
+    #[test]
+    fn config_partitions_across_shards() {
+        let total = OffloadEngineConfig { contexts: 256, pool_bufs: 64, ..Default::default() };
+        let per = total.per_shard(4);
+        assert_eq!(per.contexts, 64);
+        assert_eq!(per.pool_bufs, 16);
+        assert_eq!(per.pool_buf_size, total.pool_buf_size);
+        assert_eq!(total.per_shard(1).contexts, 256);
+        // Division never starves a shard below the floor.
+        let tiny = total.per_shard(1000);
+        assert_eq!(tiny.contexts, OffloadEngineConfig::MIN_PER_SHARD);
+        assert_eq!(tiny.pool_bufs, OffloadEngineConfig::MIN_PER_SHARD);
     }
 
     #[test]

@@ -9,6 +9,7 @@
 //! order, exercising the TailA/TailB/TailC ordered-delivery logic.
 
 use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
@@ -55,6 +56,10 @@ pub struct AsyncSsd {
     completions: Arc<Mutex<VecDeque<Completion>>>,
     handles: Vec<JoinHandle<()>>,
     workers: usize,
+    /// Queue-depth accounting: ops submitted / completions drained by
+    /// the owner of this queue.
+    submitted: AtomicU64,
+    polled: AtomicU64,
 }
 
 impl AsyncSsd {
@@ -66,7 +71,25 @@ impl AsyncSsd {
             completions: Arc::new(Mutex::new(VecDeque::new())),
             handles: Vec::new(),
             workers: 0,
+            submitted: AtomicU64::new(0),
+            polled: AtomicU64::new(0),
         }
+    }
+
+    /// Per-shard submission queues over one shared device (§7).
+    ///
+    /// Each returned queue has its own submission channel, its own
+    /// completion queue and its own workers (`workers_per_queue == 0`
+    /// selects inline polled mode per queue), so shards submitting and
+    /// polling concurrently never contend on a shared queue lock — the
+    /// only shared structure is the device itself.
+    pub fn shard_queues(
+        ssd: &Arc<Ssd>,
+        queues: usize,
+        workers_per_queue: usize,
+    ) -> Vec<AsyncSsd> {
+        assert!(queues >= 1);
+        (0..queues).map(|_| AsyncSsd::new(ssd.clone(), workers_per_queue)).collect()
     }
 
     pub fn new(ssd: Arc<Ssd>, workers: usize) -> Self {
@@ -102,12 +125,21 @@ impl AsyncSsd {
                 }
             }));
         }
-        AsyncSsd { tx: Some(tx), inline_ssd: None, completions, handles, workers }
+        AsyncSsd {
+            tx: Some(tx),
+            inline_ssd: None,
+            completions,
+            handles,
+            workers,
+            submitted: AtomicU64::new(0),
+            polled: AtomicU64::new(0),
+        }
     }
 
     /// Submit an operation with a caller tag; returns immediately in
     /// worker mode, after synchronous execution in inline mode.
     pub fn submit(&self, tag: u64, op: SsdOp) {
+        self.submitted.fetch_add(1, Ordering::Relaxed);
         if let Some(ssd) = &self.inline_ssd {
             let completion = match op {
                 SsdOp::Read { addr, len } => {
@@ -130,12 +162,26 @@ impl AsyncSsd {
     pub fn poll(&self, max: usize) -> Vec<Completion> {
         let mut q = self.completions.lock().unwrap();
         let n = q.len().min(max);
+        if n > 0 {
+            self.polled.fetch_add(n as u64, Ordering::Relaxed);
+        }
         q.drain(..n).collect()
     }
 
     /// Number of worker threads.
     pub fn workers(&self) -> usize {
         self.workers
+    }
+
+    /// Operations submitted on this queue so far.
+    pub fn submitted(&self) -> u64 {
+        self.submitted.load(Ordering::Relaxed)
+    }
+
+    /// Ops submitted but whose completions have not been drained yet
+    /// (the queue depth a shard sees on its own queue).
+    pub fn in_flight(&self) -> u64 {
+        self.submitted.load(Ordering::Relaxed) - self.polled.load(Ordering::Relaxed)
     }
 }
 
@@ -207,6 +253,28 @@ mod tests {
         assert_eq!(done.len(), 2);
         assert_eq!(done[1].data, vec![9u8; 512]);
         assert_eq!(aio.workers(), 0);
+    }
+
+    #[test]
+    fn shard_queues_are_independent() {
+        let ssd = Arc::new(Ssd::new(1 << 20, 512));
+        let queues = AsyncSsd::shard_queues(&ssd, 3, 0);
+        assert_eq!(queues.len(), 3);
+        queues[0].submit(1, SsdOp::Write { addr: 0, data: vec![5u8; 512] });
+        queues[1].submit(2, SsdOp::Read { addr: 0, len: 512 });
+        // Completions stay on the queue that submitted them; other
+        // queues observe nothing.
+        assert!(queues[2].poll(16).is_empty());
+        assert_eq!(queues[0].in_flight(), 1);
+        let c0 = queues[0].poll(16);
+        assert_eq!(c0.len(), 1);
+        assert_eq!(c0[0].tag, 1);
+        assert_eq!(queues[0].in_flight(), 0);
+        assert_eq!(queues[0].submitted(), 1);
+        // The device itself is shared: queue 1 reads queue 0's write.
+        let c1 = queues[1].poll(16);
+        assert_eq!(c1[0].tag, 2);
+        assert_eq!(c1[0].data, vec![5u8; 512]);
     }
 
     #[test]
