@@ -35,6 +35,7 @@ use std::time::{Duration, Instant};
 use super::{host_exchange, ClientConn, StorageServer, StorageServerConfig};
 use crate::apps::HostApp;
 use crate::director::{rss_core, AppSignature, DirectorShard, DirectorShardStats};
+use crate::fault::{FaultPlane, FaultSite};
 use crate::net::tcp::{Segment, TcpEndpoint};
 use crate::net::FiveTuple;
 use crate::offload::{OffloadEngine, OffloadEngineConfig, OffloadLogic};
@@ -56,6 +57,10 @@ pub struct ShardedServerConfig {
     /// SPDK-like workers per shard SSD queue (0 = inline polled mode,
     /// the right choice when shards already have a thread each).
     pub queue_workers: usize,
+    /// Optional fault plane: when set, each shard's SSD queue gets a
+    /// seeded fault injector ([`FaultSite::SsdQueue`]) and
+    /// [`ShardedServer::set_engine_failed`] becomes operative.
+    pub faults: Option<Arc<FaultPlane>>,
 }
 
 impl Default for ShardedServerConfig {
@@ -65,6 +70,7 @@ impl Default for ShardedServerConfig {
             server: StorageServerConfig::default(),
             engine_total: OffloadEngineConfig::default(),
             queue_workers: 0,
+            faults: None,
         }
     }
 }
@@ -92,6 +98,8 @@ pub struct ShardStats {
     reqs_offloaded: AtomicU64,
     reqs_to_host: AtomicU64,
     forwarded_packets: AtomicU64,
+    reqs_failed_over: AtomicU64,
+    reqs_timed_out: AtomicU64,
 }
 
 impl ShardStats {
@@ -102,6 +110,8 @@ impl ShardStats {
         self.reqs_offloaded.store(s.reqs_offloaded, Ordering::Relaxed);
         self.reqs_to_host.store(s.reqs_to_host, Ordering::Relaxed);
         self.forwarded_packets.store(s.forwarded_packets, Ordering::Relaxed);
+        self.reqs_failed_over.store(s.reqs_failed_over, Ordering::Relaxed);
+        self.reqs_timed_out.store(s.reqs_timed_out, Ordering::Relaxed);
     }
 
     fn snapshot(&self, shard: usize) -> DirectorShardStats {
@@ -113,6 +123,8 @@ impl ShardStats {
             reqs_offloaded: self.reqs_offloaded.load(Ordering::Relaxed),
             reqs_to_host: self.reqs_to_host.load(Ordering::Relaxed),
             forwarded_packets: self.forwarded_packets.load(Ordering::Relaxed),
+            reqs_failed_over: self.reqs_failed_over.load(Ordering::Relaxed),
+            reqs_timed_out: self.reqs_timed_out.load(Ordering::Relaxed),
         }
     }
 }
@@ -125,12 +137,23 @@ struct Shard<A: HostApp> {
     app: A,
     host_conns: HashMap<FiveTuple, HostConn>,
     stats: Arc<ShardStats>,
+    /// Engine failure injection, set by the owner thread-safely and
+    /// applied by the shard thread at its next iteration.
+    fail_flag: Arc<AtomicBool>,
 }
 
 impl<A: HostApp> Shard<A> {
+    /// Apply a pending engine-failure injection (idempotent).
+    fn sync_fault_flag(&mut self) {
+        let want = self.fail_flag.load(Ordering::Relaxed);
+        if want != self.director.engine_failed() {
+            self.director.set_engine_failed(want);
+        }
+    }
     /// Process one batch of client packets for `tuple`; append every
     /// (tuple, segments-to-client) this produces to `out`.
     fn step(&mut self, tuple: &FiveTuple, segs: Vec<Segment>, out: &mut Vec<PacketBatch>) {
+        self.sync_fault_flag();
         if !self.director.matches(tuple) {
             // §5.1 stage-1 miss: forwarded verbatim toward the host NIC
             // stack, which lies outside this model. Only counted — no
@@ -153,6 +176,7 @@ impl<A: HostApp> Shard<A> {
 
     /// Poll for late engine completions (async SSD queues).
     fn poll(&mut self, out: &mut Vec<PacketBatch>) {
+        self.sync_fault_flag();
         self.drain_completions(out);
         self.publish_stats();
     }
@@ -249,6 +273,8 @@ pub struct ShardedServer {
     inputs: Vec<mpsc::Sender<PacketBatch>>,
     outputs: Vec<Mutex<mpsc::Receiver<PacketBatch>>>,
     stats: Vec<Arc<ShardStats>>,
+    /// Per-shard engine-failure injection flags (fault plane).
+    fail_flags: Vec<Arc<AtomicBool>>,
     joins: Vec<JoinHandle<()>>,
     stop: Arc<AtomicBool>,
 }
@@ -296,8 +322,12 @@ impl ShardedServer {
         let mut inputs = Vec::with_capacity(n);
         let mut outputs = Vec::with_capacity(n);
         let mut stats = Vec::with_capacity(n);
+        let mut fail_flags = Vec::with_capacity(n);
         let mut joins = Vec::with_capacity(n);
-        for (i, aio) in queues.into_iter().enumerate() {
+        for (i, mut aio) in queues.into_iter().enumerate() {
+            if let Some(plane) = &cfg.faults {
+                aio.attach_faults(plane.ssd_injector(FaultSite::SsdQueue(i)));
+            }
             let engine = OffloadEngine::new(
                 logic.clone(),
                 storage.cache.clone(),
@@ -309,11 +339,13 @@ impl ShardedServer {
                 DirectorShard::new(i, signature, logic.clone(), storage.cache.clone(), engine);
             let app = mk_app(i, &storage)?;
             let shard_stats = Arc::new(ShardStats::default());
+            let fail_flag = Arc::new(AtomicBool::new(false));
             let mut shard = Shard {
                 director,
                 app,
                 host_conns: HashMap::new(),
                 stats: shard_stats.clone(),
+                fail_flag: fail_flag.clone(),
             };
             let (in_tx, in_rx) = mpsc::channel();
             let (out_tx, out_rx) = mpsc::channel();
@@ -325,9 +357,10 @@ impl ShardedServer {
             inputs.push(in_tx);
             outputs.push(Mutex::new(out_rx));
             stats.push(shard_stats);
+            fail_flags.push(fail_flag);
             joins.push(join);
         }
-        Ok(ShardedServer { storage, shards: n, inputs, outputs, stats, joins, stop })
+        Ok(ShardedServer { storage, shards: n, inputs, outputs, stats, fail_flags, joins, stop })
     }
 
     /// Number of shards.
@@ -360,6 +393,21 @@ impl ShardedServer {
     /// Non-blocking variant of [`Self::recv_timeout`].
     pub fn try_recv(&self, shard: usize) -> Option<PacketBatch> {
         self.outputs.get(shard)?.lock().unwrap().try_recv().ok()
+    }
+
+    /// Inject (`true`) or clear (`false`) failure of one shard's
+    /// offload engine. The shard thread applies the change at its next
+    /// iteration: in-flight engine contexts abort as ERR and subsequent
+    /// requests route through the host slow path (the paper's
+    /// fallback). Returns false for an out-of-range shard.
+    pub fn set_engine_failed(&self, shard: usize, failed: bool) -> bool {
+        match self.fail_flags.get(shard) {
+            Some(flag) => {
+                flag.store(failed, Ordering::Relaxed);
+                true
+            }
+            None => false,
+        }
     }
 
     /// Per-shard counter snapshots.

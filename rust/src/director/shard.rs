@@ -36,6 +36,12 @@ pub struct DirectorShardStats {
     pub reqs_to_host: u64,
     /// Stage-1 misses forwarded verbatim (§5.1).
     pub forwarded_packets: u64,
+    /// Requests rerouted to the host because the shard's engine was
+    /// marked failed (fault plane).
+    pub reqs_failed_over: u64,
+    /// Engine contexts aborted by the pending-timeout (lost SSD
+    /// completions surfaced as ERR).
+    pub reqs_timed_out: u64,
 }
 
 impl DirectorShardStats {
@@ -50,6 +56,8 @@ impl DirectorShardStats {
             reqs_offloaded: self.reqs_offloaded + other.reqs_offloaded,
             reqs_to_host: self.reqs_to_host + other.reqs_to_host,
             forwarded_packets: self.forwarded_packets + other.forwarded_packets,
+            reqs_failed_over: self.reqs_failed_over + other.reqs_failed_over,
+            reqs_timed_out: self.reqs_timed_out + other.reqs_timed_out,
         }
     }
 }
@@ -172,6 +180,16 @@ impl DirectorShard {
         &mut self.engine
     }
 
+    /// Inject or clear failure of this shard's engine (fault plane):
+    /// failed engines route every request through the host slow path.
+    pub fn set_engine_failed(&mut self, failed: bool) {
+        self.engine.set_failed(failed);
+    }
+
+    pub fn engine_failed(&self) -> bool {
+        self.engine.is_failed()
+    }
+
     /// Live flow count.
     pub fn num_flows(&self) -> usize {
         self.flows.len()
@@ -189,6 +207,8 @@ impl DirectorShard {
             msgs_in: self.agg_msgs_in,
             reqs_offloaded: self.agg_reqs_offloaded,
             reqs_to_host: self.agg_reqs_to_host,
+            reqs_failed_over: self.engine.bounced_engine_failed,
+            reqs_timed_out: self.engine.timed_out,
         }
     }
 }

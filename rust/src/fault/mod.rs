@@ -1,0 +1,500 @@
+//! The fault-injection plane: deterministic, seeded chaos for the
+//! functional data path.
+//!
+//! DDS's reliability story is that the DPU fast path degrades
+//! gracefully: an offload-engine miss or failure falls back to the host
+//! slow path with no client-visible difference (§6.2 Fig 13 lines 5-7
+//! generalized to whole-engine failure), and lost SSD completions
+//! surface as bounded-time errors instead of hangs. This module makes
+//! that story testable by injecting faults at explicit hook points,
+//! all driven by one seed so every failing schedule replays exactly:
+//!
+//! * **SSD queues** ([`SsdFaultInjector`], consumed by
+//!   [`crate::ssd::AsyncSsd`]) — completions can be *failed*
+//!   (`Err(SsdError::Injected)`), *dropped* (the op executes but its
+//!   completion never arrives), or *delayed* (held for N polls).
+//! * **The wire** ([`WireChaos`]) — segment drop / duplication /
+//!   reordering between a client and the DPU, exercising dup-ACK fast
+//!   retransmit and the `retransmit_all` timeout path.
+//! * **Offload engines** — a shard's engine can be marked failed
+//!   ([`crate::coordinator::ShardedServer::set_engine_failed`]); its
+//!   requests then bounce to the host file-service slow path.
+//! * **File-service poll groups** — a group can be stalled for N
+//!   service iterations
+//!   ([`crate::fileservice::ControlMsg::InjectGroupStall`]).
+//!
+//! Every probabilistic decision comes from a per-site
+//! [`crate::sim::Rng`] stream derived from the plane's seed, and every
+//! injection is logged as a [`FaultEvent`]. [`FaultPlane::schedule`]
+//! returns the log in a canonical order, so "same seed ⇒ same fault
+//! schedule" is a testable property (see `rust/tests/chaos_determinism.rs`).
+//!
+//! [`scenario`] builds named end-to-end chaos scenarios on top.
+
+pub mod scenario;
+
+pub use scenario::{run_scenario, Scenario, ScenarioReport};
+
+use std::sync::{Arc, Mutex};
+
+use crate::net::tcp::Segment;
+use crate::sim::Rng;
+
+/// A hook point where faults can be injected.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum FaultSite {
+    /// Shard `i`'s private SSD submission queue (offload-engine path).
+    SsdQueue(usize),
+    /// The file service's SSD queue (host slow path).
+    HostSsdQueue,
+    /// One direction of one client connection's wire:
+    /// `to_server == true` is client→DPU.
+    Wire { channel: usize, to_server: bool },
+    /// Shard `i`'s colocated offload engine.
+    Engine(usize),
+    /// File-service poll group `i`.
+    PollGroup(usize),
+}
+
+impl FaultSite {
+    /// Stable code used to derive the site's RNG stream from the seed.
+    fn code(self) -> u64 {
+        match self {
+            FaultSite::SsdQueue(i) => 0x1_0000 + i as u64,
+            FaultSite::HostSsdQueue => 0x2_0000,
+            FaultSite::Wire { channel, to_server } => {
+                0x3_0000 + channel as u64 * 2 + to_server as u64
+            }
+            FaultSite::Engine(i) => 0x4_0000 + i as u64,
+            FaultSite::PollGroup(i) => 0x5_0000 + i as u64,
+        }
+    }
+}
+
+/// What was injected.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultAction {
+    /// SSD op completes with `Err(SsdError::Injected)`.
+    SsdFail,
+    /// SSD op executes but its completion is lost.
+    SsdDrop,
+    /// SSD completion held back for N polls.
+    SsdDelay(u32),
+    /// Wire segment dropped.
+    NetDrop,
+    /// Wire segment duplicated.
+    NetDup,
+    /// Wire batch shuffled.
+    NetReorder,
+    /// Offload engine marked failed (requests reroute to the host).
+    EngineFail,
+    /// Offload engine restored.
+    EngineRestore,
+    /// Poll group stalled for N service iterations.
+    GroupStall(u32),
+}
+
+/// One recorded injection: the `op`-th decision at `site` chose
+/// `action`. `op` is a per-site sequence number, so sorting by
+/// `(site, op)` yields a canonical schedule regardless of thread
+/// interleaving between sites.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FaultEvent {
+    pub site: FaultSite,
+    pub op: u64,
+    pub action: FaultAction,
+}
+
+/// Per-op SSD fault probabilities. Ranges are disjoint:
+/// `[0, fail_p)` fail, `[fail_p, fail_p+drop_p)` drop,
+/// `[fail_p+drop_p, fail_p+drop_p+delay_p)` delay.
+#[derive(Debug, Clone, Copy)]
+pub struct SsdFaultConfig {
+    pub fail_p: f64,
+    pub drop_p: f64,
+    pub delay_p: f64,
+    /// Polls a delayed completion is held back for.
+    pub delay_polls: u32,
+}
+
+impl Default for SsdFaultConfig {
+    fn default() -> Self {
+        SsdFaultConfig { fail_p: 0.0, drop_p: 0.0, delay_p: 0.0, delay_polls: 4 }
+    }
+}
+
+impl SsdFaultConfig {
+    fn is_off(&self) -> bool {
+        self.fail_p <= 0.0 && self.drop_p <= 0.0 && self.delay_p <= 0.0
+    }
+}
+
+/// Per-segment wire fault probabilities.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct WireFaultConfig {
+    pub drop_p: f64,
+    pub dup_p: f64,
+    /// Probability that a multi-segment batch is shuffled.
+    pub reorder_p: f64,
+}
+
+impl WireFaultConfig {
+    fn is_off(&self) -> bool {
+        self.drop_p <= 0.0 && self.dup_p <= 0.0 && self.reorder_p <= 0.0
+    }
+}
+
+/// The whole plane's configuration: one seed, per-class probabilities.
+/// Engine failures and group stalls are *scheduled* by the scenario
+/// (deterministic by construction) rather than rolled per-op.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct FaultConfig {
+    pub seed: u64,
+    /// Shard engine SSD queues.
+    pub ssd: SsdFaultConfig,
+    /// The file service's SSD queue (host slow path).
+    pub host_ssd: SsdFaultConfig,
+    /// Client→server wire (drops recovered by client retransmission).
+    pub wire_up: WireFaultConfig,
+    /// Server→client wire. Keep `drop_p == 0` here: nothing in the
+    /// model retransmits server→client on a silent loss, so dropped
+    /// responses would be unrecoverable (dup/reorder are fine).
+    pub wire_down: WireFaultConfig,
+}
+
+type Log = Arc<Mutex<Vec<FaultEvent>>>;
+
+/// The seeded fault plane. Hand out per-site injectors with
+/// [`Self::ssd_injector`] / [`Self::wire_chaos`]; read the canonical
+/// injection log back with [`Self::schedule`].
+pub struct FaultPlane {
+    cfg: FaultConfig,
+    log: Log,
+    /// Every SSD injector handed out, so scenarios can arm them all
+    /// after the (fault-free) setup/fill phase.
+    ssd_injectors: Mutex<Vec<SsdFaultInjector>>,
+}
+
+/// Derive a per-site seed; splitmix-style so nearby site codes give
+/// unrelated streams.
+fn derive_seed(seed: u64, code: u64) -> u64 {
+    let mut x = seed ^ code.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+    x ^= x >> 30;
+    x = x.wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    x ^= x >> 27;
+    x = x.wrapping_mul(0x94D0_49BB_1331_11EB);
+    x ^ (x >> 31)
+}
+
+impl FaultPlane {
+    pub fn new(cfg: FaultConfig) -> Arc<Self> {
+        Arc::new(FaultPlane {
+            cfg,
+            log: Arc::new(Mutex::new(Vec::new())),
+            ssd_injectors: Mutex::new(Vec::new()),
+        })
+    }
+
+    pub fn config(&self) -> &FaultConfig {
+        &self.cfg
+    }
+
+    /// An SSD fault injector for `site` (must be [`FaultSite::SsdQueue`]
+    /// or [`FaultSite::HostSsdQueue`]). Created **disarmed** so setup
+    /// I/O (file creation, fills) runs fault-free; call
+    /// [`Self::arm_ssd`] when the workload starts.
+    pub fn ssd_injector(&self, site: FaultSite) -> SsdFaultInjector {
+        let cfg = match site {
+            FaultSite::SsdQueue(_) => self.cfg.ssd,
+            FaultSite::HostSsdQueue => self.cfg.host_ssd,
+            other => panic!("not an SSD site: {other:?}"),
+        };
+        let inj = SsdFaultInjector {
+            inner: Arc::new(Mutex::new(SsdInjectorState {
+                site,
+                cfg,
+                rng: Rng::new(derive_seed(self.cfg.seed, site.code())),
+                op: 0,
+                armed: false,
+                log: self.log.clone(),
+            })),
+        };
+        self.ssd_injectors.lock().unwrap().push(inj.clone());
+        inj
+    }
+
+    /// Arm every SSD injector handed out so far (setup is done; start
+    /// injecting).
+    pub fn arm_ssd(&self) {
+        for inj in self.ssd_injectors.lock().unwrap().iter() {
+            inj.inner.lock().unwrap().armed = true;
+        }
+    }
+
+    /// A wire chaos channel for one direction of client connection
+    /// `channel`.
+    pub fn wire_chaos(&self, channel: usize, to_server: bool) -> WireChaos {
+        let site = FaultSite::Wire { channel, to_server };
+        WireChaos {
+            site,
+            cfg: if to_server { self.cfg.wire_up } else { self.cfg.wire_down },
+            rng: Rng::new(derive_seed(self.cfg.seed, site.code())),
+            op: 0,
+            log: self.log.clone(),
+        }
+    }
+
+    /// Record a scheduled (non-probabilistic) injection — engine
+    /// failures, group stalls — so it appears in the schedule.
+    pub fn record(&self, site: FaultSite, action: FaultAction) {
+        let mut log = self.log.lock().unwrap();
+        let op = log.iter().filter(|e| e.site == site).count() as u64;
+        log.push(FaultEvent { site, op, action });
+    }
+
+    /// The injection log in canonical `(site, op)` order — identical
+    /// across runs with the same seed and workload, regardless of how
+    /// threads interleaved *between* sites.
+    pub fn schedule(&self) -> Vec<FaultEvent> {
+        let mut log = self.log.lock().unwrap().clone();
+        log.sort_by_key(|e| (e.site, e.op));
+        log
+    }
+
+    /// Total injections so far.
+    pub fn injected(&self) -> usize {
+        self.log.lock().unwrap().len()
+    }
+}
+
+/// An SSD fault decided at submit time.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SsdFault {
+    /// Complete with `Err(SsdError::Injected)` without executing.
+    Fail,
+    /// Execute, but lose the completion.
+    Drop,
+    /// Execute, but hold the completion for N polls.
+    Delay(u32),
+}
+
+struct SsdInjectorState {
+    site: FaultSite,
+    cfg: SsdFaultConfig,
+    rng: Rng,
+    op: u64,
+    armed: bool,
+    log: Log,
+}
+
+/// Shared handle consumed by [`crate::ssd::AsyncSsd`] at submit time.
+/// One RNG draw per submitted op (in submit order), so a single-driver
+/// queue gets a fully deterministic decision stream.
+#[derive(Clone)]
+pub struct SsdFaultInjector {
+    inner: Arc<Mutex<SsdInjectorState>>,
+}
+
+impl SsdFaultInjector {
+    /// Decide the fate of the next submitted op. Disarmed injectors
+    /// return `None` without consuming randomness, so the armed stream
+    /// is independent of how much setup I/O preceded it.
+    pub fn decide(&self) -> Option<SsdFault> {
+        let mut st = self.inner.lock().unwrap();
+        if !st.armed || st.cfg.is_off() {
+            return None;
+        }
+        let op = st.op;
+        st.op += 1;
+        let roll = st.rng.next_f64();
+        let (action, fault) = if roll < st.cfg.fail_p {
+            (FaultAction::SsdFail, SsdFault::Fail)
+        } else if roll < st.cfg.fail_p + st.cfg.drop_p {
+            (FaultAction::SsdDrop, SsdFault::Drop)
+        } else if roll < st.cfg.fail_p + st.cfg.drop_p + st.cfg.delay_p {
+            let polls = st.cfg.delay_polls.max(1);
+            (FaultAction::SsdDelay(polls), SsdFault::Delay(polls))
+        } else {
+            return None;
+        };
+        let site = st.site;
+        st.log.lock().unwrap().push(FaultEvent { site, op, action });
+        Some(fault)
+    }
+
+    /// Arm/disarm this injector only.
+    pub fn set_armed(&self, armed: bool) {
+        self.inner.lock().unwrap().armed = armed;
+    }
+}
+
+/// Seeded wire chaos for one direction of one connection: applies
+/// drop/duplicate decisions per segment and an occasional deterministic
+/// shuffle per batch, logging every injection.
+pub struct WireChaos {
+    site: FaultSite,
+    cfg: WireFaultConfig,
+    rng: Rng,
+    op: u64,
+    log: Log,
+}
+
+impl WireChaos {
+    /// Run a batch of segments through the chaos channel. The decision
+    /// stream is deterministic in the *sequence of segments offered*.
+    pub fn apply(&mut self, segs: Vec<Segment>) -> Vec<Segment> {
+        if self.cfg.is_off() || segs.is_empty() {
+            return segs;
+        }
+        let mut out = Vec::with_capacity(segs.len());
+        for seg in segs {
+            let op = self.op;
+            self.op += 1;
+            if self.rng.next_f64() < self.cfg.drop_p {
+                self.note(op, FaultAction::NetDrop);
+                continue;
+            }
+            if self.rng.next_f64() < self.cfg.dup_p {
+                self.note(op, FaultAction::NetDup);
+                out.push(seg.clone());
+            }
+            out.push(seg);
+        }
+        if out.len() > 1 && self.rng.next_f64() < self.cfg.reorder_p {
+            let op = self.op;
+            self.op += 1;
+            self.note(op, FaultAction::NetReorder);
+            // Deterministic Fisher-Yates.
+            for i in (1..out.len()).rev() {
+                let j = self.rng.next_range(i as u64 + 1) as usize;
+                out.swap(i, j);
+            }
+        }
+        out
+    }
+
+    fn note(&self, op: u64, action: FaultAction) {
+        self.log.lock().unwrap().push(FaultEvent { site: self.site, op, action });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn chaotic_cfg(seed: u64) -> FaultConfig {
+        FaultConfig {
+            seed,
+            ssd: SsdFaultConfig { fail_p: 0.2, drop_p: 0.2, delay_p: 0.2, delay_polls: 3 },
+            wire_up: WireFaultConfig { drop_p: 0.2, dup_p: 0.2, reorder_p: 0.5 },
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn ssd_decisions_replay_with_same_seed() {
+        let runs: Vec<Vec<Option<SsdFault>>> = (0..2)
+            .map(|_| {
+                let plane = FaultPlane::new(chaotic_cfg(42));
+                let inj = plane.ssd_injector(FaultSite::SsdQueue(0));
+                plane.arm_ssd();
+                (0..500).map(|_| inj.decide()).collect()
+            })
+            .collect();
+        assert_eq!(runs[0], runs[1]);
+        assert!(runs[0].iter().any(|d| d.is_some()), "probabilities must fire");
+        assert!(runs[0].iter().any(|d| d.is_none()), "not every op faulted");
+    }
+
+    #[test]
+    fn schedules_identical_across_runs_and_sites_independent() {
+        let mk = || {
+            let plane = FaultPlane::new(chaotic_cfg(7));
+            let a = plane.ssd_injector(FaultSite::SsdQueue(0));
+            let b = plane.ssd_injector(FaultSite::SsdQueue(1));
+            plane.arm_ssd();
+            for _ in 0..200 {
+                a.decide();
+                b.decide();
+            }
+            plane.schedule()
+        };
+        let (s1, s2) = (mk(), mk());
+        assert_eq!(s1, s2);
+        // Streams differ between sites (derived seeds are unrelated).
+        let on_a: Vec<_> = s1.iter().filter(|e| e.site == FaultSite::SsdQueue(0)).collect();
+        let on_b: Vec<_> = s1.iter().filter(|e| e.site == FaultSite::SsdQueue(1)).collect();
+        assert!(!on_a.is_empty() && !on_b.is_empty());
+        assert_ne!(
+            on_a.iter().map(|e| e.op).collect::<Vec<_>>(),
+            on_b.iter().map(|e| e.op).collect::<Vec<_>>(),
+            "site streams should not be op-for-op identical"
+        );
+    }
+
+    #[test]
+    fn disarmed_injector_is_transparent_and_preserves_stream() {
+        let plane = FaultPlane::new(chaotic_cfg(9));
+        let inj = plane.ssd_injector(FaultSite::HostSsdQueue);
+        // Setup phase: decisions are None and consume no randomness.
+        for _ in 0..1000 {
+            assert_eq!(inj.decide(), None);
+        }
+        plane.arm_ssd();
+        let armed: Vec<_> = (0..100).map(|_| inj.decide()).collect();
+        // A fresh plane armed immediately produces the same stream.
+        let plane2 = FaultPlane::new(chaotic_cfg(9));
+        let inj2 = plane2.ssd_injector(FaultSite::HostSsdQueue);
+        plane2.arm_ssd();
+        let immediate: Vec<_> = (0..100).map(|_| inj2.decide()).collect();
+        assert_eq!(armed, immediate);
+    }
+
+    #[test]
+    fn wire_chaos_deterministic_and_lossless_when_off() {
+        let seg = |seq: u64| Segment { seq, payload: vec![seq as u8; 8], ack: 0 };
+        let run = || {
+            let plane = FaultPlane::new(chaotic_cfg(21));
+            let mut chaos = plane.wire_chaos(0, true);
+            let mut all = Vec::new();
+            for batch in 0..20u64 {
+                let segs: Vec<Segment> = (0..5).map(|i| seg(batch * 5 + i)).collect();
+                all.push(chaos.apply(segs));
+            }
+            (all, plane.schedule())
+        };
+        let (a, sa) = run();
+        let (b, sb) = run();
+        assert_eq!(a, b);
+        assert_eq!(sa, sb);
+        assert!(!sa.is_empty());
+        // wire_down defaults to off: apply is the identity.
+        let plane = FaultPlane::new(chaotic_cfg(21));
+        let mut down = plane.wire_chaos(0, false);
+        let segs: Vec<Segment> = (0..5).map(seg).collect();
+        assert_eq!(down.apply(segs.clone()), segs);
+    }
+
+    #[test]
+    fn recorded_events_take_per_site_sequence_numbers() {
+        let plane = FaultPlane::new(FaultConfig { seed: 1, ..Default::default() });
+        plane.record(FaultSite::Engine(0), FaultAction::EngineFail);
+        plane.record(FaultSite::Engine(0), FaultAction::EngineRestore);
+        plane.record(FaultSite::PollGroup(1), FaultAction::GroupStall(8));
+        let s = plane.schedule();
+        assert_eq!(s.len(), 3);
+        assert_eq!(
+            s[0],
+            FaultEvent { site: FaultSite::Engine(0), op: 0, action: FaultAction::EngineFail }
+        );
+        assert_eq!(s[1].op, 1);
+        assert_eq!(
+            s[2],
+            FaultEvent {
+                site: FaultSite::PollGroup(1),
+                op: 0,
+                action: FaultAction::GroupStall(8)
+            }
+        );
+    }
+}

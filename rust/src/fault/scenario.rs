@@ -1,0 +1,512 @@
+//! Named, seeded end-to-end chaos scenarios against [`ShardedServer`].
+//!
+//! A [`Scenario`] describes a workload (N shards, one connection per
+//! shard, `rounds` batches of reads per connection) plus a fault
+//! recipe: probabilistic SSD/wire faults from a [`FaultConfig`] seed
+//! and *scheduled* engine failures / poll-group stalls pinned to
+//! rounds. [`run_scenario`] builds the whole functional plane, drives
+//! every message to completion, and enforces the two invariants the
+//! fault plane promises:
+//!
+//! * **Byte-exactness** — an OK response carries exactly the bytes the
+//!   fill pattern predicts, on the issuing connection; an ERR response
+//!   carries no payload. Wrong bytes abort the scenario.
+//! * **Bounded completion** — every request resolves (OK or ERR)
+//!   within the scenario timeout; lost completions surface through the
+//!   engine/service pending timeouts, lost segments through dup-ACK
+//!   fast retransmit and the client's `retransmit_all` timeout path.
+//!
+//! The returned [`ScenarioReport`] carries the canonical fault
+//! schedule and the per-request outcome trace, which is what the
+//! determinism suite replays (`rust/tests/chaos_determinism.rs`).
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use super::{FaultAction, FaultConfig, FaultEvent, FaultPlane, FaultSite, SsdFaultConfig,
+            WireChaos, WireFaultConfig};
+use crate::apps::RawFileApp;
+use crate::coordinator::{
+    tuple_for_shard, ClientConn, ShardedServer, ShardedServerConfig, StorageServer,
+    StorageServerConfig,
+};
+use crate::director::{AppSignature, DirectorShardStats};
+use crate::fileservice::{FileServiceConfig, GroupCounters};
+use crate::net::FiveTuple;
+use crate::offload::{OffloadEngineConfig, RawFileOffload};
+use crate::proto::{AppRequest, NetMsg, NetResp};
+use crate::sim::Rng;
+use crate::workload::RandomIoGen;
+
+const SERVER_PORT: u16 = 5000;
+
+/// A named, fully-seeded chaos scenario.
+#[derive(Clone)]
+pub struct Scenario {
+    pub name: &'static str,
+    pub seed: u64,
+    pub shards: usize,
+    /// Request batches per connection (one connection per shard).
+    pub rounds: usize,
+    /// Read requests per batch.
+    pub batch: usize,
+    pub read_size: u32,
+    pub file_bytes: u64,
+    /// Probabilistic faults (seeded).
+    pub faults: FaultConfig,
+    /// `(round, shard)`: mark that shard's engine failed before the
+    /// round's batches are sent.
+    pub fail_engines: Vec<(usize, usize)>,
+    /// `(round, shard)`: restore that shard's engine.
+    pub restore_engines: Vec<(usize, usize)>,
+    /// `(round, iterations)`: stall every shard poll group before the
+    /// round.
+    pub stall_groups: Option<(usize, u32)>,
+    /// Wall-clock bound for one round of batches to fully resolve.
+    pub round_timeout: Duration,
+    /// Engine-context and service-staging pending timeout (how fast a
+    /// lost completion surfaces as ERR).
+    pub pending_timeout: Duration,
+}
+
+impl Scenario {
+    /// Common shape shared by the named scenarios.
+    fn base(name: &'static str, seed: u64) -> Scenario {
+        Scenario {
+            name,
+            seed,
+            shards: 2,
+            rounds: 5,
+            batch: 4,
+            read_size: 512,
+            file_bytes: 1 << 20,
+            faults: FaultConfig { seed, ..Default::default() },
+            fail_engines: Vec::new(),
+            restore_engines: Vec::new(),
+            stall_groups: None,
+            round_timeout: Duration::from_secs(30),
+            // Lost-completion recovery latency. Deliberately ~1000x the
+            // shard poll cadence (~1ms): a completion merely *delayed*
+            // by the fault plane (or by a descheduled CI thread) must
+            // never be misclassified as lost, or the outcome trace
+            // would depend on wall-clock timing and break the
+            // same-seed determinism contract.
+            pending_timeout: Duration::from_secs(2),
+        }
+    }
+
+    /// No faults at all — the harness itself must pass clean.
+    pub fn nominal(seed: u64) -> Scenario {
+        Scenario::base("nominal", seed)
+    }
+
+    /// One shard's engine dies after the first round; its traffic must
+    /// fall back to the host slow path with byte-exact responses (the
+    /// paper's fallback story).
+    pub fn engine_failover(seed: u64) -> Scenario {
+        Scenario { fail_engines: vec![(1, 0)], ..Scenario::base("engine_failover", seed) }
+    }
+
+    /// Engine dies, then comes back: offloading must resume.
+    pub fn engine_restart(seed: u64) -> Scenario {
+        Scenario {
+            rounds: 6,
+            fail_engines: vec![(1, 0)],
+            restore_engines: vec![(4, 0)],
+            ..Scenario::base("engine_restart", seed)
+        }
+    }
+
+    /// Probabilistic failures, losses and delays on every shard's SSD
+    /// queue: failed ops and lost completions must surface as ERR in
+    /// bounded time, never as hangs or wrong bytes.
+    pub fn ssd_chaos(seed: u64) -> Scenario {
+        Scenario {
+            rounds: 6,
+            faults: FaultConfig {
+                seed,
+                ssd: SsdFaultConfig {
+                    fail_p: 0.08,
+                    drop_p: 0.08,
+                    delay_p: 0.25,
+                    delay_polls: 3,
+                },
+                ..Default::default()
+            },
+            ..Scenario::base("ssd_chaos", seed)
+        }
+    }
+
+    /// Segment drop/duplication/reordering on the client→server wire
+    /// and duplication/reordering on the way back: TCP recovery
+    /// (dup-ACK fast retransmit + `retransmit_all`) must make every
+    /// response byte-exact with zero errors.
+    pub fn wire_chaos(seed: u64) -> Scenario {
+        Scenario {
+            faults: FaultConfig {
+                seed,
+                wire_up: WireFaultConfig { drop_p: 0.15, dup_p: 0.15, reorder_p: 0.4 },
+                // No server→client drops: nothing in the model
+                // retransmits on a silent response loss.
+                wire_down: WireFaultConfig { drop_p: 0.0, dup_p: 0.15, reorder_p: 0.4 },
+                ..Default::default()
+            },
+            ..Scenario::base("wire_chaos", seed)
+        }
+    }
+
+    /// Every engine failed (all traffic on the host slow path), then
+    /// every poll group stalled mid-run: the file service must absorb
+    /// the stall and drain the backlog with zero errors.
+    pub fn group_stall(seed: u64) -> Scenario {
+        let base = Scenario::base("group_stall", seed);
+        Scenario {
+            fail_engines: (0..base.shards).map(|s| (0, s)).collect(),
+            stall_groups: Some((1, 3000)),
+            ..base
+        }
+    }
+
+    /// Everything at once.
+    pub fn everything(seed: u64) -> Scenario {
+        let base = Scenario::base("everything", seed);
+        Scenario {
+            rounds: 6,
+            faults: FaultConfig {
+                seed,
+                ssd: SsdFaultConfig {
+                    fail_p: 0.05,
+                    drop_p: 0.05,
+                    delay_p: 0.2,
+                    delay_polls: 3,
+                },
+                host_ssd: SsdFaultConfig {
+                    fail_p: 0.05,
+                    drop_p: 0.05,
+                    delay_p: 0.2,
+                    delay_polls: 3,
+                },
+                wire_up: WireFaultConfig { drop_p: 0.1, dup_p: 0.1, reorder_p: 0.3 },
+                wire_down: WireFaultConfig { drop_p: 0.0, dup_p: 0.1, reorder_p: 0.3 },
+            },
+            fail_engines: vec![(2, 1)],
+            stall_groups: Some((3, 1500)),
+            ..base
+        }
+    }
+
+    /// The whole named suite for one seed.
+    pub fn all(seed: u64) -> Vec<Scenario> {
+        vec![
+            Scenario::nominal(seed),
+            Scenario::engine_failover(seed),
+            Scenario::engine_restart(seed),
+            Scenario::ssd_chaos(seed),
+            Scenario::wire_chaos(seed),
+            Scenario::group_stall(seed),
+            Scenario::everything(seed),
+        ]
+    }
+
+    /// Total requests the scenario issues.
+    pub fn total_requests(&self) -> u64 {
+        (self.rounds * self.shards * self.batch) as u64
+    }
+}
+
+/// What a scenario run observed.
+pub struct ScenarioReport {
+    pub name: &'static str,
+    pub seed: u64,
+    /// OK responses (every one verified byte-exact).
+    pub ok: u64,
+    /// ERR responses (every one verified payload-free).
+    pub err: u64,
+    /// `(msg_id, idx, status)` per request, sorted — the deterministic
+    /// outcome trace.
+    pub outcomes: Vec<(u64, u16, u8)>,
+    /// Canonical fault schedule ([`FaultPlane::schedule`]).
+    pub schedule: Vec<FaultEvent>,
+    pub stats: DirectorShardStats,
+    pub per_shard: Vec<DirectorShardStats>,
+    pub group_stats: Vec<GroupCounters>,
+    pub elapsed: Duration,
+}
+
+impl ScenarioReport {
+    /// Injected SSD failures + drops in the schedule (the ones that
+    /// must surface as ERR responses).
+    pub fn ssd_fail_or_drop_events(&self) -> usize {
+        self.schedule
+            .iter()
+            .filter(|e| matches!(e.action, FaultAction::SsdFail | FaultAction::SsdDrop))
+            .count()
+    }
+}
+
+/// One connection's client-side state, wrapped in wire chaos.
+struct ChaosConn {
+    shard: usize,
+    tuple: FiveTuple,
+    client: ClientConn,
+    up: WireChaos,
+    down: WireChaos,
+    pending: Option<Pending>,
+    last_rx: Instant,
+}
+
+struct Pending {
+    msg_id: u64,
+    expect: usize,
+    seen: Vec<bool>,
+    got: usize,
+    expected: Vec<Vec<u8>>,
+}
+
+struct Acc {
+    ok: u64,
+    err: u64,
+    outcomes: Vec<(u64, u16, u8)>,
+}
+
+/// Build the full plane and run one scenario to completion.
+pub fn run_scenario(sc: &Scenario) -> anyhow::Result<ScenarioReport> {
+    anyhow::ensure!(
+        sc.faults.wire_down.drop_p == 0.0,
+        "scenario '{}': server->client drops are unrecoverable in this model",
+        sc.name
+    );
+    let started = Instant::now();
+    let plane = FaultPlane::new(sc.faults);
+    let logic = Arc::new(RawFileOffload);
+
+    let mut service = FileServiceConfig { pending_timeout: sc.pending_timeout, ..Default::default() };
+    if !sc.faults.host_ssd.is_off() {
+        service.ssd_faults = Some(plane.ssd_injector(FaultSite::HostSsdQueue));
+    }
+    let storage_cfg = StorageServerConfig { ssd_bytes: 32 << 20, service, ..Default::default() };
+    let storage = StorageServer::build(storage_cfg, Some(logic.clone()))?;
+    let file = storage.create_filled_file("chaos", "data", sc.file_bytes)?;
+    let fid = file.id.0;
+
+    let cfg = ShardedServerConfig {
+        shards: sc.shards,
+        engine_total: OffloadEngineConfig {
+            pending_timeout: sc.pending_timeout,
+            ..Default::default()
+        },
+        faults: Some(plane.clone()),
+        ..Default::default()
+    };
+    let server = ShardedServer::over(
+        storage,
+        cfg,
+        logic,
+        AppSignature::server_port(SERVER_PORT),
+        |_shard, st| RawFileApp::over(st, &file),
+    )?;
+    // Setup/fill is done — start injecting.
+    plane.arm_ssd();
+
+    let mut conns: Vec<ChaosConn> = (0..sc.shards)
+        .map(|s| {
+            let tuple = tuple_for_shard(
+                s,
+                sc.shards,
+                0x0a00_0001,
+                40_000 + (s as u16) * 101,
+                0x0a00_00ff,
+                SERVER_PORT,
+            );
+            ChaosConn {
+                shard: s,
+                tuple,
+                client: ClientConn::new(tuple),
+                up: plane.wire_chaos(s, true),
+                down: plane.wire_chaos(s, false),
+                pending: None,
+                last_rx: Instant::now(),
+            }
+        })
+        .collect();
+
+    let mut acc = Acc { ok: 0, err: 0, outcomes: Vec::new() };
+    for round in 0..sc.rounds {
+        // Scheduled injections pinned to this round.
+        for &(r, shard) in &sc.fail_engines {
+            if r == round {
+                anyhow::ensure!(server.set_engine_failed(shard, true), "bad shard {shard}");
+                plane.record(FaultSite::Engine(shard), FaultAction::EngineFail);
+            }
+        }
+        for &(r, shard) in &sc.restore_engines {
+            if r == round {
+                anyhow::ensure!(server.set_engine_failed(shard, false), "bad shard {shard}");
+                plane.record(FaultSite::Engine(shard), FaultAction::EngineRestore);
+            }
+        }
+        if let Some((r, iterations)) = sc.stall_groups {
+            if r == round {
+                let fe = server.storage.front_end();
+                let groups = fe.group_stats().map_err(|e| anyhow::anyhow!("{e}"))?.len();
+                // Group 0 is the fill group; 1..=shards are the shard
+                // host apps.
+                for g in 1..groups {
+                    fe.inject_group_stall(g, iterations)
+                        .map_err(|e| anyhow::anyhow!("{e}"))?;
+                    plane.record(FaultSite::PollGroup(g), FaultAction::GroupStall(iterations));
+                }
+            }
+        }
+
+        // Send one batch per connection (msg ids and offsets derive
+        // from (seed, msg_id) alone, so the workload is identical run
+        // to run regardless of timing).
+        for conn in conns.iter_mut() {
+            let msg_id = (round * sc.shards + conn.shard) as u64 + 1;
+            let mut mrng = Rng::new(sc.seed ^ msg_id.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+            let mut requests = Vec::with_capacity(sc.batch);
+            let mut expected = Vec::with_capacity(sc.batch);
+            for _ in 0..sc.batch {
+                let offset = mrng.next_range(sc.file_bytes - sc.read_size as u64);
+                requests.push(AppRequest::Read { file_id: fid, offset, size: sc.read_size });
+                expected.push(RandomIoGen::expected_fill(offset, sc.read_size as usize));
+            }
+            let msg = NetMsg { msg_id, requests };
+            let segs = conn.up.apply(conn.client.send_msg(&msg));
+            if !segs.is_empty() {
+                server.send(&conn.tuple, segs)?;
+            }
+            conn.pending = Some(Pending {
+                msg_id,
+                expect: sc.batch,
+                seen: vec![false; sc.batch],
+                got: 0,
+                expected,
+            });
+            conn.last_rx = Instant::now();
+        }
+
+        // Drive every connection's batch to full resolution.
+        let deadline = Instant::now() + sc.round_timeout;
+        loop {
+            let mut all_done = true;
+            for conn in conns.iter_mut() {
+                if conn.pending.as_ref().is_some_and(|p| p.got < p.expect) {
+                    all_done = false;
+                    pump_conn(sc, &server, conn, &mut acc)?;
+                }
+            }
+            if all_done {
+                break;
+            }
+            anyhow::ensure!(
+                Instant::now() < deadline,
+                "scenario '{}' (seed {}): round {round} did not complete in {:?}",
+                sc.name,
+                sc.seed,
+                sc.round_timeout
+            );
+        }
+    }
+
+    let total = sc.total_requests();
+    anyhow::ensure!(
+        acc.ok + acc.err == total,
+        "scenario '{}': {} + {} responses != {} requests",
+        sc.name,
+        acc.ok,
+        acc.err,
+        total
+    );
+    acc.outcomes.sort_unstable();
+    Ok(ScenarioReport {
+        name: sc.name,
+        seed: sc.seed,
+        ok: acc.ok,
+        err: acc.err,
+        outcomes: acc.outcomes,
+        schedule: plane.schedule(),
+        stats: server.stats(),
+        per_shard: server.shard_stats(),
+        group_stats: server
+            .storage
+            .front_end()
+            .group_stats()
+            .map_err(|e| anyhow::anyhow!("{e}"))?,
+        elapsed: started.elapsed(),
+    })
+}
+
+/// One pump step for one connection: absorb a server batch (through
+/// downstream chaos), verify and account its responses, send ACKs back
+/// (through upstream chaos); on a receive stall, fire the client's
+/// timeout retransmission.
+fn pump_conn(
+    sc: &Scenario,
+    server: &ShardedServer,
+    conn: &mut ChaosConn,
+    acc: &mut Acc,
+) -> anyhow::Result<()> {
+    match server.recv_timeout(conn.shard, Duration::from_millis(5)) {
+        Some((tuple, segs)) => {
+            anyhow::ensure!(
+                tuple == conn.tuple,
+                "shard {} emitted segments for a connection it does not own",
+                conn.shard
+            );
+            conn.last_rx = Instant::now();
+            let segs = conn.down.apply(segs);
+            let mut acks = Vec::new();
+            let resps = conn.client.on_segments(&segs, &mut acks);
+            let acks = conn.up.apply(acks);
+            if !acks.is_empty() {
+                server.send(&conn.tuple, acks)?;
+            }
+            let Some(p) = conn.pending.as_mut() else { return Ok(()) };
+            for r in resps {
+                if r.msg_id != p.msg_id {
+                    continue; // late response from an earlier round
+                }
+                let idx = r.idx as usize;
+                if idx >= p.expect || p.seen[idx] {
+                    continue; // duplicate (TCP retransmit)
+                }
+                p.seen[idx] = true;
+                p.got += 1;
+                if r.status == NetResp::OK {
+                    anyhow::ensure!(
+                        r.payload == p.expected[idx],
+                        "scenario '{}' (seed {}): OK response with WRONG BYTES \
+                         (msg {} idx {idx})",
+                        sc.name,
+                        sc.seed,
+                        r.msg_id
+                    );
+                    acc.ok += 1;
+                } else {
+                    anyhow::ensure!(
+                        r.payload.is_empty(),
+                        "scenario '{}': ERR response carried payload",
+                        sc.name
+                    );
+                    acc.err += 1;
+                }
+                acc.outcomes.push((r.msg_id, r.idx, r.status));
+            }
+        }
+        None => {
+            // Nothing from the server: if the stall persists, walk the
+            // timeout path — retransmit everything outstanding on
+            // connection 1 (recovers upstream segment drops).
+            if conn.last_rx.elapsed() >= Duration::from_millis(50) {
+                let re = conn.up.apply(conn.client.ep.retransmit_all());
+                if !re.is_empty() {
+                    server.send(&conn.tuple, re)?;
+                }
+                conn.last_rx = Instant::now();
+            }
+        }
+    }
+    Ok(())
+}

@@ -253,6 +253,13 @@ impl DdsClient {
         Ok(ctrl_call!(self, GroupStats {}))
     }
 
+    /// Fault plane: stall poll group `group` (by registration index)
+    /// for `iterations` service iterations. Returns whether the group
+    /// exists.
+    pub fn inject_group_stall(&self, group: usize, iterations: u32) -> Result<bool, LibError> {
+        Ok(ctrl_call!(self, InjectGroupStall { group: group, iterations: iterations }))
+    }
+
     /// `CreatePoll` (§4.2): allocate request/response rings for the
     /// group and register them with the DPU driver for DMA.
     pub fn create_poll(&self) -> Result<Arc<PollGroup>, LibError> {

@@ -65,15 +65,20 @@ impl Doorbell {
     }
 
     /// Wait until the sequence passes `seen` or `timeout` elapses.
-    /// Returns true if woken by a ring.
+    /// Returns true if the sequence advanced.
+    ///
+    /// The verdict comes from re-checking the sequence under the lock,
+    /// NOT from the condvar's timed-out flag: a ring that lands while a
+    /// spurious wakeup has us near the timeout boundary must still
+    /// report as a wake, and a spurious wakeup alone must never report
+    /// one. The sequence is the ground truth; the timeout flag is not.
     pub fn wait(&self, seen: u64, timeout: std::time::Duration) -> bool {
         let s = self.state.lock().unwrap();
         if *s > seen {
             return true;
         }
-        let (s, res) = self.cv.wait_timeout_while(s, timeout, |s| *s <= seen).unwrap();
-        drop(s);
-        !res.timed_out()
+        let (s, _res) = self.cv.wait_timeout_while(s, timeout, |s| *s <= seen).unwrap();
+        *s > seen
     }
 }
 
@@ -92,6 +97,10 @@ pub enum ControlMsg {
     /// Per-group service counters (requests drained / responses
     /// delivered / in flight), indexed by group id.
     GroupStats { reply: mpsc::Sender<Vec<GroupCounters>> },
+    /// Fault plane: stall one poll group for N service iterations (the
+    /// service neither drains its request ring nor delivers its
+    /// responses while stalled). Replies whether the group exists.
+    InjectGroupStall { group: usize, iterations: u32, reply: mpsc::Sender<bool> },
     SyncMetadata { reply: mpsc::Sender<Result<(), FsError>> },
     Shutdown,
 }
@@ -105,6 +114,11 @@ pub struct GroupCounters {
     pub delivered: u64,
     /// Requests accepted but not yet delivered.
     pub outstanding: usize,
+    /// Service iterations this group spent fault-stalled.
+    pub stalled: u64,
+    /// Staging slots aborted by the pending-timeout (lost SSD
+    /// completions surfaced as Error responses).
+    pub timed_out: u64,
 }
 
 /// The shared rings + doorbell of one notification group.
@@ -131,6 +145,14 @@ pub struct FileServiceConfig {
     pub extra_copy: bool,
     /// Injected per-DMA-op latency (0 = off).
     pub dma_latency_ns: u64,
+    /// How long a staging slot may sit pending before the service gives
+    /// up on its SSD completion and delivers an Error response
+    /// (lost-completion recovery; in-order delivery would otherwise
+    /// wedge the whole group behind one lost interrupt).
+    pub pending_timeout: std::time::Duration,
+    /// Optional fault injector for the service's SSD queue (the host
+    /// slow path's hook point in the fault plane).
+    pub ssd_faults: Option<crate::fault::SsdFaultInjector>,
 }
 
 impl Default for FileServiceConfig {
@@ -144,6 +166,8 @@ impl Default for FileServiceConfig {
             delivery_batch: 1,
             extra_copy: false,
             dma_latency_ns: 0,
+            pending_timeout: std::time::Duration::from_secs(5),
+            ssd_faults: None,
         }
     }
 }
@@ -155,6 +179,12 @@ struct ServiceGroup {
     requests: u64,
     /// Responses delivered to this group's ring.
     delivered: u64,
+    /// Fault plane: remaining stall iterations (skip intake+delivery).
+    stall: u32,
+    /// Iterations spent stalled (monotonic).
+    stalled: u64,
+    /// Slots aborted by the pending-timeout (monotonic).
+    timed_out: u64,
 }
 
 /// Handle for a spawned service; stops the thread on drop.
@@ -201,11 +231,14 @@ impl FileService {
     /// Build a service; returns `(service, control sender)`.
     pub fn new(
         dpufs: Arc<RwLock<DpuFs>>,
-        aio: AsyncSsd,
+        mut aio: AsyncSsd,
         cfg: FileServiceConfig,
         logic: Option<Arc<dyn OffloadLogic>>,
         cache: Arc<CuckooCache>,
     ) -> (Self, mpsc::Sender<ControlMsg>) {
+        if let Some(inj) = cfg.ssd_faults.clone() {
+            aio.attach_faults(inj);
+        }
         let (tx, rx) = mpsc::channel();
         let dma = if cfg.dma_latency_ns > 0 {
             DmaChannel::with_latency(cfg.dma_latency_ns)
@@ -294,6 +327,9 @@ impl FileService {
                         staging: OrderedStaging::new(slots),
                         requests: 0,
                         delivered: 0,
+                        stall: 0,
+                        stalled: 0,
+                        timed_out: 0,
                     });
                     let _ = reply.send(self.groups.len() - 1);
                 }
@@ -305,9 +341,18 @@ impl FileService {
                             requests: g.requests,
                             delivered: g.delivered,
                             outstanding: g.staging.outstanding(),
+                            stalled: g.stalled,
+                            timed_out: g.timed_out,
                         })
                         .collect();
                     let _ = reply.send(stats);
+                }
+                ControlMsg::InjectGroupStall { group, iterations, reply } => {
+                    let known = group < self.groups.len();
+                    if known {
+                        self.groups[group].stall = iterations;
+                    }
+                    let _ = reply.send(known);
                 }
                 ControlMsg::SyncMetadata { reply } => {
                     let r = self.dpufs.write().unwrap().sync_metadata();
@@ -332,6 +377,14 @@ impl FileService {
         let mut any = false;
         for k in 0..n {
             let gi = (start + k) % n;
+            // Fault plane: a stalled group is skipped wholesale — its
+            // request ring backs up and its responses sit buffered until
+            // the stall budget runs out. The budget is decremented by
+            // the delivery pass (which runs after intake), so both
+            // passes skip the group for exactly `stall` iterations.
+            if self.groups[gi].stall > 0 {
+                continue;
+            }
             // Don't drain more than staging can absorb (preserves the
             // §4.3 no-overlap invariant).
             if self.groups[gi].staging.free_slots() < 64 {
@@ -464,9 +517,21 @@ impl FileService {
         }
         let start = self.rr_deliver % n;
         self.rr_deliver = self.rr_deliver.wrapping_add(1);
+        let pending_timeout = self.cfg.pending_timeout;
         let mut any = false;
         for k in 0..n {
             let g = &mut self.groups[(start + k) % n];
+            if g.stall > 0 {
+                // Last pass of this service iteration: consume one
+                // stall tick (intake already skipped on the same tick).
+                g.stall -= 1;
+                g.stalled += 1;
+                continue;
+            }
+            // Lost-completion recovery: abort slots stuck pending past
+            // the timeout so one lost interrupt can't wedge the group's
+            // in-order delivery forever.
+            g.timed_out += g.staging.fail_stalled(pending_timeout) as u64;
             g.staging.advance_buffered();
             if g.staging.buffered() < self.cfg.delivery_batch {
                 continue;
@@ -540,5 +605,45 @@ mod tests {
         let db = Doorbell::new();
         let seen = db.seq();
         assert!(!db.wait(seen, std::time::Duration::from_millis(10)));
+    }
+
+    /// The wait verdict must be the sequence, not the condvar's
+    /// timed-out flag: race rings right at the timeout boundary and
+    /// check both directions of the implication on every outcome.
+    #[test]
+    fn doorbell_wait_verdict_tracks_sequence_at_timeout_boundary() {
+        use std::time::Duration;
+        let db = Doorbell::new();
+        for round in 0..60u64 {
+            let seen = db.seq();
+            let db2 = db.clone();
+            // Ring somewhere in [0, 3) ms while the waiter uses ~1.5 ms,
+            // so rings land before, around, and after the boundary.
+            let delay = Duration::from_micros((round % 6) * 500);
+            let t = std::thread::spawn(move || {
+                std::thread::sleep(delay);
+                db2.ring();
+            });
+            let woke = db.wait(seen, Duration::from_micros(1500));
+            // `true` must mean the sequence really advanced…
+            if woke {
+                assert!(db.seq() > seen, "round {round}: woke without a ring");
+            }
+            t.join().unwrap();
+            // …and once the ring has landed, a zero-timeout wait (all
+            // boundary, no budget) must still see it.
+            assert!(db.wait(seen, Duration::ZERO), "round {round}: ring lost at boundary");
+        }
+    }
+
+    /// A stale `seen` from before earlier rings never blocks.
+    #[test]
+    fn doorbell_wait_returns_immediately_when_already_passed() {
+        let db = Doorbell::new();
+        db.ring();
+        db.ring();
+        let start = std::time::Instant::now();
+        assert!(db.wait(0, std::time::Duration::from_secs(5)));
+        assert!(start.elapsed() < std::time::Duration::from_secs(1));
     }
 }

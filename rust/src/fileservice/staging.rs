@@ -11,6 +11,8 @@
 //! * `TailC` (**completed/delivered**): end of responses DMA-written to
 //!   the host response ring. `TailB - TailC ≥ batch` triggers delivery.
 
+use std::time::{Duration, Instant};
+
 use crate::dpufs::Extent;
 
 /// Status of one pre-allocated response slot.
@@ -30,6 +32,8 @@ struct Slot {
     extents_remaining: usize,
     /// Byte offset in `data` where each extent starts.
     extent_offsets: Vec<usize>,
+    /// Allocation time — reference point for [`OrderedStaging::fail_stalled`].
+    issued: Instant,
 }
 
 /// Fixed-capacity ring of pre-allocated response slots with the three
@@ -87,6 +91,7 @@ impl OrderedStaging {
             data: vec![0u8; payload],
             extents_remaining: usize::MAX, // until set_extents
             extent_offsets: Vec::new(),
+            issued: Instant::now(),
         });
         self.tail_a += 1;
         Some(idx)
@@ -143,10 +148,43 @@ impl OrderedStaging {
     }
 
     /// Mark a slot failed (error code instead of pending, §4.3).
+    /// Stale failures — a late error completion for a slot index that
+    /// was already delivered (e.g. aborted by [`Self::fail_stalled`])
+    /// and since recycled — are ignored, exactly like stale successes
+    /// in [`Self::complete_extent`].
     pub fn fail(&mut self, slot: u64) {
+        if slot < self.tail_c || slot >= self.tail_a {
+            return; // stale completion for a recycled slot index
+        }
         let pos = (slot % self.capacity() as u64) as usize;
         if let Some(s) = self.slots[pos].as_mut() {
             s.status = StagedStatus::Failed;
+        }
+    }
+
+    /// Lost-completion recovery: fail slots at the front of the pending
+    /// window (`TailB`) that have sat pending longer than `timeout`, so
+    /// one lost SSD completion can't block in-order delivery forever.
+    /// Only the window head needs checking — a stuck slot behind a
+    /// stuck head becomes the head once the first is failed. Returns
+    /// how many slots were aborted.
+    pub fn fail_stalled(&mut self, timeout: Duration) -> usize {
+        let mut failed = 0;
+        loop {
+            self.advance_buffered();
+            if self.tail_b >= self.tail_a {
+                return failed;
+            }
+            let pos = (self.tail_b % self.capacity() as u64) as usize;
+            match self.slots[pos].as_mut() {
+                Some(s) if s.status == StagedStatus::Pending
+                    && s.issued.elapsed() >= timeout =>
+                {
+                    s.status = StagedStatus::Failed;
+                    failed += 1;
+                }
+                _ => return failed,
+            }
         }
     }
 
@@ -264,6 +302,54 @@ mod tests {
         // no state corruption.
         st.complete_extent(a, 0, &[9, 9, 9], false);
         assert_eq!(st.buffered(), 0);
+        // A late ERROR completion for the delivered slot is equally
+        // stale: slot index 2 recycles slot 0's ring position, and a
+        // late fail(0) must not mark that healthy new occupant Failed.
+        let b = st.allocate(2, 16).unwrap();
+        let c = st.allocate(3, 16).unwrap();
+        assert_eq!(c % 2, a % 2, "c recycles a's ring position");
+        st.set_extents(b, &[ext(0, 3)]);
+        st.set_extents(c, &[ext(4, 3)]);
+        st.fail(a);
+        st.complete_extent(b, 0, &[7, 7, 7], false);
+        st.complete_extent(c, 0, &[8, 8, 8], false);
+        st.advance_buffered();
+        let (id, status, _) = st.peek_deliverable().unwrap();
+        assert_eq!((id, status), (2, StagedStatus::Done));
+        st.pop_delivered();
+        let (id, status, data) = st.peek_deliverable().unwrap();
+        assert_eq!((id, status), (3, StagedStatus::Done), "stale fail hit the new occupant");
+        assert_eq!(data, vec![8, 8, 8]);
+    }
+
+    #[test]
+    fn fail_stalled_unblocks_in_order_delivery() {
+        let mut st = OrderedStaging::new(8);
+        let a = st.allocate(1, crate::proto::FileResponse::HEADER_LEN + 4).unwrap();
+        let b = st.allocate(2, crate::proto::FileResponse::HEADER_LEN + 4).unwrap();
+        st.set_extents(a, &[ext(0, 4)]);
+        st.set_extents(b, &[ext(4, 4)]);
+        // b completes; a's completion is lost. Nothing deliverable yet.
+        st.complete_extent(b, 0, &[2, 2, 2, 2], false);
+        assert_eq!(st.fail_stalled(Duration::from_secs(60)), 0, "not stalled yet");
+        st.advance_buffered();
+        assert!(st.peek_deliverable().is_none());
+        // Timeout elapses (zero budget): a is aborted, both deliver in
+        // order — a as Failed, b as Done.
+        assert_eq!(st.fail_stalled(Duration::ZERO), 1);
+        st.advance_buffered();
+        let (id, status, data) = st.peek_deliverable().unwrap();
+        assert_eq!((id, status), (1, StagedStatus::Failed));
+        assert!(data.is_empty());
+        st.pop_delivered();
+        let (id, status, data) = st.peek_deliverable().unwrap();
+        assert_eq!((id, status), (2, StagedStatus::Done));
+        assert_eq!(data, vec![2, 2, 2, 2]);
+        // A completed head is never aborted.
+        let c = st.allocate(3, crate::proto::FileResponse::HEADER_LEN).unwrap();
+        st.set_extents(c, &[ext(8, 4)]);
+        st.complete_extent(c, 0, &[], false);
+        assert_eq!(st.fail_stalled(Duration::ZERO), 0);
     }
 
     #[test]

@@ -15,7 +15,9 @@
 //!   ([`offload`], [`cache`]), the PJRT runtime that executes the
 //!   AOT-compiled Pallas kernels from the hot path ([`runtime`]), and
 //!   the RSS-sharded deployment that runs the whole data path once per
-//!   DPU core ([`director::shard`], [`coordinator::sharded`]).
+//!   DPU core ([`director::shard`], [`coordinator::sharded`]), and the
+//!   seeded fault-injection plane with its chaos scenario harness
+//!   ([`fault`], [`fault::scenario`]).
 //! * **Calibrated testbed plane** ([`sim`], [`baselines`]) — a
 //!   discrete-virtual-time queueing testbed standing in for the paper's
 //!   BlueField-2 + EPYC + NVMe + 100 GbE hardware, calibrated against the
@@ -33,6 +35,7 @@ pub mod coordinator;
 pub mod director;
 pub mod dma;
 pub mod dpufs;
+pub mod fault;
 pub mod filelib;
 pub mod fileservice;
 pub mod metrics;

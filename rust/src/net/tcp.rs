@@ -315,6 +315,81 @@ mod tests {
         assert_eq!(host.dup_acks_sent, 0);
     }
 
+    /// Regression: after `retransmit_all`, the receiver sees every
+    /// byte twice — `on_segment` must re-ACK the duplicates but never
+    /// deliver a byte to the application twice.
+    #[test]
+    fn no_double_delivery_after_retransmit_all() {
+        let mut a = TcpEndpoint::new();
+        let mut b = TcpEndpoint::new();
+        let data: Vec<u8> = (0..3 * MSS).map(|i| (i % 233) as u8).collect();
+        let segs = a.send(&data);
+        // Everything arrives, but the ACKs back to `a` are "lost".
+        for s in &segs {
+            b.on_segment(s);
+        }
+        assert_eq!(b.deliver(), data);
+        // Sender times out and retransmits the whole window.
+        let retrans = a.retransmit_all();
+        assert_eq!(retrans.len(), segs.len(), "nothing was acked");
+        let mut acks = Vec::new();
+        for s in &retrans {
+            acks.extend(b.on_segment(s));
+        }
+        assert!(b.deliver().is_empty(), "duplicates re-delivered to the app");
+        assert_eq!(b.rcv_nxt(), data.len() as u64, "receive cursor must not move");
+        // The duplicates still draw re-ACKs, so the sender can finally
+        // prune its retransmit queue.
+        assert!(!acks.is_empty());
+        for s in &acks {
+            a.on_segment(s);
+        }
+        assert_eq!(a.bytes_in_flight(), 0);
+    }
+
+    /// Regression: reordered + duplicated delivery (including a full
+    /// duplicate pass after completion) delivers each byte exactly once.
+    #[test]
+    fn reordered_duplicates_deliver_each_byte_once() {
+        let mut a = TcpEndpoint::new();
+        let mut b = TcpEndpoint::new();
+        let data: Vec<u8> = (0..5 * MSS).map(|i| (i % 229) as u8).collect();
+        let segs = a.send(&data);
+        // Adversarial arrival order with duplicates interleaved, every
+        // segment present at least once.
+        for &i in &[4usize, 1, 1, 3, 0, 2, 2, 0, 4, 3] {
+            b.on_segment(&segs[i]);
+        }
+        assert_eq!(b.deliver(), data);
+        // A late full retransmission storm changes nothing.
+        for s in segs.iter().rev() {
+            b.on_segment(s);
+        }
+        assert!(b.deliver().is_empty());
+        assert_eq!(b.rcv_nxt(), data.len() as u64);
+    }
+
+    /// Regression: `retransmit_all` resends only the unacked suffix —
+    /// a partial cumulative ACK prunes the front of the window.
+    #[test]
+    fn retransmit_all_respects_cumulative_acks() {
+        let mut a = TcpEndpoint::new();
+        let mut b = TcpEndpoint::new();
+        let data = vec![8u8; 4 * MSS];
+        let segs = a.send(&data);
+        // Only segment 0 arrives; its ACK reaches the sender.
+        let acks = b.on_segment(&segs[0]);
+        for s in &acks {
+            a.on_segment(s);
+        }
+        let retrans = a.retransmit_all();
+        assert_eq!(retrans.len(), segs.len() - 1);
+        assert_eq!(retrans[0].seq, MSS as u64, "retransmission starts at snd_una");
+        exchange(&mut a, &mut b, retrans);
+        assert_eq!(b.deliver(), data);
+        assert_eq!(a.bytes_in_flight(), 0);
+    }
+
     #[test]
     fn timeout_retransmit_covers_tail_loss() {
         let mut a = TcpEndpoint::new();

@@ -18,6 +18,7 @@
 //! ablation (Fig 23).
 
 use std::sync::{Arc, RwLock};
+use std::time::{Duration, Instant};
 
 use super::api::{OffloadLogic, RoutedReq};
 use super::mempool::{MemPool, PooledBuf};
@@ -49,6 +50,10 @@ struct Context {
     extents_remaining: usize,
     /// Start position of each extent's bytes within `buf`.
     extent_offsets: Vec<usize>,
+    /// When the context was booked — the reference point of the
+    /// pending-timeout recovery (a lost SSD completion must surface as
+    /// ERR, never as a stuck ring head).
+    issued_at: Instant,
 }
 
 /// Engine configuration.
@@ -62,6 +67,10 @@ pub struct OffloadEngineConfig {
     pub pool_buf_size: usize,
     /// Straw-man mode with the extra data copy (Fig 23 ablation).
     pub copy_mode: bool,
+    /// How long the ring head may sit pending before the engine gives
+    /// up on its SSD completion and emits ERR (lost-completion
+    /// recovery; ordered emission would otherwise stall forever).
+    pub pending_timeout: Duration,
 }
 
 impl Default for OffloadEngineConfig {
@@ -71,6 +80,7 @@ impl Default for OffloadEngineConfig {
             pool_bufs: 256,
             pool_buf_size: 64 << 10,
             copy_mode: false,
+            pending_timeout: Duration::from_secs(5),
         }
     }
 }
@@ -93,6 +103,7 @@ impl OffloadEngineConfig {
             pool_bufs: (self.pool_bufs / shards).max(Self::MIN_PER_SHARD),
             pool_buf_size: self.pool_buf_size,
             copy_mode: self.copy_mode,
+            pending_timeout: self.pending_timeout,
         }
     }
 }
@@ -110,10 +121,19 @@ pub struct OffloadEngine {
     head: u64,
     tail: u64,
     copy_mode: bool,
+    pending_timeout: Duration,
+    /// Failure-injected state: a failed engine accepts nothing — every
+    /// request bounces to the host slow path (the paper's fallback) and
+    /// in-flight contexts are aborted as ERR.
+    failed: bool,
     /// Stats.
     pub offloaded: u64,
     pub bounced_full: u64,
     pub bounced_untranslatable: u64,
+    /// Requests bounced because the engine was marked failed.
+    pub bounced_engine_failed: u64,
+    /// Contexts aborted by the pending-timeout (lost completions).
+    pub timed_out: u64,
 }
 
 impl OffloadEngine {
@@ -137,10 +157,36 @@ impl OffloadEngine {
             head: 0,
             tail: 0,
             copy_mode: cfg.copy_mode,
+            pending_timeout: cfg.pending_timeout,
+            failed: false,
             offloaded: 0,
             bounced_full: 0,
             bounced_untranslatable: 0,
+            bounced_engine_failed: 0,
+            timed_out: 0,
         }
+    }
+
+    /// Inject or clear engine failure. Failing aborts every in-flight
+    /// context (emitted as ERR by the next `complete_pending`), and all
+    /// subsequent requests bounce to the host until restored.
+    pub fn set_failed(&mut self, failed: bool) {
+        if self.failed == failed {
+            return;
+        }
+        self.failed = failed;
+        if failed {
+            for idx in self.head..self.tail {
+                let slot = (idx % self.cap()) as usize;
+                if let Some(ctx) = self.ring[slot].as_mut() {
+                    ctx.status = ContextStatus::Failed;
+                }
+            }
+        }
+    }
+
+    pub fn is_failed(&self) -> bool {
+        self.failed
     }
 
     fn cap(&self) -> u64 {
@@ -156,6 +202,15 @@ impl OffloadEngine {
         reqs: Vec<RoutedReq>,
         responses: &mut Vec<NetResp>,
     ) -> Vec<RoutedReq> {
+        if self.failed {
+            // Whole-engine failure (§ fault plane): drain whatever the
+            // ring still owes, then route the entire batch to the host
+            // slow path — the client must see no difference beyond
+            // latency.
+            self.complete_pending(responses);
+            self.bounced_engine_failed += reqs.len() as u64;
+            return reqs;
+        }
         let mut bounced = Vec::new();
         let mut reqs = reqs.into_iter();
         while let Some(routed) = reqs.next() {
@@ -227,6 +282,7 @@ impl OffloadEngine {
                 status: ContextStatus::Pending,
                 extents_remaining: extents.len(),
                 extent_offsets,
+                issued_at: Instant::now(),
             });
             self.tail += 1;
             self.offloaded += 1;
@@ -279,11 +335,22 @@ impl OffloadEngine {
                 }
             }
         }
-        // Emit in order from the head (Fig 13 lines 19-27).
+        // Emit in order from the head (Fig 13 lines 19-27). A head
+        // context whose completion never arrived (dropped by a fault,
+        // device gone) is aborted once it exceeds the pending timeout —
+        // ordered emission must surface ERR, not a hang.
         while self.head < self.tail {
             let slot = (self.head % self.cap()) as usize;
-            let done = match self.ring[slot].as_ref() {
-                Some(ctx) => ctx.status != ContextStatus::Pending,
+            let done = match self.ring[slot].as_mut() {
+                Some(ctx) => {
+                    if ctx.status == ContextStatus::Pending
+                        && ctx.issued_at.elapsed() >= self.pending_timeout
+                    {
+                        ctx.status = ContextStatus::Failed;
+                        self.timed_out += 1;
+                    }
+                    ctx.status != ContextStatus::Pending
+                }
                 None => false,
             };
             if !done {
@@ -455,6 +522,124 @@ mod tests {
                 assert!(w[0].idx < w[1].idx);
             }
         }
+    }
+
+    #[test]
+    fn failed_engine_bounces_batch_and_aborts_in_flight() {
+        use crate::fault::{FaultConfig, FaultPlane, FaultSite, SsdFaultConfig};
+        let ssd = Arc::new(Ssd::new(64 << 20, 512));
+        let mut fs = DpuFs::format(ssd.clone(), FsConfig::default()).unwrap();
+        let d = fs.create_directory("d").unwrap();
+        let f = fs.create_file(d, "f").unwrap();
+        fs.write(f, 0, &vec![3u8; 4096]).unwrap();
+        let f = f.0;
+        // Drop the first request's completion so it is deterministically
+        // still in flight when the engine dies.
+        let plane = FaultPlane::new(FaultConfig {
+            seed: 1,
+            ssd: SsdFaultConfig { drop_p: 1.0, ..Default::default() },
+            ..Default::default()
+        });
+        let inj = plane.ssd_injector(FaultSite::SsdQueue(0));
+        let mut aio = AsyncSsd::new_inline(ssd);
+        aio.attach_faults(inj.clone());
+        plane.arm_ssd();
+        let mut engine = OffloadEngine::new(
+            Arc::new(RawFileOffload),
+            Arc::new(CuckooCache::new(64)),
+            Arc::new(RwLock::new(fs)),
+            aio,
+            OffloadEngineConfig::default(),
+        );
+        let mut responses = Vec::new();
+        let bounced = engine.execute(
+            vec![RoutedReq {
+                msg_id: 1,
+                idx: 0,
+                req: AppRequest::Read { file_id: f, offset: 0, size: 128 },
+            }],
+            &mut responses,
+        );
+        assert!(bounced.is_empty());
+        assert_eq!(engine.outstanding(), 1);
+        engine.set_failed(true);
+        assert!(engine.is_failed());
+        // The whole next batch reroutes to the host, order preserved.
+        let reqs: Vec<RoutedReq> = (0..4u16)
+            .map(|i| RoutedReq {
+                msg_id: 2,
+                idx: i,
+                req: AppRequest::Read { file_id: f, offset: 0, size: 128 },
+            })
+            .collect();
+        let bounced = engine.execute(reqs.clone(), &mut responses);
+        assert_eq!(bounced, reqs);
+        assert_eq!(engine.bounced_engine_failed, 4);
+        // The in-flight context was aborted as ERR (no hang).
+        wait_responses(&mut engine, &mut responses, 1);
+        let aborted: Vec<_> = responses.iter().filter(|r| r.msg_id == 1).collect();
+        assert_eq!(aborted.len(), 1);
+        assert_eq!(aborted[0].status, NetResp::ERR);
+        assert_eq!(engine.outstanding(), 0);
+        // Restoring the engine (faults gone) resumes offloading.
+        inj.set_armed(false);
+        engine.set_failed(false);
+        let mut responses = Vec::new();
+        let bounced = engine.execute(
+            vec![RoutedReq {
+                msg_id: 3,
+                idx: 0,
+                req: AppRequest::Read { file_id: f, offset: 512, size: 64 },
+            }],
+            &mut responses,
+        );
+        assert!(bounced.is_empty());
+        wait_responses(&mut engine, &mut responses, 1);
+        assert_eq!(responses[0].status, NetResp::OK);
+    }
+
+    #[test]
+    fn lost_completion_times_out_as_err_not_hang() {
+        use crate::fault::{FaultConfig, FaultPlane, FaultSite, SsdFaultConfig};
+        let ssd = Arc::new(Ssd::new(64 << 20, 512));
+        let mut fs = DpuFs::format(ssd.clone(), FsConfig::default()).unwrap();
+        let d = fs.create_directory("d").unwrap();
+        let f = fs.create_file(d, "f").unwrap();
+        fs.write(f, 0, &vec![3u8; 4096]).unwrap();
+        let plane = FaultPlane::new(FaultConfig {
+            seed: 1,
+            ssd: SsdFaultConfig { drop_p: 1.0, ..Default::default() },
+            ..Default::default()
+        });
+        let mut aio = AsyncSsd::new_inline(ssd);
+        aio.attach_faults(plane.ssd_injector(FaultSite::SsdQueue(0)));
+        plane.arm_ssd();
+        let mut engine = OffloadEngine::new(
+            Arc::new(RawFileOffload),
+            Arc::new(CuckooCache::new(64)),
+            Arc::new(RwLock::new(fs)),
+            aio,
+            OffloadEngineConfig {
+                pending_timeout: std::time::Duration::from_millis(50),
+                ..Default::default()
+            },
+        );
+        let mut responses = Vec::new();
+        let bounced = engine.execute(
+            vec![RoutedReq {
+                msg_id: 9,
+                idx: 0,
+                req: AppRequest::Read { file_id: f.0, offset: 0, size: 512 },
+            }],
+            &mut responses,
+        );
+        assert!(bounced.is_empty());
+        assert!(responses.is_empty(), "completion was dropped");
+        wait_responses(&mut engine, &mut responses, 1);
+        assert_eq!(responses[0].status, NetResp::ERR);
+        assert!(responses[0].payload.is_empty());
+        assert_eq!(engine.timed_out, 1);
+        assert_eq!(engine.outstanding(), 0, "ring head advanced past the lost context");
     }
 
     #[test]

@@ -15,6 +15,7 @@ use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 
 use super::{Ssd, SsdError};
+use crate::fault::{SsdFault, SsdFaultInjector};
 
 /// A submitted operation. Buffers travel with the op (the functional
 /// analog of pointing the driver at request/response buffer memory).
@@ -35,8 +36,34 @@ pub struct Completion {
 }
 
 enum Job {
-    Op { tag: u64, op: SsdOp },
+    /// `fault` is decided at submit time so the injection stream stays
+    /// deterministic in submit order even with racing workers.
+    Op { tag: u64, op: SsdOp, fault: Option<SsdFault> },
     Stop,
+}
+
+/// Execute one op against the device, honoring an injected fault.
+/// Returns the completion to post, or `None` for a dropped completion
+/// (the op still executed — the *completion* is what got lost).
+fn run_op(ssd: &Ssd, tag: u64, op: SsdOp, fault: Option<SsdFault>) -> Option<Completion> {
+    if fault == Some(SsdFault::Fail) {
+        return Some(Completion { tag, data: Vec::new(), result: Err(SsdError::Injected) });
+    }
+    let completion = match op {
+        SsdOp::Read { addr, len } => {
+            let mut buf = vec![0u8; len];
+            let result = ssd.read_into(addr, &mut buf);
+            Completion { tag, data: buf, result }
+        }
+        SsdOp::Write { addr, data } => {
+            let result = ssd.write_from(addr, &data);
+            Completion { tag, data: Vec::new(), result }
+        }
+    };
+    if fault == Some(SsdFault::Drop) {
+        return None;
+    }
+    Some(completion)
 }
 
 /// Async facade over [`Ssd`] with `workers` SPDK-like worker threads.
@@ -54,10 +81,17 @@ pub struct AsyncSsd {
     /// Inline-mode execution target.
     inline_ssd: Option<Arc<Ssd>>,
     completions: Arc<Mutex<VecDeque<Completion>>>,
+    /// Fault-delayed completions: `(polls_remaining, completion)`;
+    /// each `poll()` call ages them by one.
+    delayed: Arc<Mutex<Vec<(u32, Completion)>>>,
+    /// Optional fault-injection hook, consulted once per submit.
+    faults: Option<SsdFaultInjector>,
     handles: Vec<JoinHandle<()>>,
     workers: usize,
     /// Queue-depth accounting: ops submitted / completions drained by
-    /// the owner of this queue.
+    /// the owner of this queue. (A fault-dropped completion is never
+    /// polled, so `in_flight` stays elevated — the queue depth a real
+    /// driver would see for a lost interrupt.)
     submitted: AtomicU64,
     polled: AtomicU64,
 }
@@ -69,11 +103,18 @@ impl AsyncSsd {
             tx: None,
             inline_ssd: Some(ssd),
             completions: Arc::new(Mutex::new(VecDeque::new())),
+            delayed: Arc::new(Mutex::new(Vec::new())),
+            faults: None,
             handles: Vec::new(),
             workers: 0,
             submitted: AtomicU64::new(0),
             polled: AtomicU64::new(0),
         }
+    }
+
+    /// Attach a fault injector; every subsequent submit consults it.
+    pub fn attach_faults(&mut self, faults: SsdFaultInjector) {
+        self.faults = Some(faults);
     }
 
     /// Per-shard submission queues over one shared device (§7).
@@ -99,27 +140,26 @@ impl AsyncSsd {
         let (tx, rx) = mpsc::channel::<Job>();
         let rx = Arc::new(Mutex::new(rx));
         let completions = Arc::new(Mutex::new(VecDeque::new()));
+        let delayed = Arc::new(Mutex::new(Vec::new()));
         let mut handles = Vec::new();
         for _ in 0..workers {
             let rx = rx.clone();
             let ssd = ssd.clone();
             let completions = completions.clone();
+            let delayed: Arc<Mutex<Vec<(u32, Completion)>>> = delayed.clone();
             handles.push(std::thread::spawn(move || loop {
                 let job = { rx.lock().unwrap().recv() };
                 match job {
-                    Ok(Job::Op { tag, op }) => {
-                        let completion = match op {
-                            SsdOp::Read { addr, len } => {
-                                let mut buf = vec![0u8; len];
-                                let result = ssd.read_into(addr, &mut buf);
-                                Completion { tag, data: buf, result }
+                    Ok(Job::Op { tag, op, fault }) => {
+                        let held = matches!(fault, Some(SsdFault::Delay(_)));
+                        if let Some(completion) = run_op(&ssd, tag, op, fault) {
+                            if held {
+                                let Some(SsdFault::Delay(polls)) = fault else { unreachable!() };
+                                delayed.lock().unwrap().push((polls, completion));
+                            } else {
+                                completions.lock().unwrap().push_back(completion);
                             }
-                            SsdOp::Write { addr, data } => {
-                                let result = ssd.write_from(addr, &data);
-                                Completion { tag, data: Vec::new(), result }
-                            }
-                        };
-                        completions.lock().unwrap().push_back(completion);
+                        }
                     }
                     Ok(Job::Stop) | Err(_) => break,
                 }
@@ -129,6 +169,8 @@ impl AsyncSsd {
             tx: Some(tx),
             inline_ssd: None,
             completions,
+            delayed,
+            faults: None,
             handles,
             workers,
             submitted: AtomicU64::new(0),
@@ -137,29 +179,44 @@ impl AsyncSsd {
     }
 
     /// Submit an operation with a caller tag; returns immediately in
-    /// worker mode, after synchronous execution in inline mode.
+    /// worker mode, after synchronous execution in inline mode. The
+    /// fault injector (if attached) is consulted here, in submit order.
     pub fn submit(&self, tag: u64, op: SsdOp) {
         self.submitted.fetch_add(1, Ordering::Relaxed);
+        let fault = self.faults.as_ref().and_then(|f| f.decide());
         if let Some(ssd) = &self.inline_ssd {
-            let completion = match op {
-                SsdOp::Read { addr, len } => {
-                    let mut buf = vec![0u8; len];
-                    let result = ssd.read_into(addr, &mut buf);
-                    Completion { tag, data: buf, result }
+            if let Some(completion) = run_op(ssd, tag, op, fault) {
+                if let Some(SsdFault::Delay(polls)) = fault {
+                    self.delayed.lock().unwrap().push((polls, completion));
+                } else {
+                    self.completions.lock().unwrap().push_back(completion);
                 }
-                SsdOp::Write { addr, data } => {
-                    let result = ssd.write_from(addr, &data);
-                    Completion { tag, data: Vec::new(), result }
-                }
-            };
-            self.completions.lock().unwrap().push_back(completion);
+            }
             return;
         }
-        self.tx.as_ref().unwrap().send(Job::Op { tag, op }).expect("ssd workers alive");
+        self.tx.as_ref().unwrap().send(Job::Op { tag, op, fault }).expect("ssd workers alive");
     }
 
-    /// Poll completed operations (drains up to `max`).
+    /// Poll completed operations (drains up to `max`). Each call ages
+    /// fault-delayed completions by one poll and releases the expired.
     pub fn poll(&self, max: usize) -> Vec<Completion> {
+        // Delayed entries can only exist when an injector is attached;
+        // keep the uninstrumented hot path free of the extra lock.
+        if self.faults.is_some() {
+            let mut d = self.delayed.lock().unwrap();
+            if !d.is_empty() {
+                let mut q = self.completions.lock().unwrap();
+                let mut i = 0;
+                while i < d.len() {
+                    if d[i].0 <= 1 {
+                        q.push_back(d.remove(i).1);
+                    } else {
+                        d[i].0 -= 1;
+                        i += 1;
+                    }
+                }
+            }
+        }
         let mut q = self.completions.lock().unwrap();
         let n = q.len().min(max);
         if n > 0 {
@@ -275,6 +332,83 @@ mod tests {
         let c1 = queues[1].poll(16);
         assert_eq!(c1[0].tag, 2);
         assert_eq!(c1[0].data, vec![5u8; 512]);
+    }
+
+    #[test]
+    fn injected_faults_fail_drop_and_delay() {
+        use crate::fault::{FaultConfig, FaultPlane, FaultSite, SsdFaultConfig};
+        // fail_p = 1.0: every op errors with Injected.
+        let plane = FaultPlane::new(FaultConfig {
+            seed: 5,
+            ssd: SsdFaultConfig { fail_p: 1.0, ..Default::default() },
+            ..Default::default()
+        });
+        let ssd = Arc::new(Ssd::new(1 << 20, 512));
+        let mut aio = AsyncSsd::new_inline(ssd.clone());
+        aio.attach_faults(plane.ssd_injector(FaultSite::SsdQueue(0)));
+        plane.arm_ssd();
+        aio.submit(1, SsdOp::Write { addr: 0, data: vec![7u8; 512] });
+        let done = aio.poll(4);
+        assert_eq!(done.len(), 1);
+        assert_eq!(done[0].result, Err(SsdError::Injected));
+        // The failed write must not have touched the device.
+        let mut buf = vec![0xffu8; 512];
+        ssd.read_into(0, &mut buf).unwrap();
+        assert!(buf.iter().all(|&b| b == 0));
+
+        // drop_p = 1.0: the op executes but the completion is lost.
+        let plane = FaultPlane::new(FaultConfig {
+            seed: 5,
+            ssd: SsdFaultConfig { drop_p: 1.0, ..Default::default() },
+            ..Default::default()
+        });
+        let mut aio = AsyncSsd::new_inline(ssd.clone());
+        aio.attach_faults(plane.ssd_injector(FaultSite::SsdQueue(0)));
+        plane.arm_ssd();
+        aio.submit(2, SsdOp::Write { addr: 0, data: vec![9u8; 512] });
+        assert!(aio.poll(4).is_empty(), "completion was dropped");
+        assert_eq!(aio.in_flight(), 1, "lost completion keeps the op in flight");
+        ssd.read_into(0, &mut buf).unwrap();
+        assert!(buf.iter().all(|&b| b == 9), "dropped COMPLETION, not the op");
+
+        // delay_p = 1.0 with 3-poll holdback.
+        let plane = FaultPlane::new(FaultConfig {
+            seed: 5,
+            ssd: SsdFaultConfig { delay_p: 1.0, delay_polls: 3, ..Default::default() },
+            ..Default::default()
+        });
+        let mut aio = AsyncSsd::new_inline(ssd);
+        aio.attach_faults(plane.ssd_injector(FaultSite::SsdQueue(0)));
+        plane.arm_ssd();
+        aio.submit(3, SsdOp::Read { addr: 0, len: 512 });
+        assert!(aio.poll(4).is_empty());
+        assert!(aio.poll(4).is_empty());
+        let done = aio.poll(4);
+        assert_eq!(done.len(), 1, "released on the delay_polls-th poll");
+        assert_eq!(done[0].data, vec![9u8; 512]);
+        assert!(done[0].result.is_ok());
+    }
+
+    #[test]
+    fn worker_mode_honors_injected_faults() {
+        use crate::fault::{FaultConfig, FaultPlane, FaultSite, SsdFaultConfig};
+        let plane = FaultPlane::new(FaultConfig {
+            seed: 11,
+            ssd: SsdFaultConfig { fail_p: 1.0, ..Default::default() },
+            ..Default::default()
+        });
+        let ssd = Arc::new(Ssd::new(1 << 20, 512));
+        let mut aio = AsyncSsd::new(ssd, 2);
+        aio.attach_faults(plane.ssd_injector(FaultSite::SsdQueue(0)));
+        plane.arm_ssd();
+        for i in 0..8 {
+            aio.submit(i, SsdOp::Read { addr: 0, len: 512 });
+        }
+        let mut done = Vec::new();
+        while done.len() < 8 {
+            done.extend(aio.poll(16));
+        }
+        assert!(done.iter().all(|c| c.result == Err(SsdError::Injected)));
     }
 
     #[test]

@@ -24,6 +24,9 @@ use std::sync::RwLock;
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub enum SsdError {
     OutOfRange { addr: u64, len: usize, capacity: u64 },
+    /// The fault-injection plane failed this op
+    /// ([`crate::fault::SsdFault::Fail`]).
+    Injected,
 }
 
 impl std::fmt::Display for SsdError {
@@ -32,6 +35,7 @@ impl std::fmt::Display for SsdError {
             SsdError::OutOfRange { addr, len, capacity } => {
                 write!(f, "I/O out of range: addr={addr} len={len} capacity={capacity}")
             }
+            SsdError::Injected => write!(f, "injected fault"),
         }
     }
 }

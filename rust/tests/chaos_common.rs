@@ -1,0 +1,15 @@
+//! Shared helper for the chaos suites (`chaos_scenarios.rs`,
+//! `chaos_determinism.rs`), included via `#[path]` so both crates use
+//! one seed source. Not a test target itself.
+
+/// Base seed for every chaos test: `DDS_CHAOS_SEED` env override first
+/// (the CI matrix and failure reproduction), then a fixed default.
+/// Always printed so any run can be replayed.
+pub fn chaos_seed() -> u64 {
+    let seed = std::env::var("DDS_CHAOS_SEED")
+        .ok()
+        .and_then(|s| s.trim().parse().ok())
+        .unwrap_or(0xD15_A66);
+    println!("chaos seed = {seed} (set DDS_CHAOS_SEED to override)");
+    seed
+}

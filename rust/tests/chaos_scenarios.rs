@@ -1,0 +1,119 @@
+//! End-to-end chaos suite: the named fault scenarios of
+//! `dds::fault::scenario` against the threaded sharded server.
+//!
+//! Every scenario is fully seeded. To reproduce a CI run, set
+//! `DDS_CHAOS_SEED=<seed>` (each test prints the seed it used).
+
+use dds::fault::{run_scenario, FaultAction, Scenario};
+
+#[path = "chaos_common.rs"]
+mod chaos_common;
+use chaos_common::chaos_seed;
+
+#[test]
+fn nominal_scenario_is_clean() {
+    let sc = Scenario::nominal(chaos_seed());
+    let r = run_scenario(&sc).expect("nominal scenario");
+    assert_eq!(r.ok, sc.total_requests(), "every response OK and byte-exact");
+    assert_eq!(r.err, 0);
+    assert!(r.schedule.is_empty(), "no faults configured, none injected: {:?}", r.schedule);
+}
+
+/// The acceptance-criterion scenario: with engine failure injected on
+/// one shard, a full request batch completes with byte-exact responses
+/// via the host slow path.
+#[test]
+fn engine_failover_completes_byte_exact_on_host_slow_path() {
+    let sc = Scenario::engine_failover(chaos_seed());
+    let r = run_scenario(&sc).expect("engine_failover scenario");
+    assert_eq!(r.err, 0, "failover must be client-invisible (no errors)");
+    assert_eq!(r.ok, sc.total_requests(), "every read byte-exact despite the dead engine");
+    // Shard 0's engine died before round 1: all its remaining rounds
+    // rerouted through the host file service.
+    let failed_over = (sc.batch * (sc.rounds - 1)) as u64;
+    assert_eq!(r.per_shard[0].reqs_failed_over, failed_over);
+    assert_eq!(r.per_shard[1].reqs_failed_over, 0, "healthy shard untouched");
+    assert_eq!(r.stats.reqs_failed_over, failed_over);
+    assert!(
+        r.schedule.iter().any(|e| e.action == FaultAction::EngineFail),
+        "scheduled failure must appear in the schedule"
+    );
+}
+
+#[test]
+fn engine_restart_resumes_offloading() {
+    let sc = Scenario::engine_restart(chaos_seed());
+    let r = run_scenario(&sc).expect("engine_restart scenario");
+    assert_eq!(r.err, 0);
+    assert_eq!(r.ok, sc.total_requests());
+    // Failed for rounds 1..4 only.
+    assert_eq!(r.per_shard[0].reqs_failed_over, (sc.batch * 3) as u64);
+    let actions: Vec<_> = r.schedule.iter().map(|e| e.action).collect();
+    assert!(actions.contains(&FaultAction::EngineFail));
+    assert!(actions.contains(&FaultAction::EngineRestore));
+}
+
+#[test]
+fn ssd_chaos_is_bounded_and_byte_exact() {
+    let sc = Scenario::ssd_chaos(chaos_seed());
+    let r = run_scenario(&sc).expect("ssd_chaos scenario");
+    // run_scenario already enforced byte-exactness and bounded
+    // completion; check the error accounting against the schedule.
+    assert_eq!(r.ok + r.err, sc.total_requests());
+    let lethal = r.ssd_fail_or_drop_events() as u64;
+    assert!(
+        r.err >= lethal,
+        "every injected fail/drop must surface as an ERR (events={lethal}, err={})",
+        r.err
+    );
+    assert!(!r.schedule.is_empty(), "chaos probabilities must fire over this many ops");
+    // Lost completions were recovered by a pending-timeout somewhere.
+    if r.schedule.iter().any(|e| e.action == FaultAction::SsdDrop) {
+        assert!(r.stats.reqs_timed_out > 0, "drops surface via the engine pending-timeout");
+    }
+}
+
+#[test]
+fn wire_chaos_recovers_to_lossless_byte_exact_delivery() {
+    let sc = Scenario::wire_chaos(chaos_seed());
+    let r = run_scenario(&sc).expect("wire_chaos scenario");
+    assert_eq!(r.err, 0, "transport faults must be fully recovered, not surfaced");
+    assert_eq!(r.ok, sc.total_requests());
+    assert!(!r.schedule.is_empty(), "wire chaos must have injected something");
+}
+
+#[test]
+fn group_stall_delays_but_loses_nothing() {
+    let sc = Scenario::group_stall(chaos_seed());
+    let r = run_scenario(&sc).expect("group_stall scenario");
+    assert_eq!(r.err, 0);
+    assert_eq!(r.ok, sc.total_requests());
+    // All engines were failed from round 0, so every request crossed
+    // the (stalled) poll groups.
+    assert_eq!(r.stats.reqs_failed_over, sc.total_requests());
+    let (_, iterations) = sc.stall_groups.unwrap();
+    // Groups 1..=shards are the shard host apps; each served its full
+    // stall budget (traffic after the stall forced it to elapse).
+    for (g, gc) in r.group_stats.iter().enumerate().skip(1) {
+        assert_eq!(gc.stalled, iterations as u64, "group {g} stall budget");
+        assert_eq!(gc.delivered, gc.requests, "group {g} drained its backlog");
+        assert_eq!(gc.outstanding, 0);
+    }
+}
+
+#[test]
+fn everything_at_once_survives() {
+    let sc = Scenario::everything(chaos_seed());
+    let r = run_scenario(&sc).expect("everything scenario");
+    assert_eq!(r.ok + r.err, sc.total_requests());
+    assert!(r.ok > 0, "some requests must still succeed under combined chaos");
+    assert!(!r.schedule.is_empty());
+    println!(
+        "everything(seed={}): ok={} err={} injections={} in {:?}",
+        r.seed,
+        r.ok,
+        r.err,
+        r.schedule.len(),
+        r.elapsed
+    );
+}

@@ -1,0 +1,197 @@
+//! Golden wire-format tests: every message type pinned to fixed byte
+//! vectors, byte for byte. These freeze the little-endian layouts of
+//! Fig 9 (host↔DPU ring records) and the §8.1 client protocol — any
+//! accidental field reorder, width change, or endianness slip fails
+//! loudly, and truncated input of every possible length must be
+//! rejected, never panic.
+
+use dds::proto::wire::{Reader, Writer};
+use dds::proto::{framing, AppRequest, FileOpKind, FileRequest, FileResponse, NetMsg, NetResp, Status};
+
+/// Every strict prefix of a valid encoding must decode to None (and
+/// must not panic).
+fn assert_prefixes_rejected<T: std::fmt::Debug>(bytes: &[u8], decode: impl Fn(&[u8]) -> Option<T>) {
+    for cut in 0..bytes.len() {
+        assert!(
+            decode(&bytes[..cut]).is_none(),
+            "truncation to {cut}/{} bytes was accepted",
+            bytes.len()
+        );
+    }
+}
+
+#[test]
+fn golden_writer_reader_layout() {
+    let mut w = Writer::new();
+    w.u8(0x01);
+    w.u16(0x0203);
+    w.u32(0x0405_0607);
+    w.u64(0x1122_3344_5566_7788);
+    w.bytes(b"ab");
+    let bytes = w.into_vec();
+    assert_eq!(
+        bytes,
+        vec![
+            0x01, // u8
+            0x03, 0x02, // u16 LE
+            0x07, 0x06, 0x05, 0x04, // u32 LE
+            0x88, 0x77, 0x66, 0x55, 0x44, 0x33, 0x22, 0x11, // u64 LE
+            b'a', b'b',
+        ]
+    );
+    let mut r = Reader::new(&bytes);
+    assert_eq!(r.u8(), Some(0x01));
+    assert_eq!(r.u16(), Some(0x0203));
+    assert_eq!(r.u32(), Some(0x0405_0607));
+    assert_eq!(r.u64(), Some(0x1122_3344_5566_7788));
+    assert_eq!(r.take(2), Some(&b"ab"[..]));
+    assert_eq!(r.remaining(), 0);
+}
+
+#[test]
+fn golden_file_request_read() {
+    let req = FileRequest::read(0x0102_0304_0506_0708, 0x1122_3344, 0x5566_7788_99AA_BBCC, 0xFF);
+    let golden = vec![
+        0x08, 0x07, 0x06, 0x05, 0x04, 0x03, 0x02, 0x01, // req_id
+        0x44, 0x33, 0x22, 0x11, // file_id
+        0x00, // kind = Read
+        0xCC, 0xBB, 0xAA, 0x99, 0x88, 0x77, 0x66, 0x55, // offset
+        0xFF, 0x00, 0x00, 0x00, // size
+        0x00, 0x00, 0x00, 0x00, // data len
+    ];
+    assert_eq!(req.encode(), golden);
+    assert_eq!(FileRequest::decode(&golden), Some(req));
+    assert_prefixes_rejected(&golden, FileRequest::decode);
+}
+
+#[test]
+fn golden_file_request_write() {
+    let req = FileRequest::write(1, 2, 3, vec![0xAA, 0xBB]);
+    let golden = vec![
+        0x01, 0x00, 0x00, 0x00, 0x00, 0x00, 0x00, 0x00, // req_id
+        0x02, 0x00, 0x00, 0x00, // file_id
+        0x01, // kind = Write
+        0x03, 0x00, 0x00, 0x00, 0x00, 0x00, 0x00, 0x00, // offset
+        0x02, 0x00, 0x00, 0x00, // size (== data len for writes)
+        0x02, 0x00, 0x00, 0x00, // data len
+        0xAA, 0xBB, // inlined payload (Fig 9: one DMA moves it all)
+    ];
+    assert_eq!(req.encode(), golden);
+    let back = FileRequest::decode(&golden).unwrap();
+    assert_eq!(back.kind, FileOpKind::Write);
+    assert_eq!(back, req);
+    assert_prefixes_rejected(&golden, FileRequest::decode);
+    // An unknown op kind must reject, not default.
+    let mut bad = golden.clone();
+    bad[12] = 0x02;
+    assert_eq!(FileRequest::decode(&bad), None);
+}
+
+#[test]
+fn golden_file_response() {
+    let resp = FileResponse { req_id: 0x0A, status: Status::Ok, data: vec![1, 2, 3] };
+    let golden = vec![
+        0x0A, 0x00, 0x00, 0x00, 0x00, 0x00, 0x00, 0x00, // req_id
+        0x01, // status = Ok
+        0x03, 0x00, 0x00, 0x00, // data len
+        0x01, 0x02, 0x03,
+    ];
+    assert_eq!(resp.encode(), golden);
+    assert_eq!(FileResponse::decode(&golden), Some(resp));
+    assert_prefixes_rejected(&golden, FileResponse::decode);
+    // All three status codes round-trip; a fourth rejects.
+    for (code, status) in [(0u8, Status::Pending), (1, Status::Ok), (2, Status::Error)] {
+        let mut v = golden.clone();
+        v[8] = code;
+        assert_eq!(FileResponse::decode(&v).unwrap().status, status);
+    }
+    let mut bad = golden;
+    bad[8] = 3;
+    assert_eq!(FileResponse::decode(&bad), None);
+}
+
+#[test]
+fn golden_net_msg_every_request_kind() {
+    let msg = NetMsg {
+        msg_id: 7,
+        requests: vec![
+            AppRequest::Read { file_id: 1, offset: 2, size: 3 },
+            AppRequest::Write { file_id: 4, offset: 5, data: vec![9] },
+            AppRequest::GetPage { page_id: 6, lsn: 7 },
+            AppRequest::KvGet { key: 8 },
+            AppRequest::KvUpsert { key: 9, value: vec![0xFF] },
+        ],
+    };
+    let golden = vec![
+        0x07, 0x00, 0x00, 0x00, 0x00, 0x00, 0x00, 0x00, // msg_id
+        0x05, 0x00, // request count
+        // Read { file_id: 1, offset: 2, size: 3 }
+        0x00, 0x01, 0x00, 0x00, 0x00, 0x02, 0x00, 0x00, 0x00, 0x00, 0x00, 0x00, 0x00, 0x03,
+        0x00, 0x00, 0x00,
+        // Write { file_id: 4, offset: 5, data: [9] }
+        0x01, 0x04, 0x00, 0x00, 0x00, 0x05, 0x00, 0x00, 0x00, 0x00, 0x00, 0x00, 0x00, 0x01,
+        0x00, 0x00, 0x00, 0x09,
+        // GetPage { page_id: 6, lsn: 7 }
+        0x02, 0x06, 0x00, 0x00, 0x00, 0x00, 0x00, 0x00, 0x00, 0x07, 0x00, 0x00, 0x00, 0x00,
+        0x00, 0x00, 0x00,
+        // KvGet { key: 8 }
+        0x03, 0x08, 0x00, 0x00, 0x00, 0x00, 0x00, 0x00, 0x00,
+        // KvUpsert { key: 9, value: [0xFF] }
+        0x04, 0x09, 0x00, 0x00, 0x00, 0x00, 0x00, 0x00, 0x00, 0x01, 0x00, 0x00, 0x00, 0xFF,
+    ];
+    assert_eq!(msg.encode(), golden);
+    assert_eq!(NetMsg::decode(&golden), Some(msg));
+    assert_prefixes_rejected(&golden, NetMsg::decode);
+    // An unknown request tag rejects the whole message.
+    let mut bad = golden;
+    bad[10] = 0x05;
+    assert_eq!(NetMsg::decode(&bad), None);
+}
+
+#[test]
+fn golden_net_resp() {
+    let resp = NetResp { msg_id: 0x10, idx: 2, status: NetResp::ERR, payload: vec![0xDE, 0xAD] };
+    let golden = vec![
+        0x10, 0x00, 0x00, 0x00, 0x00, 0x00, 0x00, 0x00, // msg_id
+        0x02, 0x00, // idx
+        0x01, // status = ERR
+        0x02, 0x00, 0x00, 0x00, // payload len
+        0xDE, 0xAD,
+    ];
+    assert_eq!(resp.encode(), golden);
+    assert_eq!(NetResp::decode(&golden), Some(resp));
+    assert_prefixes_rejected(&golden, NetResp::decode);
+}
+
+#[test]
+fn golden_framing() {
+    let mut stream = Vec::new();
+    framing::write_frame(&mut stream, b"hi");
+    assert_eq!(stream, vec![0x02, 0x00, 0x00, 0x00, b'h', b'i']);
+    // Incomplete frames wait for more bytes instead of erroring.
+    for cut in 0..stream.len() {
+        let mut partial = stream[..cut].to_vec();
+        assert_eq!(framing::read_frame(&mut partial), None);
+        assert_eq!(partial.len(), cut, "partial input must not be consumed");
+    }
+    let mut full = stream;
+    assert_eq!(framing::read_frame(&mut full), Some(b"hi".to_vec()));
+    assert!(full.is_empty());
+}
+
+/// A corrupted length field larger than the buffer must reject cleanly
+/// for the length-prefixed types.
+#[test]
+fn oversized_length_fields_reject() {
+    let req = FileRequest::write(1, 2, 3, vec![0; 8]);
+    let mut enc = req.encode();
+    // data-len field sits at bytes 25..29.
+    enc[25..29].copy_from_slice(&u32::MAX.to_le_bytes());
+    assert_eq!(FileRequest::decode(&enc), None);
+
+    let resp = NetResp { msg_id: 1, idx: 0, status: 0, payload: vec![0; 4] };
+    let mut enc = resp.encode();
+    // payload-len field sits at bytes 11..15.
+    enc[11..15].copy_from_slice(&u32::MAX.to_le_bytes());
+    assert_eq!(NetResp::decode(&enc), None);
+}

@@ -82,6 +82,76 @@ fn cache_dense_export_covers_slot_entries() {
     }
 }
 
+/// Churn at capacity: evict a random resident and insert a fresh key,
+/// thousands of times, with the table pinned at its capacity limit the
+/// whole run — the regime that stresses cuckoo displacement chains and
+/// the overflow chains. No entry may be lost, no capacity overshoot,
+/// and admission control must refuse exactly when full.
+#[test]
+fn cache_churn_no_lost_entries_capacity_respected() {
+    for seed in 60..=66u64 {
+        let mut rng = Rng::new(seed);
+        let cap = 256usize;
+        let table = CuckooCache::new(cap);
+        let mut model: HashMap<u64, CacheItem> = HashMap::new();
+        let mut next_key = 1u64;
+        // Fill to capacity.
+        while model.len() < cap {
+            let item = CacheItem::new(next_key, 0, 0, 0);
+            assert!(table.insert(next_key, item), "seed {seed}: insert below capacity");
+            model.insert(next_key, item);
+            next_key += 1;
+        }
+        assert_eq!(table.len(), cap);
+        // At capacity, a brand-new key must be refused…
+        assert!(!table.insert(next_key, CacheItem::default()), "seed {seed}: over-admission");
+        // …but updating a resident must still succeed.
+        let resident = *model.keys().min().unwrap();
+        assert!(table.insert(resident, CacheItem::new(9, 9, 9, 9)), "seed {seed}: update at cap");
+        model.insert(resident, CacheItem::new(9, 9, 9, 9));
+
+        // Sorted, NOT HashMap iteration order: the victim sequence must
+        // be a pure function of the seed so a printed seed replays the
+        // exact failing schedule.
+        let mut keys: Vec<u64> = model.keys().copied().collect();
+        keys.sort_unstable();
+        for step in 0..20_000u64 {
+            let vi = rng.next_range(keys.len() as u64) as usize;
+            let victim = keys[vi];
+            assert!(table.remove(victim), "seed {seed} step {step}: entry {victim} lost");
+            model.remove(&victim);
+            let item = CacheItem::new(next_key, step, 0, 0);
+            assert!(
+                table.insert(next_key, item),
+                "seed {seed} step {step}: insert below capacity refused"
+            );
+            model.insert(next_key, item);
+            keys[vi] = next_key;
+            next_key += 1;
+            assert!(table.len() <= cap, "seed {seed} step {step}: capacity exceeded");
+            // Sampled integrity probes (full scans are the final check).
+            if step % 512 == 0 {
+                assert!(table.get(victim).is_none(), "seed {seed}: evicted key resurfaced");
+                let probe = keys[rng.next_range(keys.len() as u64) as usize];
+                assert_eq!(
+                    table.get(probe),
+                    model.get(&probe).copied(),
+                    "seed {seed} step {step}: probe({probe})"
+                );
+            }
+        }
+        // Full sweep: every modeled entry present with its exact item,
+        // accounting consistent.
+        assert_eq!(table.len(), cap);
+        for (k, v) in &model {
+            assert_eq!(table.get(*k), Some(*v), "seed {seed}: final get({k})");
+        }
+        let stats = table.stats();
+        assert_eq!(stats.items, cap);
+        assert_eq!(stats.slot_items + stats.chain_items, cap, "seed {seed}: split accounting");
+    }
+}
+
 #[test]
 fn dpufs_matches_flat_file_model() {
     for seed in 1..=8u64 {
