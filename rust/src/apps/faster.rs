@@ -235,14 +235,14 @@ impl HostApp for MiniFaster {
             let idx = i as u16;
             let resp = match r {
                 AppRequest::KvGet { key } => match self.get(*key) {
-                    Ok(Some(v)) => NetResp { msg_id: msg.msg_id, idx, status: NetResp::OK, payload: v },
-                    _ => NetResp { msg_id: msg.msg_id, idx, status: NetResp::ERR, payload: vec![] },
+                    Ok(Some(v)) => NetResp { msg_id: msg.msg_id, idx, status: NetResp::OK, payload: v.into() },
+                    _ => NetResp { msg_id: msg.msg_id, idx, status: NetResp::ERR, payload: crate::buf::BufView::empty() },
                 },
                 AppRequest::KvUpsert { key, value } => match self.upsert(*key, value.clone()) {
-                    Ok(()) => NetResp { msg_id: msg.msg_id, idx, status: NetResp::OK, payload: vec![] },
-                    Err(_) => NetResp { msg_id: msg.msg_id, idx, status: NetResp::ERR, payload: vec![] },
+                    Ok(()) => NetResp { msg_id: msg.msg_id, idx, status: NetResp::OK, payload: crate::buf::BufView::empty() },
+                    Err(_) => NetResp { msg_id: msg.msg_id, idx, status: NetResp::ERR, payload: crate::buf::BufView::empty() },
                 },
-                _ => NetResp { msg_id: msg.msg_id, idx, status: NetResp::ERR, payload: vec![] },
+                _ => NetResp { msg_id: msg.msg_id, idx, status: NetResp::ERR, payload: crate::buf::BufView::empty() },
             };
             out.push(resp);
         }

@@ -106,7 +106,7 @@ impl HostApp for RawFileApp {
                         msg_id: msg.msg_id,
                         idx,
                         status: NetResp::ERR,
-                        payload: Vec::new(),
+                        payload: crate::buf::BufView::empty(),
                     });
                     continue;
                 }
@@ -117,7 +117,7 @@ impl HostApp for RawFileApp {
                     msg_id: msg.msg_id,
                     idx,
                     status: NetResp::ERR,
-                    payload: Vec::new(),
+                    payload: crate::buf::BufView::empty(),
                 }),
             }
         }
@@ -129,7 +129,7 @@ impl HostApp for RawFileApp {
                 msg_id: msg.msg_id,
                 idx,
                 status: if ok { NetResp::OK } else { NetResp::ERR },
-                payload: data,
+                payload: data.into(),
             });
         }
         out.sort_by_key(|r| r.idx);

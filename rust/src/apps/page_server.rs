@@ -148,20 +148,20 @@ impl HostApp for PageServer {
                         msg_id: msg.msg_id,
                         idx,
                         status: NetResp::OK,
-                        payload: page,
+                        payload: page.into(),
                     }),
                     Err(_) => out.push(NetResp {
                         msg_id: msg.msg_id,
                         idx,
                         status: NetResp::ERR,
-                        payload: Vec::new(),
+                        payload: crate::buf::BufView::empty(),
                     }),
                 },
                 _ => out.push(NetResp {
                     msg_id: msg.msg_id,
                     idx,
                     status: NetResp::ERR,
-                    payload: Vec::new(),
+                    payload: crate::buf::BufView::empty(),
                 }),
             }
         }

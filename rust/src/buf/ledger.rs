@@ -1,0 +1,153 @@
+//! The copy ledger: cheap atomic accounting of the software copies and
+//! heap allocations the data plane performs.
+//!
+//! DDS's design argument is stated in *counts*: how many DMA ops a ring
+//! drain costs (§4.1), how many copies a read response suffers (§4.3,
+//! §6.2 Fig 12). [`crate::dma::DmaChannel`] accounts the former — the
+//! transfers real hardware would DMA. The `CopyLedger` accounts the
+//! latter: heap allocations and bytes `memcpy`'d by *software* on the
+//! data path, i.e. exactly the overhead the zero-copy design removes.
+//! A DMA transfer is never double-counted here, and a ledger copy is
+//! never a DMA: the two meters partition the data movement.
+//!
+//! Ledgers are cloneable handles over shared atomics, so a pool and the
+//! layers that borrow from it can share one meter. Tests and benches
+//! take [`CopyLedger::snapshot`]s around a steady-state window and
+//! assert on the delta (e.g. "N offloaded reads performed 0 heap
+//! allocations and copied 0 bytes").
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+#[derive(Default)]
+struct Counters {
+    allocs: AtomicU64,
+    pool_hits: AtomicU64,
+    fallbacks: AtomicU64,
+    heap_allocs: AtomicU64,
+    copies: AtomicU64,
+    bytes_copied: AtomicU64,
+}
+
+/// Shared copy/allocation meter (clone = same underlying counters).
+#[derive(Clone, Default)]
+pub struct CopyLedger {
+    inner: Arc<Counters>,
+}
+
+impl CopyLedger {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// A buffer was requested (pool hit or not).
+    #[inline]
+    pub fn count_alloc_request(&self) {
+        self.inner.allocs.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A request was served from the pool free list.
+    #[inline]
+    pub fn count_pool_hit(&self) {
+        self.inner.pool_hits.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A request fell back to an owned heap allocation (pool exhausted
+    /// or oversize). Implies one heap allocation.
+    #[inline]
+    pub fn count_fallback(&self) {
+        self.inner.fallbacks.fetch_add(1, Ordering::Relaxed);
+        self.inner.heap_allocs.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A heap allocation outside the pool (e.g. materializing an owned
+    /// buffer on a copy path).
+    #[inline]
+    pub fn count_heap_alloc(&self) {
+        self.inner.heap_allocs.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// `bytes` were memcpy'd by software (NOT a DMA transfer — those are
+    /// metered by [`crate::dma::DmaChannel`]).
+    #[inline]
+    pub fn count_copy(&self, bytes: usize) {
+        self.inner.copies.fetch_add(1, Ordering::Relaxed);
+        self.inner.bytes_copied.fetch_add(bytes as u64, Ordering::Relaxed);
+    }
+
+    /// Point-in-time counter values.
+    pub fn snapshot(&self) -> LedgerSnapshot {
+        LedgerSnapshot {
+            allocs: self.inner.allocs.load(Ordering::Relaxed),
+            pool_hits: self.inner.pool_hits.load(Ordering::Relaxed),
+            fallbacks: self.inner.fallbacks.load(Ordering::Relaxed),
+            heap_allocs: self.inner.heap_allocs.load(Ordering::Relaxed),
+            copies: self.inner.copies.load(Ordering::Relaxed),
+            bytes_copied: self.inner.bytes_copied.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Point-in-time ledger values; subtract two to get a window delta.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct LedgerSnapshot {
+    /// Buffer requests (pool hits + fallbacks).
+    pub allocs: u64,
+    /// Requests served from the pool free list.
+    pub pool_hits: u64,
+    /// Requests that fell back to owned heap memory.
+    pub fallbacks: u64,
+    /// Heap allocations (fallbacks + explicit copy-path allocations).
+    pub heap_allocs: u64,
+    /// memcpy operations.
+    pub copies: u64,
+    /// Bytes memcpy'd.
+    pub bytes_copied: u64,
+}
+
+impl std::ops::Sub for LedgerSnapshot {
+    type Output = LedgerSnapshot;
+
+    fn sub(self, earlier: LedgerSnapshot) -> LedgerSnapshot {
+        LedgerSnapshot {
+            allocs: self.allocs.saturating_sub(earlier.allocs),
+            pool_hits: self.pool_hits.saturating_sub(earlier.pool_hits),
+            fallbacks: self.fallbacks.saturating_sub(earlier.fallbacks),
+            heap_allocs: self.heap_allocs.saturating_sub(earlier.heap_allocs),
+            copies: self.copies.saturating_sub(earlier.copies),
+            bytes_copied: self.bytes_copied.saturating_sub(earlier.bytes_copied),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_and_delta() {
+        let l = CopyLedger::new();
+        l.count_alloc_request();
+        l.count_pool_hit();
+        let before = l.snapshot();
+        l.count_alloc_request();
+        l.count_fallback();
+        l.count_copy(100);
+        l.count_copy(28);
+        let d = l.snapshot() - before;
+        assert_eq!(d.allocs, 1);
+        assert_eq!(d.pool_hits, 0);
+        assert_eq!(d.fallbacks, 1);
+        assert_eq!(d.heap_allocs, 1);
+        assert_eq!(d.copies, 2);
+        assert_eq!(d.bytes_copied, 128);
+    }
+
+    #[test]
+    fn clones_share_counters() {
+        let a = CopyLedger::new();
+        let b = a.clone();
+        b.count_copy(7);
+        assert_eq!(a.snapshot().bytes_copied, 7);
+    }
+}

@@ -1,0 +1,551 @@
+//! The zero-copy buffer plane: pooled, reference-counted buffers shared
+//! by every layer of the data path.
+//!
+//! DDS "heavily uses DMA, zero-copy, and userspace I/O to minimize
+//! overhead": the SSD DMA lands in a pre-allocated buffer and that same
+//! buffer *is* the packet payload (§4.3, §6.2 Fig 12). This module is
+//! the functional-plane embodiment of that discipline:
+//!
+//! * [`BufPool`] — a slab of fixed-size pre-allocated slots (the pinned
+//!   DMA-able memory of Fig 12 ①). Allocation never fails: exhaustion
+//!   and oversize requests fall back to owned heap memory, *counted* so
+//!   benches and tests can assert the steady state never falls back.
+//! * [`PooledBuf`] — an exclusively-owned, writable borrow of a slot
+//!   (where a "device DMA" lands). [`PooledBuf::freeze`] converts it
+//!   into a view.
+//! * [`BufView`] — a cheap, clonable, read-only `(offset, len)` window
+//!   into refcounted storage. Cloning or [`BufView::slice`]-ing is a
+//!   refcount bump — never a copy. The slot returns to its pool only
+//!   when the **last** view drops, so a recycled slot can never be
+//!   observed through a stale view (aliasing safety by construction).
+//! * [`ByteRope`] — an ordered sequence of views standing in for
+//!   contiguous bytes (what a scatter-gather NIC would transmit);
+//!   materializing it is an explicit, metered act.
+//! * [`CopyLedger`] — the copy ledger: per-pool (and per-layer) atomic
+//!   counters of heap allocations and bytes memcpy'd by software, the
+//!   complement of [`crate::dma::DmaChannel`]'s DMA meter.
+//!
+//! This generalizes the old `offload::mempool` (which only the offload
+//! engine used, and whose borrows could not be sliced or shared): the
+//! same pool type now backs the offload engine's read buffers, the file
+//! service's request-batch staging and response assembly, the SSD
+//! completion path, and the TCP segment payloads.
+
+pub mod ledger;
+
+pub use ledger::{CopyLedger, LedgerSnapshot};
+
+use std::ops::Range;
+use std::sync::{Arc, Mutex, OnceLock};
+
+struct PoolShared {
+    free: Mutex<Vec<Vec<u8>>>,
+    slot_size: usize,
+    slots: usize,
+    /// Heap-fallback buffers currently lent out (they never join the
+    /// slab, but the leak invariant must see them too).
+    fallbacks_out: std::sync::atomic::AtomicUsize,
+    ledger: CopyLedger,
+}
+
+/// Slab-backed fixed-size-class buffer pool (clone = same pool).
+#[derive(Clone)]
+pub struct BufPool {
+    inner: Arc<PoolShared>,
+}
+
+impl BufPool {
+    /// Pre-allocate `slots` buffers of `slot_size` bytes each.
+    pub fn new(slots: usize, slot_size: usize) -> Self {
+        Self::with_ledger(slots, slot_size, CopyLedger::new())
+    }
+
+    /// Pre-allocate with an externally shared [`CopyLedger`].
+    pub fn with_ledger(slots: usize, slot_size: usize, ledger: CopyLedger) -> Self {
+        let free = (0..slots).map(|_| vec![0u8; slot_size]).collect();
+        BufPool {
+            inner: Arc::new(PoolShared {
+                free: Mutex::new(free),
+                slot_size,
+                slots,
+                fallbacks_out: std::sync::atomic::AtomicUsize::new(0),
+                ledger,
+            }),
+        }
+    }
+
+    /// Borrow a writable buffer of exactly `len` usable bytes. Served
+    /// from the slab when `len` fits the slot class and a slot is free;
+    /// otherwise falls back to an owned heap buffer (counted — the pool
+    /// keeps serving under exhaustion, it just stops being free).
+    pub fn allocate(&self, len: usize) -> PooledBuf {
+        self.inner.ledger.count_alloc_request();
+        if len <= self.inner.slot_size {
+            if let Some(slot) = self.inner.free.lock().unwrap().pop() {
+                self.inner.ledger.count_pool_hit();
+                return PooledBuf { data: slot, len, pool: Some(self.clone()), slab: true };
+            }
+        }
+        self.inner.ledger.count_fallback();
+        self.inner.fallbacks_out.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        PooledBuf { data: vec![0u8; len], len, pool: Some(self.clone()), slab: false }
+    }
+
+    /// The fixed slot size (the pool's size class).
+    pub fn slot_size(&self) -> usize {
+        self.inner.slot_size
+    }
+
+    /// Total slots the slab was built with.
+    pub fn slots(&self) -> usize {
+        self.inner.slots
+    }
+
+    /// Slots currently on the free list.
+    pub fn available(&self) -> usize {
+        self.inner.free.lock().unwrap().len()
+    }
+
+    /// Buffers currently lent out: slab slots off the free list PLUS
+    /// outstanding heap-fallback buffers (0 when the plane is quiesced
+    /// — the leak check of the chaos suite sees both kinds).
+    pub fn in_use(&self) -> usize {
+        (self.inner.slots - self.available())
+            + self.inner.fallbacks_out.load(std::sync::atomic::Ordering::Relaxed)
+    }
+
+    /// The pool's copy ledger.
+    pub fn ledger(&self) -> &CopyLedger {
+        &self.inner.ledger
+    }
+
+    /// Counter snapshot (allocs / pool hits / fallbacks / copies).
+    pub fn stats(&self) -> LedgerSnapshot {
+        self.inner.ledger.snapshot()
+    }
+
+    fn release(&self, data: Vec<u8>) {
+        debug_assert_eq!(data.len(), self.inner.slot_size, "release of a non-slab buffer");
+        let mut free = self.inner.free.lock().unwrap();
+        if free.len() < self.inner.slots {
+            free.push(data);
+        }
+    }
+
+    fn note_fallback_returned(&self) {
+        self.inner.fallbacks_out.fetch_sub(1, std::sync::atomic::Ordering::Relaxed);
+    }
+}
+
+/// An exclusively-owned writable buffer borrowed from a [`BufPool`]
+/// (or an owned fallback). Returns its slot on drop; [`Self::freeze`]
+/// converts it into a sharable [`BufView`] instead.
+pub struct PooledBuf {
+    data: Vec<u8>,
+    len: usize,
+    /// The owning pool, if any. With `slab == true`, `data` is a slab
+    /// slot that must go home on release; with `slab == false`, it is a
+    /// counted heap-fallback whose return only decrements occupancy.
+    pool: Option<BufPool>,
+    slab: bool,
+}
+
+impl PooledBuf {
+    /// Wrap an owned vector (no pool attachment, no copy).
+    pub fn from_vec(v: Vec<u8>) -> Self {
+        let len = v.len();
+        PooledBuf { data: v, len, pool: None, slab: false }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn as_slice(&self) -> &[u8] {
+        &self.data[..self.len]
+    }
+
+    pub fn as_mut_slice(&mut self) -> &mut [u8] {
+        &mut self.data[..self.len]
+    }
+
+    /// Seal the buffer into an immutable, refcounted [`BufView`]. The
+    /// underlying slot returns to the pool when the last view drops.
+    pub fn freeze(mut self) -> BufView {
+        let data = std::mem::take(&mut self.data);
+        let pool = self.pool.take();
+        let len = self.len;
+        BufView {
+            storage: Arc::new(SharedStorage { data, pool, slab: self.slab }),
+            start: 0,
+            len,
+        }
+    }
+}
+
+impl Drop for PooledBuf {
+    fn drop(&mut self) {
+        if let Some(pool) = self.pool.take() {
+            if self.slab {
+                pool.release(std::mem::take(&mut self.data));
+            } else {
+                pool.note_fallback_returned();
+            }
+        }
+    }
+}
+
+impl std::fmt::Debug for PooledBuf {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("PooledBuf")
+            .field("len", &self.len)
+            .field("slab", &self.slab)
+            .finish()
+    }
+}
+
+/// Refcounted backing storage; the slot goes home when this drops.
+struct SharedStorage {
+    data: Vec<u8>,
+    pool: Option<BufPool>,
+    /// Whether `data` is a slab slot (goes home) or a counted
+    /// heap-fallback (occupancy decrements, buffer freed).
+    slab: bool,
+}
+
+impl Drop for SharedStorage {
+    fn drop(&mut self) {
+        if let Some(pool) = self.pool.take() {
+            if self.slab {
+                pool.release(std::mem::take(&mut self.data));
+            } else {
+                pool.note_fallback_returned();
+            }
+        }
+    }
+}
+
+/// A cheap, clonable, read-only window into shared buffer storage.
+/// Clone and [`Self::slice`] are refcount bumps, never copies.
+#[derive(Clone)]
+pub struct BufView {
+    storage: Arc<SharedStorage>,
+    start: usize,
+    len: usize,
+}
+
+impl BufView {
+    /// The canonical empty view (no allocation after first use).
+    pub fn empty() -> BufView {
+        static EMPTY: OnceLock<Arc<SharedStorage>> = OnceLock::new();
+        BufView {
+            storage: EMPTY
+                .get_or_init(|| {
+                    Arc::new(SharedStorage { data: Vec::new(), pool: None, slab: false })
+                })
+                .clone(),
+            start: 0,
+            len: 0,
+        }
+    }
+
+    /// Wrap an owned vector without copying.
+    pub fn from_vec(v: Vec<u8>) -> BufView {
+        let len = v.len();
+        BufView {
+            storage: Arc::new(SharedStorage { data: v, pool: None, slab: false }),
+            start: 0,
+            len,
+        }
+    }
+
+    /// Allocate from `pool` and copy `bytes` in — an *explicit*, metered
+    /// copy (`bytes_copied` on the pool's ledger).
+    pub fn copy_of(pool: &BufPool, bytes: &[u8]) -> BufView {
+        let mut b = pool.allocate(bytes.len());
+        b.as_mut_slice().copy_from_slice(bytes);
+        pool.ledger().count_copy(bytes.len());
+        b.freeze()
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn as_slice(&self) -> &[u8] {
+        &self.storage.data[self.start..self.start + self.len]
+    }
+
+    /// Sub-view of `range` (relative to this view). Refcount bump only.
+    pub fn slice(&self, range: Range<usize>) -> BufView {
+        assert!(
+            range.start <= range.end && range.end <= self.len,
+            "slice {range:?} out of view of len {}",
+            self.len
+        );
+        BufView {
+            storage: self.storage.clone(),
+            start: self.start + range.start,
+            len: range.end - range.start,
+        }
+    }
+
+    /// Materialize an owned copy (the explicit opposite of zero-copy).
+    pub fn to_vec(&self) -> Vec<u8> {
+        self.as_slice().to_vec()
+    }
+
+    /// Whether two views window the same underlying storage (used by
+    /// tests to prove sharing instead of duplication).
+    pub fn shares_storage(&self, other: &BufView) -> bool {
+        Arc::ptr_eq(&self.storage, &other.storage)
+    }
+
+    /// Live references to this view's storage.
+    pub fn refcount(&self) -> usize {
+        Arc::strong_count(&self.storage)
+    }
+}
+
+impl std::ops::Deref for BufView {
+    type Target = [u8];
+
+    fn deref(&self) -> &[u8] {
+        self.as_slice()
+    }
+}
+
+impl std::fmt::Debug for BufView {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "BufView({:?})", self.as_slice())
+    }
+}
+
+impl Default for BufView {
+    fn default() -> Self {
+        BufView::empty()
+    }
+}
+
+impl PartialEq for BufView {
+    fn eq(&self, other: &BufView) -> bool {
+        self.as_slice() == other.as_slice()
+    }
+}
+
+impl Eq for BufView {}
+
+impl PartialEq<[u8]> for BufView {
+    fn eq(&self, other: &[u8]) -> bool {
+        self.as_slice() == other
+    }
+}
+
+impl PartialEq<&[u8]> for BufView {
+    fn eq(&self, other: &&[u8]) -> bool {
+        self.as_slice() == *other
+    }
+}
+
+impl PartialEq<Vec<u8>> for BufView {
+    fn eq(&self, other: &Vec<u8>) -> bool {
+        self.as_slice() == other.as_slice()
+    }
+}
+
+impl PartialEq<BufView> for Vec<u8> {
+    fn eq(&self, other: &BufView) -> bool {
+        self.as_slice() == other.as_slice()
+    }
+}
+
+impl<const N: usize> PartialEq<[u8; N]> for BufView {
+    fn eq(&self, other: &[u8; N]) -> bool {
+        self.as_slice() == other
+    }
+}
+
+impl From<Vec<u8>> for BufView {
+    fn from(v: Vec<u8>) -> BufView {
+        BufView::from_vec(v)
+    }
+}
+
+/// An ordered sequence of [`BufView`]s standing in for contiguous
+/// bytes — what a scatter-gather NIC/DMA engine would transmit without
+/// ever concatenating. Empty views are dropped on push.
+#[derive(Clone, Default)]
+pub struct ByteRope {
+    parts: Vec<BufView>,
+    len: usize,
+}
+
+impl ByteRope {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, v: BufView) {
+        if v.is_empty() {
+            return;
+        }
+        self.len += v.len();
+        self.parts.push(v);
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn parts(&self) -> &[BufView] {
+        &self.parts
+    }
+
+    /// Materialize (explicit copy; meter at the call site if it is on a
+    /// data path).
+    pub fn to_vec(&self) -> Vec<u8> {
+        let mut v = Vec::with_capacity(self.len);
+        for p in &self.parts {
+            v.extend_from_slice(p.as_slice());
+        }
+        v
+    }
+}
+
+impl std::fmt::Debug for ByteRope {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ByteRope")
+            .field("parts", &self.parts.len())
+            .field("len", &self.len)
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pooled_alloc_freeze_and_return() {
+        let pool = BufPool::new(2, 64);
+        assert_eq!(pool.available(), 2);
+        let mut b = pool.allocate(10);
+        b.as_mut_slice().copy_from_slice(&[7u8; 10]);
+        assert_eq!(pool.available(), 1);
+        let v = b.freeze();
+        assert_eq!(pool.available(), 1, "frozen view still holds the slot");
+        assert_eq!(v, vec![7u8; 10]);
+        let v2 = v.clone();
+        drop(v);
+        assert_eq!(pool.available(), 1, "second view still holds the slot");
+        drop(v2);
+        assert_eq!(pool.available(), 2, "last view returns the slot");
+        let s = pool.stats();
+        assert_eq!((s.allocs, s.pool_hits, s.fallbacks), (1, 1, 0));
+    }
+
+    #[test]
+    fn unfrozen_drop_returns_slot() {
+        let pool = BufPool::new(1, 32);
+        drop(pool.allocate(8));
+        assert_eq!(pool.available(), 1);
+    }
+
+    #[test]
+    fn exhaustion_falls_back_and_keeps_serving() {
+        let pool = BufPool::new(1, 32);
+        let a = pool.allocate(16);
+        let b = pool.allocate(16); // exhausted → owned heap
+        let c = pool.allocate(64); // oversize → owned heap
+        assert_eq!(pool.available(), 0);
+        assert_eq!(pool.in_use(), 3, "occupancy counts outstanding fallbacks too");
+        let s = pool.stats();
+        assert_eq!((s.allocs, s.pool_hits, s.fallbacks), (3, 1, 2));
+        assert_eq!(s.heap_allocs, 2);
+        drop(a);
+        drop(b);
+        drop(c);
+        assert_eq!(pool.available(), 1, "fallback buffers never join the slab");
+        assert_eq!(pool.in_use(), 0);
+    }
+
+    #[test]
+    fn stale_view_never_sees_recycled_slot() {
+        let pool = BufPool::new(1, 16);
+        let mut b = pool.allocate(4);
+        b.as_mut_slice().copy_from_slice(&[1, 2, 3, 4]);
+        let v = b.freeze();
+        // The slot cannot recycle while `v` lives: this allocation must
+        // fall back rather than alias.
+        let mut b2 = pool.allocate(4);
+        b2.as_mut_slice().copy_from_slice(&[9, 9, 9, 9]);
+        assert_eq!(pool.stats().fallbacks, 1);
+        assert_eq!(v, vec![1, 2, 3, 4]);
+        drop(v);
+        // Now the slot is free; a new borrow may carry stale bytes but
+        // no *view* of the old content exists anymore.
+        let b3 = pool.allocate(4);
+        assert_eq!(pool.stats().pool_hits, 2);
+        drop(b3);
+        drop(b2);
+    }
+
+    #[test]
+    fn slice_views_share_storage() {
+        let v = BufView::from_vec((0u8..100).collect());
+        let a = v.slice(10..20);
+        let b = a.slice(5..8);
+        assert!(a.shares_storage(&v) && b.shares_storage(&v));
+        assert_eq!(a, (10u8..20).collect::<Vec<_>>());
+        assert_eq!(b, vec![15u8, 16, 17]);
+        assert_eq!(v.refcount(), 3);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of view")]
+    fn slice_out_of_bounds_panics() {
+        let v = BufView::from_vec(vec![0; 4]);
+        let _ = v.slice(2..6);
+    }
+
+    #[test]
+    fn copy_of_is_metered() {
+        let pool = BufPool::new(2, 64);
+        let v = BufView::copy_of(&pool, &[5u8; 48]);
+        assert_eq!(v, vec![5u8; 48]);
+        let s = pool.stats();
+        assert_eq!(s.copies, 1);
+        assert_eq!(s.bytes_copied, 48);
+    }
+
+    #[test]
+    fn rope_concatenates() {
+        let mut r = ByteRope::new();
+        r.push(BufView::from_vec(vec![1, 2]));
+        r.push(BufView::empty());
+        r.push(BufView::from_vec(vec![3]));
+        assert_eq!(r.len(), 3);
+        assert_eq!(r.parts().len(), 2, "empty parts dropped");
+        assert_eq!(r.to_vec(), vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn empty_view_is_shared_not_allocated() {
+        let a = BufView::empty();
+        let b = BufView::empty();
+        assert!(a.shares_storage(&b));
+        assert!(a.is_empty());
+    }
+}

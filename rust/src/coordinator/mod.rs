@@ -66,6 +66,13 @@ pub struct StorageServer {
     pub dpufs: Arc<RwLock<DpuFs>>,
     pub cache: Arc<CuckooCache>,
     pub handle: FileServiceHandle,
+    /// Handle on the file service's batch/assembly pool (occupancy +
+    /// the plane-wide copy ledger, observable from outside the service
+    /// thread).
+    pub buf_pool: crate::buf::BufPool,
+    /// Handle on the file service's read-completion pool (shares the
+    /// ledger with `buf_pool`; separate occupancy).
+    pub read_buf_pool: crate::buf::BufPool,
     ctrl: mpsc::Sender<ControlMsg>,
     /// Build options (kept for introspection / future rebuilds).
     pub cfg: StorageServerConfig,
@@ -85,8 +92,10 @@ impl StorageServer {
         let aio = AsyncSsd::new(ssd.clone(), cfg.service.ssd_workers);
         let (service, ctrl) =
             FileService::new(dpufs.clone(), aio, cfg.service.clone(), logic, cache.clone());
+        let buf_pool = service.buf_pool().clone();
+        let read_buf_pool = service.read_buf_pool().clone();
         let handle = service.spawn(ctrl.clone());
-        Ok(StorageServer { ssd, dpufs, cache, handle, ctrl, cfg })
+        Ok(StorageServer { ssd, dpufs, cache, handle, buf_pool, read_buf_pool, ctrl, cfg })
     }
 
     /// A host-side front-end client (§4.2). Create one per application.
@@ -183,7 +192,8 @@ pub(crate) fn host_exchange<A: HostApp>(
     for s in segs {
         back_to_dpu.extend(ep.on_segment(s));
     }
-    rx.extend(&ep.deliver());
+    let delivered = ep.deliver_rope();
+    rx.extend_rope(&delivered, ep.ledger());
     // Host app handles complete messages.
     let mut responses = Vec::new();
     while let Some(frame) = rx.read_frame() {
@@ -192,11 +202,13 @@ pub(crate) fn host_exchange<A: HostApp>(
         }
     }
     if !responses.is_empty() {
-        let mut stream = Vec::new();
+        // Frame into a view rope: response payloads (e.g. poll-group
+        // read data) ride by reference onto connection 2.
+        let mut rope = crate::buf::ByteRope::new();
         for r in responses {
-            framing::write_frame(&mut stream, &r.encode());
+            r.frame_into_rope(&mut rope);
         }
-        back_to_dpu.extend(ep.send(&stream));
+        back_to_dpu.extend(ep.send_rope(rope));
     }
     back_to_dpu
 }
@@ -227,7 +239,8 @@ impl ClientConn {
         for s in segs {
             out.extend(self.ep.on_segment(s));
         }
-        self.rx.extend(&self.ep.deliver());
+        let delivered = self.ep.deliver_rope();
+        self.rx.extend_rope(&delivered, self.ep.ledger());
         let mut resps = Vec::new();
         while let Some(frame) = self.rx.read_frame() {
             if let Some(r) = NetResp::decode(&frame) {

@@ -273,6 +273,10 @@ pub struct ShardedServer {
     inputs: Vec<mpsc::Sender<PacketBatch>>,
     outputs: Vec<Mutex<mpsc::Receiver<PacketBatch>>>,
     stats: Vec<Arc<ShardStats>>,
+    /// Per-shard engine buffer pools (handles cloned out before the
+    /// engines moved into their shard threads — occupancy and copy
+    /// ledger stay observable; the chaos suite's leak check).
+    engine_pools: Vec<crate::buf::BufPool>,
     /// Per-shard engine-failure injection flags (fault plane).
     fail_flags: Vec<Arc<AtomicBool>>,
     joins: Vec<JoinHandle<()>>,
@@ -322,6 +326,7 @@ impl ShardedServer {
         let mut inputs = Vec::with_capacity(n);
         let mut outputs = Vec::with_capacity(n);
         let mut stats = Vec::with_capacity(n);
+        let mut engine_pools = Vec::with_capacity(n);
         let mut fail_flags = Vec::with_capacity(n);
         let mut joins = Vec::with_capacity(n);
         for (i, mut aio) in queues.into_iter().enumerate() {
@@ -335,6 +340,7 @@ impl ShardedServer {
                 aio,
                 engine_cfg.clone(),
             );
+            engine_pools.push(engine.pool().clone());
             let director =
                 DirectorShard::new(i, signature, logic.clone(), storage.cache.clone(), engine);
             let app = mk_app(i, &storage)?;
@@ -360,12 +366,29 @@ impl ShardedServer {
             fail_flags.push(fail_flag);
             joins.push(join);
         }
-        Ok(ShardedServer { storage, shards: n, inputs, outputs, stats, fail_flags, joins, stop })
+        Ok(ShardedServer {
+            storage,
+            shards: n,
+            inputs,
+            outputs,
+            stats,
+            engine_pools,
+            fail_flags,
+            joins,
+            stop,
+        })
     }
 
     /// Number of shards.
     pub fn num_shards(&self) -> usize {
         self.shards
+    }
+
+    /// Per-shard engine buffer pools (index = shard id). Alive even
+    /// after shutdown, so leak checks can assert occupancy returns to
+    /// zero once the shard threads have been joined.
+    pub fn engine_pools(&self) -> &[crate::buf::BufPool] {
+        &self.engine_pools
     }
 
     /// RSS steering: the shard that owns `tuple`.

@@ -26,6 +26,7 @@ pub use shard::{DirectorShard, DirectorShardStats};
 
 use std::sync::Arc;
 
+use crate::buf::ByteRope;
 use crate::cache::CuckooCache;
 use crate::net::tcp::{Segment, TcpEndpoint};
 use crate::net::FiveTuple;
@@ -139,7 +140,8 @@ impl TrafficDirector {
         for s in &segs {
             out.to_client.extend(self.client_ep.on_segment(s));
         }
-        self.client_rx.extend(&self.client_ep.deliver());
+        let delivered = self.client_ep.deliver_rope();
+        self.client_rx.extend_rope(&delivered, self.client_ep.ledger());
         // Reassemble full frames → messages → offload predicate.
         let mut host_reqs: Vec<RoutedReq> = Vec::new();
         let mut dpu_reqs: Vec<RoutedReq> = Vec::new();
@@ -180,7 +182,8 @@ impl TrafficDirector {
         for s in &segs {
             out.to_host.extend(self.host_ep.on_segment(s));
         }
-        self.host_rx.extend(&self.host_ep.deliver());
+        let delivered = self.host_ep.deliver_rope();
+        self.host_rx.extend_rope(&delivered, self.host_ep.ledger());
         let mut responses = Vec::new();
         while let Some(frame) = self.host_rx.read_frame() {
             if let Some(mut resp) = NetResp::decode(&frame) {
@@ -214,15 +217,20 @@ impl TrafficDirector {
         out
     }
 
+    /// Frame responses toward the client with zero payload copies
+    /// (Fig 12 ④): each payload rides as the view the engine (or host
+    /// decode) produced; the tiny frame headers become owned views that
+    /// the TCP layer's small-part coalescer MSS-packs, so they never
+    /// turn into per-response wire segments on all-small workloads.
     fn send_responses(&mut self, responses: Vec<NetResp>, out: &mut DirectorOut) {
         if responses.is_empty() {
             return;
         }
-        let mut stream = Vec::new();
+        let mut rope = ByteRope::new();
         for r in responses {
-            framing::write_frame(&mut stream, &r.encode());
+            r.frame_into_rope(&mut rope);
         }
-        out.to_client.extend(self.client_ep.send(&stream));
+        out.to_client.extend(self.client_ep.send_rope(rope));
     }
 }
 

@@ -165,7 +165,7 @@ mod tests {
     fn non_matching_flows_forwarded_without_flow_state() {
         let mut d = mfd(2);
         let other = FiveTuple::new(1, 2, 3, 9999);
-        let seg = Segment { seq: 0, payload: vec![1, 2, 3], ack: 0 };
+        let seg = Segment { seq: 0, payload: vec![1, 2, 3].into(), ack: 0 };
         let out = d.on_client_packets(&other, vec![seg]);
         assert_eq!(out.forwarded, 1);
         assert_eq!(out.to_host.len(), 1);
@@ -178,7 +178,7 @@ mod tests {
         let mut d = mfd(2);
         let t = FiveTuple::new(10, 20, 30, 5000);
         for _ in 0..5 {
-            let seg = Segment { seq: 0, payload: Vec::new(), ack: 0 };
+            let seg = Segment { seq: 0, payload: crate::buf::BufView::empty(), ack: 0 };
             d.on_client_packets(&t, vec![seg]);
         }
         assert_eq!(d.flows_created(), 1);
@@ -192,7 +192,7 @@ mod tests {
         let mut d = mfd(3);
         for i in 0..12u32 {
             let t = FiveTuple::new(100 + i, 200, 300, 5000);
-            let seg = Segment { seq: 0, payload: Vec::new(), ack: 0 };
+            let seg = Segment { seq: 0, payload: crate::buf::BufView::empty(), ack: 0 };
             d.on_client_packets(&t, vec![seg]);
         }
         let st = d.stats();

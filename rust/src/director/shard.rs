@@ -244,7 +244,7 @@ mod tests {
     fn non_matching_forwarded_without_flow_state() {
         let mut s = shard(0);
         let other = FiveTuple::new(1, 2, 3, 9999);
-        let seg = Segment { seq: 0, payload: vec![1, 2, 3], ack: 0 };
+        let seg = Segment { seq: 0, payload: vec![1, 2, 3].into(), ack: 0 };
         let out = s.on_client_packets(&other, vec![seg]);
         assert_eq!(out.forwarded, 1);
         assert_eq!(out.to_host.len(), 1);
@@ -257,7 +257,7 @@ mod tests {
         let mut s = shard(0);
         let t = FiveTuple::new(10, 20, 30, 5000);
         for _ in 0..5 {
-            let seg = Segment { seq: 0, payload: Vec::new(), ack: 0 };
+            let seg = Segment { seq: 0, payload: crate::buf::BufView::empty(), ack: 0 };
             s.on_client_packets(&t, vec![seg]);
         }
         let st = s.stats();

@@ -46,6 +46,12 @@ impl DmaChannel {
 
     /// Record one DMA op of `bytes` in direction `dir` (and burn the
     /// injected latency, if configured).
+    ///
+    /// Scope contract with the buffer plane: this channel meters ONLY
+    /// the transfers real hardware would DMA (ring drains/pushes, the
+    /// §4.1 op-count arguments). Software copies — the overhead the
+    /// zero-copy design eliminates — are metered separately by
+    /// [`crate::buf::CopyLedger`]; no byte is ever counted by both.
     #[inline]
     pub fn op(&self, dir: DmaDir, bytes: usize) {
         match dir {

@@ -452,7 +452,7 @@ mod tests {
 
     #[test]
     fn wire_chaos_deterministic_and_lossless_when_off() {
-        let seg = |seq: u64| Segment { seq, payload: vec![seq as u8; 8], ack: 0 };
+        let seg = |seq: u64| Segment { seq, payload: vec![seq as u8; 8].into(), ack: 0 };
         let run = || {
             let plane = FaultPlane::new(chaotic_cfg(21));
             let mut chaos = plane.wire_chaos(0, true);

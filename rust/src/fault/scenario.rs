@@ -420,7 +420,7 @@ pub fn run_scenario(sc: &Scenario) -> anyhow::Result<ScenarioReport> {
         total
     );
     acc.outcomes.sort_unstable();
-    Ok(ScenarioReport {
+    let report = ScenarioReport {
         name: sc.name,
         seed: sc.seed,
         ok: acc.ok,
@@ -435,7 +435,36 @@ pub fn run_scenario(sc: &Scenario) -> anyhow::Result<ScenarioReport> {
             .group_stats()
             .map_err(|e| anyhow::anyhow!("{e}"))?,
         elapsed: started.elapsed(),
-    })
+    };
+    // Buffer-plane leak check: whatever the fault schedule did — lost
+    // completions, failed engines, stalled groups, duplicated segments —
+    // every pooled buffer must come home once the plane quiesces. The
+    // pool handles outlive the server; dropping it joins shard threads
+    // and the file service, releasing every in-flight view.
+    let engine_pools = server.engine_pools().to_vec();
+    let service_pools =
+        [server.storage.buf_pool.clone(), server.storage.read_buf_pool.clone()];
+    drop(conns);
+    drop(server);
+    for (shard, pool) in engine_pools.iter().enumerate() {
+        anyhow::ensure!(
+            pool.in_use() == 0,
+            "scenario '{}' (seed {}): shard {shard} engine pool leaked {} buffers",
+            sc.name,
+            sc.seed,
+            pool.in_use()
+        );
+    }
+    for pool in &service_pools {
+        anyhow::ensure!(
+            pool.in_use() == 0,
+            "scenario '{}' (seed {}): file-service pool leaked {} buffers",
+            sc.name,
+            sc.seed,
+            pool.in_use()
+        );
+    }
+    Ok(report)
 }
 
 /// One pump step for one connection: absorb a server batch (through

@@ -31,6 +31,7 @@ use std::sync::mpsc;
 use std::sync::{Arc, Condvar, Mutex, RwLock};
 use std::thread::JoinHandle;
 
+use crate::buf::{BufPool, BufView};
 use crate::cache::CuckooCache;
 use crate::dma::DmaChannel;
 use crate::dpufs::{DirId, DpuFs, FileId, FsError};
@@ -153,6 +154,21 @@ pub struct FileServiceConfig {
     /// Optional fault injector for the service's SSD queue (the host
     /// slow path's hook point in the fault plane).
     pub ssd_faults: Option<crate::fault::SsdFaultInjector>,
+    /// Buffer-pool slots for the service's big size class (request
+    /// batch staging + multi-extent assembly).
+    pub pool_slots: usize,
+    /// Big size class in bytes. Must cover the request ring's max
+    /// allowable progress (one slot stages a whole drained batch);
+    /// bigger requests fall back to counted heap allocations rather
+    /// than failing.
+    pub pool_slot_size: usize,
+    /// Slots in the read-completion size class. Each in-flight SSD read
+    /// pins one slot until its response is delivered, so this bounds
+    /// steady-state read queue depth before counted heap fallbacks.
+    pub read_pool_slots: usize,
+    /// Read-completion size class in bytes (the common read size;
+    /// larger reads fall back, counted).
+    pub read_pool_slot_size: usize,
 }
 
 impl Default for FileServiceConfig {
@@ -168,6 +184,15 @@ impl Default for FileServiceConfig {
             dma_latency_ns: 0,
             pending_timeout: std::time::Duration::from_secs(5),
             ssd_faults: None,
+            // Two size classes (see DESIGN.md "buffer plane"):
+            // 64 × 256 KiB batch/assembly slots (covers the default
+            // ring's 256 KiB max progress) + 256 × 64 KiB
+            // read-completion slots (256 in-flight reads before
+            // fallback, without pinning a batch-class slot per read).
+            pool_slots: 64,
+            pool_slot_size: 256 << 10,
+            read_pool_slots: 256,
+            read_pool_slot_size: 64 << 10,
         }
     }
 }
@@ -217,6 +242,12 @@ pub struct FileService {
     aio: AsyncSsd,
     dma: DmaChannel,
     cfg: FileServiceConfig,
+    /// Big size class of the service's zero-copy plane: request-batch
+    /// staging + multi-extent assembly. Shares one copy ledger with
+    /// `read_pool`, so either pool's `stats()` meters the whole plane.
+    pool: BufPool,
+    /// Read-completion size class (attached to the SSD queue).
+    read_pool: BufPool,
     groups: Vec<ServiceGroup>,
     /// Rotating round-robin starts for request intake and response
     /// delivery (fairness across poll groups).
@@ -239,6 +270,17 @@ impl FileService {
         if let Some(inj) = cfg.ssd_faults.clone() {
             aio.attach_faults(inj);
         }
+        // One ledger across both size classes: the copy meter sees the
+        // whole service plane no matter which pool served a request.
+        let ledger = crate::buf::CopyLedger::new();
+        let pool = BufPool::with_ledger(cfg.pool_slots, cfg.pool_slot_size, ledger.clone());
+        let read_pool =
+            BufPool::with_ledger(cfg.read_pool_slots, cfg.read_pool_slot_size, ledger);
+        // SSD read completions land in the read-class pool (§4.3: the
+        // driver DMAs into pre-allocated response memory) — sized for
+        // the common read, so a 4 KiB completion never pins a 256 KiB
+        // batch slot.
+        aio.attach_read_pool(read_pool.clone());
         let (tx, rx) = mpsc::channel();
         let dma = if cfg.dma_latency_ns > 0 {
             DmaChannel::with_latency(cfg.dma_latency_ns)
@@ -251,6 +293,8 @@ impl FileService {
                 aio,
                 dma,
                 cfg,
+                pool,
+                read_pool,
                 groups: Vec::new(),
                 rr_intake: 0,
                 rr_deliver: 0,
@@ -324,7 +368,7 @@ impl FileService {
                     let slots = self.cfg.staging_slots;
                     self.groups.push(ServiceGroup {
                         chan: group,
-                        staging: OrderedStaging::new(slots),
+                        staging: OrderedStaging::new(slots, self.pool.clone()),
                         requests: 0,
                         delivered: 0,
                         stall: 0,
@@ -394,15 +438,19 @@ impl FileService {
             let extra_copy = self.cfg.extra_copy;
             {
                 let g = &self.groups[gi];
-                g.chan.req_ring.pop_batch_dma(&self.dma, &mut |bytes| {
+                let pool = &self.pool;
+                // The one DMA read of the batch lands in a pooled
+                // buffer; each record is decoded as a view of it, so a
+                // write's payload is never copied out of the batch.
+                g.chan.req_ring.pop_batch_views_dma(&self.dma, pool, &mut |view| {
                     if extra_copy {
                         // Straw-man: stage the request before parsing
-                        // (the copy §4.3 eliminates).
-                        let staged = bytes.to_vec();
-                        if let Some(req) = FileRequest::decode(&staged) {
+                        // (the copy §4.3 eliminates — metered).
+                        let staged = BufView::copy_of(pool, view.as_slice());
+                        if let Some(req) = FileRequest::decode_view(&staged) {
                             batch.push(req);
                         }
-                    } else if let Some(req) = FileRequest::decode(bytes) {
+                    } else if let Some(req) = FileRequest::decode_view(&view) {
                         batch.push(req);
                     }
                 });
@@ -473,10 +521,13 @@ impl FileService {
                         let mut at = 0usize;
                         for (ei, e) in extents.iter().enumerate() {
                             let tag = pack_tag(gi, slot, ei);
-                            // Zero-copy contract: the driver consumes the
-                            // request buffer directly; the straw-man's
-                            // extra copy is modeled at intake.
-                            let chunk = req.data[at..at + e.len as usize].to_vec();
+                            // Zero-copy contract: each per-extent chunk
+                            // is a sub-view of the request payload (which
+                            // itself aliases the DMA'd batch buffer) —
+                            // the driver consumes it by reference; the
+                            // straw-man's extra copy is modeled at
+                            // intake.
+                            let chunk = req.data.slice(at..at + e.len as usize);
                             at += e.len as usize;
                             self.aio.submit(tag, SsdOp::Write { addr: e.addr, data: chunk });
                         }
@@ -538,12 +589,14 @@ impl FileService {
             }
             let mut delivered = false;
             while let Some((req_id, status, data)) = g.staging.peek_deliverable() {
-                let resp = FileResponse {
-                    req_id,
-                    status: if status == StagedStatus::Done { Status::Ok } else { Status::Error },
-                    data,
-                };
-                match g.chan.resp_ring.push_dma(&self.dma, &resp.encode()) {
+                // Vectored DMA-write: response header + payload view go
+                // to the host ring as one record with no concatenation
+                // buffer (§4.3 — the pre-allocated read buffer IS the
+                // response payload).
+                let code = if status == StagedStatus::Done { Status::Ok } else { Status::Error };
+                let header = FileResponse::encode_header(req_id, code, data.len());
+                match g.chan.resp_ring.push_vectored_dma(&self.dma, &[&header, data.as_slice()])
+                {
                     RingStatus::Ok => {
                         g.staging.pop_delivered();
                         g.delivered += 1;
@@ -563,6 +616,18 @@ impl FileService {
     /// DMA statistics (reads, writes).
     pub fn dma_stats(&self) -> (u64, u64) {
         (self.dma.reads(), self.dma.writes())
+    }
+
+    /// The service's batch/assembly pool (clone the handle before
+    /// `spawn` to observe occupancy and the — shared — copy ledger
+    /// from outside the service thread).
+    pub fn buf_pool(&self) -> &BufPool {
+        &self.pool
+    }
+
+    /// The service's read-completion pool.
+    pub fn read_buf_pool(&self) -> &BufPool {
+        &self.read_pool
     }
 }
 

@@ -10,9 +10,17 @@
 //!   response".
 //! * `TailC` (**completed/delivered**): end of responses DMA-written to
 //!   the host response ring. `TailB - TailC ≥ batch` triggers delivery.
+//!
+//! Zero-copy: a single-extent read (the common case) completes by
+//! *referencing* the pooled buffer the SSD DMA'd into — the slot holds
+//! a [`BufView`], and delivery DMA-writes that view (vectored with the
+//! response header) straight to the host ring. Only multi-extent reads
+//! gather into a pool-backed assembly buffer (a metered copy), and only
+//! the `extra_copy` straw-man (Fig 18 ablation) stages payloads twice.
 
 use std::time::{Duration, Instant};
 
+use crate::buf::{BufPool, BufView, PooledBuf};
 use crate::dpufs::Extent;
 
 /// Status of one pre-allocated response slot.
@@ -27,10 +35,16 @@ pub enum StagedStatus {
 struct Slot {
     req_id: u64,
     status: StagedStatus,
-    /// Pre-allocated response payload buffer (read data lands here).
-    data: Vec<u8>,
+    /// Completed payload: for single-extent reads, the completion view
+    /// itself; for multi-extent reads, the frozen assembly buffer.
+    view: Option<BufView>,
+    /// Multi-extent gather buffer (pool-backed), allocated when the
+    /// extent layout is recorded and frozen into `view` on completion.
+    assembly: Option<PooledBuf>,
+    /// Expected payload bytes (0 for writes).
+    expected_payload: usize,
     extents_remaining: usize,
-    /// Byte offset in `data` where each extent starts.
+    /// Byte offset where each extent's bytes land in the payload.
     extent_offsets: Vec<usize>,
     /// Allocation time — reference point for [`OrderedStaging::fail_stalled`].
     issued: Instant,
@@ -40,6 +54,7 @@ struct Slot {
 /// tail pointers.
 pub struct OrderedStaging {
     slots: Vec<Option<Slot>>,
+    pool: BufPool,
     /// TailA: next slot to allocate (monotonic).
     tail_a: u64,
     /// TailB: end of in-order completed prefix.
@@ -49,10 +64,11 @@ pub struct OrderedStaging {
 }
 
 impl OrderedStaging {
-    pub fn new(capacity: usize) -> Self {
+    /// `pool` backs multi-extent assembly and straw-man staging copies.
+    pub fn new(capacity: usize, pool: BufPool) -> Self {
         let mut slots = Vec::with_capacity(capacity);
         slots.resize_with(capacity, || None);
-        OrderedStaging { slots, tail_a: 0, tail_b: 0, tail_c: 0 }
+        OrderedStaging { slots, pool, tail_a: 0, tail_b: 0, tail_c: 0 }
     }
 
     pub fn capacity(&self) -> usize {
@@ -73,22 +89,26 @@ impl OrderedStaging {
         (self.tail_a - self.tail_b) as usize
     }
 
-    /// TailA advance: pre-allocate a response of `expected_len` payload
-    /// bytes for `req_id`, status pending. Returns the slot index, or
-    /// `None` when the ring is full.
+    /// TailA advance: pre-allocate a response of `expected_len` total
+    /// bytes (header + payload) for `req_id`, status pending. Returns
+    /// the slot index, or `None` when the ring is full.
+    ///
+    /// "Pre-allocation" here reserves the *slot*; the payload memory
+    /// itself is the pooled buffer the SSD completion arrives in (the
+    /// zero-copy contract), so nothing is allocated up front.
     pub fn allocate(&mut self, req_id: u64, expected_len: usize) -> Option<u64> {
         if self.free_slots() == 0 {
             return None;
         }
         let idx = self.tail_a;
         let pos = (idx % self.capacity() as u64) as usize;
-        // expected_len counts header + payload; the payload buffer is
-        // what the device writes into.
         let payload = expected_len.saturating_sub(crate::proto::FileResponse::HEADER_LEN);
         self.slots[pos] = Some(Slot {
             req_id,
             status: StagedStatus::Pending,
-            data: vec![0u8; payload],
+            view: None,
+            assembly: None,
+            expected_payload: payload,
             extents_remaining: usize::MAX, // until set_extents
             extent_offsets: Vec::new(),
             issued: Instant::now(),
@@ -98,7 +118,8 @@ impl OrderedStaging {
     }
 
     /// Record the extent layout for a slot (defines where each extent's
-    /// bytes land in the pre-allocated buffer).
+    /// bytes land in the payload). Multi-extent reads allocate their
+    /// gather buffer here.
     pub fn set_extents(&mut self, slot: u64, extents: &[Extent]) {
         let pos = (slot % self.capacity() as u64) as usize;
         let s = self.slots[pos].as_mut().expect("slot allocated");
@@ -110,15 +131,20 @@ impl OrderedStaging {
         }
         s.extent_offsets = offsets;
         s.extents_remaining = extents.len();
+        if extents.len() > 1 && s.expected_payload > 0 {
+            s.assembly = Some(self.pool.allocate(s.expected_payload.min(acc)));
+        }
         if extents.is_empty() {
             s.status = StagedStatus::Done;
         }
     }
 
-    /// Mark one extent of `slot` complete, placing `data` at its
-    /// recorded offset. `extra_copy` models the straw-man that stages
-    /// the payload once more before placing it (Fig 18 ablation).
-    pub fn complete_extent(&mut self, slot: u64, extent: usize, data: &[u8], extra_copy: bool) {
+    /// Mark one extent of `slot` complete. Single-extent reads keep a
+    /// reference to `data` (zero-copy); multi-extent reads gather it at
+    /// the recorded offset (metered copy). `extra_copy` models the
+    /// straw-man that stages the payload once more before placing it
+    /// (Fig 18 ablation; also metered).
+    pub fn complete_extent(&mut self, slot: u64, extent: usize, data: &BufView, extra_copy: bool) {
         if slot < self.tail_c || slot >= self.tail_a {
             return; // stale completion
         }
@@ -127,23 +153,33 @@ impl OrderedStaging {
         if s.status == StagedStatus::Failed {
             return;
         }
-        let staged;
-        let src: &[u8] = if extra_copy {
-            staged = data.to_vec();
-            &staged
+        let src: BufView = if extra_copy && !data.is_empty() {
+            BufView::copy_of(&self.pool, data.as_slice())
         } else {
-            data
+            data.clone()
         };
-        if !src.is_empty() {
-            let start = s.extent_offsets.get(extent).copied().unwrap_or(0);
-            let end = (start + src.len()).min(s.data.len());
-            if start < end {
-                s.data[start..end].copy_from_slice(&src[..end - start]);
+        if !src.is_empty() && s.expected_payload > 0 {
+            if let Some(assembly) = s.assembly.as_mut() {
+                // Multi-extent gather into the pre-allocated buffer.
+                let start = s.extent_offsets.get(extent).copied().unwrap_or(0);
+                let end = (start + src.len()).min(assembly.len());
+                if start < end {
+                    assembly.as_mut_slice()[start..end].copy_from_slice(&src[..end - start]);
+                    self.pool.ledger().count_copy(end - start);
+                }
+            } else {
+                // Single extent: the completion buffer IS the response
+                // payload — referenced, never copied.
+                let take = src.len().min(s.expected_payload);
+                s.view = Some(if take == src.len() { src } else { src.slice(0..take) });
             }
         }
         s.extents_remaining = s.extents_remaining.saturating_sub(1);
         if s.extents_remaining == 0 {
             s.status = StagedStatus::Done;
+            if let Some(assembly) = s.assembly.take() {
+                s.view = Some(assembly.freeze());
+            }
         }
     }
 
@@ -159,6 +195,9 @@ impl OrderedStaging {
         let pos = (slot % self.capacity() as u64) as usize;
         if let Some(s) = self.slots[pos].as_mut() {
             s.status = StagedStatus::Failed;
+            // Release buffers early: a failed slot delivers no payload.
+            s.view = None;
+            s.assembly = None;
         }
     }
 
@@ -181,6 +220,8 @@ impl OrderedStaging {
                     && s.issued.elapsed() >= timeout =>
                 {
                     s.status = StagedStatus::Failed;
+                    s.view = None;
+                    s.assembly = None;
                     failed += 1;
                 }
                 _ => return failed,
@@ -199,18 +240,25 @@ impl OrderedStaging {
         }
     }
 
-    /// Next deliverable response (at TailC), if TailC < TailB.
-    pub fn peek_deliverable(&self) -> Option<(u64, StagedStatus, Vec<u8>)> {
+    /// Next deliverable response (at TailC), if TailC < TailB. The
+    /// payload comes back as a view (refcount bump) — delivery pushes
+    /// it to the host ring without materializing.
+    pub fn peek_deliverable(&self) -> Option<(u64, StagedStatus, BufView)> {
         if self.tail_c >= self.tail_b {
             return None;
         }
         let pos = (self.tail_c % self.capacity() as u64) as usize;
         let s = self.slots[pos].as_ref().expect("slot in [TailC, TailB)");
-        let data = if s.status == StagedStatus::Done { s.data.clone() } else { Vec::new() };
+        let data = match (&s.status, &s.view) {
+            (StagedStatus::Done, Some(v)) => v.clone(),
+            _ => BufView::empty(),
+        };
         Some((s.req_id, s.status, data))
     }
 
     /// TailC advance after a successful DMA-write to the host ring.
+    /// Drops the slot's view — the pooled buffer goes home once the
+    /// last reference (e.g. an in-flight vectored push) releases.
     pub fn pop_delivered(&mut self) {
         assert!(self.tail_c < self.tail_b, "nothing deliverable");
         let pos = (self.tail_c % self.capacity() as u64) as usize;
@@ -227,50 +275,97 @@ mod tests {
         Extent { addr, len }
     }
 
+    fn staging(capacity: usize) -> OrderedStaging {
+        OrderedStaging::new(capacity, BufPool::new(capacity, 4096))
+    }
+
+    fn view(bytes: &[u8]) -> BufView {
+        BufView::from_vec(bytes.to_vec())
+    }
+
     #[test]
     fn in_order_single_extent() {
-        let mut st = OrderedStaging::new(8);
+        let mut st = staging(8);
         let a = st.allocate(1, crate::proto::FileResponse::HEADER_LEN + 4).unwrap();
         let b = st.allocate(2, crate::proto::FileResponse::HEADER_LEN + 4).unwrap();
         st.set_extents(a, &[ext(0, 4)]);
         st.set_extents(b, &[ext(4, 4)]);
         // Complete b FIRST — must not be delivered before a.
-        st.complete_extent(b, 0, &[2, 2, 2, 2], false);
+        st.complete_extent(b, 0, &view(&[2, 2, 2, 2]), false);
         st.advance_buffered();
         assert_eq!(st.buffered(), 0);
         assert!(st.peek_deliverable().is_none());
         // Complete a — now both become deliverable in order.
-        st.complete_extent(a, 0, &[1, 1, 1, 1], false);
+        st.complete_extent(a, 0, &view(&[1, 1, 1, 1]), false);
         st.advance_buffered();
         assert_eq!(st.buffered(), 2);
         let (id1, s1, d1) = st.peek_deliverable().unwrap();
-        assert_eq!((id1, s1, d1), (1, StagedStatus::Done, vec![1, 1, 1, 1]));
+        assert_eq!((id1, s1), (1, StagedStatus::Done));
+        assert_eq!(d1, vec![1, 1, 1, 1]);
         st.pop_delivered();
         let (id2, _, d2) = st.peek_deliverable().unwrap();
-        assert_eq!((id2, d2), (2, vec![2, 2, 2, 2]));
+        assert_eq!(id2, 2);
+        assert_eq!(d2, vec![2, 2, 2, 2]);
         st.pop_delivered();
         assert!(st.peek_deliverable().is_none());
     }
 
+    /// Single-extent completion is zero-copy: the delivered payload
+    /// aliases the completion buffer and the staging pool meters
+    /// nothing.
+    #[test]
+    fn single_extent_references_completion_buffer() {
+        let pool = BufPool::new(4, 4096);
+        let mut st = OrderedStaging::new(4, pool.clone());
+        let a = st.allocate(1, crate::proto::FileResponse::HEADER_LEN + 4).unwrap();
+        st.set_extents(a, &[ext(0, 4)]);
+        let completion = view(&[9, 8, 7, 6]);
+        st.complete_extent(a, 0, &completion, false);
+        st.advance_buffered();
+        let (_, status, data) = st.peek_deliverable().unwrap();
+        assert_eq!(status, StagedStatus::Done);
+        assert!(data.shares_storage(&completion), "referenced, not copied");
+        let s = pool.stats();
+        assert_eq!((s.allocs, s.bytes_copied), (0, 0));
+    }
+
     #[test]
     fn multi_extent_assembles_at_offsets() {
-        let mut st = OrderedStaging::new(4);
+        let pool = BufPool::new(4, 4096);
+        let mut st = OrderedStaging::new(4, pool.clone());
         let a = st.allocate(7, crate::proto::FileResponse::HEADER_LEN + 10).unwrap();
         st.set_extents(a, &[ext(0, 6), ext(100, 4)]);
         // Second extent completes first.
-        st.complete_extent(a, 1, &[9, 9, 9, 9], false);
+        st.complete_extent(a, 1, &view(&[9, 9, 9, 9]), false);
         st.advance_buffered();
         assert_eq!(st.buffered(), 0);
-        st.complete_extent(a, 0, &[1, 2, 3, 4, 5, 6], false);
+        st.complete_extent(a, 0, &view(&[1, 2, 3, 4, 5, 6]), false);
         st.advance_buffered();
         let (_, status, data) = st.peek_deliverable().unwrap();
         assert_eq!(status, StagedStatus::Done);
         assert_eq!(data, vec![1, 2, 3, 4, 5, 6, 9, 9, 9, 9]);
+        // The gather is metered: one pooled assembly, 10 bytes copied.
+        let s = pool.stats();
+        assert_eq!((s.allocs, s.bytes_copied), (1, 10));
+    }
+
+    #[test]
+    fn extra_copy_mode_is_metered() {
+        let pool = BufPool::new(4, 4096);
+        let mut st = OrderedStaging::new(4, pool.clone());
+        let a = st.allocate(1, crate::proto::FileResponse::HEADER_LEN + 4).unwrap();
+        st.set_extents(a, &[ext(0, 4)]);
+        st.complete_extent(a, 0, &view(&[5, 5, 5, 5]), true);
+        st.advance_buffered();
+        let (_, status, data) = st.peek_deliverable().unwrap();
+        assert_eq!(status, StagedStatus::Done);
+        assert_eq!(data, vec![5, 5, 5, 5]);
+        assert_eq!(pool.stats().bytes_copied, 4, "the straw-man staging copy");
     }
 
     #[test]
     fn capacity_enforced() {
-        let mut st = OrderedStaging::new(2);
+        let mut st = staging(2);
         st.allocate(1, 16).unwrap();
         st.allocate(2, 16).unwrap();
         assert!(st.allocate(3, 16).is_none());
@@ -279,7 +374,7 @@ mod tests {
 
     #[test]
     fn failed_slot_delivers_error_in_order() {
-        let mut st = OrderedStaging::new(4);
+        let mut st = staging(4);
         let a = st.allocate(1, 32).unwrap();
         st.set_extents(a, &[ext(0, 19)]);
         st.fail(a);
@@ -292,15 +387,15 @@ mod tests {
 
     #[test]
     fn stale_completion_ignored() {
-        let mut st = OrderedStaging::new(2);
+        let mut st = staging(2);
         let a = st.allocate(1, 16).unwrap();
         st.set_extents(a, &[ext(0, 3)]);
-        st.complete_extent(a, 0, &[1, 2, 3], false);
+        st.complete_extent(a, 0, &view(&[1, 2, 3]), false);
         st.advance_buffered();
         st.pop_delivered();
         // Late duplicate completion for a recycled slot index: no panic,
         // no state corruption.
-        st.complete_extent(a, 0, &[9, 9, 9], false);
+        st.complete_extent(a, 0, &view(&[9, 9, 9]), false);
         assert_eq!(st.buffered(), 0);
         // A late ERROR completion for the delivered slot is equally
         // stale: slot index 2 recycles slot 0's ring position, and a
@@ -311,8 +406,8 @@ mod tests {
         st.set_extents(b, &[ext(0, 3)]);
         st.set_extents(c, &[ext(4, 3)]);
         st.fail(a);
-        st.complete_extent(b, 0, &[7, 7, 7], false);
-        st.complete_extent(c, 0, &[8, 8, 8], false);
+        st.complete_extent(b, 0, &view(&[7, 7, 7]), false);
+        st.complete_extent(c, 0, &view(&[8, 8, 8]), false);
         st.advance_buffered();
         let (id, status, _) = st.peek_deliverable().unwrap();
         assert_eq!((id, status), (2, StagedStatus::Done));
@@ -324,13 +419,13 @@ mod tests {
 
     #[test]
     fn fail_stalled_unblocks_in_order_delivery() {
-        let mut st = OrderedStaging::new(8);
+        let mut st = staging(8);
         let a = st.allocate(1, crate::proto::FileResponse::HEADER_LEN + 4).unwrap();
         let b = st.allocate(2, crate::proto::FileResponse::HEADER_LEN + 4).unwrap();
         st.set_extents(a, &[ext(0, 4)]);
         st.set_extents(b, &[ext(4, 4)]);
         // b completes; a's completion is lost. Nothing deliverable yet.
-        st.complete_extent(b, 0, &[2, 2, 2, 2], false);
+        st.complete_extent(b, 0, &view(&[2, 2, 2, 2]), false);
         assert_eq!(st.fail_stalled(Duration::from_secs(60)), 0, "not stalled yet");
         st.advance_buffered();
         assert!(st.peek_deliverable().is_none());
@@ -348,16 +443,16 @@ mod tests {
         // A completed head is never aborted.
         let c = st.allocate(3, crate::proto::FileResponse::HEADER_LEN).unwrap();
         st.set_extents(c, &[ext(8, 4)]);
-        st.complete_extent(c, 0, &[], false);
+        st.complete_extent(c, 0, &view(&[]), false);
         assert_eq!(st.fail_stalled(Duration::ZERO), 0);
     }
 
     #[test]
     fn write_slot_zero_extents_completes_via_counter() {
-        let mut st = OrderedStaging::new(2);
+        let mut st = staging(2);
         let a = st.allocate(5, crate::proto::FileResponse::HEADER_LEN).unwrap();
         st.set_extents(a, &[ext(0, 8)]);
-        st.complete_extent(a, 0, &[], false); // write completion: no data
+        st.complete_extent(a, 0, &view(&[]), false); // write completion: no data
         st.advance_buffered();
         let (id, status, data) = st.peek_deliverable().unwrap();
         assert_eq!((id, status), (5, StagedStatus::Done));

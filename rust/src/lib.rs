@@ -17,7 +17,11 @@
 //!   the RSS-sharded deployment that runs the whole data path once per
 //!   DPU core ([`director::shard`], [`coordinator::sharded`]), and the
 //!   seeded fault-injection plane with its chaos scenario harness
-//!   ([`fault`], [`fault::scenario`]).
+//!   ([`fault`], [`fault::scenario`]), all sharing the zero-copy buffer
+//!   plane ([`buf`]): pooled refcounted buffers referenced — never
+//!   copied — from SSD completion to wire segment, with a per-pool copy
+//!   ledger metering every software copy the design is supposed to have
+//!   eliminated.
 //! * **Calibrated testbed plane** ([`sim`], [`baselines`]) — a
 //!   discrete-virtual-time queueing testbed standing in for the paper's
 //!   BlueField-2 + EPYC + NVMe + 100 GbE hardware, calibrated against the
@@ -30,6 +34,7 @@
 
 pub mod apps;
 pub mod baselines;
+pub mod buf;
 pub mod cache;
 pub mod coordinator;
 pub mod director;

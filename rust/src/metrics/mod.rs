@@ -4,6 +4,8 @@
 pub mod bench;
 mod histogram;
 mod series;
+pub mod zerocopy;
 
 pub use histogram::Histogram;
 pub use series::{fmt_ns, fmt_ops, Row, Table};
+pub use zerocopy::{probe_engine_read_path, ZeroCopyProbe};

@@ -1,0 +1,139 @@
+//! Functional-plane zero-copy probe: drives REAL bytes through the
+//! offload engine (SSD → pooled completion → context ring → response
+//! views) and reports ops/s plus the copy ledger's per-request numbers.
+//!
+//! Shared by `fig23_zerocopy` (which prints it next to the calibrated
+//! testbed's Fig 23 reproduction) and the `bench_summary` emitter
+//! (which records it in `BENCH_zerocopy.json` so the perf trajectory of
+//! the buffer plane is tracked across PRs).
+
+use std::sync::{Arc, RwLock};
+use std::time::Instant;
+
+use crate::buf::LedgerSnapshot;
+use crate::cache::CuckooCache;
+use crate::dpufs::{DpuFs, FsConfig};
+use crate::offload::{OffloadEngine, OffloadEngineConfig, RawFileOffload, RoutedReq};
+use crate::proto::{AppRequest, NetResp};
+use crate::ssd::{AsyncSsd, Ssd};
+
+/// One probe measurement.
+#[derive(Debug, Clone, Copy)]
+pub struct ZeroCopyProbe {
+    /// `"zero-copy"` or `"copy"` (the Fig 23 straw-man).
+    pub mode: &'static str,
+    /// Measured read requests.
+    pub reads: u64,
+    pub read_size: u32,
+    pub ops_per_sec: f64,
+    /// Software bytes memcpy'd per request (the ledger's meter — DMA
+    /// transfers are excluded by construction).
+    pub bytes_copied_per_req: f64,
+    /// Heap allocations per request (0 in steady state for zero-copy).
+    pub heap_allocs_per_req: f64,
+    /// Fraction of buffer requests served from the slab.
+    pub pool_hit_rate: f64,
+    /// Raw ledger delta over the measurement window.
+    pub delta: LedgerSnapshot,
+}
+
+/// Measure the offloaded READ path for one mode. `copy_mode` selects
+/// the §6.2 straw-man (extra copy per response, metered); reads are
+/// 4 KiB-aligned so the single-extent fast path is exercised.
+pub fn probe_engine_read_path(
+    copy_mode: bool,
+    reads: u64,
+    read_size: u32,
+    batch: usize,
+) -> ZeroCopyProbe {
+    let file_bytes: u64 = 4 << 20;
+    let ssd = Arc::new(Ssd::new(64 << 20, 512));
+    let mut fs = DpuFs::format(ssd.clone(), FsConfig::default()).expect("format");
+    let dir = fs.create_directory("bench").expect("dir");
+    let file = fs.create_file(dir, "data").expect("file");
+    let data: Vec<u8> = (0..file_bytes).map(|i| (i % 253) as u8).collect();
+    fs.write(file, 0, &data).expect("fill");
+    let mut engine = OffloadEngine::new(
+        Arc::new(RawFileOffload),
+        Arc::new(CuckooCache::new(1 << 10)),
+        Arc::new(RwLock::new(fs)),
+        AsyncSsd::new_inline(ssd),
+        OffloadEngineConfig { copy_mode, ..Default::default() },
+    );
+    let fid = file.0;
+    let offsets = (file_bytes / read_size as u64).max(1);
+    let run = |engine: &mut OffloadEngine, msg_id: u64, n: usize| {
+        let reqs: Vec<RoutedReq> = (0..n as u64)
+            .map(|i| RoutedReq {
+                msg_id,
+                idx: i as u16,
+                req: AppRequest::Read {
+                    file_id: fid,
+                    offset: ((msg_id * n as u64 + i) % offsets) * read_size as u64,
+                    size: read_size,
+                },
+            })
+            .collect();
+        let mut responses: Vec<NetResp> = Vec::with_capacity(n);
+        let bounced = engine.execute(reqs, &mut responses);
+        assert!(bounced.is_empty(), "probe reads must offload");
+        // Inline polled SSD: completions drain within execute/poll.
+        let deadline = Instant::now() + std::time::Duration::from_secs(5);
+        while responses.len() < n {
+            engine.complete_pending(&mut responses);
+            assert!(Instant::now() < deadline, "probe timed out");
+        }
+        responses
+    };
+    // Warm-up: pool working set.
+    for m in 0..4 {
+        run(&mut engine, m, batch);
+    }
+    let before = engine.pool().stats();
+    let t0 = Instant::now();
+    let mut done = 0u64;
+    let mut msg_id = 100u64;
+    while done < reads {
+        let n = batch.min((reads - done) as usize);
+        let responses = run(&mut engine, msg_id, n);
+        done += responses.len() as u64;
+        msg_id += 1;
+    }
+    let elapsed = t0.elapsed().as_secs_f64();
+    let delta = engine.pool().stats() - before;
+    ZeroCopyProbe {
+        mode: if copy_mode { "copy" } else { "zero-copy" },
+        reads: done,
+        read_size,
+        ops_per_sec: done as f64 / elapsed.max(1e-9),
+        bytes_copied_per_req: delta.bytes_copied as f64 / done as f64,
+        heap_allocs_per_req: delta.heap_allocs as f64 / done as f64,
+        pool_hit_rate: if delta.allocs == 0 {
+            1.0
+        } else {
+            delta.pool_hits as f64 / delta.allocs as f64
+        },
+        delta,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn probe_contract_zero_copy_vs_straw_man() {
+        let z = probe_engine_read_path(false, 64, 4096, 16);
+        assert_eq!(z.reads, 64);
+        assert_eq!(z.bytes_copied_per_req, 0.0, "zero-copy path copies nothing");
+        assert_eq!(z.heap_allocs_per_req, 0.0);
+        assert_eq!(z.pool_hit_rate, 1.0);
+        let c = probe_engine_read_path(true, 64, 4096, 16);
+        assert!(
+            c.bytes_copied_per_req >= 4096.0,
+            "straw-man copies each 4 KiB response (got {})",
+            c.bytes_copied_per_req
+        );
+        assert!(c.heap_allocs_per_req >= 1.0);
+    }
+}

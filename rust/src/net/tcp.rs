@@ -10,14 +10,21 @@
 
 use std::collections::BTreeMap;
 
+use crate::buf::{BufView, ByteRope, CopyLedger};
+
 /// Maximum segment size (payload bytes per segment).
 pub const MSS: usize = 1460;
 
 /// A TCP-like segment. `seq`/`payload` carry data; `ack` is cumulative.
+///
+/// The payload is a refcounted [`BufView`]: segments, the retransmit
+/// queue, and out-of-order buffers all reference ONE underlying buffer
+/// — cloning a segment (e.g. wire-chaos duplication) bumps a refcount
+/// instead of duplicating bytes.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct Segment {
     pub seq: u64,
-    pub payload: Vec<u8>,
+    pub payload: BufView,
     pub ack: u64,
 }
 
@@ -40,15 +47,22 @@ pub struct TcpEndpoint {
     /// Oldest unacknowledged byte.
     snd_una: u64,
     /// Unacked outgoing segments, keyed by seq (retransmit queue).
-    unacked: BTreeMap<u64, Vec<u8>>,
+    /// Views, not clones: each entry references the send buffer.
+    unacked: BTreeMap<u64, BufView>,
     /// Next expected incoming byte.
     rcv_nxt: u64,
-    /// Out-of-order incoming segments.
-    ooo: BTreeMap<u64, Vec<u8>>,
-    /// In-order bytes ready for the application.
-    deliverable: Vec<u8>,
+    /// Out-of-order incoming segments (views into arriving payloads).
+    ooo: BTreeMap<u64, BufView>,
+    /// In-order payload views ready for the application.
+    deliverable: ByteRope,
     /// Duplicate-ACK counter (for fast retransmit).
     dup_acks: u32,
+    /// Copy ledger for this endpoint. Its copy points: send-side
+    /// staging (`send(&[u8])`), explicit delivery materialization
+    /// (`deliver()`), and — metered at the call site — the receive-side
+    /// reassembly copy when a delivered rope is absorbed into a
+    /// `StreamBuf` (`framing::StreamBuf::extend_rope`).
+    ledger: CopyLedger,
     /// Stats: segments retransmitted (the Fig 11 pathology metric).
     pub retransmitted_segments: u64,
     /// Stats: duplicate ACKs sent by our receiver side.
@@ -69,21 +83,90 @@ impl TcpEndpoint {
             unacked: BTreeMap::new(),
             rcv_nxt: 0,
             ooo: BTreeMap::new(),
-            deliverable: Vec::new(),
+            deliverable: ByteRope::new(),
             dup_acks: 0,
+            ledger: CopyLedger::new(),
             retransmitted_segments: 0,
             dup_acks_sent: 0,
         }
     }
 
+    /// This endpoint's copy ledger.
+    pub fn ledger(&self) -> &CopyLedger {
+        &self.ledger
+    }
+
     /// Queue application data; returns the segments to put on the wire.
+    ///
+    /// The borrowed bytes are staged into ONE owned buffer (counted on
+    /// the ledger); every segment and the retransmit queue hold views
+    /// into it. The old path materialized each MSS chunk twice — once
+    /// for the wire segment and once for `unacked`.
     pub fn send(&mut self, data: &[u8]) -> Vec<Segment> {
+        if data.is_empty() {
+            return Vec::new();
+        }
+        self.ledger.count_heap_alloc();
+        self.ledger.count_copy(data.len());
+        self.send_view(BufView::from_vec(data.to_vec()))
+    }
+
+    /// Queue an already-buffered payload: zero copies, zero allocations
+    /// — segments and the retransmit queue reference `data`.
+    pub fn send_view(&mut self, data: BufView) -> Vec<Segment> {
         let mut out = Vec::new();
-        for chunk in data.chunks(MSS) {
-            let seg = Segment { seq: self.snd_nxt, payload: chunk.to_vec(), ack: self.rcv_nxt };
-            self.unacked.insert(self.snd_nxt, chunk.to_vec());
-            self.snd_nxt += chunk.len() as u64;
-            out.push(seg);
+        let mut at = 0usize;
+        while at < data.len() {
+            let end = (at + MSS).min(data.len());
+            let chunk = data.slice(at..end);
+            self.unacked.insert(self.snd_nxt, chunk.clone());
+            out.push(Segment { seq: self.snd_nxt, payload: chunk, ack: self.rcv_nxt });
+            self.snd_nxt += (end - at) as u64;
+            at = end;
+        }
+        out
+    }
+
+    /// Threshold below which rope parts are coalesced by copy instead
+    /// of becoming their own segments: a run of small parts (frame
+    /// headers, tiny KV payloads) packs MSS-tight, because copying tens
+    /// of bytes is far cheaper than per-segment + per-ACK overhead.
+    pub const COALESCE_MAX: usize = 512;
+
+    /// Queue a view rope (e.g. response header views interleaved with
+    /// pooled payload views). Parts above [`Self::COALESCE_MAX`] are
+    /// referenced as-is — zero copies for bulk read payloads; runs of
+    /// smaller parts are coalesced into MSS-packed staging buffers
+    /// (ledger-counted). A boundary between a small run and a large
+    /// part may end a segment early, which is valid TCP (segments are
+    /// just byte ranges).
+    ///
+    /// Deliberate trade-off: a header run directly preceding a bulk
+    /// payload is NOT packed into the payload's first MSS — that would
+    /// cost an `MSS - header` memcpy per response (~1.4 KiB for a 4 KiB
+    /// read) to save one tiny segment, and copies are the metric this
+    /// plane minimizes. Bulk responses therefore carry one small header
+    /// segment each; all-small workloads (KV) coalesce fully.
+    pub fn send_rope(&mut self, rope: ByteRope) -> Vec<Segment> {
+        let mut out = Vec::new();
+        let mut small: Vec<u8> = Vec::new();
+        for part in rope.parts() {
+            if part.len() <= Self::COALESCE_MAX {
+                if small.is_empty() {
+                    self.ledger.count_heap_alloc();
+                }
+                self.ledger.count_copy(part.len());
+                small.extend_from_slice(part.as_slice());
+            } else {
+                if !small.is_empty() {
+                    let staged = BufView::from_vec(std::mem::take(&mut small));
+                    out.extend(self.send_view(staged));
+                }
+                out.extend(self.send_view(part.clone()));
+            }
+        }
+        if !small.is_empty() {
+            out.extend(self.send_view(BufView::from_vec(small)));
         }
         out
     }
@@ -130,12 +213,12 @@ impl TcpEndpoint {
         // --- receiver side: process payload ---
         if !seg.payload.is_empty() {
             if seg.seq == self.rcv_nxt {
-                self.deliverable.extend_from_slice(&seg.payload);
+                self.deliverable.push(seg.payload.clone());
                 self.rcv_nxt = seg.seq_end();
                 // Pull any contiguous out-of-order segments.
                 while let Some(payload) = self.ooo.remove(&self.rcv_nxt) {
                     self.rcv_nxt += payload.len() as u64;
-                    self.deliverable.extend_from_slice(&payload);
+                    self.deliverable.push(payload);
                 }
                 out.push(self.pure_ack());
             } else if seg.seq > self.rcv_nxt {
@@ -152,11 +235,23 @@ impl TcpEndpoint {
     }
 
     fn pure_ack(&self) -> Segment {
-        Segment { seq: self.snd_nxt, payload: Vec::new(), ack: self.rcv_nxt }
+        Segment { seq: self.snd_nxt, payload: BufView::empty(), ack: self.rcv_nxt }
     }
 
-    /// Drain bytes delivered in order to the application.
+    /// Drain bytes delivered in order to the application, materialized
+    /// into one owned vector (an explicit, ledger-counted copy — prefer
+    /// [`Self::deliver_rope`] on the data path).
     pub fn deliver(&mut self) -> Vec<u8> {
+        let rope = std::mem::take(&mut self.deliverable);
+        if !rope.is_empty() {
+            self.ledger.count_heap_alloc();
+            self.ledger.count_copy(rope.len());
+        }
+        rope.to_vec()
+    }
+
+    /// Drain delivered payloads as a zero-copy view rope.
+    pub fn deliver_rope(&mut self) -> ByteRope {
         std::mem::take(&mut self.deliverable)
     }
 
@@ -388,6 +483,95 @@ mod tests {
         exchange(&mut a, &mut b, retrans);
         assert_eq!(b.deliver(), data);
         assert_eq!(a.bytes_in_flight(), 0);
+    }
+
+    /// Satellite regression (zero-copy plane): `send` stages the burst
+    /// into ONE buffer; wire segments, the retransmit queue, and
+    /// `retransmit_all`'s output all reference it — no duplicate
+    /// materialization of payload bytes anywhere on the send path.
+    #[test]
+    fn send_shares_one_buffer_across_segments_and_retransmits() {
+        let mut a = TcpEndpoint::new();
+        let data = vec![5u8; 3 * MSS];
+        let before = a.ledger().snapshot();
+        let segs = a.send(&data);
+        let d = a.ledger().snapshot() - before;
+        assert_eq!(d.heap_allocs, 1, "one staging buffer for the whole burst");
+        assert_eq!(d.bytes_copied, data.len() as u64);
+        for w in segs.windows(2) {
+            assert!(w[0].payload.shares_storage(&w[1].payload));
+        }
+        // Timeout retransmission references the same storage: no copy.
+        let before = a.ledger().snapshot();
+        let retrans = a.retransmit_all();
+        assert_eq!(retrans.len(), 3);
+        for r in &retrans {
+            assert!(r.payload.shares_storage(&segs[0].payload));
+        }
+        let d = a.ledger().snapshot() - before;
+        assert_eq!((d.heap_allocs, d.bytes_copied), (0, 0));
+    }
+
+    /// Zero-copy receive: in-order payload views flow to the rope
+    /// without copying; only explicit `deliver()` materializes.
+    #[test]
+    fn deliver_rope_aliases_segment_payloads() {
+        let mut a = TcpEndpoint::new();
+        let mut b = TcpEndpoint::new();
+        let data: Vec<u8> = (0..2 * MSS).map(|i| (i % 251) as u8).collect();
+        let segs = a.send(&data);
+        for s in &segs {
+            b.on_segment(s);
+        }
+        let before = b.ledger().snapshot();
+        let rope = b.deliver_rope();
+        assert_eq!(rope.to_vec(), data);
+        assert!(rope.parts()[0].shares_storage(&segs[0].payload));
+        let d = b.ledger().snapshot() - before;
+        assert_eq!((d.heap_allocs, d.bytes_copied), (0, 0));
+    }
+
+    #[test]
+    fn send_rope_references_bulk_parts_without_copying() {
+        let mut a = TcpEndpoint::new();
+        let mut b = TcpEndpoint::new();
+        let mut rope = crate::buf::ByteRope::new();
+        rope.push(crate::buf::BufView::from_vec(vec![1u8; 700]));
+        rope.push(crate::buf::BufView::from_vec(vec![2u8; 2 * MSS + 7]));
+        let expect = rope.to_vec();
+        let before = a.ledger().snapshot();
+        let segs = a.send_rope(rope);
+        let d = a.ledger().snapshot() - before;
+        assert_eq!((d.heap_allocs, d.bytes_copied), (0, 0), "bulk parts ride by reference");
+        assert!(segs.len() >= 4, "large part split at MSS");
+        exchange(&mut a, &mut b, segs);
+        assert_eq!(b.deliver(), expect);
+        assert_eq!(a.bytes_in_flight(), 0);
+    }
+
+    /// Small rope parts (frame headers, tiny KV payloads) coalesce into
+    /// MSS-packed segments instead of one tiny segment per part — the
+    /// copy is counted, the segment count stays bounded.
+    #[test]
+    fn send_rope_coalesces_small_parts() {
+        let mut a = TcpEndpoint::new();
+        let mut b = TcpEndpoint::new();
+        let mut rope = crate::buf::ByteRope::new();
+        // 60 frames of 19-byte header + 32-byte payload: 120 parts.
+        for i in 0..60u8 {
+            rope.push(crate::buf::BufView::from_vec(vec![i; 19]));
+            rope.push(crate::buf::BufView::from_vec(vec![i ^ 0xff; 32]));
+        }
+        let expect = rope.to_vec();
+        let total = expect.len();
+        let before = a.ledger().snapshot();
+        let segs = a.send_rope(rope);
+        let d = a.ledger().snapshot() - before;
+        assert_eq!(segs.len(), total.div_ceil(MSS), "MSS-packed, not per-part");
+        assert_eq!(d.heap_allocs, 1, "one staging buffer for the whole small run");
+        assert_eq!(d.bytes_copied, total as u64);
+        exchange(&mut a, &mut b, segs);
+        assert_eq!(b.deliver(), expect);
     }
 
     #[test]

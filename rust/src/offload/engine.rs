@@ -12,16 +12,18 @@
 //! * completions are processed from the head and stop at the first
 //!   pending context, enforcing ordered responses (lines 18-27).
 //!
-//! Zero-copy (Fig 12): read buffers come from the pre-allocated
-//! [`MemPool`] and become the response payload without intermediate
-//! copies; `copy_mode` adds the straw-man's extra copy for the §8.5
-//! ablation (Fig 23).
+//! Zero-copy (Fig 12): read buffers come from the engine's
+//! pre-allocated [`crate::buf::BufPool`] — the SSD completion *is* a
+//! view of a pool slot, and that view is referenced through the context
+//! ring into the client response without intermediate copies;
+//! `copy_mode` adds the straw-man's extra copy for the §8.5 ablation
+//! (Fig 23), metered on the pool's copy ledger.
 
 use std::sync::{Arc, RwLock};
 use std::time::{Duration, Instant};
 
 use super::api::{OffloadLogic, RoutedReq};
-use super::mempool::{MemPool, PooledBuf};
+use crate::buf::{BufPool, BufView, PooledBuf};
 use crate::cache::CuckooCache;
 use crate::dpufs::DpuFs;
 use crate::proto::NetResp;
@@ -39,13 +41,14 @@ struct Context {
     msg_id: u64,
     idx: u16,
     /// Multi-extent assembly buffer (pool-backed). Single-extent reads
-    /// — the overwhelmingly common case — skip it: the completion
-    /// buffer the "device DMA" wrote is moved straight into `payload`
+    /// — the overwhelmingly common case — skip it: the pooled buffer
+    /// the "device DMA" wrote is referenced straight into `payload`
     /// (perf pass L3-4: the staging copy was pure overhead; the
     /// completion buffer IS the pre-allocated read buffer of Fig 12).
     buf: Option<PooledBuf>,
-    /// Zero-copy payload for the single-extent path.
-    payload: Vec<u8>,
+    /// Zero-copy payload for the single-extent path: a view of the SSD
+    /// completion buffer, carried by reference to the client response.
+    payload: Option<BufView>,
     status: ContextStatus,
     extents_remaining: usize,
     /// Start position of each extent's bytes within `buf`.
@@ -115,7 +118,7 @@ pub struct OffloadEngine {
     cache: Arc<CuckooCache>,
     dpufs: Arc<RwLock<DpuFs>>,
     aio: AsyncSsd,
-    pool: MemPool,
+    pool: BufPool,
     pool_buf_size: usize,
     ring: Vec<Option<Context>>,
     head: u64,
@@ -146,12 +149,16 @@ impl OffloadEngine {
     ) -> Self {
         let mut ring = Vec::with_capacity(cfg.contexts);
         ring.resize_with(cfg.contexts, || None);
+        let pool = BufPool::new(cfg.pool_bufs, cfg.pool_buf_size);
+        // The SSD "DMA" lands directly in this engine's pool (Fig 12 ①):
+        // completions arrive as views of pre-allocated slots.
+        aio.attach_read_pool(pool.clone());
         OffloadEngine {
             logic,
             cache,
             dpufs,
             aio,
-            pool: MemPool::new(cfg.pool_bufs, cfg.pool_buf_size),
+            pool,
             pool_buf_size: cfg.pool_buf_size,
             ring,
             head: 0,
@@ -243,27 +250,20 @@ impl OffloadEngine {
                     }
                 }
             };
+            // Oversize requests bounce: the pool size class is the
+            // largest offloadable read (Fig 12).
+            if op.size as usize > self.pool_buf_size() {
+                self.bounced_untranslatable += 1;
+                bounced.push(routed);
+                continue;
+            }
             // Line 9: pre-allocated read buffer — only needed for
             // multi-extent assembly; single-extent reads use the
-            // completion buffer directly (see Context docs). Oversize
-            // requests bounce (pool class is the max offloadable read).
-            let buf = if extents.len() > 1 {
-                match self.pool.allocate(op.size as usize) {
-                    Some(b) => Some(b),
-                    None => {
-                        self.bounced_untranslatable += 1;
-                        bounced.push(routed);
-                        continue;
-                    }
-                }
-            } else {
-                if op.size as usize > self.pool_buf_size() {
-                    self.bounced_untranslatable += 1;
-                    bounced.push(routed);
-                    continue;
-                }
-                None
-            };
+            // completion buffer directly (see Context docs). Under pool
+            // exhaustion the allocation falls back to owned heap memory
+            // (counted on the ledger) instead of bouncing.
+            let buf =
+                if extents.len() > 1 { Some(self.pool.allocate(op.size as usize)) } else { None };
             // Lines 10-13: bookkeep in the context at tail, mark
             // pending, advance tail.
             let slot = (self.tail % self.cap()) as usize;
@@ -278,7 +278,7 @@ impl OffloadEngine {
                 msg_id: routed.msg_id,
                 idx: routed.idx,
                 buf,
-                payload: Vec::new(),
+                payload: None,
                 status: ContextStatus::Pending,
                 extents_remaining: extents.len(),
                 extent_offsets,
@@ -315,18 +315,20 @@ impl OffloadEngine {
                 ctx.extents_remaining = ctx.extents_remaining.saturating_sub(1);
                 continue;
             }
-            // Zero-copy: the SSD "DMA" lands in the pre-allocated read
-            // buffer (Fig 12 ②) — moved for single-extent reads,
-            // placed at the extent's recorded position otherwise.
+            // Zero-copy: the SSD "DMA" landed in a pooled buffer
+            // (Fig 12 ②) — referenced for single-extent reads, gathered
+            // at the extent's recorded position otherwise (the gather is
+            // a real software copy in this model, so it is metered).
             if let Some(buf) = ctx.buf.as_mut() {
                 let start = ctx.extent_offsets.get(extent).copied().unwrap_or(0);
                 let end = (start + c.data.len()).min(buf.len());
                 if start < end {
                     buf.as_mut_slice()[start..end]
                         .copy_from_slice(&c.data[..end - start]);
+                    self.pool.ledger().count_copy(end - start);
                 }
             } else {
-                ctx.payload = c.data;
+                ctx.payload = Some(c.data);
             }
             if ctx.status != ContextStatus::Failed {
                 ctx.extents_remaining -= 1;
@@ -360,22 +362,25 @@ impl OffloadEngine {
             let payload = match ctx.status {
                 ContextStatus::Complete => {
                     let base = match ctx.buf {
-                        // Multi-extent: materialize from the assembly
-                        // buffer.
-                        Some(buf) => buf.take_copy(),
+                        // Multi-extent: seal the assembly buffer into a
+                        // view — a refcount, not a materialization.
+                        Some(buf) => buf.freeze(),
                         // Single-extent zero-copy: the packet payload IS
-                        // the read buffer (Fig 12 ③) — moved, never
+                        // the read buffer (Fig 12 ③) — referenced, never
                         // duplicated.
-                        None => ctx.payload,
+                        None => ctx.payload.unwrap_or_else(BufView::empty),
                     };
                     if self.copy_mode {
-                        // Straw-man ablation: the §6.2 extra copy.
-                        base.clone()
+                        // Straw-man ablation: the §6.2 extra copy
+                        // (metered — this is what Fig 23 measures).
+                        self.pool.ledger().count_heap_alloc();
+                        self.pool.ledger().count_copy(base.len());
+                        BufView::from_vec(base.to_vec())
                     } else {
                         base
                     }
                 }
-                _ => Vec::new(),
+                _ => BufView::empty(),
             };
             responses.push(NetResp {
                 msg_id: ctx.msg_id,
@@ -393,6 +398,12 @@ impl OffloadEngine {
 
     fn pool_buf_size(&self) -> usize {
         self.pool_buf_size
+    }
+
+    /// The engine's buffer pool (read buffers + multi-extent assembly;
+    /// its ledger is the copy meter of the offloaded read path).
+    pub fn pool(&self) -> &BufPool {
+        &self.pool
     }
 
     /// Outstanding offloaded reads.
@@ -640,6 +651,80 @@ mod tests {
         assert!(responses[0].payload.is_empty());
         assert_eq!(engine.timed_out, 1);
         assert_eq!(engine.outstanding(), 0, "ring head advanced past the lost context");
+    }
+
+    /// The Fig 12 discipline, asserted: after warm-up, an offloaded
+    /// single-extent read performs ZERO heap allocations and ZERO
+    /// software copies — every buffer request is a pool hit and the
+    /// completion view IS the response payload.
+    #[test]
+    fn steady_state_read_zero_allocs_zero_copies() {
+        let (mut engine, f) = setup(128);
+        let run = |engine: &mut OffloadEngine, base: u64, n: u16| {
+            let mut responses = Vec::new();
+            let reqs: Vec<RoutedReq> = (0..n)
+                .map(|i| RoutedReq {
+                    msg_id: base,
+                    idx: i,
+                    req: AppRequest::Read {
+                        file_id: f,
+                        offset: base + i as u64 * 600,
+                        size: 512,
+                    },
+                })
+                .collect();
+            let bounced = engine.execute(reqs, &mut responses);
+            assert!(bounced.is_empty());
+            wait_responses(engine, &mut responses, n as usize);
+            responses
+        };
+        // Warm-up: populates the pool's working set.
+        let warm = run(&mut engine, 1, 16);
+        drop(warm);
+        let before = engine.pool().stats();
+        let resps = run(&mut engine, 2, 64);
+        let d = engine.pool().stats() - before;
+        assert_eq!(d.allocs, 64, "one pooled read buffer per request");
+        assert_eq!(d.pool_hits, 64, "every buffer request served from the slab");
+        assert_eq!(d.fallbacks, 0, "steady state never falls back to the heap");
+        assert_eq!(d.heap_allocs, 0, "zero heap allocations per request");
+        assert_eq!(d.bytes_copied, 0, "zero bytes memcpy'd per request");
+        // And the data is still right.
+        let expect: Vec<u8> = (2..514u64).map(|i| (i % 253) as u8).collect();
+        assert_eq!(resps[0].payload, expect);
+        drop(resps);
+        assert_eq!(engine.pool().in_use(), 0, "all slots home after responses drop");
+    }
+
+    #[test]
+    fn copy_mode_meters_the_straw_man_copy() {
+        let ssd = Arc::new(Ssd::new(64 << 20, 512));
+        let mut fs = DpuFs::format(ssd.clone(), FsConfig::default()).unwrap();
+        let d = fs.create_directory("d").unwrap();
+        let f = fs.create_file(d, "f").unwrap();
+        fs.write(f, 0, &vec![7u8; 1 << 20]).unwrap();
+        let mut engine = OffloadEngine::new(
+            Arc::new(RawFileOffload),
+            Arc::new(CuckooCache::new(64)),
+            Arc::new(RwLock::new(fs)),
+            AsyncSsd::new_inline(ssd),
+            OffloadEngineConfig { copy_mode: true, ..Default::default() },
+        );
+        let mut responses = Vec::new();
+        let bounced = engine.execute(
+            vec![RoutedReq {
+                msg_id: 1,
+                idx: 0,
+                req: AppRequest::Read { file_id: f.0, offset: 0, size: 4096 },
+            }],
+            &mut responses,
+        );
+        assert!(bounced.is_empty());
+        wait_responses(&mut engine, &mut responses, 1);
+        assert_eq!(responses[0].payload, vec![7u8; 4096]);
+        let s = engine.pool().stats();
+        assert_eq!(s.heap_allocs, 1, "the straw-man's extra buffer");
+        assert_eq!(s.bytes_copied, 4096, "the straw-man's extra copy");
     }
 
     #[test]

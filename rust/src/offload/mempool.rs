@@ -1,162 +1,12 @@
-//! Pre-allocated DMA-able buffer pool (§6.2, Fig 12).
+//! Pre-allocated DMA-able buffer pool (§6.2, Fig 12) — superseded by
+//! the repo-wide zero-copy buffer plane in [`crate::buf`].
 //!
-//! The offload engine reserves a pool of DMA-accessible huge pages at
-//! startup; each offloaded read borrows a buffer sized for the read so
-//! the SSD DMA lands directly where the packet payload will point —
-//! no allocation and no copies on the data path.
+//! The original `MemPool` was private to the offload engine and its
+//! borrows could be neither sliced nor shared, so every layer above the
+//! engine still copied. [`crate::buf::BufPool`] generalizes it:
+//! refcounted views ([`crate::buf::BufView`]), explicit
+//! pool-exhaustion fallback to owned heap memory, and a per-pool copy
+//! ledger. This module remains as an alias so `offload::MemPool` keeps
+//! naming the engine's pool type.
 
-use std::sync::{Arc, Mutex};
-
-struct PoolInner {
-    free: Vec<Vec<u8>>,
-    buf_size: usize,
-    total: usize,
-    /// Stats: how many allocations were served from the free list.
-    reuses: u64,
-    allocs: u64,
-}
-
-/// Fixed-size-class buffer pool.
-#[derive(Clone)]
-pub struct MemPool {
-    inner: Arc<Mutex<PoolInner>>,
-}
-
-/// A buffer borrowed from the pool; returns on drop.
-pub struct PooledBuf {
-    pool: MemPool,
-    buf: Vec<u8>,
-    len: usize,
-}
-
-impl MemPool {
-    /// Pre-allocate `count` buffers of `buf_size` bytes each.
-    pub fn new(count: usize, buf_size: usize) -> Self {
-        let free = (0..count).map(|_| vec![0u8; buf_size]).collect();
-        MemPool {
-            inner: Arc::new(Mutex::new(PoolInner {
-                free,
-                buf_size,
-                total: count,
-                reuses: 0,
-                allocs: 0,
-            })),
-        }
-    }
-
-    /// Borrow a buffer of at least `size` usable bytes. Returns `None`
-    /// if `size` exceeds the pool's class (caller bounces to the host).
-    pub fn allocate(&self, size: usize) -> Option<PooledBuf> {
-        let mut inner = self.inner.lock().unwrap();
-        if size > inner.buf_size {
-            return None;
-        }
-        inner.allocs += 1;
-        let buf = if let Some(b) = inner.free.pop() {
-            inner.reuses += 1;
-            b
-        } else {
-            // Pool exhausted: grow (counted so benches can verify the
-            // steady state never hits this).
-            inner.total += 1;
-            let cap = inner.buf_size;
-            vec![0u8; cap]
-        };
-        Some(PooledBuf { pool: self.clone(), buf, len: size })
-    }
-
-    /// (allocations, served-from-freelist) counters.
-    pub fn stats(&self) -> (u64, u64) {
-        let g = self.inner.lock().unwrap();
-        (g.allocs, g.reuses)
-    }
-
-    /// Buffers currently available.
-    pub fn available(&self) -> usize {
-        self.inner.lock().unwrap().free.len()
-    }
-}
-
-impl PooledBuf {
-    pub fn as_slice(&self) -> &[u8] {
-        &self.buf[..self.len]
-    }
-
-    pub fn as_mut_slice(&mut self) -> &mut [u8] {
-        &mut self.buf[..self.len]
-    }
-
-    pub fn len(&self) -> usize {
-        self.len
-    }
-
-    pub fn is_empty(&self) -> bool {
-        self.len == 0
-    }
-
-    /// Take the payload out, consuming the borrow **without returning
-    /// the buffer to the pool** (used only by the copy-mode baseline in
-    /// the zero-copy ablation).
-    pub fn take_copy(&self) -> Vec<u8> {
-        self.as_slice().to_vec()
-    }
-}
-
-impl Drop for PooledBuf {
-    fn drop(&mut self) {
-        let mut inner = self.pool.inner.lock().unwrap();
-        let buf = std::mem::take(&mut self.buf);
-        if inner.free.len() < inner.total {
-            inner.free.push(buf);
-        }
-    }
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-
-    #[test]
-    fn reuse_after_drop() {
-        let pool = MemPool::new(2, 1024);
-        assert_eq!(pool.available(), 2);
-        {
-            let _a = pool.allocate(100).unwrap();
-            let _b = pool.allocate(200).unwrap();
-            assert_eq!(pool.available(), 0);
-        }
-        assert_eq!(pool.available(), 2);
-        let (allocs, reuses) = pool.stats();
-        assert_eq!(allocs, 2);
-        assert_eq!(reuses, 2);
-    }
-
-    #[test]
-    fn oversize_rejected() {
-        let pool = MemPool::new(1, 512);
-        assert!(pool.allocate(513).is_none());
-        assert!(pool.allocate(512).is_some());
-    }
-
-    #[test]
-    fn exhaustion_grows_and_counts() {
-        let pool = MemPool::new(1, 64);
-        let a = pool.allocate(64).unwrap();
-        let b = pool.allocate(64).unwrap(); // grows
-        drop(a);
-        drop(b);
-        let (allocs, reuses) = pool.stats();
-        assert_eq!(allocs, 2);
-        assert_eq!(reuses, 1);
-        assert_eq!(pool.available(), 2);
-    }
-
-    #[test]
-    fn buffer_len_tracks_request() {
-        let pool = MemPool::new(1, 1024);
-        let mut b = pool.allocate(10).unwrap();
-        b.as_mut_slice().copy_from_slice(&[7; 10]);
-        assert_eq!(b.len(), 10);
-        assert_eq!(b.as_slice(), &[7; 10]);
-    }
-}
+pub use crate::buf::{BufPool as MemPool, BufView, PooledBuf};

@@ -13,7 +13,8 @@
 
 pub mod wire;
 
-use wire::{Reader, Writer};
+use crate::buf::{BufView, ByteRope};
+use wire::{Reader, ViewReader, Writer};
 
 /// File operation kind.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -31,16 +32,30 @@ pub struct FileRequest {
     pub offset: u64,
     /// Read size (reads) — writes carry `data.len()` implicitly.
     pub size: u32,
-    /// Inlined write payload (empty for reads).
-    pub data: Vec<u8>,
+    /// Inlined write payload (empty for reads). A refcounted view: the
+    /// DPU intake path aliases the DMA'd request batch instead of
+    /// copying each record's payload out of it.
+    pub data: BufView,
 }
 
 impl FileRequest {
     pub fn read(req_id: u64, file_id: u32, offset: u64, size: u32) -> Self {
-        FileRequest { req_id, file_id, kind: FileOpKind::Read, offset, size, data: Vec::new() }
+        FileRequest {
+            req_id,
+            file_id,
+            kind: FileOpKind::Read,
+            offset,
+            size,
+            data: BufView::empty(),
+        }
     }
 
     pub fn write(req_id: u64, file_id: u32, offset: u64, data: Vec<u8>) -> Self {
+        Self::write_view(req_id, file_id, offset, BufView::from_vec(data))
+    }
+
+    /// Write request whose payload references existing buffer storage.
+    pub fn write_view(req_id: u64, file_id: u32, offset: u64, data: BufView) -> Self {
         FileRequest {
             req_id,
             file_id,
@@ -63,8 +78,18 @@ impl FileRequest {
         w.into_vec()
     }
 
+    /// Owned-copy decode (host-local paths, tests): stages `buf` and
+    /// delegates to [`Self::decode_view`] — one parser, one layout.
     pub fn decode(buf: &[u8]) -> Option<Self> {
-        let mut r = Reader::new(buf);
+        Self::decode_view(&BufView::from_vec(buf.to_vec()))
+    }
+
+    /// THE request parser. Zero-copy: the write payload comes back as a
+    /// refcounted sub-view of `view` (Fig 9: the record the DMA moved
+    /// IS the buffer the SSD driver consumes — no per-record copy on
+    /// the DPU).
+    pub fn decode_view(view: &BufView) -> Option<Self> {
+        let mut r = ViewReader::new(view.clone());
         let req_id = r.u64()?;
         let file_id = r.u32()?;
         let kind = match r.u8()? {
@@ -75,7 +100,7 @@ impl FileRequest {
         let offset = r.u64()?;
         let size = r.u32()?;
         let dlen = r.u32()? as usize;
-        let data = r.take(dlen)?.to_vec();
+        let data = r.take_view(dlen)?;
         Some(FileRequest { req_id, file_id, kind, offset, size, data })
     }
 
@@ -112,13 +137,24 @@ pub struct FileResponse {
 impl FileResponse {
     pub const HEADER_LEN: usize = 8 + 1 + 4;
 
+    /// Encode only the fixed header; the payload follows as a separate
+    /// part (for vectored ring pushes — the DPU DMA-writes header and
+    /// pre-allocated read buffer without ever concatenating them).
+    pub fn encode_header(req_id: u64, status: Status, payload_len: usize) -> [u8; Self::HEADER_LEN] {
+        let mut h = [0u8; Self::HEADER_LEN];
+        h[..8].copy_from_slice(&req_id.to_le_bytes());
+        h[8] = status as u8;
+        h[9..13].copy_from_slice(&(payload_len as u32).to_le_bytes());
+        h
+    }
+
+    /// Contiguous encoding: header (via the same [`Self::encode_header`]
+    /// the vectored delivery path uses — one layout) + payload.
     pub fn encode(&self) -> Vec<u8> {
-        let mut w = Writer::with_capacity(Self::HEADER_LEN + self.data.len());
-        w.u64(self.req_id);
-        w.u8(self.status as u8);
-        w.u32(self.data.len() as u32);
-        w.bytes(&self.data);
-        w.into_vec()
+        let mut v = Vec::with_capacity(Self::HEADER_LEN + self.data.len());
+        v.extend_from_slice(&Self::encode_header(self.req_id, self.status, self.data.len()));
+        v.extend_from_slice(&self.data);
+        v
     }
 
     pub fn decode(buf: &[u8]) -> Option<Self> {
@@ -250,21 +286,50 @@ pub struct NetResp {
     /// Index of the request within its message.
     pub idx: u16,
     pub status: u8,
-    pub payload: Vec<u8>,
+    /// Response payload as a refcounted view — for offloaded reads this
+    /// is the pooled buffer the SSD DMA'd into (Fig 12 ③), referenced
+    /// all the way onto the wire, never duplicated.
+    pub payload: BufView,
 }
 
 impl NetResp {
     pub const OK: u8 = 0;
     pub const ERR: u8 = 1;
+    /// Fixed header bytes preceding the payload.
+    pub const HEADER_LEN: usize = 8 + 2 + 1 + 4;
+    /// Length-prefixed frame header: `u32` frame length + header.
+    pub const FRAME_HEADER_LEN: usize = 4 + Self::HEADER_LEN;
 
+    /// The single definition of this response's on-wire frame header
+    /// (`u32 frame-len | msg_id | idx | status | payload-len`) — shared
+    /// by every framing path so the layout can never diverge.
+    pub fn frame_header(&self) -> [u8; Self::FRAME_HEADER_LEN] {
+        let mut h = [0u8; Self::FRAME_HEADER_LEN];
+        h[..4].copy_from_slice(&((Self::HEADER_LEN + self.payload.len()) as u32).to_le_bytes());
+        h[4..12].copy_from_slice(&self.msg_id.to_le_bytes());
+        h[12..14].copy_from_slice(&self.idx.to_le_bytes());
+        h[14] = self.status;
+        h[15..19].copy_from_slice(&(self.payload.len() as u32).to_le_bytes());
+        h
+    }
+
+    /// Contiguous encoding: the [`Self::frame_header`] layout minus its
+    /// `u32` frame-length prefix, then the payload — one layout shared
+    /// with every framing path.
     pub fn encode(&self) -> Vec<u8> {
-        let mut w = Writer::with_capacity(15 + self.payload.len());
-        w.u64(self.msg_id);
-        w.u16(self.idx);
-        w.u8(self.status);
-        w.u32(self.payload.len() as u32);
-        w.bytes(&self.payload);
-        w.into_vec()
+        let h = self.frame_header();
+        let mut v = Vec::with_capacity(Self::HEADER_LEN + self.payload.len());
+        v.extend_from_slice(&h[4..]);
+        v.extend_from_slice(&self.payload);
+        v
+    }
+
+    /// Append this response as one length-prefixed frame to `rope`
+    /// without copying the payload — byte-identical to
+    /// `framing::write_frame(out, &self.encode())`.
+    pub fn frame_into_rope(self, rope: &mut ByteRope) {
+        rope.push(BufView::from_vec(self.frame_header().to_vec()));
+        rope.push(self.payload);
     }
 
     pub fn decode(buf: &[u8]) -> Option<Self> {
@@ -273,7 +338,12 @@ impl NetResp {
         let idx = r.u16()?;
         let status = r.u8()?;
         let n = r.u32()? as usize;
-        Some(NetResp { msg_id, idx, status, payload: r.take(n)?.to_vec() })
+        Some(NetResp {
+            msg_id,
+            idx,
+            status,
+            payload: BufView::from_vec(r.take(n)?.to_vec()),
+        })
     }
 }
 
@@ -316,6 +386,21 @@ pub mod framing {
 
         pub fn extend(&mut self, bytes: &[u8]) {
             self.buf.extend_from_slice(bytes);
+        }
+
+        /// Absorb a view rope part by part — the receive-side
+        /// materialization point. This IS a software copy, so it is
+        /// metered on `ledger` (typically the absorbing endpoint's):
+        /// the copy-ledger contract is that every memcpy on the data
+        /// path is counted exactly once, including this one.
+        pub fn extend_rope(&mut self, rope: &crate::buf::ByteRope, ledger: &crate::buf::CopyLedger) {
+            if rope.is_empty() {
+                return;
+            }
+            ledger.count_copy(rope.len());
+            for part in rope.parts() {
+                self.buf.extend_from_slice(part.as_slice());
+            }
         }
 
         pub fn len(&self) -> usize {
@@ -403,8 +488,33 @@ mod tests {
 
     #[test]
     fn net_resp_roundtrip() {
-        let r = NetResp { msg_id: 5, idx: 3, status: NetResp::OK, payload: vec![7; 9] };
+        let r = NetResp { msg_id: 5, idx: 3, status: NetResp::OK, payload: vec![7; 9].into() };
         assert_eq!(NetResp::decode(&r.encode()), Some(r));
+    }
+
+    #[test]
+    fn net_resp_rope_framing_matches_encode() {
+        let r = NetResp { msg_id: 9, idx: 1, status: NetResp::OK, payload: vec![3u8; 40].into() };
+        let mut classic = Vec::new();
+        framing::write_frame(&mut classic, &r.encode());
+        let mut rope = crate::buf::ByteRope::new();
+        let payload = r.payload.clone();
+        r.frame_into_rope(&mut rope);
+        assert_eq!(rope.to_vec(), classic);
+        // The payload part aliases the original storage — no copy.
+        assert!(rope.parts()[1].shares_storage(&payload));
+    }
+
+    #[test]
+    fn file_request_decode_view_aliases_payload() {
+        let req = FileRequest::write(7, 3, 128, vec![0xAB; 300]);
+        let enc = BufView::from_vec(req.encode());
+        let back = FileRequest::decode_view(&enc).unwrap();
+        assert_eq!(back, req);
+        assert!(back.data.shares_storage(&enc), "payload is a sub-view of the record");
+        // Truncated input still rejected.
+        let trunc = enc.slice(0..enc.len() - 1);
+        assert_eq!(FileRequest::decode_view(&trunc), None);
     }
 
     #[test]

@@ -1,4 +1,16 @@
 //! Minimal little-endian byte writer/reader shared by the wire formats.
+//!
+//! Two families:
+//!
+//! * [`Writer`]/[`Reader`] — plain owned-`Vec`/borrowed-slice codecs
+//!   (control plane, host-local paths, tests).
+//! * [`PooledWriter`]/[`ViewReader`] — the zero-copy counterparts:
+//!   the writer encodes into a borrowed [`crate::buf::BufPool`] slot
+//!   (no heap allocation in steady state) and the reader parses a
+//!   [`crate::buf::BufView`], yielding payload fields as refcounted
+//!   sub-views instead of copied vectors.
+
+use crate::buf::{BufPool, BufView, PooledBuf};
 
 /// Append-only byte writer.
 #[derive(Debug, Default)]
@@ -100,6 +112,130 @@ impl<'a> Reader<'a> {
     }
 }
 
+/// Fixed-capacity writer over a pooled buffer: encodes wire records
+/// directly into pre-allocated DMA-able memory, so steady-state message
+/// construction performs zero heap allocations. Capacity must be sized
+/// by the caller (wire records have computable lengths); overflowing is
+/// a programming error and panics.
+pub struct PooledWriter {
+    buf: PooledBuf,
+    at: usize,
+}
+
+impl PooledWriter {
+    pub fn new(pool: &BufPool, capacity: usize) -> Self {
+        PooledWriter { buf: pool.allocate(capacity), at: 0 }
+    }
+
+    #[inline]
+    fn put(&mut self, b: &[u8]) {
+        let end = self.at + b.len();
+        assert!(end <= self.buf.len(), "PooledWriter overflow: {end} > {}", self.buf.len());
+        self.buf.as_mut_slice()[self.at..end].copy_from_slice(b);
+        self.at = end;
+    }
+
+    #[inline]
+    pub fn u8(&mut self, v: u8) {
+        self.put(&[v]);
+    }
+
+    #[inline]
+    pub fn u16(&mut self, v: u16) {
+        self.put(&v.to_le_bytes());
+    }
+
+    #[inline]
+    pub fn u32(&mut self, v: u32) {
+        self.put(&v.to_le_bytes());
+    }
+
+    #[inline]
+    pub fn u64(&mut self, v: u64) {
+        self.put(&v.to_le_bytes());
+    }
+
+    #[inline]
+    pub fn bytes(&mut self, b: &[u8]) {
+        self.put(b);
+    }
+
+    pub fn len(&self) -> usize {
+        self.at
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.at == 0
+    }
+
+    /// Seal what was written into an immutable view (refcounted; the
+    /// pool slot returns when the last reader drops it).
+    pub fn finish(self) -> BufView {
+        let at = self.at;
+        self.buf.freeze().slice(0..at)
+    }
+}
+
+/// Bounds-checked reader over a [`BufView`]; scalar accessors mirror
+/// [`Reader`], and [`Self::take_view`] yields payload bytes as a
+/// zero-copy sub-view of the input.
+pub struct ViewReader {
+    view: BufView,
+    at: usize,
+}
+
+impl ViewReader {
+    pub fn new(view: BufView) -> Self {
+        ViewReader { view, at: 0 }
+    }
+
+    /// Take `n` bytes as a refcounted sub-view (no copy).
+    #[inline]
+    pub fn take_view(&mut self, n: usize) -> Option<BufView> {
+        if self.at + n > self.view.len() {
+            return None;
+        }
+        let v = self.view.slice(self.at..self.at + n);
+        self.at += n;
+        Some(v)
+    }
+
+    #[inline]
+    fn take_bytes(&mut self, n: usize) -> Option<&[u8]> {
+        if self.at + n > self.view.len() {
+            return None;
+        }
+        let s = &self.view.as_slice()[self.at..self.at + n];
+        self.at += n;
+        Some(s)
+    }
+
+    #[inline]
+    pub fn u8(&mut self) -> Option<u8> {
+        self.take_bytes(1).map(|b| b[0])
+    }
+
+    #[inline]
+    pub fn u16(&mut self) -> Option<u16> {
+        self.take_bytes(2).map(|b| u16::from_le_bytes(b.try_into().unwrap()))
+    }
+
+    #[inline]
+    pub fn u32(&mut self) -> Option<u32> {
+        self.take_bytes(4).map(|b| u32::from_le_bytes(b.try_into().unwrap()))
+    }
+
+    #[inline]
+    pub fn u64(&mut self) -> Option<u64> {
+        self.take_bytes(8).map(|b| u64::from_le_bytes(b.try_into().unwrap()))
+    }
+
+    /// Bytes remaining.
+    pub fn remaining(&self) -> usize {
+        self.view.len() - self.at
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -128,6 +264,43 @@ mod tests {
         let mut r = Reader::new(&[1, 2]);
         assert_eq!(r.u32(), None);
         // Failed read consumes nothing.
+        assert_eq!(r.u16(), Some(0x0201));
+    }
+
+    #[test]
+    fn pooled_writer_roundtrips_through_view_reader() {
+        let pool = BufPool::new(2, 256);
+        let mut w = PooledWriter::new(&pool, 32);
+        w.u8(1);
+        w.u16(2);
+        w.u32(3);
+        w.u64(4);
+        w.bytes(b"xyz");
+        assert_eq!(w.len(), 18);
+        let view = w.finish();
+        assert_eq!(view.len(), 18);
+        let mut r = ViewReader::new(view.clone());
+        assert_eq!(r.u8(), Some(1));
+        assert_eq!(r.u16(), Some(2));
+        assert_eq!(r.u32(), Some(3));
+        assert_eq!(r.u64(), Some(4));
+        let tail = r.take_view(3).unwrap();
+        assert_eq!(tail, &b"xyz"[..]);
+        assert!(tail.shares_storage(&view), "payload is a view, not a copy");
+        assert_eq!(r.remaining(), 0);
+        assert_eq!(r.u8(), None);
+        // Encoding into the pool slot is not a heap alloc.
+        let s = pool.stats();
+        assert_eq!((s.pool_hits, s.fallbacks), (1, 0));
+        drop((tail, view));
+        assert_eq!(pool.available(), 2);
+    }
+
+    #[test]
+    fn view_reader_overread_consumes_nothing() {
+        let mut r = ViewReader::new(BufView::from_vec(vec![1, 2]));
+        assert_eq!(r.u32(), None);
+        assert_eq!(r.take_view(3), None);
         assert_eq!(r.u16(), Some(0x0201));
     }
 }

@@ -23,6 +23,7 @@
 use std::sync::atomic::{AtomicU64, Ordering};
 
 use super::{align8, CacheLine, RequestRing, RingStatus};
+use crate::buf::{BufPool, BufView};
 use crate::dma::{DmaChannel, DmaDir};
 
 /// DMA-backed lock-free MPSC byte ring with a progress pointer.
@@ -203,6 +204,46 @@ impl ProgressRing {
         })
     }
 
+    /// Fig 8b drain into a *pooled* DPU-side buffer: the one DMA read
+    /// of the batch lands in a borrowed [`BufPool`] slot, and each
+    /// record is handed to `f` as a refcounted sub-view of it — zero
+    /// per-record copies and, in steady state, zero heap allocations
+    /// (the pool hit replaces `pop_batch_dma`'s thread-local scratch).
+    /// DMA accounting is identical to [`Self::pop_batch_dma`].
+    pub fn pop_batch_views_dma(
+        &self,
+        dma: &DmaChannel,
+        pool: &BufPool,
+        f: &mut dyn FnMut(BufView),
+    ) -> usize {
+        dma.op(DmaDir::Read, 16);
+        let prog = self.progress.0.load(Ordering::Acquire);
+        let tail = self.tail.0.load(Ordering::Acquire);
+        let head = self.head.0.load(Ordering::Acquire); // DPU-local copy
+        if prog != tail || prog == head {
+            return 0;
+        }
+        let batch = (prog - head) as usize;
+        dma.op(DmaDir::Read, batch);
+        let mut buf = pool.allocate(batch);
+        self.read_bytes(head, buf.as_mut_slice());
+        let batch_view = buf.freeze();
+        let bytes = batch_view.as_slice();
+        let mut consumed = 0usize;
+        let mut n = 0usize;
+        while consumed < batch {
+            let len =
+                u32::from_le_bytes(bytes[consumed..consumed + 4].try_into().unwrap()) as usize;
+            f(batch_view.slice(consumed + 4..consumed + 4 + len));
+            consumed += align8(4 + len);
+            n += 1;
+        }
+        // Fig 8b line 6: IncHead — one DMA write of the head word.
+        dma.op(DmaDir::Write, 8);
+        self.head.0.store(prog, Ordering::Release);
+        n
+    }
+
     /// Bytes currently reserved but unconsumed.
     pub fn backlog(&self) -> u64 {
         self.tail.0.load(Ordering::Acquire) - self.head.0.load(Ordering::Acquire)
@@ -290,6 +331,34 @@ mod tests {
         assert_eq!(n, 10);
         assert_eq!(dma.reads(), 2);
         assert_eq!(dma.writes(), 1);
+    }
+
+    #[test]
+    fn pooled_view_drain_matches_copy_drain() {
+        let r = ProgressRing::new(4096, 1024);
+        let msgs: Vec<Vec<u8>> = (0..7u8).map(|i| vec![i; 3 + i as usize * 5]).collect();
+        for m in &msgs {
+            assert_eq!(r.try_push(m), RingStatus::Ok);
+        }
+        let pool = crate::buf::BufPool::new(2, 4096);
+        let dma = DmaChannel::new();
+        let mut got: Vec<BufView> = Vec::new();
+        let n = r.pop_batch_views_dma(&dma, &pool, &mut |v| got.push(v));
+        assert_eq!(n, msgs.len());
+        for (g, m) in got.iter().zip(&msgs) {
+            assert_eq!(g, m);
+        }
+        // All records alias the single batch buffer.
+        for w in got.windows(2) {
+            assert!(w[0].shares_storage(&w[1]));
+        }
+        // Same DMA shape as the copying drain: 2 reads + 1 write.
+        assert_eq!((dma.reads(), dma.writes()), (2, 1));
+        // One pool hit for the whole batch; slot returns when views go.
+        let s = pool.stats();
+        assert_eq!((s.allocs, s.pool_hits, s.fallbacks), (1, 1, 0));
+        drop(got);
+        assert_eq!(pool.available(), 2);
     }
 
     #[test]

@@ -85,15 +85,28 @@ impl ResponseRing {
     /// Producer (DPU DMA thread): append one response; `dma` accounts the
     /// DMA write of the record.
     pub fn push_dma(&self, dma: &DmaChannel, msg: &[u8]) -> RingStatus {
-        let need = align8(4 + msg.len()) as u64;
+        self.push_vectored_dma(dma, &[msg])
+    }
+
+    /// Vectored producer push: one record assembled from `parts` written
+    /// back-to-back — the scatter-gather DMA of §4.3 (response header +
+    /// pre-allocated read buffer), with no intermediate concatenation
+    /// buffer. One DMA write regardless of part count.
+    pub fn push_vectored_dma(&self, dma: &DmaChannel, parts: &[&[u8]]) -> RingStatus {
+        let msg_len: usize = parts.iter().map(|p| p.len()).sum();
+        let need = align8(4 + msg_len) as u64;
         let tail = self.tail.0.load(Ordering::Relaxed); // single producer
         let head = self.head.0.load(Ordering::Acquire);
         if tail - head + need > self.capacity() {
             return RingStatus::Retry;
         }
         dma.op(DmaDir::Write, need as usize);
-        self.write_bytes(tail, &(msg.len() as u32).to_le_bytes());
-        self.write_bytes(tail + 4, msg);
+        self.write_bytes(tail, &(msg_len as u32).to_le_bytes());
+        let mut at = tail + 4;
+        for p in parts {
+            self.write_bytes(at, p);
+            at += p.len() as u64;
+        }
         self.tail.0.store(tail + need, Ordering::Release);
         RingStatus::Ok
     }
@@ -163,6 +176,28 @@ mod tests {
             pushed += 1;
         }
         assert_eq!(pushed, 4); // 64 / align8(12)=16
+    }
+
+    #[test]
+    fn vectored_push_matches_contiguous_record() {
+        let r = ResponseRing::new(1024);
+        let dma = DmaChannel::new();
+        let header = [1u8, 2, 3];
+        let payload = [9u8; 40];
+        assert_eq!(r.push_vectored_dma(&dma, &[&header, &payload]), RingStatus::Ok);
+        assert_eq!(dma.writes(), 1, "one DMA write for the whole record");
+        let mut got = Vec::new();
+        r.pop(&mut |m| got.push(m.to_vec()));
+        let mut expect = header.to_vec();
+        expect.extend_from_slice(&payload);
+        assert_eq!(got, vec![expect]);
+    }
+
+    #[test]
+    fn vectored_push_respects_capacity() {
+        let r = ResponseRing::new(64);
+        let big = [0u8; 61]; // align8(4 + 61) = 72 > 64
+        assert_eq!(r.push_vectored_dma(&DmaChannel::new(), &[&big]), RingStatus::Retry);
     }
 
     #[test]

@@ -11,18 +11,21 @@
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc;
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, OnceLock};
 use std::thread::JoinHandle;
 
 use super::{Ssd, SsdError};
+use crate::buf::{BufPool, BufView, PooledBuf};
 use crate::fault::{SsdFault, SsdFaultInjector};
 
-/// A submitted operation. Buffers travel with the op (the functional
-/// analog of pointing the driver at request/response buffer memory).
+/// A submitted operation. Buffers travel with the op as refcounted
+/// views (the functional analog of pointing the driver at
+/// request/response buffer memory — §4.3's zero-copy contract).
 #[derive(Debug)]
 pub enum SsdOp {
     Read { addr: u64, len: usize },
-    Write { addr: u64, data: Vec<u8> },
+    /// Write consumes the request buffer by reference, never a copy.
+    Write { addr: u64, data: BufView },
 }
 
 /// Completion posted by a worker.
@@ -30,8 +33,10 @@ pub enum SsdOp {
 pub struct Completion {
     /// Caller-chosen tag (e.g. response-buffer slot index).
     pub tag: u64,
-    /// Read payload (empty for writes).
-    pub data: Vec<u8>,
+    /// Read payload (empty for writes): the buffer the device "DMA'd"
+    /// into — pool-backed when a read pool is attached — handed to the
+    /// consumer as a view it can reference all the way to the wire.
+    pub data: BufView,
     pub result: Result<(), SsdError>,
 }
 
@@ -45,19 +50,36 @@ enum Job {
 /// Execute one op against the device, honoring an injected fault.
 /// Returns the completion to post, or `None` for a dropped completion
 /// (the op still executed — the *completion* is what got lost).
-fn run_op(ssd: &Ssd, tag: u64, op: SsdOp, fault: Option<SsdFault>) -> Option<Completion> {
+/// Reads land in a buffer borrowed from `pool` when one is attached
+/// (the pre-allocated DMA-able memory of Fig 12); otherwise a plain
+/// owned buffer.
+fn run_op(
+    ssd: &Ssd,
+    pool: Option<&BufPool>,
+    tag: u64,
+    op: SsdOp,
+    fault: Option<SsdFault>,
+) -> Option<Completion> {
     if fault == Some(SsdFault::Fail) {
-        return Some(Completion { tag, data: Vec::new(), result: Err(SsdError::Injected) });
+        return Some(Completion { tag, data: BufView::empty(), result: Err(SsdError::Injected) });
     }
     let completion = match op {
         SsdOp::Read { addr, len } => {
-            let mut buf = vec![0u8; len];
-            let result = ssd.read_into(addr, &mut buf);
-            Completion { tag, data: buf, result }
+            let mut buf = match pool {
+                Some(p) => p.allocate(len),
+                None => PooledBuf::from_vec(vec![0u8; len]),
+            };
+            let result = ssd.read_into(addr, buf.as_mut_slice());
+            // A failed read must NOT ship the buffer: a recycled pool
+            // slot still holds a previous request's bytes, and an error
+            // completion must never expose cross-request data. Dropping
+            // `buf` here returns the slot immediately.
+            let data = if result.is_ok() { buf.freeze() } else { BufView::empty() };
+            Completion { tag, data, result }
         }
         SsdOp::Write { addr, data } => {
             let result = ssd.write_from(addr, &data);
-            Completion { tag, data: Vec::new(), result }
+            Completion { tag, data: BufView::empty(), result }
         }
     };
     if fault == Some(SsdFault::Drop) {
@@ -84,6 +106,10 @@ pub struct AsyncSsd {
     /// Fault-delayed completions: `(polls_remaining, completion)`;
     /// each `poll()` call ages them by one.
     delayed: Arc<Mutex<Vec<(u32, Completion)>>>,
+    /// Pool read buffers land in (shared with workers so it can be
+    /// attached after spawn; set-once, read lock-free on the op path).
+    /// Unset → owned heap buffers per read.
+    read_pool: Arc<OnceLock<BufPool>>,
     /// Optional fault-injection hook, consulted once per submit.
     faults: Option<SsdFaultInjector>,
     handles: Vec<JoinHandle<()>>,
@@ -104,6 +130,7 @@ impl AsyncSsd {
             inline_ssd: Some(ssd),
             completions: Arc::new(Mutex::new(VecDeque::new())),
             delayed: Arc::new(Mutex::new(Vec::new())),
+            read_pool: Arc::new(OnceLock::new()),
             faults: None,
             handles: Vec::new(),
             workers: 0,
@@ -115,6 +142,15 @@ impl AsyncSsd {
     /// Attach a fault injector; every subsequent submit consults it.
     pub fn attach_faults(&mut self, faults: SsdFaultInjector) {
         self.faults = Some(faults);
+    }
+
+    /// Attach the pool read completions land in (Fig 12 ①: the SSD DMA
+    /// target is pre-allocated DMA-able memory, not a fresh heap
+    /// buffer). Shared with worker threads; effective for every
+    /// subsequent read. Set-once: the first attach wins, so the op
+    /// path reads it lock-free.
+    pub fn attach_read_pool(&self, pool: BufPool) {
+        let _ = self.read_pool.set(pool);
     }
 
     /// Per-shard submission queues over one shared device (§7).
@@ -141,18 +177,20 @@ impl AsyncSsd {
         let rx = Arc::new(Mutex::new(rx));
         let completions = Arc::new(Mutex::new(VecDeque::new()));
         let delayed = Arc::new(Mutex::new(Vec::new()));
+        let read_pool: Arc<OnceLock<BufPool>> = Arc::new(OnceLock::new());
         let mut handles = Vec::new();
         for _ in 0..workers {
             let rx = rx.clone();
             let ssd = ssd.clone();
             let completions = completions.clone();
             let delayed: Arc<Mutex<Vec<(u32, Completion)>>> = delayed.clone();
+            let read_pool = read_pool.clone();
             handles.push(std::thread::spawn(move || loop {
                 let job = { rx.lock().unwrap().recv() };
                 match job {
                     Ok(Job::Op { tag, op, fault }) => {
                         let held = matches!(fault, Some(SsdFault::Delay(_)));
-                        if let Some(completion) = run_op(&ssd, tag, op, fault) {
+                        if let Some(completion) = run_op(&ssd, read_pool.get(), tag, op, fault) {
                             if held {
                                 let Some(SsdFault::Delay(polls)) = fault else { unreachable!() };
                                 delayed.lock().unwrap().push((polls, completion));
@@ -170,6 +208,7 @@ impl AsyncSsd {
             inline_ssd: None,
             completions,
             delayed,
+            read_pool,
             faults: None,
             handles,
             workers,
@@ -185,7 +224,7 @@ impl AsyncSsd {
         self.submitted.fetch_add(1, Ordering::Relaxed);
         let fault = self.faults.as_ref().and_then(|f| f.decide());
         if let Some(ssd) = &self.inline_ssd {
-            if let Some(completion) = run_op(ssd, tag, op, fault) {
+            if let Some(completion) = run_op(ssd, self.read_pool.get(), tag, op, fault) {
                 if let Some(SsdFault::Delay(polls)) = fault {
                     self.delayed.lock().unwrap().push((polls, completion));
                 } else {
@@ -263,7 +302,7 @@ mod tests {
     fn async_roundtrip() {
         let ssd = Arc::new(Ssd::new(1 << 20, 512));
         let aio = AsyncSsd::new(ssd, 2);
-        aio.submit(1, SsdOp::Write { addr: 0, data: vec![42u8; 512] });
+        aio.submit(1, SsdOp::Write { addr: 0, data: vec![42u8; 512].into() });
         // Wait for write completion.
         let mut done = Vec::new();
         while done.is_empty() {
@@ -287,7 +326,7 @@ mod tests {
         let aio = AsyncSsd::new(ssd, 4);
         let n = 256;
         for i in 0..n {
-            aio.submit(i, SsdOp::Write { addr: (i % 128) * 512, data: vec![i as u8; 512] });
+            aio.submit(i, SsdOp::Write { addr: (i % 128) * 512, data: vec![i as u8; 512].into() });
         }
         let mut tags = Vec::new();
         while tags.len() < n as usize {
@@ -304,7 +343,7 @@ mod tests {
     fn inline_mode_same_contract() {
         let ssd = Arc::new(Ssd::new(1 << 20, 512));
         let aio = AsyncSsd::new_inline(ssd);
-        aio.submit(1, SsdOp::Write { addr: 0, data: vec![9u8; 512] });
+        aio.submit(1, SsdOp::Write { addr: 0, data: vec![9u8; 512].into() });
         aio.submit(2, SsdOp::Read { addr: 0, len: 512 });
         let done = aio.poll(16);
         assert_eq!(done.len(), 2);
@@ -317,7 +356,7 @@ mod tests {
         let ssd = Arc::new(Ssd::new(1 << 20, 512));
         let queues = AsyncSsd::shard_queues(&ssd, 3, 0);
         assert_eq!(queues.len(), 3);
-        queues[0].submit(1, SsdOp::Write { addr: 0, data: vec![5u8; 512] });
+        queues[0].submit(1, SsdOp::Write { addr: 0, data: vec![5u8; 512].into() });
         queues[1].submit(2, SsdOp::Read { addr: 0, len: 512 });
         // Completions stay on the queue that submitted them; other
         // queues observe nothing.
@@ -347,7 +386,7 @@ mod tests {
         let mut aio = AsyncSsd::new_inline(ssd.clone());
         aio.attach_faults(plane.ssd_injector(FaultSite::SsdQueue(0)));
         plane.arm_ssd();
-        aio.submit(1, SsdOp::Write { addr: 0, data: vec![7u8; 512] });
+        aio.submit(1, SsdOp::Write { addr: 0, data: vec![7u8; 512].into() });
         let done = aio.poll(4);
         assert_eq!(done.len(), 1);
         assert_eq!(done[0].result, Err(SsdError::Injected));
@@ -365,7 +404,7 @@ mod tests {
         let mut aio = AsyncSsd::new_inline(ssd.clone());
         aio.attach_faults(plane.ssd_injector(FaultSite::SsdQueue(0)));
         plane.arm_ssd();
-        aio.submit(2, SsdOp::Write { addr: 0, data: vec![9u8; 512] });
+        aio.submit(2, SsdOp::Write { addr: 0, data: vec![9u8; 512].into() });
         assert!(aio.poll(4).is_empty(), "completion was dropped");
         assert_eq!(aio.in_flight(), 1, "lost completion keeps the op in flight");
         ssd.read_into(0, &mut buf).unwrap();
@@ -412,6 +451,24 @@ mod tests {
     }
 
     #[test]
+    fn attached_read_pool_backs_completions() {
+        let ssd = Arc::new(Ssd::new(1 << 20, 512));
+        let aio = AsyncSsd::new_inline(ssd);
+        let pool = BufPool::new(4, 4096);
+        aio.attach_read_pool(pool.clone());
+        aio.submit(1, SsdOp::Write { addr: 0, data: vec![3u8; 512].into() });
+        aio.submit(2, SsdOp::Read { addr: 0, len: 512 });
+        let done = aio.poll(16);
+        assert_eq!(done.len(), 2);
+        assert_eq!(done[1].data, vec![3u8; 512]);
+        let s = pool.stats();
+        assert_eq!((s.pool_hits, s.fallbacks), (1, 0), "read buffer came from the slab");
+        assert_eq!(pool.in_use(), 1, "completion view holds the slot");
+        drop(done);
+        assert_eq!(pool.in_use(), 0, "dropping the completion returns it");
+    }
+
+    #[test]
     fn errors_propagate() {
         let ssd = Arc::new(Ssd::new(4096, 512));
         let aio = AsyncSsd::new(ssd, 1);
@@ -421,5 +478,27 @@ mod tests {
             done = aio.poll(4);
         }
         assert!(done[0].result.is_err());
+        assert!(done[0].data.is_empty(), "failed reads must not ship a buffer");
+    }
+
+    /// Regression: an error completion must never expose a recycled
+    /// slot's previous contents — the slot returns to the pool instead.
+    #[test]
+    fn failed_read_returns_slot_without_exposing_stale_bytes() {
+        let ssd = Arc::new(Ssd::new(4096, 512));
+        let aio = AsyncSsd::new_inline(ssd);
+        let pool = BufPool::new(1, 1024);
+        aio.attach_read_pool(pool.clone());
+        // Warm the single slot with real data, then recycle it.
+        aio.submit(1, SsdOp::Write { addr: 0, data: vec![0xAA; 512].into() });
+        aio.submit(2, SsdOp::Read { addr: 0, len: 512 });
+        drop(aio.poll(4));
+        assert_eq!(pool.available(), 1, "slot recycled with stale 0xAA bytes");
+        // Out-of-range read: fails after borrowing the dirty slot.
+        aio.submit(3, SsdOp::Read { addr: 1 << 30, len: 512 });
+        let done = aio.poll(4);
+        assert!(done[0].result.is_err());
+        assert!(done[0].data.is_empty(), "stale slot bytes leaked via error completion");
+        assert_eq!(pool.in_use(), 0, "failed read's slot went straight home");
     }
 }

@@ -150,7 +150,7 @@ fn golden_net_msg_every_request_kind() {
 
 #[test]
 fn golden_net_resp() {
-    let resp = NetResp { msg_id: 0x10, idx: 2, status: NetResp::ERR, payload: vec![0xDE, 0xAD] };
+    let resp = NetResp { msg_id: 0x10, idx: 2, status: NetResp::ERR, payload: vec![0xDE, 0xAD].into() };
     let golden = vec![
         0x10, 0x00, 0x00, 0x00, 0x00, 0x00, 0x00, 0x00, // msg_id
         0x02, 0x00, // idx
@@ -189,7 +189,7 @@ fn oversized_length_fields_reject() {
     enc[25..29].copy_from_slice(&u32::MAX.to_le_bytes());
     assert_eq!(FileRequest::decode(&enc), None);
 
-    let resp = NetResp { msg_id: 1, idx: 0, status: 0, payload: vec![0; 4] };
+    let resp = NetResp { msg_id: 1, idx: 0, status: 0, payload: vec![0; 4].into() };
     let mut enc = resp.encode();
     // payload-len field sits at bytes 11..15.
     enc[11..15].copy_from_slice(&u32::MAX.to_le_bytes());

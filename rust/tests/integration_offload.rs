@@ -182,6 +182,58 @@ fn tiny_context_ring_bounces_overflow_to_host() {
     assert!(server.engine.bounced_full > 0);
 }
 
+/// Acceptance criterion of the zero-copy buffer plane: in steady state,
+/// an offloaded READ performs ZERO heap allocations and ZERO software
+/// copies end-to-end — SSD completion → context ring → response payload
+/// → client-bound segments, all by reference (asserted via the engine
+/// pool's stats, exactly as Fig 12 describes the hardware path).
+#[test]
+fn steady_state_offloaded_reads_zero_heap_allocs() {
+    let (mut server, fid) = build(true, OffloadEngineConfig::default());
+    let mut client = ClientConn::new(tuple());
+    // 4 KiB-aligned reads: single-extent (the 1 MiB segments of the
+    // file mapping are never crossed), the overwhelmingly common case.
+    let run_batch = |server: &mut DisaggregatedServer<RawFileApp>,
+                         client: &mut ClientConn,
+                         msg_id: u64| {
+        let msg = NetMsg {
+            msg_id,
+            requests: (0..8u64)
+                .map(|i| AppRequest::Read {
+                    file_id: fid,
+                    offset: ((msg_id * 8 + i) % 256) * 4096,
+                    size: 4096,
+                })
+                .collect(),
+        };
+        let resps = run_request(client, server, &msg, Duration::from_secs(5)).unwrap();
+        assert_eq!(resps.len(), 8);
+        for (resp, req) in resps.iter().zip(&msg.requests) {
+            let AppRequest::Read { offset, .. } = req else { unreachable!() };
+            let expect: Vec<u8> =
+                (*offset..offset + 4096).map(|i| (i % 253) as u8).collect();
+            assert_eq!(resp.status, 0);
+            assert_eq!(resp.payload, expect);
+        }
+    };
+    // Warm-up: pool working set + TCP ramp.
+    for m in 1..=4 {
+        run_batch(&mut server, &mut client, m);
+    }
+    let before = server.engine.pool().stats();
+    let reads = 10 * 8u64;
+    for m in 5..15 {
+        run_batch(&mut server, &mut client, m);
+    }
+    let d = server.engine.pool().stats() - before;
+    assert_eq!(d.allocs, reads, "one pooled read buffer per offloaded read");
+    assert_eq!(d.pool_hits, reads, "every buffer request served from the slab");
+    assert_eq!(d.fallbacks, 0, "steady state never falls back to the heap");
+    assert_eq!(d.heap_allocs, 0, "0 heap allocations per offloaded read");
+    assert_eq!(d.bytes_copied, 0, "0 bytes memcpy'd per offloaded read");
+    assert_eq!(server.director.reqs_to_host, 0, "everything offloaded");
+}
+
 #[test]
 fn pep_prevents_client_retransmissions() {
     // End-to-end: after a full mixed workload, the client's TCP

@@ -1,0 +1,137 @@
+//! Property tests for the zero-copy buffer plane (`dds::buf`).
+//!
+//! Seeded randomized model checking (no external proptest dependency —
+//! the repo's own deterministic `Rng` drives the op sequences):
+//!
+//! * **Aliasing safety** — a recycled slab slot is never visible
+//!   through a stale view: every live view always reads back exactly
+//!   the pattern written when its buffer was filled, across arbitrary
+//!   interleavings of allocate / fill / freeze / slice / drop.
+//! * **Exhaustion liveness** — the pool keeps serving under exhaustion
+//!   (fallback to owned heap, counted), and occupancy returns to zero
+//!   when every view drops.
+
+use dds::buf::{BufPool, BufView, ByteRope};
+use dds::sim::rng::Rng;
+
+/// Deterministic fill pattern derived from a tag.
+fn pattern(tag: u64, len: usize) -> Vec<u8> {
+    (0..len).map(|i| ((tag as usize).wrapping_mul(31).wrapping_add(i) % 251) as u8).collect()
+}
+
+#[test]
+fn prop_stale_views_never_observe_recycling() {
+    for seed in [1u64, 7, 42, 1337] {
+        let mut rng = Rng::new(seed);
+        let slots = 4usize;
+        let slot_size = 256usize;
+        let pool = BufPool::new(slots, slot_size);
+        // Live views with the pattern tag they must keep reading.
+        let mut live: Vec<(u64, usize, BufView)> = Vec::new();
+        let mut next_tag = 0u64;
+        for _ in 0..2000 {
+            match rng.next_range(4) {
+                // Allocate + fill + freeze (sometimes oversize to force
+                // the heap-fallback path into the interleaving).
+                0 | 1 => {
+                    let len = if rng.next_range(10) == 0 {
+                        slot_size + 1 + rng.next_range(64) as usize
+                    } else {
+                        1 + rng.next_range(slot_size as u64) as usize
+                    };
+                    let tag = next_tag;
+                    next_tag += 1;
+                    let mut b = pool.allocate(len);
+                    b.as_mut_slice().copy_from_slice(&pattern(tag, len));
+                    live.push((tag, len, b.freeze()));
+                }
+                // Slice a random live view (shares storage; inherits
+                // the sliced window of the pattern).
+                2 if !live.is_empty() => {
+                    let i = rng.next_range(live.len() as u64) as usize;
+                    let (tag, len, v) = &live[i];
+                    if *len > 1 {
+                        let start = rng.next_range(*len as u64 - 1) as usize;
+                        let end = start + 1 + rng.next_range((*len - start - 1).max(1) as u64) as usize;
+                        let end = end.min(*len);
+                        let sub = v.slice(start..end);
+                        assert!(sub.shares_storage(v));
+                        // A sliced view is checked against the parent
+                        // pattern window; reuse the tag with an offset
+                        // encoded by re-deriving from the parent.
+                        assert_eq!(
+                            sub.as_slice(),
+                            &pattern(*tag, *len)[start..end],
+                            "seed {seed}: slice observed foreign bytes"
+                        );
+                    }
+                }
+                // Drop a random live view (slot may recycle iff it was
+                // the last reference).
+                _ if !live.is_empty() => {
+                    let i = rng.next_range(live.len() as u64) as usize;
+                    live.swap_remove(i);
+                }
+                _ => {}
+            }
+            // Invariant: EVERY live view still reads its own pattern,
+            // no matter how many slots were recycled meanwhile.
+            for (tag, len, v) in &live {
+                assert_eq!(
+                    v.as_slice(),
+                    pattern(*tag, *len).as_slice(),
+                    "seed {seed}: stale view observed a recycled slot"
+                );
+            }
+            // Invariant: occupancy (slab slots out + outstanding
+            // fallbacks) equals the number of live buffers exactly.
+            assert_eq!(pool.in_use(), live.len(), "seed {seed}: occupancy drifted");
+        }
+        drop(live);
+        assert_eq!(pool.in_use(), 0, "seed {seed}: slots leaked");
+        let s = pool.stats();
+        assert_eq!(s.allocs, s.pool_hits + s.fallbacks, "every alloc is a hit or a fallback");
+    }
+}
+
+#[test]
+fn prop_exhaustion_fallback_keeps_serving() {
+    let pool = BufPool::new(2, 128);
+    // Grab 50 concurrent buffers from a 2-slot pool: all must be
+    // usable, all must read back their own fill.
+    let views: Vec<BufView> = (0..50u64)
+        .map(|tag| {
+            let mut b = pool.allocate(64);
+            b.as_mut_slice().copy_from_slice(&pattern(tag, 64));
+            b.freeze()
+        })
+        .collect();
+    for (tag, v) in views.iter().enumerate() {
+        assert_eq!(v.as_slice(), pattern(tag as u64, 64).as_slice());
+    }
+    let s = pool.stats();
+    assert_eq!(s.allocs, 50);
+    assert_eq!(s.pool_hits, 2, "only the slab's two slots hit");
+    assert_eq!(s.fallbacks, 48, "the rest fell back to owned heap — and still served");
+    drop(views);
+    assert_eq!(pool.in_use(), 0);
+    assert_eq!(pool.available(), 2, "fallback buffers never join the slab");
+}
+
+#[test]
+fn prop_rope_concatenation_equals_parts() {
+    let mut rng = Rng::new(99);
+    for _ in 0..200 {
+        let n = 1 + rng.next_range(8) as usize;
+        let mut rope = ByteRope::new();
+        let mut expect = Vec::new();
+        for tag in 0..n as u64 {
+            let len = rng.next_range(100) as usize;
+            let bytes = pattern(tag, len);
+            expect.extend_from_slice(&bytes);
+            rope.push(BufView::from_vec(bytes));
+        }
+        assert_eq!(rope.len(), expect.len());
+        assert_eq!(rope.to_vec(), expect);
+    }
+}
