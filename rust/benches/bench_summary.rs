@@ -1,19 +1,23 @@
 //! Bench-summary emitter: runs the zero-copy ledger probe
 //! (`fig23_zerocopy`'s functional half) and the sharded-scaling smoke
 //! (`fig21b_sharded_scaling`'s harness at reduced duration) and writes
-//! the results to `BENCH_zerocopy.json`, so CI can archive the perf
-//! trajectory of the buffer plane per commit.
+//! the results to `BENCH_zerocopy.json`; also measures crash-recovery
+//! mount latency vs journal chain length into `BENCH_recovery.json` —
+//! so CI can archive the perf trajectory of the buffer and durability
+//! planes per commit.
 //!
 //! Smoke mode is the default (seconds, not minutes); tune with:
 //!   DDS_BENCH_READS   probe reads per mode        (default 2000)
 //!   DDS_BENCH_MS      sharded measure window, ms  (default 300)
 //!   DDS_BENCH_SHARDS  comma list of shard counts  (default "1,2")
 //!   DDS_BENCH_OUT     output path                 (default BENCH_zerocopy.json)
+//!   DDS_BENCH_RECOVERY_OUT  recovery output       (default BENCH_recovery.json)
 //!
 //! JSON is hand-rolled (no serde in this offline environment): one
 //! object with a `zerocopy` section (per-mode ops/s, bytes_copied/req,
 //! allocs/req, pool hit rate, plus the copy-reduction ratio vs the
-//! straw-man) and a `sharded_scaling` section (ops/s per shard count).
+//! straw-man) and a `sharded_scaling` section (ops/s per shard count);
+//! the recovery file holds `(syncs, journal_records, mount_us)` points.
 
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -24,8 +28,10 @@ use dds::coordinator::{
     StorageServer, StorageServerConfig,
 };
 use dds::director::AppSignature;
+use dds::dpufs::{DpuFs, FsConfig};
 use dds::metrics::{probe_engine_read_path, ZeroCopyProbe};
 use dds::offload::RawFileOffload;
+use dds::ssd::Ssd;
 use dds::workload::RandomIoGen;
 
 const FILE_BYTES: u64 = 4 << 20;
@@ -83,6 +89,33 @@ fn sharded_ops_per_sec(shards: usize, measure: Duration) -> f64 {
         handles.into_iter().map(|h| h.join().unwrap()).sum()
     });
     total_ops as f64 / t0.elapsed().as_secs_f64()
+}
+
+/// One recovery point: format, run `syncs` metadata syncs (each
+/// appends a data + commit frame to the journal), then time the
+/// recovery mount. Returns `(journal_records_scanned, mean mount µs)`.
+fn recovery_point(syncs: usize) -> (usize, f64) {
+    let cfg = FsConfig::default(); // 1 MiB segments: journal holds thousands of records
+    let ssd = Arc::new(Ssd::new(16 << 20, 512));
+    let mut fs = DpuFs::format(ssd.clone(), cfg.clone()).expect("format");
+    let d = fs.create_directory("bench").expect("dir");
+    for i in 0..8 {
+        fs.create_file(d, &format!("f{i}")).expect("file");
+    }
+    for _ in 0..syncs {
+        fs.sync_metadata().expect("sync");
+    }
+    drop(fs);
+    let iters = 20u32;
+    let mut scanned = 0usize;
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        let (fs, report) =
+            DpuFs::mount_with_report(ssd.clone(), cfg.clone()).expect("recovery mount");
+        scanned = report.journal_records;
+        drop(fs);
+    }
+    (scanned, t0.elapsed().as_secs_f64() * 1e6 / iters as f64)
 }
 
 fn probe_json(p: &ZeroCopyProbe) -> String {
@@ -153,6 +186,25 @@ fn main() {
     std::fs::write(&out_path, &json).expect("write bench summary");
     println!("{json}");
     eprintln!("bench_summary: wrote {out_path}");
+
+    // Durability plane: recovery (mount) time vs journal chain length.
+    let recovery_out = std::env::var("DDS_BENCH_RECOVERY_OUT")
+        .unwrap_or_else(|_| "BENCH_recovery.json".into());
+    let mut points = Vec::new();
+    for &syncs in &[1usize, 16, 128, 1024] {
+        eprintln!("bench_summary: recovery mount at {syncs} syncs...");
+        let (records, mount_us) = recovery_point(syncs);
+        points.push(format!(
+            "{{\"syncs\":{syncs},\"journal_records\":{records},\"mount_us\":{mount_us:.1}}}"
+        ));
+    }
+    let recovery_json = format!(
+        "{{\n  \"bench\": \"recovery\",\n  \"smoke\": true,\n  \"points\": [{}]\n}}\n",
+        points.join(",")
+    );
+    std::fs::write(&recovery_out, &recovery_json).expect("write recovery summary");
+    println!("{recovery_json}");
+    eprintln!("bench_summary: wrote {recovery_out}");
 
     // The acceptance contract this PR is gated on (kept as asserts so a
     // regression turns the emitter red even before anyone reads JSON).

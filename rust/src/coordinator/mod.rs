@@ -87,6 +87,33 @@ impl StorageServer {
         let ssd = Arc::new(Ssd::new(cfg.ssd_bytes, 512));
         let fs = DpuFs::format(ssd.clone(), FsConfig { segment_size: cfg.segment_size })
             .map_err(|e| anyhow::anyhow!("format: {e}"))?;
+        Self::over_device(ssd, fs, cfg, logic)
+    }
+
+    /// The restart path: mount an existing device image — running the
+    /// metadata journal's crash recovery — instead of formatting, and
+    /// report what recovery found and repaired. `cfg.ssd_bytes` is
+    /// ignored (the device already exists); `cfg.segment_size` must
+    /// match the on-disk layout.
+    pub fn remount(
+        ssd: Arc<Ssd>,
+        cfg: StorageServerConfig,
+        logic: Option<Arc<dyn OffloadLogic>>,
+    ) -> anyhow::Result<(Self, crate::dpufs::RecoveryReport)> {
+        let (fs, report) =
+            DpuFs::mount_with_report(ssd.clone(), FsConfig { segment_size: cfg.segment_size })
+                .map_err(|e| anyhow::anyhow!("mount: {e}"))?;
+        Ok((Self::over_device(ssd, fs, cfg, logic)?, report))
+    }
+
+    /// Spawn the file service over an already-built device + file
+    /// system (shared tail of [`Self::build`] and [`Self::remount`]).
+    fn over_device(
+        ssd: Arc<Ssd>,
+        fs: DpuFs,
+        cfg: StorageServerConfig,
+        logic: Option<Arc<dyn OffloadLogic>>,
+    ) -> anyhow::Result<Self> {
         let dpufs = Arc::new(RwLock::new(fs));
         let cache = Arc::new(CuckooCache::new(cfg.cache_items));
         let aio = AsyncSsd::new(ssd.clone(), cfg.service.ssd_workers);

@@ -6,9 +6,19 @@
 //! reserved to persistently store directory/file metadata and the *file
 //! mapping* (the per-file vector of segments). File I/O translates a
 //! `(file, offset, len)` into per-segment extents and issues device ops.
+//!
+//! Metadata persistence is **crash-consistent**: segment 0 holds two
+//! checksummed shadow superblock slots and segment 1 a checksummed,
+//! sequence-numbered write-ahead journal ([`journal`]). Every
+//! [`DpuFs::sync_metadata`] runs journal-append → shadow-superblock
+//! write → commit marker, so a power cut tearing any single device
+//! write is detected by checksum at [`DpuFs::mount`] and rolled
+//! forward (journal committed, superblock torn) or back (journal
+//! append torn) — never silently corrupted.
 
 mod alloc;
-mod meta;
+pub mod journal;
+pub mod meta;
 
 pub use alloc::SegmentBitmap;
 pub use meta::{DirId, FileId, FileMeta};
@@ -17,6 +27,10 @@ use std::collections::HashMap;
 use std::sync::Arc;
 
 use crate::ssd::Ssd;
+
+/// Segments reserved at the front of the device: segment 0 =
+/// superblock (two shadow slots), segment 1 = metadata journal.
+pub const RESERVED_SEGMENTS: usize = 2;
 
 /// File-system errors.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -61,6 +75,47 @@ pub struct Extent {
     pub len: u64,
 }
 
+/// What mount-time crash recovery observed and repaired.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct RecoveryReport {
+    /// The metadata sequence number the file system recovered to.
+    pub recovered_seq: u64,
+    /// The journal held a committed image newer than any superblock
+    /// slot (the superblock write was lost or torn): recovery replayed
+    /// the journal record forward.
+    pub rolled_forward: bool,
+    /// Recovery rewrote the stale/torn superblock slot from the
+    /// journal (implies `rolled_forward`).
+    pub repaired_superblock: bool,
+    /// Persisted `next_dir`/`next_file` counters were at or below a
+    /// live id and were clamped to `max live id + 1` (would otherwise
+    /// let `create_file` silently reuse a live id).
+    pub counters_clamped: bool,
+    /// Checksum validity of superblock slots 0 and 1.
+    pub valid_slots: [bool; 2],
+    /// Highest valid superblock sequence, if any slot was valid.
+    pub superblock_seq: Option<u64>,
+    /// Valid journal data records in the chain.
+    pub journal_records: usize,
+    /// Valid journal commit markers in the chain.
+    pub journal_commits: usize,
+    /// Highest sequence among valid journal data records.
+    pub highest_journal_seq: Option<u64>,
+    /// The journal chain ended on non-zero bytes (a torn append or
+    /// stale wrapped residue).
+    pub torn_tail: bool,
+}
+
+/// An owned copy of the in-memory metadata state (see
+/// [`DpuFs::meta_snapshot`] / [`DpuFs::restore_snapshot`]).
+pub struct MetaSnapshot {
+    dirs: HashMap<DirId, String>,
+    files: HashMap<FileId, FileMeta>,
+    next_dir: u32,
+    next_file: u32,
+    bitmap: SegmentBitmap,
+}
+
 /// The DPU file system. All metadata lives on the DPU (which is what
 /// enables read offloading — the offload engine resolves file reads
 /// without consulting the host, §3).
@@ -72,6 +127,10 @@ pub struct DpuFs {
     files: HashMap<FileId, FileMeta>,
     next_dir: u32,
     next_file: u32,
+    /// Last committed metadata sequence number.
+    seq: u64,
+    /// Journal append cursor within segment 1.
+    journal_off: u64,
 }
 
 impl DpuFs {
@@ -79,11 +138,17 @@ impl DpuFs {
     pub fn format(ssd: Arc<Ssd>, cfg: FsConfig) -> Result<Self, FsError> {
         assert!(cfg.segment_size % ssd.block_size() as u64 == 0);
         let num_segments = (ssd.capacity() / cfg.segment_size) as usize;
-        if num_segments < 2 {
+        if num_segments < RESERVED_SEGMENTS + 1 {
             return Err(FsError::NoSpace);
         }
+        // Invalidate any stale superblock/journal frames from a
+        // previous file system so recovery can never resurrect them.
+        let zeros = vec![0u8; (RESERVED_SEGMENTS as u64 * cfg.segment_size) as usize];
+        ssd.write_from(0, &zeros).map_err(|e| FsError::Device(e.to_string()))?;
         let mut bitmap = SegmentBitmap::new(num_segments);
-        bitmap.set(0, true); // segment 0 = metadata (§4.3)
+        for s in 0..RESERVED_SEGMENTS {
+            bitmap.set(s, true); // superblock + journal (§4.3)
+        }
         let mut fs = DpuFs {
             ssd,
             cfg,
@@ -92,40 +157,189 @@ impl DpuFs {
             files: HashMap::new(),
             next_dir: 1,
             next_file: 1,
+            seq: 0,
+            journal_off: 0,
         };
         fs.sync_metadata()?;
         Ok(fs)
     }
 
-    /// Mount an existing file system: load metadata from segment 0.
+    /// Mount an existing file system, running crash recovery (see
+    /// [`Self::mount_with_report`]).
     pub fn mount(ssd: Arc<Ssd>, cfg: FsConfig) -> Result<Self, FsError> {
-        let num_segments = (ssd.capacity() / cfg.segment_size) as usize;
-        let mut buf = vec![0u8; cfg.segment_size as usize];
-        ssd.read_into(0, &mut buf).map_err(|e| FsError::Device(e.to_string()))?;
-        let (dirs, files, next_dir, next_file) = meta::decode(&buf)?;
+        Self::mount_with_report(ssd, cfg).map(|(fs, _)| fs)
+    }
+
+    /// Mount with full crash recovery:
+    ///
+    /// 1. checksum-verify both superblock slots and the journal chain;
+    /// 2. pick the newest committed image — roll *forward* when the
+    ///    journal holds a fully-written record newer than any valid
+    ///    slot (repairing the superblock, idempotently: a re-crash
+    ///    during the repair leaves the journal record intact and the
+    ///    next mount repeats it), roll *back* past any torn journal
+    ///    tail otherwise;
+    /// 3. reject double-allocated/out-of-range segments, clamp stale
+    ///    `next_dir`/`next_file` counters, rebuild the bitmap;
+    ///
+    /// and report everything observed in a [`RecoveryReport`].
+    pub fn mount_with_report(
+        ssd: Arc<Ssd>,
+        cfg: FsConfig,
+    ) -> Result<(Self, RecoveryReport), FsError> {
+        let seg = cfg.segment_size;
+        let num_segments = (ssd.capacity() / seg) as usize;
+        if num_segments < RESERVED_SEGMENTS + 1 {
+            return Err(FsError::Corrupt("device too small for a DDS filesystem".into()));
+        }
+        let mut sb = vec![0u8; seg as usize];
+        ssd.read_into(0, &mut sb).map_err(|e| FsError::Device(e.to_string()))?;
+        let slots = journal::read_slots(&sb);
+        let mut jb = vec![0u8; seg as usize];
+        ssd.read_into(seg, &mut jb).map_err(|e| FsError::Device(e.to_string()))?;
+        let scan = journal::scan(&jb);
+
+        let super_best: Option<(u64, Vec<u8>)> =
+            slots.iter().flatten().max_by_key(|(s, _)| *s).cloned();
+        let journal_best: Option<(u64, Vec<u8>)> =
+            scan.records.iter().max_by_key(|(s, _)| *s).cloned();
+        let (rolled_forward, seq, image) = match (&super_best, &journal_best) {
+            (Some((ss, _)), Some((js, ji))) if js > ss => (true, *js, ji.clone()),
+            (Some((ss, si)), _) => (false, *ss, si.clone()),
+            (None, Some((js, ji))) => (true, *js, ji.clone()),
+            (None, None) => {
+                return Err(FsError::Corrupt(
+                    "no valid superblock slot or journal record (not a DDS \
+                     filesystem, or torn beyond recovery)"
+                        .into(),
+                ))
+            }
+        };
+
+        // Validate the chosen image FIRST — all pure checks — so a
+        // CRC-valid but semantically corrupt record can never cause the
+        // failing mount path to mutate the device (repair writes happen
+        // only once the image is known good).
+        let (dirs, files, mut next_dir, mut next_file) = meta::decode(&image)?;
+        // A committed image can still carry counters at/below a live id
+        // (e.g. hand-built or pre-durability images): clamp, or
+        // `create_file` would silently reuse a live `FileId`.
+        let max_dir = dirs.keys().map(|d| d.0).max().unwrap_or(0);
+        let max_file = files.keys().map(|f| f.0).max().unwrap_or(0);
+        let mut counters_clamped = false;
+        if next_dir <= max_dir {
+            next_dir = max_dir + 1;
+            counters_clamped = true;
+        }
+        if next_file <= max_file {
+            next_file = max_file + 1;
+            counters_clamped = true;
+        }
+
         let mut bitmap = SegmentBitmap::new(num_segments);
-        bitmap.set(0, true);
+        for s in 0..RESERVED_SEGMENTS {
+            bitmap.set(s, true);
+        }
         for f in files.values() {
+            if !dirs.contains_key(&f.dir) {
+                return Err(FsError::Corrupt(format!(
+                    "file {} references nonexistent directory {}",
+                    f.id.0, f.dir.0
+                )));
+            }
             for &s in &f.segments {
                 if s as usize >= num_segments || bitmap.get(s as usize) {
-                    return Err(FsError::Corrupt(format!("segment {s} double-allocated")));
+                    return Err(FsError::Corrupt(format!(
+                        "segment {s} double-allocated or out of range"
+                    )));
                 }
                 bitmap.set(s as usize, true);
             }
         }
-        Ok(DpuFs { ssd, cfg, bitmap, dirs, files, next_dir, next_file })
+
+        let mut journal_off = scan.end_off as u64;
+        let mut repaired_superblock = false;
+        if rolled_forward {
+            // The WAL committed `seq` but the superblock write was lost
+            // or torn: repair it now (the image validated above). If a
+            // power cut tears THIS write, the journal record is still
+            // intact and the next mount repeats the repair — replay is
+            // idempotent.
+            journal::write_slot(&ssd, seg, seq, &image)?;
+            journal::append(
+                &ssd,
+                seg,
+                &mut journal_off,
+                journal::JOURNAL_COMMIT_MAGIC,
+                seq,
+                &[],
+            )?;
+            repaired_superblock = true;
+        }
+
+        let report = RecoveryReport {
+            recovered_seq: seq,
+            rolled_forward,
+            repaired_superblock,
+            counters_clamped,
+            valid_slots: [slots[0].is_some(), slots[1].is_some()],
+            superblock_seq: super_best.map(|(s, _)| s),
+            journal_records: scan.records.len(),
+            journal_commits: scan.commits.len(),
+            highest_journal_seq: journal_best.map(|(s, _)| s),
+            torn_tail: scan.torn_tail,
+        };
+        Ok((
+            DpuFs { ssd, cfg, bitmap, dirs, files, next_dir, next_file, seq, journal_off },
+            report,
+        ))
     }
 
-    /// Persist metadata + file mapping into segment 0 (§4.3).
+    /// Persist metadata + file mapping (§4.3), crash-consistently:
+    ///
+    /// 1. **Journal append** — the checksummed WAL record for sequence
+    ///    `seq + 1` carrying the full metadata image. Once this write
+    ///    completes, the new state survives any later torn write (roll
+    ///    forward); if this write itself is torn, recovery rolls back
+    ///    to the previous committed state.
+    /// 2. **Shadow superblock** — the checksummed image into slot
+    ///    `seq % 2`, never overwriting the last committed slot.
+    /// 3. **Commit marker** — a journal checkpoint noting the
+    ///    superblock now reflects `seq`.
     pub fn sync_metadata(&mut self) -> Result<(), FsError> {
-        let buf = meta::encode(
+        let seg = self.cfg.segment_size;
+        let image = meta::encode(
             &self.dirs,
             &self.files,
             self.next_dir,
             self.next_file,
-            self.cfg.segment_size as usize,
+            journal::max_image_len(seg),
         )?;
-        self.ssd.write_from(0, &buf).map_err(|e| FsError::Device(e.to_string()))
+        let seq = self.seq + 1;
+        // Burn the sequence number whether or not the protocol
+        // completes: a failed attempt may already have landed its DATA
+        // record, and a retried sync reusing the number could put two
+        // different images with EQUAL seq in the journal — recovery's
+        // max-seq rule must never face that tie.
+        self.seq = seq;
+        journal::append(
+            &self.ssd,
+            seg,
+            &mut self.journal_off,
+            journal::JOURNAL_DATA_MAGIC,
+            seq,
+            &image,
+        )?;
+        journal::write_slot(&self.ssd, seg, seq, &image)?;
+        journal::append(
+            &self.ssd,
+            seg,
+            &mut self.journal_off,
+            journal::JOURNAL_COMMIT_MAGIC,
+            seq,
+            &[],
+        )?;
+        Ok(())
     }
 
     pub fn segment_size(&self) -> u64 {
@@ -134,6 +348,57 @@ impl DpuFs {
 
     pub fn free_segments(&self) -> usize {
         self.bitmap.free()
+    }
+
+    /// Total segments on the device (including the reserved ones).
+    pub fn num_segments(&self) -> usize {
+        self.bitmap.len()
+    }
+
+    /// Last committed metadata sequence number.
+    pub fn metadata_seq(&self) -> u64 {
+        self.seq
+    }
+
+    /// The `(next_dir, next_file)` id counters (recovery invariants).
+    pub fn counters(&self) -> (u32, u32) {
+        (self.next_dir, self.next_file)
+    }
+
+    /// All directories, sorted by id.
+    pub fn list_dirs(&self) -> Vec<(DirId, &str)> {
+        let mut v: Vec<_> = self.dirs.iter().map(|(d, n)| (*d, n.as_str())).collect();
+        v.sort_by_key(|(d, _)| *d);
+        v
+    }
+
+    /// Capture the in-memory metadata state — the rollback unit for
+    /// "apply + sync, or neither" control-plane semantics
+    /// ([`crate::fileservice::FileServiceConfig::durable_metadata`]).
+    /// Cheap relative to the sync it guards: control ops are rare.
+    pub fn meta_snapshot(&self) -> MetaSnapshot {
+        MetaSnapshot {
+            dirs: self.dirs.clone(),
+            files: self.files.clone(),
+            next_dir: self.next_dir,
+            next_file: self.next_file,
+            bitmap: self.bitmap.clone(),
+        }
+    }
+
+    /// Restore a snapshot taken by [`Self::meta_snapshot`] — rolls back
+    /// a mutation whose durability sync failed, so a refused op can
+    /// never be silently persisted by a later op's successful sync.
+    /// The on-disk cursor state (`seq`, journal offset) is deliberately
+    /// NOT restored: a torn append stays ignored on the device, and the
+    /// failed attempt's sequence number stays burnt (see
+    /// [`Self::sync_metadata`]) so a retry can never collide with it.
+    pub fn restore_snapshot(&mut self, s: MetaSnapshot) {
+        self.dirs = s.dirs;
+        self.files = s.files;
+        self.next_dir = s.next_dir;
+        self.next_file = s.next_file;
+        self.bitmap = s.bitmap;
     }
 
     // ----- control plane (§4.2: directory/file management) -----
@@ -192,15 +457,28 @@ impl DpuFs {
     }
 
     /// Grow (or keep) a file so `size` bytes are addressable, allocating
-    /// segments from the bitmap.
+    /// segments from the bitmap. Atomic on failure: a refused grow
+    /// frees everything it allocated and changes neither the mapping
+    /// nor the size — half-mapped segments would otherwise sit
+    /// unreachable in the file mapping and be persisted by the next
+    /// metadata sync.
     pub fn ensure_size(&mut self, file: FileId, size: u64) -> Result<(), FsError> {
         let seg = self.cfg.segment_size;
         let need = size.div_ceil(seg) as usize;
         let meta = self.files.get_mut(&file).ok_or(FsError::NoSuchFile)?;
-        while meta.segments.len() < need {
-            let s = self.bitmap.alloc().ok_or(FsError::NoSpace)?;
-            meta.segments.push(s as u32);
+        let mut fresh: Vec<u32> = Vec::new();
+        while meta.segments.len() + fresh.len() < need {
+            match self.bitmap.alloc() {
+                Some(s) => fresh.push(s as u32),
+                None => {
+                    for s in fresh {
+                        self.bitmap.set(s as usize, false);
+                    }
+                    return Err(FsError::NoSpace);
+                }
+            }
         }
+        meta.segments.extend(fresh);
         meta.size = meta.size.max(size);
         Ok(())
     }
@@ -298,8 +576,11 @@ mod tests {
     #[test]
     fn segment_zero_reserved() {
         let fs = fs();
-        // Segment 0 must never be handed to files.
+        // The superblock and journal segments must never be handed to
+        // files.
         assert!(fs.bitmap.get(0));
+        assert!(fs.bitmap.get(1));
+        assert_eq!(fs.free_segments(), fs.num_segments() - RESERVED_SEGMENTS);
     }
 
     #[test]
@@ -365,11 +646,237 @@ mod tests {
     }
 
     #[test]
-    fn no_space_surfaces() {
-        let ssd = Arc::new(Ssd::new(4 << 20, 512)); // 4 segments, 1 reserved
+    fn no_space_surfaces_and_refused_grow_is_atomic() {
+        let ssd = Arc::new(Ssd::new(4 << 20, 512)); // 4 segments, 2 reserved
         let mut fs = DpuFs::format(ssd, FsConfig::default()).unwrap();
         let d = fs.create_directory("d").unwrap();
         let f = fs.create_file(d, "f").unwrap();
+        let free_before = fs.free_segments();
         assert_eq!(fs.write(f, 0, &vec![0u8; 4 << 20]), Err(FsError::NoSpace));
+        // The refused grow must not leave half-mapped segments behind
+        // (the next sync would persist them as an inconsistent image).
+        assert_eq!(fs.free_segments(), free_before);
+        let meta = fs.file_meta(f).unwrap();
+        assert_eq!((meta.size, meta.segments.len()), (0, 0));
+    }
+
+    #[test]
+    fn clean_mount_reports_no_recovery_work() {
+        let ssd = Arc::new(Ssd::new(64 << 20, 512));
+        {
+            let mut fs = DpuFs::format(ssd.clone(), FsConfig::default()).unwrap();
+            let d = fs.create_directory("db").unwrap();
+            fs.create_file(d, "f").unwrap();
+            fs.sync_metadata().unwrap();
+        }
+        let (fs, report) = DpuFs::mount_with_report(ssd, FsConfig::default()).unwrap();
+        assert_eq!(report.recovered_seq, 2, "format sync + explicit sync");
+        assert!(!report.rolled_forward);
+        assert!(!report.repaired_superblock);
+        assert!(!report.counters_clamped);
+        assert!(!report.torn_tail);
+        assert_eq!(report.superblock_seq, Some(2));
+        assert_eq!(report.highest_journal_seq, Some(2));
+        assert_eq!(fs.metadata_seq(), 2);
+    }
+
+    /// Crash window between protocol steps 1 and 2: the WAL record for
+    /// the new sequence is committed but the superblock write never
+    /// happened. Mount must roll forward and repair the superblock.
+    #[test]
+    fn committed_journal_record_rolls_forward_and_repairs() {
+        let cfg = FsConfig::default();
+        let seg = cfg.segment_size;
+        let ssd = Arc::new(Ssd::new(64 << 20, 512));
+        let mut fs = DpuFs::format(ssd.clone(), cfg.clone()).unwrap();
+        let d = fs.create_directory("db").unwrap();
+        fs.sync_metadata().unwrap(); // seq 2
+        let mut dirs = HashMap::new();
+        dirs.insert(d, "db".to_string());
+        dirs.insert(DirId(2), "wal-only".to_string());
+        let image =
+            meta::encode(&dirs, &HashMap::new(), 3, 1, journal::max_image_len(seg)).unwrap();
+        let mut off = fs.journal_off;
+        journal::append(&ssd, seg, &mut off, journal::JOURNAL_DATA_MAGIC, 3, &image).unwrap();
+        drop(fs);
+
+        let (fs, report) = DpuFs::mount_with_report(ssd.clone(), cfg.clone()).unwrap();
+        assert!(report.rolled_forward);
+        assert!(report.repaired_superblock);
+        assert_eq!(report.recovered_seq, 3);
+        assert_eq!(fs.list_dirs().len(), 2);
+        drop(fs);
+        // Replay is idempotent: a second mount finds the repaired
+        // superblock and does no further recovery work.
+        let (fs, report) = DpuFs::mount_with_report(ssd, cfg).unwrap();
+        assert!(!report.rolled_forward);
+        assert_eq!(report.recovered_seq, 3);
+        assert_eq!(fs.list_dirs().len(), 2);
+    }
+
+    /// Crash window inside protocol step 1: a torn WAL append must be
+    /// detected and rolled back to the previous committed state.
+    #[test]
+    fn torn_journal_append_rolls_back() {
+        let cfg = FsConfig::default();
+        let seg = cfg.segment_size;
+        let ssd = Arc::new(Ssd::new(64 << 20, 512));
+        let mut fs = DpuFs::format(ssd.clone(), cfg.clone()).unwrap();
+        fs.create_directory("db").unwrap();
+        fs.sync_metadata().unwrap(); // seq 2
+        let image = meta::encode(
+            &HashMap::new(),
+            &HashMap::new(),
+            9,
+            9,
+            journal::max_image_len(seg),
+        )
+        .unwrap();
+        let frame = journal::encode_frame(journal::JOURNAL_DATA_MAGIC, 3, &image);
+        // Tear the append halfway through the payload.
+        ssd.write_from(seg + fs.journal_off, &frame[..frame.len() / 2]).unwrap();
+        drop(fs);
+
+        let (fs, report) = DpuFs::mount_with_report(ssd, cfg).unwrap();
+        assert_eq!(report.recovered_seq, 2, "torn record ignored");
+        assert!(!report.rolled_forward);
+        assert!(report.torn_tail, "torn bytes sit at the chain tail");
+        assert_eq!(fs.list_dirs().len(), 1, "rolled back to the committed state");
+    }
+
+    /// Regression (satellite): a persisted image whose `next_file` is
+    /// at/below a live id must be clamped at mount — `create_file`
+    /// would otherwise hand out a live `FileId` and clobber it.
+    #[test]
+    fn stale_id_counters_clamped_on_mount() {
+        let cfg = FsConfig::default();
+        let seg = cfg.segment_size;
+        let ssd = Arc::new(Ssd::new(64 << 20, 512));
+        drop(DpuFs::format(ssd.clone(), cfg.clone()).unwrap()); // seq 1
+        let mut dirs = HashMap::new();
+        dirs.insert(DirId(1), "d".to_string());
+        let mut files = HashMap::new();
+        files.insert(
+            FileId(5),
+            FileMeta {
+                id: FileId(5),
+                dir: DirId(1),
+                name: "live".into(),
+                size: 10,
+                segments: vec![2],
+            },
+        );
+        // Stale counters: next_dir = 1 ≤ live dir 1, next_file = 1 ≤
+        // live file 5.
+        let image = meta::encode(&dirs, &files, 1, 1, journal::max_image_len(seg)).unwrap();
+        journal::write_slot(&ssd, seg, 8, &image).unwrap();
+
+        let (mut fs, report) = DpuFs::mount_with_report(ssd, cfg).unwrap();
+        assert!(report.counters_clamped);
+        assert_eq!(fs.counters(), (2, 6));
+        let d2 = fs.create_directory("fresh").unwrap();
+        assert_eq!(d2, DirId(2));
+        let f2 = fs.create_file(DirId(1), "new").unwrap();
+        assert_eq!(f2, FileId(6), "must not reuse live FileId(5)");
+        assert_eq!(fs.file_meta(FileId(5)).unwrap().name, "live");
+    }
+
+    #[test]
+    fn double_allocated_segments_rejected_at_mount() {
+        let cfg = FsConfig::default();
+        let seg = cfg.segment_size;
+        let ssd = Arc::new(Ssd::new(64 << 20, 512));
+        drop(DpuFs::format(ssd.clone(), cfg.clone()).unwrap());
+        let mut dirs = HashMap::new();
+        dirs.insert(DirId(1), "d".to_string());
+        let mut files = HashMap::new();
+        for id in [7u32, 8u32] {
+            files.insert(
+                FileId(id),
+                FileMeta {
+                    id: FileId(id),
+                    dir: DirId(1),
+                    name: format!("f{id}"),
+                    size: 10,
+                    segments: vec![3], // both claim segment 3
+                },
+            );
+        }
+        let image = meta::encode(&dirs, &files, 2, 9, journal::max_image_len(seg)).unwrap();
+        journal::write_slot(&ssd, seg, 8, &image).unwrap();
+        assert!(matches!(
+            DpuFs::mount_with_report(ssd, cfg),
+            Err(FsError::Corrupt(_))
+        ));
+    }
+
+    #[test]
+    fn dangling_directory_reference_rejected_at_mount() {
+        let cfg = FsConfig::default();
+        let seg = cfg.segment_size;
+        let ssd = Arc::new(Ssd::new(64 << 20, 512));
+        drop(DpuFs::format(ssd.clone(), cfg.clone()).unwrap());
+        let mut files = HashMap::new();
+        files.insert(
+            FileId(1),
+            FileMeta {
+                id: FileId(1),
+                dir: DirId(9), // no such directory
+                name: "orphan".into(),
+                size: 0,
+                segments: Vec::new(),
+            },
+        );
+        let image =
+            meta::encode(&HashMap::new(), &files, 1, 2, journal::max_image_len(seg)).unwrap();
+        journal::write_slot(&ssd, seg, 8, &image).unwrap();
+        assert!(matches!(
+            DpuFs::mount_with_report(ssd, cfg),
+            Err(FsError::Corrupt(_))
+        ));
+    }
+
+    /// A CRC-valid but semantically corrupt journal record must fail
+    /// the mount WITHOUT mutating the device: validation runs before
+    /// the roll-forward repair, so retried mounts can't burn journal
+    /// space or stamp the corrupt image into a superblock slot.
+    #[test]
+    fn failing_mount_never_mutates_the_device() {
+        let cfg = FsConfig::default();
+        let seg = cfg.segment_size;
+        let ssd = Arc::new(Ssd::new(64 << 20, 512));
+        let mut fs = DpuFs::format(ssd.clone(), cfg.clone()).unwrap();
+        fs.create_directory("d").unwrap();
+        fs.sync_metadata().unwrap(); // seq 2 committed
+        let mut dirs = HashMap::new();
+        dirs.insert(DirId(1), "d".to_string());
+        let mut files = HashMap::new();
+        for id in [7u32, 8u32] {
+            files.insert(
+                FileId(id),
+                FileMeta {
+                    id: FileId(id),
+                    dir: DirId(1),
+                    name: format!("f{id}"),
+                    size: 10,
+                    segments: vec![3], // both claim segment 3
+                },
+            );
+        }
+        let image = meta::encode(&dirs, &files, 2, 9, journal::max_image_len(seg)).unwrap();
+        let mut off = fs.journal_off;
+        journal::append(&ssd, seg, &mut off, journal::JOURNAL_DATA_MAGIC, 3, &image).unwrap();
+        drop(fs);
+        let mut before = vec![0u8; 2 * seg as usize];
+        ssd.read_into(0, &mut before).unwrap();
+        for _ in 0..3 {
+            assert!(matches!(
+                DpuFs::mount_with_report(ssd.clone(), cfg.clone()),
+                Err(FsError::Corrupt(_))
+            ));
+        }
+        let mut after = vec![0u8; 2 * seg as usize];
+        ssd.read_into(0, &mut after).unwrap();
+        assert_eq!(before, after, "failed mounts must not write to the device");
     }
 }

@@ -22,6 +22,11 @@
 //! * **File-service poll groups** — a group can be stalled for N
 //!   service iterations
 //!   ([`crate::fileservice::ControlMsg::InjectGroupStall`]).
+//! * **The power rail** ([`FaultSite::PowerCut`], consumed by
+//!   [`crate::ssd::Ssd::arm_power_cut`]) — one device write is torn
+//!   after a seed-chosen byte count and the device stays dead until
+//!   "reboot", exercising the metadata journal's crash recovery
+//!   ([`scenario::crash_recovery`]).
 //!
 //! Every probabilistic decision comes from a per-site
 //! [`crate::sim::Rng`] stream derived from the plane's seed, and every
@@ -33,7 +38,7 @@
 
 pub mod scenario;
 
-pub use scenario::{run_scenario, Scenario, ScenarioReport};
+pub use scenario::{crash_recovery, run_scenario, CrashRecoveryReport, Scenario, ScenarioReport};
 
 use std::sync::{Arc, Mutex};
 
@@ -54,6 +59,10 @@ pub enum FaultSite {
     Engine(usize),
     /// File-service poll group `i`.
     PollGroup(usize),
+    /// The shared SSD's power rail: a deterministic power cut tears one
+    /// device write after N bytes and kills the device until reboot
+    /// ([`crate::ssd::Ssd::arm_power_cut`]).
+    PowerCut,
 }
 
 impl FaultSite {
@@ -67,6 +76,7 @@ impl FaultSite {
             }
             FaultSite::Engine(i) => 0x4_0000 + i as u64,
             FaultSite::PollGroup(i) => 0x5_0000 + i as u64,
+            FaultSite::PowerCut => 0x6_0000,
         }
     }
 }
@@ -92,6 +102,9 @@ pub enum FaultAction {
     EngineRestore,
     /// Poll group stalled for N service iterations.
     GroupStall(u32),
+    /// Power cut during device write `write` (0-based since arm),
+    /// persisting only its first `cut` bytes.
+    PowerCut { write: u64, cut: u32 },
 }
 
 /// One recorded injection: the `op`-th decision at `site` chose
@@ -242,6 +255,14 @@ impl FaultPlane {
             op: 0,
             log: self.log.clone(),
         }
+    }
+
+    /// A deterministic RNG stream for `site` — for scheduled injections
+    /// whose *parameters* (not just occurrence) derive from the seed,
+    /// e.g. the power-cut write index and byte offset in the
+    /// crash-recovery scenario.
+    pub fn site_rng(&self, site: FaultSite) -> Rng {
+        Rng::new(derive_seed(self.cfg.seed, site.code()))
     }
 
     /// Record a scheduled (non-probabilistic) injection — engine

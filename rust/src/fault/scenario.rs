@@ -19,6 +19,13 @@
 //! The returned [`ScenarioReport`] carries the canonical fault
 //! schedule and the per-request outcome trace, which is what the
 //! determinism suite replays (`rust/tests/chaos_determinism.rs`).
+//!
+//! [`crash_recovery`] is a separate scenario shape: instead of a
+//! request workload it drives a seeded metadata op sequence, cuts
+//! device power mid-write at a seed-chosen `(write, byte)` point,
+//! and asserts the durability plane's contract — post-cut ops surface
+//! as clean bounded errors, and a remount recovers exactly the state
+//! committed by the metadata journal.
 
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -31,6 +38,8 @@ use crate::coordinator::{
     StorageServerConfig,
 };
 use crate::director::{AppSignature, DirectorShardStats};
+use crate::dpufs::RecoveryReport;
+use crate::filelib::{DdsClient, DdsFile, PollGroup};
 use crate::fileservice::{FileServiceConfig, GroupCounters};
 use crate::net::FiveTuple;
 use crate::offload::{OffloadEngineConfig, RawFileOffload};
@@ -538,4 +547,438 @@ fn pump_conn(
         }
     }
     Ok(())
+}
+
+// ---------------------------------------------------------------------
+// crash_recovery: seeded power-cut + remount scenario
+// ---------------------------------------------------------------------
+
+/// Segment size of the crash-recovery scenario's device (small, so the
+/// metadata images and the journal stay byte-cheap).
+const CRASH_SEG: u64 = 1 << 17;
+const CRASH_SSD_BYTES: u64 = 8 << 20;
+/// Metadata/data ops the scenario drives before the cut window closes.
+const CRASH_OPS: usize = 20;
+
+/// What the crash-recovery scenario observed.
+#[derive(Debug)]
+pub struct CrashRecoveryReport {
+    pub seed: u64,
+    /// The cut point: the op run's `cut_write`-th device write (0-based
+    /// from arming) persisted only its first `cut_bytes` bytes.
+    pub cut_write: u64,
+    pub cut_bytes: usize,
+    /// Control-plane metadata ops acknowledged (durably synced) before
+    /// the cut.
+    pub ops_acked: u64,
+    /// Ops that surfaced the dead device as a clean error — ERR
+    /// completion or control-call error, never a hang or panic.
+    pub ops_failed: u64,
+    /// What mount-time recovery found and repaired.
+    pub recovery: RecoveryReport,
+    /// Files visible after recovery.
+    pub recovered_files: usize,
+    /// Canonical fault schedule (the power-cut injection).
+    pub schedule: Vec<FaultEvent>,
+    pub elapsed: Duration,
+}
+
+/// In-memory model of the committed metadata state (what a sync at
+/// that moment would persist). Shared with the crash-point enumeration
+/// harness (`rust/tests/crash_recovery.rs`) so both check recovery
+/// against one verifier ([`verify_recovered_fs`]).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct MetaModel {
+    /// Directory names in creation order (mount lists by id, which is
+    /// creation order).
+    pub dirs: Vec<String>,
+    /// `(dir, name, size)` per live file.
+    pub files: Vec<(String, String, u64)>,
+}
+
+/// The deterministic op driver shared by the scout and chaos passes.
+struct CrashOps {
+    rng: Rng,
+    fe: DdsClient,
+    group: Arc<PollGroup>,
+    /// Live files: handle + model coordinates.
+    files: Vec<(DdsFile, String, String, u64)>,
+    model: MetaModel,
+    /// `(seq, model)` snapshots: seq 1 is the formatted-empty state,
+    /// then one per *attempted* control-plane op (each control op
+    /// attempts sequence `acked_seq + 1`).
+    snapshots: Vec<(u64, MetaModel)>,
+    acked: u64,
+    acked_seq: u64,
+    failed: u64,
+    /// First device error seen: the device is dead, nothing later can
+    /// reach the medium — freeze the model.
+    dead: bool,
+}
+
+impl CrashOps {
+    fn new(seed: u64, storage: &StorageServer) -> anyhow::Result<Self> {
+        let fe = storage.front_end();
+        let group = fe.create_poll().map_err(|e| anyhow::anyhow!("{e}"))?;
+        Ok(CrashOps {
+            rng: Rng::new(seed ^ 0xC4A5_4001),
+            fe,
+            group,
+            files: Vec::new(),
+            model: MetaModel::default(),
+            snapshots: vec![(1, MetaModel::default())],
+            acked: 0,
+            acked_seq: 1,
+            failed: 0,
+            dead: false,
+        })
+    }
+
+    /// Book-keep one control-plane attempt: snapshot the state the op's
+    /// sync would commit, then fold in the outcome.
+    fn control<T>(&mut self, with_op: MetaModel, r: Result<T, crate::filelib::LibError>) -> Option<T> {
+        if !self.dead {
+            self.snapshots.push((self.acked_seq + 1, with_op.clone()));
+        }
+        match r {
+            Ok(v) => {
+                self.model = with_op;
+                self.acked += 1;
+                self.acked_seq += 1;
+                Some(v)
+            }
+            Err(_) => {
+                self.dead = true;
+                self.failed += 1;
+                None
+            }
+        }
+    }
+
+    /// Drive the seeded op mix: create/remove directories, create/
+    /// delete files (control plane, each durably synced), appends and
+    /// explicit grows (data plane / `EnsureSize`).
+    ///
+    /// (This intentionally parallels `apply_ops` in
+    /// `rust/tests/crash_recovery.rs`: same model bookkeeping, but this
+    /// driver exercises the *service* layer — DdsClient control calls +
+    /// poll-group data plane — while the test drives `DpuFs` directly
+    /// to make byte-exhaustive crash enumeration affordable. Both feed
+    /// the one shared [`verify_recovered_fs`].)
+    fn drive(&mut self) -> anyhow::Result<()> {
+        // Deterministic bootstrap: one committed dir + file regardless
+        // of the seed's draw luck, so every branch has a target and the
+        // cut window is never empty.
+        let mut m = self.model.clone();
+        m.dirs.push("d-base".into());
+        let r = self.fe.create_directory("d-base");
+        self.control(m, r);
+        let mut m = self.model.clone();
+        m.files.push(("d-base".into(), "f-base".into(), 0));
+        let r = self.fe.create_file(crate::dpufs::DirId(1), "f-base");
+        if let Some(mut f) = self.control(m, r) {
+            self.fe.poll_add(&mut f, &self.group);
+            self.files.push((f, "d-base".into(), "f-base".into(), 0));
+        }
+
+        for i in 0..CRASH_OPS {
+            match self.rng.next_range(10) {
+                0..=2 => {
+                    let name = format!("d{i}");
+                    let mut m = self.model.clone();
+                    m.dirs.push(name.clone());
+                    let r = self.fe.create_directory(&name);
+                    self.control(m, r);
+                }
+                3..=5 => {
+                    // Create a file in the most recent directory (skip
+                    // until one exists). Directory ids are
+                    // creation-ordered: 1-based index into `model.dirs`.
+                    let Some(pos) = self.model.dirs.len().checked_sub(1) else { continue };
+                    let dir_name = self.model.dirs[pos].clone();
+                    let dir_id = crate::dpufs::DirId((pos + 1) as u32);
+                    let name = format!("f{i}");
+                    let mut m = self.model.clone();
+                    m.files.push((dir_name.clone(), name.clone(), 0));
+                    let r = self.fe.create_file(dir_id, &name);
+                    if let Some(mut f) = self.control(m, r) {
+                        self.fe.poll_add(&mut f, &self.group);
+                        self.files.push((f, dir_name, name, 0));
+                    }
+                }
+                6..=7 => {
+                    // Append a small write (data plane: no sync).
+                    if self.files.is_empty() || self.dead {
+                        continue;
+                    }
+                    let fi = self.rng.next_range(self.files.len() as u64) as usize;
+                    let len = 1 + self.rng.next_range(2000) as usize;
+                    let off = self.files[fi].3;
+                    let data: Vec<u8> = (0..len).map(|j| ((off as usize + j) % 251) as u8).collect();
+                    let issued = self.fe.write_file(&self.files[fi].0, off, &data);
+                    match issued {
+                        Ok(req_id) => {
+                            if wait_event(&self.group, req_id)?.ok {
+                                self.files[fi].3 = off + len as u64;
+                                let (_, ref d, ref n, sz) = self.files[fi];
+                                let entry = self
+                                    .model
+                                    .files
+                                    .iter_mut()
+                                    .find(|(fd, fn_, _)| fd == d && fn_ == n)
+                                    .expect("model tracks every live file");
+                                entry.2 = sz;
+                            } else {
+                                self.dead = true;
+                                self.failed += 1;
+                            }
+                        }
+                        Err(_) => {
+                            self.dead = true;
+                            self.failed += 1;
+                        }
+                    }
+                }
+                8 => {
+                    // Explicit grow (control plane: synced).
+                    if self.files.is_empty() {
+                        continue;
+                    }
+                    let fi = self.rng.next_range(self.files.len() as u64) as usize;
+                    let grow = self.files[fi].3 + 1 + self.rng.next_range(8 << 10);
+                    let mut m = self.model.clone();
+                    let (_, ref d, ref n, _) = self.files[fi];
+                    let entry =
+                        m.files.iter_mut().find(|(fd, fn_, _)| fd == d && fn_ == n).unwrap();
+                    entry.2 = entry.2.max(grow);
+                    let new_size = entry.2;
+                    let handle = &self.files[fi].0;
+                    let r = self.fe.ensure_size(handle, grow);
+                    if self.control(m, r).is_some() {
+                        self.files[fi].3 = new_size;
+                    }
+                }
+                _ => {
+                    // Delete a file (control plane: synced).
+                    if self.files.is_empty() {
+                        continue;
+                    }
+                    let fi = self.rng.next_range(self.files.len() as u64) as usize;
+                    let (f, d, n, _) = self.files.remove(fi);
+                    let mut m = self.model.clone();
+                    m.files.retain(|(fd, fn_, _)| !(fd == &d && fn_ == &n));
+                    self.control(m, self.fe.delete_file(f));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    fn model_at(&self, seq: u64) -> Option<&MetaModel> {
+        self.snapshots.iter().rev().find(|(s, _)| *s == seq).map(|(_, m)| m)
+    }
+}
+
+/// Bounded wait for one data-plane completion on `group` — an op must
+/// resolve OK or ERR within the bound, never hang.
+fn wait_event(
+    group: &Arc<PollGroup>,
+    req_id: u64,
+) -> anyhow::Result<crate::filelib::CompletionEvent> {
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        for ev in group.poll_wait(Duration::from_millis(20)) {
+            if ev.req_id == req_id {
+                return Ok(ev);
+            }
+        }
+        anyhow::ensure!(
+            Instant::now() < deadline,
+            "data-plane completion neither OK nor ERR within bound (hang)"
+        );
+    }
+}
+
+fn crash_storage() -> anyhow::Result<StorageServer> {
+    StorageServer::build(
+        StorageServerConfig {
+            ssd_bytes: CRASH_SSD_BYTES,
+            segment_size: CRASH_SEG,
+            ..Default::default()
+        },
+        None,
+    )
+}
+
+/// The crash-recovery scenario: drive a seeded metadata op sequence
+/// against a full storage server, cut power mid-write at a seed-chosen
+/// `(write, byte)` point, verify every post-cut op surfaces as a clean
+/// bounded error, "reboot" the device, remount through the coordinator
+/// restart path, and check the recovered file system equals the model
+/// at the last committed sequence — with working post-recovery service.
+pub fn crash_recovery(seed: u64) -> anyhow::Result<CrashRecoveryReport> {
+    let started = Instant::now();
+    let plane = FaultPlane::new(FaultConfig { seed, ..Default::default() });
+
+    // Scout pass (fault-free): learn the deterministic write schedule.
+    let trace = {
+        let storage = crash_storage()?;
+        storage.ssd.start_write_trace();
+        let mut ops = CrashOps::new(seed, &storage)?;
+        ops.drive()?;
+        anyhow::ensure!(ops.failed == 0, "scout pass must run fault-free");
+        storage.ssd.take_write_trace()
+    };
+    anyhow::ensure!(!trace.is_empty(), "op sequence issued no device writes");
+
+    // The cut point derives from the seed via the PowerCut site stream.
+    let mut prng = plane.site_rng(FaultSite::PowerCut);
+    let cut_write = prng.next_range(trace.len() as u64);
+    let cut_bytes = prng.next_range(trace[cut_write as usize].1 as u64 + 1) as usize;
+    plane.record(
+        FaultSite::PowerCut,
+        FaultAction::PowerCut { write: cut_write, cut: cut_bytes as u32 },
+    );
+
+    // Chaos pass: same ops, cut armed.
+    let storage = crash_storage()?;
+    let ssd = storage.ssd.clone();
+    ssd.arm_power_cut(cut_write, cut_bytes);
+    let mut ops = CrashOps::new(seed, &storage)?;
+    ops.drive()?;
+    anyhow::ensure!(ops.failed > 0, "the cut must fail at least the op it tears");
+    anyhow::ensure!(ssd.is_dead(), "the armed cut must have fired");
+    drop(storage); // the crash: the server is gone, the medium survives
+
+    // Reboot + remount through the coordinator restart path.
+    ssd.power_restore();
+    let (storage, recovery) = StorageServer::remount(
+        ssd,
+        StorageServerConfig {
+            ssd_bytes: CRASH_SSD_BYTES,
+            segment_size: CRASH_SEG,
+            ..Default::default()
+        },
+        None,
+    )?;
+
+    // Recovery invariants: no committed op lost, nothing from the
+    // future invented, and the state equals the model at the recovered
+    // sequence.
+    anyhow::ensure!(
+        recovery.recovered_seq >= ops.acked_seq,
+        "metadata loss: recovered seq {} < last acked seq {} (seed {seed}, cut {cut_write}/{cut_bytes})",
+        recovery.recovered_seq,
+        ops.acked_seq
+    );
+    anyhow::ensure!(
+        recovery.recovered_seq <= ops.acked_seq + 1,
+        "recovered seq {} past the only attemptable seq {} (seed {seed})",
+        recovery.recovered_seq,
+        ops.acked_seq + 1
+    );
+    let model = ops.model_at(recovery.recovered_seq).ok_or_else(|| {
+        anyhow::anyhow!("recovered seq {} was never attempted (seed {seed})", recovery.recovered_seq)
+    })?;
+    let recovered_files = {
+        let fs = storage.dpufs.read().unwrap();
+        verify_recovered_fs(&fs, model, &format!("seed {seed}"))?
+    };
+
+    // The recovered server must be a fully working storage path.
+    let fe = storage.front_end();
+    let dir = fe.create_directory("post-crash").map_err(|e| anyhow::anyhow!("{e}"))?;
+    let mut f = fe.create_file(dir, "alive").map_err(|e| anyhow::anyhow!("{e}"))?;
+    let group = fe.create_poll().map_err(|e| anyhow::anyhow!("{e}"))?;
+    fe.poll_add(&mut f, &group);
+    let payload: Vec<u8> = (0..1200u32).map(|i| (i % 249) as u8).collect();
+    let wid = fe.write_file(&f, 0, &payload).map_err(|e| anyhow::anyhow!("{e}"))?;
+    anyhow::ensure!(wait_event(&group, wid)?.ok, "post-recovery write failed");
+    let rid = fe.read_file(&f, 0, payload.len() as u32).map_err(|e| anyhow::anyhow!("{e}"))?;
+    let ev = wait_event(&group, rid)?;
+    anyhow::ensure!(ev.ok && ev.data == payload, "post-recovery read not byte-exact");
+
+    Ok(CrashRecoveryReport {
+        seed,
+        cut_write,
+        cut_bytes,
+        ops_acked: ops.acked,
+        ops_failed: ops.failed,
+        recovery,
+        recovered_files,
+        schedule: plane.schedule(),
+        elapsed: started.elapsed(),
+    })
+}
+
+/// Compare a recovered file system against the committed model; also
+/// check the allocation invariants (segment uniqueness/range, bitmap
+/// accounting, file-mapping lengths, id-counter safety). Returns the
+/// live file count. The ONE recovery verifier — used here and by the
+/// crash-point enumeration harness (`rust/tests/crash_recovery.rs`).
+pub fn verify_recovered_fs(
+    fs: &crate::dpufs::DpuFs,
+    model: &MetaModel,
+    ctx: &str,
+) -> anyhow::Result<usize> {
+    let dirs = fs.list_dirs();
+    let got_dirs: Vec<String> = dirs.iter().map(|(_, n)| n.to_string()).collect();
+    anyhow::ensure!(
+        got_dirs == model.dirs,
+        "{ctx}: recovered dirs {got_dirs:?} != model {:?}",
+        model.dirs
+    );
+    let mut got_files: Vec<(String, String, u64)> = Vec::new();
+    let mut seen_segments = std::collections::HashSet::new();
+    let mut total_segments = 0usize;
+    let mut max_file_id = 0u32;
+    let mut max_dir_id = 0u32;
+    for (dir_id, dir_name) in &dirs {
+        max_dir_id = max_dir_id.max(dir_id.0);
+        for meta in fs.list_dir(*dir_id) {
+            got_files.push((dir_name.to_string(), meta.name.clone(), meta.size));
+            max_file_id = max_file_id.max(meta.id.0);
+            anyhow::ensure!(
+                meta.segments.len() as u64 == meta.size.div_ceil(fs.segment_size()),
+                "{ctx}: file {:?} maps {} segments for {} bytes",
+                meta.name,
+                meta.segments.len(),
+                meta.size
+            );
+            for &s in &meta.segments {
+                anyhow::ensure!(
+                    (s as usize) >= crate::dpufs::RESERVED_SEGMENTS
+                        && (s as usize) < fs.num_segments(),
+                    "{ctx}: segment {s} out of range / reserved"
+                );
+                anyhow::ensure!(
+                    seen_segments.insert(s),
+                    "{ctx}: segment {s} double-allocated"
+                );
+                total_segments += 1;
+            }
+        }
+    }
+    let mut want: Vec<(String, String, u64)> = model.files.clone();
+    want.sort();
+    got_files.sort();
+    anyhow::ensure!(
+        got_files == want,
+        "{ctx}: recovered files {got_files:?} != model {want:?}"
+    );
+    anyhow::ensure!(
+        fs.free_segments()
+            == fs.num_segments() - crate::dpufs::RESERVED_SEGMENTS - total_segments,
+        "{ctx}: bitmap accounting broken"
+    );
+    let (next_dir, next_file) = fs.counters();
+    anyhow::ensure!(
+        next_file > max_file_id,
+        "{ctx}: next_file {next_file} could reuse live id {max_file_id}"
+    );
+    anyhow::ensure!(
+        next_dir > max_dir_id,
+        "{ctx}: next_dir {next_dir} could reuse live id {max_dir_id}"
+    );
+    Ok(got_files.len())
 }

@@ -169,6 +169,15 @@ pub struct FileServiceConfig {
     /// Read-completion size class in bytes (the common read size;
     /// larger reads fall back, counted).
     pub read_pool_slot_size: usize,
+    /// Durability policy: run the crash-consistent metadata sync
+    /// (journal append → shadow superblock → commit) after every
+    /// *control-plane* metadata mutation (create/remove directory,
+    /// create/delete file, explicit `EnsureSize`). A mutation whose
+    /// sync fails is surfaced to the caller as that error — applied in
+    /// memory, but not yet durable. The data-plane write path never
+    /// syncs: growth from writes becomes durable at the next
+    /// control-plane op or an explicit `SyncMetadata`.
+    pub durable_metadata: bool,
 }
 
 impl Default for FileServiceConfig {
@@ -193,6 +202,7 @@ impl Default for FileServiceConfig {
             pool_slot_size: 256 << 10,
             read_pool_slots: 256,
             read_pool_slot_size: 64 << 10,
+            durable_metadata: true,
         }
     }
 }
@@ -341,23 +351,23 @@ impl FileService {
             did = true;
             match msg {
                 ControlMsg::CreateDirectory { name, reply } => {
-                    let r = self.dpufs.write().unwrap().create_directory(&name);
+                    let r = self.mutate(|fs| fs.create_directory(&name));
                     let _ = reply.send(r);
                 }
                 ControlMsg::RemoveDirectory { dir, reply } => {
-                    let r = self.dpufs.write().unwrap().remove_directory(dir);
+                    let r = self.mutate(|fs| fs.remove_directory(dir));
                     let _ = reply.send(r);
                 }
                 ControlMsg::CreateFile { dir, name, reply } => {
-                    let r = self.dpufs.write().unwrap().create_file(dir, &name);
+                    let r = self.mutate(|fs| fs.create_file(dir, &name));
                     let _ = reply.send(r);
                 }
                 ControlMsg::DeleteFile { file, reply } => {
-                    let r = self.dpufs.write().unwrap().delete_file(file);
+                    let r = self.mutate(|fs| fs.delete_file(file));
                     let _ = reply.send(r);
                 }
                 ControlMsg::EnsureSize { file, size, reply } => {
-                    let r = self.dpufs.write().unwrap().ensure_size(file, size);
+                    let r = self.mutate(|fs| fs.ensure_size(file, size));
                     let _ = reply.send(r);
                 }
                 ControlMsg::FileSize { file, reply } => {
@@ -406,6 +416,40 @@ impl FileService {
             }
         }
         did
+    }
+
+    /// Run a control-plane metadata mutation under the durability
+    /// policy: apply + sync (journal → superblock → commit), or
+    /// neither. If the sync fails — a dead device after a power cut, or
+    /// an image grown past the superblock slot's capacity — the
+    /// in-memory mutation is ROLLED BACK before the error surfaces, so
+    /// a refused op can never be silently persisted by a later op's
+    /// successful sync.
+    fn mutate<T>(
+        &self,
+        op: impl FnOnce(&mut DpuFs) -> Result<T, FsError>,
+    ) -> Result<T, FsError> {
+        let mut fs = self.dpufs.write().unwrap();
+        if !self.cfg.durable_metadata {
+            return op(&mut fs);
+        }
+        let snapshot = fs.meta_snapshot();
+        match op(&mut fs) {
+            Ok(v) => {
+                if let Err(e) = fs.sync_metadata() {
+                    fs.restore_snapshot(snapshot);
+                    return Err(e);
+                }
+                Ok(v)
+            }
+            Err(e) => {
+                // DpuFs ops are atomic-on-failure themselves; restoring
+                // anyway makes "apply + sync, or neither" independent of
+                // that property staying true for every future op.
+                fs.restore_snapshot(snapshot);
+                Err(e)
+            }
+        }
     }
 
     /// Drain request rings; submit I/O with pre-allocated responses.

@@ -7,8 +7,10 @@
 //! workloads, and calibration constants:
 //!
 //! * **Functional plane** — real bytes end to end: the progress-pointer
-//!   DMA ring buffers ([`ring`]), the DPU flat file system ([`dpufs`]) over
-//!   an in-memory NVMe model ([`ssd`]), the host file library ([`filelib`])
+//!   DMA ring buffers ([`ring`]), the DPU flat file system ([`dpufs`])
+//!   with its crash-consistent metadata journal ([`dpufs::journal`]) over
+//!   an in-memory NVMe model ([`ssd`]) with torn-write power-cut
+//!   injection, the host file library ([`filelib`])
 //!   and DPU file service ([`fileservice`]), the sequenced-transport
 //!   network with a TCP-splitting PEP ([`net`], [`director`]), the offload
 //!   engine with its context ring and user-supplied offload logic

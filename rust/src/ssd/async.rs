@@ -468,6 +468,29 @@ mod tests {
         assert_eq!(pool.in_use(), 0, "dropping the completion returns it");
     }
 
+    /// The torn-write power cut injects at the device layer, so the
+    /// SPDK-like facade surfaces it as failed completions — the shape
+    /// the file service's staging machinery turns into ERR responses.
+    #[test]
+    fn power_cut_propagates_through_async_facade() {
+        let ssd = Arc::new(Ssd::new(1 << 20, 512));
+        let aio = AsyncSsd::new_inline(ssd.clone());
+        ssd.arm_power_cut(0, 100);
+        aio.submit(1, SsdOp::Write { addr: 0, data: vec![1u8; 512].into() });
+        aio.submit(2, SsdOp::Read { addr: 0, len: 64 });
+        let done = aio.poll(8);
+        assert_eq!(done.len(), 2);
+        assert_eq!(done[0].result, Err(SsdError::PowerLost));
+        assert_eq!(done[1].result, Err(SsdError::PowerLost));
+        assert!(done[1].data.is_empty(), "failed read must not ship a buffer");
+        // After reboot, exactly the torn prefix survived.
+        ssd.power_restore();
+        let mut buf = vec![0u8; 512];
+        ssd.read_into(0, &mut buf).unwrap();
+        assert!(buf[..100].iter().all(|&b| b == 1), "torn prefix landed");
+        assert!(buf[100..].iter().all(|&b| b == 0), "bytes past the cut never landed");
+    }
+
     #[test]
     fn errors_propagate() {
         let ssd = Arc::new(Ssd::new(4096, 512));

@@ -18,7 +18,8 @@ mod r#async;
 
 pub use r#async::{AsyncSsd, Completion, SsdOp};
 
-use std::sync::RwLock;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Mutex, RwLock};
 
 /// Errors surfaced by the device.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -27,6 +28,10 @@ pub enum SsdError {
     /// The fault-injection plane failed this op
     /// ([`crate::fault::SsdFault::Fail`]).
     Injected,
+    /// The fault plane cut power ([`Ssd::arm_power_cut`]): the armed
+    /// write persisted only a prefix of its bytes and every op until
+    /// [`Ssd::power_restore`] fails with this error.
+    PowerLost,
 }
 
 impl std::fmt::Display for SsdError {
@@ -36,17 +41,35 @@ impl std::fmt::Display for SsdError {
                 write!(f, "I/O out of range: addr={addr} len={len} capacity={capacity}")
             }
             SsdError::Injected => write!(f, "injected fault"),
+            SsdError::PowerLost => write!(f, "power lost"),
         }
     }
 }
 
 impl std::error::Error for SsdError {}
 
+/// Power-cut / write-trace state behind [`Ssd::arm_power_cut`].
+#[derive(Default)]
+struct PowerInner {
+    /// `(write index since arm, bytes that persist)` — the pending cut.
+    cut: Option<(u64, usize)>,
+    /// Writes seen since the last arm / trace start.
+    writes_seen: u64,
+    /// `(addr, len)` per write while tracing (crash-point enumeration).
+    trace: Option<Vec<(u64, usize)>>,
+}
+
 /// In-memory NVMe-like block device.
 pub struct Ssd {
     data: RwLock<Box<[u8]>>,
     block_size: usize,
     capacity: u64,
+    /// Power is out: every op fails until [`Self::power_restore`].
+    dead: AtomicBool,
+    /// A cut is armed or a trace is running (gates the write slow
+    /// path, so the uninstrumented hot path never takes `power`).
+    power_hook: AtomicBool,
+    power: Mutex<PowerInner>,
 }
 
 impl Ssd {
@@ -58,7 +81,73 @@ impl Ssd {
             data: RwLock::new(vec![0u8; capacity as usize].into_boxed_slice()),
             block_size,
             capacity,
+            dead: AtomicBool::new(false),
+            power_hook: AtomicBool::new(false),
+            power: Mutex::new(PowerInner::default()),
         }
+    }
+
+    /// Arm a deterministic power cut: counting from now, the
+    /// `cut_write`-th write (0-based) persists only its first
+    /// `cut_bytes` bytes — a torn write — and then the device goes dead
+    /// (every subsequent op fails with [`SsdError::PowerLost`]) until
+    /// [`Self::power_restore`]. `cut_bytes >=` the write's length
+    /// means the write completes and power dies right after it.
+    pub fn arm_power_cut(&self, cut_write: u64, cut_bytes: usize) {
+        let mut p = self.power.lock().unwrap();
+        p.cut = Some((cut_write, cut_bytes));
+        p.writes_seen = 0;
+        self.dead.store(false, Ordering::SeqCst);
+        self.power_hook.store(true, Ordering::SeqCst);
+    }
+
+    /// Power the device back on (the reboot before a remount). The
+    /// bytes that survived the cut stay exactly as they landed.
+    pub fn power_restore(&self) {
+        let mut p = self.power.lock().unwrap();
+        p.cut = None;
+        self.dead.store(false, Ordering::SeqCst);
+        self.power_hook.store(p.trace.is_some(), Ordering::SeqCst);
+    }
+
+    /// Whether an armed cut has fired and the device is off.
+    pub fn is_dead(&self) -> bool {
+        self.dead.load(Ordering::SeqCst)
+    }
+
+    /// Start recording `(addr, len)` of every subsequent write — the
+    /// scout pass of crash-point enumeration.
+    pub fn start_write_trace(&self) {
+        let mut p = self.power.lock().unwrap();
+        p.trace = Some(Vec::new());
+        p.writes_seen = 0;
+        self.power_hook.store(true, Ordering::SeqCst);
+    }
+
+    /// Stop tracing and return the recorded write schedule.
+    pub fn take_write_trace(&self) -> Vec<(u64, usize)> {
+        let mut p = self.power.lock().unwrap();
+        let t = p.trace.take().unwrap_or_default();
+        self.power_hook.store(p.cut.is_some(), Ordering::SeqCst);
+        t
+    }
+
+    /// Count/trace this write; `Some(n)` means it is the armed cut and
+    /// only its first `n` bytes persist.
+    fn power_gate(&self, addr: u64, len: usize) -> Option<usize> {
+        let mut p = self.power.lock().unwrap();
+        let w = p.writes_seen;
+        p.writes_seen += 1;
+        if let Some(t) = p.trace.as_mut() {
+            t.push((addr, len));
+        }
+        if let Some((cut_w, cut_b)) = p.cut {
+            if w == cut_w {
+                self.dead.store(true, Ordering::SeqCst);
+                return Some(cut_b.min(len));
+            }
+        }
+        None
     }
 
     pub fn capacity(&self) -> u64 {
@@ -81,6 +170,9 @@ impl Ssd {
     /// pre-allocated response space).
     pub fn read_into(&self, addr: u64, buf: &mut [u8]) -> Result<(), SsdError> {
         self.check(addr, buf.len())?;
+        if self.dead.load(Ordering::Relaxed) {
+            return Err(SsdError::PowerLost);
+        }
         let data = self.data.read().unwrap();
         buf.copy_from_slice(&data[addr as usize..addr as usize + buf.len()]);
         Ok(())
@@ -90,6 +182,18 @@ impl Ssd {
     /// the request buffer — no staging copy).
     pub fn write_from(&self, addr: u64, buf: &[u8]) -> Result<(), SsdError> {
         self.check(addr, buf.len())?;
+        if self.dead.load(Ordering::Relaxed) {
+            return Err(SsdError::PowerLost);
+        }
+        if self.power_hook.load(Ordering::Relaxed) {
+            if let Some(n) = self.power_gate(addr, buf.len()) {
+                // Torn write: the first `n` bytes land, the rest never
+                // make it to the medium.
+                let mut data = self.data.write().unwrap();
+                data[addr as usize..addr as usize + n].copy_from_slice(&buf[..n]);
+                return Err(SsdError::PowerLost);
+            }
+        }
         let mut data = self.data.write().unwrap();
         data[addr as usize..addr as usize + buf.len()].copy_from_slice(buf);
         Ok(())
@@ -125,5 +229,52 @@ mod tests {
         let mut buf = [0xffu8; 128];
         ssd.read_into(0, &mut buf).unwrap();
         assert!(buf.iter().all(|&b| b == 0));
+    }
+
+    #[test]
+    fn power_cut_tears_the_armed_write_and_kills_the_device() {
+        let ssd = Ssd::new(1 << 16, 512);
+        ssd.write_from(0, &[1u8; 64]).unwrap();
+        // Cut the second write (index 1, counting from arm) at 10 bytes.
+        ssd.arm_power_cut(1, 10);
+        ssd.write_from(100, &[2u8; 32]).unwrap();
+        assert_eq!(ssd.write_from(200, &[3u8; 32]), Err(SsdError::PowerLost));
+        assert!(ssd.is_dead());
+        // Dead device: everything fails.
+        assert_eq!(ssd.write_from(0, &[4u8; 8]), Err(SsdError::PowerLost));
+        assert_eq!(ssd.read_into(0, &mut [0u8; 8]), Err(SsdError::PowerLost));
+        // Reboot: surviving bytes are exactly the torn prefix.
+        ssd.power_restore();
+        let mut buf = [0u8; 32];
+        ssd.read_into(200, &mut buf).unwrap();
+        assert_eq!(&buf[..10], &[3u8; 10]);
+        assert!(buf[10..].iter().all(|&b| b == 0), "bytes past the cut never landed");
+        ssd.read_into(100, &mut buf).unwrap();
+        assert_eq!(buf, [2u8; 32], "write before the cut is intact");
+        // Power restored and the cut disarmed: writes work again.
+        ssd.write_from(300, &[5u8; 8]).unwrap();
+    }
+
+    #[test]
+    fn cut_at_full_length_completes_the_write_then_dies() {
+        let ssd = Ssd::new(1 << 16, 512);
+        ssd.arm_power_cut(0, usize::MAX);
+        assert_eq!(ssd.write_from(0, &[7u8; 16]), Err(SsdError::PowerLost));
+        ssd.power_restore();
+        let mut buf = [0u8; 16];
+        ssd.read_into(0, &mut buf).unwrap();
+        assert_eq!(buf, [7u8; 16]);
+    }
+
+    #[test]
+    fn write_trace_records_the_schedule() {
+        let ssd = Ssd::new(1 << 16, 512);
+        ssd.write_from(0, &[0u8; 8]).unwrap(); // pre-trace: not recorded
+        ssd.start_write_trace();
+        ssd.write_from(512, &[1u8; 100]).unwrap();
+        ssd.write_from(4096, &[2u8; 7]).unwrap();
+        assert_eq!(ssd.take_write_trace(), vec![(512, 100), (4096, 7)]);
+        // Trace consumed; a second take is empty.
+        assert!(ssd.take_write_trace().is_empty());
     }
 }

@@ -4,7 +4,7 @@
 //! Every scenario is fully seeded. To reproduce a CI run, set
 //! `DDS_CHAOS_SEED=<seed>` (each test prints the seed it used).
 
-use dds::fault::{run_scenario, FaultAction, Scenario};
+use dds::fault::{crash_recovery, run_scenario, FaultAction, Scenario};
 
 #[path = "chaos_common.rs"]
 mod chaos_common;
@@ -99,6 +99,45 @@ fn group_stall_delays_but_loses_nothing() {
         assert_eq!(gc.delivered, gc.requests, "group {g} drained its backlog");
         assert_eq!(gc.outstanding, 0);
     }
+}
+
+/// The durability-plane scenario: a seed-chosen power cut tears one
+/// device write mid-metadata-op; every later op surfaces as a clean
+/// bounded error; the remount recovers exactly the committed state and
+/// serves traffic again. (`crash_recovery` itself enforces the model
+/// equality, allocation and counter invariants, and the post-recovery
+/// write/read roundtrip — a returned report means they all held.)
+#[test]
+fn crash_recovery_scenario_recovers_committed_state() {
+    let seed = chaos_seed();
+    let r = crash_recovery(seed).expect("crash_recovery scenario");
+    assert!(
+        r.schedule.iter().any(|e| matches!(e.action, FaultAction::PowerCut { .. })),
+        "the power cut must appear in the canonical schedule"
+    );
+    assert!(r.ops_failed > 0, "the torn op must surface as an error");
+    assert!(
+        r.recovery.recovered_seq >= 1 + r.ops_acked,
+        "every acked metadata op must survive the crash"
+    );
+    // Same seed ⇒ same cut point, same outcome counts, same recovery.
+    let r2 = crash_recovery(seed).expect("crash_recovery replay");
+    assert_eq!((r.cut_write, r.cut_bytes), (r2.cut_write, r2.cut_bytes), "cut not seeded");
+    assert_eq!((r.ops_acked, r.ops_failed), (r2.ops_acked, r2.ops_failed));
+    assert_eq!(r.recovery, r2.recovery, "recovery not deterministic");
+    println!(
+        "crash_recovery(seed={}): cut at write {} byte {}, {} acked / {} failed, \
+         recovered seq {} (rolled_forward={}) with {} files in {:?}",
+        r.seed,
+        r.cut_write,
+        r.cut_bytes,
+        r.ops_acked,
+        r.ops_failed,
+        r.recovery.recovered_seq,
+        r.recovery.rolled_forward,
+        r.recovered_files,
+        r.elapsed
+    );
 }
 
 #[test]

@@ -1,0 +1,404 @@
+//! Crash-point enumeration harness — the acceptance test of the
+//! durability plane.
+//!
+//! A seeded metadata op sequence (create/delete/write/grow, each
+//! metadata op followed by the crash-consistent sync) is first run
+//! clean while tracing every device write. Then **every SSD-write
+//! prefix** of that schedule becomes a crash point: for each write `k`
+//! and each byte offset `n` within it, a fresh run is cut at exactly
+//! `(k, n)` — the write persists only its first `n` bytes and the
+//! device dies — and the image is remounted. The invariants, at every
+//! single point:
+//!
+//! * `mount` succeeds — no panic, no `Corrupt` rejection;
+//! * the recovered file system equals the in-memory model at the last
+//!   committed sequence (no metadata loss: every acked sync survives;
+//!   nothing uncommitted is invented);
+//! * no segment is double-allocated or out of range, the bitmap
+//!   accounting balances, and the id counters cannot reuse a live id;
+//! * a re-crash *during recovery's own repair writes* recovers to the
+//!   identical state (idempotent replay).
+//!
+//! `DDS_CRASH_STRIDE` (default 1 = every byte) coarsens the byte
+//! enumeration for quick local runs; `DDS_CHAOS_SEED` picks the op
+//! sequence.
+
+use std::sync::Arc;
+
+use dds::dpufs::{DirId, DpuFs, FileId, FsConfig, RecoveryReport};
+use dds::fault::scenario::{verify_recovered_fs, MetaModel};
+use dds::sim::Rng;
+use dds::ssd::Ssd;
+
+#[path = "chaos_common.rs"]
+mod chaos_common;
+use chaos_common::chaos_seed;
+
+/// Small segments keep every metadata image (and therefore every crash
+/// point's replay) byte-cheap while still exercising multi-extent I/O.
+const SEG: u64 = 1 << 13;
+const SSD_BYTES: u64 = 512 << 10; // 64 segments
+const OPS: usize = 12;
+
+fn cfg() -> FsConfig {
+    FsConfig { segment_size: SEG }
+}
+
+fn stride() -> usize {
+    std::env::var("DDS_CRASH_STRIDE")
+        .ok()
+        .and_then(|s| s.trim().parse().ok())
+        .filter(|&s| s >= 1)
+        .unwrap_or(1)
+}
+
+struct Run {
+    /// `(seq, model)` per attempted sync; seq 1 = formatted-empty.
+    /// The model is the scenario harness's [`MetaModel`], so both
+    /// suites check recovery through one verifier.
+    snapshots: Vec<(u64, MetaModel)>,
+    /// Highest sequence whose sync returned Ok.
+    acked_seq: u64,
+}
+
+impl Run {
+    fn model_at(&self, seq: u64) -> Option<&MetaModel> {
+        self.snapshots.iter().rev().find(|(s, _)| *s == seq).map(|(_, m)| m)
+    }
+}
+
+/// Apply the seeded op sequence to a freshly formatted fs, mirroring
+/// the file service's durability policy (sync after every metadata op;
+/// data-plane writes don't sync). Stops at the first device error —
+/// that is the armed power cut firing; in-memory-only ops can't fail.
+fn apply_ops(fs: &mut DpuFs, seed: u64) -> Run {
+    let mut rng = Rng::new(seed ^ 0xC4A5_4002);
+    let mut model = MetaModel::default();
+    let mut dir_ids: Vec<DirId> = Vec::new();
+    let mut live: Vec<(FileId, String, String, u64)> = Vec::new();
+    let mut snapshots = vec![(1u64, MetaModel::default())];
+    let mut acked_seq = 1u64;
+
+    // Deterministic bootstrap: one committed dir + file regardless of
+    // the seed's draw luck, so every op branch has a target and a quiet
+    // seed can never produce an empty cut window (which would trip the
+    // harness asserts, not the durability plane).
+    for boot in 0..2 {
+        let mut m = model.clone();
+        if boot == 0 {
+            dir_ids.push(fs.create_directory("d-base").expect("fresh fs"));
+            m.dirs.push("d-base".into());
+        } else {
+            let id = fs.create_file(dir_ids[0], "f-base").expect("fresh fs");
+            live.push((id, "d-base".into(), "f-base".into(), 0));
+            m.files.push(("d-base".into(), "f-base".into(), 0));
+        }
+        snapshots.push((acked_seq + 1, m.clone()));
+        if fs.sync_metadata().is_err() {
+            return Run { snapshots, acked_seq };
+        }
+        model = m;
+        acked_seq += 1;
+    }
+
+    for i in 0..OPS {
+        match rng.next_range(10) {
+            0..=2 => {
+                let name = format!("d{i}");
+                dir_ids.push(fs.create_directory(&name).expect("unique dir name"));
+                let mut m = model.clone();
+                m.dirs.push(name);
+                snapshots.push((acked_seq + 1, m.clone()));
+                if fs.sync_metadata().is_err() {
+                    return Run { snapshots, acked_seq };
+                }
+                model = m;
+                acked_seq += 1;
+            }
+            3..=5 => {
+                let Some(&dir) = dir_ids.last() else { continue };
+                let dname = model.dirs.last().expect("dir_ids tracks model.dirs").clone();
+                let name = format!("f{i}");
+                let id = fs.create_file(dir, &name).expect("unique file name");
+                live.push((id, dname.clone(), name.clone(), 0));
+                let mut m = model.clone();
+                m.files.push((dname, name, 0));
+                snapshots.push((acked_seq + 1, m.clone()));
+                if fs.sync_metadata().is_err() {
+                    return Run { snapshots, acked_seq };
+                }
+                model = m;
+                acked_seq += 1;
+            }
+            6..=7 => {
+                // Data-plane append: device writes, no metadata sync.
+                if live.is_empty() {
+                    continue;
+                }
+                let fi = rng.next_range(live.len() as u64) as usize;
+                let len = 1 + rng.next_range(48) as usize;
+                let off = live[fi].3;
+                let data: Vec<u8> =
+                    (0..len).map(|j| ((off as usize + j) % 251) as u8).collect();
+                if fs.write(live[fi].0, off, &data).is_err() {
+                    return Run { snapshots, acked_seq };
+                }
+                live[fi].3 = off + len as u64;
+                let (_, ref d, ref n, sz) = live[fi];
+                let e = model
+                    .files
+                    .iter_mut()
+                    .find(|(fd, fnm, _)| fd == d && fnm == n)
+                    .expect("model tracks every live file");
+                e.2 = sz;
+            }
+            8 => {
+                // Explicit grow — a metadata op: synced.
+                if live.is_empty() {
+                    continue;
+                }
+                let fi = rng.next_range(live.len() as u64) as usize;
+                let grow = live[fi].3 + 1 + rng.next_range(SEG);
+                fs.ensure_size(live[fi].0, grow).expect("growth stays within the device");
+                live[fi].3 = live[fi].3.max(grow);
+                let mut m = model.clone();
+                {
+                    let (_, ref d, ref n, _) = live[fi];
+                    let e = m
+                        .files
+                        .iter_mut()
+                        .find(|(fd, fnm, _)| fd == d && fnm == n)
+                        .expect("model tracks every live file");
+                    e.2 = e.2.max(grow);
+                }
+                snapshots.push((acked_seq + 1, m.clone()));
+                if fs.sync_metadata().is_err() {
+                    return Run { snapshots, acked_seq };
+                }
+                model = m;
+                acked_seq += 1;
+            }
+            _ => {
+                if live.is_empty() {
+                    continue;
+                }
+                let fi = rng.next_range(live.len() as u64) as usize;
+                let (id, d, n, _) = live.remove(fi);
+                fs.delete_file(id).expect("live file");
+                let mut m = model.clone();
+                m.files.retain(|(fd, fnm, _)| !(fd == &d && fnm == &n));
+                snapshots.push((acked_seq + 1, m.clone()));
+                if fs.sync_metadata().is_err() {
+                    return Run { snapshots, acked_seq };
+                }
+                model = m;
+                acked_seq += 1;
+            }
+        }
+    }
+    Run { snapshots, acked_seq }
+}
+
+/// Full recovered-state check through the ONE shared verifier
+/// (`dds::fault::scenario::verify_recovered_fs`): model equality +
+/// segment/bitmap/counter invariants.
+fn assert_fs_matches(fs: &DpuFs, model: &MetaModel, ctx: &str) {
+    verify_recovered_fs(fs, model, ctx).unwrap_or_else(|e| panic!("{e}"));
+}
+
+/// Build the crashed-at-`(k, n)` device image by replaying the op
+/// sequence against a fresh device with the cut armed.
+fn crash_image(seed: u64, k: u64, n: usize) -> (Arc<Ssd>, Run) {
+    let ssd = Arc::new(Ssd::new(SSD_BYTES, 512));
+    let mut fs = DpuFs::format(ssd.clone(), cfg()).unwrap();
+    ssd.arm_power_cut(k, n);
+    let run = apply_ops(&mut fs, seed);
+    drop(fs);
+    ssd.power_restore();
+    (ssd, run)
+}
+
+/// One crash point: remount the torn image and check every invariant.
+fn check_crash_point(seed: u64, k: u64, n: usize) -> RecoveryReport {
+    let (ssd, run) = crash_image(seed, k, n);
+    let ctx = format!("seed {seed}, cut (write {k}, byte {n})");
+    let (fs, report) = DpuFs::mount_with_report(ssd.clone(), cfg())
+        .unwrap_or_else(|e| panic!("{ctx}: mount failed: {e}"));
+    assert!(
+        report.recovered_seq >= run.acked_seq,
+        "{ctx}: committed op LOST — recovered seq {} < acked seq {}",
+        report.recovered_seq,
+        run.acked_seq
+    );
+    let model = run
+        .model_at(report.recovered_seq)
+        .unwrap_or_else(|| panic!("{ctx}: recovered seq {} never attempted", report.recovered_seq));
+    assert_fs_matches(&fs, model, &ctx);
+    drop(fs);
+    if report.rolled_forward {
+        // The mount repaired the superblock: a second mount must see a
+        // clean image and land on the identical state.
+        let (fs2, r2) = DpuFs::mount_with_report(ssd, cfg())
+            .unwrap_or_else(|e| panic!("{ctx}: second mount failed: {e}"));
+        assert_eq!(r2.recovered_seq, report.recovered_seq, "{ctx}: repair not idempotent");
+        assert!(!r2.rolled_forward, "{ctx}: repair did not stick");
+        assert_fs_matches(&fs2, model, &format!("{ctx} (second mount)"));
+    }
+    report
+}
+
+/// THE acceptance test: every SSD-write prefix of the seeded op
+/// sequence is a crash point, and every one recovers consistently.
+#[test]
+fn crash_point_enumeration_recovers_every_write_prefix() {
+    let seed = chaos_seed();
+    // Scout pass: learn the deterministic write schedule.
+    let ssd = Arc::new(Ssd::new(SSD_BYTES, 512));
+    let mut fs = DpuFs::format(ssd.clone(), cfg()).unwrap();
+    ssd.start_write_trace();
+    let scout = apply_ops(&mut fs, seed);
+    let trace = ssd.take_write_trace();
+    drop(fs);
+    assert!(scout.acked_seq > 1, "bootstrap must commit metadata ops");
+    // Floor = the deterministic bootstrap's two syncs (3 writes each).
+    assert!(trace.len() >= 6, "op sequence too quiet: {} writes", trace.len());
+
+    let stride = stride();
+    let (mut points, mut rolled) = (0u64, 0u64);
+    for (k, &(_, len)) in trace.iter().enumerate() {
+        let mut n = 0usize;
+        loop {
+            let report = check_crash_point(seed, k as u64, n);
+            points += 1;
+            rolled += report.rolled_forward as u64;
+            if n >= len {
+                break;
+            }
+            n = (n + stride).min(len);
+        }
+    }
+    println!(
+        "crash enumeration: {} writes, {points} crash points (stride {stride}), \
+         {rolled} rolled forward",
+        trace.len()
+    );
+    assert!(rolled > 0, "enumeration never hit a roll-forward window");
+}
+
+/// Durability-policy rollback: a control-plane op whose sync fails
+/// non-fatally (metadata image grown past the superblock slot's
+/// capacity) must be rolled back in memory — NOT left applied to be
+/// silently persisted by a later op's successful sync.
+#[test]
+fn refused_metadata_op_is_rolled_back_not_persisted_later() {
+    use dds::coordinator::{StorageServer, StorageServerConfig};
+    let storage = StorageServer::build(
+        StorageServerConfig { ssd_bytes: 64 << 10, segment_size: 4096, ..Default::default() },
+        None,
+    )
+    .unwrap();
+    let fe = storage.front_end();
+    let dir = fe.create_directory("d").unwrap();
+    // Create files until the metadata image no longer fits its slot
+    // (slot capacity = segment_size/2 - frame header).
+    let mut created = Vec::new();
+    let refused = loop {
+        let name = format!("file-{:04}", created.len());
+        match fe.create_file(dir, &name) {
+            Ok(f) => created.push(f),
+            Err(_) => break name,
+        }
+        assert!(created.len() < 10_000, "image never hit the slot capacity");
+    };
+    // Free image space; the previously refused name must now be
+    // creatable — a phantom in-memory file would collide instead.
+    fe.delete_file(created.pop().unwrap()).unwrap();
+    fe.delete_file(created.pop().unwrap()).unwrap();
+    let f = fe.create_file(dir, &refused)
+        .expect("refused op lingered in memory (rollback missing)");
+    let n_files = created.len() + 1;
+    // And nothing phantom survives a remount either.
+    let ssd = storage.ssd.clone();
+    drop(storage);
+    let (fs, _) =
+        DpuFs::mount_with_report(ssd, FsConfig { segment_size: 4096 }).unwrap();
+    let metas = fs.list_dir(dir);
+    assert_eq!(metas.len(), n_files, "remount must agree with the acked op set");
+    assert!(metas.iter().any(|m| m.id == f.id && m.name == refused));
+}
+
+/// Idempotent replay: re-crash *inside recovery's own repair writes* —
+/// every byte prefix of every repair write — and recover again to the
+/// identical state.
+#[test]
+fn recrash_during_recovery_replays_idempotently() {
+    let seed = chaos_seed();
+    let ssd = Arc::new(Ssd::new(SSD_BYTES, 512));
+    let mut fs = DpuFs::format(ssd.clone(), cfg()).unwrap();
+    ssd.start_write_trace();
+    apply_ops(&mut fs, seed);
+    let trace = ssd.take_write_trace();
+    drop(fs);
+
+    let stride = stride();
+    let mut outer = 0u64;
+    let mut inner_points = 0u64;
+    for (k, &(addr, len)) in trace.iter().enumerate() {
+        if addr >= SEG {
+            continue; // superblock-slot writes only: guaranteed roll-forward
+        }
+        let (k, n) = (k as u64, len / 2);
+        // Scout this crash point's recovery write schedule.
+        let (ssd, run) = crash_image(seed, k, n);
+        ssd.start_write_trace();
+        let (fs1, r1) = DpuFs::mount_with_report(ssd.clone(), cfg())
+            .unwrap_or_else(|e| panic!("outer cut ({k},{n}): mount failed: {e}"));
+        let rec_trace = ssd.take_write_trace();
+        if !r1.rolled_forward {
+            // Rare but legitimate: the torn slot bytes coincided with
+            // the previous occupant's (images share long prefixes), so
+            // the slot still checksums as the intended image — nothing
+            // to repair, nothing to re-crash.
+            assert!(rec_trace.is_empty(), "clean mount must not write");
+            continue;
+        }
+        outer += 1;
+        assert!(!rec_trace.is_empty(), "roll-forward must repair the superblock");
+        let model = run.model_at(r1.recovered_seq).expect("attempted seq").clone();
+        drop(fs1);
+
+        for (rk, &(_, rlen)) in rec_trace.iter().enumerate() {
+            let mut m = 0usize;
+            loop {
+                let ctx = format!(
+                    "seed {seed}, outer cut ({k},{n}), recovery cut (write {rk}, byte {m})"
+                );
+                // Rebuild the crashed image, then cut recovery itself.
+                let (ssd, _) = crash_image(seed, k, n);
+                ssd.arm_power_cut(rk as u64, m);
+                let cut_mount = DpuFs::mount_with_report(ssd.clone(), cfg());
+                assert!(
+                    cut_mount.is_err(),
+                    "{ctx}: mount acknowledged success while its repair write died"
+                );
+                drop(cut_mount);
+                // Reboot again: recovery must converge to the same state.
+                ssd.power_restore();
+                let (fs3, r3) = DpuFs::mount_with_report(ssd, cfg())
+                    .unwrap_or_else(|e| panic!("{ctx}: post-recrash mount failed: {e}"));
+                assert_eq!(
+                    r3.recovered_seq, r1.recovered_seq,
+                    "{ctx}: replay landed on a different sequence"
+                );
+                assert_fs_matches(&fs3, &model, &ctx);
+                inner_points += 1;
+                if m >= rlen {
+                    break;
+                }
+                m = (m + stride).min(rlen);
+            }
+        }
+    }
+    assert!(outer > 0, "no superblock writes in the trace?");
+    println!("re-crash enumeration: {outer} roll-forward points, {inner_points} recovery cuts");
+}

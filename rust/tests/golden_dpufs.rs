@@ -1,0 +1,164 @@
+//! Golden byte vectors for the durability plane's on-disk formats
+//! (mirroring `golden_wire.rs` for the wire protocol): the segment-0
+//! metadata image encoding and the checksummed frame format shared by
+//! the journal records and the superblock slots. Any accidental field
+//! reorder, width change, endianness slip, or checksum-convention
+//! change fails loudly; truncated and bit-flipped input of every
+//! possible length/position must be rejected, never accepted or
+//! panicked on.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use dds::dpufs::journal::{
+    crc32, decode_frame, encode_frame, read_slots, write_slot, FRAME_HEADER_LEN,
+    JOURNAL_COMMIT_MAGIC, JOURNAL_DATA_MAGIC, SUPER_MAGIC,
+};
+use dds::dpufs::meta::{self, DirId, FileId, FileMeta};
+use dds::ssd::Ssd;
+
+/// Published CRC-32 (IEEE) check values pin the polynomial, the
+/// reflection, and the init/final-xor conventions — everything the
+/// frame checksums depend on.
+#[test]
+fn golden_crc32() {
+    assert_eq!(crc32(b""), 0x0000_0000);
+    assert_eq!(crc32(b"a"), 0xE8B7_BE43);
+    assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+}
+
+#[test]
+fn golden_metadata_image() {
+    let mut dirs = HashMap::new();
+    dirs.insert(DirId(1), "db".to_string());
+    let mut files = HashMap::new();
+    files.insert(
+        FileId(7),
+        FileMeta {
+            id: FileId(7),
+            dir: DirId(1),
+            name: "rbpex".into(),
+            size: 123456,
+            segments: vec![3, 9, 12],
+        },
+    );
+    let golden: Vec<u8> = vec![
+        0x00, 0xF5, 0xD5, 0x0D, // magic 0x0DD5F500 LE
+        0x02, 0x00, 0x00, 0x00, // next_dir = 2
+        0x08, 0x00, 0x00, 0x00, // next_file = 8
+        0x01, 0x00, 0x00, 0x00, // ndirs = 1
+        0x01, 0x00, 0x00, 0x00, // nfiles = 1
+        0x01, 0x00, 0x00, 0x00, // dir id 1
+        0x02, 0x00, 0x00, 0x00, 0x64, 0x62, // "db"
+        0x07, 0x00, 0x00, 0x00, // file id 7
+        0x01, 0x00, 0x00, 0x00, // dir 1
+        0x05, 0x00, 0x00, 0x00, 0x72, 0x62, 0x70, 0x65, 0x78, // "rbpex"
+        0x40, 0xE2, 0x01, 0x00, 0x00, 0x00, 0x00, 0x00, // size 123456
+        0x03, 0x00, 0x00, 0x00, // 3 segments
+        0x03, 0x00, 0x00, 0x00, 0x09, 0x00, 0x00, 0x00, 0x0C, 0x00, 0x00, 0x00,
+    ];
+    let enc = meta::encode(&dirs, &files, 2, 8, 1 << 20).unwrap();
+    assert_eq!(enc, golden);
+    let (d2, f2, nd, nf) = meta::decode(&golden).unwrap();
+    assert_eq!((d2, f2, nd, nf), (dirs, files, 2, 8));
+    // Every strict prefix must reject (truncated metadata), not panic.
+    for cut in 0..golden.len() {
+        assert!(
+            meta::decode(&golden[..cut]).is_err(),
+            "truncation to {cut}/{} bytes was accepted",
+            golden.len()
+        );
+    }
+}
+
+/// The shared frame layout, pinned byte for byte:
+/// `magic u32 | seq u64 | len u32 | payload_crc u32 | header_crc u32 |
+/// payload`.
+#[test]
+fn golden_journal_data_record() {
+    let frame = encode_frame(JOURNAL_DATA_MAGIC, 0x0102_0304_0506_0708, b"meta");
+    let golden: Vec<u8> = vec![
+        0x01, 0x3D, 0xD5, 0x0D, // magic 0x0DD53D01 LE
+        0x08, 0x07, 0x06, 0x05, 0x04, 0x03, 0x02, 0x01, // seq
+        0x04, 0x00, 0x00, 0x00, // payload len
+        0x35, 0x14, 0xF2, 0xD7, // crc32("meta")
+        0x9B, 0x4D, 0x66, 0x46, // crc32(header[..20])
+        0x6D, 0x65, 0x74, 0x61, // "meta"
+    ];
+    assert_eq!(frame, golden);
+    assert_eq!(golden.len(), FRAME_HEADER_LEN + 4);
+    let (magic, seq, payload, total) = decode_frame(&golden).expect("valid frame");
+    assert_eq!(
+        (magic, seq, payload, total),
+        (JOURNAL_DATA_MAGIC, 0x0102_0304_0506_0708, &b"meta"[..], golden.len())
+    );
+    assert_rejects_all_corruption(&golden);
+}
+
+#[test]
+fn golden_journal_commit_record() {
+    let frame = encode_frame(JOURNAL_COMMIT_MAGIC, 5, b"");
+    let golden: Vec<u8> = vec![
+        0x01, 0x3C, 0xD5, 0x0D, // magic 0x0DD53C01 LE
+        0x05, 0x00, 0x00, 0x00, 0x00, 0x00, 0x00, 0x00, // seq 5
+        0x00, 0x00, 0x00, 0x00, // payload len 0
+        0x00, 0x00, 0x00, 0x00, // crc32("") = 0
+        0xA8, 0x28, 0xE5, 0x09, // crc32(header[..20])
+    ];
+    assert_eq!(frame, golden);
+    let (magic, seq, payload, _) = decode_frame(&golden).expect("valid frame");
+    assert_eq!((magic, seq, payload.len()), (JOURNAL_COMMIT_MAGIC, 5, 0));
+    assert_rejects_all_corruption(&golden);
+}
+
+#[test]
+fn golden_superblock_slot_frame() {
+    let frame = encode_frame(SUPER_MAGIC, 2, b"img");
+    let golden: Vec<u8> = vec![
+        0x01, 0x5B, 0xD5, 0x0D, // magic 0x0DD55B01 LE
+        0x02, 0x00, 0x00, 0x00, 0x00, 0x00, 0x00, 0x00, // seq 2
+        0x03, 0x00, 0x00, 0x00, // payload len
+        0xAC, 0xC8, 0xC2, 0xBB, // crc32("img")
+        0xC4, 0x78, 0x5F, 0x66, // crc32(header[..20])
+        0x69, 0x6D, 0x67, // "img"
+    ];
+    assert_eq!(frame, golden);
+    assert_rejects_all_corruption(&golden);
+}
+
+/// Slot placement: even sequences land in slot 0, odd in slot 1, so
+/// successive syncs never overwrite the last committed image.
+#[test]
+fn golden_superblock_slot_placement() {
+    let seg = 1u64 << 13;
+    let ssd = Arc::new(Ssd::new(4 * seg, 512));
+    write_slot(&ssd, seg, 2, b"even").unwrap();
+    write_slot(&ssd, seg, 3, b"odd").unwrap();
+    let mut sb = vec![0u8; seg as usize];
+    ssd.read_into(0, &mut sb).unwrap();
+    // Slot 0 starts at offset 0, slot 1 at segment_size / 2.
+    assert_eq!(&sb[..4], &0x0DD5_5B01u32.to_le_bytes()[..]);
+    assert_eq!(&sb[(seg / 2) as usize..(seg / 2) as usize + 4], &0x0DD5_5B01u32.to_le_bytes()[..]);
+    let slots = read_slots(&sb);
+    assert_eq!(slots[0], Some((2, b"even".to_vec())));
+    assert_eq!(slots[1], Some((3, b"odd".to_vec())));
+}
+
+/// Every strict prefix and every single-bit flip of a valid frame must
+/// be rejected: header flips fail the header checksum, payload flips
+/// the payload checksum, checksum-field flips the comparison.
+fn assert_rejects_all_corruption(frame: &[u8]) {
+    for cut in 0..frame.len() {
+        assert!(decode_frame(&frame[..cut]).is_none(), "prefix of {cut} bytes accepted");
+    }
+    for byte in 0..frame.len() {
+        for bit in 0..8 {
+            let mut bad = frame.to_vec();
+            bad[byte] ^= 1 << bit;
+            assert!(
+                decode_frame(&bad).is_none(),
+                "bit flip at byte {byte} bit {bit} accepted"
+            );
+        }
+    }
+}
