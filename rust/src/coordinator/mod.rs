@@ -74,6 +74,13 @@ pub struct StorageServer {
     /// ledger with `buf_pool`; separate occupancy).
     pub read_buf_pool: crate::buf::BufPool,
     ctrl: mpsc::Sender<ControlMsg>,
+    /// The service pump's wake doorbell (every front end rings it on
+    /// control sends and request pushes; see the CPU plane in
+    /// DESIGN.md).
+    service_wake: std::sync::Arc<crate::idle::Doorbell>,
+    /// The service pump's CPU ledger (direct handle — no control
+    /// round trip, safe to read while the service is parked).
+    cpu: std::sync::Arc<crate::metrics::CpuLedger>,
     /// Build options (kept for introspection / future rebuilds).
     pub cfg: StorageServerConfig,
 }
@@ -121,13 +128,39 @@ impl StorageServer {
             FileService::new(dpufs.clone(), aio, cfg.service.clone(), logic, cache.clone());
         let buf_pool = service.buf_pool().clone();
         let read_buf_pool = service.read_buf_pool().clone();
+        let service_wake = service.waker();
+        let cpu = service.cpu_ledger();
         let handle = service.spawn(ctrl.clone());
-        Ok(StorageServer { ssd, dpufs, cache, handle, buf_pool, read_buf_pool, ctrl, cfg })
+        Ok(StorageServer {
+            ssd,
+            dpufs,
+            cache,
+            handle,
+            buf_pool,
+            read_buf_pool,
+            ctrl,
+            service_wake,
+            cpu,
+            cfg,
+        })
     }
 
     /// A host-side front-end client (§4.2). Create one per application.
     pub fn front_end(&self) -> DdsClient {
-        DdsClient::new(self.ctrl.clone())
+        DdsClient::new(self.ctrl.clone(), self.service_wake.clone())
+    }
+
+    /// CPU ledger snapshot of the file-service pump (direct handle;
+    /// does not wake a parked service the way the
+    /// [`DdsClient::cpu_stats`] control round trip would).
+    pub fn cpu_stats(&self) -> crate::metrics::CpuStats {
+        self.cpu.snapshot()
+    }
+
+    /// The service pump's wake doorbell (for callers that talk to the
+    /// service through the raw control sender and need to ring it).
+    pub fn service_waker(&self) -> std::sync::Arc<crate::idle::Doorbell> {
+        self.service_wake.clone()
     }
 
     /// An SPDK-like async handle for the offload engine (the engine

@@ -36,6 +36,8 @@ use super::{host_exchange, ClientConn, StorageServer, StorageServerConfig};
 use crate::apps::HostApp;
 use crate::director::{rss_core, AppSignature, DirectorShard, DirectorShardStats};
 use crate::fault::{FaultPlane, FaultSite};
+use crate::idle::{IdleGovernor, IdlePolicy, IdleRecv};
+use crate::metrics::{CpuLedger, CpuStats};
 use crate::net::tcp::{Segment, TcpEndpoint};
 use crate::net::FiveTuple;
 use crate::offload::{OffloadEngine, OffloadEngineConfig, OffloadLogic};
@@ -61,6 +63,13 @@ pub struct ShardedServerConfig {
     /// seeded fault injector ([`FaultSite::SsdQueue`]) and
     /// [`ShardedServer::set_engine_failed`] becomes operative.
     pub faults: Option<Arc<FaultPlane>>,
+    /// Shard-pump idle discipline: `Poll` busy-polls (one core per
+    /// shard even when idle), `Adaptive` (default) climbs the
+    /// spin→yield→park ladder, parking on the shard's input channel
+    /// when its engine has nothing in flight — a send is itself the
+    /// wake, so nothing can be lost. (The file service's own policy is
+    /// configured on `server.service.idle`.)
+    pub idle: IdlePolicy,
 }
 
 impl Default for ShardedServerConfig {
@@ -71,6 +80,7 @@ impl Default for ShardedServerConfig {
             engine_total: OffloadEngineConfig::default(),
             queue_workers: 0,
             faults: None,
+            idle: IdlePolicy::default(),
         }
     }
 }
@@ -143,6 +153,13 @@ struct Shard<A: HostApp> {
 }
 
 impl<A: HostApp> Shard<A> {
+    /// Offloaded reads in flight on this shard's engine: while any are
+    /// outstanding the pump must keep polling (completions have no
+    /// doorbell into the shard loop), so it naps instead of parking.
+    fn in_flight(&self) -> u64 {
+        self.director.engine().outstanding()
+    }
+
     /// Apply a pending engine-failure injection (idempotent).
     fn sync_fault_flag(&mut self) {
         let want = self.fail_flag.load(Ordering::Relaxed);
@@ -214,50 +231,121 @@ impl<A: HostApp> Shard<A> {
     }
 }
 
+/// Flush gathered responses to the output queue. Returns false when
+/// the receiver is gone (the pump should exit). The ONE flush used by
+/// the normal path, the wake path and the shutdown drain, so delivery
+/// behavior cannot diverge between them.
+fn flush_outs(outs: &mut Vec<PacketBatch>, tx: &mpsc::Sender<PacketBatch>) -> bool {
+    for o in outs.drain(..) {
+        if tx.send(o).is_err() {
+            return false;
+        }
+    }
+    true
+}
+
 fn shard_loop<A: HostApp>(
     shard: &mut Shard<A>,
     rx: &mpsc::Receiver<PacketBatch>,
     tx: &mpsc::Sender<PacketBatch>,
     stop: &AtomicBool,
+    idle: IdlePolicy,
+    cpu: Arc<CpuLedger>,
 ) {
+    let mut gov = IdleGovernor::new(idle, cpu);
     let mut outs: Vec<PacketBatch> = Vec::new();
+    let mut disconnected = false;
     loop {
-        let mut done = false;
-        match rx.recv_timeout(Duration::from_millis(1)) {
-            Ok((tuple, segs)) => {
-                shard.step(&tuple, segs, &mut outs);
-                // Opportunistically drain a bounded amount of queued
-                // input before flushing output (batching without extra
-                // latency) — bounded so a producer that outpaces this
-                // shard can't starve the response path indefinitely.
-                for _ in 0..64 {
-                    match rx.try_recv() {
-                        Ok((t, s)) => shard.step(&t, s, &mut outs),
-                        Err(_) => break,
+        let mut progressed = false;
+        // Bounded input burst (batching without extra latency) —
+        // bounded so a producer that outpaces this shard can't starve
+        // the response path, and `stop` is re-checked inside the burst
+        // (regression, PR 5: stop used to be observed only on the
+        // recv-timeout arm, so sustained input pinned the thread until
+        // channel disconnect).
+        for _ in 0..64 {
+            if stop.load(Ordering::Relaxed) {
+                break;
+            }
+            match rx.try_recv() {
+                Ok((tuple, segs)) => {
+                    progressed = true;
+                    shard.step(&tuple, segs, &mut outs);
+                }
+                Err(mpsc::TryRecvError::Empty) => break,
+                Err(mpsc::TryRecvError::Disconnected) => {
+                    disconnected = true;
+                    break;
+                }
+            }
+        }
+        // Late engine completions (async SSD queues, pending aborts).
+        let before = outs.len();
+        shard.poll(&mut outs);
+        progressed |= outs.len() > before;
+        // Flush BEFORE parking or exiting — gathered responses must
+        // not sit behind a sleeping shard or be dropped on shutdown.
+        if !flush_outs(&mut outs, tx) {
+            return;
+        }
+        gov.iteration(progressed);
+        if disconnected || stop.load(Ordering::Relaxed) {
+            drain_on_exit(shard, tx, &mut outs);
+            return;
+        }
+        if !progressed {
+            if shard.in_flight() > 0 {
+                // Completions land on this shard's own poll loop — no
+                // doorbell can ring them home, so nap (bounded, short)
+                // instead of a full park.
+                gov.idle_nap();
+            } else {
+                // Nothing anywhere: park on the input channel. The
+                // channel is its own doorbell — a send during the park
+                // wakes the pump, so no wakeup can be lost — and the
+                // park is bounded by the policy's backoff.
+                match gov.idle_recv(rx) {
+                    IdleRecv::Got((tuple, segs)) => {
+                        // Outputs flush at the top of the next pass,
+                        // which follows immediately (no park between
+                        // a wake and its flush). Book the wake-driven
+                        // batch as a productive pass and reset the
+                        // ladder for the burst that usually follows.
+                        shard.step(&tuple, segs, &mut outs);
+                        gov.woke_with_work();
+                    }
+                    IdleRecv::Empty => {}
+                    IdleRecv::Disconnected => {
+                        drain_on_exit(shard, tx, &mut outs);
+                        return;
                     }
                 }
             }
-            Err(mpsc::RecvTimeoutError::Timeout) => {
-                shard.poll(&mut outs);
-                done = stop.load(Ordering::Relaxed);
-            }
-            Err(mpsc::RecvTimeoutError::Disconnected) => {
-                // Input gone: collect any final engine completions so
-                // in-flight responses still reach their clients.
-                shard.poll(&mut outs);
-                done = true;
-            }
         }
-        // Flush BEFORE exiting — responses gathered by the final poll
-        // must not be dropped on shutdown.
-        for o in outs.drain(..) {
-            if tx.send(o).is_err() {
-                return;
-            }
-        }
-        if done {
+    }
+}
+
+/// Final drain on shard exit: in-flight engine completions must still
+/// reach their clients (regression, PR 5: in-flight responses at stop
+/// time are flushed, not dropped). Bounded — a completion the fault
+/// plane swallowed is aborted as ERR by the engine's pending timeout,
+/// so the wait cannot exceed it by more than scheduling slack.
+fn drain_on_exit<A: HostApp>(
+    shard: &mut Shard<A>,
+    tx: &mpsc::Sender<PacketBatch>,
+    outs: &mut Vec<PacketBatch>,
+) {
+    let bound = shard.director.engine().pending_timeout() + Duration::from_secs(1);
+    let deadline = Instant::now() + bound;
+    loop {
+        shard.poll(outs);
+        if !flush_outs(outs, tx) {
             return;
         }
+        if shard.in_flight() == 0 || Instant::now() >= deadline {
+            return;
+        }
+        std::thread::sleep(Duration::from_micros(100));
     }
 }
 
@@ -279,6 +367,9 @@ pub struct ShardedServer {
     engine_pools: Vec<crate::buf::BufPool>,
     /// Per-shard engine-failure injection flags (fault plane).
     fail_flags: Vec<Arc<AtomicBool>>,
+    /// Per-shard pump CPU ledgers (written by the shard threads' idle
+    /// governors; readable any time, including after shutdown).
+    cpu: Vec<Arc<CpuLedger>>,
     joins: Vec<JoinHandle<()>>,
     stop: Arc<AtomicBool>,
 }
@@ -328,6 +419,7 @@ impl ShardedServer {
         let mut stats = Vec::with_capacity(n);
         let mut engine_pools = Vec::with_capacity(n);
         let mut fail_flags = Vec::with_capacity(n);
+        let mut cpu = Vec::with_capacity(n);
         let mut joins = Vec::with_capacity(n);
         for (i, mut aio) in queues.into_iter().enumerate() {
             if let Some(plane) = &cfg.faults {
@@ -356,14 +448,18 @@ impl ShardedServer {
             let (in_tx, in_rx) = mpsc::channel();
             let (out_tx, out_rx) = mpsc::channel();
             let stop2 = stop.clone();
+            let ledger = CpuLedger::new();
+            let ledger2 = ledger.clone();
+            let idle = cfg.idle;
             let join = std::thread::Builder::new()
                 .name(format!("dds-shard-{i}"))
-                .spawn(move || shard_loop(&mut shard, &in_rx, &out_tx, &stop2))
+                .spawn(move || shard_loop(&mut shard, &in_rx, &out_tx, &stop2, idle, ledger2))
                 .map_err(|e| anyhow::anyhow!("spawn shard {i}: {e}"))?;
             inputs.push(in_tx);
             outputs.push(Mutex::new(out_rx));
             stats.push(shard_stats);
             fail_flags.push(fail_flag);
+            cpu.push(ledger);
             joins.push(join);
         }
         Ok(ShardedServer {
@@ -374,6 +470,7 @@ impl ShardedServer {
             stats,
             engine_pools,
             fail_flags,
+            cpu,
             joins,
             stop,
         })
@@ -436,6 +533,24 @@ impl ShardedServer {
     /// Per-shard counter snapshots.
     pub fn shard_stats(&self) -> Vec<DirectorShardStats> {
         self.stats.iter().enumerate().map(|(i, s)| s.snapshot(i)).collect()
+    }
+
+    /// Per-shard pump CPU snapshots (index = shard id): iterations,
+    /// parks, wakes, busy fraction — the shard half of the functional
+    /// Fig 14 CPU axis (the file service's half is
+    /// `self.storage.cpu_stats()`).
+    pub fn cpu_stats(&self) -> Vec<CpuStats> {
+        self.cpu.iter().map(|l| l.snapshot()).collect()
+    }
+
+    /// Every pump of the deployment in the canonical order: index 0 is
+    /// the file service, then one entry per shard. The ONE "all pumps"
+    /// view — the chaos harness, benches and tests all meter this, so
+    /// a future pump only has to be added here.
+    pub fn all_cpu_stats(&self) -> Vec<CpuStats> {
+        let mut v = vec![self.storage.cpu_stats()];
+        v.extend(self.cpu_stats());
+        v
     }
 
     /// Aggregate counters across every shard.
@@ -608,4 +723,119 @@ pub fn run_sharded_request(
     }
     out.sort_by_key(|r| r.idx);
     Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cache::CuckooCache;
+    use crate::dpufs::{DpuFs, FsConfig};
+    use crate::offload::NoOffload;
+    use crate::ssd::{AsyncSsd, Ssd};
+    use std::sync::RwLock;
+
+    /// Host app that answers nothing (the loop mechanics, not the data
+    /// path, are under test).
+    struct NullApp;
+    impl HostApp for NullApp {
+        fn handle(&mut self, _msg: &NetMsg) -> Vec<NetResp> {
+            Vec::new()
+        }
+    }
+
+    fn mk_shard() -> Shard<NullApp> {
+        let ssd = Arc::new(Ssd::new(4 << 20, 512));
+        let fs = DpuFs::format(ssd.clone(), FsConfig::default()).unwrap();
+        let cache = Arc::new(CuckooCache::new(64));
+        let engine = OffloadEngine::new(
+            Arc::new(NoOffload),
+            cache.clone(),
+            Arc::new(RwLock::new(fs)),
+            AsyncSsd::new_inline(ssd),
+            OffloadEngineConfig::default(),
+        );
+        let director =
+            DirectorShard::new(0, AppSignature::server_port(5000), Arc::new(NoOffload), cache, engine);
+        Shard {
+            director,
+            app: NullApp,
+            host_conns: HashMap::new(),
+            stats: Arc::new(ShardStats::default()),
+            fail_flag: Arc::new(AtomicBool::new(false)),
+        }
+    }
+
+    /// Regression (PR 5): `stop` used to be observed only on the
+    /// recv-timeout arm, so a producer that kept the input channel
+    /// non-empty pinned the shard thread until channel disconnect.
+    /// With the sender kept alive and saturating, stop must still exit
+    /// the loop in bounded time.
+    #[test]
+    fn shard_loop_observes_stop_under_sustained_input() {
+        let mut shard = mk_shard();
+        let (in_tx, in_rx) = mpsc::channel::<PacketBatch>();
+        let (out_tx, _out_rx) = mpsc::channel();
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = stop.clone();
+        let pump = std::thread::spawn(move || {
+            shard_loop(&mut shard, &in_rx, &out_tx, &stop2, IdlePolicy::default(), CpuLedger::new())
+        });
+        // Saturating producer on a non-matching tuple (forward path:
+        // counted, no per-flow state) — keeps the channel non-empty
+        // and the sender ALIVE for the whole test.
+        let feeding = Arc::new(AtomicBool::new(true));
+        let f2 = feeding.clone();
+        let producer = std::thread::spawn(move || {
+            let tuple = FiveTuple::new(1, 2, 3, 9999);
+            'outer: while f2.load(Ordering::Relaxed) {
+                // Paced bursts: fast enough that the channel is
+                // essentially never empty for the recv-timeout arm's
+                // full 1 ms (the only place the old code checked
+                // stop), slow enough to bound the backlog.
+                for _ in 0..128 {
+                    let seg = Segment { seq: 0, payload: crate::buf::BufView::empty(), ack: 0 };
+                    if in_tx.send((tuple, vec![seg])).is_err() {
+                        break 'outer;
+                    }
+                }
+                std::thread::sleep(Duration::from_micros(100));
+            }
+        });
+        std::thread::sleep(Duration::from_millis(50));
+        stop.store(true, Ordering::Relaxed);
+        let deadline = Instant::now() + Duration::from_secs(5);
+        while !pump.is_finished() {
+            assert!(
+                Instant::now() < deadline,
+                "shard thread ignored stop under sustained input"
+            );
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        pump.join().unwrap();
+        feeding.store(false, Ordering::Relaxed);
+        producer.join().unwrap();
+    }
+
+    /// An idle shard under the default Adaptive policy parks (its CPU
+    /// ledger proves it) and still exits promptly on disconnect.
+    #[test]
+    fn idle_shard_parks_and_exits_on_disconnect() {
+        let mut shard = mk_shard();
+        let (in_tx, in_rx) = mpsc::channel::<PacketBatch>();
+        let (out_tx, _out_rx) = mpsc::channel();
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = stop.clone();
+        let ledger = CpuLedger::new();
+        let ledger2 = ledger.clone();
+        let pump = std::thread::spawn(move || {
+            shard_loop(&mut shard, &in_rx, &out_tx, &stop2, IdlePolicy::default(), ledger2)
+        });
+        std::thread::sleep(Duration::from_millis(100));
+        let s = ledger.snapshot();
+        assert!(s.parks > 0, "idle shard never parked: {s:?}");
+        let t0 = Instant::now();
+        drop(in_tx); // disconnect = shutdown signal
+        pump.join().unwrap();
+        assert!(t0.elapsed() < Duration::from_secs(2), "disconnect did not wake the park");
+    }
 }

@@ -41,6 +41,8 @@ use crate::director::{AppSignature, DirectorShardStats};
 use crate::dpufs::RecoveryReport;
 use crate::filelib::{DdsClient, DdsFile, PollGroup};
 use crate::fileservice::{FileServiceConfig, GroupCounters};
+use crate::idle::IdlePolicy;
+use crate::metrics::CpuStats;
 use crate::net::FiveTuple;
 use crate::offload::{OffloadEngineConfig, RawFileOffload};
 use crate::proto::{AppRequest, NetMsg, NetResp};
@@ -76,6 +78,13 @@ pub struct Scenario {
     /// Engine-context and service-staging pending timeout (how fast a
     /// lost completion surfaces as ERR).
     pub pending_timeout: Duration,
+    /// Idle discipline of every pump (file service + shard loops).
+    pub idle: IdlePolicy,
+    /// When true (the `idle_wake` scenario), the harness additionally
+    /// asserts that after the workload quiesces every pump settles
+    /// into its park rung — parks keep advancing while productive
+    /// iterations stop — per the CpuLedger.
+    pub assert_parked: bool,
 }
 
 impl Scenario {
@@ -101,6 +110,8 @@ impl Scenario {
             // would depend on wall-clock timing and break the
             // same-seed determinism contract.
             pending_timeout: Duration::from_secs(2),
+            idle: IdlePolicy::default(),
+            assert_parked: false,
         }
     }
 
@@ -176,6 +187,38 @@ impl Scenario {
         }
     }
 
+    /// The CPU-plane scenario: adaptive spin→park pumps (tight spin
+    /// budget, so parks actually happen between batches) under SSD
+    /// chaos on both planes, one engine failure, and a poll-group
+    /// stall — byte-exactness and bounded completion must survive
+    /// every park point, and after quiesce every pump must actually be
+    /// parked (asserted against the CpuLedger).
+    pub fn idle_wake(seed: u64) -> Scenario {
+        let base = Scenario::base("idle_wake", seed);
+        Scenario {
+            rounds: 6,
+            idle: IdlePolicy::Adaptive {
+                spin_iters: 16,
+                park_timeout: Duration::from_millis(2),
+            },
+            assert_parked: true,
+            faults: FaultConfig {
+                seed,
+                ssd: SsdFaultConfig { fail_p: 0.05, drop_p: 0.05, delay_p: 0.2, delay_polls: 3 },
+                host_ssd: SsdFaultConfig {
+                    fail_p: 0.05,
+                    drop_p: 0.05,
+                    delay_p: 0.2,
+                    delay_polls: 3,
+                },
+                ..Default::default()
+            },
+            fail_engines: vec![(1, 0)],
+            stall_groups: Some((3, 400)),
+            ..base
+        }
+    }
+
     /// Everything at once.
     pub fn everything(seed: u64) -> Scenario {
         let base = Scenario::base("everything", seed);
@@ -213,6 +256,7 @@ impl Scenario {
             Scenario::ssd_chaos(seed),
             Scenario::wire_chaos(seed),
             Scenario::group_stall(seed),
+            Scenario::idle_wake(seed),
             Scenario::everything(seed),
         ]
     }
@@ -239,6 +283,10 @@ pub struct ScenarioReport {
     pub stats: DirectorShardStats,
     pub per_shard: Vec<DirectorShardStats>,
     pub group_stats: Vec<GroupCounters>,
+    /// Pump CPU snapshots at scenario end: index 0 is the file
+    /// service, then one per shard. (Timing-dependent — never part of
+    /// the deterministic outcome trace.)
+    pub cpu: Vec<CpuStats>,
     pub elapsed: Duration,
 }
 
@@ -289,7 +337,11 @@ pub fn run_scenario(sc: &Scenario) -> anyhow::Result<ScenarioReport> {
     let plane = FaultPlane::new(sc.faults);
     let logic = Arc::new(RawFileOffload);
 
-    let mut service = FileServiceConfig { pending_timeout: sc.pending_timeout, ..Default::default() };
+    let mut service = FileServiceConfig {
+        pending_timeout: sc.pending_timeout,
+        idle: sc.idle,
+        ..Default::default()
+    };
     if !sc.faults.host_ssd.is_off() {
         service.ssd_faults = Some(plane.ssd_injector(FaultSite::HostSsdQueue));
     }
@@ -305,6 +357,7 @@ pub fn run_scenario(sc: &Scenario) -> anyhow::Result<ScenarioReport> {
             ..Default::default()
         },
         faults: Some(plane.clone()),
+        idle: sc.idle,
         ..Default::default()
     };
     let server = ShardedServer::over(
@@ -428,6 +481,39 @@ pub fn run_scenario(sc: &Scenario) -> anyhow::Result<ScenarioReport> {
         acc.err,
         total
     );
+
+    // CPU-plane quiesce check (idle_wake): once the workload is done,
+    // every pump must settle into its park rung — parks keep advancing
+    // while productive iterations stop. A pump still finding "work"
+    // here means a wake edge is stuck open; a pump whose parks stopped
+    // advancing is spinning (a busy-loop regression). Two windows so
+    // the verdict is a delta, not an absolute count.
+    if sc.assert_parked {
+        let IdlePolicy::Adaptive { park_timeout, .. } = sc.idle else {
+            anyhow::bail!("scenario '{}': assert_parked needs an Adaptive policy", sc.name);
+        };
+        let settle = (park_timeout * 8).max(Duration::from_millis(50));
+        std::thread::sleep(settle);
+        let before = server.all_cpu_stats();
+        std::thread::sleep(settle);
+        let after = server.all_cpu_stats();
+        for (i, (b, a)) in before.iter().zip(&after).enumerate() {
+            let d = a.since(b);
+            anyhow::ensure!(
+                d.parks > 0,
+                "scenario '{}' (seed {}): pump {i} is not parking after quiesce ({d:?})",
+                sc.name,
+                sc.seed
+            );
+            anyhow::ensure!(
+                d.productive <= 4,
+                "scenario '{}' (seed {}): pump {i} still productive after quiesce ({d:?})",
+                sc.name,
+                sc.seed
+            );
+        }
+    }
+
     acc.outcomes.sort_unstable();
     let report = ScenarioReport {
         name: sc.name,
@@ -443,6 +529,7 @@ pub fn run_scenario(sc: &Scenario) -> anyhow::Result<ScenarioReport> {
             .front_end()
             .group_stats()
             .map_err(|e| anyhow::anyhow!("{e}"))?,
+        cpu: server.all_cpu_stats(),
         elapsed: started.elapsed(),
     };
     // Buffer-plane leak check: whatever the fault schedule did — lost

@@ -20,6 +20,7 @@ use std::time::Duration;
 
 use crate::dpufs::{DirId, FileId, FsError};
 use crate::fileservice::{ControlMsg, Doorbell, GroupChannel, GroupCounters};
+use crate::metrics::CpuStats;
 use crate::proto::{FileOpKind, FileRequest, FileResponse, Status};
 use crate::ring::{ProgressRing, RequestRing, ResponseRing, RingStatus};
 
@@ -92,6 +93,15 @@ pub struct PollGroup {
     chan: Arc<GroupChannel>,
     pending: Mutex<HashMap<u64, PendingOp>>,
     next_id: AtomicU64,
+    /// Response-ring records that failed to decode. Each one is
+    /// surfaced as an ERR completion for its salvaged request id (or
+    /// counted here when even the id is gone) — never silently
+    /// dropped, which used to leak the pending entry and wedge
+    /// `in_flight()`-based quiesce loops forever.
+    bad_records: AtomicU64,
+    /// Well-formed responses whose request id matched nothing pending
+    /// (stale duplicates): dropped, but counted.
+    orphans: AtomicU64,
 }
 
 impl PollGroup {
@@ -122,18 +132,76 @@ impl PollGroup {
 
     fn drain(&self) -> Vec<CompletionEvent> {
         let mut out = Vec::new();
+        let mut popped = false;
         loop {
             let mut got: Option<FileResponse> = None;
+            let mut salvaged: Option<u64> = None;
             let st = self.chan.resp_ring.pop(&mut |bytes| {
                 got = FileResponse::decode(bytes);
+                if got.is_none() {
+                    salvaged = FileResponse::peek_req_id(bytes);
+                }
             });
             if st != RingStatus::Ok {
                 break;
             }
-            let Some(resp) = got else { continue };
+            popped = true;
+            let Some(resp) = got else {
+                // Malformed record. The ring slot is consumed either
+                // way, so skipping silently would leak a pending entry
+                // and `in_flight()` would never reach 0 (wedging every
+                // quiesce loop): salvage the request id from the fixed
+                // header and surface an ERR completion. When even the
+                // header is gone, fail the OLDEST pending op instead —
+                // the service delivers in request order, so the
+                // mangled record almost surely belonged to the lowest
+                // outstanding id. Both attributions are best-effort
+                // (no checksum in the golden-pinned layout); the
+                // `bad_records`/`orphan_responses` counters keep any
+                // misattribution observable.
+                self.bad_records.fetch_add(1, Ordering::Relaxed);
+                let op = {
+                    let mut pending = self.pending.lock().unwrap();
+                    match salvaged {
+                        // Intact id, nothing pending under it: a
+                        // corrupted STALE DUPLICATE — same disposition
+                        // as an intact orphan (dropped, counted);
+                        // failing some healthy op for it would report
+                        // a false ERR for work that succeeded.
+                        Some(id) if !pending.contains_key(&id) => {
+                            self.orphans.fetch_add(1, Ordering::Relaxed);
+                            None
+                        }
+                        Some(id) => pending.remove(&id).map(|op| (id, op)),
+                        // Even the id bytes are gone: only here does
+                        // the oldest-pending attribution apply.
+                        None => pending
+                            .keys()
+                            .min()
+                            .copied()
+                            .and_then(|id| pending.remove(&id).map(|op| (id, op))),
+                    }
+                };
+                if let Some((req_id, op)) = op {
+                    out.push(CompletionEvent {
+                        req_id,
+                        file_id: op.file_id,
+                        kind: op.kind,
+                        ok: false,
+                        data: Vec::new(),
+                        scatter_sizes: op.scatter_sizes,
+                    });
+                }
+                continue;
+            };
             // Locate the book-kept operation by request id (§4.2).
             let op = self.pending.lock().unwrap().remove(&resp.req_id);
-            let Some(op) = op else { continue };
+            let Some(op) = op else {
+                // Response for nothing we issued (stale duplicate):
+                // dropped, but visible in the counter.
+                self.orphans.fetch_add(1, Ordering::Relaxed);
+                continue;
+            };
             out.push(CompletionEvent {
                 req_id: resp.req_id,
                 file_id: op.file_id,
@@ -143,12 +211,29 @@ impl PollGroup {
                 scatter_sizes: op.scatter_sizes,
             });
         }
+        if popped {
+            // Freed response-ring space: a service delivery blocked on
+            // a full host ring may be parked — ring it to retry now
+            // instead of after its bounded park expires.
+            self.chan.wake.ring();
+        }
         out
     }
 
     /// Operations issued but not yet completed.
     pub fn in_flight(&self) -> usize {
         self.pending.lock().unwrap().len()
+    }
+
+    /// Malformed response-ring records seen so far (each surfaced as
+    /// an ERR completion when its request id was salvageable).
+    pub fn bad_records(&self) -> u64 {
+        self.bad_records.load(Ordering::Relaxed)
+    }
+
+    /// Well-formed responses that matched no pending operation.
+    pub fn orphan_responses(&self) -> u64 {
+        self.orphans.load(Ordering::Relaxed)
     }
 
     fn issue(&self, req: FileRequest, op: PendingOp) -> Result<u64, LibError> {
@@ -162,7 +247,14 @@ impl PollGroup {
         // Non-blocking insert; on RETRY (backlog at max allowable
         // progress) undo the bookkeeping and surface RingFull.
         match self.chan.req_ring.try_push(&encoded) {
-            RingStatus::Ok => Ok(id),
+            RingStatus::Ok => {
+                // Request published — ring the service pump awake
+                // (ring AFTER the push: the pump snapshots the
+                // sequence before scanning, so this edge can never be
+                // slept through).
+                self.chan.wake.ring();
+                Ok(id)
+            }
             _ => {
                 self.pending.lock().unwrap().remove(&id);
                 Err(LibError::RingFull)
@@ -183,6 +275,10 @@ pub struct DdsFile {
 /// plus poll-group management.
 pub struct DdsClient {
     ctrl: mpsc::Sender<ControlMsg>,
+    /// The service pump's wake doorbell: control sends and poll-group
+    /// request pushes ring it so a parked service reacts immediately
+    /// instead of after its bounded park expires.
+    wake: Arc<Doorbell>,
     /// Ring sizing for new poll groups: (req ring bytes, max progress,
     /// resp ring bytes).
     pub req_ring_bytes: usize,
@@ -197,14 +293,18 @@ macro_rules! ctrl_call {
             .ctrl
             .send(ControlMsg::$variant { $($field: $value,)* reply: tx })
             .map_err(|_| LibError::ServiceGone)?;
+        // The service may be parked: ring it so the control call is
+        // served now, not after the bounded park expires.
+        $self.wake.ring();
         rx.recv().map_err(|_| LibError::ServiceGone)?
     }};
 }
 
 impl DdsClient {
-    pub fn new(ctrl: mpsc::Sender<ControlMsg>) -> Self {
+    pub fn new(ctrl: mpsc::Sender<ControlMsg>, wake: Arc<Doorbell>) -> Self {
         DdsClient {
             ctrl,
+            wake,
             req_ring_bytes: 1 << 20,
             max_progress: 1 << 18,
             resp_ring_bytes: 1 << 22,
@@ -260,6 +360,13 @@ impl DdsClient {
         Ok(ctrl_call!(self, InjectGroupStall { group: group, iterations: iterations }))
     }
 
+    /// CPU ledger of the service pump: iterations, parks, wakes, and
+    /// the busy fraction — the functional analogue of the per-core
+    /// utilisation the paper's Fig 14 charts.
+    pub fn cpu_stats(&self) -> Result<CpuStats, LibError> {
+        Ok(ctrl_call!(self, CpuStats {}))
+    }
+
     /// `CreatePoll` (§4.2): allocate request/response rings for the
     /// group and register them with the DPU driver for DMA.
     pub fn create_poll(&self) -> Result<Arc<PollGroup>, LibError> {
@@ -267,16 +374,20 @@ impl DdsClient {
             req_ring: ProgressRing::new(self.req_ring_bytes, self.max_progress),
             resp_ring: ResponseRing::new(self.resp_ring_bytes),
             doorbell: Doorbell::new(),
+            wake: self.wake.clone(),
         });
         let (tx, rx) = mpsc::channel();
         self.ctrl
             .send(ControlMsg::CreatePoll { group: chan.clone(), reply: tx })
             .map_err(|_| LibError::ServiceGone)?;
+        self.wake.ring();
         let _gid = rx.recv().map_err(|_| LibError::ServiceGone)?;
         Ok(Arc::new(PollGroup {
             chan,
             pending: Mutex::new(HashMap::new()),
             next_id: AtomicU64::new(1),
+            bad_records: AtomicU64::new(0),
+            orphans: AtomicU64::new(0),
         }))
     }
 
@@ -347,5 +458,124 @@ impl DdsClient {
             FileRequest::write(id, file.id.0, offset, data),
             PendingOp { file_id: file.id, kind: FileOpKind::Write, scatter_sizes: Vec::new() },
         )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A PollGroup over fresh rings with no service behind it (the
+    /// drain-side machinery is all that is under test).
+    fn lone_group() -> PollGroup {
+        PollGroup {
+            chan: Arc::new(GroupChannel {
+                req_ring: ProgressRing::new(1 << 16, 1 << 12),
+                resp_ring: ResponseRing::new(1 << 16),
+                doorbell: Doorbell::new(),
+                wake: Doorbell::new(),
+            }),
+            pending: Mutex::new(HashMap::new()),
+            next_id: AtomicU64::new(1),
+            bad_records: AtomicU64::new(0),
+            orphans: AtomicU64::new(0),
+        }
+    }
+
+    fn add_pending(g: &PollGroup, req_id: u64) {
+        g.pending.lock().unwrap().insert(
+            req_id,
+            PendingOp { file_id: FileId(1), kind: FileOpKind::Read, scatter_sizes: Vec::new() },
+        );
+    }
+
+    /// Regression (PR 5): a response that failed to decode used to be
+    /// consumed silently, leaking its pending entry — `in_flight()`
+    /// never reached 0 and every quiesce loop over it wedged. It must
+    /// surface as an ERR completion for the salvaged request id.
+    #[test]
+    fn malformed_response_surfaces_err_and_unleaks_pending() {
+        let g = lone_group();
+        add_pending(&g, 7);
+        assert_eq!(g.in_flight(), 1);
+        // Corrupt status byte: full decode fails, but the fixed header
+        // still carries the request id.
+        let mut rec = FileResponse::encode_header(7, Status::Ok, 0).to_vec();
+        rec[8] = 0xEE;
+        assert_eq!(g.chan.resp_ring.push(&rec), RingStatus::Ok);
+        let evs = g.poll_wait(Duration::ZERO);
+        assert_eq!(evs.len(), 1);
+        assert_eq!(evs[0].req_id, 7);
+        assert!(!evs[0].ok, "malformed response must surface as ERR");
+        assert!(evs[0].data.is_empty());
+        assert_eq!(g.in_flight(), 0, "pending entry leaked");
+        assert_eq!(g.bad_records(), 1);
+    }
+
+    /// A record too short to even salvage an id still must not wedge
+    /// quiesce: the oldest pending op is failed in its stead (delivery
+    /// is in request order, so the mangled record almost surely
+    /// belonged to the lowest outstanding id).
+    #[test]
+    fn truncated_response_fails_oldest_pending() {
+        let g = lone_group();
+        add_pending(&g, 9);
+        add_pending(&g, 12);
+        assert_eq!(g.chan.resp_ring.push(&[1, 2, 3]), RingStatus::Ok);
+        let evs = g.poll_wait(Duration::ZERO);
+        assert_eq!(evs.len(), 1);
+        assert_eq!(evs[0].req_id, 9, "oldest outstanding op takes the ERR");
+        assert!(!evs[0].ok);
+        assert_eq!(g.bad_records(), 1);
+        assert_eq!(g.in_flight(), 1, "only the attributed op is failed");
+        // The newer op is untouched and completes normally.
+        let ok = FileResponse { req_id: 12, status: Status::Ok, data: Vec::new() };
+        assert_eq!(g.chan.resp_ring.push(&ok.encode()), RingStatus::Ok);
+        let evs = g.poll_wait(Duration::ZERO);
+        assert!(evs.iter().any(|e| e.req_id == 12 && e.ok));
+        assert_eq!(g.in_flight(), 0, "quiesce loop can always drain to zero");
+    }
+
+    /// A corrupted record whose intact header id matches nothing
+    /// pending is a corrupted stale duplicate: dropped and counted
+    /// like an intact orphan — it must NOT pull the oldest healthy op
+    /// into a false ERR.
+    #[test]
+    fn corrupted_orphan_does_not_fail_healthy_ops() {
+        let g = lone_group();
+        add_pending(&g, 9);
+        // req 5 is long done; its duplicate arrives with a corrupt
+        // status byte but readable id.
+        let mut rec = FileResponse::encode_header(5, Status::Ok, 0).to_vec();
+        rec[8] = 0xEE;
+        assert_eq!(g.chan.resp_ring.push(&rec), RingStatus::Ok);
+        assert!(g.poll_wait(Duration::ZERO).is_empty(), "no ERR may be invented");
+        assert_eq!(g.in_flight(), 1, "healthy op must stay pending");
+        assert_eq!((g.bad_records(), g.orphan_responses()), (1, 1));
+    }
+
+    /// Regression (PR 5): a well-formed response matching nothing
+    /// pending (stale duplicate) is dropped — but counted, never
+    /// invisible.
+    #[test]
+    fn orphan_response_is_counted_not_invented() {
+        let g = lone_group();
+        let resp = FileResponse { req_id: 42, status: Status::Ok, data: vec![1, 2] };
+        assert_eq!(g.chan.resp_ring.push(&resp.encode()), RingStatus::Ok);
+        assert!(g.poll_wait(Duration::ZERO).is_empty());
+        assert_eq!(g.orphan_responses(), 1);
+        assert_eq!(g.in_flight(), 0);
+    }
+
+    /// Draining the response ring rings the service-side wake doorbell
+    /// (the response-ring-full retry edge of the wake graph).
+    #[test]
+    fn drain_rings_service_wake() {
+        let g = lone_group();
+        let resp = FileResponse { req_id: 1, status: Status::Ok, data: Vec::new() };
+        assert_eq!(g.chan.resp_ring.push(&resp.encode()), RingStatus::Ok);
+        let seen = g.chan.wake.seq();
+        let _ = g.poll_wait(Duration::ZERO);
+        assert!(g.chan.wake.seq() > seen, "drain must ring the service wake");
     }
 }

@@ -1,0 +1,530 @@
+//! The CPU plane: wake doorbells and the adaptive spin→park governor
+//! (see DESIGN.md "The CPU plane").
+//!
+//! The paper optimizes CPU alongside latency — a DDS storage server
+//! "saves up to tens of CPU cores" (Fig 14) because its service loops
+//! do not burn a core when idle. This module is the reusable machinery
+//! every pump in the functional plane threads through:
+//!
+//! * [`Doorbell`] — a sequence-numbered wake signal. Producers `ring`
+//!   after publishing work; a consumer snapshots `seq()` BEFORE
+//!   scanning for work and parks with `wait(seen, ..)`. Any ring that
+//!   lands after the snapshot advances the sequence past `seen`, so
+//!   the wait returns immediately — a wakeup can be *late* (bounded by
+//!   the park timeout) but never *lost*.
+//! * [`IdlePolicy`] — `Poll` (the SPDK busy-poll discipline: lowest
+//!   latency, one core per pump, the Fig 14 worst case) or `Adaptive`
+//!   (spin a configured number of empty iterations, yield, then park
+//!   on the doorbell with bounded exponential backoff).
+//! * [`IdleGovernor`] — the per-pump ladder state machine; writes the
+//!   pump's [`CpuLedger`] so poll-vs-park economics are observable.
+//!
+//! Every park is *bounded* (the backoff caps at the policy's
+//! `park_timeout`), so even a producer edge that forgets to ring only
+//! costs bounded latency, never a hang — and the fault plane's
+//! iteration-denominated machinery (pending timeouts, delayed
+//! completions) keeps aging while the pump naps.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::metrics::CpuLedger;
+
+/// Doorbell used to wake sleeping pumps and `PollWait` callers (§4.2:
+/// "the DPU driver generates an interrupt when the response is
+/// DMA-written").
+///
+/// The sequence lives in an atomic so the producer-side `ring` is a
+/// single `fetch_add` on the data path; the mutex + condvar are only
+/// touched when a waiter is actually registered.
+#[derive(Default)]
+pub struct Doorbell {
+    seq: AtomicU64,
+    /// Registered waiters; a producer only takes the lock to notify
+    /// when this is non-zero.
+    sleepers: AtomicU64,
+    lock: Mutex<()>,
+    cv: Condvar,
+}
+
+impl Doorbell {
+    pub fn new() -> Arc<Self> {
+        Arc::new(Doorbell::default())
+    }
+
+    /// Ring: advance the sequence and wake waiters.
+    ///
+    /// SeqCst pairs with the waiter's register-then-recheck (Dekker
+    /// pattern): if this ring's sequence bump is not visible to a
+    /// waiter's post-registration recheck, then the waiter's sleeper
+    /// registration IS visible to the `sleepers` load below, so the
+    /// notify fires — one side always sees the other.
+    pub fn ring(&self) {
+        self.seq.fetch_add(1, Ordering::SeqCst);
+        if self.sleepers.load(Ordering::SeqCst) > 0 {
+            // Taking the lock orders the notify against the waiter's
+            // registration window: the waiter holds the lock from
+            // registering until it is atomically parked in the condvar
+            // wait, so this notify cannot slip into that gap.
+            let _g = self.lock.lock().unwrap();
+            self.cv.notify_all();
+        }
+    }
+
+    /// Current sequence number (observe before sleeping).
+    pub fn seq(&self) -> u64 {
+        self.seq.load(Ordering::SeqCst)
+    }
+
+    /// Wait until the sequence passes `seen` or `timeout` elapses.
+    /// Returns true if the sequence advanced.
+    ///
+    /// The verdict comes from re-checking the sequence, NOT from the
+    /// condvar's timed-out flag: a ring that lands while a spurious
+    /// wakeup has us near the timeout boundary must still report as a
+    /// wake, and a spurious wakeup alone must never report one. The
+    /// sequence is the ground truth; the timeout flag is not.
+    pub fn wait(&self, seen: u64, timeout: Duration) -> bool {
+        if self.seq.load(Ordering::SeqCst) > seen {
+            return true;
+        }
+        let deadline = Instant::now() + timeout;
+        let mut g = self.lock.lock().unwrap();
+        self.sleepers.fetch_add(1, Ordering::SeqCst);
+        // Re-check AFTER registering: a ring between the fast-path
+        // check above and the registration skipped its notify (it saw
+        // `sleepers == 0`) but bumped the sequence first — this load
+        // must see it, or the wakeup would be lost.
+        let woke = loop {
+            if self.seq.load(Ordering::SeqCst) > seen {
+                break true;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                break false;
+            }
+            let (g2, _timed_out) = self.cv.wait_timeout(g, deadline - now).unwrap();
+            g = g2;
+        };
+        self.sleepers.fetch_sub(1, Ordering::SeqCst);
+        drop(g);
+        woke
+    }
+}
+
+/// How a pump behaves when an iteration finds no work.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum IdlePolicy {
+    /// Busy-poll: never sleep. The SPDK polled-mode discipline — lowest
+    /// wake latency, one full core per pump even when idle (the Fig 14
+    /// baseline the paper's CPU numbers are measured against).
+    Poll,
+    /// The spin→yield→park ladder: spin `spin_iters` empty iterations,
+    /// yield the core a few times, then park on the pump's doorbell
+    /// with exponential backoff bounded by `park_timeout`.
+    Adaptive {
+        /// Empty iterations to spin before descending the ladder.
+        spin_iters: u32,
+        /// Upper bound on one park (and therefore on how stale any
+        /// missed wake edge can make the pump).
+        park_timeout: Duration,
+    },
+}
+
+impl Default for IdlePolicy {
+    /// Adaptive with a 1 ms park bound: microsecond reaction while
+    /// traffic flows, ≥99% core savings at idle, and any missed ring
+    /// edge degrades to at most 1 ms of latency.
+    fn default() -> Self {
+        IdlePolicy::Adaptive { spin_iters: 128, park_timeout: Duration::from_millis(1) }
+    }
+}
+
+impl IdlePolicy {
+    /// Parse the CLI surface: `poll`, `adaptive`, or
+    /// `adaptive:<spin_iters>:<park_timeout_us>`.
+    pub fn parse(s: &str) -> Option<IdlePolicy> {
+        match s {
+            "poll" => Some(IdlePolicy::Poll),
+            "adaptive" => Some(IdlePolicy::default()),
+            _ => {
+                let rest = s.strip_prefix("adaptive:")?;
+                let (spin, park_us) = rest.split_once(':')?;
+                Some(IdlePolicy::Adaptive {
+                    spin_iters: spin.parse().ok()?,
+                    park_timeout: Duration::from_micros(park_us.parse().ok()?),
+                })
+            }
+        }
+    }
+
+    /// Short label for reports and JSON.
+    pub fn label(&self) -> &'static str {
+        match self {
+            IdlePolicy::Poll => "poll",
+            IdlePolicy::Adaptive { .. } => "adaptive",
+        }
+    }
+}
+
+/// Yield rung length between spinning and parking.
+const YIELD_ITERS: u32 = 16;
+/// First park of an idle stretch (doubles per consecutive park up to
+/// the policy's `park_timeout`): short, so work that arrives just
+/// after a park begins is picked up quickly even without a ring.
+const MIN_PARK: Duration = Duration::from_micros(64);
+/// Cap on the bounded nap used when work is in flight but nothing is
+/// pollable yet (no doorbell can ring a completion home) — polling for
+/// completions must stay snappy.
+const NAP_CAP: Duration = Duration::from_micros(100);
+/// How many iterations may pass before the governor flushes the
+/// running busy segment into the ledger (so `Poll` pumps, which never
+/// park, still report busy time).
+const FLUSH_EVERY: u32 = 1024;
+
+/// Outcome of [`IdleGovernor::idle_recv`].
+pub enum IdleRecv<T> {
+    /// The park ended because a message arrived.
+    Got(T),
+    /// Still idle (spun, yielded, or the bounded park timed out).
+    Empty,
+    /// The channel's senders are gone.
+    Disconnected,
+}
+
+/// Which rung of the ladder the current empty streak has reached —
+/// the ONE dispatch shared by every idle entry point, so the three
+/// park flavors (doorbell / channel / nap) can never drift apart on
+/// the spin/yield thresholds.
+enum Rung {
+    Spin,
+    Yield,
+    /// Park with this bounded timeout.
+    Park(Duration),
+}
+
+/// Per-pump ladder state machine. One governor per pump thread; it
+/// owns the pump's position on the spin→yield→park ladder and writes
+/// the pump's [`CpuLedger`].
+pub struct IdleGovernor {
+    policy: IdlePolicy,
+    ledger: Arc<CpuLedger>,
+    /// Consecutive empty iterations (the ladder rung index).
+    empty_streak: u32,
+    /// Consecutive parks in this idle stretch (the backoff exponent).
+    park_streak: u32,
+    /// Start of the current busy (non-parked) wall-time segment.
+    segment: Instant,
+    /// Iterations since the busy segment was last flushed.
+    unflushed: u32,
+}
+
+impl IdleGovernor {
+    pub fn new(policy: IdlePolicy, ledger: Arc<CpuLedger>) -> Self {
+        IdleGovernor {
+            policy,
+            ledger,
+            empty_streak: 0,
+            park_streak: 0,
+            segment: Instant::now(),
+            unflushed: 0,
+        }
+    }
+
+    pub fn policy(&self) -> IdlePolicy {
+        self.policy
+    }
+
+    pub fn ledger(&self) -> &Arc<CpuLedger> {
+        &self.ledger
+    }
+
+    /// Account one pump iteration; productive work resets the ladder.
+    pub fn iteration(&mut self, productive: bool) {
+        self.ledger.iteration(productive);
+        if productive {
+            self.empty_streak = 0;
+            self.park_streak = 0;
+        } else {
+            self.empty_streak = self.empty_streak.saturating_add(1);
+        }
+        self.unflushed += 1;
+        if self.unflushed >= FLUSH_EVERY {
+            self.flush_busy();
+        }
+    }
+
+    fn flush_busy(&mut self) {
+        let now = Instant::now();
+        self.ledger.add_busy(now - self.segment);
+        self.segment = now;
+        self.unflushed = 0;
+    }
+
+    /// The park timeout the ladder has escalated to: exponential from
+    /// [`MIN_PARK`], bounded by the policy's `park_timeout`.
+    fn backoff(&self, park_timeout: Duration) -> Duration {
+        MIN_PARK.saturating_mul(1u32 << self.park_streak.min(16)).min(park_timeout)
+    }
+
+    /// Ladder dispatch for the current empty streak under `Adaptive`
+    /// (`Poll` never reaches this): spin, then yield, then park with
+    /// the escalated backoff. Executes the spin/yield rungs itself —
+    /// callers only implement their park flavor.
+    fn rung(&mut self, spin_iters: u32, park_timeout: Duration) -> Rung {
+        if self.empty_streak <= spin_iters {
+            std::hint::spin_loop();
+            Rung::Spin
+        } else if self.empty_streak <= spin_iters + YIELD_ITERS {
+            std::thread::yield_now();
+            Rung::Yield
+        } else {
+            Rung::Park(self.backoff(park_timeout))
+        }
+    }
+
+    fn account_park(&mut self, parked: Duration, woke: bool) {
+        self.ledger.park(parked, woke);
+        self.park_streak = self.park_streak.saturating_add(1);
+        self.segment = Instant::now();
+    }
+
+    /// A park ended with work already in hand (e.g. the channel park
+    /// returned a message): book processing it as its own productive
+    /// pass and reset the ladder. The pre-park scan stays an
+    /// `empty_poll` — it genuinely found nothing — so every ledger
+    /// counter remains monotonic and `productive <= iterations` holds,
+    /// at the cost of one extra `iterations` tick per park-wake cycle.
+    pub fn woke_with_work(&mut self) {
+        self.iteration(true);
+    }
+
+    /// After an empty iteration: climb down the ladder — spin, yield,
+    /// then park on `bell` until its sequence passes `seen` or the
+    /// bounded backoff elapses. Returns true if the pump parked.
+    ///
+    /// `seen` MUST have been read from `bell` BEFORE the pump scanned
+    /// for work: a producer that published after the scan has
+    /// necessarily rung past it, so the wait returns immediately and
+    /// the wakeup cannot be lost.
+    pub fn idle(&mut self, bell: &Doorbell, seen: u64) -> bool {
+        match self.policy {
+            IdlePolicy::Poll => {
+                std::thread::yield_now();
+                false
+            }
+            IdlePolicy::Adaptive { spin_iters, park_timeout } => {
+                match self.rung(spin_iters, park_timeout) {
+                    Rung::Spin | Rung::Yield => false,
+                    Rung::Park(timeout) => {
+                        self.flush_busy();
+                        let t0 = Instant::now();
+                        let woke = bell.wait(seen, timeout);
+                        self.account_park(t0.elapsed(), woke);
+                        true
+                    }
+                }
+            }
+        }
+    }
+
+    /// Channel-park rung for pumps that sleep on an mpsc receiver
+    /// instead of a doorbell (the shard loop): same ladder, but the
+    /// park is a bounded blocking `recv` — the channel itself is the
+    /// doorbell, so a send during the park wakes the pump and nothing
+    /// can be lost. Under `Poll` this never blocks.
+    pub fn idle_recv<T>(&mut self, rx: &mpsc::Receiver<T>) -> IdleRecv<T> {
+        match self.policy {
+            IdlePolicy::Poll => {
+                std::thread::yield_now();
+                IdleRecv::Empty
+            }
+            IdlePolicy::Adaptive { spin_iters, park_timeout } => {
+                match self.rung(spin_iters, park_timeout) {
+                    Rung::Spin | Rung::Yield => IdleRecv::Empty,
+                    Rung::Park(timeout) => {
+                        self.flush_busy();
+                        let t0 = Instant::now();
+                        match rx.recv_timeout(timeout) {
+                            Ok(v) => {
+                                self.account_park(t0.elapsed(), true);
+                                IdleRecv::Got(v)
+                            }
+                            Err(mpsc::RecvTimeoutError::Timeout) => {
+                                self.account_park(t0.elapsed(), false);
+                                IdleRecv::Empty
+                            }
+                            Err(mpsc::RecvTimeoutError::Disconnected) => {
+                                self.account_park(t0.elapsed(), false);
+                                IdleRecv::Disconnected
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// Bounded nap for the "work in flight but nothing pollable yet"
+    /// state (completions have no doorbell into this pump): spin and
+    /// yield first, then sleep one short bounded step so the next poll
+    /// is never far away.
+    pub fn idle_nap(&mut self) {
+        match self.policy {
+            IdlePolicy::Poll => std::thread::yield_now(),
+            IdlePolicy::Adaptive { spin_iters, park_timeout } => {
+                match self.rung(spin_iters, park_timeout) {
+                    Rung::Spin | Rung::Yield => {}
+                    Rung::Park(timeout) => {
+                        self.flush_busy();
+                        let t0 = Instant::now();
+                        std::thread::sleep(timeout.min(NAP_CAP));
+                        self.account_park(t0.elapsed(), false);
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn doorbell_wakes_waiter() {
+        let db = Doorbell::new();
+        let seen = db.seq();
+        let db2 = db.clone();
+        let t = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(20));
+            db2.ring();
+        });
+        assert!(db.wait(seen, Duration::from_secs(2)));
+        t.join().unwrap();
+    }
+
+    #[test]
+    fn doorbell_timeout() {
+        let db = Doorbell::new();
+        let seen = db.seq();
+        assert!(!db.wait(seen, Duration::from_millis(10)));
+    }
+
+    /// The wait verdict must be the sequence, not the condvar's
+    /// timed-out flag: race rings right at the timeout boundary and
+    /// check both directions of the implication on every outcome.
+    #[test]
+    fn doorbell_wait_verdict_tracks_sequence_at_timeout_boundary() {
+        let db = Doorbell::new();
+        for round in 0..60u64 {
+            let seen = db.seq();
+            let db2 = db.clone();
+            // Ring somewhere in [0, 3) ms while the waiter uses ~1.5 ms,
+            // so rings land before, around, and after the boundary.
+            let delay = Duration::from_micros((round % 6) * 500);
+            let t = std::thread::spawn(move || {
+                std::thread::sleep(delay);
+                db2.ring();
+            });
+            let woke = db.wait(seen, Duration::from_micros(1500));
+            // `true` must mean the sequence really advanced…
+            if woke {
+                assert!(db.seq() > seen, "round {round}: woke without a ring");
+            }
+            t.join().unwrap();
+            // …and once the ring has landed, a zero-timeout wait (all
+            // boundary, no budget) must still see it.
+            assert!(db.wait(seen, Duration::ZERO), "round {round}: ring lost at boundary");
+        }
+    }
+
+    /// A stale `seen` from before earlier rings never blocks.
+    #[test]
+    fn doorbell_wait_returns_immediately_when_already_passed() {
+        let db = Doorbell::new();
+        db.ring();
+        db.ring();
+        let start = Instant::now();
+        assert!(db.wait(0, Duration::from_secs(5)));
+        assert!(start.elapsed() < Duration::from_secs(1));
+    }
+
+    #[test]
+    fn policy_parse() {
+        assert_eq!(IdlePolicy::parse("poll"), Some(IdlePolicy::Poll));
+        assert_eq!(IdlePolicy::parse("adaptive"), Some(IdlePolicy::default()));
+        assert_eq!(
+            IdlePolicy::parse("adaptive:32:2500"),
+            Some(IdlePolicy::Adaptive {
+                spin_iters: 32,
+                park_timeout: Duration::from_micros(2500),
+            })
+        );
+        assert_eq!(IdlePolicy::parse("bogus"), None);
+        assert_eq!(IdlePolicy::parse("adaptive:x:1"), None);
+    }
+
+    /// The governor must descend to the park rung on a long empty
+    /// streak and climb back up on productive work.
+    #[test]
+    fn governor_ladder_parks_and_resets() {
+        let ledger = CpuLedger::new();
+        let mut gov = IdleGovernor::new(
+            IdlePolicy::Adaptive { spin_iters: 2, park_timeout: Duration::from_millis(1) },
+            ledger.clone(),
+        );
+        let bell = Doorbell::new();
+        let mut parked = false;
+        for _ in 0..64 {
+            let seen = bell.seq();
+            gov.iteration(false);
+            parked |= gov.idle(&bell, seen);
+        }
+        assert!(parked, "long empty streak must reach the park rung");
+        let s = ledger.snapshot();
+        assert!(s.parks > 0 && s.parked_ns > 0);
+        assert_eq!(s.wakes, 0, "nothing rang");
+        // Productive work resets the ladder: the next idle spin, not
+        // park.
+        gov.iteration(true);
+        let seen = bell.seq();
+        gov.iteration(false);
+        let p = ledger.snapshot().parks;
+        assert!(!gov.idle(&bell, seen), "ladder must restart at the spin rung");
+        assert_eq!(ledger.snapshot().parks, p);
+    }
+
+    /// Park backoff is bounded by the policy's park_timeout.
+    #[test]
+    fn governor_backoff_is_bounded() {
+        let gov = IdleGovernor {
+            policy: IdlePolicy::Poll,
+            ledger: CpuLedger::new(),
+            empty_streak: 0,
+            park_streak: 40, // far past any shift width
+            segment: Instant::now(),
+            unflushed: 0,
+        };
+        let cap = Duration::from_millis(3);
+        assert_eq!(gov.backoff(cap), cap);
+        let gov0 = IdleGovernor { park_streak: 0, ..gov };
+        assert_eq!(gov0.backoff(cap), MIN_PARK);
+    }
+
+    /// A ring captured before the work scan can never be slept
+    /// through: the wait sees the advanced sequence immediately.
+    #[test]
+    fn ring_between_scan_and_park_is_not_lost() {
+        let bell = Doorbell::new();
+        for _ in 0..200 {
+            let seen = bell.seq();
+            // "Scan finds nothing"… then the producer publishes + rings.
+            bell.ring();
+            let t0 = Instant::now();
+            assert!(bell.wait(seen, Duration::from_secs(10)));
+            assert!(t0.elapsed() < Duration::from_secs(1), "wait must return immediately");
+        }
+    }
+}

@@ -45,6 +45,7 @@ pub mod dpufs;
 pub mod fault;
 pub mod filelib;
 pub mod fileservice;
+pub mod idle;
 pub mod metrics;
 pub mod net;
 pub mod offload;

@@ -25,11 +25,16 @@ dds — DPU-optimized Disaggregated Storage (reproduction)
 
 USAGE:
     dds serve [--requests N] [--batch B] [--io BYTES] [--no-offload]
-              [--shards N]
+              [--shards N] [--idle-policy poll|adaptive|adaptive:S:US]
         run the full functional server (client → director → offload
         engine / host app → SSD) in-process and report throughput;
         --shards > 1 runs the RSS-sharded data plane (one shard
-        thread per DPU core, one client pipeline per shard)
+        thread per DPU core, one client pipeline per shard).
+        --idle-policy sets the pump discipline: `poll` busy-polls
+        (one core per pump, the Fig 14 baseline), `adaptive`
+        (default) spins then parks on wake doorbells;
+        `adaptive:S:US` = spin S empty iterations, park ≤ US µs.
+        A CPU report (busy fraction, parks, wakes) prints at exit.
     dds kernels
         load artifacts/*.hlo.txt into the PJRT runtime and smoke-test
     dds stack <1..10> [--io BYTES] [--window W] [--write]
@@ -55,18 +60,27 @@ fn main() -> anyhow::Result<()> {
 }
 
 fn serve(args: &[String]) -> anyhow::Result<()> {
+    use dds::idle::IdlePolicy;
     let n_requests: usize =
         arg_val(args, "--requests").map_or(2000, |v| v.parse().unwrap_or(2000));
     let batch: usize = arg_val(args, "--batch").map_or(8, |v| v.parse().unwrap_or(8));
     let io: u32 = arg_val(args, "--io").map_or(1024, |v| v.parse().unwrap_or(1024));
     let offload = !args.iter().any(|a| a == "--no-offload");
     let shards: usize = arg_val(args, "--shards").map_or(1, |v| v.parse().unwrap_or(1));
+    let idle = match arg_val(args, "--idle-policy") {
+        Some(v) => IdlePolicy::parse(&v)
+            .ok_or_else(|| anyhow::anyhow!("bad --idle-policy {v:?} (poll | adaptive | adaptive:S:US)"))?,
+        None => IdlePolicy::default(),
+    };
 
     println!(
-        "building storage server (offload={offload}, io={io}B, batch={batch}, shards={shards})…"
+        "building storage server (offload={offload}, io={io}B, batch={batch}, shards={shards}, idle={})…",
+        idle.label()
     );
     let logic = Arc::new(RawFileOffload);
-    let storage = StorageServer::build(StorageServerConfig::default(), Some(logic.clone()))?;
+    let mut storage_cfg = StorageServerConfig::default();
+    storage_cfg.service.idle = idle;
+    let storage = StorageServer::build(storage_cfg, Some(logic.clone()))?;
 
     // Host application with a pre-filled data file.
     let file_bytes: u64 = 32 << 20;
@@ -74,7 +88,9 @@ fn serve(args: &[String]) -> anyhow::Result<()> {
     let file_id = file.id;
 
     if shards > 1 {
-        return serve_sharded(storage, logic, offload, file, n_requests, batch, io, file_bytes, shards);
+        return serve_sharded(
+            storage, logic, offload, file, n_requests, batch, io, file_bytes, shards, idle,
+        );
     }
 
     let app = RawFileApp::over(&storage, &file)?;
@@ -107,7 +123,20 @@ fn serve(args: &[String]) -> anyhow::Result<()> {
         "director: offloaded={} to_host={}",
         server.director.reqs_offloaded, server.director.reqs_to_host
     );
+    print_cpu("file-service", &server.storage.cpu_stats());
     Ok(())
+}
+
+/// One pump's CPU-plane line (the functional Fig 14 axis).
+fn print_cpu(name: &str, c: &dds::metrics::CpuStats) {
+    println!(
+        "cpu[{name}]: busy {:.1}%  iterations={} (productive={})  parks={} wakes={}",
+        c.busy_fraction() * 100.0,
+        c.iterations,
+        c.productive,
+        c.parks,
+        c.wakes
+    );
 }
 
 /// The RSS-sharded serve path: N shard threads, one client pipeline
@@ -123,6 +152,7 @@ fn serve_sharded(
     io: u32,
     file_bytes: u64,
     shards: usize,
+    idle: dds::idle::IdlePolicy,
 ) -> anyhow::Result<()> {
     use dds::coordinator::{
         run_sharded_request, tuple_for_shard, ShardDriver, ShardedServer, ShardedServerConfig,
@@ -131,7 +161,7 @@ fn serve_sharded(
 
     let logic_dyn: Arc<dyn OffloadLogic> =
         if offload { logic } else { Arc::new(NoOffload) };
-    let cfg = ShardedServerConfig { shards, ..Default::default() };
+    let cfg = ShardedServerConfig { shards, idle, ..Default::default() };
     let server = ShardedServer::over(
         storage,
         cfg,
@@ -196,6 +226,14 @@ fn serve_sharded(
             "  shard {}: msgs={} offloaded={} to_host={}",
             st.shard, st.msgs_in, st.reqs_offloaded, st.reqs_to_host
         );
+    }
+    // all_cpu_stats is the canonical all-pumps view: index 0 is the
+    // file service, the rest are shards (a future pump added there
+    // shows up here automatically).
+    for (i, c) in server.all_cpu_stats().iter().enumerate() {
+        let name =
+            if i == 0 { "file-service".to_string() } else { format!("shard-{}", i - 1) };
+        print_cpu(&name, c);
     }
     Ok(())
 }

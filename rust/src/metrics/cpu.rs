@@ -1,0 +1,167 @@
+//! Per-pump CPU accounting — the functional plane's Fig 14 axis.
+//!
+//! The paper's second headline (next to latency) is CPU: DDS "saves up
+//! to tens of CPU cores per storage server" because its pumps do not
+//! burn a core when there is nothing to do. Every pump in this
+//! reproduction (the file-service loop, each shard loop) owns one
+//! [`CpuLedger`] its [`crate::idle::IdleGovernor`] writes, so the
+//! poll-vs-park economics are observable instead of anecdotal:
+//!
+//! * `iterations` / `productive` / `empty_polls` — how often the pump
+//!   ran and how often that was for nothing;
+//! * `parks` / `wakes` — how often it gave the core back, and how many
+//!   of those sleeps ended because a doorbell rang (vs the bounded
+//!   backoff expiring);
+//! * `busy_ns` / `parked_ns` — the wall-time split the busy-fraction is
+//!   computed from. A pump under `IdlePolicy::Poll` never parks and is
+//!   100% busy by definition; an idle pump under `Adaptive` should sit
+//!   in the low single digits.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Point-in-time snapshot of one pump's [`CpuLedger`] (all counters
+/// monotonic; subtract two snapshots with [`CpuStats::since`] to meter
+/// a window).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CpuStats {
+    /// Pump loop iterations.
+    pub iterations: u64,
+    /// Iterations that found work.
+    pub productive: u64,
+    /// Iterations that found nothing.
+    pub empty_polls: u64,
+    /// Times the pump blocked (doorbell wait, channel recv, or a
+    /// bounded nap).
+    pub parks: u64,
+    /// Parks that ended with a wake signal (doorbell ring / channel
+    /// send) rather than the bounded backoff expiring.
+    pub wakes: u64,
+    /// Wall time attributed to running — spinning, yielding, or doing
+    /// work — in nanoseconds.
+    pub busy_ns: u64,
+    /// Wall time spent parked, in nanoseconds.
+    pub parked_ns: u64,
+}
+
+impl CpuStats {
+    /// Fraction of wall time spent running rather than parked. A pump
+    /// that has never parked is 100% busy by definition (that is the
+    /// polling discipline's cost).
+    pub fn busy_fraction(&self) -> f64 {
+        let total = self.busy_ns + self.parked_ns;
+        if total == 0 {
+            return 1.0;
+        }
+        self.busy_ns as f64 / total as f64
+    }
+
+    /// Counter deltas since an earlier snapshot (window metering).
+    pub fn since(&self, earlier: &CpuStats) -> CpuStats {
+        CpuStats {
+            iterations: self.iterations.saturating_sub(earlier.iterations),
+            productive: self.productive.saturating_sub(earlier.productive),
+            empty_polls: self.empty_polls.saturating_sub(earlier.empty_polls),
+            parks: self.parks.saturating_sub(earlier.parks),
+            wakes: self.wakes.saturating_sub(earlier.wakes),
+            busy_ns: self.busy_ns.saturating_sub(earlier.busy_ns),
+            parked_ns: self.parked_ns.saturating_sub(earlier.parked_ns),
+        }
+    }
+}
+
+/// Lock-free counters one pump writes and anyone may snapshot (shared
+/// as `Arc<CpuLedger>`; the writer is the pump's governor, readers are
+/// stats queries and the bench emitters).
+#[derive(Default)]
+pub struct CpuLedger {
+    iterations: AtomicU64,
+    productive: AtomicU64,
+    empty_polls: AtomicU64,
+    parks: AtomicU64,
+    wakes: AtomicU64,
+    busy_ns: AtomicU64,
+    parked_ns: AtomicU64,
+}
+
+impl CpuLedger {
+    pub fn new() -> Arc<CpuLedger> {
+        Arc::new(CpuLedger::default())
+    }
+
+    /// Account one pump iteration.
+    pub fn iteration(&self, productive: bool) {
+        self.iterations.fetch_add(1, Ordering::Relaxed);
+        if productive {
+            self.productive.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.empty_polls.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Attribute a stretch of wall time to running.
+    pub fn add_busy(&self, d: Duration) {
+        self.busy_ns.fetch_add(d.as_nanos() as u64, Ordering::Relaxed);
+    }
+
+    /// Account one park: how long the pump was blocked and whether a
+    /// wake signal (not the backoff timeout) ended it.
+    pub fn park(&self, parked: Duration, woke: bool) {
+        self.parks.fetch_add(1, Ordering::Relaxed);
+        if woke {
+            self.wakes.fetch_add(1, Ordering::Relaxed);
+        }
+        self.parked_ns.fetch_add(parked.as_nanos() as u64, Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> CpuStats {
+        CpuStats {
+            iterations: self.iterations.load(Ordering::Relaxed),
+            productive: self.productive.load(Ordering::Relaxed),
+            empty_polls: self.empty_polls.load(Ordering::Relaxed),
+            parks: self.parks.load(Ordering::Relaxed),
+            wakes: self.wakes.load(Ordering::Relaxed),
+            busy_ns: self.busy_ns.load(Ordering::Relaxed),
+            parked_ns: self.parked_ns.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Shorthand for `snapshot().busy_fraction()`.
+    pub fn busy_fraction(&self) -> f64 {
+        self.snapshot().busy_fraction()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn busy_fraction_definitions() {
+        let l = CpuLedger::new();
+        // Never parked, never ran: busy by definition (polling pump
+        // that has not flushed yet).
+        assert_eq!(l.busy_fraction(), 1.0);
+        l.add_busy(Duration::from_millis(10));
+        assert_eq!(l.busy_fraction(), 1.0);
+        l.park(Duration::from_millis(90), true);
+        let s = l.snapshot();
+        assert!((s.busy_fraction() - 0.1).abs() < 1e-9);
+        assert_eq!((s.parks, s.wakes), (1, 1));
+    }
+
+    #[test]
+    fn window_delta() {
+        let l = CpuLedger::new();
+        l.iteration(true);
+        l.iteration(false);
+        let a = l.snapshot();
+        l.iteration(false);
+        l.park(Duration::from_millis(1), false);
+        let d = l.snapshot().since(&a);
+        assert_eq!((d.iterations, d.productive, d.empty_polls), (1, 0, 1));
+        assert_eq!((d.parks, d.wakes), (1, 0));
+        assert!(d.parked_ns >= 1_000_000);
+    }
+}

@@ -2,10 +2,12 @@
 //! formatting shared by the functional plane and the testbed.
 
 pub mod bench;
+mod cpu;
 mod histogram;
 mod series;
 pub mod zerocopy;
 
+pub use cpu::{CpuLedger, CpuStats};
 pub use histogram::Histogram;
 pub use series::{fmt_ns, fmt_ops, Row, Table};
 pub use zerocopy::{probe_engine_read_path, ZeroCopyProbe};

@@ -411,6 +411,13 @@ impl OffloadEngine {
         self.tail - self.head
     }
 
+    /// The configured pending timeout (how long a lost completion may
+    /// keep a context in flight before it aborts as ERR) — the bound
+    /// shutdown drains wait against.
+    pub fn pending_timeout(&self) -> std::time::Duration {
+        self.pending_timeout
+    }
+
     /// The engine's cache table handle (shared with director/service).
     pub fn cache(&self) -> &Arc<CuckooCache> {
         &self.cache

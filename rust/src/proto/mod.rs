@@ -170,6 +170,27 @@ impl FileResponse {
         let data = r.take(dlen)?.to_vec();
         Some(FileResponse { req_id, status, data })
     }
+
+    /// Salvage the request id from a record whose full decode failed:
+    /// the id is the first — fixed — header field, so it survives a
+    /// corrupt status byte or truncated payload. Lets the host library
+    /// fail the matching pending operation instead of leaking it (a
+    /// leaked entry wedges `in_flight()`-based quiesce loops forever).
+    ///
+    /// Best-effort by construction: the record carries no checksum
+    /// (the layout is golden-pinned), so corruption INSIDE the id
+    /// bytes cannot be detected and may attribute the failure to a
+    /// different outstanding op. Only records that still carry the
+    /// complete fixed header are salvaged — anything shorter is too
+    /// damaged to trust — and the consumer keeps the misattribution
+    /// observable: the guessed-at op's genuine completion later counts
+    /// as an orphan, and every salvage increments `bad_records`.
+    pub fn peek_req_id(buf: &[u8]) -> Option<u64> {
+        if buf.len() < Self::HEADER_LEN {
+            return None;
+        }
+        Some(u64::from_le_bytes(buf.get(..8)?.try_into().ok()?))
+    }
 }
 
 /// One application-level request inside a network message.

@@ -17,6 +17,7 @@ use std::thread::JoinHandle;
 use super::{Ssd, SsdError};
 use crate::buf::{BufPool, BufView, PooledBuf};
 use crate::fault::{SsdFault, SsdFaultInjector};
+use crate::idle::Doorbell;
 
 /// A submitted operation. Buffers travel with the op as refcounted
 /// views (the functional analog of pointing the driver at
@@ -40,11 +41,15 @@ pub struct Completion {
     pub result: Result<(), SsdError>,
 }
 
-enum Job {
-    /// `fault` is decided at submit time so the injection stream stays
-    /// deterministic in submit order even with racing workers.
-    Op { tag: u64, op: SsdOp, fault: Option<SsdFault> },
-    Stop,
+/// One queued operation. `fault` is decided at submit time so the
+/// injection stream stays deterministic in submit order even with
+/// racing workers. (There is deliberately NO stop sentinel: shutdown
+/// is signalled by dropping the submission sender — see
+/// [`AsyncSsd`]'s `Drop` for the contract.)
+struct Job {
+    tag: u64,
+    op: SsdOp,
+    fault: Option<SsdFault>,
 }
 
 /// Execute one op against the device, honoring an injected fault.
@@ -110,6 +115,11 @@ pub struct AsyncSsd {
     /// attached after spawn; set-once, read lock-free on the op path).
     /// Unset → owned heap buffers per read.
     read_pool: Arc<OnceLock<BufPool>>,
+    /// Doorbell rung after a worker posts a completion, so a parked
+    /// consumer pump (the file service) wakes to absorb it. Set-once;
+    /// unset (and in inline mode, where the submitter IS the poller)
+    /// no ring happens.
+    waker: Arc<OnceLock<Arc<Doorbell>>>,
     /// Optional fault-injection hook, consulted once per submit.
     faults: Option<SsdFaultInjector>,
     handles: Vec<JoinHandle<()>>,
@@ -131,6 +141,7 @@ impl AsyncSsd {
             completions: Arc::new(Mutex::new(VecDeque::new())),
             delayed: Arc::new(Mutex::new(Vec::new())),
             read_pool: Arc::new(OnceLock::new()),
+            waker: Arc::new(OnceLock::new()),
             faults: None,
             handles: Vec::new(),
             workers: 0,
@@ -151,6 +162,15 @@ impl AsyncSsd {
     /// path reads it lock-free.
     pub fn attach_read_pool(&self, pool: BufPool) {
         let _ = self.read_pool.set(pool);
+    }
+
+    /// Attach the doorbell rung when a worker posts a completion (the
+    /// completion interrupt of the wake graph): a consumer pump parked
+    /// between polls is woken instead of waiting out its bounded park.
+    /// Set-once like the read pool; no-op in inline mode, where
+    /// completions are queued on the submitting (= polling) thread.
+    pub fn attach_waker(&self, waker: Arc<Doorbell>) {
+        let _ = self.waker.set(waker);
     }
 
     /// Per-shard submission queues over one shared device (§7).
@@ -178,6 +198,7 @@ impl AsyncSsd {
         let completions = Arc::new(Mutex::new(VecDeque::new()));
         let delayed = Arc::new(Mutex::new(Vec::new()));
         let read_pool: Arc<OnceLock<BufPool>> = Arc::new(OnceLock::new());
+        let waker: Arc<OnceLock<Arc<Doorbell>>> = Arc::new(OnceLock::new());
         let mut handles = Vec::new();
         for _ in 0..workers {
             let rx = rx.clone();
@@ -185,10 +206,15 @@ impl AsyncSsd {
             let completions = completions.clone();
             let delayed: Arc<Mutex<Vec<(u32, Completion)>>> = delayed.clone();
             let read_pool = read_pool.clone();
+            let waker = waker.clone();
             handles.push(std::thread::spawn(move || loop {
+                // The shared receiver mutex is held across this
+                // blocking recv — that is fine because shutdown wakes
+                // it through the channel itself (sender drop), never
+                // by trying to take the mutex.
                 let job = { rx.lock().unwrap().recv() };
                 match job {
-                    Ok(Job::Op { tag, op, fault }) => {
+                    Ok(Job { tag, op, fault }) => {
                         let held = matches!(fault, Some(SsdFault::Delay(_)));
                         if let Some(completion) = run_op(&ssd, read_pool.get(), tag, op, fault) {
                             if held {
@@ -196,10 +222,21 @@ impl AsyncSsd {
                                 delayed.lock().unwrap().push((polls, completion));
                             } else {
                                 completions.lock().unwrap().push_back(completion);
+                                // Ring AFTER the push is visible: a
+                                // consumer that snapshots its doorbell
+                                // before polling can then never sleep
+                                // through this completion.
+                                if let Some(w) = waker.get() {
+                                    w.ring();
+                                }
                             }
                         }
                     }
-                    Ok(Job::Stop) | Err(_) => break,
+                    // Disconnected: the owner dropped the sender (the
+                    // shutdown contract) and every queued op has been
+                    // drained — mpsc delivers buffered messages before
+                    // reporting disconnect.
+                    Err(_) => break,
                 }
             }));
         }
@@ -209,6 +246,7 @@ impl AsyncSsd {
             completions,
             delayed,
             read_pool,
+            waker,
             faults: None,
             handles,
             workers,
@@ -233,7 +271,7 @@ impl AsyncSsd {
             }
             return;
         }
-        self.tx.as_ref().unwrap().send(Job::Op { tag, op, fault }).expect("ssd workers alive");
+        self.tx.as_ref().unwrap().send(Job { tag, op, fault }).expect("ssd workers alive");
     }
 
     /// Poll completed operations (drains up to `max`). Each call ages
@@ -282,12 +320,23 @@ impl AsyncSsd {
 }
 
 impl Drop for AsyncSsd {
+    /// Shutdown contract (regression: PR 5): dropping the submission
+    /// sender is the one and only stop signal. Workers share the
+    /// receiver behind a mutex and block in `recv()` while holding it,
+    /// so shutdown must arrive *through the channel*, never by
+    /// acquiring the mutex: the sender drop wakes the blocked worker
+    /// with `Disconnected` immediately, each remaining worker then
+    /// takes the lock and observes the same, and `drop`/`remount` can
+    /// never hang behind a blocked worker. Queued ops are still
+    /// executed first — mpsc delivers buffered messages before
+    /// reporting disconnect — so a submitted write is never lost to
+    /// shutdown (its completion may be, which is exactly what a
+    /// torn-down completion queue means). A queued stop *sentinel*
+    /// (the previous design) gave neither guarantee shape: it waited
+    /// behind every queued op before waking anyone, and one sentinel
+    /// per worker had to drain strictly in order.
     fn drop(&mut self) {
-        if let Some(tx) = &self.tx {
-            for _ in 0..self.handles.len() {
-                let _ = tx.send(Job::Stop);
-            }
-        }
+        drop(self.tx.take());
         for h in self.handles.drain(..) {
             let _ = h.join();
         }
@@ -489,6 +538,60 @@ mod tests {
         ssd.read_into(0, &mut buf).unwrap();
         assert!(buf[..100].iter().all(|&b| b == 1), "torn prefix landed");
         assert!(buf[100..].iter().all(|&b| b == 0), "bytes past the cut never landed");
+    }
+
+    /// Regression (PR 5): shutdown must have an explicit wake path for
+    /// workers blocked in `recv()` behind the shared receiver mutex —
+    /// the sender-drop contract. Idle workers (nothing queued, one of
+    /// them asleep inside the lock) must all exit promptly.
+    #[test]
+    fn drop_wakes_blocked_workers_promptly() {
+        let ssd = Arc::new(Ssd::new(1 << 20, 512));
+        let aio = AsyncSsd::new(ssd, 4);
+        // Give the workers time to park in recv() (one holding the
+        // receiver mutex, the rest queued on it).
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        let t0 = std::time::Instant::now();
+        drop(aio);
+        assert!(
+            t0.elapsed() < std::time::Duration::from_secs(2),
+            "drop hung behind a blocked worker"
+        );
+    }
+
+    /// The other half of the contract: ops queued at drop time are
+    /// drained before the workers exit (mpsc delivers buffered
+    /// messages before reporting disconnect), so a submitted write is
+    /// never lost to shutdown.
+    #[test]
+    fn drop_drains_queued_ops_before_exit() {
+        let ssd = Arc::new(Ssd::new(1 << 20, 512));
+        let aio = AsyncSsd::new(ssd.clone(), 1);
+        for i in 0..32u64 {
+            aio.submit(i, SsdOp::Write { addr: i * 512, data: vec![i as u8 + 1; 512].into() });
+        }
+        drop(aio); // immediately: most ops are still queued
+        let mut buf = vec![0u8; 512];
+        for i in 0..32u64 {
+            ssd.read_into(i * 512, &mut buf).unwrap();
+            assert!(buf.iter().all(|&b| b == i as u8 + 1), "queued write {i} lost to shutdown");
+        }
+    }
+
+    /// Worker completions ring the attached waker (the completion
+    /// interrupt of the wake graph) — and only after the completion is
+    /// actually pollable.
+    #[test]
+    fn worker_completion_rings_attached_waker() {
+        let ssd = Arc::new(Ssd::new(1 << 20, 512));
+        let aio = AsyncSsd::new(ssd, 2);
+        let bell = Doorbell::new();
+        aio.attach_waker(bell.clone());
+        let seen = bell.seq();
+        aio.submit(1, SsdOp::Write { addr: 0, data: vec![4u8; 512].into() });
+        assert!(bell.wait(seen, std::time::Duration::from_secs(5)), "completion never rang");
+        let done = aio.poll(16);
+        assert_eq!(done.len(), 1, "ring fired before the completion was pollable");
     }
 
     #[test]

@@ -140,6 +140,28 @@ fn crash_recovery_scenario_recovers_committed_state() {
     );
 }
 
+/// The CPU-plane scenario: adaptive pumps park between batches while
+/// SSD chaos, an engine failure and a group stall rage — bounded
+/// completion and byte-exactness must survive every park point, and
+/// after quiesce the pumps must actually be parked (run_scenario
+/// enforces the park/productive deltas against the CpuLedger; a
+/// returned report means they held).
+#[test]
+fn idle_wake_parks_pumps_and_stays_bounded() {
+    let sc = Scenario::idle_wake(chaos_seed());
+    let r = run_scenario(&sc).expect("idle_wake scenario");
+    assert_eq!(r.ok + r.err, sc.total_requests(), "bounded completion");
+    assert!(r.ok > 0, "chaos must not kill everything");
+    // Ledger shape: every pump parked, and at least one park ended in
+    // a doorbell/channel wake (the wake graph actually fired).
+    assert!(r.cpu.iter().all(|c| c.parks > 0), "every pump must have parked: {:?}", r.cpu);
+    assert!(r.cpu.iter().any(|c| c.wakes > 0), "no pump ever woke by a ring: {:?}", r.cpu);
+    println!(
+        "idle_wake(seed={}): ok={} err={} cpu={:?} in {:?}",
+        r.seed, r.ok, r.err, r.cpu, r.elapsed
+    );
+}
+
 #[test]
 fn everything_at_once_survives() {
     let sc = Scenario::everything(chaos_seed());
