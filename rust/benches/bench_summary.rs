@@ -5,8 +5,11 @@
 //! mount latency vs journal chain length into `BENCH_recovery.json`;
 //! and meters the CPU plane — busy fraction and ops/s for
 //! `IdlePolicy::Poll` vs `Adaptive` at idle / moderate / saturating
-//! load (the functional Fig 14 analogue) — into `BENCH_cpu.json`, so
-//! CI can archive the perf trajectory of all three planes per commit.
+//! load (the functional Fig 14 analogue) — into `BENCH_cpu.json`; and
+//! records the burst pipeline's tail-latency trajectory (director
+//! p50/p99/p99.9 at the same three load levels) into
+//! `BENCH_latency.json`, so CI can archive the perf trajectory of all
+//! four planes per commit.
 //!
 //! Smoke mode is the default (seconds, not minutes); tune with:
 //!   DDS_BENCH_READS   probe reads per mode        (default 2000)
@@ -16,10 +19,15 @@
 //!   DDS_BENCH_RECOVERY_OUT  recovery output       (default target/BENCH_recovery.json)
 //!   DDS_BENCH_CPU_MS  cpu-plane window, ms        (default 400)
 //!   DDS_BENCH_CPU_OUT cpu-plane output            (default target/BENCH_cpu.json)
-//!   DDS_BENCH_STRICT=1  make the CPU-plane shape checks fatal (idle
-//!                       busy fractions + 5% saturated parity);
-//!                       default is warn-only so noisy runners never
-//!                       lose the artifacts
+//!   DDS_BENCH_LAT_MS  latency window per phase, ms (default 400)
+//!   DDS_BENCH_LATENCY_OUT  latency output         (default target/BENCH_latency.json)
+//!   DDS_BENCH_LAT_CEILING_US  p99 ceiling for the un-queued latency
+//!                       phases, µs (default 200000)
+//!   DDS_BENCH_STRICT=1  make the CPU-plane and latency shape checks
+//!                       fatal (idle busy fractions, 5% saturated
+//!                       parity, latency p99 ceiling); default is
+//!                       warn-only so noisy runners never lose the
+//!                       artifacts
 //!
 //! Outputs default under target/ so a local `cargo bench` never
 //! dirties the tracked repo-root copies (which only the CI job — with
@@ -222,6 +230,91 @@ fn cpu_policy_point(policy: IdlePolicy, label: &'static str, window: Duration) -
     }
 }
 
+/// One load phase of the tail-latency trajectory.
+struct LatencyPoint {
+    phase: &'static str,
+    count: u64,
+    mean_ns: f64,
+    p50_ns: u64,
+    p99_ns: u64,
+    p999_ns: u64,
+    max_ns: u64,
+    ops_per_sec: f64,
+}
+
+/// The tail-latency trajectory: per-request service latency at the
+/// director (admission → response framing) over one shard + the file
+/// service, metered at idle (sparse single reads), moderate (paced
+/// 8-read batches) and saturating (closed-loop) load. Each phase is a
+/// snapshot window — `LatencySnapshot::since` isolates the phase from
+/// everything recorded before it.
+fn latency_profile(window: Duration) -> Vec<LatencyPoint> {
+    let logic = Arc::new(RawFileOffload);
+    let server_cfg = StorageServerConfig { ssd_bytes: 64 << 20, ..Default::default() };
+    let storage = StorageServer::build(server_cfg, Some(logic.clone())).expect("storage");
+    let file = storage.create_filled_file("bench", "data", FILE_BYTES).expect("fill");
+    let fid = file.id.0;
+    let cfg = ShardedServerConfig { shards: 1, ..Default::default() };
+    let server = ShardedServer::over(
+        storage,
+        cfg,
+        logic,
+        AppSignature::server_port(5000),
+        |_shard, st| RawFileApp::over(st, &file),
+    )
+    .expect("sharded server");
+    let mut driver = ShardDriver::new(0);
+    let tuple = tuple_for_shard(0, 1, 0x0a00_0001, 40_000, 0x0a00_00ff, 5000);
+    driver.connect(&server, tuple).unwrap();
+
+    let mut points = Vec::new();
+    // (phase, reads per message, inter-message pacing)
+    let phases: [(&'static str, usize, Option<Duration>); 3] = [
+        ("idle", 1, Some(Duration::from_millis(10))),
+        ("moderate", 8, Some(Duration::from_millis(2))),
+        ("saturating", 8, None),
+    ];
+    for (phase, batch, pace) in phases {
+        let mut gen = RandomIoGen::new(fid, FILE_BYTES, 4096, 1.0, batch, 1234);
+        let before = server.latency_snapshot();
+        let t0 = Instant::now();
+        let mut ops = 0u64;
+        while t0.elapsed() < window {
+            let msg = gen.next_msg();
+            let r = run_sharded_request(&server, &mut driver, &tuple, &msg, Duration::from_secs(5))
+                .expect("latency phase request");
+            ops += r.len() as u64;
+            if let Some(p) = pace {
+                std::thread::sleep(p);
+            }
+        }
+        let elapsed = t0.elapsed().as_secs_f64();
+        let delta = server.latency_snapshot().since(&before);
+        let s = delta.stats();
+        points.push(LatencyPoint {
+            phase,
+            count: s.count,
+            mean_ns: s.mean_ns,
+            p50_ns: s.p50_ns,
+            p99_ns: s.p99_ns,
+            p999_ns: s.p999_ns,
+            max_ns: s.max_ns,
+            ops_per_sec: ops as f64 / elapsed,
+        });
+    }
+    points
+}
+
+fn latency_point_json(p: &LatencyPoint) -> String {
+    format!(
+        concat!(
+            "{{\"phase\":\"{}\",\"count\":{},\"mean_ns\":{:.1},\"p50_ns\":{},",
+            "\"p99_ns\":{},\"p999_ns\":{},\"max_ns\":{},\"ops_per_sec\":{:.1}}}"
+        ),
+        p.phase, p.count, p.mean_ns, p.p50_ns, p.p99_ns, p.p999_ns, p.max_ns, p.ops_per_sec
+    )
+}
+
 fn cpu_point_json(p: &CpuPoint) -> String {
     format!(
         concat!(
@@ -352,6 +445,22 @@ fn main() {
     println!("{cpu_json}");
     eprintln!("bench_summary: wrote {cpu_out}");
 
+    // Latency plane: the tail-latency trajectory of the burst pipeline
+    // (per-request director latency at idle / moderate / saturating
+    // load). Records the p50/p99/p99.9 curve CI archives per commit.
+    let lat_out = std::env::var("DDS_BENCH_LATENCY_OUT")
+        .unwrap_or_else(|_| "target/BENCH_latency.json".into());
+    let lat_window = Duration::from_millis(env_u64("DDS_BENCH_LAT_MS", 400));
+    eprintln!("bench_summary: latency trajectory ({lat_window:?}/load point)...");
+    let lat_points = latency_profile(lat_window);
+    let lat_json = format!(
+        "{{\n  \"bench\": \"latency\",\n  \"smoke\": true,\n  \"phases\": [\n    {}\n  ]\n}}\n",
+        lat_points.iter().map(latency_point_json).collect::<Vec<_>>().join(",\n    ")
+    );
+    std::fs::write(&lat_out, &lat_json).expect("write latency summary");
+    println!("{lat_json}");
+    eprintln!("bench_summary: wrote {lat_out}");
+
     // Shape checks: Poll burns the cores at idle, Adaptive gives them
     // back, and Adaptive's saturated throughput stays within 5% of
     // Poll's. All three are wall-clock measurements that scheduler
@@ -387,6 +496,24 @@ fn main() {
             adaptive.saturated_ops, poll.saturated_ops
         ),
     );
+    // Latency-plane shape: every phase recorded samples, and the
+    // un-queued phases stay under a generous wall-clock ceiling (the
+    // functional path is µs-scale; the ceiling only catches a pipeline
+    // that stalls bursts by whole timer ticks). The saturating phase is
+    // a closed loop whose tail is runner-dependent, so it is exempt.
+    let ceiling_ns = env_u64("DDS_BENCH_LAT_CEILING_US", 200_000) * 1_000;
+    for p in &lat_points {
+        check(p.count > 0, format!("latency phase {:?} recorded no samples", p.phase));
+        if p.phase != "saturating" {
+            check(
+                p.p99_ns <= ceiling_ns,
+                format!(
+                    "latency phase {:?} p99 {} ns exceeds ceiling {} ns",
+                    p.phase, p.p99_ns, ceiling_ns
+                ),
+            );
+        }
+    }
 
     // The acceptance contract this PR is gated on (kept as asserts so a
     // regression turns the emitter red even before anyone reads JSON).

@@ -81,6 +81,13 @@ pub struct StorageServer {
     /// The service pump's CPU ledger (direct handle — no control
     /// round trip, safe to read while the service is parked).
     cpu: std::sync::Arc<crate::metrics::CpuLedger>,
+    /// The file service's own latency recorder (staging allocation →
+    /// response delivered; direct handle, like `cpu`).
+    lat: std::sync::Arc<crate::metrics::LatencyHistogram>,
+    /// Peer recorders folded into `ControlMsg::LatencyStats` replies —
+    /// outer assemblies (director shards) register theirs here.
+    lat_peers:
+        std::sync::Arc<std::sync::Mutex<Vec<std::sync::Arc<crate::metrics::LatencyHistogram>>>>,
     /// Build options (kept for introspection / future rebuilds).
     pub cfg: StorageServerConfig,
 }
@@ -130,6 +137,8 @@ impl StorageServer {
         let read_buf_pool = service.read_buf_pool().clone();
         let service_wake = service.waker();
         let cpu = service.cpu_ledger();
+        let lat = service.latency_recorder();
+        let lat_peers = service.latency_peers();
         let handle = service.spawn(ctrl.clone());
         Ok(StorageServer {
             ssd,
@@ -141,6 +150,8 @@ impl StorageServer {
             ctrl,
             service_wake,
             cpu,
+            lat,
+            lat_peers,
             cfg,
         })
     }
@@ -161,6 +172,29 @@ impl StorageServer {
     /// service through the raw control sender and need to ring it).
     pub fn service_waker(&self) -> std::sync::Arc<crate::idle::Doorbell> {
         self.service_wake.clone()
+    }
+
+    /// Register a peer latency recorder (a director shard's, say) so
+    /// the control plane's `LatencyStats` reply — and
+    /// [`Self::latency_stats`] — report the whole deployment's
+    /// trajectory, not just the file service's own.
+    pub fn register_latency_recorder(
+        &self,
+        recorder: std::sync::Arc<crate::metrics::LatencyHistogram>,
+    ) {
+        self.lat_peers.lock().unwrap().push(recorder);
+    }
+
+    /// Merged latency summary: the file service's staging-to-delivery
+    /// recorder plus every registered peer. Direct handle — does not
+    /// wake a parked service the way the [`DdsClient::latency_stats`]
+    /// control round trip would.
+    pub fn latency_stats(&self) -> crate::metrics::LatencyStats {
+        let mut merged = self.lat.snapshot();
+        for peer in self.lat_peers.lock().unwrap().iter() {
+            merged.merge(&peer.snapshot());
+        }
+        merged.stats()
     }
 
     /// An SPDK-like async handle for the offload engine (the engine

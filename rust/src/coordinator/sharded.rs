@@ -34,10 +34,10 @@ use std::time::{Duration, Instant};
 
 use super::{host_exchange, ClientConn, StorageServer, StorageServerConfig};
 use crate::apps::HostApp;
-use crate::director::{rss_core, AppSignature, DirectorShard, DirectorShardStats};
+use crate::director::{rss_core, AppSignature, Burst, DirectorOut, DirectorShard, DirectorShardStats};
 use crate::fault::{FaultPlane, FaultSite};
 use crate::idle::{IdleGovernor, IdlePolicy, IdleRecv};
-use crate::metrics::{CpuLedger, CpuStats};
+use crate::metrics::{CpuLedger, CpuStats, LatencyHistogram, LatencySnapshot, LatencyStats};
 use crate::net::tcp::{Segment, TcpEndpoint};
 use crate::net::FiveTuple;
 use crate::offload::{OffloadEngine, OffloadEngineConfig, OffloadLogic};
@@ -70,6 +70,13 @@ pub struct ShardedServerConfig {
     /// wake, so nothing can be lost. (The file service's own policy is
     /// configured on `server.service.idle`.)
     pub idle: IdlePolicy,
+    /// Maximum input batches a shard pump drains into one [`Burst`]
+    /// before servicing it (the batch-pipeline knob; `dds serve
+    /// --burst`). Larger bursts amortize more per-record bookkeeping
+    /// per pass but add queueing delay under saturation; 64 matches the
+    /// pre-burst loop bound and keeps worst-case added latency ≈ one
+    /// burst service time. Clamped to ≥ 1.
+    pub burst: usize,
 }
 
 impl Default for ShardedServerConfig {
@@ -81,6 +88,7 @@ impl Default for ShardedServerConfig {
             queue_workers: 0,
             faults: None,
             idle: IdlePolicy::default(),
+            burst: 64,
         }
     }
 }
@@ -150,6 +158,12 @@ struct Shard<A: HostApp> {
     /// Engine failure injection, set by the owner thread-safely and
     /// applied by the shard thread at its next iteration.
     fail_flag: Arc<AtomicBool>,
+    /// Reused scratch for the decode/service stage's outputs (capacity
+    /// survives across bursts — steady-state servicing allocates no
+    /// carrier Vecs).
+    douts: Vec<(FiveTuple, DirectorOut)>,
+    /// Reused scratch for the completion-drain stage.
+    pumped: Vec<(FiveTuple, DirectorOut)>,
 }
 
 impl<A: HostApp> Shard<A> {
@@ -167,26 +181,28 @@ impl<A: HostApp> Shard<A> {
             self.director.set_engine_failed(want);
         }
     }
-    /// Process one batch of client packets for `tuple`; append every
-    /// (tuple, segments-to-client) this produces to `out`.
-    fn step(&mut self, tuple: &FiveTuple, segs: Vec<Segment>, out: &mut Vec<PacketBatch>) {
-        self.sync_fault_flag();
-        if !self.director.matches(tuple) {
-            // §5.1 stage-1 miss: forwarded verbatim toward the host NIC
-            // stack, which lies outside this model. Only counted — no
-            // PEP, no host connection, NO per-flow state of any kind
-            // (the same invariant the director layer asserts), so a
-            // port scan can't grow shard memory.
-            let _ = self.director.on_client_packets(tuple, segs);
-            self.publish_stats();
+    /// Run one whole [`Burst`] through the staged pipeline: fault-flag
+    /// sync, decode/service (director + engine), host exchange, late
+    /// completions, stats publish — each stage once per burst, not once
+    /// per batch. (§5.1 stage-1 misses are counted inside the service
+    /// stage and forwarded outside the model: no PEP, no host
+    /// connection, NO per-flow state of any kind, so a port scan can't
+    /// grow shard memory.)
+    fn step_burst(&mut self, burst: &mut Burst, out: &mut Vec<PacketBatch>) {
+        if burst.is_empty() {
             return;
         }
-        let dout = self.director.on_client_packets(tuple, segs);
-        let mut to_client = dout.to_client;
-        self.pump_flow_host(tuple, dout.to_host, &mut to_client);
-        if !to_client.is_empty() {
-            out.push((*tuple, to_client));
+        self.sync_fault_flag();
+        let mut douts = std::mem::take(&mut self.douts);
+        self.director.service_burst(burst, &mut douts);
+        for (tuple, dout) in douts.drain(..) {
+            let mut to_client = dout.to_client;
+            self.pump_flow_host(&tuple, dout.to_host, &mut to_client);
+            if !to_client.is_empty() {
+                out.push((tuple, to_client));
+            }
         }
+        self.douts = douts;
         self.drain_completions(out);
         self.publish_stats();
     }
@@ -199,13 +215,16 @@ impl<A: HostApp> Shard<A> {
     }
 
     fn drain_completions(&mut self, out: &mut Vec<PacketBatch>) {
-        for (t, o) in self.director.pump_completions() {
+        let mut pumped = std::mem::take(&mut self.pumped);
+        self.director.pump_completions_into(&mut pumped);
+        for (t, o) in pumped.drain(..) {
             let mut to_client = o.to_client;
             self.pump_flow_host(&t, o.to_host, &mut to_client);
             if !to_client.is_empty() {
                 out.push((t, to_client));
             }
         }
+        self.pumped = pumped;
     }
 
     /// Pump one flow's split host connection to quiescence (the shard
@@ -251,26 +270,30 @@ fn shard_loop<A: HostApp>(
     stop: &AtomicBool,
     idle: IdlePolicy,
     cpu: Arc<CpuLedger>,
+    burst_cap: usize,
 ) {
+    let burst_cap = burst_cap.max(1);
     let mut gov = IdleGovernor::new(idle, cpu);
     let mut outs: Vec<PacketBatch> = Vec::new();
+    let mut burst = Burst::with_capacity(burst_cap);
     let mut disconnected = false;
     loop {
         let mut progressed = false;
-        // Bounded input burst (batching without extra latency) —
-        // bounded so a producer that outpaces this shard can't starve
-        // the response path, and `stop` is re-checked inside the burst
-        // (regression, PR 5: stop used to be observed only on the
-        // recv-timeout arm, so sustained input pinned the thread until
-        // channel disconnect).
-        for _ in 0..64 {
+        // Drain stage: gather one bounded input burst WITHOUT servicing
+        // anything yet (batching without extra latency) — bounded so a
+        // producer that outpaces this shard can't starve the response
+        // path, and `stop` is re-checked inside the drain (regression,
+        // PR 5: stop used to be observed only on the recv-timeout arm,
+        // so sustained input pinned the thread until channel
+        // disconnect).
+        for _ in 0..burst_cap {
             if stop.load(Ordering::Relaxed) {
                 break;
             }
             match rx.try_recv() {
                 Ok((tuple, segs)) => {
                     progressed = true;
-                    shard.step(&tuple, segs, &mut outs);
+                    burst.push(tuple, segs);
                 }
                 Err(mpsc::TryRecvError::Empty) => break,
                 Err(mpsc::TryRecvError::Disconnected) => {
@@ -279,12 +302,19 @@ fn shard_loop<A: HostApp>(
                 }
             }
         }
-        // Late engine completions (async SSD queues, pending aborts).
+        // Service stages: the whole burst runs decode → service → host
+        // exchange → completion drain as a unit; per-burst, not
+        // per-batch, bookkeeping.
+        shard.step_burst(&mut burst, &mut outs);
+        // Late engine completions (async SSD queues, pending aborts) —
+        // also covers the empty-burst pass.
         let before = outs.len();
         shard.poll(&mut outs);
         progressed |= outs.len() > before;
         // Flush BEFORE parking or exiting — gathered responses must
         // not sit behind a sleeping shard or be dropped on shutdown.
+        // Burst boundaries remain the ONLY park points: a drained
+        // batch is always serviced and flushed in the same pass.
         if !flush_outs(&mut outs, tx) {
             return;
         }
@@ -311,7 +341,8 @@ fn shard_loop<A: HostApp>(
                         // a wake and its flush). Book the wake-driven
                         // batch as a productive pass and reset the
                         // ladder for the burst that usually follows.
-                        shard.step(&tuple, segs, &mut outs);
+                        burst.push(tuple, segs);
+                        shard.step_burst(&mut burst, &mut outs);
                         gov.woke_with_work();
                     }
                     IdleRecv::Empty => {}
@@ -370,6 +401,9 @@ pub struct ShardedServer {
     /// Per-shard pump CPU ledgers (written by the shard threads' idle
     /// governors; readable any time, including after shutdown).
     cpu: Vec<Arc<CpuLedger>>,
+    /// Per-shard director latency recorders (written lock-free by the
+    /// shard threads; merged at snapshot).
+    lat: Vec<Arc<LatencyHistogram>>,
     joins: Vec<JoinHandle<()>>,
     stop: Arc<AtomicBool>,
 }
@@ -420,6 +454,7 @@ impl ShardedServer {
         let mut engine_pools = Vec::with_capacity(n);
         let mut fail_flags = Vec::with_capacity(n);
         let mut cpu = Vec::with_capacity(n);
+        let mut lat = Vec::with_capacity(n);
         let mut joins = Vec::with_capacity(n);
         for (i, mut aio) in queues.into_iter().enumerate() {
             if let Some(plane) = &cfg.faults {
@@ -433,8 +468,11 @@ impl ShardedServer {
                 engine_cfg.clone(),
             );
             engine_pools.push(engine.pool().clone());
-            let director =
+            let mut director =
                 DirectorShard::new(i, signature, logic.clone(), storage.cache.clone(), engine);
+            let shard_lat = LatencyHistogram::new();
+            director.attach_latency(shard_lat.clone());
+            storage.register_latency_recorder(shard_lat.clone());
             let app = mk_app(i, &storage)?;
             let shard_stats = Arc::new(ShardStats::default());
             let fail_flag = Arc::new(AtomicBool::new(false));
@@ -444,6 +482,8 @@ impl ShardedServer {
                 host_conns: HashMap::new(),
                 stats: shard_stats.clone(),
                 fail_flag: fail_flag.clone(),
+                douts: Vec::new(),
+                pumped: Vec::new(),
             };
             let (in_tx, in_rx) = mpsc::channel();
             let (out_tx, out_rx) = mpsc::channel();
@@ -451,15 +491,19 @@ impl ShardedServer {
             let ledger = CpuLedger::new();
             let ledger2 = ledger.clone();
             let idle = cfg.idle;
+            let burst = cfg.burst;
             let join = std::thread::Builder::new()
                 .name(format!("dds-shard-{i}"))
-                .spawn(move || shard_loop(&mut shard, &in_rx, &out_tx, &stop2, idle, ledger2))
+                .spawn(move || {
+                    shard_loop(&mut shard, &in_rx, &out_tx, &stop2, idle, ledger2, burst)
+                })
                 .map_err(|e| anyhow::anyhow!("spawn shard {i}: {e}"))?;
             inputs.push(in_tx);
             outputs.push(Mutex::new(out_rx));
             stats.push(shard_stats);
             fail_flags.push(fail_flag);
             cpu.push(ledger);
+            lat.push(shard_lat);
             joins.push(join);
         }
         Ok(ShardedServer {
@@ -471,6 +515,7 @@ impl ShardedServer {
             engine_pools,
             fail_flags,
             cpu,
+            lat,
             joins,
             stop,
         })
@@ -551,6 +596,23 @@ impl ShardedServer {
         let mut v = vec![self.storage.cpu_stats()];
         v.extend(self.cpu_stats());
         v
+    }
+
+    /// Merged per-request service-latency snapshot across every shard
+    /// director (recorded lock-free per pump at request admission →
+    /// response framing; merged here, at read time). Subtract two of
+    /// these with [`LatencySnapshot::since`] to meter a load window.
+    pub fn latency_snapshot(&self) -> LatencySnapshot {
+        let mut acc = LatencySnapshot::default();
+        for l in &self.lat {
+            acc.merge(&l.snapshot());
+        }
+        acc
+    }
+
+    /// Quantile summary of [`Self::latency_snapshot`].
+    pub fn latency_stats(&self) -> LatencyStats {
+        self.latency_snapshot().stats()
     }
 
     /// Aggregate counters across every shard.
@@ -762,6 +824,8 @@ mod tests {
             host_conns: HashMap::new(),
             stats: Arc::new(ShardStats::default()),
             fail_flag: Arc::new(AtomicBool::new(false)),
+            douts: Vec::new(),
+            pumped: Vec::new(),
         }
     }
 
@@ -778,7 +842,15 @@ mod tests {
         let stop = Arc::new(AtomicBool::new(false));
         let stop2 = stop.clone();
         let pump = std::thread::spawn(move || {
-            shard_loop(&mut shard, &in_rx, &out_tx, &stop2, IdlePolicy::default(), CpuLedger::new())
+            shard_loop(
+                &mut shard,
+                &in_rx,
+                &out_tx,
+                &stop2,
+                IdlePolicy::default(),
+                CpuLedger::new(),
+                64,
+            )
         });
         // Saturating producer on a non-matching tuple (forward path:
         // counted, no per-flow state) — keeps the channel non-empty
@@ -828,7 +900,7 @@ mod tests {
         let ledger = CpuLedger::new();
         let ledger2 = ledger.clone();
         let pump = std::thread::spawn(move || {
-            shard_loop(&mut shard, &in_rx, &out_tx, &stop2, IdlePolicy::default(), ledger2)
+            shard_loop(&mut shard, &in_rx, &out_tx, &stop2, IdlePolicy::default(), ledger2, 64)
         });
         std::thread::sleep(Duration::from_millis(100));
         let s = ledger.snapshot();

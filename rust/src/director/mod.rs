@@ -22,12 +22,14 @@ pub mod shard;
 
 pub use multiflow::MultiFlowDirector;
 pub use rss::{rss_core, toeplitz_hash};
-pub use shard::{DirectorShard, DirectorShardStats};
+pub use shard::{Burst, DirectorShard, DirectorShardStats};
 
 use std::sync::Arc;
+use std::time::Instant;
 
 use crate::buf::ByteRope;
 use crate::cache::CuckooCache;
+use crate::metrics::LatencyHistogram;
 use crate::net::tcp::{Segment, TcpEndpoint};
 use crate::net::FiveTuple;
 use crate::offload::{OffloadEngine, OffloadLogic, RoutedReq};
@@ -89,6 +91,15 @@ pub struct TrafficDirector {
     /// each forwarded position` (plus a remaining-responses counter for
     /// cleanup).
     host_idx_map: std::collections::HashMap<u64, (Vec<u16>, usize)>,
+    /// Per-request service-latency recorder (the tail trajectory is
+    /// measured AT the director: request admitted → response framed to
+    /// the client, spanning offload execute, SSD round trip and host
+    /// slow path alike). `None` keeps the packet path entirely free of
+    /// timing bookkeeping.
+    lat: Option<Arc<LatencyHistogram>>,
+    /// Admission timestamps of in-flight requests, keyed by
+    /// `(msg_id, original idx)`; removed when the response is framed.
+    started: std::collections::HashMap<(u64, u16), Instant>,
     /// Stats.
     pub msgs_in: u64,
     pub reqs_offloaded: u64,
@@ -110,10 +121,18 @@ impl TrafficDirector {
             client_rx: framing::StreamBuf::new(),
             host_rx: framing::StreamBuf::new(),
             host_idx_map: std::collections::HashMap::new(),
+            lat: None,
+            started: std::collections::HashMap::new(),
             msgs_in: 0,
             reqs_offloaded: 0,
             reqs_to_host: 0,
         }
+    }
+
+    /// Attach the shard's latency recorder; every subsequent request is
+    /// timed from admission to response framing.
+    pub fn attach_latency(&mut self, lat: Arc<LatencyHistogram>) {
+        self.lat = Some(lat);
     }
 
     /// Process packets arriving from the client NIC port.
@@ -153,6 +172,15 @@ impl TrafficDirector {
             dpu_reqs.extend(d);
         }
         self.reqs_offloaded += dpu_reqs.len() as u64;
+        // One timestamp per burst stamps every admitted request (engine
+        // bounces keep their dpu stamp — the client's clock does not
+        // restart because the engine said no).
+        if self.lat.is_some() && (!host_reqs.is_empty() || !dpu_reqs.is_empty()) {
+            let now = Instant::now();
+            for r in host_reqs.iter().chain(dpu_reqs.iter()) {
+                self.started.insert((r.msg_id, r.idx), now);
+            }
+        }
         // Execute offloadable requests; bounced ones join the host list.
         let mut responses = Vec::new();
         let bounced = engine.execute(dpu_reqs, &mut responses);
@@ -226,8 +254,17 @@ impl TrafficDirector {
         if responses.is_empty() {
             return;
         }
+        // One clock read per response burst: the whole burst completes
+        // "now" (sub-burst skew is below bucket resolution by design —
+        // burst service is run-to-completion).
+        let done = self.lat.as_ref().map(|l| (l.clone(), Instant::now()));
         let mut rope = ByteRope::new();
         for r in responses {
+            if let Some((lat, now)) = &done {
+                if let Some(t0) = self.started.remove(&(r.msg_id, r.idx)) {
+                    lat.record_duration(now.duration_since(t0));
+                }
+            }
             r.frame_into_rope(&mut rope);
         }
         out.to_client.extend(self.client_ep.send_rope(rope));

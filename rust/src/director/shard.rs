@@ -20,6 +20,7 @@ use std::sync::Arc;
 use super::rss::rss_core;
 use super::{AppSignature, DirectorOut, TrafficDirector};
 use crate::cache::CuckooCache;
+use crate::metrics::LatencyHistogram;
 use crate::net::tcp::Segment;
 use crate::net::FiveTuple;
 use crate::offload::{OffloadEngine, OffloadLogic};
@@ -62,6 +63,38 @@ impl DirectorShardStats {
     }
 }
 
+/// Reusable carrier for one input burst: every packet batch a shard
+/// pump drained before servicing any of them. The pipeline stages
+/// (drain → decode/service → host exchange → SSD → respond) each
+/// process the whole carrier before handing it on, so per-record
+/// bookkeeping — fault-flag sync, completion drains, stats publishes,
+/// CpuLedger updates, output flushes — is paid once per burst. The
+/// carrier is drained in place and its capacity survives across
+/// bursts: steady-state pumping allocates nothing.
+#[derive(Default)]
+pub struct Burst {
+    batches: Vec<(FiveTuple, Vec<Segment>)>,
+}
+
+impl Burst {
+    pub fn with_capacity(cap: usize) -> Self {
+        Burst { batches: Vec::with_capacity(cap) }
+    }
+
+    #[inline]
+    pub fn push(&mut self, tuple: FiveTuple, segs: Vec<Segment>) {
+        self.batches.push((tuple, segs));
+    }
+
+    pub fn len(&self) -> usize {
+        self.batches.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.batches.is_empty()
+    }
+}
+
 /// One core's traffic director + offload engine: per-flow PEPs created
 /// on first packet, all state shard-local.
 pub struct DirectorShard {
@@ -79,6 +112,10 @@ pub struct DirectorShard {
     agg_msgs_in: u64,
     agg_reqs_offloaded: u64,
     agg_reqs_to_host: u64,
+    /// Shard-wide latency recorder, shared by every flow PEP on this
+    /// shard (one writer thread — the shard pump — so the relaxed adds
+    /// never bounce a cache line between cores). `None` until attached.
+    lat: Option<Arc<LatencyHistogram>>,
 }
 
 impl DirectorShard {
@@ -101,7 +138,18 @@ impl DirectorShard {
             agg_msgs_in: 0,
             agg_reqs_offloaded: 0,
             agg_reqs_to_host: 0,
+            lat: None,
         }
+    }
+
+    /// Attach the shard's service-latency recorder; propagated to every
+    /// flow PEP (existing and future) so each admitted request is timed
+    /// through to its client-bound response.
+    pub fn attach_latency(&mut self, lat: Arc<LatencyHistogram>) {
+        for dir in self.flows.values_mut() {
+            dir.attach_latency(lat.clone());
+        }
+        self.lat = Some(lat);
     }
 
     /// This shard's core index.
@@ -134,11 +182,12 @@ impl DirectorShard {
             std::collections::hash_map::Entry::Occupied(e) => e.into_mut(),
             std::collections::hash_map::Entry::Vacant(e) => {
                 self.flows_created += 1;
-                e.insert(TrafficDirector::new(
-                    self.signature,
-                    self.logic.clone(),
-                    self.cache.clone(),
-                ))
+                let mut dir =
+                    TrafficDirector::new(self.signature, self.logic.clone(), self.cache.clone());
+                if let Some(lat) = &self.lat {
+                    dir.attach_latency(lat.clone());
+                }
+                e.insert(dir)
             }
         };
         // Fold this call's counter deltas into the shard-level sums
@@ -149,6 +198,27 @@ impl DirectorShard {
         self.agg_reqs_offloaded += dir.reqs_offloaded - before.1;
         self.agg_reqs_to_host += dir.reqs_to_host - before.2;
         out
+    }
+
+    /// Service a whole [`Burst`] as a unit (decode/service stage of the
+    /// batch pipeline): every batch runs through its flow's PEP and the
+    /// colocated engine back-to-back, and only *matching* flows emit an
+    /// entry into `outs` for the host-exchange stage — stage-1 misses
+    /// are counted and forwarded outside the model, exactly like the
+    /// single-batch path (no PEP, no host connection, no per-flow
+    /// state). Drains the carrier in place, leaving its capacity.
+    pub fn service_burst(
+        &mut self,
+        burst: &mut Burst,
+        outs: &mut Vec<(FiveTuple, DirectorOut)>,
+    ) {
+        for (tuple, segs) in burst.batches.drain(..) {
+            let matched = self.matches(&tuple);
+            let out = self.on_client_packets(&tuple, segs);
+            if matched {
+                outs.push((tuple, out));
+            }
+        }
     }
 
     /// Host-side packets of one flow's split connection.
@@ -162,13 +232,20 @@ impl DirectorShard {
     /// Drain late engine completions for every flow on this shard.
     pub fn pump_completions(&mut self) -> Vec<(FiveTuple, DirectorOut)> {
         let mut outs = Vec::new();
+        self.pump_completions_into(&mut outs);
+        outs
+    }
+
+    /// Buffer-reusing variant: appends `(tuple, out)` pairs to `outs`
+    /// so the shard pump's steady-state completion drain allocates
+    /// nothing.
+    pub fn pump_completions_into(&mut self, outs: &mut Vec<(FiveTuple, DirectorOut)>) {
         for (tuple, dir) in self.flows.iter_mut() {
             let out = dir.pump_completions(&mut self.engine);
             if !out.to_client.is_empty() || !out.to_host.is_empty() {
                 outs.push((*tuple, out));
             }
         }
-        outs
     }
 
     /// The engine colocated with this shard.

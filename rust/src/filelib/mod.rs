@@ -20,7 +20,7 @@ use std::time::Duration;
 
 use crate::dpufs::{DirId, FileId, FsError};
 use crate::fileservice::{ControlMsg, Doorbell, GroupChannel, GroupCounters};
-use crate::metrics::CpuStats;
+use crate::metrics::{CpuStats, LatencyStats};
 use crate::proto::{FileOpKind, FileRequest, FileResponse, Status};
 use crate::ring::{ProgressRing, RequestRing, ResponseRing, RingStatus};
 
@@ -365,6 +365,13 @@ impl DdsClient {
     /// utilisation the paper's Fig 14 charts.
     pub fn cpu_stats(&self) -> Result<CpuStats, LibError> {
         Ok(ctrl_call!(self, CpuStats {}))
+    }
+
+    /// Tail-latency summary (p50/p99/p99.9/max) of the deployment's
+    /// request path: the file service's staging-to-delivery recorder
+    /// merged with every registered peer recorder (director shards).
+    pub fn latency_stats(&self) -> Result<LatencyStats, LibError> {
+        Ok(ctrl_call!(self, LatencyStats {}))
     }
 
     /// `CreatePoll` (§4.2): allocate request/response rings for the

@@ -28,19 +28,20 @@ pub use staging::{OrderedStaging, StagedStatus};
 
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc;
-use std::sync::{Arc, RwLock};
+use std::sync::{Arc, Mutex, RwLock};
 use std::thread::JoinHandle;
+use std::time::Instant;
 
 use crate::buf::{BufPool, BufView};
 use crate::cache::CuckooCache;
 use crate::dma::DmaChannel;
 use crate::dpufs::{DirId, DpuFs, FileId, FsError};
 use crate::idle::IdleGovernor;
-use crate::metrics::{CpuLedger, CpuStats};
+use crate::metrics::{CpuLedger, CpuStats, LatencyHistogram, LatencyStats};
 use crate::offload::{OffloadLogic, ReadOp, WriteOp};
 use crate::proto::{FileOpKind, FileRequest, FileResponse, Status};
-use crate::ring::{ProgressRing, ResponseRing, RingStatus};
-use crate::ssd::{AsyncSsd, SsdOp};
+use crate::ring::{ProgressRing, ResponseRing};
+use crate::ssd::{AsyncSsd, Completion, SsdOp};
 
 // The wake machinery lives in the CPU plane (`crate::idle`);
 // re-exported here because the doorbell is part of the poll-group API
@@ -65,6 +66,13 @@ pub enum ControlMsg {
     /// CPU-ledger snapshot of the service pump (the functional Fig 14
     /// CPU axis: iterations, parks, wakes, busy fraction).
     CpuStats { reply: mpsc::Sender<CpuStats> },
+    /// Tail-latency summary: the service's own staging-to-delivery
+    /// recorder merged with every registered peer recorder (director
+    /// shards register theirs via
+    /// [`crate::coordinator::StorageServer::register_latency_recorder`]),
+    /// so one control round trip reports the whole deployment's
+    /// p50/p99/p99.9 trajectory.
+    LatencyStats { reply: mpsc::Sender<LatencyStats> },
     /// Fault plane: stall one poll group for N service iterations (the
     /// service neither drains its request ring nor delivers its
     /// responses while stalled). Replies whether the group exists.
@@ -257,6 +265,19 @@ pub struct FileService {
     wake: Arc<Doorbell>,
     /// The pump's CPU ledger (iterations / parks / busy fraction).
     cpu: Arc<CpuLedger>,
+    /// Service-side latency recorder: staging allocation (request
+    /// admitted) → response DMA-written to the host ring. One clock
+    /// read meters each delivery burst.
+    lat: Arc<LatencyHistogram>,
+    /// Peer recorders folded into [`ControlMsg::LatencyStats`] replies
+    /// (director shards register theirs through the storage server).
+    lat_peers: Arc<Mutex<Vec<Arc<LatencyHistogram>>>>,
+    /// Reused burst buffers — the batch pipeline's steady state
+    /// allocates nothing: SSD ops staged per intake burst, completions
+    /// polled per absorb pass, deliverables gathered per response burst.
+    submit_buf: Vec<(u64, SsdOp)>,
+    comp_buf: Vec<Completion>,
+    deliver_buf: Vec<([u8; FileResponse::HEADER_LEN], BufView)>,
 }
 
 impl FileService {
@@ -309,6 +330,11 @@ impl FileService {
                 cache,
                 wake,
                 cpu,
+                lat: LatencyHistogram::new(),
+                lat_peers: Arc::new(Mutex::new(Vec::new())),
+                submit_buf: Vec::new(),
+                comp_buf: Vec::new(),
+                deliver_buf: Vec::new(),
             },
             tx,
         )
@@ -444,6 +470,13 @@ impl FileService {
                 ControlMsg::CpuStats { reply } => {
                     let _ = reply.send(self.cpu.snapshot());
                 }
+                ControlMsg::LatencyStats { reply } => {
+                    let mut merged = self.lat.snapshot();
+                    for peer in self.lat_peers.lock().unwrap().iter() {
+                        merged.merge(&peer.snapshot());
+                    }
+                    let _ = reply.send(merged.stats());
+                }
                 ControlMsg::InjectGroupStall { group, iterations, reply } => {
                     let known = group < self.groups.len();
                     if known {
@@ -550,6 +583,17 @@ impl FileService {
             for req in batch {
                 self.execute_request(gi, req);
             }
+            // Flush the whole burst's per-extent ops to the SSD queue
+            // as ONE submission: one fault-plane pass (submit order
+            // preserved), one channel send, and — in worker mode — one
+            // completion-lock acquisition + one doorbell ring for the
+            // burst's completions instead of per op. The buffer's
+            // capacity survives the drain for the next burst.
+            if !self.submit_buf.is_empty() {
+                let mut ops = std::mem::take(&mut self.submit_buf);
+                self.aio.submit_batch(&mut ops);
+                self.submit_buf = ops;
+            }
         }
         any
     }
@@ -581,8 +625,8 @@ impl FileService {
                         self.groups[gi].staging.set_extents(slot, &extents);
                         for (ei, e) in extents.iter().enumerate() {
                             let tag = pack_tag(gi, slot, ei);
-                            self.aio
-                                .submit(tag, SsdOp::Read { addr: e.addr, len: e.len as usize });
+                            self.submit_buf
+                                .push((tag, SsdOp::Read { addr: e.addr, len: e.len as usize }));
                         }
                     }
                     Err(_) => self.groups[gi].staging.fail(slot),
@@ -616,7 +660,8 @@ impl FileService {
                             // intake.
                             let chunk = req.data.slice(at..at + e.len as usize);
                             at += e.len as usize;
-                            self.aio.submit(tag, SsdOp::Write { addr: e.addr, data: chunk });
+                            self.submit_buf
+                                .push((tag, SsdOp::Write { addr: e.addr, data: chunk }));
                         }
                     }
                     Err(_) => self.groups[gi].staging.fail(slot),
@@ -626,10 +671,12 @@ impl FileService {
     }
 
     /// Poll SSD completions into staging slots (TailB candidates).
+    /// Polls into the reused completion buffer — an idle pass costs a
+    /// relaxed load, not an allocation or a lock.
     fn absorb_completions(&mut self) -> bool {
-        let completions = self.aio.poll(1 << 12);
-        let any = !completions.is_empty();
-        for c in completions {
+        let mut completions = std::mem::take(&mut self.comp_buf);
+        let any = self.aio.poll_into(&mut completions, 1 << 12) > 0;
+        for c in completions.drain(..) {
             let (gi, slot, extent) = unpack_tag(c.tag);
             if gi >= self.groups.len() {
                 continue;
@@ -641,6 +688,7 @@ impl FileService {
                 staging.complete_extent(slot, extent, &c.data, self.cfg.extra_copy);
             }
         }
+        self.comp_buf = completions;
         any
     }
 
@@ -648,6 +696,12 @@ impl FileService {
     /// reached, DMA-write responses to the host ring (TailC advance) and
     /// ring the group's doorbell. Round-robined like intake so one
     /// group's full response ring can't delay everyone else's doorbell.
+    ///
+    /// Delivery is burst-vectored: the whole deliverable window is
+    /// gathered (payloads ride as [`BufView`] clones — refcounts, not
+    /// copies) and handed to the host ring as ONE push sequence — a
+    /// single batched DMA write, a single tail publish, and one
+    /// doorbell ring per group burst.
     fn deliver_responses(&mut self) -> bool {
         let n = self.groups.len();
         if n == 0 {
@@ -656,6 +710,7 @@ impl FileService {
         let start = self.rr_deliver % n;
         self.rr_deliver = self.rr_deliver.wrapping_add(1);
         let pending_timeout = self.cfg.pending_timeout;
+        let mut burst = std::mem::take(&mut self.deliver_buf);
         let mut any = false;
         for k in 0..n {
             let g = &mut self.groups[(start + k) % n];
@@ -689,29 +744,37 @@ impl FileService {
             {
                 continue;
             }
-            let mut delivered = false;
-            while let Some((req_id, status, data)) = g.staging.peek_deliverable() {
-                // Vectored DMA-write: response header + payload view go
-                // to the host ring as one record with no concatenation
-                // buffer (§4.3 — the pre-allocated read buffer IS the
-                // response payload).
+            // Gather the deliverable window: each record is a vectored
+            // (header, payload-view) pair — §4.3's scatter-gather DMA
+            // with no concatenation buffer (the pre-allocated read
+            // buffer IS the response payload).
+            burst.clear();
+            while let Some((req_id, status, data)) = g.staging.peek_deliverable_at(burst.len()) {
                 let code = if status == StagedStatus::Done { Status::Ok } else { Status::Error };
-                let header = FileResponse::encode_header(req_id, code, data.len());
-                match g.chan.resp_ring.push_vectored_dma(&self.dma, &[&header, data.as_slice()])
-                {
-                    RingStatus::Ok => {
-                        g.staging.pop_delivered();
-                        g.delivered += 1;
-                        delivered = true;
-                    }
-                    _ => break, // host ring full; retry next iteration
-                }
+                burst.push((FileResponse::encode_header(req_id, code, data.len()), data));
             }
-            if delivered {
+            let pushed = g.chan.resp_ring.push_burst_vectored_dma(
+                &self.dma,
+                burst.iter().map(|(h, d)| [&h[..], d.as_slice()]),
+            );
+            // A partial push means the host ring filled mid-burst; the
+            // rest stays staged and retries when the host's drain rings
+            // the service awake.
+            if pushed > 0 {
+                // One clock read meters the whole burst's service
+                // latency (allocation → DMA-written).
+                let now = Instant::now();
+                for _ in 0..pushed {
+                    let issued = g.staging.pop_delivered();
+                    self.lat.record_duration(now.duration_since(issued));
+                }
+                g.delivered += pushed as u64;
                 g.chan.doorbell.ring();
                 any = true;
             }
+            burst.clear(); // release the payload refcounts promptly
         }
+        self.deliver_buf = burst;
         any
     }
 
@@ -744,6 +807,20 @@ impl FileService {
     /// busy fraction / parks / wakes without a control round trip.
     pub fn cpu_ledger(&self) -> Arc<CpuLedger> {
         self.cpu.clone()
+    }
+
+    /// The service's own latency recorder (staging allocation →
+    /// response delivered). Clone before `spawn` to observe without a
+    /// control round trip.
+    pub fn latency_recorder(&self) -> Arc<LatencyHistogram> {
+        self.lat.clone()
+    }
+
+    /// The peer-recorder registry behind [`ControlMsg::LatencyStats`].
+    /// Clone before `spawn`; pushing a recorder (a director shard's,
+    /// say) folds it into every subsequent control-plane latency reply.
+    pub fn latency_peers(&self) -> Arc<Mutex<Vec<Arc<LatencyHistogram>>>> {
+        self.lat_peers.clone()
     }
 }
 

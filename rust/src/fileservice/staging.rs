@@ -244,10 +244,18 @@ impl OrderedStaging {
     /// payload comes back as a view (refcount bump) — delivery pushes
     /// it to the host ring without materializing.
     pub fn peek_deliverable(&self) -> Option<(u64, StagedStatus, BufView)> {
-        if self.tail_c >= self.tail_b {
+        self.peek_deliverable_at(0)
+    }
+
+    /// The `k`-th deliverable response past TailC (`k < buffered()`),
+    /// letting delivery gather the whole `[TailC, TailB)` window into
+    /// one burst push without advancing any tail.
+    pub fn peek_deliverable_at(&self, k: usize) -> Option<(u64, StagedStatus, BufView)> {
+        let idx = self.tail_c + k as u64;
+        if idx >= self.tail_b {
             return None;
         }
-        let pos = (self.tail_c % self.capacity() as u64) as usize;
+        let pos = (idx % self.capacity() as u64) as usize;
         let s = self.slots[pos].as_ref().expect("slot in [TailC, TailB)");
         let data = match (&s.status, &s.view) {
             (StagedStatus::Done, Some(v)) => v.clone(),
@@ -259,11 +267,15 @@ impl OrderedStaging {
     /// TailC advance after a successful DMA-write to the host ring.
     /// Drops the slot's view — the pooled buffer goes home once the
     /// last reference (e.g. an in-flight vectored push) releases.
-    pub fn pop_delivered(&mut self) {
+    /// Returns when the slot was allocated, so the caller can meter
+    /// admission-to-delivery service latency.
+    pub fn pop_delivered(&mut self) -> Instant {
         assert!(self.tail_c < self.tail_b, "nothing deliverable");
         let pos = (self.tail_c % self.capacity() as u64) as usize;
-        self.slots[pos] = None;
+        let issued =
+            self.slots[pos].take().expect("slot in [TailC, TailB)").issued;
         self.tail_c += 1;
+        issued
     }
 }
 

@@ -26,6 +26,7 @@ dds — DPU-optimized Disaggregated Storage (reproduction)
 USAGE:
     dds serve [--requests N] [--batch B] [--io BYTES] [--no-offload]
               [--shards N] [--idle-policy poll|adaptive|adaptive:S:US]
+              [--burst N]
         run the full functional server (client → director → offload
         engine / host app → SSD) in-process and report throughput;
         --shards > 1 runs the RSS-sharded data plane (one shard
@@ -34,6 +35,9 @@ USAGE:
         (one core per pump, the Fig 14 baseline), `adaptive`
         (default) spins then parks on wake doorbells;
         `adaptive:S:US` = spin S empty iterations, park ≤ US µs.
+        --burst caps how many packet batches a shard drains per
+        pipeline pass (default 64) — larger bursts amortize more
+        per-record overhead, smaller ones tighten latency.
         A CPU report (busy fraction, parks, wakes) prints at exit.
     dds kernels
         load artifacts/*.hlo.txt into the PJRT runtime and smoke-test
@@ -67,6 +71,8 @@ fn serve(args: &[String]) -> anyhow::Result<()> {
     let io: u32 = arg_val(args, "--io").map_or(1024, |v| v.parse().unwrap_or(1024));
     let offload = !args.iter().any(|a| a == "--no-offload");
     let shards: usize = arg_val(args, "--shards").map_or(1, |v| v.parse().unwrap_or(1));
+    let burst: usize =
+        arg_val(args, "--burst").map_or(64, |v| v.parse().unwrap_or(64)).max(1);
     let idle = match arg_val(args, "--idle-policy") {
         Some(v) => IdlePolicy::parse(&v)
             .ok_or_else(|| anyhow::anyhow!("bad --idle-policy {v:?} (poll | adaptive | adaptive:S:US)"))?,
@@ -74,7 +80,7 @@ fn serve(args: &[String]) -> anyhow::Result<()> {
     };
 
     println!(
-        "building storage server (offload={offload}, io={io}B, batch={batch}, shards={shards}, idle={})…",
+        "building storage server (offload={offload}, io={io}B, batch={batch}, shards={shards}, burst={burst}, idle={})…",
         idle.label()
     );
     let logic = Arc::new(RawFileOffload);
@@ -90,6 +96,7 @@ fn serve(args: &[String]) -> anyhow::Result<()> {
     if shards > 1 {
         return serve_sharded(
             storage, logic, offload, file, n_requests, batch, io, file_bytes, shards, idle,
+            burst,
         );
     }
 
@@ -124,7 +131,23 @@ fn serve(args: &[String]) -> anyhow::Result<()> {
         server.director.reqs_offloaded, server.director.reqs_to_host
     );
     print_cpu("file-service", &server.storage.cpu_stats());
+    print_latency(&server.storage.latency_stats());
     Ok(())
+}
+
+/// The tracked tail-latency trajectory (p50/p99/p99.9) at exit.
+fn print_latency(l: &dds::metrics::LatencyStats) {
+    if l.count == 0 {
+        return;
+    }
+    println!(
+        "latency: n={} p50={} p99={} p99.9={} max={}",
+        l.count,
+        fmt_ns(l.p50_ns),
+        fmt_ns(l.p99_ns),
+        fmt_ns(l.p999_ns),
+        fmt_ns(l.max_ns)
+    );
 }
 
 /// One pump's CPU-plane line (the functional Fig 14 axis).
@@ -153,6 +176,7 @@ fn serve_sharded(
     file_bytes: u64,
     shards: usize,
     idle: dds::idle::IdlePolicy,
+    burst: usize,
 ) -> anyhow::Result<()> {
     use dds::coordinator::{
         run_sharded_request, tuple_for_shard, ShardDriver, ShardedServer, ShardedServerConfig,
@@ -161,7 +185,7 @@ fn serve_sharded(
 
     let logic_dyn: Arc<dyn OffloadLogic> =
         if offload { logic } else { Arc::new(NoOffload) };
-    let cfg = ShardedServerConfig { shards, idle, ..Default::default() };
+    let cfg = ShardedServerConfig { shards, idle, burst, ..Default::default() };
     let server = ShardedServer::over(
         storage,
         cfg,
@@ -235,6 +259,7 @@ fn serve_sharded(
             if i == 0 { "file-service".to_string() } else { format!("shard-{}", i - 1) };
         print_cpu(&name, c);
     }
+    print_latency(&server.latency_stats());
     Ok(())
 }
 

@@ -17,6 +17,10 @@ pub struct Histogram {
 const SUB_BITS: u32 = 6;
 const SUB: usize = 1 << SUB_BITS; // 64 sub-buckets per octave
 const OCTAVES: usize = 64;
+/// Flat bucket count — shared with the lock-free latency histogram
+/// (`metrics::latency`), which reuses this module's bucketing so the
+/// two can never disagree on layout.
+pub(crate) const BUCKETS: usize = OCTAVES * SUB;
 
 impl Default for Histogram {
     fn default() -> Self {
@@ -36,7 +40,7 @@ impl Histogram {
     }
 
     #[inline]
-    fn index(v: u64) -> usize {
+    pub(crate) fn index(v: u64) -> usize {
         let v = v.max(1);
         let b = 63 - v.leading_zeros() as usize; // floor(log2 v)
         let s = if b >= SUB_BITS as usize {
@@ -49,7 +53,7 @@ impl Histogram {
     }
 
     /// Lower bound of the bucket at flat index `i`.
-    fn bucket_value(i: usize) -> u64 {
+    pub(crate) fn bucket_value(i: usize) -> u64 {
         let b = i / SUB;
         let s = (i % SUB) as u64;
         if b >= SUB_BITS as usize {

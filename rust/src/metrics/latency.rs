@@ -1,0 +1,277 @@
+//! Lock-free per-pump latency histogram — the tail-latency trajectory
+//! behind the paper's order-of-magnitude claim (Fig 14 reports means;
+//! tails are where per-request software overhead actually shows).
+//!
+//! Each pump (director shard, file-service loop) owns an
+//! [`LatencyHistogram`] it records into with relaxed atomic adds — no
+//! locks on the hot path, no cross-pump cache-line traffic beyond the
+//! shared counts array each writer mostly owns. Readers take a
+//! [`LatencySnapshot`] at any time and merge snapshots across pumps;
+//! two snapshots subtract ([`LatencySnapshot::since`]) so a bench can
+//! meter one load window out of a monotonic recorder.
+//!
+//! Bucketing is shared verbatim with [`Histogram`] (64 sub-buckets per
+//! octave, ~1.5 % relative width) so the locked and lock-free variants
+//! can never disagree on layout.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use super::histogram::BUCKETS;
+use super::Histogram;
+
+/// Compact quantile summary, cheap to ship over a control channel
+/// (the `ControlMsg::LatencyStats` reply and the bench JSON row).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct LatencyStats {
+    /// Observations recorded.
+    pub count: u64,
+    /// Arithmetic mean, ns.
+    pub mean_ns: f64,
+    pub p50_ns: u64,
+    pub p99_ns: u64,
+    pub p999_ns: u64,
+    pub max_ns: u64,
+}
+
+/// Lock-free log-bucketed histogram: one writer pump, any readers.
+/// Multiple writers are also safe (relaxed adds) — merge precision is
+/// exact because every counter is monotonic.
+pub struct LatencyHistogram {
+    counts: Box<[AtomicU64]>,
+    total: AtomicU64,
+    sum: AtomicU64,
+    max: AtomicU64,
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        LatencyHistogram {
+            counts: (0..BUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            total: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+            max: AtomicU64::new(0),
+        }
+    }
+}
+
+impl LatencyHistogram {
+    pub fn new() -> Arc<LatencyHistogram> {
+        Arc::new(LatencyHistogram::default())
+    }
+
+    /// Record one observation in nanoseconds. O(1), lock-free.
+    #[inline]
+    pub fn record(&self, ns: u64) {
+        self.counts[Histogram::index(ns)].fetch_add(1, Ordering::Relaxed);
+        self.total.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(ns, Ordering::Relaxed);
+        self.max.fetch_max(ns, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn record_duration(&self, d: Duration) {
+        self.record(d.as_nanos() as u64);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.total.load(Ordering::Relaxed)
+    }
+
+    /// Point-in-time copy of the counters. Not atomic as a whole (a
+    /// racing record may straddle the copy by one observation) — fine
+    /// for metering, which is what snapshots are for.
+    pub fn snapshot(&self) -> LatencySnapshot {
+        LatencySnapshot {
+            counts: self.counts.iter().map(|c| c.load(Ordering::Relaxed)).collect(),
+            total: self.total.load(Ordering::Relaxed),
+            sum: self.sum.load(Ordering::Relaxed),
+            max: self.max.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Shorthand: snapshot and summarize.
+    pub fn stats(&self) -> LatencyStats {
+        self.snapshot().stats()
+    }
+}
+
+/// Plain-data copy of a [`LatencyHistogram`]: mergeable across pumps,
+/// subtractable across time.
+#[derive(Debug, Clone)]
+pub struct LatencySnapshot {
+    counts: Vec<u64>,
+    total: u64,
+    sum: u64,
+    max: u64,
+}
+
+impl Default for LatencySnapshot {
+    fn default() -> Self {
+        LatencySnapshot { counts: vec![0; BUCKETS], total: 0, sum: 0, max: 0 }
+    }
+}
+
+impl LatencySnapshot {
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    /// Fold another pump's snapshot into this one.
+    pub fn merge(&mut self, other: &LatencySnapshot) {
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += *b;
+        }
+        self.total += other.total;
+        self.sum += other.sum;
+        self.max = self.max.max(other.max);
+    }
+
+    /// Counter deltas since an earlier snapshot of the same (merged)
+    /// recorder set — the window a bench phase meters. `max` cannot be
+    /// windowed from monotonic counters, so the later snapshot's max is
+    /// kept (an upper bound for the window).
+    pub fn since(&self, earlier: &LatencySnapshot) -> LatencySnapshot {
+        LatencySnapshot {
+            counts: self
+                .counts
+                .iter()
+                .zip(&earlier.counts)
+                .map(|(a, b)| a.saturating_sub(*b))
+                .collect(),
+            total: self.total.saturating_sub(earlier.total),
+            sum: self.sum.saturating_sub(earlier.sum),
+            max: self.max,
+        }
+    }
+
+    /// Value at quantile `q` in `[0, 1]` (bucket lower bound).
+    pub fn quantile(&self, q: f64) -> u64 {
+        if self.total == 0 {
+            return 0;
+        }
+        let target = ((q * self.total as f64).ceil() as u64).clamp(1, self.total);
+        let mut acc = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            acc += c;
+            if acc >= target {
+                return Histogram::bucket_value(i).min(self.max);
+            }
+        }
+        self.max
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.total as f64
+        }
+    }
+
+    pub fn stats(&self) -> LatencyStats {
+        LatencyStats {
+            count: self.total,
+            mean_ns: self.mean(),
+            p50_ns: self.quantile(0.50),
+            p99_ns: self.quantile(0.99),
+            p999_ns: self.quantile(0.999),
+            max_ns: self.max,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_stats() {
+        let h = LatencyHistogram::new();
+        let s = h.stats();
+        assert_eq!(s.count, 0);
+        assert_eq!(s.p50_ns, 0);
+        assert_eq!(s.p999_ns, 0);
+        assert_eq!(s.mean_ns, 0.0);
+    }
+
+    #[test]
+    fn quantiles_match_locked_histogram() {
+        let lockfree = LatencyHistogram::new();
+        let mut locked = Histogram::new();
+        for v in 1..=100_000u64 {
+            lockfree.record(v);
+            locked.record(v);
+        }
+        let s = lockfree.snapshot();
+        assert_eq!(s.count(), locked.count());
+        assert_eq!(s.quantile(0.5), locked.quantile(0.5), "identical bucketing");
+        assert_eq!(s.quantile(0.99), locked.quantile(0.99));
+        assert!((s.mean() - locked.mean()).abs() < 1e-6);
+        let p999 = s.quantile(0.999);
+        assert!((p999 as f64 - 99_900.0).abs() / 99_900.0 < 0.03, "p999={p999}");
+    }
+
+    #[test]
+    fn concurrent_recorders_lose_nothing() {
+        let h = LatencyHistogram::new();
+        let threads: Vec<_> = (0..4u64)
+            .map(|t| {
+                let h = h.clone();
+                std::thread::spawn(move || {
+                    for i in 0..10_000u64 {
+                        h.record(1 + (i ^ (t * 7919)));
+                    }
+                })
+            })
+            .collect();
+        for t in threads {
+            t.join().unwrap();
+        }
+        assert_eq!(h.count(), 40_000);
+    }
+
+    #[test]
+    fn merge_and_window() {
+        let a = LatencyHistogram::new();
+        let b = LatencyHistogram::new();
+        for _ in 0..100 {
+            a.record(1_000);
+        }
+        let before = {
+            let mut m = a.snapshot();
+            m.merge(&b.snapshot());
+            m
+        };
+        for _ in 0..100 {
+            a.record(1_000_000);
+            b.record(1_000_000);
+        }
+        let mut after = a.snapshot();
+        after.merge(&b.snapshot());
+        let window = after.since(&before);
+        assert_eq!(window.count(), 200, "window sees only the new observations");
+        let p50 = window.quantile(0.5);
+        assert!(
+            (p50 as f64 - 1_000_000.0).abs() / 1_000_000.0 < 0.02,
+            "window p50 must ignore pre-window records (p50={p50})"
+        );
+        assert_eq!(after.count(), 300);
+    }
+
+    #[test]
+    fn stats_are_ordered() {
+        let h = LatencyHistogram::new();
+        for v in [10u64, 100, 1_000, 10_000, 100_000] {
+            for _ in 0..100 {
+                h.record(v);
+            }
+        }
+        let s = h.stats();
+        assert!(s.p50_ns <= s.p99_ns);
+        assert!(s.p99_ns <= s.p999_ns);
+        assert!(s.p999_ns <= s.max_ns);
+        assert_eq!(s.max_ns, 100_000);
+    }
+}

@@ -4,10 +4,12 @@
 pub mod bench;
 mod cpu;
 mod histogram;
+mod latency;
 mod series;
 pub mod zerocopy;
 
 pub use cpu::{CpuLedger, CpuStats};
 pub use histogram::Histogram;
+pub use latency::{LatencyHistogram, LatencySnapshot, LatencyStats};
 pub use series::{fmt_ns, fmt_ops, Row, Table};
 pub use zerocopy::{probe_engine_read_path, ZeroCopyProbe};

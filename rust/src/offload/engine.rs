@@ -27,7 +27,7 @@ use crate::buf::{BufPool, BufView, PooledBuf};
 use crate::cache::CuckooCache;
 use crate::dpufs::DpuFs;
 use crate::proto::NetResp;
-use crate::ssd::{AsyncSsd, SsdOp};
+use crate::ssd::{AsyncSsd, Completion, SsdOp};
 
 /// Completion status of a context (§6.2).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -137,6 +137,11 @@ pub struct OffloadEngine {
     pub bounced_engine_failed: u64,
     /// Contexts aborted by the pending-timeout (lost completions).
     pub timed_out: u64,
+    /// Reused burst buffers (batch pipeline): per-extent ops staged and
+    /// submitted as one batch per request, completions polled into a
+    /// caller-owned buffer — steady state allocates nothing.
+    submit_buf: Vec<(u64, SsdOp)>,
+    comp_buf: Vec<Completion>,
 }
 
 impl OffloadEngine {
@@ -171,6 +176,8 @@ impl OffloadEngine {
             bounced_untranslatable: 0,
             bounced_engine_failed: 0,
             timed_out: 0,
+            submit_buf: Vec::new(),
+            comp_buf: Vec::new(),
         }
     }
 
@@ -286,11 +293,15 @@ impl OffloadEngine {
             });
             self.tail += 1;
             self.offloaded += 1;
-            // Line 14: submit to the file service (extent reads).
+            // Line 14: submit to the file service (extent reads) — all
+            // of a request's extents go down as one batch: one fault
+            // decide pass, one channel send, one doorbell.
             for (ei, e) in extents.iter().enumerate() {
                 let tag = ctx_idx << 16 | ei as u64;
-                self.aio.submit(tag, SsdOp::Read { addr: e.addr, len: e.len as usize });
+                self.submit_buf
+                    .push((tag, SsdOp::Read { addr: e.addr, len: e.len as usize }));
             }
+            self.aio.submit_batch(&mut self.submit_buf);
         }
         // Line 16: keep draining completions.
         self.complete_pending(responses);
@@ -301,8 +312,12 @@ impl OffloadEngine {
     /// responses from the head of the context ring, stopping at the
     /// first still-pending context (ordering guarantee).
     pub fn complete_pending(&mut self, responses: &mut Vec<NetResp>) {
-        // Absorb SSD completions into contexts.
-        for c in self.aio.poll(usize::MAX.min(1 << 14)) {
+        // Absorb SSD completions into contexts — polled into the
+        // reused buffer, so an idle pass costs a relaxed load and a
+        // busy one reuses last round's capacity.
+        let mut comps = std::mem::take(&mut self.comp_buf);
+        self.aio.poll_into(&mut comps, usize::MAX.min(1 << 14));
+        for c in comps.drain(..) {
             let ctx_idx = c.tag >> 16;
             let extent = (c.tag & 0xffff) as usize;
             if ctx_idx < self.head || ctx_idx >= self.tail {
@@ -337,6 +352,7 @@ impl OffloadEngine {
                 }
             }
         }
+        self.comp_buf = comps;
         // Emit in order from the head (Fig 13 lines 19-27). A head
         // context whose completion never arrived (dropped by a fault,
         // device gone) is aborted once it exceeds the pending timeout —

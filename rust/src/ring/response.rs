@@ -111,6 +111,46 @@ impl ResponseRing {
         RingStatus::Ok
     }
 
+    /// Burst producer push: each item is one vectored record (e.g.
+    /// response header + payload view). Writes as many whole records as
+    /// fit — record bytes land past the published tail, which the
+    /// single producer owns — then accounts ONE batched DMA write for
+    /// the burst and publishes with a single tail release store (§4.3:
+    /// responses are DMA-written "in batches"; the tail advance IS the
+    /// batch completion). Returns how many records were pushed; a
+    /// shortfall means the ring filled mid-burst and the rest should be
+    /// retried after the consumers drain.
+    pub fn push_burst_vectored_dma<'a>(
+        &self,
+        dma: &DmaChannel,
+        records: impl Iterator<Item = [&'a [u8]; 2]>,
+    ) -> usize {
+        let head = self.head.0.load(Ordering::Acquire);
+        let tail0 = self.tail.0.load(Ordering::Relaxed); // single producer
+        let mut tail = tail0;
+        let mut pushed = 0usize;
+        for parts in records {
+            let msg_len: usize = parts.iter().map(|p| p.len()).sum();
+            let need = align8(4 + msg_len) as u64;
+            if tail - head + need > self.capacity() {
+                break;
+            }
+            self.write_bytes(tail, &(msg_len as u32).to_le_bytes());
+            let mut at = tail + 4;
+            for p in parts {
+                self.write_bytes(at, p);
+                at += p.len() as u64;
+            }
+            tail += need;
+            pushed += 1;
+        }
+        if pushed > 0 {
+            dma.op(DmaDir::Write, (tail - tail0) as usize);
+            self.tail.0.store(tail, Ordering::Release);
+        }
+        pushed
+    }
+
     /// Non-DMA producer path (tests / host-local use).
     pub fn push(&self, msg: &[u8]) -> RingStatus {
         thread_local! {
@@ -191,6 +231,42 @@ mod tests {
         let mut expect = header.to_vec();
         expect.extend_from_slice(&payload);
         assert_eq!(got, vec![expect]);
+    }
+
+    #[test]
+    fn burst_push_one_dma_write_one_publish() {
+        let r = ResponseRing::new(1024);
+        let dma = DmaChannel::new();
+        let payloads: Vec<[u8; 4]> = (0..8u32).map(|i| i.to_le_bytes()).collect();
+        let header = [7u8; 3];
+        let pushed = r.push_burst_vectored_dma(
+            &dma,
+            payloads.iter().map(|p| [&header[..], &p[..]]),
+        );
+        assert_eq!(pushed, 8);
+        assert_eq!(dma.writes(), 1, "one batched DMA write for the whole burst");
+        let mut got = Vec::new();
+        while r.pop(&mut |m| got.push(m.to_vec())) == RingStatus::Ok {}
+        assert_eq!(got.len(), 8, "every record delivered");
+        for (i, rec) in got.iter().enumerate() {
+            assert_eq!(&rec[..3], &header, "record {i} header");
+            assert_eq!(&rec[3..], &(i as u32).to_le_bytes(), "record {i} payload");
+        }
+    }
+
+    #[test]
+    fn burst_push_partial_on_full_ring() {
+        let r = ResponseRing::new(64); // fits 4 records of align8(4+8)=16
+        let recs: Vec<[u8; 8]> = (0..6u64).map(|i| i.to_le_bytes()).collect();
+        let empty: &[u8] = &[];
+        let pushed =
+            r.push_burst_vectored_dma(&DmaChannel::new(), recs.iter().map(|p| [&p[..], empty]));
+        assert_eq!(pushed, 4, "stops at the first record that does not fit");
+        let mut got = Vec::new();
+        while r.pop(&mut |m| got.push(u64::from_le_bytes(m.try_into().unwrap())))
+            == RingStatus::Ok
+        {}
+        assert_eq!(got, vec![0, 1, 2, 3], "pushed prefix is intact and in order");
     }
 
     #[test]

@@ -9,7 +9,7 @@
 //! order, exercising the TailA/TailB/TailC ordered-delivery logic.
 
 use std::collections::VecDeque;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex, OnceLock};
 use std::thread::JoinHandle;
@@ -46,10 +46,23 @@ pub struct Completion {
 /// racing workers. (There is deliberately NO stop sentinel: shutdown
 /// is signalled by dropping the submission sender — see
 /// [`AsyncSsd`]'s `Drop` for the contract.)
-struct Job {
+struct JobEntry {
     tag: u64,
     op: SsdOp,
     fault: Option<SsdFault>,
+}
+
+/// What travels over the submission channel: a single op, or a whole
+/// burst in ONE send. A burst is executed run-to-completion by one
+/// worker, which publishes every completion under a single queue lock
+/// and rings the doorbell once for the burst — the per-op handoff cost
+/// (send + lock + ring) is paid once per burst instead of once per op.
+/// Independent bursts still land on different workers, so cross-burst
+/// completion reordering (what TailA/TailB/TailC exists for) is still
+/// exercised.
+enum Job {
+    One(JobEntry),
+    Burst(Vec<JobEntry>),
 }
 
 /// Execute one op against the device, honoring an injected fault.
@@ -93,6 +106,40 @@ fn run_op(
     Some(completion)
 }
 
+/// Publish a burst's completions: ready ones appended to the
+/// completion queue under ONE lock acquisition, held (fault-delayed)
+/// ones likewise. The emptiness counters are bumped while the lock is
+/// still held, strictly before the doorbell ring — so a consumer woken
+/// by the ring can never fast-path past completions it was woken for.
+fn publish_burst(
+    completions: &Mutex<VecDeque<Completion>>,
+    comp_len: &AtomicUsize,
+    delayed: &Mutex<Vec<(u32, Completion)>>,
+    delayed_len: &AtomicUsize,
+    waker: Option<&Doorbell>,
+    ready: Vec<Completion>,
+    held: Vec<(u32, Completion)>,
+) {
+    if !held.is_empty() {
+        let mut d = delayed.lock().unwrap();
+        delayed_len.fetch_add(held.len(), Ordering::Relaxed);
+        d.extend(held);
+    }
+    if !ready.is_empty() {
+        {
+            let mut q = completions.lock().unwrap();
+            comp_len.fetch_add(ready.len(), Ordering::Relaxed);
+            q.extend(ready);
+        }
+        // Ring AFTER the push is visible: a consumer that snapshots
+        // its doorbell before polling can then never sleep through
+        // this burst. One ring for the whole burst.
+        if let Some(w) = waker {
+            w.ring();
+        }
+    }
+}
+
 /// Async facade over [`Ssd`] with `workers` SPDK-like worker threads.
 ///
 /// `workers == 0` selects **inline (polled) mode**: operations execute
@@ -122,6 +169,17 @@ pub struct AsyncSsd {
     waker: Arc<OnceLock<Arc<Doorbell>>>,
     /// Optional fault-injection hook, consulted once per submit.
     faults: Option<SsdFaultInjector>,
+    /// Relaxed mirror of `completions.len()`, maintained by every push
+    /// and drain site so an idle `poll()` can observe emptiness without
+    /// touching the mutex (and so never contends with a worker
+    /// mid-publish).
+    comp_len: Arc<AtomicUsize>,
+    /// Same, for the fault-delayed list: idle polling with an injector
+    /// attached but nothing held must not take the delayed lock either.
+    delayed_len: Arc<AtomicUsize>,
+    /// Times `poll()` actually acquired the completion mutex —
+    /// observability for the idle fast path (see CpuLedger test).
+    poll_locks: AtomicU64,
     handles: Vec<JoinHandle<()>>,
     workers: usize,
     /// Queue-depth accounting: ops submitted / completions drained by
@@ -143,6 +201,9 @@ impl AsyncSsd {
             read_pool: Arc::new(OnceLock::new()),
             waker: Arc::new(OnceLock::new()),
             faults: None,
+            comp_len: Arc::new(AtomicUsize::new(0)),
+            delayed_len: Arc::new(AtomicUsize::new(0)),
+            poll_locks: AtomicU64::new(0),
             handles: Vec::new(),
             workers: 0,
             submitted: AtomicU64::new(0),
@@ -197,6 +258,8 @@ impl AsyncSsd {
         let rx = Arc::new(Mutex::new(rx));
         let completions = Arc::new(Mutex::new(VecDeque::new()));
         let delayed = Arc::new(Mutex::new(Vec::new()));
+        let comp_len = Arc::new(AtomicUsize::new(0));
+        let delayed_len = Arc::new(AtomicUsize::new(0));
         let read_pool: Arc<OnceLock<BufPool>> = Arc::new(OnceLock::new());
         let waker: Arc<OnceLock<Arc<Doorbell>>> = Arc::new(OnceLock::new());
         let mut handles = Vec::new();
@@ -205,6 +268,8 @@ impl AsyncSsd {
             let ssd = ssd.clone();
             let completions = completions.clone();
             let delayed: Arc<Mutex<Vec<(u32, Completion)>>> = delayed.clone();
+            let comp_len = comp_len.clone();
+            let delayed_len = delayed_len.clone();
             let read_pool = read_pool.clone();
             let waker = waker.clone();
             handles.push(std::thread::spawn(move || loop {
@@ -214,23 +279,55 @@ impl AsyncSsd {
                 // by trying to take the mutex.
                 let job = { rx.lock().unwrap().recv() };
                 match job {
-                    Ok(Job { tag, op, fault }) => {
+                    Ok(Job::One(JobEntry { tag, op, fault })) => {
                         let held = matches!(fault, Some(SsdFault::Delay(_)));
                         if let Some(completion) = run_op(&ssd, read_pool.get(), tag, op, fault) {
+                            let (mut ready, mut hold) = (Vec::new(), Vec::new());
                             if held {
                                 let Some(SsdFault::Delay(polls)) = fault else { unreachable!() };
-                                delayed.lock().unwrap().push((polls, completion));
+                                hold.push((polls, completion));
                             } else {
-                                completions.lock().unwrap().push_back(completion);
-                                // Ring AFTER the push is visible: a
-                                // consumer that snapshots its doorbell
-                                // before polling can then never sleep
-                                // through this completion.
-                                if let Some(w) = waker.get() {
-                                    w.ring();
+                                ready.push(completion);
+                            }
+                            publish_burst(
+                                &completions,
+                                &comp_len,
+                                &delayed,
+                                &delayed_len,
+                                waker.get().map(|w| w.as_ref()),
+                                ready,
+                                hold,
+                            );
+                        }
+                    }
+                    // Run-to-completion: one worker executes the whole
+                    // burst, then publishes every completion under a
+                    // single lock with a single doorbell ring.
+                    Ok(Job::Burst(entries)) => {
+                        let mut ready = Vec::with_capacity(entries.len());
+                        let mut hold = Vec::new();
+                        for JobEntry { tag, op, fault } in entries {
+                            let was_delay = matches!(fault, Some(SsdFault::Delay(_)));
+                            if let Some(c) = run_op(&ssd, read_pool.get(), tag, op, fault) {
+                                if was_delay {
+                                    let Some(SsdFault::Delay(polls)) = fault else {
+                                        unreachable!()
+                                    };
+                                    hold.push((polls, c));
+                                } else {
+                                    ready.push(c);
                                 }
                             }
                         }
+                        publish_burst(
+                            &completions,
+                            &comp_len,
+                            &delayed,
+                            &delayed_len,
+                            waker.get().map(|w| w.as_ref()),
+                            ready,
+                            hold,
+                        );
                     }
                     // Disconnected: the owner dropped the sender (the
                     // shutdown contract) and every queued op has been
@@ -248,6 +345,9 @@ impl AsyncSsd {
             read_pool,
             waker,
             faults: None,
+            comp_len,
+            delayed_len,
+            poll_locks: AtomicU64::new(0),
             handles,
             workers,
             submitted: AtomicU64::new(0),
@@ -264,42 +364,140 @@ impl AsyncSsd {
         if let Some(ssd) = &self.inline_ssd {
             if let Some(completion) = run_op(ssd, self.read_pool.get(), tag, op, fault) {
                 if let Some(SsdFault::Delay(polls)) = fault {
-                    self.delayed.lock().unwrap().push((polls, completion));
+                    let mut d = self.delayed.lock().unwrap();
+                    self.delayed_len.fetch_add(1, Ordering::Relaxed);
+                    d.push((polls, completion));
                 } else {
-                    self.completions.lock().unwrap().push_back(completion);
+                    let mut q = self.completions.lock().unwrap();
+                    self.comp_len.fetch_add(1, Ordering::Relaxed);
+                    q.push_back(completion);
                 }
             }
             return;
         }
-        self.tx.as_ref().unwrap().send(Job { tag, op, fault }).expect("ssd workers alive");
+        self.tx
+            .as_ref()
+            .unwrap()
+            .send(Job::One(JobEntry { tag, op, fault }))
+            .expect("ssd workers alive");
+    }
+
+    /// Submit a whole burst: ONE fault-plane consultation pass (still
+    /// per-op, in submit order — the injection stream is byte-identical
+    /// to the equivalent `submit` sequence), ONE channel send, and in
+    /// worker mode one completion-queue lock + ONE doorbell ring when
+    /// the burst completes. Drains `ops` in place so the caller's
+    /// buffer (and its capacity) is reusable across bursts.
+    pub fn submit_batch(&self, ops: &mut Vec<(u64, SsdOp)>) {
+        if ops.is_empty() {
+            return;
+        }
+        self.submitted.fetch_add(ops.len() as u64, Ordering::Relaxed);
+        if let Some(ssd) = &self.inline_ssd {
+            // Inline mode: execute the burst run-to-completion on the
+            // caller's thread, publish under one lock acquisition.
+            let mut ready = Vec::with_capacity(ops.len());
+            let mut hold = Vec::new();
+            for (tag, op) in ops.drain(..) {
+                let fault = self.faults.as_ref().and_then(|f| f.decide());
+                if let Some(c) = run_op(ssd, self.read_pool.get(), tag, op, fault) {
+                    if let Some(SsdFault::Delay(polls)) = fault {
+                        hold.push((polls, c));
+                    } else {
+                        ready.push(c);
+                    }
+                }
+            }
+            // No ring in inline mode: the submitter IS the poller.
+            publish_burst(
+                &self.completions,
+                &self.comp_len,
+                &self.delayed,
+                &self.delayed_len,
+                None,
+                ready,
+                hold,
+            );
+            return;
+        }
+        let mut entries = Vec::with_capacity(ops.len());
+        for (tag, op) in ops.drain(..) {
+            let fault = self.faults.as_ref().and_then(|f| f.decide());
+            entries.push(JobEntry { tag, op, fault });
+        }
+        self.tx.as_ref().unwrap().send(Job::Burst(entries)).expect("ssd workers alive");
+    }
+
+    /// Age fault-delayed completions by one poll; expired ones move to
+    /// the completion queue in submit order (stable `retain_mut`, O(n)
+    /// — the previous `remove(i)` loop shifted the tail per expiry,
+    /// O(n²) when many delays expire on the same poll).
+    fn age_delayed(&self) {
+        let mut d = self.delayed.lock().unwrap();
+        if d.is_empty() {
+            return;
+        }
+        let mut q = self.completions.lock().unwrap();
+        let mut released = 0usize;
+        d.retain_mut(|(polls, c)| {
+            if *polls <= 1 {
+                let done = std::mem::replace(
+                    c,
+                    Completion { tag: 0, data: BufView::empty(), result: Ok(()) },
+                );
+                q.push_back(done);
+                released += 1;
+                false
+            } else {
+                *polls -= 1;
+                true
+            }
+        });
+        if released > 0 {
+            self.comp_len.fetch_add(released, Ordering::Relaxed);
+            self.delayed_len.fetch_sub(released, Ordering::Relaxed);
+        }
     }
 
     /// Poll completed operations (drains up to `max`). Each call ages
     /// fault-delayed completions by one poll and releases the expired.
     pub fn poll(&self, max: usize) -> Vec<Completion> {
-        // Delayed entries can only exist when an injector is attached;
-        // keep the uninstrumented hot path free of the extra lock.
-        if self.faults.is_some() {
-            let mut d = self.delayed.lock().unwrap();
-            if !d.is_empty() {
-                let mut q = self.completions.lock().unwrap();
-                let mut i = 0;
-                while i < d.len() {
-                    if d[i].0 <= 1 {
-                        q.push_back(d.remove(i).1);
-                    } else {
-                        d[i].0 -= 1;
-                        i += 1;
-                    }
-                }
-            }
+        let mut out = Vec::new();
+        self.poll_into(&mut out, max);
+        out
+    }
+
+    /// Buffer-reusing poll: appends up to `max` completions to `out`
+    /// and returns how many were appended. Steady-state polling with a
+    /// recycled `out` allocates nothing; an *idle* poll (both queues
+    /// empty) touches no mutex at all — emptiness is observed through
+    /// relaxed counters maintained at every push site, so an idle pump
+    /// can never contend with a worker mid-publish. A push that races
+    /// this check is missed for one round only: the producer bumps the
+    /// counter before ringing the doorbell, and the woken consumer's
+    /// next poll sees it.
+    pub fn poll_into(&self, out: &mut Vec<Completion>, max: usize) -> usize {
+        if self.delayed_len.load(Ordering::Relaxed) > 0 {
+            self.age_delayed();
         }
+        if self.comp_len.load(Ordering::Relaxed) == 0 {
+            return 0;
+        }
+        self.poll_locks.fetch_add(1, Ordering::Relaxed);
         let mut q = self.completions.lock().unwrap();
         let n = q.len().min(max);
         if n > 0 {
             self.polled.fetch_add(n as u64, Ordering::Relaxed);
+            self.comp_len.fetch_sub(n, Ordering::Relaxed);
+            out.extend(q.drain(..n));
         }
-        q.drain(..n).collect()
+        n
+    }
+
+    /// Times `poll` acquired the completion mutex (observability for
+    /// the idle fast path: an idle pump must not grow this).
+    pub fn poll_lock_acquires(&self) -> u64 {
+        self.poll_locks.load(Ordering::Relaxed)
     }
 
     /// Number of worker threads.
@@ -605,6 +803,124 @@ mod tests {
         }
         assert!(done[0].result.is_err());
         assert!(done[0].data.is_empty(), "failed reads must not ship a buffer");
+    }
+
+    /// Tentpole: a batched submit is ONE channel send and, in worker
+    /// mode, ONE doorbell ring for the whole burst — not one per op.
+    #[test]
+    fn submit_batch_rings_once_per_burst() {
+        let ssd = Arc::new(Ssd::new(1 << 20, 512));
+        let aio = AsyncSsd::new(ssd, 2);
+        let bell = Doorbell::new();
+        aio.attach_waker(bell.clone());
+        let seen = bell.seq();
+        let mut ops: Vec<(u64, SsdOp)> = (0..16u64)
+            .map(|i| (i, SsdOp::Write { addr: i * 512, data: vec![i as u8; 512].into() }))
+            .collect();
+        aio.submit_batch(&mut ops);
+        assert!(ops.is_empty(), "batch drained in place");
+        let mut done = Vec::new();
+        while done.len() < 16 {
+            aio.poll_into(&mut done, 64);
+        }
+        let mut tags: Vec<u64> = done.iter().map(|c| c.tag).collect();
+        tags.sort_unstable();
+        assert_eq!(tags, (0..16).collect::<Vec<_>>());
+        assert!(done.iter().all(|c| c.result.is_ok()));
+        assert_eq!(bell.seq() - seen, 1, "one ring for the whole burst");
+        assert_eq!(aio.in_flight(), 0);
+    }
+
+    /// `poll_into` appends into the caller's buffer and reports the
+    /// count — steady-state polling with a recycled Vec allocates
+    /// nothing and drops nothing.
+    #[test]
+    fn poll_into_reuses_caller_buffer() {
+        let ssd = Arc::new(Ssd::new(1 << 20, 512));
+        let aio = AsyncSsd::new_inline(ssd);
+        let mut buf = Vec::with_capacity(8);
+        for round in 0..4u64 {
+            aio.submit(round, SsdOp::Write { addr: 0, data: vec![1u8; 512].into() });
+            buf.clear();
+            let n = aio.poll_into(&mut buf, 16);
+            assert_eq!(n, 1);
+            assert_eq!(buf[0].tag, round);
+            assert!(buf.capacity() >= 8, "capacity must survive reuse");
+        }
+    }
+
+    /// Satellite: many delayed completions expiring on the same poll
+    /// must all release on that poll, in submit order (the old
+    /// `remove(i)` loop was O(n²); the stable `retain_mut` pass keeps
+    /// order and releases in one sweep).
+    #[test]
+    fn mass_delay_expiry_releases_in_submit_order() {
+        use crate::fault::{FaultConfig, FaultPlane, FaultSite, SsdFaultConfig};
+        let plane = FaultPlane::new(FaultConfig {
+            seed: 7,
+            ssd: SsdFaultConfig { delay_p: 1.0, delay_polls: 2, ..Default::default() },
+            ..Default::default()
+        });
+        let ssd = Arc::new(Ssd::new(1 << 22, 512));
+        let mut aio = AsyncSsd::new_inline(ssd);
+        aio.attach_faults(plane.ssd_injector(FaultSite::SsdQueue(0)));
+        plane.arm_ssd();
+        let n = 4096u64;
+        let mut ops: Vec<(u64, SsdOp)> =
+            (0..n).map(|i| (i, SsdOp::Read { addr: 0, len: 64 })).collect();
+        aio.submit_batch(&mut ops);
+        assert!(aio.poll(usize::MAX).is_empty(), "all held for one more poll");
+        let done = aio.poll(usize::MAX);
+        assert_eq!(done.len() as u64, n, "every delayed completion released together");
+        let tags: Vec<u64> = done.iter().map(|c| c.tag).collect();
+        assert_eq!(tags, (0..n).collect::<Vec<_>>(), "release preserves submit order");
+    }
+
+    /// Satellite: an idle poll must not touch the completion mutex.
+    /// The relaxed emptiness counter short-circuits before any lock,
+    /// so idle polling cannot contend with a worker mid-publish — here
+    /// a thread pins the completion mutex for 300ms while a CpuLedger
+    /// meters 10k idle polls, which must all return without blocking.
+    #[test]
+    fn idle_poll_skips_completion_lock() {
+        use crate::metrics::CpuLedger;
+        let ssd = Arc::new(Ssd::new(1 << 20, 512));
+        let aio = AsyncSsd::new_inline(ssd);
+        // Baseline: a non-empty poll takes the lock exactly once.
+        aio.submit(1, SsdOp::Write { addr: 0, data: vec![2u8; 512].into() });
+        assert_eq!(aio.poll(16).len(), 1);
+        let locks_after_drain = aio.poll_lock_acquires();
+        assert_eq!(locks_after_drain, 1);
+
+        let q = aio.completions.clone();
+        let (locked_tx, locked_rx) = mpsc::channel();
+        let holder = std::thread::spawn(move || {
+            let _g = q.lock().unwrap();
+            locked_tx.send(()).unwrap();
+            std::thread::sleep(std::time::Duration::from_millis(300));
+        });
+        locked_rx.recv().unwrap();
+        let ledger = CpuLedger::new();
+        let t0 = std::time::Instant::now();
+        let mut buf = Vec::new();
+        for _ in 0..10_000 {
+            assert_eq!(aio.poll_into(&mut buf, 64), 0);
+            ledger.iteration(false);
+        }
+        ledger.add_busy(t0.elapsed());
+        holder.join().unwrap();
+        let snap = ledger.snapshot();
+        assert_eq!(snap.empty_polls, 10_000);
+        assert!(
+            snap.busy_ns < 200_000_000,
+            "idle polling contended the held completion lock ({}ns busy)",
+            snap.busy_ns
+        );
+        assert_eq!(
+            aio.poll_lock_acquires(),
+            locks_after_drain,
+            "idle polls must not acquire the completion mutex"
+        );
     }
 
     /// Regression: an error completion must never expose a recycled

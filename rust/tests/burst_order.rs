@@ -1,0 +1,272 @@
+//! Property: the burst pipeline preserves per-flow FIFO order and
+//! byte-exactness, at every burst size and under SSD chaos.
+//!
+//! Each case pipelines several messages per connection (so real bursts
+//! form inside the shard loop and the delivery stage), then checks the
+//! arrival stream per flow:
+//!
+//! * **Byte-exactness** — every OK response carries exactly the fill
+//!   pattern its offset predicts; ERR responses carry no payload.
+//! * **Survivor FIFO** — OK responses arrive in issue order within a
+//!   flow. Injected drops/delays may ERR or stall individual requests,
+//!   but must never reorder the survivors around each other (§4.3
+//!   ordered staging / engine in-order emission).
+//! * **Bounded completion** — every request resolves OK or ERR within
+//!   the case deadline.
+//!
+//! Burst sizes 1 (degenerate: the pipeline must not require batching),
+//! 7 (odd, smaller than a wave) and 64 (the default) are each run
+//! clean and under `ssd_chaos`-grade fault rates. Seeded via
+//! `DDS_CHAOS_SEED` like the chaos suites.
+
+#[path = "chaos_common.rs"]
+mod chaos_common;
+
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use chaos_common::chaos_seed;
+use dds::apps::RawFileApp;
+use dds::coordinator::{
+    tuple_for_shard, ClientConn, ShardedServer, ShardedServerConfig, StorageServer,
+    StorageServerConfig,
+};
+use dds::director::AppSignature;
+use dds::fault::{FaultConfig, FaultPlane, SsdFaultConfig};
+use dds::net::FiveTuple;
+use dds::offload::{OffloadEngineConfig, RawFileOffload};
+use dds::proto::{AppRequest, NetMsg, NetResp};
+use dds::sim::Rng;
+use dds::workload::RandomIoGen;
+
+const FILE_BYTES: u64 = 1 << 20;
+const READ_SIZE: u32 = 512;
+const SHARDS: usize = 2;
+/// Messages in flight per connection per wave — what actually forms
+/// multi-message bursts inside the shard loop.
+const WINDOW: usize = 3;
+const WAVES: usize = 4;
+const BATCH: usize = 4;
+
+struct Flow {
+    shard: usize,
+    tuple: FiveTuple,
+    client: ClientConn,
+    /// Expected payload per outstanding request, keyed `(msg_id, idx)`.
+    expected: HashMap<(u64, u16), Vec<u8>>,
+    /// Issue order of every request this wave; arrival order of OK
+    /// responses must be a subsequence of this.
+    issued: Vec<(u64, u16)>,
+    /// `(msg_id, idx)` of OK responses in arrival order.
+    ok_arrivals: Vec<(u64, u16)>,
+    ok: u64,
+    err: u64,
+    last_rx: Instant,
+}
+
+fn run_case(seed: u64, burst: usize, chaos: bool) {
+    let faults = if chaos {
+        FaultConfig {
+            seed,
+            ssd: SsdFaultConfig { fail_p: 0.08, drop_p: 0.08, delay_p: 0.25, delay_polls: 3 },
+            ..Default::default()
+        }
+    } else {
+        FaultConfig { seed, ..Default::default() }
+    };
+    let plane = FaultPlane::new(faults);
+
+    let logic = Arc::new(RawFileOffload);
+    let server_cfg = StorageServerConfig { ssd_bytes: 32 << 20, ..Default::default() };
+    let storage = StorageServer::build(server_cfg, Some(logic.clone())).expect("storage");
+    let file = storage.create_filled_file("burst", "data", FILE_BYTES).expect("fill");
+    let fid = file.id.0;
+    let cfg = ShardedServerConfig {
+        shards: SHARDS,
+        burst,
+        // Short pending timeout so dropped completions ERR quickly.
+        engine_total: OffloadEngineConfig {
+            pending_timeout: Duration::from_millis(500),
+            ..Default::default()
+        },
+        faults: chaos.then(|| plane.clone()),
+        ..Default::default()
+    };
+    let server = ShardedServer::over(
+        storage,
+        cfg,
+        logic,
+        AppSignature::server_port(5000),
+        |_shard, st| RawFileApp::over(st, &file),
+    )
+    .expect("sharded server");
+    plane.arm_ssd();
+
+    let mut flows: Vec<Flow> = (0..SHARDS)
+        .map(|s| {
+            let tuple =
+                tuple_for_shard(s, SHARDS, 0x0a00_0001, 40_000 + s as u16 * 101, 0x0a00_00ff, 5000);
+            Flow {
+                shard: s,
+                tuple,
+                client: ClientConn::new(tuple),
+                expected: HashMap::new(),
+                issued: Vec::new(),
+                ok_arrivals: Vec::new(),
+                ok: 0,
+                err: 0,
+                last_rx: Instant::now(),
+            }
+        })
+        .collect();
+
+    let mut next_msg_id = 1u64;
+    for wave in 0..WAVES {
+        // Pipeline WINDOW messages per flow before reading anything
+        // back — this is what makes bursts real.
+        for flow in flows.iter_mut() {
+            for _ in 0..WINDOW {
+                let msg_id = next_msg_id;
+                next_msg_id += 1;
+                let mut rng = Rng::new(seed ^ msg_id.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+                let mut requests = Vec::with_capacity(BATCH);
+                for idx in 0..BATCH {
+                    let offset = rng.next_range(FILE_BYTES - READ_SIZE as u64);
+                    requests.push(AppRequest::Read { file_id: fid, offset, size: READ_SIZE });
+                    flow.expected.insert(
+                        (msg_id, idx as u16),
+                        RandomIoGen::expected_fill(offset, READ_SIZE as usize),
+                    );
+                    flow.issued.push((msg_id, idx as u16));
+                }
+                let segs = flow.client.send_msg(&NetMsg { msg_id, requests });
+                server.send(&flow.tuple, segs).expect("send");
+            }
+            flow.last_rx = Instant::now();
+        }
+
+        // Drain until every pipelined request has resolved OK or ERR.
+        let deadline = Instant::now() + Duration::from_secs(30);
+        loop {
+            let mut outstanding = false;
+            for flow in flows.iter_mut() {
+                if flow.expected.is_empty() {
+                    continue;
+                }
+                outstanding = true;
+                pump(&server, flow, burst, chaos);
+            }
+            if !outstanding {
+                break;
+            }
+            assert!(
+                Instant::now() < deadline,
+                "burst={burst} chaos={chaos} seed={seed}: wave {wave} did not resolve \
+                 (bounded completion violated)"
+            );
+        }
+    }
+
+    // Survivor FIFO: per flow, OK responses arrived in issue order.
+    let total = (WAVES * WINDOW * BATCH) as u64;
+    for flow in &flows {
+        let mut cursor = 0usize;
+        for got in &flow.ok_arrivals {
+            let pos = flow.issued[cursor..]
+                .iter()
+                .position(|i| i == got)
+                .unwrap_or_else(|| {
+                    panic!(
+                        "burst={burst} chaos={chaos} seed={seed}: flow {} OK response \
+                         {got:?} arrived OUT OF ORDER (already passed in issue order)",
+                        flow.shard
+                    )
+                });
+            cursor += pos + 1;
+        }
+        assert_eq!(
+            flow.ok + flow.err,
+            total,
+            "burst={burst} chaos={chaos} seed={seed}: flow {} lost responses",
+            flow.shard
+        );
+        if !chaos {
+            assert_eq!(
+                flow.err, 0,
+                "burst={burst} seed={seed}: clean run must not error (flow {})",
+                flow.shard
+            );
+        }
+    }
+}
+
+/// One pump step: absorb a server batch for `flow`, verify and account
+/// its responses; on a stall, walk the timeout retransmission path.
+fn pump(server: &ShardedServer, flow: &mut Flow, burst: usize, chaos: bool) {
+    match server.recv_timeout(flow.shard, Duration::from_millis(5)) {
+        Some((tuple, segs)) => {
+            assert_eq!(
+                tuple, flow.tuple,
+                "shard {} emitted segments for a connection it does not own",
+                flow.shard
+            );
+            flow.last_rx = Instant::now();
+            let mut acks = Vec::new();
+            let resps = flow.client.on_segments(&segs, &mut acks);
+            if !acks.is_empty() {
+                server.send(&flow.tuple, acks).expect("send acks");
+            }
+            for r in resps {
+                let key = (r.msg_id, r.idx);
+                let Some(expect) = flow.expected.remove(&key) else {
+                    continue; // duplicate (TCP retransmit)
+                };
+                if r.status == NetResp::OK {
+                    assert_eq!(
+                        r.payload, expect,
+                        "burst={burst} chaos={chaos}: OK response {key:?} with wrong bytes"
+                    );
+                    flow.ok_arrivals.push(key);
+                    flow.ok += 1;
+                } else {
+                    assert!(
+                        r.payload.is_empty(),
+                        "burst={burst} chaos={chaos}: ERR response {key:?} carried payload"
+                    );
+                    flow.err += 1;
+                }
+            }
+        }
+        None => {
+            if flow.last_rx.elapsed() >= Duration::from_millis(50) {
+                let re = flow.client.ep.retransmit_all();
+                if !re.is_empty() {
+                    server.send(&flow.tuple, re).expect("retransmit");
+                }
+                flow.last_rx = Instant::now();
+            }
+        }
+    }
+}
+
+#[test]
+fn burst_1_fifo_and_byte_exact() {
+    let seed = chaos_seed();
+    run_case(seed, 1, false);
+    run_case(seed, 1, true);
+}
+
+#[test]
+fn burst_7_fifo_and_byte_exact() {
+    let seed = chaos_seed();
+    run_case(seed, 7, false);
+    run_case(seed, 7, true);
+}
+
+#[test]
+fn burst_64_fifo_and_byte_exact() {
+    let seed = chaos_seed();
+    run_case(seed, 64, false);
+    run_case(seed, 64, true);
+}
