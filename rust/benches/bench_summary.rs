@@ -8,8 +8,11 @@
 //! load (the functional Fig 14 analogue) — into `BENCH_cpu.json`; and
 //! records the burst pipeline's tail-latency trajectory (director
 //! p50/p99/p99.9 at the same three load levels) into
-//! `BENCH_latency.json`, so CI can archive the perf trajectory of all
-//! four planes per commit.
+//! `BENCH_latency.json`; and sweeps the fanout plane — ops/s, director
+//! p99 and post-workload idle busy fraction at 100 / 1k / 10k
+//! concurrent flows over a zipfian 8-tenant mix — into
+//! `BENCH_fanout.json`, so CI can archive the perf trajectory of all
+//! five planes per commit.
 //!
 //! Smoke mode is the default (seconds, not minutes); tune with:
 //!   DDS_BENCH_READS   probe reads per mode        (default 2000)
@@ -23,6 +26,8 @@
 //!   DDS_BENCH_LATENCY_OUT  latency output         (default target/BENCH_latency.json)
 //!   DDS_BENCH_LAT_CEILING_US  p99 ceiling for the un-queued latency
 //!                       phases, µs (default 200000)
+//!   DDS_BENCH_FANOUT_FLOWS  comma list of flow counts (default "100,1000,10000")
+//!   DDS_BENCH_FANOUT_OUT    fanout output            (default target/BENCH_fanout.json)
 //!   DDS_BENCH_STRICT=1  make the CPU-plane and latency shape checks
 //!                       fatal (idle busy fractions, 5% saturated
 //!                       parity, latency p99 ceiling); default is
@@ -39,19 +44,23 @@
 //! straw-man) and a `sharded_scaling` section (ops/s per shard count);
 //! the recovery file holds `(syncs, journal_records, mount_us)` points.
 
+use std::collections::HashMap;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use dds::apps::RawFileApp;
 use dds::coordinator::{
-    run_sharded_request, tuple_for_shard, ShardDriver, ShardedServer, ShardedServerConfig,
-    StorageServer, StorageServerConfig,
+    run_sharded_request, tuple_for_shard, ClientConn, ShardDriver, ShardedServer,
+    ShardedServerConfig, StorageServer, StorageServerConfig,
 };
-use dds::director::AppSignature;
+use dds::director::{AppSignature, TenantPlaneConfig};
 use dds::dpufs::{DpuFs, FsConfig};
 use dds::idle::IdlePolicy;
 use dds::metrics::{probe_engine_read_path, CpuStats, ZeroCopyProbe};
+use dds::net::FiveTuple;
 use dds::offload::RawFileOffload;
+use dds::proto::{AppRequest, NetMsg, NetResp};
+use dds::sim::Rng;
 use dds::ssd::Ssd;
 use dds::workload::RandomIoGen;
 
@@ -305,6 +314,206 @@ fn latency_profile(window: Duration) -> Vec<LatencyPoint> {
     points
 }
 
+/// One fanout-plane point: what `flows` concurrent connections over
+/// the zipfian tenant mix measured.
+struct FanoutPoint {
+    flows: usize,
+    requests: u64,
+    ops_per_sec: f64,
+    p50_ns: u64,
+    p99_ns: u64,
+    /// Busy fraction over a post-workload window with every flow still
+    /// open — the "open-but-quiet flows must be free" axis.
+    idle_busy: f64,
+    starved_tenants: usize,
+}
+
+const FANOUT_TENANTS: u32 = 8;
+
+/// Zipfian-ish tenant mix (tenant `r` drawn with weight ∝ 1/(r+1)),
+/// mirroring the fanout fairness suite: the tenant plane keys on
+/// `client_ip % tenants`, so IP `0x0a00_0000 + t` bills tenant `t`.
+fn fanout_ips(n: usize, seed: u64) -> Vec<u32> {
+    let weights: Vec<u64> = (0..FANOUT_TENANTS as u64).map(|r| 840 / (r + 1)).collect();
+    let total: u64 = weights.iter().sum();
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|_| {
+            let mut draw = rng.next_range(total);
+            let mut tenant = FANOUT_TENANTS - 1;
+            for (r, &w) in weights.iter().enumerate() {
+                if draw < w {
+                    tenant = r as u32;
+                    break;
+                }
+                draw -= w;
+            }
+            0x0a00_0000u32 + tenant
+        })
+        .collect()
+}
+
+/// One connection's client-side state in the fanout sweep.
+struct FanoutConn {
+    tuple: FiveTuple,
+    client: ClientConn,
+    outstanding: usize,
+}
+
+/// The fanout sweep at one flow count: open `flows` connections spread
+/// over the zipfian 8-tenant mix with skewed fair-drain weights, drive
+/// batched reads on every flow to completion, and measure ops/s +
+/// director latency — then a quiet window with every flow still open,
+/// where the readiness plane must keep the pumps parked.
+fn fanout_point(flows: usize) -> FanoutPoint {
+    let shards = 2usize;
+    let batch = 4usize;
+    // ~4k requests per point, but never fewer than one full round so
+    // every flow sends (at 10k flows one round is already 40k reads).
+    let rounds = (4000 / (flows * batch)).max(1);
+    let logic = Arc::new(RawFileOffload);
+    let server_cfg = StorageServerConfig { ssd_bytes: 64 << 20, ..Default::default() };
+    let storage = StorageServer::build(server_cfg, Some(logic.clone())).expect("storage");
+    let file = storage.create_filled_file("bench", "data", FILE_BYTES).expect("fill");
+    let fid = file.id.0;
+    let cfg = ShardedServerConfig {
+        shards,
+        tenants: TenantPlaneConfig {
+            tenants: FANOUT_TENANTS,
+            weights: vec![4, 2, 1, 1, 1, 1, 1, 1],
+            // No mid-run eviction: every flow stays open through the
+            // idle window (which measures open-but-quiet cost).
+            flow_ttl_ms: 3_600_000,
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    let server = ShardedServer::over(
+        storage,
+        cfg,
+        logic,
+        AppSignature::server_port(5000),
+        |_shard, st| RawFileApp::over(st, &file),
+    )
+    .expect("sharded server");
+
+    // Connection build-out: unique tuples (port hints collide at high
+    // fanout, so dedup explicitly), round-robin over shards.
+    let ips = fanout_ips(flows, 0xFA00 ^ flows as u64);
+    let mut used = std::collections::HashSet::new();
+    let mut per_shard = vec![0usize; shards];
+    let mut conns: Vec<FanoutConn> = (0..flows)
+        .map(|ci| {
+            let s = ci % shards;
+            per_shard[s] += 1;
+            let mut hint = 40_000u16.wrapping_add((ci as u16).wrapping_mul(101));
+            let tuple = loop {
+                let t = tuple_for_shard(s, shards, ips[ci], hint, 0x0a00_00ff, 5000);
+                if used.insert(t) {
+                    break t;
+                }
+                hint = hint.wrapping_add(1);
+            };
+            FanoutConn { tuple, client: ClientConn::new(tuple), outstanding: 0 }
+        })
+        .collect();
+    let index: HashMap<FiveTuple, usize> =
+        conns.iter().enumerate().map(|(i, c)| (c.tuple, i)).collect();
+
+    let lat_before = server.latency_snapshot();
+    let t0 = Instant::now();
+    let mut resps_total = 0u64;
+    for round in 0..rounds {
+        for (ci, c) in conns.iter_mut().enumerate() {
+            let msg_id = (round * flows + ci) as u64 + 1;
+            let requests = (0..batch)
+                .map(|k| {
+                    let offset = msg_id
+                        .wrapping_mul(7919)
+                        .wrapping_add(k as u64)
+                        .wrapping_mul(4096)
+                        % (FILE_BYTES - 4096);
+                    AppRequest::Read { file_id: fid, offset, size: 4096 }
+                })
+                .collect();
+            let segs = c.client.send_msg(&NetMsg { msg_id, requests });
+            server.send(&c.tuple, segs).expect("fanout send");
+            c.outstanding = batch;
+        }
+        // Drain the round: receives are per shard, routed to the
+        // owning flow by tuple (O(1) per event — a linear scan would
+        // be quadratic at 10k flows).
+        let mut unresolved = per_shard.clone();
+        let deadline = Instant::now() + Duration::from_secs(120);
+        while unresolved.iter().any(|&u| u > 0) {
+            for shard in 0..shards {
+                if unresolved[shard] == 0 {
+                    continue;
+                }
+                if let Some((tuple, segs)) =
+                    server.recv_timeout(shard, Duration::from_millis(5))
+                {
+                    let c = &mut conns[index[&tuple]];
+                    let mut acks = Vec::new();
+                    let resps = c.client.on_segments(&segs, &mut acks);
+                    if !acks.is_empty() {
+                        server.send(&c.tuple, acks).expect("fanout ack");
+                    }
+                    assert!(resps.len() <= c.outstanding, "fanout: duplicate responses");
+                    for r in &resps {
+                        assert_eq!(r.status, NetResp::OK, "fanout: fault-free read failed");
+                    }
+                    resps_total += resps.len() as u64;
+                    c.outstanding -= resps.len();
+                    if !resps.is_empty() && c.outstanding == 0 {
+                        unresolved[shard] -= 1;
+                    }
+                }
+            }
+            assert!(
+                Instant::now() < deadline,
+                "fanout sweep stalled at {flows} flows"
+            );
+        }
+    }
+    let elapsed = t0.elapsed().as_secs_f64();
+    let lat = server.latency_snapshot().since(&lat_before).stats();
+
+    // Quiet window with all flows still open: the whole point of the
+    // readiness plane is that 10k open-but-idle flows cost ~no CPU.
+    std::thread::sleep(Duration::from_millis(50));
+    let before = server.all_cpu_stats();
+    std::thread::sleep(Duration::from_millis(200));
+    let idle_busy = busy_fraction_delta(&before, &server.all_cpu_stats());
+
+    let stats = server.stats();
+    assert_eq!(stats.flows, flows as u64, "flow table must hold exactly the open flows");
+    let tenants = server.tenant_stats();
+    let starved_tenants = (0..FANOUT_TENANTS)
+        .filter(|&t| !tenants.iter().any(|c| c.tenant == t && c.admitted > 0))
+        .count();
+
+    FanoutPoint {
+        flows,
+        requests: resps_total,
+        ops_per_sec: resps_total as f64 / elapsed,
+        p50_ns: lat.p50_ns,
+        p99_ns: lat.p99_ns,
+        idle_busy,
+        starved_tenants,
+    }
+}
+
+fn fanout_point_json(p: &FanoutPoint) -> String {
+    format!(
+        concat!(
+            "{{\"flows\":{},\"requests\":{},\"ops_per_sec\":{:.1},\"p50_ns\":{},",
+            "\"p99_ns\":{},\"idle_busy_fraction\":{:.4},\"starved_tenants\":{}}}"
+        ),
+        p.flows, p.requests, p.ops_per_sec, p.p50_ns, p.p99_ns, p.idle_busy, p.starved_tenants
+    )
+}
+
 fn latency_point_json(p: &LatencyPoint) -> String {
     format!(
         concat!(
@@ -461,6 +670,35 @@ fn main() {
     println!("{lat_json}");
     eprintln!("bench_summary: wrote {lat_out}");
 
+    // Fanout plane: the readiness-driven flow table + tenant QoS at
+    // DBMS-grade connection counts — ops/s and director p99 at 100 /
+    // 1k / 10k concurrent flows over a zipfian 8-tenant mix, plus the
+    // post-workload idle busy fraction (ten thousand open-but-quiet
+    // flows must not keep a single pump hot).
+    let fanout_out = std::env::var("DDS_BENCH_FANOUT_OUT")
+        .unwrap_or_else(|_| "target/BENCH_fanout.json".into());
+    let fanout_flows: Vec<usize> = std::env::var("DDS_BENCH_FANOUT_FLOWS")
+        .unwrap_or_else(|_| "100,1000,10000".into())
+        .split(',')
+        .filter_map(|s| s.trim().parse().ok())
+        .collect();
+    let mut fanout_points = Vec::new();
+    for &flows in &fanout_flows {
+        eprintln!("bench_summary: fanout plane at {flows} flows...");
+        fanout_points.push(fanout_point(flows));
+    }
+    let fanout_json = format!(
+        concat!(
+            "{{\n  \"bench\": \"fanout\",\n  \"smoke\": true,\n",
+            "  \"tenants\": {},\n  \"points\": [\n    {}\n  ]\n}}\n"
+        ),
+        FANOUT_TENANTS,
+        fanout_points.iter().map(fanout_point_json).collect::<Vec<_>>().join(",\n    ")
+    );
+    std::fs::write(&fanout_out, &fanout_json).expect("write fanout summary");
+    println!("{fanout_json}");
+    eprintln!("bench_summary: wrote {fanout_out}");
+
     // Shape checks: Poll burns the cores at idle, Adaptive gives them
     // back, and Adaptive's saturated throughput stays within 5% of
     // Poll's. All three are wall-clock measurements that scheduler
@@ -513,6 +751,24 @@ fn main() {
                 ),
             );
         }
+    }
+    // Fanout-plane shape: every point served every tenant, and the
+    // readiness plane keeps open-but-idle flows cheap — the busy
+    // fraction with the full flow population open but quiet must stay
+    // under 5% at every point, including 10k flows.
+    for p in &fanout_points {
+        check(p.requests > 0, format!("fanout point {} recorded no responses", p.flows));
+        check(
+            p.starved_tenants == 0,
+            format!("fanout point {}: {} tenant(s) starved", p.flows, p.starved_tenants),
+        );
+        check(
+            p.idle_busy < 0.05,
+            format!(
+                "fanout point {}: idle busy fraction {:.4} >= 5% with all flows open",
+                p.flows, p.idle_busy
+            ),
+        );
     }
 
     // The acceptance contract this PR is gated on (kept as asserts so a

@@ -88,6 +88,14 @@ pub struct StorageServer {
     /// outer assemblies (director shards) register theirs here.
     lat_peers:
         std::sync::Arc<std::sync::Mutex<Vec<std::sync::Arc<crate::metrics::LatencyHistogram>>>>,
+    /// Per-shard tenant counter tables folded into
+    /// `ControlMsg::TenantStats` replies (the fanout plane's QoS
+    /// ledger), registered the same way as `lat_peers`.
+    tenant_peers: std::sync::Arc<
+        std::sync::Mutex<
+            Vec<std::sync::Arc<std::sync::Mutex<Vec<crate::metrics::TenantCounters>>>>,
+        >,
+    >,
     /// Build options (kept for introspection / future rebuilds).
     pub cfg: StorageServerConfig,
 }
@@ -139,6 +147,7 @@ impl StorageServer {
         let cpu = service.cpu_ledger();
         let lat = service.latency_recorder();
         let lat_peers = service.latency_peers();
+        let tenant_peers = service.tenant_peers();
         let handle = service.spawn(ctrl.clone());
         Ok(StorageServer {
             ssd,
@@ -152,6 +161,7 @@ impl StorageServer {
             cpu,
             lat,
             lat_peers,
+            tenant_peers,
             cfg,
         })
     }
@@ -195,6 +205,29 @@ impl StorageServer {
             merged.merge(&peer.snapshot());
         }
         merged.stats()
+    }
+
+    /// Register a per-shard tenant counter table so the control plane's
+    /// `TenantStats` reply — and [`Self::tenant_stats`] — covers the
+    /// whole deployment.
+    pub fn register_tenant_source(
+        &self,
+        source: std::sync::Arc<std::sync::Mutex<Vec<crate::metrics::TenantCounters>>>,
+    ) {
+        self.tenant_peers.lock().unwrap().push(source);
+    }
+
+    /// Per-tenant counters merged across every registered source
+    /// (direct handle; does not wake a parked service).
+    pub fn tenant_stats(&self) -> Vec<crate::metrics::TenantCounters> {
+        let tables: Vec<Vec<crate::metrics::TenantCounters>> = self
+            .tenant_peers
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|t| t.lock().unwrap().clone())
+            .collect();
+        crate::metrics::merge_tenant_tables(&tables)
     }
 
     /// An SPDK-like async handle for the offload engine (the engine

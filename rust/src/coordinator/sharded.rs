@@ -34,10 +34,16 @@ use std::time::{Duration, Instant};
 
 use super::{host_exchange, ClientConn, StorageServer, StorageServerConfig};
 use crate::apps::HostApp;
-use crate::director::{rss_core, AppSignature, Burst, DirectorOut, DirectorShard, DirectorShardStats};
+use crate::director::{
+    rss_core, AppSignature, Burst, DirectorOut, DirectorShard, DirectorShardStats,
+    TenantPlaneConfig,
+};
 use crate::fault::{FaultPlane, FaultSite};
 use crate::idle::{IdleGovernor, IdlePolicy, IdleRecv};
-use crate::metrics::{CpuLedger, CpuStats, LatencyHistogram, LatencySnapshot, LatencyStats};
+use crate::metrics::{
+    merge_tenant_tables, CpuLedger, CpuStats, LatencyHistogram, LatencySnapshot, LatencyStats,
+    TenantCounters,
+};
 use crate::net::tcp::{Segment, TcpEndpoint};
 use crate::net::FiveTuple;
 use crate::offload::{OffloadEngine, OffloadEngineConfig, OffloadLogic};
@@ -77,6 +83,11 @@ pub struct ShardedServerConfig {
     /// pre-burst loop bound and keeps worst-case added latency ≈ one
     /// burst service time. Clamped to ≥ 1.
     pub burst: usize,
+    /// Multi-tenant QoS knobs (token-bucket rate, pending bound, flow
+    /// cap, idle-flow TTL, fair-drain weights). Installed on every
+    /// shard; the defaults impose no limits and keep the packet path
+    /// clock-free.
+    pub tenants: TenantPlaneConfig,
 }
 
 impl Default for ShardedServerConfig {
@@ -89,6 +100,7 @@ impl Default for ShardedServerConfig {
             faults: None,
             idle: IdlePolicy::default(),
             burst: 64,
+            tenants: TenantPlaneConfig::default(),
         }
     }
 }
@@ -112,6 +124,7 @@ impl HostConn {
 pub struct ShardStats {
     flows: AtomicU64,
     flows_created: AtomicU64,
+    flows_closed: AtomicU64,
     msgs_in: AtomicU64,
     reqs_offloaded: AtomicU64,
     reqs_to_host: AtomicU64,
@@ -124,6 +137,7 @@ impl ShardStats {
     fn publish(&self, s: &DirectorShardStats) {
         self.flows.store(s.flows, Ordering::Relaxed);
         self.flows_created.store(s.flows_created, Ordering::Relaxed);
+        self.flows_closed.store(s.flows_closed, Ordering::Relaxed);
         self.msgs_in.store(s.msgs_in, Ordering::Relaxed);
         self.reqs_offloaded.store(s.reqs_offloaded, Ordering::Relaxed);
         self.reqs_to_host.store(s.reqs_to_host, Ordering::Relaxed);
@@ -137,6 +151,7 @@ impl ShardStats {
             shard,
             flows: self.flows.load(Ordering::Relaxed),
             flows_created: self.flows_created.load(Ordering::Relaxed),
+            flows_closed: self.flows_closed.load(Ordering::Relaxed),
             msgs_in: self.msgs_in.load(Ordering::Relaxed),
             reqs_offloaded: self.reqs_offloaded.load(Ordering::Relaxed),
             reqs_to_host: self.reqs_to_host.load(Ordering::Relaxed),
@@ -164,7 +179,15 @@ struct Shard<A: HostApp> {
     douts: Vec<(FiveTuple, DirectorOut)>,
     /// Reused scratch for the completion-drain stage.
     pumped: Vec<(FiveTuple, DirectorOut)>,
+    /// Per-tenant counter table published for cross-thread readers
+    /// (`ShardedServer::tenant_stats`, the control plane).
+    tenant_pub: Arc<Mutex<Vec<TenantCounters>>>,
 }
+
+/// Flow-table slots an idle sweep examines per poll pass: with the
+/// persistent cursor this bounds per-iteration eviction work while a
+/// 10k-flow table still cycles completely in a few hundred passes.
+const EVICT_SCAN_PER_POLL: usize = 32;
 
 impl<A: HostApp> Shard<A> {
     /// Offloaded reads in flight on this shard's engine: while any are
@@ -207,10 +230,21 @@ impl<A: HostApp> Shard<A> {
         self.publish_stats();
     }
 
-    /// Poll for late engine completions (async SSD queues).
+    /// Poll for late engine completions (async SSD queues) and run one
+    /// idle-flow sweep increment.
     fn poll(&mut self, out: &mut Vec<PacketBatch>) {
         self.sync_fault_flag();
         self.drain_completions(out);
+        // Idle-flow eviction: incremental, and only when there are
+        // flows at all (an idle shard with an empty table does no clock
+        // reads here). Evicted flows drop their host-side connection
+        // state too — otherwise a churned flow population leaks
+        // `HostConn`s even after the director forgets the flow.
+        if self.director.num_flows() > 0 {
+            for tuple in self.director.evict_idle_flows(Instant::now(), EVICT_SCAN_PER_POLL) {
+                self.host_conns.remove(&tuple);
+            }
+        }
         self.publish_stats();
     }
 
@@ -247,6 +281,10 @@ impl<A: HostApp> Shard<A> {
 
     fn publish_stats(&self) {
         self.stats.publish(&self.director.stats());
+        // The tenant table is tiny (one row per tenant) and the mutex
+        // is uncontended (readers only at snapshot time); the buffer is
+        // reused, so steady-state publishing allocates nothing.
+        self.director.publish_tenant_counters(&mut self.tenant_pub.lock().unwrap());
     }
 }
 
@@ -404,6 +442,9 @@ pub struct ShardedServer {
     /// Per-shard director latency recorders (written lock-free by the
     /// shard threads; merged at snapshot).
     lat: Vec<Arc<LatencyHistogram>>,
+    /// Per-shard tenant counter tables (published by the shard pumps;
+    /// merged at snapshot).
+    tenants: Vec<Arc<Mutex<Vec<TenantCounters>>>>,
     joins: Vec<JoinHandle<()>>,
     stop: Arc<AtomicBool>,
 }
@@ -455,6 +496,7 @@ impl ShardedServer {
         let mut fail_flags = Vec::with_capacity(n);
         let mut cpu = Vec::with_capacity(n);
         let mut lat = Vec::with_capacity(n);
+        let mut tenants = Vec::with_capacity(n);
         let mut joins = Vec::with_capacity(n);
         for (i, mut aio) in queues.into_iter().enumerate() {
             if let Some(plane) = &cfg.faults {
@@ -470,9 +512,12 @@ impl ShardedServer {
             engine_pools.push(engine.pool().clone());
             let mut director =
                 DirectorShard::new(i, signature, logic.clone(), storage.cache.clone(), engine);
+            director.configure_tenants(cfg.tenants.clone());
             let shard_lat = LatencyHistogram::new();
             director.attach_latency(shard_lat.clone());
             storage.register_latency_recorder(shard_lat.clone());
+            let shard_tenants = Arc::new(Mutex::new(director.tenant_counters()));
+            storage.register_tenant_source(shard_tenants.clone());
             let app = mk_app(i, &storage)?;
             let shard_stats = Arc::new(ShardStats::default());
             let fail_flag = Arc::new(AtomicBool::new(false));
@@ -484,6 +529,7 @@ impl ShardedServer {
                 fail_flag: fail_flag.clone(),
                 douts: Vec::new(),
                 pumped: Vec::new(),
+                tenant_pub: shard_tenants.clone(),
             };
             let (in_tx, in_rx) = mpsc::channel();
             let (out_tx, out_rx) = mpsc::channel();
@@ -504,6 +550,7 @@ impl ShardedServer {
             fail_flags.push(fail_flag);
             cpu.push(ledger);
             lat.push(shard_lat);
+            tenants.push(shard_tenants);
             joins.push(join);
         }
         Ok(ShardedServer {
@@ -516,6 +563,7 @@ impl ShardedServer {
             fail_flags,
             cpu,
             lat,
+            tenants,
             joins,
             stop,
         })
@@ -613,6 +661,16 @@ impl ShardedServer {
     /// Quantile summary of [`Self::latency_snapshot`].
     pub fn latency_stats(&self) -> LatencyStats {
         self.latency_snapshot().stats()
+    }
+
+    /// Per-tenant counters merged across every shard (indexed by
+    /// tenant id, ascending). The fanout plane's QoS ledger: admitted,
+    /// completed, rejected (pending bound), throttled (rate limit),
+    /// pending/flows gauges, and flow-cap rejections.
+    pub fn tenant_stats(&self) -> Vec<TenantCounters> {
+        let tables: Vec<Vec<TenantCounters>> =
+            self.tenants.iter().map(|t| t.lock().unwrap().clone()).collect();
+        merge_tenant_tables(&tables)
     }
 
     /// Aggregate counters across every shard.
@@ -826,6 +884,7 @@ mod tests {
             fail_flag: Arc::new(AtomicBool::new(false)),
             douts: Vec::new(),
             pumped: Vec::new(),
+            tenant_pub: Arc::new(Mutex::new(Vec::new())),
         }
     }
 

@@ -16,13 +16,17 @@
 //! split host connection — land on the same core, avoiding cross-core
 //! connection state.
 
+pub mod flowtable;
 pub mod multiflow;
 pub mod rss;
 pub mod shard;
+pub mod tenant;
 
+pub use flowtable::{FlowTable, Readiness};
 pub use multiflow::MultiFlowDirector;
 pub use rss::{rss_core, toeplitz_hash};
 pub use shard::{Burst, DirectorShard, DirectorShardStats};
+pub use tenant::{TenantPlane, TenantPlaneConfig};
 
 use std::sync::Arc;
 use std::time::Instant;
@@ -104,6 +108,22 @@ pub struct TrafficDirector {
     pub msgs_in: u64,
     pub reqs_offloaded: u64,
     pub reqs_to_host: u64,
+    /// Responses framed toward the client for ADMITTED requests (OK and
+    /// ERR alike; admission rejects are framed separately and not
+    /// counted here — the shard's tenant plane balances this against
+    /// its per-tenant pending gauge).
+    pub resps_out: u64,
+}
+
+/// Decoded client ingress with engine execution deferred to the caller:
+/// the sharded data plane owns ONE engine per core shared by every flow
+/// on it, and must attribute completions across flows itself.
+pub(crate) struct ClientIngest {
+    pub host_reqs: Vec<RoutedReq>,
+    pub dpu_reqs: Vec<RoutedReq>,
+    /// Requests refused by admission control, already shaped as clean
+    /// ERR responses for the caller to frame.
+    pub rejected: Vec<NetResp>,
 }
 
 impl TrafficDirector {
@@ -126,6 +146,7 @@ impl TrafficDirector {
             msgs_in: 0,
             reqs_offloaded: 0,
             reqs_to_host: 0,
+            resps_out: 0,
         }
     }
 
@@ -155,40 +176,104 @@ impl TrafficDirector {
             out.to_host = segs;
             return out;
         }
-        // PEP: terminate connection 1 on the DPU.
+        // Single-flow path (this flow owns `engine`): ingest with no
+        // admission quota, execute, forward, frame — the same pieces
+        // the sharded plane composes with cross-flow attribution.
+        let ingest = self.ingest_client(segs, None, &mut out);
+        let mut host_reqs = ingest.host_reqs;
+        // Execute offloadable requests; bounced ones join the host list.
+        let mut responses = Vec::new();
+        let bounced = engine.execute(ingest.dpu_reqs, &mut responses);
+        host_reqs.extend(bounced);
+        self.forward_to_host(host_reqs, &mut out);
+        // Responses completed by the engine go straight to the client
+        // (Fig 12 ④).
+        self.send_responses(responses, &mut out);
+        out
+    }
+
+    /// PEP ingress without engine execution: terminate connection 1,
+    /// reassemble frames, split by the offload predicate, and apply the
+    /// caller's admission quota. At most `quota` requests (in intra-
+    /// message index order) are admitted and latency-stamped; the rest
+    /// come back as ready-to-frame clean ERR responses — the overload
+    /// contract of the tenant plane ("bounded pending per tenant, clean
+    /// ERR on reject"). `None` admits everything.
+    pub(crate) fn ingest_client(
+        &mut self,
+        segs: Vec<Segment>,
+        quota: Option<u64>,
+        out: &mut DirectorOut,
+    ) -> ClientIngest {
         for s in &segs {
             out.to_client.extend(self.client_ep.on_segment(s));
         }
         let delivered = self.client_ep.deliver_rope();
         self.client_rx.extend_rope(&delivered, self.client_ep.ledger());
-        // Reassemble full frames → messages → offload predicate.
-        let mut host_reqs: Vec<RoutedReq> = Vec::new();
-        let mut dpu_reqs: Vec<RoutedReq> = Vec::new();
+        let mut ingest = ClientIngest {
+            host_reqs: Vec::new(),
+            dpu_reqs: Vec::new(),
+            rejected: Vec::new(),
+        };
+        let mut quota = quota.unwrap_or(u64::MAX);
         while let Some(frame) = self.client_rx.read_frame() {
             let Some(msg) = NetMsg::decode(&frame) else { continue };
             self.msgs_in += 1;
             let (h, d) = self.logic.off_pred(&msg, &self.cache);
-            host_reqs.extend(h);
-            dpu_reqs.extend(d);
+            if quota >= (h.len() + d.len()) as u64 {
+                // Fast path (the only path in single-tenant runs): no
+                // re-sorting, no rejects.
+                quota -= (h.len() + d.len()) as u64;
+                ingest.host_reqs.extend(h);
+                ingest.dpu_reqs.extend(d);
+                continue;
+            }
+            // Admission boundary inside this message: admit in index
+            // order so the rejected suffix is deterministic.
+            let mut merged: Vec<(bool, RoutedReq)> = h
+                .into_iter()
+                .map(|r| (false, r))
+                .chain(d.into_iter().map(|r| (true, r)))
+                .collect();
+            merged.sort_by_key(|(_, r)| r.idx);
+            for (is_dpu, r) in merged {
+                if quota > 0 {
+                    quota -= 1;
+                    if is_dpu {
+                        ingest.dpu_reqs.push(r);
+                    } else {
+                        ingest.host_reqs.push(r);
+                    }
+                } else {
+                    ingest.rejected.push(NetResp {
+                        msg_id: r.msg_id,
+                        idx: r.idx,
+                        status: NetResp::ERR,
+                        payload: crate::buf::BufView::empty(),
+                    });
+                }
+            }
         }
-        self.reqs_offloaded += dpu_reqs.len() as u64;
+        self.reqs_offloaded += ingest.dpu_reqs.len() as u64;
         // One timestamp per burst stamps every admitted request (engine
         // bounces keep their dpu stamp — the client's clock does not
-        // restart because the engine said no).
-        if self.lat.is_some() && (!host_reqs.is_empty() || !dpu_reqs.is_empty()) {
+        // restart because the engine said no). Rejected requests are
+        // never stamped: an overload ERR is not a service latency.
+        if self.lat.is_some() && (!ingest.host_reqs.is_empty() || !ingest.dpu_reqs.is_empty())
+        {
             let now = Instant::now();
-            for r in host_reqs.iter().chain(dpu_reqs.iter()) {
+            for r in ingest.host_reqs.iter().chain(ingest.dpu_reqs.iter()) {
                 self.started.insert((r.msg_id, r.idx), now);
             }
         }
-        // Execute offloadable requests; bounced ones join the host list.
-        let mut responses = Vec::new();
-        let bounced = engine.execute(dpu_reqs, &mut responses);
-        host_reqs.extend(bounced);
+        ingest
+    }
+
+    /// Ship host-bound requests on connection 2 (grouped back into
+    /// per-message batches to preserve the app protocol), recording the
+    /// index remapping for the responses.
+    pub(crate) fn forward_to_host(&mut self, host_reqs: Vec<RoutedReq>, out: &mut DirectorOut) {
         self.reqs_to_host += host_reqs.len() as u64;
-        // Ship host-bound requests on connection 2 (grouped back into
-        // per-message batches to preserve the app protocol), recording
-        // the index remapping for the responses.
         if !host_reqs.is_empty() {
             let mut stream = Vec::new();
             for (chunk, originals) in regroup(host_reqs) {
@@ -198,10 +283,41 @@ impl TrafficDirector {
             }
             out.to_host.extend(self.host_ep.send(&stream));
         }
-        // Responses completed by the engine go straight to the client
-        // (Fig 12 ④).
-        self.send_responses(responses, &mut out);
-        out
+    }
+
+    /// Frame completed responses for admitted requests toward the
+    /// client (latency-recorded, counted in `resps_out`). The sharded
+    /// plane calls this with engine completions it attributed to this
+    /// flow.
+    pub(crate) fn frame_responses(&mut self, responses: Vec<NetResp>, out: &mut DirectorOut) {
+        self.send_responses(responses, out);
+    }
+
+    /// Frame admission-reject ERRs: not latency-recorded (an overload
+    /// bounce is not a service time) and not counted in `resps_out`
+    /// (they were never admitted, so they must not drain the tenant's
+    /// pending gauge).
+    pub(crate) fn frame_rejects(&mut self, rejects: Vec<NetResp>, out: &mut DirectorOut) {
+        if rejects.is_empty() {
+            return;
+        }
+        let mut rope = ByteRope::new();
+        for r in rejects {
+            r.frame_into_rope(&mut rope);
+        }
+        out.to_client.extend(self.client_ep.send_rope(rope));
+    }
+
+    /// Whether this PEP is safe to evict: no admitted request awaiting
+    /// a host response, no latency stamp outstanding, and nothing
+    /// unacknowledged on either split connection. (Engine in-flight is
+    /// tracked by the owning shard's flow table, which also gates
+    /// eviction on it.)
+    pub(crate) fn quiescent(&self) -> bool {
+        self.host_idx_map.is_empty()
+            && self.started.is_empty()
+            && self.client_ep.bytes_in_flight() == 0
+            && self.host_ep.bytes_in_flight() == 0
     }
 
     /// Process packets arriving from the host (connection 2 responses).
@@ -258,6 +374,7 @@ impl TrafficDirector {
         // "now" (sub-burst skew is below bucket resolution by design —
         // burst service is run-to-completion).
         let done = self.lat.as_ref().map(|l| (l.clone(), Instant::now()));
+        self.resps_out += responses.len() as u64;
         let mut rope = ByteRope::new();
         for r in responses {
             if let Some((lat, now)) = &done {

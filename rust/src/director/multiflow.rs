@@ -50,6 +50,26 @@ impl MultiFlowDirector {
         }
     }
 
+    /// Install one tenant QoS configuration on every core (call before
+    /// traffic; per-shard caps apply per core).
+    pub fn configure_tenants(&mut self, cfg: super::tenant::TenantPlaneConfig) {
+        for shard in &mut self.shards {
+            shard.configure_tenants(cfg.clone());
+        }
+    }
+
+    /// Run one idle-flow sweep increment on every core; returns flows
+    /// reclaimed.
+    pub fn evict_idle_flows(&mut self, now: std::time::Instant, max_scan: usize) -> usize {
+        self.shards.iter_mut().map(|s| s.evict_idle_flows(now, max_scan).len()).sum()
+    }
+
+    /// Per-tenant counters merged across cores.
+    pub fn tenant_stats(&self) -> Vec<crate::metrics::TenantCounters> {
+        let tables: Vec<_> = self.shards.iter().map(|s| s.tenant_counters()).collect();
+        crate::metrics::merge_tenant_tables(&tables)
+    }
+
     /// Number of DPU cores configured.
     pub fn num_cores(&self) -> usize {
         self.shards.len()

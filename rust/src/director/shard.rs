@@ -13,17 +13,42 @@
 //! so both directions of a connection — and the split host connection —
 //! land on the same shard (verified in `fig21_scaling.rs` and the
 //! steering tests).
+//!
+//! ## The fanout plane
+//!
+//! Flows live in a readiness-driven [`FlowTable`] rather than a plain
+//! map that gets walked per pump iteration. Client segments are staged
+//! on their flow and the flow is pushed onto the ready ring;
+//! [`DirectorShard::service_burst`] drains only the ring — with a
+//! weighted-fair round-robin across tenants when more than one is
+//! configured — so per-iteration work scales with *active* flows, not
+//! open ones. Idle flows are reclaimed by an incremental TTL sweep
+//! ([`DirectorShard::evict_idle_flows`]).
+//!
+//! Because every flow on the core shares ONE engine ring, completions
+//! must be attributed back to the flow that submitted them. The engine
+//! emits exactly one response per accepted context in strict ring
+//! (submission) order, so a shard-level FIFO of slab indices — pushed
+//! once per accepted context, popped once per emitted response — gives
+//! exact attribution. (The previous per-flow pump framed *all* engine
+//! completions onto whichever flow happened to poll first; with one
+//! flow that is invisible, with 10k flows it cross-delivers responses
+//! between connections whose clients reuse msg_ids.)
 
-use std::collections::HashMap;
+use std::collections::VecDeque;
 use std::sync::Arc;
+use std::time::Instant;
 
+use super::flowtable::{FlowTable, Readiness};
 use super::rss::rss_core;
+use super::tenant::{Quota, TenantPlane, TenantPlaneConfig};
 use super::{AppSignature, DirectorOut, TrafficDirector};
 use crate::cache::CuckooCache;
-use crate::metrics::LatencyHistogram;
+use crate::metrics::{LatencyHistogram, TenantCounters};
 use crate::net::tcp::Segment;
 use crate::net::FiveTuple;
 use crate::offload::{OffloadEngine, OffloadLogic};
+use crate::proto::NetResp;
 
 /// Point-in-time counters of one shard (all monotonic).
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
@@ -32,6 +57,8 @@ pub struct DirectorShardStats {
     /// Live flows steered to this shard.
     pub flows: u64,
     pub flows_created: u64,
+    /// Idle flows reclaimed by the TTL sweep.
+    pub flows_closed: u64,
     pub msgs_in: u64,
     pub reqs_offloaded: u64,
     pub reqs_to_host: u64,
@@ -53,6 +80,7 @@ impl DirectorShardStats {
             shard: self.shard,
             flows: self.flows + other.flows,
             flows_created: self.flows_created + other.flows_created,
+            flows_closed: self.flows_closed + other.flows_closed,
             msgs_in: self.msgs_in + other.msgs_in,
             reqs_offloaded: self.reqs_offloaded + other.reqs_offloaded,
             reqs_to_host: self.reqs_to_host + other.reqs_to_host,
@@ -103,7 +131,13 @@ pub struct DirectorShard {
     logic: Arc<dyn OffloadLogic>,
     cache: Arc<CuckooCache>,
     engine: OffloadEngine,
-    flows: HashMap<FiveTuple, TrafficDirector>,
+    /// Readiness-driven flow table (slab + ready ring).
+    table: FlowTable,
+    /// Per-tenant QoS: token buckets, pending bounds, flow caps.
+    plane: TenantPlane,
+    /// Submission-order completion FIFO: one slab index per engine
+    /// context accepted, popped once per response the engine emits.
+    inflight: VecDeque<usize>,
     flows_created: u64,
     forwarded_packets: u64,
     /// Shard-level running sums of the per-flow counters, maintained
@@ -116,6 +150,17 @@ pub struct DirectorShard {
     /// shard (one writer thread — the shard pump — so the relaxed adds
     /// never bounce a cache line between cores). `None` until attached.
     lat: Option<Arc<LatencyHistogram>>,
+    /// Scratch buffers: steady-state servicing allocates nothing.
+    resp_scratch: Vec<NetResp>,
+    outs_scratch: Vec<(FiveTuple, DirectorOut)>,
+    /// Foreign-flow outputs produced on the single-batch path (engine
+    /// completions for OTHER flows drained during a call that can only
+    /// return one flow's output); delivered by the next completion
+    /// pump.
+    deferred: Vec<(FiveTuple, DirectorOut)>,
+    /// Per-tenant drain queues for the weighted-fair scheduler
+    /// (reused across bursts).
+    fair_queues: Vec<VecDeque<usize>>,
 }
 
 impl DirectorShard {
@@ -132,22 +177,35 @@ impl DirectorShard {
             logic,
             cache,
             engine,
-            flows: HashMap::new(),
+            table: FlowTable::new(),
+            plane: TenantPlane::new(TenantPlaneConfig::default()),
+            inflight: VecDeque::new(),
             flows_created: 0,
             forwarded_packets: 0,
             agg_msgs_in: 0,
             agg_reqs_offloaded: 0,
             agg_reqs_to_host: 0,
             lat: None,
+            resp_scratch: Vec::new(),
+            outs_scratch: Vec::new(),
+            deferred: Vec::new(),
+            fair_queues: Vec::new(),
         }
+    }
+
+    /// Install the tenant QoS configuration. Call before any traffic:
+    /// the per-tenant counter table is rebuilt from scratch.
+    pub fn configure_tenants(&mut self, cfg: TenantPlaneConfig) {
+        debug_assert!(self.table.is_empty(), "configure_tenants after traffic started");
+        self.plane = TenantPlane::new(cfg);
     }
 
     /// Attach the shard's service-latency recorder; propagated to every
     /// flow PEP (existing and future) so each admitted request is timed
     /// through to its client-bound response.
     pub fn attach_latency(&mut self, lat: Arc<LatencyHistogram>) {
-        for dir in self.flows.values_mut() {
-            dir.attach_latency(lat.clone());
+        for slot in self.table.iter_mut() {
+            slot.dir.attach_latency(lat.clone());
         }
         self.lat = Some(lat);
     }
@@ -168,9 +226,36 @@ impl DirectorShard {
         rss_core(tuple, shards) == self.id
     }
 
+    /// Look up or create the slab slot for a matching flow. `None`
+    /// means the shard is at its flow cap: the caller degrades the flow
+    /// to the forwarded (un-accelerated) path instead of black-holing
+    /// it.
+    fn slot_for(&mut self, tuple: &FiveTuple) -> Option<usize> {
+        if let Some(idx) = self.table.lookup(tuple) {
+            return Some(idx);
+        }
+        let tenant = self.plane.tenant_of(tuple);
+        if !self.plane.admit_flow(tenant, self.table.len()) {
+            return None;
+        }
+        self.flows_created += 1;
+        let mut dir = TrafficDirector::new(self.signature, self.logic.clone(), self.cache.clone());
+        if let Some(lat) = &self.lat {
+            dir.attach_latency(lat.clone());
+        }
+        Some(self.table.insert(*tuple, tenant, dir))
+    }
+
     /// Ingress from the client NIC for a flow steered to this shard.
     /// Creates the flow's PEP on first contact; non-matching flows are
     /// forwarded verbatim without creating flow state.
+    ///
+    /// Single-batch path (tests, the unsharded server shim): services
+    /// the flow immediately. Engine completions that belong to OTHER
+    /// flows — drained opportunistically by the engine — cannot ride
+    /// this call's return value; they are framed onto their own
+    /// connections and parked in `deferred` until the next completion
+    /// pump.
     pub fn on_client_packets(&mut self, tuple: &FiveTuple, segs: Vec<Segment>) -> DirectorOut {
         if !self.signature.matches(tuple) {
             // `forwarded` counts PACKETS, matching TrafficDirector.
@@ -178,58 +263,270 @@ impl DirectorShard {
             self.forwarded_packets += n;
             return DirectorOut { to_host: segs, forwarded: n, ..Default::default() };
         }
-        let dir = match self.flows.entry(*tuple) {
-            std::collections::hash_map::Entry::Occupied(e) => e.into_mut(),
-            std::collections::hash_map::Entry::Vacant(e) => {
-                self.flows_created += 1;
-                let mut dir =
-                    TrafficDirector::new(self.signature, self.logic.clone(), self.cache.clone());
-                if let Some(lat) = &self.lat {
-                    dir.attach_latency(lat.clone());
-                }
-                e.insert(dir)
-            }
+        let Some(idx) = self.slot_for(tuple) else {
+            // Flow cap: degrade to the stage-1-miss path.
+            let n = segs.len() as u64;
+            self.forwarded_packets += n;
+            return DirectorOut { to_host: segs, forwarded: n, ..Default::default() };
         };
-        // Fold this call's counter deltas into the shard-level sums
-        // (only on_client_packets ever advances them).
-        let before = (dir.msgs_in, dir.reqs_offloaded, dir.reqs_to_host);
-        let out = dir.on_client_packets(tuple, segs, &mut self.engine);
-        self.agg_msgs_in += dir.msgs_in - before.0;
-        self.agg_reqs_offloaded += dir.reqs_offloaded - before.1;
-        self.agg_reqs_to_host += dir.reqs_to_host - before.2;
+        let mut collected = std::mem::take(&mut self.outs_scratch);
+        self.service_slot(idx, segs, Instant::now(), &mut collected);
+        let mut out = DirectorOut::default();
+        for (t, o) in collected.drain(..) {
+            if t == *tuple {
+                out.to_client.extend(o.to_client);
+                out.to_host.extend(o.to_host);
+                out.forwarded += o.forwarded;
+            } else {
+                self.deferred.push((t, o));
+            }
+        }
+        self.outs_scratch = collected;
         out
     }
 
     /// Service a whole [`Burst`] as a unit (decode/service stage of the
-    /// batch pipeline): every batch runs through its flow's PEP and the
-    /// colocated engine back-to-back, and only *matching* flows emit an
-    /// entry into `outs` for the host-exchange stage — stage-1 misses
-    /// are counted and forwarded outside the model, exactly like the
-    /// single-batch path (no PEP, no host connection, no per-flow
-    /// state). Drains the carrier in place, leaving its capacity.
+    /// batch pipeline). Two phases:
+    ///
+    /// 1. **Stage**: every batch is parked on its flow's slot and the
+    ///    flow is marked ready (stage-1 misses and over-cap flows are
+    ///    counted and forwarded outside the model, exactly like the
+    ///    single-batch path — no PEP, no host connection, no state).
+    /// 2. **Drain**: the ready ring is serviced — in arrival order for
+    ///    a single tenant, weighted-fair round-robin across tenants
+    ///    otherwise — so one chatty tenant cannot starve the others'
+    ///    flows within a burst.
+    ///
+    /// Only matching flows emit entries into `outs` for the
+    /// host-exchange stage. Drains the carrier in place, leaving its
+    /// capacity.
     pub fn service_burst(
         &mut self,
         burst: &mut Burst,
         outs: &mut Vec<(FiveTuple, DirectorOut)>,
     ) {
         for (tuple, segs) in burst.batches.drain(..) {
-            let matched = self.matches(&tuple);
-            let out = self.on_client_packets(&tuple, segs);
-            if matched {
-                outs.push((tuple, out));
+            if !self.signature.matches(&tuple) {
+                self.forwarded_packets += segs.len() as u64;
+                continue;
+            }
+            let Some(idx) = self.slot_for(&tuple) else {
+                self.forwarded_packets += segs.len() as u64;
+                continue;
+            };
+            let slot = self.table.slot_mut(idx).expect("just resolved");
+            if slot.staged.is_empty() {
+                slot.staged = segs;
+            } else {
+                // Same flow appeared twice in one burst: append in
+                // arrival order.
+                slot.staged.extend(segs);
+            }
+            self.table.mark_ready(idx, Readiness::CLIENT);
+        }
+        self.drain_ready(outs);
+    }
+
+    /// Drain the ready ring (snapshot: flows that become ready while
+    /// draining — e.g. via foreign completions — wait for the next
+    /// burst, keeping one drain bounded).
+    fn drain_ready(&mut self, outs: &mut Vec<(FiveTuple, DirectorOut)>) {
+        let mut scheduled = self.table.ready_len();
+        if scheduled == 0 {
+            return;
+        }
+        // One clock read per drained burst: quota refill and activity
+        // stamps all use the same instant.
+        let now = Instant::now();
+        if self.plane.config().tenants <= 1 {
+            while scheduled > 0 {
+                scheduled -= 1;
+                let Some((idx, _bits)) = self.table.pop_ready() else { break };
+                let segs = {
+                    let slot = self.table.slot_mut(idx).expect("ready flow is live");
+                    std::mem::take(&mut slot.staged)
+                };
+                if segs.is_empty() {
+                    continue; // ENGINE/HOST wakeup: nothing staged.
+                }
+                self.service_slot(idx, segs, now, outs);
+            }
+            return;
+        }
+        // Multi-tenant: bucket the scheduled flows per tenant, then
+        // serve `weight(t)` flows per tenant per round until dry.
+        let mut queues = std::mem::take(&mut self.fair_queues);
+        let tenants = self.plane.counters().len();
+        if queues.len() < tenants {
+            queues.resize_with(tenants, VecDeque::new);
+        }
+        while scheduled > 0 {
+            scheduled -= 1;
+            let Some((idx, _bits)) = self.table.pop_ready() else { break };
+            let t = self.table.slot(idx).expect("ready flow is live").tenant as usize;
+            queues[t].push_back(idx);
+        }
+        loop {
+            let mut any = false;
+            for t in 0..queues.len() {
+                if queues[t].is_empty() {
+                    continue;
+                }
+                let weight = self.plane.weight(t as u32);
+                for _ in 0..weight {
+                    let Some(idx) = queues[t].pop_front() else { break };
+                    any = true;
+                    let segs = {
+                        let slot = self.table.slot_mut(idx).expect("ready flow is live");
+                        std::mem::take(&mut slot.staged)
+                    };
+                    if segs.is_empty() {
+                        continue;
+                    }
+                    self.service_slot(idx, segs, now, outs);
+                }
+            }
+            if !any {
+                break;
             }
         }
+        self.fair_queues = queues;
     }
 
-    /// Host-side packets of one flow's split connection.
-    pub fn on_host_packets(&mut self, tuple: &FiveTuple, segs: Vec<Segment>) -> DirectorOut {
-        match self.flows.get_mut(tuple) {
-            Some(dir) => dir.on_host_packets(segs),
-            None => DirectorOut::default(),
+    /// Run one flow's staged segments through its PEP and the shared
+    /// engine: ingest (with the tenant's admission quota), execute,
+    /// forward, frame. Engine completions surfaced by the execute call
+    /// are routed by the completion FIFO — they may belong to other
+    /// flows and produce their own `outs` entries.
+    fn service_slot(
+        &mut self,
+        idx: usize,
+        segs: Vec<Segment>,
+        now: Instant,
+        outs: &mut Vec<(FiveTuple, DirectorOut)>,
+    ) {
+        let (tuple, tenant) = {
+            let slot = self.table.slot(idx).expect("serviced slot is live");
+            (slot.tuple, slot.tenant)
+        };
+        let quota = if self.plane.limited() {
+            Some(self.plane.quota(tenant, now))
+        } else {
+            None
+        };
+        let mut out = DirectorOut::default();
+        let slot = self.table.slot_mut(idx).expect("serviced slot is live");
+        slot.last_active = now;
+        let before = (slot.dir.msgs_in, slot.dir.reqs_offloaded, slot.dir.reqs_to_host);
+        let ingest = slot.dir.ingest_client(segs, quota.map(|q| q.allow), &mut out);
+        let admitted = (ingest.host_reqs.len() + ingest.dpu_reqs.len()) as u64;
+        let rejected = ingest.rejected.len() as u64;
+        slot.pending += admitted;
+        // Execute on the shared engine with submission-order
+        // attribution: the FIFO gains one entry per context the engine
+        // actually accepted (bounces never enter the ring).
+        let off_before = self.engine.offloaded;
+        let mut resps = std::mem::take(&mut self.resp_scratch);
+        let bounced = self.engine.execute(ingest.dpu_reqs, &mut resps);
+        let accepted = (self.engine.offloaded - off_before) as usize;
+        self.inflight.extend(std::iter::repeat(idx).take(accepted));
+        let slot = self.table.slot_mut(idx).expect("serviced slot is live");
+        let mut host_reqs = ingest.host_reqs;
+        host_reqs.extend(bounced);
+        slot.dir.forward_to_host(host_reqs, &mut out);
+        slot.dir.frame_rejects(ingest.rejected, &mut out);
+        // Fold this call's counter deltas into the shard-level sums.
+        let after = (slot.dir.msgs_in, slot.dir.reqs_offloaded, slot.dir.reqs_to_host);
+        self.agg_msgs_in += after.0 - before.0;
+        self.agg_reqs_offloaded += after.1 - before.1;
+        self.agg_reqs_to_host += after.2 - before.2;
+        self.plane.settle(tenant, quota.unwrap_or_else(Quota::open), admitted, rejected);
+        outs.push((tuple, out));
+        // Responses the execute call surfaced: this flow's (inline
+        // engines) and any earlier flow's late completions, in strict
+        // submission order.
+        self.route_responses(&mut resps, outs);
+        self.resp_scratch = resps;
+    }
+
+    /// Attribute engine responses to their submitting flows via the
+    /// completion FIFO and frame them on the right connections.
+    fn route_responses(
+        &mut self,
+        resps: &mut Vec<NetResp>,
+        outs: &mut Vec<(FiveTuple, DirectorOut)>,
+    ) {
+        if resps.is_empty() {
+            return;
+        }
+        let mut cur: Option<usize> = None;
+        let mut group: Vec<NetResp> = Vec::new();
+        for resp in resps.drain(..) {
+            let idx = self
+                .inflight
+                .pop_front()
+                .expect("engine emitted more completions than submissions");
+            if cur != Some(idx) {
+                if let Some(prev) = cur {
+                    self.flush_group(prev, &mut group, outs);
+                }
+                cur = Some(idx);
+            }
+            group.push(resp);
+        }
+        if let Some(prev) = cur {
+            self.flush_group(prev, &mut group, outs);
         }
     }
 
-    /// Drain late engine completions for every flow on this shard.
+    fn flush_group(
+        &mut self,
+        idx: usize,
+        group: &mut Vec<NetResp>,
+        outs: &mut Vec<(FiveTuple, DirectorOut)>,
+    ) {
+        let n = group.len() as u64;
+        let slot = self
+            .table
+            .slot_mut(idx)
+            .expect("completion for an evicted flow (eviction gate broken)");
+        let tuple = slot.tuple;
+        let tenant = slot.tenant;
+        slot.pending = slot.pending.saturating_sub(n);
+        let mut out = DirectorOut::default();
+        slot.dir.frame_responses(std::mem::take(group), &mut out);
+        self.plane.on_completed(tenant, n);
+        // ENGINE readiness: refreshes the activity stamp and keeps the
+        // flow visible to the scheduler (a cheap no-op pop if nothing
+        // else arrives).
+        self.table.mark_ready(idx, Readiness::ENGINE);
+        outs.push((tuple, out));
+    }
+
+    /// Host-side packets of one flow's split connection. Responses the
+    /// PEP frames here settle the flow's pending count and the tenant's
+    /// pending gauge (the host leg of the completion accounting; the
+    /// engine leg runs through the FIFO).
+    pub fn on_host_packets(&mut self, tuple: &FiveTuple, segs: Vec<Segment>) -> DirectorOut {
+        let Some(idx) = self.table.lookup(tuple) else {
+            return DirectorOut::default();
+        };
+        let slot = self.table.slot_mut(idx).expect("looked up");
+        let before = slot.dir.resps_out;
+        let out = slot.dir.on_host_packets(segs);
+        let n = slot.dir.resps_out - before;
+        let tenant = slot.tenant;
+        slot.pending = slot.pending.saturating_sub(n);
+        if n > 0 {
+            self.plane.on_completed(tenant, n);
+        }
+        self.table.mark_ready(idx, Readiness::HOST);
+        out
+    }
+
+    /// Drain late engine completions. O(completions), not O(flows):
+    /// the FIFO knows who submitted what, so quiet flows are never
+    /// touched.
     pub fn pump_completions(&mut self) -> Vec<(FiveTuple, DirectorOut)> {
         let mut outs = Vec::new();
         self.pump_completions_into(&mut outs);
@@ -238,14 +535,46 @@ impl DirectorShard {
 
     /// Buffer-reusing variant: appends `(tuple, out)` pairs to `outs`
     /// so the shard pump's steady-state completion drain allocates
-    /// nothing.
+    /// nothing. Also delivers foreign-flow outputs deferred by the
+    /// single-batch path.
     pub fn pump_completions_into(&mut self, outs: &mut Vec<(FiveTuple, DirectorOut)>) {
-        for (tuple, dir) in self.flows.iter_mut() {
-            let out = dir.pump_completions(&mut self.engine);
-            if !out.to_client.is_empty() || !out.to_host.is_empty() {
-                outs.push((*tuple, out));
-            }
+        outs.append(&mut self.deferred);
+        let mut resps = std::mem::take(&mut self.resp_scratch);
+        self.engine.complete_pending(&mut resps);
+        self.route_responses(&mut resps, outs);
+        self.resp_scratch = resps;
+    }
+
+    /// Incremental idle-flow sweep: examine up to `max_scan` slots and
+    /// evict flows idle past the tenant plane's TTL that have nothing
+    /// pending anywhere. Returns the evicted tuples so the layer above
+    /// can drop the matching host-connection state. Call from the
+    /// pump's idle moments; the persistent cursor makes a 10k-flow
+    /// table cost `max_scan` comparisons per call, not 10k.
+    pub fn evict_idle_flows(&mut self, now: Instant, max_scan: usize) -> Vec<FiveTuple> {
+        if self.table.is_empty() {
+            return Vec::new();
         }
+        let ttl = self.plane.flow_ttl();
+        let evicted = self.table.evict_idle(now, ttl, max_scan);
+        let mut tuples = Vec::with_capacity(evicted.len());
+        for (tuple, tenant) in evicted {
+            self.plane.flow_closed(tenant);
+            tuples.push(tuple);
+        }
+        tuples
+    }
+
+    /// Per-tenant counter table (indexed by tenant id).
+    pub fn tenant_counters(&self) -> Vec<TenantCounters> {
+        self.plane.counters().to_vec()
+    }
+
+    /// Allocation-reusing variant for the pump's stats publish: clears
+    /// `out` and copies the current table into it.
+    pub fn publish_tenant_counters(&self, out: &mut Vec<TenantCounters>) {
+        out.clear();
+        out.extend_from_slice(self.plane.counters());
     }
 
     /// The engine colocated with this shard.
@@ -269,7 +598,7 @@ impl DirectorShard {
 
     /// Live flow count.
     pub fn num_flows(&self) -> usize {
-        self.flows.len()
+        self.table.len()
     }
 
     /// Counter snapshot. O(1): the per-flow counters are folded into
@@ -278,8 +607,9 @@ impl DirectorShard {
     pub fn stats(&self) -> DirectorShardStats {
         DirectorShardStats {
             shard: self.id,
-            flows: self.flows.len() as u64,
+            flows: self.table.len() as u64,
             flows_created: self.flows_created,
+            flows_closed: self.table.flows_closed,
             forwarded_packets: self.forwarded_packets,
             msgs_in: self.agg_msgs_in,
             reqs_offloaded: self.agg_reqs_offloaded,
@@ -294,9 +624,12 @@ impl DirectorShard {
 mod tests {
     use super::*;
     use crate::dpufs::{DpuFs, FsConfig};
+    use crate::net::tcp::TcpEndpoint;
     use crate::offload::{NoOffload, OffloadEngineConfig};
+    use crate::proto::{framing, AppRequest, NetMsg};
     use crate::ssd::{AsyncSsd, Ssd};
     use std::sync::RwLock;
+    use std::time::Duration;
 
     fn shard(id: usize) -> DirectorShard {
         let ssd = Arc::new(Ssd::new(4 << 20, 512));
@@ -315,6 +648,14 @@ mod tests {
             Arc::new(CuckooCache::new(64)),
             engine,
         )
+    }
+
+    /// Frame `msg` through a client-side TCP endpoint into wire
+    /// segments.
+    fn client_segs(client: &mut TcpEndpoint, msg: &NetMsg) -> Vec<Segment> {
+        let mut stream = Vec::new();
+        framing::write_frame(&mut stream, &msg.encode());
+        client.send(&stream)
     }
 
     #[test]
@@ -352,5 +693,91 @@ mod tests {
             let s = shard(id);
             assert_eq!(s.owns(&t, shards), id == core);
         }
+    }
+
+    #[test]
+    fn idle_flows_evicted_and_counted() {
+        let mut s = shard(0);
+        s.configure_tenants(TenantPlaneConfig { flow_ttl_ms: 0, ..Default::default() });
+        for port in 0..3u16 {
+            let t = FiveTuple::new(10, 20 + port, 30, 5000);
+            let seg = Segment { seq: 0, payload: crate::buf::BufView::empty(), ack: 0 };
+            s.on_client_packets(&t, vec![seg]);
+        }
+        assert_eq!(s.num_flows(), 3);
+        // All flows are quiescent (nothing admitted), so a zero TTL
+        // reclaims every one of them; churned tables return to steady
+        // state instead of growing without bound.
+        let evicted = s.evict_idle_flows(Instant::now() + Duration::from_millis(1), 16);
+        assert_eq!(evicted.len(), 3);
+        assert_eq!(s.num_flows(), 0);
+        let st = s.stats();
+        assert_eq!(st.flows_closed, 3);
+        assert_eq!(st.flows_created, 3, "creation history survives eviction");
+        // Reconnecting after eviction builds fresh state.
+        let t = FiveTuple::new(10, 20, 30, 5000);
+        let seg = Segment { seq: 0, payload: crate::buf::BufView::empty(), ack: 0 };
+        s.on_client_packets(&t, vec![seg]);
+        assert_eq!(s.num_flows(), 1);
+        assert_eq!(s.stats().flows_created, 4);
+    }
+
+    #[test]
+    fn flow_cap_degrades_to_forwarding() {
+        let mut s = shard(0);
+        s.configure_tenants(TenantPlaneConfig { max_flows: 1, ..Default::default() });
+        let t0 = FiveTuple::new(10, 1, 30, 5000);
+        let t1 = FiveTuple::new(10, 2, 30, 5000);
+        let seg = |b: &[u8]| Segment { seq: 0, payload: b.to_vec().into(), ack: 0 };
+        s.on_client_packets(&t0, vec![seg(b"x")]);
+        let out = s.on_client_packets(&t1, vec![seg(b"y")]);
+        assert_eq!(out.forwarded, 1, "over-cap flow is forwarded, not dropped");
+        assert_eq!(out.to_host.len(), 1);
+        assert_eq!(s.num_flows(), 1);
+        let tc = s.tenant_counters();
+        assert_eq!(tc[0].flows, 1);
+        assert_eq!(tc[0].flows_rejected, 1);
+    }
+
+    #[test]
+    fn pending_bound_rejects_with_clean_err() {
+        let mut s = shard(0);
+        s.configure_tenants(TenantPlaneConfig { max_pending: 2, ..Default::default() });
+        let t = FiveTuple::new(10, 20, 30, 5000);
+        let mut client = TcpEndpoint::new();
+        // NoOffload routes everything to the host, so admitted requests
+        // stay pending until a host exchange happens (never, here).
+        let msg = NetMsg {
+            msg_id: 7,
+            requests: (0..5).map(|k| AppRequest::KvGet { key: k }).collect(),
+        };
+        let segs = client_segs(&mut client, &msg);
+        let out = s.on_client_packets(&t, segs);
+        let tc = s.tenant_counters();
+        assert_eq!(tc[0].admitted, 2);
+        assert_eq!(tc[0].pending, 2);
+        assert_eq!(tc[0].rejected_pending, 3);
+        assert_eq!(tc[0].throttled, 0);
+        // The three rejects came back as framed ERR responses on
+        // connection 1 (clean refusal, not a black hole).
+        assert!(!out.to_client.is_empty());
+        let mut resps = Vec::new();
+        for seg in &out.to_client {
+            client.on_segment(seg);
+        }
+        let delivered = client.deliver_rope();
+        let mut rx = framing::StreamBuf::new();
+        rx.extend_rope(&delivered, client.ledger());
+        while let Some(frame) = rx.read_frame() {
+            if let Some(r) = crate::proto::NetResp::decode(&frame) {
+                resps.push(r);
+            }
+        }
+        assert_eq!(resps.len(), 3);
+        assert!(resps.iter().all(|r| r.status == crate::proto::NetResp::ERR));
+        // Rejected indexes are the tail of the admission order.
+        let mut idxs: Vec<u16> = resps.iter().map(|r| r.idx).collect();
+        idxs.sort_unstable();
+        assert_eq!(idxs, vec![2, 3, 4]);
     }
 }

@@ -1,0 +1,291 @@
+//! Per-tenant QoS for the fanout plane: token-bucket rate limiting,
+//! bounded pending (admission control under overload), per-shard flow
+//! caps, and the drain weights the shard's fair scheduler consumes.
+//!
+//! Everything here defaults to OFF: `TenantPlaneConfig::default()` is a
+//! single tenant with no rate, pending or flow bounds, so the
+//! single-tenant benchmarks and the deterministic chaos harness pay one
+//! counter update per burst and never touch the wall clock. Limits only
+//! engage when the operator asks for them (`--tenants/--rate/
+//! --max-flows`), and rejections are *clean*: the request is answered
+//! with a protocol-level ERR, never silently dropped, so clients under
+//! overload see bounded latency instead of a hung connection.
+
+use std::time::{Duration, Instant};
+
+use crate::metrics::TenantCounters;
+use crate::net::FiveTuple;
+
+/// Knobs of the tenant plane (per shard; caps are per-shard too, so a
+/// deployment-wide bound is `shards * max_*`).
+#[derive(Debug, Clone)]
+pub struct TenantPlaneConfig {
+    /// Tenant buckets flows are folded into (0/1 = single tenant).
+    pub tenants: u32,
+    /// Token-bucket refill per tenant, requests/second. 0 = unlimited
+    /// (no bucket state, no clock reads).
+    pub rate: u64,
+    /// Bucket depth (burst allowance). 0 derives one second of `rate`.
+    pub burst: u64,
+    /// Per-tenant cap on admitted requests in flight. 0 = unlimited.
+    pub max_pending: u64,
+    /// Per-shard cap on open flows. 0 = unlimited.
+    pub max_flows: usize,
+    /// Idle-flow eviction TTL in milliseconds.
+    pub flow_ttl_ms: u64,
+    /// Fair-drain weights by tenant id (missing/zero entries count as
+    /// 1). Empty = equal weights.
+    pub weights: Vec<u32>,
+}
+
+impl Default for TenantPlaneConfig {
+    fn default() -> Self {
+        TenantPlaneConfig {
+            tenants: 1,
+            rate: 0,
+            burst: 0,
+            max_pending: 0,
+            max_flows: 0,
+            // Long enough that no existing test or bench ever evicts a
+            // flow it still cares about; short enough that a churned
+            // 10k-flow run returns to steady state.
+            flow_ttl_ms: 10_000,
+            weights: Vec::new(),
+        }
+    }
+}
+
+/// Admission answer for one tenant at one instant: how many requests
+/// may enter, and which bound was the binding one (so rejects are
+/// attributed to the right counter).
+#[derive(Debug, Clone, Copy)]
+pub struct Quota {
+    pub allow: u64,
+    rate_bound: bool,
+}
+
+impl Quota {
+    /// Unlimited (used by the fast path when no limits are configured).
+    pub fn open() -> Quota {
+        Quota { allow: u64::MAX, rate_bound: false }
+    }
+}
+
+struct Bucket {
+    tokens: f64,
+    /// Lazily armed on first refill so construction never reads the
+    /// clock.
+    last: Option<Instant>,
+}
+
+/// Per-shard tenant state: buckets + the counter table published to the
+/// control plane.
+pub struct TenantPlane {
+    cfg: TenantPlaneConfig,
+    buckets: Vec<Bucket>,
+    table: Vec<TenantCounters>,
+}
+
+impl TenantPlane {
+    pub fn new(cfg: TenantPlaneConfig) -> Self {
+        let n = cfg.tenants.max(1) as usize;
+        let depth = Self::depth_of(&cfg);
+        let buckets = if cfg.rate > 0 {
+            (0..n).map(|_| Bucket { tokens: depth, last: None }).collect()
+        } else {
+            Vec::new()
+        };
+        let table = (0..n).map(|t| TenantCounters::new(t as u32)).collect();
+        TenantPlane { cfg, buckets, table }
+    }
+
+    fn depth_of(cfg: &TenantPlaneConfig) -> f64 {
+        if cfg.burst > 0 { cfg.burst as f64 } else { cfg.rate.max(1) as f64 }
+    }
+
+    pub fn config(&self) -> &TenantPlaneConfig {
+        &self.cfg
+    }
+
+    /// Whether any per-request limit is configured (fast-path check:
+    /// when false, ingest runs with an open quota and the only tenant
+    /// cost is counter arithmetic).
+    pub fn limited(&self) -> bool {
+        self.cfg.rate > 0 || self.cfg.max_pending > 0
+    }
+
+    pub fn tenant_of(&self, tuple: &FiveTuple) -> u32 {
+        tuple.tenant(self.cfg.tenants)
+    }
+
+    pub fn flow_ttl(&self) -> Duration {
+        Duration::from_millis(self.cfg.flow_ttl_ms)
+    }
+
+    /// Fair-drain weight of a tenant (≥ 1).
+    pub fn weight(&self, tenant: u32) -> u64 {
+        self.cfg.weights.get(tenant as usize).copied().unwrap_or(1).max(1) as u64
+    }
+
+    /// Flow admission: called before creating PEP state for a new flow.
+    /// On refusal the counter is charged and the caller forwards the
+    /// flow's packets to the host untouched (the stage-1-miss path), so
+    /// an over-cap client degrades to un-accelerated service rather
+    /// than a black hole.
+    pub fn admit_flow(&mut self, tenant: u32, open_flows: usize) -> bool {
+        let t = &mut self.table[tenant as usize];
+        if self.cfg.max_flows > 0 && open_flows >= self.cfg.max_flows {
+            t.flows_rejected += 1;
+            false
+        } else {
+            t.flows += 1;
+            true
+        }
+    }
+
+    pub fn flow_closed(&mut self, tenant: u32) {
+        let t = &mut self.table[tenant as usize];
+        t.flows = t.flows.saturating_sub(1);
+    }
+
+    /// How many requests tenant `tenant` may admit right now.
+    pub fn quota(&mut self, tenant: u32, now: Instant) -> Quota {
+        if !self.limited() {
+            return Quota::open();
+        }
+        let pending = self.table[tenant as usize].pending;
+        let pending_room = if self.cfg.max_pending == 0 {
+            u64::MAX
+        } else {
+            self.cfg.max_pending.saturating_sub(pending)
+        };
+        let rate_room = if self.cfg.rate == 0 {
+            u64::MAX
+        } else {
+            let depth = Self::depth_of(&self.cfg);
+            let b = &mut self.buckets[tenant as usize];
+            if let Some(last) = b.last {
+                let dt = now.saturating_duration_since(last).as_secs_f64();
+                b.tokens = (b.tokens + dt * self.cfg.rate as f64).min(depth);
+            }
+            b.last = Some(now);
+            b.tokens as u64
+        };
+        Quota {
+            allow: rate_room.min(pending_room),
+            rate_bound: rate_room < pending_room,
+        }
+    }
+
+    /// Settle one ingest against the quota it was given: `admitted`
+    /// requests consume tokens and raise the pending gauge; `rejected`
+    /// requests are charged to whichever bound was binding.
+    pub fn settle(&mut self, tenant: u32, quota: Quota, admitted: u64, rejected: u64) {
+        let t = &mut self.table[tenant as usize];
+        t.admitted += admitted;
+        t.pending += admitted;
+        if rejected > 0 {
+            if quota.rate_bound {
+                t.throttled += rejected;
+            } else {
+                t.rejected_pending += rejected;
+            }
+        }
+        if self.cfg.rate > 0 && admitted > 0 {
+            let b = &mut self.buckets[tenant as usize];
+            b.tokens = (b.tokens - admitted as f64).max(0.0);
+        }
+    }
+
+    /// Responses framed for admitted requests drain the pending gauge.
+    pub fn on_completed(&mut self, tenant: u32, n: u64) {
+        let t = &mut self.table[tenant as usize];
+        t.completed += n;
+        t.pending = t.pending.saturating_sub(n);
+    }
+
+    /// The counter table (indexed by tenant id) for publication.
+    pub fn counters(&self) -> &[TenantCounters] {
+        &self.table
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unlimited_plane_is_open_and_still_counts() {
+        let mut p = TenantPlane::new(TenantPlaneConfig::default());
+        assert!(!p.limited());
+        let q = p.quota(0, Instant::now());
+        assert_eq!(q.allow, u64::MAX);
+        p.settle(0, q, 3, 0);
+        p.on_completed(0, 2);
+        let t = &p.counters()[0];
+        assert_eq!((t.admitted, t.completed, t.pending), (3, 2, 1));
+    }
+
+    #[test]
+    fn pending_bound_limits_and_attributes_rejects() {
+        let cfg = TenantPlaneConfig { tenants: 2, max_pending: 4, ..Default::default() };
+        let mut p = TenantPlane::new(cfg);
+        let now = Instant::now();
+        let q = p.quota(1, now);
+        assert_eq!(q.allow, 4);
+        p.settle(1, q, 4, 2); // 4 admitted, 2 bounced over the bound
+        let t = &p.counters()[1];
+        assert_eq!(t.rejected_pending, 2);
+        assert_eq!(t.throttled, 0);
+        assert_eq!(p.quota(1, now).allow, 0, "bound reached");
+        p.on_completed(1, 4);
+        assert_eq!(p.quota(1, now).allow, 4, "completions reopen the bound");
+        // Tenant 0 is unaffected.
+        assert_eq!(p.quota(0, now).allow, 4);
+    }
+
+    #[test]
+    fn token_bucket_refills_with_time_and_marks_throttles() {
+        let cfg = TenantPlaneConfig { tenants: 1, rate: 100, burst: 10, ..Default::default() };
+        let mut p = TenantPlane::new(cfg);
+        let t0 = Instant::now();
+        let q = p.quota(0, t0);
+        assert_eq!(q.allow, 10, "bucket starts full at burst depth");
+        p.settle(0, q, 10, 5);
+        assert_eq!(p.counters()[0].throttled, 5);
+        assert_eq!(p.quota(0, t0).allow, 0, "bucket drained");
+        // 55ms at 100 req/s refills 5.5 tokens -> 5 whole ones (the
+        // half-token headroom keeps float truncation off the assert).
+        let q = p.quota(0, t0 + Duration::from_millis(55));
+        assert_eq!(q.allow, 5);
+        // Refill never exceeds the depth.
+        assert_eq!(p.quota(0, t0 + Duration::from_secs(60)).allow, 10);
+    }
+
+    #[test]
+    fn flow_cap_rejects_and_gauges_track() {
+        let cfg = TenantPlaneConfig { tenants: 1, max_flows: 2, ..Default::default() };
+        let mut p = TenantPlane::new(cfg);
+        assert!(p.admit_flow(0, 0));
+        assert!(p.admit_flow(0, 1));
+        assert!(!p.admit_flow(0, 2), "at the cap");
+        let t = &p.counters()[0];
+        assert_eq!((t.flows, t.flows_rejected), (2, 1));
+        p.flow_closed(0);
+        assert_eq!(p.counters()[0].flows, 1);
+        assert!(p.admit_flow(0, 1));
+    }
+
+    #[test]
+    fn weights_default_to_one() {
+        let cfg = TenantPlaneConfig {
+            tenants: 3,
+            weights: vec![4, 0],
+            ..Default::default()
+        };
+        let p = TenantPlane::new(cfg);
+        assert_eq!(p.weight(0), 4);
+        assert_eq!(p.weight(1), 1, "zero weight clamps to 1");
+        assert_eq!(p.weight(2), 1, "missing weight defaults to 1");
+    }
+}

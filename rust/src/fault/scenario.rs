@@ -37,7 +37,7 @@ use crate::coordinator::{
     tuple_for_shard, ClientConn, ShardedServer, ShardedServerConfig, StorageServer,
     StorageServerConfig,
 };
-use crate::director::{AppSignature, DirectorShardStats};
+use crate::director::{AppSignature, DirectorShardStats, TenantPlaneConfig};
 use crate::dpufs::RecoveryReport;
 use crate::filelib::{DdsClient, DdsFile, PollGroup};
 use crate::fileservice::{FileServiceConfig, GroupCounters};
@@ -57,6 +57,17 @@ pub struct Scenario {
     pub name: &'static str,
     pub seed: u64,
     pub shards: usize,
+    /// Connections per shard (the fanout multiplier; default 1 keeps
+    /// the classic one-connection-per-shard shape).
+    pub conns_per_shard: usize,
+    /// Client IPs per connection (indexed by connection number; empty
+    /// → every connection uses the default IP). The tenant plane keys
+    /// on client IP, so a skewed IP list is how a scenario expresses a
+    /// skewed tenant mix.
+    pub client_ips: Vec<u32>,
+    /// Per-tenant QoS configuration installed on every shard (default:
+    /// one tenant, no limits).
+    pub tenants: TenantPlaneConfig,
     /// Request batches per connection (one connection per shard).
     pub rounds: usize,
     /// Read requests per batch.
@@ -94,6 +105,9 @@ impl Scenario {
             name,
             seed,
             shards: 2,
+            conns_per_shard: 1,
+            client_ips: Vec::new(),
+            tenants: TenantPlaneConfig::default(),
             rounds: 5,
             batch: 4,
             read_size: 512,
@@ -263,7 +277,7 @@ impl Scenario {
 
     /// Total requests the scenario issues.
     pub fn total_requests(&self) -> u64 {
-        (self.rounds * self.shards * self.batch) as u64
+        (self.rounds * self.shards * self.conns_per_shard * self.batch) as u64
     }
 }
 
@@ -282,6 +296,8 @@ pub struct ScenarioReport {
     pub schedule: Vec<FaultEvent>,
     pub stats: DirectorShardStats,
     pub per_shard: Vec<DirectorShardStats>,
+    /// Per-tenant QoS counters merged across shards at scenario end.
+    pub tenants: Vec<crate::metrics::TenantCounters>,
     pub group_stats: Vec<GroupCounters>,
     /// Pump CPU snapshots at scenario end: index 0 is the file
     /// service, then one per shard. (Timing-dependent — never part of
@@ -358,6 +374,7 @@ pub fn run_scenario(sc: &Scenario) -> anyhow::Result<ScenarioReport> {
         },
         faults: Some(plane.clone()),
         idle: sc.idle,
+        tenants: sc.tenants.clone(),
         ..Default::default()
     };
     let server = ShardedServer::over(
@@ -370,27 +387,39 @@ pub fn run_scenario(sc: &Scenario) -> anyhow::Result<ScenarioReport> {
     // Setup/fill is done — start injecting.
     plane.arm_ssd();
 
-    let mut conns: Vec<ChaosConn> = (0..sc.shards)
-        .map(|s| {
-            let tuple = tuple_for_shard(
-                s,
-                sc.shards,
-                0x0a00_0001,
-                40_000 + (s as u16) * 101,
-                0x0a00_00ff,
-                SERVER_PORT,
-            );
+    // Connection build-out: `conns_per_shard` connections per shard,
+    // each with a unique tuple (port hints can collide at high fanout,
+    // so tuples are deduped explicitly) and a client IP drawn from the
+    // scenario's IP list (the tenant key).
+    let cps = sc.conns_per_shard.max(1);
+    let mut used = std::collections::HashSet::new();
+    let mut conns: Vec<ChaosConn> = (0..sc.shards * cps)
+        .map(|ci| {
+            let s = ci / cps;
+            let ip = sc.client_ips.get(ci).copied().unwrap_or(0x0a00_0001);
+            let mut hint = 40_000u16.wrapping_add((ci as u16).wrapping_mul(101));
+            let tuple = loop {
+                let t = tuple_for_shard(s, sc.shards, ip, hint, 0x0a00_00ff, SERVER_PORT);
+                if used.insert(t) {
+                    break t;
+                }
+                hint = hint.wrapping_add(1);
+            };
             ChaosConn {
                 shard: s,
                 tuple,
                 client: ClientConn::new(tuple),
-                up: plane.wire_chaos(s, true),
-                down: plane.wire_chaos(s, false),
+                up: plane.wire_chaos(ci, true),
+                down: plane.wire_chaos(ci, false),
                 pending: None,
                 last_rx: Instant::now(),
             }
         })
         .collect();
+    // Tuple → connection routing for pump_shard (at fanout a linear
+    // scan per received batch would be quadratic).
+    let index: std::collections::HashMap<FiveTuple, usize> =
+        conns.iter().enumerate().map(|(i, c)| (c.tuple, i)).collect();
 
     let mut acc = Acc { ok: 0, err: 0, outcomes: Vec::new() };
     for round in 0..sc.rounds {
@@ -424,8 +453,9 @@ pub fn run_scenario(sc: &Scenario) -> anyhow::Result<ScenarioReport> {
         // Send one batch per connection (msg ids and offsets derive
         // from (seed, msg_id) alone, so the workload is identical run
         // to run regardless of timing).
-        for conn in conns.iter_mut() {
-            let msg_id = (round * sc.shards + conn.shard) as u64 + 1;
+        let n_conns = conns.len();
+        for (ci, conn) in conns.iter_mut().enumerate() {
+            let msg_id = (round * n_conns + ci) as u64 + 1;
             let mut mrng = Rng::new(sc.seed ^ msg_id.wrapping_mul(0x9E37_79B9_7F4A_7C15));
             let mut requests = Vec::with_capacity(sc.batch);
             let mut expected = Vec::with_capacity(sc.batch);
@@ -449,14 +479,19 @@ pub fn run_scenario(sc: &Scenario) -> anyhow::Result<ScenarioReport> {
             conn.last_rx = Instant::now();
         }
 
-        // Drive every connection's batch to full resolution.
+        // Drive every connection's batch to full resolution. Receives
+        // are per shard and routed to the owning connection by tuple
+        // (at fanout a shard interleaves many connections' segments on
+        // one channel); per-shard unresolved-batch counters keep the
+        // loop's bookkeeping O(1) per event.
+        let mut unresolved: Vec<usize> = vec![cps; sc.shards];
         let deadline = Instant::now() + sc.round_timeout;
         loop {
             let mut all_done = true;
-            for conn in conns.iter_mut() {
-                if conn.pending.as_ref().is_some_and(|p| p.got < p.expect) {
+            for shard in 0..sc.shards {
+                if unresolved[shard] > 0 {
                     all_done = false;
-                    pump_conn(sc, &server, conn, &mut acc)?;
+                    pump_shard(sc, &server, shard, &mut conns, &index, &mut unresolved, &mut acc)?;
                 }
             }
             if all_done {
@@ -489,10 +524,12 @@ pub fn run_scenario(sc: &Scenario) -> anyhow::Result<ScenarioReport> {
     // advancing is spinning (a busy-loop regression). Two windows so
     // the verdict is a delta, not an absolute count.
     if sc.assert_parked {
-        let IdlePolicy::Adaptive { park_timeout, .. } = sc.idle else {
-            anyhow::bail!("scenario '{}': assert_parked needs an Adaptive policy", sc.name);
-        };
-        let settle = (park_timeout * 8).max(Duration::from_millis(50));
+        anyhow::ensure!(
+            matches!(sc.idle, IdlePolicy::Adaptive { .. }),
+            "scenario '{}': assert_parked needs an Adaptive policy",
+            sc.name
+        );
+        let settle = (sc.idle.park_bound() * 8).max(Duration::from_millis(50));
         std::thread::sleep(settle);
         let before = server.all_cpu_stats();
         std::thread::sleep(settle);
@@ -524,6 +561,7 @@ pub fn run_scenario(sc: &Scenario) -> anyhow::Result<ScenarioReport> {
         schedule: plane.schedule(),
         stats: server.stats(),
         per_shard: server.shard_stats(),
+        tenants: server.tenant_stats(),
         group_stats: server
             .storage
             .front_end()
@@ -563,22 +601,29 @@ pub fn run_scenario(sc: &Scenario) -> anyhow::Result<ScenarioReport> {
     Ok(report)
 }
 
-/// One pump step for one connection: absorb a server batch (through
-/// downstream chaos), verify and account its responses, send ACKs back
-/// (through upstream chaos); on a receive stall, fire the client's
-/// timeout retransmission.
-fn pump_conn(
+/// One pump step for one shard: absorb a server batch (through
+/// downstream chaos), route it by tuple to the owning connection,
+/// verify and account its responses, send ACKs back (through upstream
+/// chaos); when the shard goes quiet, fire the timeout retransmission
+/// of every stalled connection it owns.
+fn pump_shard(
     sc: &Scenario,
     server: &ShardedServer,
-    conn: &mut ChaosConn,
+    shard: usize,
+    conns: &mut [ChaosConn],
+    index: &std::collections::HashMap<FiveTuple, usize>,
+    unresolved: &mut [usize],
     acc: &mut Acc,
 ) -> anyhow::Result<()> {
-    match server.recv_timeout(conn.shard, Duration::from_millis(5)) {
+    match server.recv_timeout(shard, Duration::from_millis(5)) {
         Some((tuple, segs)) => {
+            let ci = *index.get(&tuple).ok_or_else(|| {
+                anyhow::anyhow!("shard {shard} emitted segments for an unknown connection")
+            })?;
+            let conn = &mut conns[ci];
             anyhow::ensure!(
-                tuple == conn.tuple,
-                "shard {} emitted segments for a connection it does not own",
-                conn.shard
+                conn.shard == shard,
+                "shard {shard} emitted segments for a connection it does not own"
             );
             conn.last_rx = Instant::now();
             let segs = conn.down.apply(segs);
@@ -599,6 +644,9 @@ fn pump_conn(
                 }
                 p.seen[idx] = true;
                 p.got += 1;
+                if p.got == p.expect {
+                    unresolved[shard] -= 1;
+                }
                 if r.status == NetResp::OK {
                     anyhow::ensure!(
                         r.payload == p.expected[idx],
@@ -621,15 +669,19 @@ fn pump_conn(
             }
         }
         None => {
-            // Nothing from the server: if the stall persists, walk the
-            // timeout path — retransmit everything outstanding on
-            // connection 1 (recovers upstream segment drops).
-            if conn.last_rx.elapsed() >= Duration::from_millis(50) {
-                let re = conn.up.apply(conn.client.ep.retransmit_all());
-                if !re.is_empty() {
-                    server.send(&conn.tuple, re)?;
+            // Nothing from the shard: any connection stalled past the
+            // bound walks the timeout path — retransmit everything
+            // outstanding on connection 1 (recovers upstream drops).
+            for conn in conns.iter_mut().filter(|c| {
+                c.shard == shard && c.pending.as_ref().is_some_and(|p| p.got < p.expect)
+            }) {
+                if conn.last_rx.elapsed() >= Duration::from_millis(50) {
+                    let re = conn.up.apply(conn.client.ep.retransmit_all());
+                    if !re.is_empty() {
+                        server.send(&conn.tuple, re)?;
+                    }
+                    conn.last_rx = Instant::now();
                 }
-                conn.last_rx = Instant::now();
             }
         }
     }

@@ -20,7 +20,7 @@ use std::time::Duration;
 
 use crate::dpufs::{DirId, FileId, FsError};
 use crate::fileservice::{ControlMsg, Doorbell, GroupChannel, GroupCounters};
-use crate::metrics::{CpuStats, LatencyStats};
+use crate::metrics::{CpuStats, LatencyStats, TenantCounters};
 use crate::proto::{FileOpKind, FileRequest, FileResponse, Status};
 use crate::ring::{ProgressRing, RequestRing, ResponseRing, RingStatus};
 
@@ -372,6 +372,14 @@ impl DdsClient {
     /// merged with every registered peer recorder (director shards).
     pub fn latency_stats(&self) -> Result<LatencyStats, LibError> {
         Ok(ctrl_call!(self, LatencyStats {}))
+    }
+
+    /// Per-tenant QoS counters (admitted / completed / rejected /
+    /// throttled / open flows), merged across every director shard
+    /// registered with the service — the fanout plane's fairness
+    /// picture in one control round trip.
+    pub fn tenant_stats(&self) -> Result<Vec<TenantCounters>, LibError> {
+        Ok(ctrl_call!(self, TenantStats {}))
     }
 
     /// `CreatePoll` (§4.2): allocate request/response rings for the

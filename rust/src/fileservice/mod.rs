@@ -37,7 +37,9 @@ use crate::cache::CuckooCache;
 use crate::dma::DmaChannel;
 use crate::dpufs::{DirId, DpuFs, FileId, FsError};
 use crate::idle::IdleGovernor;
-use crate::metrics::{CpuLedger, CpuStats, LatencyHistogram, LatencyStats};
+use crate::metrics::{
+    merge_tenant_tables, CpuLedger, CpuStats, LatencyHistogram, LatencyStats, TenantCounters,
+};
 use crate::offload::{OffloadLogic, ReadOp, WriteOp};
 use crate::proto::{FileOpKind, FileRequest, FileResponse, Status};
 use crate::ring::{ProgressRing, ResponseRing};
@@ -73,6 +75,12 @@ pub enum ControlMsg {
     /// so one control round trip reports the whole deployment's
     /// p50/p99/p99.9 trajectory.
     LatencyStats { reply: mpsc::Sender<LatencyStats> },
+    /// Per-tenant QoS counters merged across every registered source
+    /// (director shards register their tables via
+    /// [`crate::coordinator::StorageServer::register_tenant_source`]):
+    /// admitted/completed/rejected/throttled per tenant, one control
+    /// round trip for the whole deployment's fairness picture.
+    TenantStats { reply: mpsc::Sender<Vec<TenantCounters>> },
     /// Fault plane: stall one poll group for N service iterations (the
     /// service neither drains its request ring nor delivers its
     /// responses while stalled). Replies whether the group exists.
@@ -272,6 +280,10 @@ pub struct FileService {
     /// Peer recorders folded into [`ControlMsg::LatencyStats`] replies
     /// (director shards register theirs through the storage server).
     lat_peers: Arc<Mutex<Vec<Arc<LatencyHistogram>>>>,
+    /// Per-shard tenant counter tables folded into
+    /// [`ControlMsg::TenantStats`] replies (same registration pattern
+    /// as `lat_peers`).
+    tenant_peers: Arc<Mutex<Vec<Arc<Mutex<Vec<TenantCounters>>>>>>,
     /// Reused burst buffers — the batch pipeline's steady state
     /// allocates nothing: SSD ops staged per intake burst, completions
     /// polled per absorb pass, deliverables gathered per response burst.
@@ -332,6 +344,7 @@ impl FileService {
                 cpu,
                 lat: LatencyHistogram::new(),
                 lat_peers: Arc::new(Mutex::new(Vec::new())),
+                tenant_peers: Arc::new(Mutex::new(Vec::new())),
                 submit_buf: Vec::new(),
                 comp_buf: Vec::new(),
                 deliver_buf: Vec::new(),
@@ -476,6 +489,16 @@ impl FileService {
                         merged.merge(&peer.snapshot());
                     }
                     let _ = reply.send(merged.stats());
+                }
+                ControlMsg::TenantStats { reply } => {
+                    let tables: Vec<Vec<TenantCounters>> = self
+                        .tenant_peers
+                        .lock()
+                        .unwrap()
+                        .iter()
+                        .map(|t| t.lock().unwrap().clone())
+                        .collect();
+                    let _ = reply.send(merge_tenant_tables(&tables));
                 }
                 ControlMsg::InjectGroupStall { group, iterations, reply } => {
                     let known = group < self.groups.len();
@@ -821,6 +844,13 @@ impl FileService {
     /// say) folds it into every subsequent control-plane latency reply.
     pub fn latency_peers(&self) -> Arc<Mutex<Vec<Arc<LatencyHistogram>>>> {
         self.lat_peers.clone()
+    }
+
+    /// The tenant-table registry behind [`ControlMsg::TenantStats`].
+    /// Clone before `spawn`; pushing a per-shard table folds it into
+    /// every subsequent control-plane tenant reply.
+    pub fn tenant_peers(&self) -> Arc<Mutex<Vec<Arc<Mutex<Vec<TenantCounters>>>>>> {
+        self.tenant_peers.clone()
     }
 }
 

@@ -166,6 +166,19 @@ impl IdlePolicy {
             IdlePolicy::Adaptive { .. } => "adaptive",
         }
     }
+
+    /// Worst-case staleness one park can add: zero under `Poll` (which
+    /// never sleeps), the policy's `park_timeout` under `Adaptive`.
+    /// Callers sizing settle/quiesce windows — and the fanout plane's
+    /// idle-flow TTL sweep, whose cadence at full idle is exactly one
+    /// sweep per expired park — use this instead of matching on the
+    /// variant.
+    pub fn park_bound(&self) -> Duration {
+        match self {
+            IdlePolicy::Poll => Duration::ZERO,
+            IdlePolicy::Adaptive { park_timeout, .. } => *park_timeout,
+        }
+    }
 }
 
 /// Yield rung length between spinning and parking.

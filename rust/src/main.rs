@@ -26,7 +26,7 @@ dds — DPU-optimized Disaggregated Storage (reproduction)
 USAGE:
     dds serve [--requests N] [--batch B] [--io BYTES] [--no-offload]
               [--shards N] [--idle-policy poll|adaptive|adaptive:S:US]
-              [--burst N]
+              [--burst N] [--tenants T] [--rate R] [--max-flows F]
         run the full functional server (client → director → offload
         engine / host app → SSD) in-process and report throughput;
         --shards > 1 runs the RSS-sharded data plane (one shard
@@ -38,6 +38,11 @@ USAGE:
         --burst caps how many packet batches a shard drains per
         pipeline pass (default 64) — larger bursts amortize more
         per-record overhead, smaller ones tighten latency.
+        --tenants partitions flows into T QoS buckets (by client
+        IP); --rate caps each tenant at R requests/s (token
+        bucket, 0 = unlimited); --max-flows caps open flows per
+        tenant per shard (0 = unlimited). Limits only apply on the
+        sharded path; a per-tenant report prints at exit.
         A CPU report (busy fraction, parks, wakes) prints at exit.
     dds kernels
         load artifacts/*.hlo.txt into the PJRT runtime and smoke-test
@@ -78,6 +83,12 @@ fn serve(args: &[String]) -> anyhow::Result<()> {
             .ok_or_else(|| anyhow::anyhow!("bad --idle-policy {v:?} (poll | adaptive | adaptive:S:US)"))?,
         None => IdlePolicy::default(),
     };
+    let tenants = dds::director::TenantPlaneConfig {
+        tenants: arg_val(args, "--tenants").map_or(1, |v| v.parse().unwrap_or(1)).max(1),
+        rate: arg_val(args, "--rate").map_or(0, |v| v.parse().unwrap_or(0)),
+        max_flows: arg_val(args, "--max-flows").map_or(0, |v| v.parse().unwrap_or(0)),
+        ..Default::default()
+    };
 
     println!(
         "building storage server (offload={offload}, io={io}B, batch={batch}, shards={shards}, burst={burst}, idle={})…",
@@ -96,7 +107,7 @@ fn serve(args: &[String]) -> anyhow::Result<()> {
     if shards > 1 {
         return serve_sharded(
             storage, logic, offload, file, n_requests, batch, io, file_bytes, shards, idle,
-            burst,
+            burst, tenants,
         );
     }
 
@@ -177,6 +188,7 @@ fn serve_sharded(
     shards: usize,
     idle: dds::idle::IdlePolicy,
     burst: usize,
+    tenants: dds::director::TenantPlaneConfig,
 ) -> anyhow::Result<()> {
     use dds::coordinator::{
         run_sharded_request, tuple_for_shard, ShardDriver, ShardedServer, ShardedServerConfig,
@@ -185,7 +197,7 @@ fn serve_sharded(
 
     let logic_dyn: Arc<dyn OffloadLogic> =
         if offload { logic } else { Arc::new(NoOffload) };
-    let cfg = ShardedServerConfig { shards, idle, burst, ..Default::default() };
+    let cfg = ShardedServerConfig { shards, idle, burst, tenants, ..Default::default() };
     let server = ShardedServer::over(
         storage,
         cfg,
@@ -260,6 +272,18 @@ fn serve_sharded(
         print_cpu(&name, c);
     }
     print_latency(&server.latency_stats());
+    for t in server.tenant_stats() {
+        println!(
+            "tenant {}: admitted={} completed={} rejected={} throttled={} flows={} (rejected={})",
+            t.tenant,
+            t.admitted,
+            t.completed,
+            t.rejected_pending,
+            t.throttled,
+            t.flows,
+            t.flows_rejected
+        );
+    }
     Ok(())
 }
 

@@ -6,10 +6,12 @@ mod cpu;
 mod histogram;
 mod latency;
 mod series;
+mod tenant;
 pub mod zerocopy;
 
 pub use cpu::{CpuLedger, CpuStats};
 pub use histogram::Histogram;
 pub use latency::{LatencyHistogram, LatencySnapshot, LatencyStats};
+pub use tenant::{merge_tenant_tables, TenantCounters};
 pub use series::{fmt_ns, fmt_ops, Row, Table};
 pub use zerocopy::{probe_engine_read_path, ZeroCopyProbe};

@@ -1,0 +1,94 @@
+//! Per-tenant accounting for the massive-fanout connection plane.
+//!
+//! A production DPU storage server fronts thousands of DBMS
+//! connections owned by a much smaller set of *tenants* (the
+//! disaggregated-DBMS economics the extended report cites: per-server
+//! tenancy is the deciding factor for the architecture). The director
+//! shards meter admission, throttling, rejection and completion per
+//! tenant; these counters are published lock-free-ish (one writer — the
+//! shard pump — behind an uncontended mutex) and surfaced through the
+//! control plane (`ControlMsg::TenantStats` / `DdsClient`).
+
+/// Monotonic counters (plus two gauges: `pending`, `flows`) of one
+/// tenant on one shard. Aggregate across shards with [`Self::absorb`].
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct TenantCounters {
+    /// Tenant id (derived from the flow's client IP).
+    pub tenant: u32,
+    /// Requests admitted to the data path (offload engine or host).
+    pub admitted: u64,
+    /// Responses framed back to this tenant's clients for admitted
+    /// requests (OK and ERR alike).
+    pub completed: u64,
+    /// Requests rejected with a clean ERR because the tenant was over
+    /// its pending bound (admission control under overload).
+    pub rejected_pending: u64,
+    /// Requests rejected with a clean ERR by the tenant's token-bucket
+    /// rate limit.
+    pub throttled: u64,
+    /// Gauge: admitted requests currently in flight.
+    pub pending: u64,
+    /// Gauge: open flows owned by this tenant.
+    pub flows: u64,
+    /// New flows refused because the shard was at its flow cap.
+    pub flows_rejected: u64,
+}
+
+impl TenantCounters {
+    pub fn new(tenant: u32) -> Self {
+        TenantCounters { tenant, ..Default::default() }
+    }
+
+    /// Fold another shard's view of the SAME tenant into this one
+    /// (counters and gauges both sum: each shard owns disjoint flows).
+    pub fn absorb(&mut self, other: &TenantCounters) {
+        self.admitted += other.admitted;
+        self.completed += other.completed;
+        self.rejected_pending += other.rejected_pending;
+        self.throttled += other.throttled;
+        self.pending += other.pending;
+        self.flows += other.flows;
+        self.flows_rejected += other.flows_rejected;
+    }
+}
+
+/// Merge per-shard tenant tables into one table indexed by tenant id
+/// (ascending). The canonical aggregation used by the sharded server,
+/// the control plane and the fanout bench alike.
+pub fn merge_tenant_tables(tables: &[Vec<TenantCounters>]) -> Vec<TenantCounters> {
+    let mut by_id: std::collections::BTreeMap<u32, TenantCounters> =
+        std::collections::BTreeMap::new();
+    for table in tables {
+        for t in table {
+            by_id.entry(t.tenant).or_insert_with(|| TenantCounters::new(t.tenant)).absorb(t);
+        }
+    }
+    by_id.into_values().collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn merge_sums_per_tenant_across_shards() {
+        let shard0 = vec![
+            TenantCounters { tenant: 0, admitted: 5, pending: 1, ..Default::default() },
+            TenantCounters { tenant: 2, admitted: 3, flows: 2, ..Default::default() },
+        ];
+        let shard1 = vec![TenantCounters {
+            tenant: 0,
+            admitted: 7,
+            throttled: 4,
+            ..Default::default()
+        }];
+        let merged = merge_tenant_tables(&[shard0, shard1]);
+        assert_eq!(merged.len(), 2);
+        assert_eq!(merged[0].tenant, 0);
+        assert_eq!(merged[0].admitted, 12);
+        assert_eq!(merged[0].pending, 1);
+        assert_eq!(merged[0].throttled, 4);
+        assert_eq!(merged[1].tenant, 2);
+        assert_eq!(merged[1].flows, 2);
+    }
+}

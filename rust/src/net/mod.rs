@@ -37,4 +37,18 @@ impl FiveTuple {
     pub fn new(client_ip: u32, client_port: u16, server_ip: u32, server_port: u16) -> Self {
         FiveTuple { client_ip, client_port, server_ip, server_port, proto: Proto::Tcp }
     }
+
+    /// Tenant identity of this flow for the multi-tenant QoS plane:
+    /// tenancy follows the client address (each tenant owns a client
+    /// host; its connections differ only by port). `tenants == 0`
+    /// collapses everything into tenant 0 (single-tenant deployments
+    /// pay nothing); otherwise the address is folded into `tenants`
+    /// buckets so synthetic workloads can dial tenant count directly.
+    pub fn tenant(&self, tenants: u32) -> u32 {
+        if tenants <= 1 {
+            0
+        } else {
+            self.client_ip % tenants
+        }
+    }
 }

@@ -15,6 +15,13 @@ use crate::buf::{BufView, ByteRope, CopyLedger};
 /// Maximum segment size (payload bytes per segment).
 pub const MSS: usize = 1460;
 
+/// Receive window: how far past `rcv_nxt` the receiver will buffer
+/// out-of-order data. Segments wholly or partly beyond this bound are
+/// not buffered (they are re-ACKed and the sender retransmits once the
+/// window opens). This caps per-flow reassembly memory — at 10k flows
+/// one adversarial sender must not be able to hold unbounded buffers.
+pub const RCV_WND: u64 = 1 << 20;
+
 /// A TCP-like segment. `seq`/`payload` carry data; `ack` is cumulative.
 ///
 /// The payload is a refcounted [`BufView`]: segments, the retransmit
@@ -67,6 +74,13 @@ pub struct TcpEndpoint {
     pub retransmitted_segments: u64,
     /// Stats: duplicate ACKs sent by our receiver side.
     pub dup_acks_sent: u64,
+    /// Stats: ACKs for bytes we never sent (corrupted/forged on the
+    /// wire), clamped to `snd_nxt` instead of advancing `snd_una` past
+    /// it.
+    pub bad_acks: u64,
+    /// Stats: out-of-order segments refused because they extend past
+    /// the [`RCV_WND`] receive window.
+    pub ooo_window_drops: u64,
 }
 
 impl Default for TcpEndpoint {
@@ -88,6 +102,8 @@ impl TcpEndpoint {
             ledger: CopyLedger::new(),
             retransmitted_segments: 0,
             dup_acks_sent: 0,
+            bad_acks: 0,
+            ooo_window_drops: 0,
         }
     }
 
@@ -177,21 +193,30 @@ impl TcpEndpoint {
         let mut out = Vec::new();
 
         // --- sender side: process cumulative ACK ---
-        if seg.ack > self.snd_una {
-            self.snd_una = seg.ack;
+        // A corrupted/forged ACK can claim bytes we never sent; taking
+        // it at face value would push `snd_una` past `snd_nxt` and
+        // underflow `bytes_in_flight`. Clamp to `snd_nxt` and count.
+        let ack = if seg.ack > self.snd_nxt {
+            self.bad_acks += 1;
+            self.snd_nxt
+        } else {
+            seg.ack
+        };
+        if ack > self.snd_una {
+            self.snd_una = ack;
             self.dup_acks = 0;
             // Drop fully acked segments from the retransmit queue.
             // Cumulative ACKs cover a prefix of the seq-ordered map, so
             // popping from the front needs no scan and no allocation
             // (perf pass L3-5).
             while let Some((&s, p)) = self.unacked.first_key_value() {
-                if s + p.len() as u64 <= seg.ack {
+                if s + p.len() as u64 <= ack {
                     self.unacked.pop_first();
                 } else {
                     break;
                 }
             }
-        } else if seg.ack == self.snd_una && seg.is_pure_ack() && !self.unacked.is_empty() {
+        } else if ack == self.snd_una && seg.is_pure_ack() && !self.unacked.is_empty() {
             // Duplicate ACK.
             self.dup_acks += 1;
             if self.dup_acks >= 3 {
@@ -215,23 +240,71 @@ impl TcpEndpoint {
             if seg.seq == self.rcv_nxt {
                 self.deliverable.push(seg.payload.clone());
                 self.rcv_nxt = seg.seq_end();
-                // Pull any contiguous out-of-order segments.
-                while let Some(payload) = self.ooo.remove(&self.rcv_nxt) {
-                    self.rcv_nxt += payload.len() as u64;
-                    self.deliverable.push(payload);
-                }
+                self.drain_ooo();
                 out.push(self.pure_ack());
             } else if seg.seq > self.rcv_nxt {
                 // Gap: buffer and emit a duplicate ACK for the hole.
-                self.ooo.entry(seg.seq).or_insert_with(|| seg.payload.clone());
+                // Only within the receive window — an unbounded `ooo`
+                // map would let one flow hold arbitrary memory.
+                if seg.seq_end() <= self.rcv_nxt + RCV_WND {
+                    // Keep the longer payload when ranges share a start
+                    // (retransmits may re-slice at different bounds).
+                    let p = self.ooo.entry(seg.seq).or_insert_with(|| seg.payload.clone());
+                    if seg.payload.len() > p.len() {
+                        *p = seg.payload.clone();
+                    }
+                } else {
+                    self.ooo_window_drops += 1;
+                }
                 self.dup_acks_sent += 1;
                 out.push(self.pure_ack());
+            } else if seg.seq_end() > self.rcv_nxt {
+                // Retransmit straddling the cursor (seq < rcv_nxt <
+                // seq_end): the prefix is already delivered, but the
+                // suffix is NEW data — dropping the whole segment (the
+                // old behaviour) lost those bytes until a full-window
+                // retransmit realigned them. Trim and deliver.
+                let skip = (self.rcv_nxt - seg.seq) as usize;
+                self.deliverable.push(seg.payload.slice(skip..seg.payload.len()));
+                self.rcv_nxt = seg.seq_end();
+                self.drain_ooo();
+                out.push(self.pure_ack());
             } else {
-                // Old/overlapping data: re-ACK.
+                // Fully old data: re-ACK.
                 out.push(self.pure_ack());
             }
         }
         out
+    }
+
+    /// Advance `rcv_nxt` through the out-of-order buffer: deliver
+    /// contiguous entries, trim entries straddling the cursor, and
+    /// purge entries fully behind it. Range-based, not exact-key — an
+    /// ooo segment whose range got covered at a different alignment
+    /// (e.g. buffered at 2000 but the cursor jumped 0→2500) used to be
+    /// stranded forever, a per-flow leak under wire chaos.
+    fn drain_ooo(&mut self) {
+        while let Some((&seq, payload)) = self.ooo.first_key_value() {
+            if seq > self.rcv_nxt {
+                break; // still a hole before the next entry
+            }
+            let end = seq + payload.len() as u64;
+            if end > self.rcv_nxt {
+                let skip = (self.rcv_nxt - seq) as usize;
+                let payload = self.ooo.pop_first().expect("peeked").1;
+                self.deliverable.push(payload.slice(skip..payload.len()));
+                self.rcv_nxt = end;
+            } else {
+                // Fully covered at another alignment: purge.
+                self.ooo.pop_first();
+            }
+        }
+    }
+
+    /// Out-of-order segments currently buffered (bounded by
+    /// [`RCV_WND`]; drained/purged as the cursor advances).
+    pub fn ooo_len(&self) -> usize {
+        self.ooo.len()
     }
 
     fn pure_ack(&self) -> Segment {
@@ -572,6 +645,113 @@ mod tests {
         assert_eq!(d.bytes_copied, total as u64);
         exchange(&mut a, &mut b, segs);
         assert_eq!(b.deliver(), expect);
+    }
+
+    /// Helper: a raw data segment over arbitrary bytes (for crafting
+    /// misaligned retransmits that `send` would never produce).
+    fn raw_seg(seq: u64, bytes: &[u8]) -> Segment {
+        Segment { seq, payload: BufView::from_vec(bytes.to_vec()), ack: 0 }
+    }
+
+    /// Satellite regression: a retransmitted segment straddling
+    /// `rcv_nxt` (`seq < rcv_nxt < seq_end`) used to be dropped whole
+    /// as "old/overlapping data", losing its unseen tail bytes until a
+    /// full-window retransmit happened to realign. The covered prefix
+    /// must be trimmed and the new suffix delivered.
+    #[test]
+    fn straddling_retransmit_delivers_unseen_suffix() {
+        let data: Vec<u8> = (0..2000).map(|i| (i % 211) as u8).collect();
+        let mut b = TcpEndpoint::new();
+        // [0, 1000) arrives; cursor at 1000.
+        b.on_segment(&raw_seg(0, &data[..1000]));
+        assert_eq!(b.rcv_nxt(), 1000);
+        // Misaligned retransmit [600, 1700): 400 already-seen bytes +
+        // 700 new ones.
+        let acks = b.on_segment(&raw_seg(600, &data[600..1700]));
+        assert_eq!(b.rcv_nxt(), 1700, "cursor must advance over the new suffix");
+        assert_eq!(acks.len(), 1);
+        assert_eq!(acks[0].ack, 1700);
+        // Tail closes the stream; delivery is byte-exact, no dupes.
+        b.on_segment(&raw_seg(1700, &data[1700..]));
+        assert_eq!(b.deliver(), data);
+    }
+
+    /// Satellite regression: an out-of-order entry whose range is
+    /// later covered at a DIFFERENT alignment used to be stranded in
+    /// `ooo` forever (the pull loop only matched exact keys) — a
+    /// per-flow memory leak under wire chaos. The cursor advance must
+    /// purge covered entries and trim straddled ones.
+    #[test]
+    fn stale_ooo_purged_and_trimmed_on_cursor_advance() {
+        let data: Vec<u8> = (0..3500).map(|i| (i % 199) as u8).collect();
+        let mut b = TcpEndpoint::new();
+        // [2000, 3000) arrives early → buffered out of order.
+        b.on_segment(&raw_seg(2000, &data[2000..3000]));
+        assert_eq!(b.ooo_len(), 1);
+        // [0, 2500) fills the hole at a different alignment: the ooo
+        // entry now straddles the cursor — its [2500, 3000) suffix
+        // must be delivered, not stranded.
+        b.on_segment(&raw_seg(0, &data[..2500]));
+        assert_eq!(b.rcv_nxt(), 3000, "straddled ooo entry trimmed and delivered");
+        assert_eq!(b.ooo_len(), 0, "no stale entry may remain");
+        // [1500, 3500): prefix old, suffix new — closes the stream.
+        b.on_segment(&raw_seg(1500, &data[1500..]));
+        assert_eq!(b.rcv_nxt(), 3500);
+        assert_eq!(b.deliver(), data);
+        // A fully-covered duplicate buffered early is purged too.
+        let mut c = TcpEndpoint::new();
+        c.on_segment(&raw_seg(100, &data[100..200]));
+        assert_eq!(c.ooo_len(), 1);
+        c.on_segment(&raw_seg(0, &data[..300]));
+        assert_eq!(c.ooo_len(), 0, "covered entry purged, not leaked");
+        assert_eq!(c.deliver(), data[..300].to_vec());
+    }
+
+    /// Satellite regression: the `ooo` buffer is bounded by the
+    /// receive window — segments past `rcv_nxt + RCV_WND` are refused
+    /// (and counted), so one adversarial flow can't hold unbounded
+    /// reassembly memory at 10k flows.
+    #[test]
+    fn ooo_buffer_bounded_by_receive_window() {
+        let mut b = TcpEndpoint::new();
+        // Within the window: buffered.
+        b.on_segment(&raw_seg(MSS as u64, &vec![7u8; MSS]));
+        assert_eq!(b.ooo_len(), 1);
+        // Far beyond the window: refused, counted, still dup-ACKed.
+        let far = RCV_WND + 10 * MSS as u64;
+        let acks = b.on_segment(&raw_seg(far, &vec![9u8; MSS]));
+        assert_eq!(b.ooo_len(), 1, "out-of-window segment must not be buffered");
+        assert_eq!(b.ooo_window_drops, 1);
+        assert_eq!(acks.len(), 1, "refused segment still draws an ACK");
+        // The in-window stream is unaffected.
+        let data = vec![3u8; 2 * MSS];
+        b.on_segment(&raw_seg(0, &data[..MSS]));
+        assert_eq!(b.rcv_nxt(), 2 * MSS as u64);
+        let mut expect = data[..MSS].to_vec();
+        expect.extend_from_slice(&vec![7u8; MSS]);
+        assert_eq!(b.deliver(), expect);
+    }
+
+    /// Satellite regression: a corrupted/forged ACK claiming bytes we
+    /// never sent used to push `snd_una` past `snd_nxt`, underflowing
+    /// `bytes_in_flight` (debug panic / absurd release value). It must
+    /// be clamped to `snd_nxt` and counted.
+    #[test]
+    fn forged_ack_clamped_not_underflowing() {
+        let mut a = TcpEndpoint::new();
+        let segs = a.send(&vec![1u8; 2 * MSS]);
+        assert_eq!(a.bytes_in_flight(), 2 * MSS as u64);
+        // Forged ACK far past snd_nxt.
+        let forged = Segment { seq: 0, payload: BufView::empty(), ack: u64::MAX / 2 };
+        a.on_segment(&forged);
+        assert_eq!(a.bad_acks, 1);
+        assert_eq!(a.bytes_in_flight(), 0, "clamped to snd_nxt — no underflow");
+        // The retransmit queue is fully pruned by the clamped ACK and
+        // the connection keeps working.
+        assert!(a.retransmit_all().is_empty());
+        let more = a.send(&vec![2u8; MSS]);
+        assert_eq!(more.len(), 1);
+        assert_eq!(more[0].seq, segs.len() as u64 * MSS as u64);
     }
 
     #[test]
