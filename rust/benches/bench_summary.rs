@@ -20,6 +20,7 @@
 //!   DDS_BENCH_SHARDS  comma list of shard counts  (default "1,2")
 //!   DDS_BENCH_OUT     output path                 (default target/BENCH_zerocopy.json)
 //!   DDS_BENCH_RECOVERY_OUT  recovery output       (default target/BENCH_recovery.json)
+//!   DDS_BENCH_WRITE_MS  durable-WRITE rate window, ms (default 200)
 //!   DDS_BENCH_CPU_MS  cpu-plane window, ms        (default 400)
 //!   DDS_BENCH_CPU_OUT cpu-plane output            (default target/BENCH_cpu.json)
 //!   DDS_BENCH_LAT_MS  latency window per phase, ms (default 400)
@@ -42,7 +43,9 @@
 //! object with a `zerocopy` section (per-mode ops/s, bytes_copied/req,
 //! allocs/req, pool hit rate, plus the copy-reduction ratio vs the
 //! straw-man) and a `sharded_scaling` section (ops/s per shard count);
-//! the recovery file holds `(syncs, journal_records, mount_us)` points.
+//! the recovery file holds `(syncs, journal_records, mount_us)` points
+//! plus the data-path columns: `(remaps, mount_us)` dirty-extent replay
+//! points and the durable-vs-default acked-WRITE rate.
 
 use std::collections::HashMap;
 use std::sync::Arc;
@@ -55,6 +58,7 @@ use dds::coordinator::{
 };
 use dds::director::{AppSignature, TenantPlaneConfig};
 use dds::dpufs::{DpuFs, FsConfig};
+use dds::fileservice::FileServiceConfig;
 use dds::idle::IdlePolicy;
 use dds::metrics::{probe_engine_read_path, CpuStats, ZeroCopyProbe};
 use dds::net::FiveTuple;
@@ -146,6 +150,75 @@ fn recovery_point(syncs: usize) -> (usize, f64) {
         drop(fs);
     }
     (scanned, t0.elapsed().as_secs_f64() * 1e6 / iters as f64)
+}
+
+/// One data-path recovery point: a base image plus `remaps` committed
+/// durable WRITEs still live in the journal (dirty extents the mount
+/// must replay onto the file mapping), then time the recovery mount.
+/// Returns `(remaps_applied, mean mount µs)`.
+fn data_recovery_point(remaps: usize) -> (usize, f64) {
+    // 64 KiB segments: cheap shadow pre-images, hundreds of remap
+    // records before the journal wraps (a wrap checkpoint would
+    // supersede the records and zero the replay count).
+    let cfg = FsConfig { segment_size: 1 << 16 };
+    let ssd = Arc::new(Ssd::new(16 << 20, 512));
+    let mut fs = DpuFs::format(ssd.clone(), cfg.clone()).expect("format");
+    let d = fs.create_directory("bench").expect("dir");
+    let f = fs.create_file(d, "data").expect("file");
+    fs.write_durable(f, 0, &vec![7u8; 1 << 16]).expect("base image");
+    for i in 0..remaps {
+        fs.write_durable(f, (i % 16) as u64 * 64, &[i as u8; 64]).expect("remap");
+    }
+    drop(fs);
+    let iters = 20u32;
+    let mut applied = 0usize;
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        let (fs, report) =
+            DpuFs::mount_with_report(ssd.clone(), cfg.clone()).expect("recovery mount");
+        applied = report.remaps_applied;
+        drop(fs);
+    }
+    (applied, t0.elapsed().as_secs_f64() * 1e6 / iters as f64)
+}
+
+/// Acked-WRITE rate through the full file service with the data path
+/// durable or not — the cost of moving the ack point from "payload
+/// landed" to "remap record journaled" (shadow pre-image + trailer +
+/// append per WRITE).
+fn write_rate_point(durable: bool, window: Duration) -> f64 {
+    let storage = StorageServer::build(
+        StorageServerConfig {
+            ssd_bytes: 64 << 20,
+            service: FileServiceConfig { durable_data: durable, ..Default::default() },
+            ..Default::default()
+        },
+        None,
+    )
+    .expect("storage");
+    let fe = storage.front_end();
+    let dir = fe.create_directory("bench").expect("dir");
+    let mut f = fe.create_file(dir, "w").expect("file");
+    let group = fe.create_poll().expect("group");
+    fe.poll_add(&mut f, &group);
+    let data = vec![0x5Au8; 4096];
+    let deadline = Instant::now() + window;
+    let t0 = Instant::now();
+    let (mut ops, mut offset) = (0u64, 0u64);
+    while Instant::now() < deadline {
+        let id = fe.write_file(&f, offset, &data).expect("write submit");
+        'wait: loop {
+            for ev in group.poll_wait(Duration::from_millis(10)) {
+                if ev.req_id == id {
+                    assert!(ev.ok, "bench write failed");
+                    break 'wait;
+                }
+            }
+        }
+        ops += 1;
+        offset = (offset + 4096) % (4 << 20);
+    }
+    ops as f64 / t0.elapsed().as_secs_f64()
 }
 
 /// Aggregate busy fraction across pumps over a window.
@@ -615,9 +688,37 @@ fn main() {
             "{{\"syncs\":{syncs},\"journal_records\":{records},\"mount_us\":{mount_us:.1}}}"
         ));
     }
+    // Data-path columns: mount µs vs dirty-extent (live remap) count,
+    // and the durable-vs-default acked-WRITE rate through the service.
+    let mut data_points = Vec::new();
+    for &remaps in &[1usize, 16, 128, 512] {
+        eprintln!("bench_summary: recovery mount at {remaps} live remaps...");
+        let (applied, mount_us) = data_recovery_point(remaps);
+        data_points.push(format!(
+            "{{\"remaps\":{remaps},\"remaps_applied\":{applied},\"mount_us\":{mount_us:.1}}}"
+        ));
+    }
+    let write_window = Duration::from_millis(env_u64("DDS_BENCH_WRITE_MS", 200));
+    eprintln!("bench_summary: WRITE rate, durable_data off ({write_window:?})...");
+    let default_ops = write_rate_point(false, write_window);
+    eprintln!("bench_summary: WRITE rate, durable_data on...");
+    let durable_ops = write_rate_point(true, write_window);
+    let durable_ratio = if default_ops > 0.0 { durable_ops / default_ops } else { 1.0 };
     let recovery_json = format!(
-        "{{\n  \"bench\": \"recovery\",\n  \"smoke\": true,\n  \"points\": [{}]\n}}\n",
-        points.join(",")
+        concat!(
+            "{{\n",
+            "  \"bench\": \"recovery\",\n",
+            "  \"smoke\": true,\n",
+            "  \"points\": [{}],\n",
+            "  \"data_points\": [{}],\n",
+            "  \"write_rate\": {{\"default_ops_s\":{:.1},\"durable_ops_s\":{:.1},\"durable_over_default\":{:.4}}}\n",
+            "}}\n"
+        ),
+        points.join(","),
+        data_points.join(","),
+        default_ops,
+        durable_ops,
+        durable_ratio
     );
     std::fs::write(&recovery_out, &recovery_json).expect("write recovery summary");
     println!("{recovery_json}");

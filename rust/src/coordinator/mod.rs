@@ -109,7 +109,7 @@ impl StorageServer {
         let ssd = Arc::new(Ssd::new(cfg.ssd_bytes, 512));
         let fs = DpuFs::format(ssd.clone(), FsConfig { segment_size: cfg.segment_size })
             .map_err(|e| anyhow::anyhow!("format: {e}"))?;
-        Self::over_device(ssd, fs, cfg, logic)
+        Self::over_device(ssd, fs, cfg, logic, None)
     }
 
     /// The restart path: mount an existing device image — running the
@@ -125,22 +125,28 @@ impl StorageServer {
         let (fs, report) =
             DpuFs::mount_with_report(ssd.clone(), FsConfig { segment_size: cfg.segment_size })
                 .map_err(|e| anyhow::anyhow!("mount: {e}"))?;
-        Ok((Self::over_device(ssd, fs, cfg, logic)?, report))
+        Ok((Self::over_device(ssd, fs, cfg, logic, Some(report.clone()))?, report))
     }
 
     /// Spawn the file service over an already-built device + file
     /// system (shared tail of [`Self::build`] and [`Self::remount`]).
+    /// A remount passes its [`crate::dpufs::RecoveryReport`] so the
+    /// service can answer `ControlMsg::RecoveryReport` round trips.
     fn over_device(
         ssd: Arc<Ssd>,
         fs: DpuFs,
         cfg: StorageServerConfig,
         logic: Option<Arc<dyn OffloadLogic>>,
+        recovery: Option<crate::dpufs::RecoveryReport>,
     ) -> anyhow::Result<Self> {
         let dpufs = Arc::new(RwLock::new(fs));
         let cache = Arc::new(CuckooCache::new(cfg.cache_items));
         let aio = AsyncSsd::new(ssd.clone(), cfg.service.ssd_workers);
-        let (service, ctrl) =
+        let (mut service, ctrl) =
             FileService::new(dpufs.clone(), aio, cfg.service.clone(), logic, cache.clone());
+        if let Some(report) = recovery {
+            service.set_recovery_report(report);
+        }
         let buf_pool = service.buf_pool().clone();
         let read_buf_pool = service.read_buf_pool().clone();
         let service_wake = service.waker();

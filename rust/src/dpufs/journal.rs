@@ -46,6 +46,13 @@ pub const JOURNAL_DATA_MAGIC: u32 = 0x0DD5_3D01;
 /// it — see the DESIGN.md recovery table); the marker records protocol
 /// step 3 for the `RecoveryReport` and for offline forensics.
 pub const JOURNAL_COMMIT_MAGIC: u32 = 0x0DD5_3C01;
+/// Journal extent-remap frame: the data-path commit record. Carries a
+/// [`RemapRecord`] — one file's segment flips from old (shadow) extents
+/// to freshly written ones. Appending this frame IS the durable-WRITE
+/// ack point: recovery replays remap records with `seq` newer than the
+/// base metadata image, and a torn remap append simply rolls the WRITE
+/// back (the old segments were never touched).
+pub const JOURNAL_REMAP_MAGIC: u32 = 0x0DD5_3E01;
 
 /// CRC-32 (IEEE 802.3, reflected, poly 0xEDB88320), nibble-table
 /// implementation — no deps, fast enough that the crash-point
@@ -104,7 +111,10 @@ pub fn decode_frame(buf: &[u8]) -> Option<(u32, u64, &[u8], usize)> {
         return None;
     }
     let magic = u32::from_le_bytes(buf[0..4].try_into().unwrap());
-    if !matches!(magic, SUPER_MAGIC | JOURNAL_DATA_MAGIC | JOURNAL_COMMIT_MAGIC) {
+    if !matches!(
+        magic,
+        SUPER_MAGIC | JOURNAL_DATA_MAGIC | JOURNAL_COMMIT_MAGIC | JOURNAL_REMAP_MAGIC
+    ) {
         return None;
     }
     let seq = u64::from_le_bytes(buf[4..12].try_into().unwrap());
@@ -123,6 +133,81 @@ pub fn decode_frame(buf: &[u8]) -> Option<(u32, u64, &[u8], usize)> {
 
 fn dev(e: crate::ssd::SsdError) -> FsError {
     FsError::Device(e.to_string())
+}
+
+/// In an extent-remap entry, this `old_seg` value marks a growth entry:
+/// the file had no segment at that index before the WRITE (the shadow
+/// extends the mapping instead of replacing a segment).
+pub const REMAP_GROWTH: u32 = u32::MAX;
+
+/// One segment flip inside a [`RemapRecord`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RemapEntry {
+    /// Index into the file's segment vector.
+    pub seg_idx: u32,
+    /// Segment previously mapped at `seg_idx`, or [`REMAP_GROWTH`] when
+    /// the WRITE grew the file past its old mapping.
+    pub old_seg: u32,
+    /// Freshly written shadow segment that replaces (or extends) it.
+    pub new_seg: u32,
+}
+
+/// The payload of a [`JOURNAL_REMAP_MAGIC`] frame: one committed
+/// durable WRITE, expressed as the file's new size plus the per-index
+/// segment flips.
+///
+/// ```text
+/// offset  0  file_id   u32 LE
+/// offset  4  new_size  u64 LE   (file size after the WRITE)
+/// offset 12  nentries  u32 LE
+/// offset 16  entries   nentries × (seg_idx u32 | old_seg u32 | new_seg u32) LE
+/// ```
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct RemapRecord {
+    pub file_id: u32,
+    pub new_size: u64,
+    pub entries: Vec<RemapEntry>,
+}
+
+impl RemapRecord {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(16 + self.entries.len() * 12);
+        out.extend_from_slice(&self.file_id.to_le_bytes());
+        out.extend_from_slice(&self.new_size.to_le_bytes());
+        out.extend_from_slice(&(self.entries.len() as u32).to_le_bytes());
+        for e in &self.entries {
+            out.extend_from_slice(&e.seg_idx.to_le_bytes());
+            out.extend_from_slice(&e.old_seg.to_le_bytes());
+            out.extend_from_slice(&e.new_seg.to_le_bytes());
+        }
+        out
+    }
+
+    /// Decode a remap payload (the frame CRCs already vouched for the
+    /// bytes; this only rejects structural nonsense like a length that
+    /// does not match `nentries`).
+    pub fn decode(payload: &[u8]) -> Result<Self, FsError> {
+        let bad = |why: &str| FsError::Corrupt(format!("remap record: {why}"));
+        if payload.len() < 16 {
+            return Err(bad("truncated header"));
+        }
+        let file_id = u32::from_le_bytes(payload[0..4].try_into().unwrap());
+        let new_size = u64::from_le_bytes(payload[4..12].try_into().unwrap());
+        let nentries = u32::from_le_bytes(payload[12..16].try_into().unwrap()) as usize;
+        if payload.len() != 16 + nentries * 12 {
+            return Err(bad("entry count disagrees with payload length"));
+        }
+        let mut entries = Vec::with_capacity(nentries);
+        for i in 0..nentries {
+            let at = 16 + i * 12;
+            entries.push(RemapEntry {
+                seg_idx: u32::from_le_bytes(payload[at..at + 4].try_into().unwrap()),
+                old_seg: u32::from_le_bytes(payload[at + 4..at + 8].try_into().unwrap()),
+                new_seg: u32::from_le_bytes(payload[at + 8..at + 12].try_into().unwrap()),
+            });
+        }
+        Ok(RemapRecord { file_id, new_size, entries })
+    }
 }
 
 /// Write the checksummed metadata image for `seq` into its shadow slot
@@ -179,6 +264,11 @@ pub struct JournalScan {
     pub records: Vec<(u64, Vec<u8>)>,
     /// Sequence numbers of valid commit markers, in chain order.
     pub commits: Vec<u64>,
+    /// Valid extent-remap payloads `(seq, remap payload)` in chain
+    /// order. Recovery replays the subset with `seq` newer than the
+    /// chosen base image; stale wrapped residue carries older seqs and
+    /// is filtered out there.
+    pub remaps: Vec<(u64, Vec<u8>)>,
     /// Offset just past the last valid frame — where the next append
     /// goes.
     pub end_off: usize,
@@ -195,6 +285,7 @@ pub struct JournalScan {
 pub fn scan(journal: &[u8]) -> JournalScan {
     let mut records = Vec::new();
     let mut commits = Vec::new();
+    let mut remaps = Vec::new();
     let mut at = 0usize;
     while at + FRAME_HEADER_LEN <= journal.len() {
         match decode_frame(&journal[at..]) {
@@ -206,12 +297,16 @@ pub fn scan(journal: &[u8]) -> JournalScan {
                 commits.push(seq);
                 at += total;
             }
+            Some((JOURNAL_REMAP_MAGIC, seq, payload, total)) => {
+                remaps.push((seq, payload.to_vec()));
+                at += total;
+            }
             _ => break,
         }
     }
     let tail_end = (at + FRAME_HEADER_LEN).min(journal.len());
     let torn_tail = journal[at..tail_end].iter().any(|&b| b != 0);
-    JournalScan { records, commits, end_off: at, torn_tail }
+    JournalScan { records, commits, remaps, end_off: at, torn_tail }
 }
 
 #[cfg(test)]
@@ -292,6 +387,43 @@ mod tests {
         let s = scan(&buf);
         assert_eq!(s.records[0].0, seq, "wrapped record leads the chain");
         assert_eq!(s.records[0].1, vec![0xDD; 100]);
+    }
+
+    #[test]
+    fn remap_record_roundtrip_and_scan_order() {
+        let rec = RemapRecord {
+            file_id: 7,
+            new_size: 123_456,
+            entries: vec![
+                RemapEntry { seg_idx: 0, old_seg: 4, new_seg: 9 },
+                RemapEntry { seg_idx: 2, old_seg: REMAP_GROWTH, new_seg: 10 },
+            ],
+        };
+        let payload = rec.encode();
+        assert_eq!(RemapRecord::decode(&payload).unwrap(), rec);
+        // Structural rejection: mismatched entry count and truncation.
+        assert!(RemapRecord::decode(&payload[..payload.len() - 1]).is_err());
+        assert!(RemapRecord::decode(&payload[..8]).is_err());
+        let mut lying = payload.clone();
+        lying[12..16].copy_from_slice(&9u32.to_le_bytes());
+        assert!(RemapRecord::decode(&lying).is_err());
+        // Remap frames interleave with data/commit frames without
+        // terminating the chain, and come back in chain order.
+        let seg = 1u64 << 13;
+        let ssd = Arc::new(Ssd::new(4 * seg, 512));
+        let mut off = 0u64;
+        append(&ssd, seg, &mut off, JOURNAL_DATA_MAGIC, 1, &[0xAA; 50]).unwrap();
+        append(&ssd, seg, &mut off, JOURNAL_REMAP_MAGIC, 2, &payload).unwrap();
+        append(&ssd, seg, &mut off, JOURNAL_COMMIT_MAGIC, 1, &[]).unwrap();
+        append(&ssd, seg, &mut off, JOURNAL_REMAP_MAGIC, 3, &payload).unwrap();
+        let mut buf = vec![0u8; seg as usize];
+        ssd.read_into(seg, &mut buf).unwrap();
+        let s = scan(&buf);
+        assert_eq!(s.records.len(), 1);
+        assert_eq!(s.commits, vec![1]);
+        assert_eq!(s.remaps.iter().map(|(q, _)| *q).collect::<Vec<_>>(), vec![2, 3]);
+        assert_eq!(RemapRecord::decode(&s.remaps[0].1).unwrap(), rec);
+        assert_eq!(s.end_off as u64, off);
     }
 
     #[test]

@@ -15,6 +15,15 @@
 //! write is detected by checksum at [`DpuFs::mount`] and rolled
 //! forward (journal committed, superblock torn) or back (journal
 //! append torn) — never silently corrupted.
+//!
+//! The **data path** gets the same contract through redirect-on-write
+//! ([`DpuFs::redirect_prepare`] / [`DpuFs::redirect_commit`]): a
+//! durable WRITE lands in freshly allocated shadow segments, and a
+//! single journaled extent-remap record flips the file mapping — the
+//! append is the ack point, so recovery always sees either the
+//! complete old extent or the complete new one. Segment 2 holds a
+//! per-segment epoch + CRC trailer table so mount can detect and
+//! quarantine shadows that crashed pre-commit.
 
 mod alloc;
 pub mod journal;
@@ -29,8 +38,18 @@ use std::sync::Arc;
 use crate::ssd::Ssd;
 
 /// Segments reserved at the front of the device: segment 0 =
-/// superblock (two shadow slots), segment 1 = metadata journal.
-pub const RESERVED_SEGMENTS: usize = 2;
+/// superblock (two shadow slots), segment 1 = metadata journal,
+/// segment 2 = per-segment extent epoch/CRC trailer table.
+pub const RESERVED_SEGMENTS: usize = 3;
+
+/// Bytes per entry in the segment-2 extent trailer table:
+/// `epoch u64 LE | data_crc u32 LE | rec_crc u32 LE`, where `rec_crc`
+/// checksums the first 12 bytes. Entry `s` lives at device address
+/// `2 * segment_size + s * 16`. `epoch` is the journal sequence the
+/// segment's remap record burns; a valid trailer whose epoch exceeds
+/// the recovered sequence is a shadow extent that crashed pre-commit
+/// and gets quarantined at mount.
+pub const TRAILER_LEN: usize = 16;
 
 /// File-system errors.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -104,6 +123,13 @@ pub struct RecoveryReport {
     /// The journal chain ended on non-zero bytes (a torn append or
     /// stale wrapped residue).
     pub torn_tail: bool,
+    /// Committed extent-remap records (durable WRITEs newer than the
+    /// base metadata image) replayed onto the file mapping.
+    pub remaps_applied: usize,
+    /// Shadow extents whose trailer carried an epoch newer than the
+    /// recovered sequence — torn pre-commit WRITEs. Their trailers
+    /// were zeroed and the segments returned to the free pool.
+    pub quarantined_extents: usize,
 }
 
 /// An owned copy of the in-memory metadata state (see
@@ -131,6 +157,36 @@ pub struct DpuFs {
     seq: u64,
     /// Journal append cursor within segment 1.
     journal_off: u64,
+    /// Committed extent-remap records not yet superseded by a full
+    /// metadata image in a superblock slot. While nonzero, a journal
+    /// wrap would overwrite the only durable copy of acked WRITEs, so
+    /// any append that would wrap first checkpoints the image
+    /// ([`Self::checkpoint_slot`]).
+    live_remaps: usize,
+    /// Sequence of the newest image written to a superblock slot —
+    /// the checkpoint picks a sequence of the *other* parity so a torn
+    /// checkpoint write can never destroy the only committed image.
+    last_slot_seq: u64,
+}
+
+/// A prepared redirect-on-write: shadow segments are allocated and
+/// pre-imaged (old contents copied, growth segments zeroed), and
+/// `extents` address the caller's payload bytes *inside the shadows*.
+/// Nothing is durable until [`DpuFs::redirect_commit`] journals the
+/// remap record; [`DpuFs::redirect_abort`] returns the shadows to the
+/// free pool.
+#[derive(Debug, Clone)]
+pub struct RedirectPlan {
+    pub file: FileId,
+    /// File size after the WRITE commits (never shrinks).
+    pub new_size: u64,
+    /// Segment flips the commit record will journal, in `seg_idx`
+    /// order.
+    pub entries: Vec<journal::RemapEntry>,
+    /// Shadow-addressed device extents covering the payload, in write
+    /// order (the redirect-on-write analogue of
+    /// [`DpuFs::map_extents`]).
+    pub extents: Vec<Extent>,
 }
 
 impl DpuFs {
@@ -139,6 +195,11 @@ impl DpuFs {
         assert!(cfg.segment_size % ssd.block_size() as u64 == 0);
         let num_segments = (ssd.capacity() / cfg.segment_size) as usize;
         if num_segments < RESERVED_SEGMENTS + 1 {
+            return Err(FsError::NoSpace);
+        }
+        // The trailer table (one 16-byte entry per segment) must fit
+        // its reserved segment.
+        if (num_segments * TRAILER_LEN) as u64 > cfg.segment_size {
             return Err(FsError::NoSpace);
         }
         // Invalidate any stale superblock/journal frames from a
@@ -159,6 +220,8 @@ impl DpuFs {
             next_file: 1,
             seq: 0,
             journal_off: 0,
+            live_remaps: 0,
+            last_slot_seq: 0,
         };
         fs.sync_metadata()?;
         Ok(fs)
@@ -179,8 +242,15 @@ impl DpuFs {
     ///    during the repair leaves the journal record intact and the
     ///    next mount repeats it), roll *back* past any torn journal
     ///    tail otherwise;
-    /// 3. reject double-allocated/out-of-range segments, clamp stale
-    ///    `next_dir`/`next_file` counters, rebuild the bitmap;
+    /// 3. replay committed extent-remap records newer than that image
+    ///    onto the file mapping (durable WRITEs whose ack point was
+    ///    the journal append — an acked WRITE is never lost);
+    /// 4. reject double-allocated/out-of-range segments, clamp stale
+    ///    `next_dir`/`next_file` counters, rebuild the bitmap (which
+    ///    also reclaims any unreferenced shadow segments);
+    /// 5. quarantine shadow extents whose trailer epoch outruns the
+    ///    recovered sequence — WRITEs that tore pre-commit: their
+    ///    trailers are zeroed and the un-acked data is invisible;
     ///
     /// and report everything observed in a [`RecoveryReport`].
     pub fn mount_with_report(
@@ -191,6 +261,11 @@ impl DpuFs {
         let num_segments = (ssd.capacity() / seg) as usize;
         if num_segments < RESERVED_SEGMENTS + 1 {
             return Err(FsError::Corrupt("device too small for a DDS filesystem".into()));
+        }
+        if (num_segments * TRAILER_LEN) as u64 > seg {
+            return Err(FsError::Corrupt(
+                "trailer table does not fit its reserved segment".into(),
+            ));
         }
         let mut sb = vec![0u8; seg as usize];
         ssd.read_into(0, &mut sb).map_err(|e| FsError::Device(e.to_string()))?;
@@ -220,7 +295,52 @@ impl DpuFs {
         // CRC-valid but semantically corrupt record can never cause the
         // failing mount path to mutate the device (repair writes happen
         // only once the image is known good).
-        let (dirs, files, mut next_dir, mut next_file) = meta::decode(&image)?;
+        let (dirs, mut files, mut next_dir, mut next_file) = meta::decode(&image)?;
+
+        // Replay committed durable WRITEs: remap records with a
+        // sequence newer than the base image. Stale wrapped residue is
+        // filtered out here — the wrap guard guarantees every remap
+        // written before a journal wrap was checkpointed into a slot,
+        // so its sequence is ≤ the base. Structural mismatches mean a
+        // corrupt journal, never a silent wrong mapping.
+        let mut replay: Vec<(u64, journal::RemapRecord)> = Vec::new();
+        for (rseq, payload) in &scan.remaps {
+            if *rseq > seq {
+                replay.push((*rseq, journal::RemapRecord::decode(payload)?));
+            }
+        }
+        replay.sort_by_key(|(rseq, _)| *rseq);
+        let remaps_applied = replay.len();
+        let mut recovered_seq = seq;
+        for (rseq, rec) in replay {
+            let meta = files.get_mut(&FileId(rec.file_id)).ok_or_else(|| {
+                FsError::Corrupt(format!(
+                    "remap record seq {rseq} references nonexistent file {}",
+                    rec.file_id
+                ))
+            })?;
+            for e in &rec.entries {
+                let idx = e.seg_idx as usize;
+                if idx < meta.segments.len() {
+                    if e.old_seg == journal::REMAP_GROWTH || meta.segments[idx] != e.old_seg {
+                        return Err(FsError::Corrupt(format!(
+                            "remap record seq {rseq} disagrees with the file \
+                             mapping at segment index {idx}"
+                        )));
+                    }
+                    meta.segments[idx] = e.new_seg;
+                } else if idx == meta.segments.len() && e.old_seg == journal::REMAP_GROWTH {
+                    meta.segments.push(e.new_seg);
+                } else {
+                    return Err(FsError::Corrupt(format!(
+                        "remap record seq {rseq} grows file {} out of order",
+                        rec.file_id
+                    )));
+                }
+            }
+            meta.size = meta.size.max(rec.new_size);
+            recovered_seq = recovered_seq.max(rseq);
+        }
         // A committed image can still carry counters at/below a live id
         // (e.g. hand-built or pre-durability images): clamp, or
         // `create_file` would silently reuse a live `FileId`.
@@ -257,7 +377,46 @@ impl DpuFs {
             }
         }
 
-        let mut journal_off = scan.end_off as u64;
+        // Scan the trailer table for orphan shadows (pure — the repair
+        // writes that zero them come only after every validation above
+        // held). A trailer that fails its own CRC is a torn trailer
+        // write and is simply ignored: the shadow it described was
+        // never committed and the bitmap rebuild already reclaimed it.
+        let mut trailers = vec![0u8; num_segments * TRAILER_LEN];
+        ssd.read_into(2 * seg, &mut trailers)
+            .map_err(|e| FsError::Device(e.to_string()))?;
+        let mut quarantine: Vec<usize> = Vec::new();
+        for s in RESERVED_SEGMENTS..num_segments {
+            let t = &trailers[s * TRAILER_LEN..(s + 1) * TRAILER_LEN];
+            let rec_crc = u32::from_le_bytes(t[12..16].try_into().unwrap());
+            if rec_crc != journal::crc32(&t[..12]) {
+                continue;
+            }
+            let epoch = u64::from_le_bytes(t[0..8].try_into().unwrap());
+            if epoch > recovered_seq {
+                quarantine.push(s);
+            }
+        }
+
+        let mut fs = DpuFs {
+            ssd,
+            cfg,
+            bitmap,
+            dirs,
+            files,
+            next_dir,
+            next_file,
+            seq: recovered_seq,
+            journal_off: scan.end_off as u64,
+            // Replayed remaps live only in the journal until the next
+            // full image supersedes them — the wrap guard must keep
+            // protecting them (mount deliberately writes no merged
+            // image: a torn merge could destroy the only committed
+            // base).
+            live_remaps: remaps_applied,
+            last_slot_seq: super_best.as_ref().map(|(s, _)| *s).unwrap_or(0),
+        };
+
         let mut repaired_superblock = false;
         if rolled_forward {
             // The WAL committed `seq` but the superblock write was lost
@@ -265,20 +424,21 @@ impl DpuFs {
             // power cut tears THIS write, the journal record is still
             // intact and the next mount repeats the repair — replay is
             // idempotent.
-            journal::write_slot(&ssd, seg, seq, &image)?;
-            journal::append(
-                &ssd,
-                seg,
-                &mut journal_off,
-                journal::JOURNAL_COMMIT_MAGIC,
-                seq,
-                &[],
-            )?;
+            journal::write_slot(&fs.ssd, seg, seq, &image)?;
+            fs.last_slot_seq = seq;
+            fs.journal_append_guarded(journal::JOURNAL_COMMIT_MAGIC, seq, &[])?;
             repaired_superblock = true;
+        }
+        for s in &quarantine {
+            // Zero the orphan trailer so the burned-but-lost epoch can
+            // never shadow a future WRITE that reuses this sequence
+            // range. Errors propagate: a re-crash here leaves a valid
+            // trailer and the next mount repeats the quarantine.
+            fs.write_trailer_raw(*s, &[0u8; TRAILER_LEN])?;
         }
 
         let report = RecoveryReport {
-            recovered_seq: seq,
+            recovered_seq,
             rolled_forward,
             repaired_superblock,
             counters_clamped,
@@ -288,11 +448,10 @@ impl DpuFs {
             journal_commits: scan.commits.len(),
             highest_journal_seq: journal_best.map(|(s, _)| s),
             torn_tail: scan.torn_tail,
+            remaps_applied,
+            quarantined_extents: quarantine.len(),
         };
-        Ok((
-            DpuFs { ssd, cfg, bitmap, dirs, files, next_dir, next_file, seq, journal_off },
-            report,
-        ))
+        Ok((fs, report))
     }
 
     /// Persist metadata + file mapping (§4.3), crash-consistently:
@@ -315,6 +474,15 @@ impl DpuFs {
             self.next_file,
             journal::max_image_len(seg),
         )?;
+        // Wrap check BEFORE burning the sequence: the guard's
+        // checkpoint burns sequences of its own, and the DATA record
+        // must stay newer than any checkpoint. A torn wrapping append
+        // would otherwise decapitate the journal chain and lose the
+        // acked remaps living in it.
+        let flen = (journal::FRAME_HEADER_LEN + image.len()) as u64;
+        if self.journal_off + flen > seg && self.live_remaps > 0 {
+            self.checkpoint_slot()?;
+        }
         let seq = self.seq + 1;
         // Burn the sequence number whether or not the protocol
         // completes: a failed attempt may already have landed its DATA
@@ -331,6 +499,11 @@ impl DpuFs {
             &image,
         )?;
         journal::write_slot(&self.ssd, seg, seq, &image)?;
+        // The slot now holds a full image including every committed
+        // remap: the journal's remap records are superseded and a
+        // wrap is safe again.
+        self.last_slot_seq = seq;
+        self.live_remaps = 0;
         journal::append(
             &self.ssd,
             seg,
@@ -340,6 +513,67 @@ impl DpuFs {
             &[],
         )?;
         Ok(())
+    }
+
+    /// Checkpoint the current metadata image into a superblock slot
+    /// without journaling it — the wrap guard's escape hatch. Burns a
+    /// sequence whose parity differs from [`Self::last_slot_seq`]'s so
+    /// the write lands in the *other* slot: if it tears, the newest
+    /// committed image survives untouched and the journal (which the
+    /// pending wrap has not yet overwritten) still reconstructs
+    /// everything.
+    fn checkpoint_slot(&mut self) -> Result<(), FsError> {
+        let seg = self.cfg.segment_size;
+        let image = meta::encode(
+            &self.dirs,
+            &self.files,
+            self.next_dir,
+            self.next_file,
+            journal::max_image_len(seg),
+        )?;
+        let mut seq = self.seq + 1;
+        if seq % 2 == self.last_slot_seq % 2 {
+            seq += 1;
+        }
+        self.seq = seq;
+        journal::write_slot(&self.ssd, seg, seq, &image)?;
+        self.last_slot_seq = seq;
+        self.live_remaps = 0;
+        Ok(())
+    }
+
+    /// Journal append that runs the wrap guard first: an append that
+    /// would wrap the journal while committed remap records are still
+    /// live in it checkpoints the metadata image into a slot before
+    /// the wrap can overwrite them.
+    fn journal_append_guarded(
+        &mut self,
+        magic: u32,
+        seq: u64,
+        payload: &[u8],
+    ) -> Result<(), FsError> {
+        let seg = self.cfg.segment_size;
+        let flen = (journal::FRAME_HEADER_LEN + payload.len()) as u64;
+        if self.journal_off + flen > seg && self.live_remaps > 0 {
+            self.checkpoint_slot()?;
+        }
+        journal::append(&self.ssd, seg, &mut self.journal_off, magic, seq, payload)
+    }
+
+    /// Raw 16-byte write into the segment-2 trailer table.
+    fn write_trailer_raw(&self, segment: usize, bytes: &[u8; TRAILER_LEN]) -> Result<(), FsError> {
+        let addr = 2 * self.cfg.segment_size + (segment * TRAILER_LEN) as u64;
+        self.ssd.write_from(addr, bytes).map_err(|e| FsError::Device(e.to_string()))
+    }
+
+    /// Write segment `segment`'s epoch/CRC trailer.
+    fn write_trailer(&self, segment: usize, epoch: u64, data_crc: u32) -> Result<(), FsError> {
+        let mut t = [0u8; TRAILER_LEN];
+        t[0..8].copy_from_slice(&epoch.to_le_bytes());
+        t[8..12].copy_from_slice(&data_crc.to_le_bytes());
+        let rec_crc = journal::crc32(&t[..12]);
+        t[12..16].copy_from_slice(&rec_crc.to_le_bytes());
+        self.write_trailer_raw(segment, &t)
     }
 
     pub fn segment_size(&self) -> u64 {
@@ -534,6 +768,225 @@ impl DpuFs {
         }
         Ok(())
     }
+
+    // ----- durable data plane (redirect-on-write) -----
+
+    /// Committed remap records not yet superseded by a full metadata
+    /// image in a superblock slot (the wrap guard's trigger).
+    pub fn live_remaps(&self) -> usize {
+        self.live_remaps
+    }
+
+    /// Stage a durable WRITE: allocate a shadow segment for every
+    /// segment the write touches (plus any growth segments), pre-image
+    /// them (old contents copied in full, growth segments zeroed so a
+    /// recycled segment can't leak stale bytes), and return the
+    /// shadow-addressed extents the payload goes to. The file mapping
+    /// is untouched — readers keep seeing the old bytes until
+    /// [`Self::redirect_commit`], and a crash before commit leaves the
+    /// shadows unreferenced (reclaimed by the next mount's bitmap
+    /// rebuild).
+    pub fn redirect_prepare(
+        &mut self,
+        file: FileId,
+        offset: u64,
+        len: u64,
+    ) -> Result<RedirectPlan, FsError> {
+        let seg = self.cfg.segment_size;
+        let meta = self.files.get(&file).ok_or(FsError::NoSuchFile)?;
+        let old_segments = meta.segments.clone();
+        let new_size = meta.size.max(offset + len);
+        let need = new_size.div_ceil(seg) as usize;
+        let first = (offset / seg) as usize;
+        let last = if len == 0 { 0 } else { ((offset + len - 1) / seg) as usize };
+        let mut entries: Vec<journal::RemapEntry> = Vec::new();
+        for idx in 0..need {
+            let is_data = len > 0 && idx >= first && idx <= last;
+            let is_growth = idx >= old_segments.len();
+            if !is_data && !is_growth {
+                continue;
+            }
+            match self.bitmap.alloc() {
+                Some(s) => entries.push(journal::RemapEntry {
+                    seg_idx: idx as u32,
+                    old_seg: if is_growth { journal::REMAP_GROWTH } else { old_segments[idx] },
+                    new_seg: s as u32,
+                }),
+                None => {
+                    // Atomic on refusal, like `ensure_size`: free
+                    // everything this plan allocated.
+                    for e in &entries {
+                        self.bitmap.set(e.new_seg as usize, false);
+                    }
+                    return Err(FsError::NoSpace);
+                }
+            }
+        }
+        let mut seg_buf = vec![0u8; seg as usize];
+        for e in &entries {
+            let imaged = if e.old_seg == journal::REMAP_GROWTH {
+                seg_buf.fill(0);
+                Ok(())
+            } else {
+                self.ssd.read_into(e.old_seg as u64 * seg, &mut seg_buf)
+            }
+            .and_then(|()| self.ssd.write_from(e.new_seg as u64 * seg, &seg_buf));
+            if let Err(err) = imaged {
+                for e in &entries {
+                    self.bitmap.set(e.new_seg as usize, false);
+                }
+                return Err(FsError::Device(err.to_string()));
+            }
+        }
+        // The payload's device extents, resolved through the shadow
+        // mapping (every data segment has an entry by construction).
+        let mut extents = Vec::new();
+        let mut cur = offset;
+        let end = offset + len;
+        while cur < end {
+            let idx = (cur / seg) as usize;
+            let in_seg = cur % seg;
+            let take = (seg - in_seg).min(end - cur);
+            let shadow = entries
+                .iter()
+                .find(|e| e.seg_idx as usize == idx)
+                .expect("data segment has a shadow entry")
+                .new_seg;
+            extents.push(Extent { addr: shadow as u64 * seg + in_seg, len: take });
+            cur += take;
+        }
+        Ok(RedirectPlan { file, new_size, entries, extents })
+    }
+
+    /// Commit a durable WRITE whose payload now sits in the plan's
+    /// shadow extents. Protocol: read back + checksum each shadow →
+    /// wrap-guard the journal → burn the commit sequence → write each
+    /// shadow's epoch/CRC trailer → **append the remap record (the
+    /// ack point)** → flip the file mapping and free the replaced
+    /// segments. Every pre-append failure aborts the plan (shadows
+    /// freed, mapping untouched) so the un-acked WRITE surfaces as a
+    /// clean error; a crash inside the window leaves either no remap
+    /// record (WRITE invisible, shadows quarantined/reclaimed at
+    /// mount) or a complete one (WRITE fully visible).
+    pub fn redirect_commit(&mut self, plan: RedirectPlan) -> Result<(), FsError> {
+        let seg = self.cfg.segment_size;
+        // A size-only grow inside already-mapped segments still needs
+        // the record; a true no-op doesn't.
+        let cur_size = self.files.get(&plan.file).map(|m| m.size);
+        if plan.entries.is_empty() && cur_size == Some(plan.new_size) {
+            return Ok(());
+        }
+        // Validate against the *current* mapping: a concurrent durable
+        // WRITE that committed first may have flipped a segment this
+        // plan also replaces — committing over it would silently revert
+        // those bytes, so refuse cleanly instead.
+        let valid = match self.files.get(&plan.file) {
+            None => false,
+            Some(meta) => {
+                let mut expect_len = meta.segments.len();
+                plan.entries.iter().all(|e| {
+                    let idx = e.seg_idx as usize;
+                    if e.old_seg == journal::REMAP_GROWTH {
+                        let ok = idx == expect_len;
+                        expect_len += 1;
+                        ok
+                    } else {
+                        idx < meta.segments.len() && meta.segments[idx] == e.old_seg
+                    }
+                })
+            }
+        };
+        if !valid {
+            self.redirect_abort(&plan);
+            return Err(FsError::Corrupt(
+                "remap plan superseded by a concurrent commit".into(),
+            ));
+        }
+        // Checksum what actually persisted, not what was intended.
+        let mut crcs = Vec::with_capacity(plan.entries.len());
+        let mut seg_buf = vec![0u8; seg as usize];
+        for e in &plan.entries {
+            if let Err(err) = self.ssd.read_into(e.new_seg as u64 * seg, &mut seg_buf) {
+                self.redirect_abort(&plan);
+                return Err(FsError::Device(err.to_string()));
+            }
+            crcs.push(journal::crc32(&seg_buf));
+        }
+        let record = journal::RemapRecord {
+            file_id: plan.file.0,
+            new_size: plan.new_size,
+            entries: plan.entries.clone(),
+        };
+        let payload = record.encode();
+        // Wrap check BEFORE burning the commit sequence — the guard's
+        // checkpoint burns sequences, and the remap must stay newer
+        // than any base image recovery might choose.
+        let flen = (journal::FRAME_HEADER_LEN + payload.len()) as u64;
+        if self.journal_off + flen > seg && self.live_remaps > 0 {
+            if let Err(e) = self.checkpoint_slot() {
+                self.redirect_abort(&plan);
+                return Err(e);
+            }
+        }
+        let epoch = self.seq + 1;
+        self.seq = epoch;
+        for (e, crc) in plan.entries.iter().zip(&crcs) {
+            if let Err(err) = self.write_trailer(e.new_seg as usize, epoch, *crc) {
+                self.redirect_abort(&plan);
+                return Err(err);
+            }
+        }
+        if let Err(err) = journal::append(
+            &self.ssd,
+            seg,
+            &mut self.journal_off,
+            journal::JOURNAL_REMAP_MAGIC,
+            epoch,
+            &payload,
+        ) {
+            self.redirect_abort(&plan);
+            return Err(err);
+        }
+        // === commit point: the append succeeded, the WRITE is durable ===
+        let meta = self.files.get_mut(&plan.file).expect("validated above");
+        for e in &plan.entries {
+            if e.old_seg == journal::REMAP_GROWTH {
+                meta.segments.push(e.new_seg);
+            } else {
+                meta.segments[e.seg_idx as usize] = e.new_seg;
+                self.bitmap.set(e.old_seg as usize, false);
+            }
+        }
+        meta.size = meta.size.max(plan.new_size);
+        self.live_remaps += 1;
+        Ok(())
+    }
+
+    /// Abandon a prepared redirect: return its shadow segments to the
+    /// free pool. The mapping was never touched and nothing about the
+    /// plan was journaled, so this is purely an in-memory release.
+    pub fn redirect_abort(&mut self, plan: &RedirectPlan) {
+        for e in &plan.entries {
+            self.bitmap.set(e.new_seg as usize, false);
+        }
+    }
+
+    /// Synchronous durable write: prepare → payload into shadows →
+    /// commit. The crash contract: once this returns `Ok`, the bytes
+    /// survive any power cut; if it returns `Err` (or never returns),
+    /// readers after recovery see the complete old contents.
+    pub fn write_durable(&mut self, file: FileId, offset: u64, data: &[u8]) -> Result<(), FsError> {
+        let plan = self.redirect_prepare(file, offset, data.len() as u64)?;
+        let mut at = 0usize;
+        for e in &plan.extents {
+            if let Err(err) = self.ssd.write_from(e.addr, &data[at..at + e.len as usize]) {
+                self.redirect_abort(&plan);
+                return Err(FsError::Device(err.to_string()));
+            }
+            at += e.len as usize;
+        }
+        self.redirect_commit(plan)
+    }
 }
 
 #[cfg(test)]
@@ -576,10 +1029,11 @@ mod tests {
     #[test]
     fn segment_zero_reserved() {
         let fs = fs();
-        // The superblock and journal segments must never be handed to
-        // files.
+        // The superblock, journal, and trailer-table segments must
+        // never be handed to files.
         assert!(fs.bitmap.get(0));
         assert!(fs.bitmap.get(1));
+        assert!(fs.bitmap.get(2));
         assert_eq!(fs.free_segments(), fs.num_segments() - RESERVED_SEGMENTS);
     }
 
@@ -647,7 +1101,7 @@ mod tests {
 
     #[test]
     fn no_space_surfaces_and_refused_grow_is_atomic() {
-        let ssd = Arc::new(Ssd::new(4 << 20, 512)); // 4 segments, 2 reserved
+        let ssd = Arc::new(Ssd::new(4 << 20, 512)); // 4 segments, 3 reserved
         let mut fs = DpuFs::format(ssd, FsConfig::default()).unwrap();
         let d = fs.create_directory("d").unwrap();
         let f = fs.create_file(d, "f").unwrap();
@@ -763,7 +1217,7 @@ mod tests {
                 dir: DirId(1),
                 name: "live".into(),
                 size: 10,
-                segments: vec![2],
+                segments: vec![3],
             },
         );
         // Stale counters: next_dir = 1 ≤ live dir 1, next_file = 1 ≤
@@ -867,7 +1321,7 @@ mod tests {
         let mut off = fs.journal_off;
         journal::append(&ssd, seg, &mut off, journal::JOURNAL_DATA_MAGIC, 3, &image).unwrap();
         drop(fs);
-        let mut before = vec![0u8; 2 * seg as usize];
+        let mut before = vec![0u8; 3 * seg as usize];
         ssd.read_into(0, &mut before).unwrap();
         for _ in 0..3 {
             assert!(matches!(
@@ -875,8 +1329,187 @@ mod tests {
                 Err(FsError::Corrupt(_))
             ));
         }
-        let mut after = vec![0u8; 2 * seg as usize];
+        let mut after = vec![0u8; 3 * seg as usize];
         ssd.read_into(0, &mut after).unwrap();
         assert_eq!(before, after, "failed mounts must not write to the device");
+    }
+
+    // ----- durable data plane (redirect-on-write) -----
+
+    #[test]
+    fn durable_write_roundtrips_and_conserves_segments() {
+        let mut fs = fs();
+        let d = fs.create_directory("d").unwrap();
+        let f = fs.create_file(d, "f").unwrap();
+        fs.write(f, 0, &vec![1u8; (2 << 20) + 100]).unwrap();
+        let free_before = fs.free_segments();
+        let old_segs = fs.file_meta(f).unwrap().segments.clone();
+        // Overwrite crossing a segment boundary: both touched segments
+        // must move to shadows, the old ones must come back free.
+        let data: Vec<u8> = (0..(1 << 20) + 999).map(|i| (i % 241) as u8).collect();
+        fs.write_durable(f, (1 << 20) - 500, &data).unwrap();
+        assert_eq!(fs.free_segments(), free_before, "shadow alloc exactly offsets old free");
+        assert_eq!(fs.live_remaps(), 1);
+        let new_segs = &fs.file_meta(f).unwrap().segments;
+        assert_ne!(new_segs[1], old_segs[1], "touched segment was redirected");
+        assert_eq!(new_segs[0], old_segs[0], "untouched segment kept its mapping");
+        let mut out = vec![0u8; data.len()];
+        fs.read(f, (1 << 20) - 500, &mut out).unwrap();
+        assert_eq!(out, data);
+        // Bytes before the write are the old contents, not shadow junk.
+        let mut head = vec![0u8; 100];
+        fs.read(f, 0, &mut head).unwrap();
+        assert_eq!(head, vec![1u8; 100]);
+    }
+
+    #[test]
+    fn durable_growth_zeroes_holes_and_extends_mapping() {
+        let mut fs = fs();
+        let d = fs.create_directory("d").unwrap();
+        let f = fs.create_file(d, "f").unwrap();
+        fs.write(f, 0, &[9u8; 10]).unwrap();
+        // Durable write far past the end: the hole segments must read
+        // zero even though the device could hand back recycled bytes.
+        fs.write_durable(f, (3 << 20) + 7, &[5u8; 100]).unwrap();
+        let meta = fs.file_meta(f).unwrap();
+        assert_eq!(meta.segments.len(), 4);
+        assert_eq!(meta.size, (3 << 20) + 107);
+        let mut hole = vec![0xffu8; 64];
+        fs.read(f, 2 << 20, &mut hole).unwrap();
+        assert!(hole.iter().all(|&b| b == 0), "growth hole reads zero");
+        let mut tail = vec![0u8; 100];
+        fs.read(f, (3 << 20) + 7, &mut tail).unwrap();
+        assert_eq!(tail, [5u8; 100]);
+    }
+
+    /// An acked durable WRITE with no metadata sync afterward must
+    /// survive remount via remap replay — the journal append was the
+    /// ack point.
+    #[test]
+    fn committed_remap_replays_at_mount_byte_exact() {
+        let ssd = Arc::new(Ssd::new(64 << 20, 512));
+        let cfg = FsConfig::default();
+        let f;
+        let data: Vec<u8> = (0..5000u32).map(|i| (i % 199) as u8).collect();
+        {
+            let mut fs = DpuFs::format(ssd.clone(), cfg.clone()).unwrap();
+            let d = fs.create_directory("d").unwrap();
+            f = fs.create_file(d, "f").unwrap();
+            fs.write(f, 0, &vec![3u8; 8000]).unwrap();
+            fs.sync_metadata().unwrap(); // seq 2: base image
+            fs.write_durable(f, 1000, &data).unwrap(); // seq 3: remap only
+        }
+        let (fs, report) = DpuFs::mount_with_report(ssd.clone(), cfg.clone()).unwrap();
+        assert_eq!(report.remaps_applied, 1);
+        assert_eq!(report.quarantined_extents, 0);
+        assert_eq!(report.recovered_seq, 3, "remap advanced the recovered sequence");
+        assert!(!report.rolled_forward);
+        let mut out = vec![0u8; data.len()];
+        fs.read(f, 1000, &mut out).unwrap();
+        assert_eq!(out, data, "acked WRITE is never lost");
+        let mut head = vec![0u8; 1000];
+        fs.read(f, 0, &mut head).unwrap();
+        assert_eq!(head, vec![3u8; 1000], "bytes around the WRITE are the old contents");
+        assert_eq!(fs.live_remaps(), 1, "replayed remap stays wrap-guarded");
+        drop(fs);
+        // Replay is stable: a second mount reaches the same state.
+        let (fs, report) = DpuFs::mount_with_report(ssd, cfg).unwrap();
+        assert_eq!(report.remaps_applied, 1);
+        let mut out2 = vec![0u8; data.len()];
+        fs.read(f, 1000, &mut out2).unwrap();
+        assert_eq!(out2, data);
+    }
+
+    /// Power cut after the shadow data + trailer landed but before the
+    /// remap append: the WRITE was never acked, so recovery must show
+    /// the complete old bytes, quarantine the orphan trailer, and leak
+    /// no segments.
+    #[test]
+    fn precommit_power_cut_rolls_back_quarantines_and_leaks_nothing() {
+        let ssd = Arc::new(Ssd::new(64 << 20, 512));
+        let cfg = FsConfig::default();
+        let mut fs = DpuFs::format(ssd.clone(), cfg.clone()).unwrap();
+        let d = fs.create_directory("d").unwrap();
+        let f = fs.create_file(d, "f").unwrap();
+        fs.write(f, 0, &vec![8u8; 4000]).unwrap();
+        fs.sync_metadata().unwrap();
+        let free_committed = fs.free_segments();
+        // Single-segment overwrite writes: #0 shadow pre-image, #1
+        // payload, #2 trailer, #3 remap append. Cut the append at 0
+        // bytes: everything before it persisted, the ack never
+        // happened.
+        ssd.arm_power_cut(3, 0);
+        let err = fs.write_durable(f, 100, &vec![9u8; 200]).unwrap_err();
+        assert!(matches!(err, FsError::Device(_)));
+        drop(fs);
+        ssd.power_restore();
+        let (fs, report) = DpuFs::mount_with_report(ssd.clone(), cfg.clone()).unwrap();
+        assert_eq!(report.remaps_applied, 0);
+        assert_eq!(report.quarantined_extents, 1, "orphan trailer detected");
+        let mut out = vec![0u8; 4000];
+        fs.read(f, 0, &mut out).unwrap();
+        assert_eq!(out, vec![8u8; 4000], "un-acked WRITE is invisible");
+        assert_eq!(fs.free_segments(), free_committed, "shadow segment reclaimed");
+        drop(fs);
+        // The quarantine zeroed the trailer: a re-mount finds nothing.
+        let (_, report) = DpuFs::mount_with_report(ssd, cfg).unwrap();
+        assert_eq!(report.quarantined_extents, 0, "quarantine repair is durable");
+    }
+
+    /// A torn trailer write (cut mid-trailer) fails its own CRC and is
+    /// simply ignored — no quarantine entry, shadow still reclaimed.
+    #[test]
+    fn torn_trailer_is_ignored_not_quarantined() {
+        let ssd = Arc::new(Ssd::new(64 << 20, 512));
+        let cfg = FsConfig::default();
+        let mut fs = DpuFs::format(ssd.clone(), cfg.clone()).unwrap();
+        let d = fs.create_directory("d").unwrap();
+        let f = fs.create_file(d, "f").unwrap();
+        fs.write(f, 0, &vec![8u8; 4000]).unwrap();
+        fs.sync_metadata().unwrap();
+        let free_committed = fs.free_segments();
+        ssd.arm_power_cut(2, 7); // tear the trailer write mid-bytes
+        assert!(fs.write_durable(f, 100, &vec![9u8; 200]).is_err());
+        drop(fs);
+        ssd.power_restore();
+        let (fs, report) = DpuFs::mount_with_report(ssd, cfg).unwrap();
+        assert_eq!(report.quarantined_extents, 0);
+        assert_eq!(report.remaps_applied, 0);
+        assert_eq!(fs.free_segments(), free_committed);
+        let mut out = vec![0u8; 4000];
+        fs.read(f, 0, &mut out).unwrap();
+        assert_eq!(out, vec![8u8; 4000]);
+    }
+
+    /// The wrap guard: remap appends that would wrap the journal first
+    /// checkpoint the image into a superblock slot, so a long run of
+    /// durable WRITEs with no metadata sync never loses an acked WRITE
+    /// to the wrap.
+    #[test]
+    fn journal_wrap_under_durable_writes_checkpoints_and_loses_nothing() {
+        // Small segments so the journal wraps quickly.
+        let seg = 1u64 << 13;
+        let ssd = Arc::new(Ssd::new(128 * seg, 512));
+        let cfg = FsConfig { segment_size: seg };
+        let mut fs = DpuFs::format(ssd.clone(), cfg.clone()).unwrap();
+        let d = fs.create_directory("d").unwrap();
+        let f = fs.create_file(d, "f").unwrap();
+        fs.write(f, 0, &vec![1u8; seg as usize]).unwrap();
+        fs.sync_metadata().unwrap();
+        // Each remap frame is ~60 bytes; push enough durable WRITEs
+        // through to wrap the 8 KiB journal several times.
+        let mut expect = vec![1u8; seg as usize];
+        for i in 0..400u32 {
+            let off = (i % 64) as u64 * 100;
+            let byte = (i % 251) as u8;
+            fs.write_durable(f, off, &[byte; 100]).unwrap();
+            expect[off as usize..off as usize + 100].fill(byte);
+        }
+        drop(fs);
+        let (fs, report) = DpuFs::mount_with_report(ssd, cfg).unwrap();
+        let mut out = vec![0u8; seg as usize];
+        fs.read(f, 0, &mut out).unwrap();
+        assert_eq!(out, expect, "every acked WRITE survives journal wraps");
+        assert_eq!(report.quarantined_extents, 0);
     }
 }

@@ -38,7 +38,10 @@
 
 pub mod scenario;
 
-pub use scenario::{crash_recovery, run_scenario, CrashRecoveryReport, Scenario, ScenarioReport};
+pub use scenario::{
+    crash_recovery, data_crash, run_scenario, CrashRecoveryReport, DataCrashReport, Scenario,
+    ScenarioReport,
+};
 
 use std::sync::{Arc, Mutex};
 

@@ -1050,6 +1050,355 @@ pub fn crash_recovery(seed: u64) -> anyhow::Result<CrashRecoveryReport> {
     })
 }
 
+// ---------------------------------------------------------------------
+// data_crash: durable-WRITE power-cut + remount scenario
+// ---------------------------------------------------------------------
+
+/// Tenants in the data-crash scenario (one file + poll group each).
+const DATA_TENANTS: usize = 3;
+/// Seeded WRITE ops after the per-tenant base fills.
+const DATA_OPS: usize = 18;
+/// Durable base image per tenant file — 1.5 segments, so every tenant
+/// owns a segment boundary for writes to tear across.
+const DATA_BASE: usize = (CRASH_SEG + CRASH_SEG / 2) as usize;
+
+/// What the data-crash scenario observed.
+#[derive(Debug)]
+pub struct DataCrashReport {
+    pub seed: u64,
+    /// The cut point: the `cut_write`-th device write after arming
+    /// persisted only its first `cut_bytes` bytes.
+    pub cut_write: u64,
+    pub cut_bytes: usize,
+    /// Durable WRITEs acked (remap record journaled) before the cut.
+    pub writes_acked: u64,
+    /// WRITEs that surfaced as clean bounded ERRs (the torn op and
+    /// everything after it, including the concurrent dead-device burst).
+    pub writes_failed: u64,
+    /// The tenant whose WRITE the cut tore, if any op failed: recovery
+    /// may legally surface either side of THAT op (its remap record may
+    /// have fully persisted before the ack was delivered) — but only
+    /// that op, and never a byte mix.
+    pub ambiguous_tenant: Option<usize>,
+    /// Recovered per-tenant file sizes (deterministic per seed).
+    pub recovered_sizes: Vec<u64>,
+    /// What mount-time recovery found, replayed and quarantined.
+    pub recovery: RecoveryReport,
+    /// `(op index, tenant, acked)` per WRITE — the deterministic
+    /// outcome trace the determinism suite replays.
+    pub outcomes: Vec<(usize, usize, u8)>,
+    /// Canonical fault schedule (the power-cut injection).
+    pub schedule: Vec<FaultEvent>,
+    pub elapsed: Duration,
+}
+
+/// Deterministic payload for `(tenant, op)` — recovery verification
+/// recomputes expected images from these alone.
+fn data_pattern(seed: u64, tenant: usize, op: usize, len: usize) -> Vec<u8> {
+    let base = (seed as usize) ^ tenant.wrapping_mul(131) ^ op.wrapping_mul(17);
+    (0..len).map(|j| (base.wrapping_add(j) % 251) as u8).collect()
+}
+
+/// The seeded durable-WRITE driver shared by the scout and chaos
+/// passes: per-tenant committed byte images are the model the recovered
+/// device is checked against.
+struct DataOps {
+    rng: Rng,
+    seed: u64,
+    fe: DdsClient,
+    /// Per tenant: file handle, poll group, committed (acked) image.
+    tenants: Vec<(DdsFile, Arc<PollGroup>, Vec<u8>)>,
+    outcomes: Vec<(usize, usize, u8)>,
+    acked: u64,
+    failed: u64,
+    dead: bool,
+    /// `(tenant, image)` the torn op would have committed: its remap
+    /// record may have fully persisted before the cut killed the ack
+    /// path, so recovery may surface either side of this one op.
+    ambiguous: Option<(usize, Vec<u8>)>,
+}
+
+impl DataOps {
+    fn new(seed: u64, storage: &StorageServer) -> anyhow::Result<Self> {
+        let fe = storage.front_end();
+        let dir = fe.create_directory("tenants").map_err(|e| anyhow::anyhow!("{e}"))?;
+        let mut tenants = Vec::with_capacity(DATA_TENANTS);
+        for t in 0..DATA_TENANTS {
+            let mut f =
+                fe.create_file(dir, &format!("t{t}")).map_err(|e| anyhow::anyhow!("{e}"))?;
+            let group = fe.create_poll().map_err(|e| anyhow::anyhow!("{e}"))?;
+            fe.poll_add(&mut f, &group);
+            tenants.push((f, group, Vec::new()));
+        }
+        Ok(DataOps {
+            rng: Rng::new(seed ^ 0xDA7A_4001),
+            seed,
+            fe,
+            tenants,
+            outcomes: Vec::new(),
+            acked: 0,
+            failed: 0,
+            dead: false,
+            ambiguous: None,
+        })
+    }
+
+    /// Issue one durable WRITE for tenant `t` and fold the outcome into
+    /// the committed image / ambiguity bookkeeping.
+    fn write(&mut self, opi: usize, t: usize, offset: u64, data: Vec<u8>) -> anyhow::Result<()> {
+        // The image this op would commit.
+        let mut with_op = self.tenants[t].2.clone();
+        let end = offset as usize + data.len();
+        if with_op.len() < end {
+            with_op.resize(end, 0);
+        }
+        with_op[offset as usize..end].copy_from_slice(&data);
+        let ok = match self.fe.write_file(&self.tenants[t].0, offset, &data) {
+            Ok(req_id) => wait_event(&self.tenants[t].1, req_id)?.ok,
+            Err(_) => false,
+        };
+        if ok {
+            anyhow::ensure!(
+                !self.dead,
+                "WRITE acked after the device died (seed {}, op {opi})",
+                self.seed
+            );
+            self.tenants[t].2 = with_op;
+            self.acked += 1;
+        } else {
+            self.failed += 1;
+            if !self.dead {
+                self.dead = true;
+                self.ambiguous = Some((t, with_op));
+            }
+        }
+        self.outcomes.push((opi, t, ok as u8));
+        Ok(())
+    }
+
+    /// The seeded WRITE mix: base fills, in-place overwrites, segment-
+    /// boundary straddles, and hole-leaving growth. Each op round-trips
+    /// before the next issues — deliberately, so the device write
+    /// schedule is identical run to run and the scout trace indexes the
+    /// chaos pass's writes exactly (the same-seed determinism contract;
+    /// concurrency against the dead device is exercised separately by
+    /// [`Self::concurrent_burst`]).
+    fn drive(&mut self) -> anyhow::Result<()> {
+        for t in 0..DATA_TENANTS {
+            let data = data_pattern(self.seed, t, t, DATA_BASE);
+            self.write(t, t, 0, data)?;
+        }
+        for i in 0..DATA_OPS {
+            let opi = DATA_TENANTS + i;
+            let t = self.rng.next_range(DATA_TENANTS as u64) as usize;
+            let len = 1 + self.rng.next_range(4096);
+            let kind = self.rng.next_range(10);
+            let cur = self.tenants[t].2.len() as u64;
+            let offset = match kind {
+                // In-place overwrite inside the committed image.
+                0..=5 => self.rng.next_range(cur.saturating_sub(len).max(1)),
+                // Straddle the first segment boundary (the torn-extent
+                // sweet spot: two shadows, one commit record).
+                6..=7 => CRASH_SEG.saturating_sub(len / 2),
+                // Growth past EOF, sometimes leaving a zero hole.
+                _ => cur + self.rng.next_range(CRASH_SEG / 2),
+            };
+            let data = data_pattern(self.seed, t, opi, len as usize);
+            self.write(opi, t, offset, data)?;
+        }
+        Ok(())
+    }
+
+    /// Concurrent multi-tenant burst against the dead device (chaos
+    /// pass only, after the cut): every tenant issues at once; each
+    /// WRITE must resolve as a clean bounded ERR — never a hang, never
+    /// an ack, never a device mutation.
+    fn concurrent_burst(&mut self) -> anyhow::Result<()> {
+        let base = DATA_TENANTS + DATA_OPS;
+        let issued: Vec<_> = (0..DATA_TENANTS)
+            .map(|t| {
+                let data = data_pattern(self.seed, t, base + t, 777);
+                (t, self.fe.write_file(&self.tenants[t].0, 0, &data).ok())
+            })
+            .collect();
+        for (t, req) in issued {
+            let ok = match req {
+                Some(id) => wait_event(&self.tenants[t].1, id)?.ok,
+                None => false,
+            };
+            anyhow::ensure!(
+                !ok,
+                "dead-device burst WRITE acked (tenant {t}, seed {})",
+                self.seed
+            );
+            self.failed += 1;
+            self.outcomes.push((base + t, t, 0));
+        }
+        Ok(())
+    }
+}
+
+fn data_crash_storage() -> anyhow::Result<StorageServer> {
+    StorageServer::build(
+        StorageServerConfig {
+            ssd_bytes: CRASH_SSD_BYTES,
+            segment_size: CRASH_SEG,
+            service: FileServiceConfig { durable_data: true, ..Default::default() },
+            ..Default::default()
+        },
+        None,
+    )
+}
+
+/// Read a file's full recovered content straight off the device
+/// through its extent mapping.
+fn read_device_file(
+    fs: &crate::dpufs::DpuFs,
+    ssd: &crate::ssd::Ssd,
+    id: crate::dpufs::FileId,
+    size: u64,
+) -> anyhow::Result<Vec<u8>> {
+    let extents = fs.map_extents(id, 0, size).map_err(|e| anyhow::anyhow!("{e:?}"))?;
+    let mut out = Vec::with_capacity(size as usize);
+    for e in extents {
+        let mut buf = vec![0u8; e.len as usize];
+        ssd.read_into(e.addr, &mut buf).map_err(|e| anyhow::anyhow!("{e}"))?;
+        out.extend_from_slice(&buf);
+    }
+    Ok(out)
+}
+
+/// The data-path crash scenario: seeded multi-tenant durable WRITE load
+/// with `durable_data` on, a power cut torn mid-write at a seed-chosen
+/// `(write, byte)` point, a concurrent dead-device burst, then remount
+/// through the coordinator restart path and the torn-write-proof
+/// verdict: every acked WRITE reads back byte-exact, the torn op is
+/// all-old or all-new (never a mix), nothing later is visible, no
+/// segment leaks, and the recovered server serves durable WRITEs again.
+pub fn data_crash(seed: u64) -> anyhow::Result<DataCrashReport> {
+    let started = Instant::now();
+    let plane = FaultPlane::new(FaultConfig { seed, ..Default::default() });
+
+    // Scout pass (fault-free): learn the durable-write device schedule.
+    let trace = {
+        let storage = data_crash_storage()?;
+        let mut ops = DataOps::new(seed, &storage)?;
+        storage.ssd.start_write_trace();
+        ops.drive()?;
+        anyhow::ensure!(ops.failed == 0, "scout pass must run fault-free");
+        anyhow::ensure!(ops.acked > 0, "scout pass acked nothing");
+        storage.ssd.take_write_trace()
+    };
+    anyhow::ensure!(!trace.is_empty(), "durable WRITEs issued no device writes");
+
+    // The cut point derives from the seed via the PowerCut site stream.
+    let mut prng = plane.site_rng(FaultSite::PowerCut);
+    let cut_write = prng.next_range(trace.len() as u64);
+    let cut_bytes = prng.next_range(trace[cut_write as usize].1 as u64 + 1) as usize;
+    plane.record(
+        FaultSite::PowerCut,
+        FaultAction::PowerCut { write: cut_write, cut: cut_bytes as u32 },
+    );
+
+    // Chaos pass: same setup and ops, cut armed after setup (the same
+    // point the scout reset its write counter at, so indices align).
+    let storage = data_crash_storage()?;
+    let ssd = storage.ssd.clone();
+    let mut ops = DataOps::new(seed, &storage)?;
+    ssd.arm_power_cut(cut_write, cut_bytes);
+    ops.drive()?;
+    anyhow::ensure!(ssd.is_dead(), "the armed cut must have fired");
+    anyhow::ensure!(ops.failed > 0, "the cut must fail at least the op it tears");
+    ops.concurrent_burst()?;
+    drop(storage); // the crash: the server is gone, the medium survives
+
+    // Reboot + remount through the coordinator restart path.
+    ssd.power_restore();
+    let (storage, recovery) = StorageServer::remount(
+        ssd.clone(),
+        StorageServerConfig {
+            ssd_bytes: CRASH_SSD_BYTES,
+            segment_size: CRASH_SEG,
+            service: FileServiceConfig { durable_data: true, ..Default::default() },
+            ..Default::default()
+        },
+        None,
+    )?;
+
+    // Torn-write-proof verdict, per tenant: the recovered bytes equal
+    // the committed image — or, for the ONE ambiguous (torn) op, its
+    // fully-applied target. Anything else is a durability violation:
+    // a lost acked WRITE, a half-applied extent, or invented bytes.
+    let ctx = format!("seed {seed} cut {cut_write}/{cut_bytes}");
+    let mut sizes = Vec::with_capacity(DATA_TENANTS);
+    {
+        let fs = storage.dpufs.read().unwrap();
+        for (t, (_, _, committed)) in ops.tenants.iter().enumerate() {
+            // File ids are creation-ordered: t0 is FileId(1).
+            let id = crate::dpufs::FileId(t as u32 + 1);
+            let size = fs.file_meta(id).map_err(|e| anyhow::anyhow!("{ctx}: {e:?}"))?.size;
+            let got = read_device_file(&fs, &ssd, id, size)?;
+            let mut candidates: Vec<&Vec<u8>> = vec![committed];
+            if let Some((at, alt)) = ops.ambiguous.as_ref() {
+                if *at == t {
+                    candidates.push(alt);
+                }
+            }
+            anyhow::ensure!(
+                candidates.iter().any(|c| got == **c),
+                "{ctx}: tenant {t} recovered {} bytes matching neither the committed \
+                 image ({} B) nor the torn op's target — torn-write atomicity violated",
+                got.len(),
+                committed.len()
+            );
+            sizes.push(size);
+        }
+        // Structural invariants: mapping lengths, segment uniqueness,
+        // bitmap accounting (no leaked shadow segments), id counters.
+        let model = MetaModel {
+            dirs: vec!["tenants".into()],
+            files: (0..DATA_TENANTS)
+                .map(|t| ("tenants".to_string(), format!("t{t}"), sizes[t]))
+                .collect(),
+        };
+        verify_recovered_fs(&fs, &model, &ctx)?;
+    }
+
+    // The operator surface must report the same recovery the mount ran.
+    let fe = storage.front_end();
+    let reported = fe.recovery_report().map_err(|e| anyhow::anyhow!("{e}"))?;
+    anyhow::ensure!(
+        reported.as_ref() == Some(&recovery),
+        "{ctx}: control-plane recovery report disagrees with the mount's"
+    );
+
+    // The recovered server must serve durable WRITEs again, byte-exact.
+    let dir = fe.create_directory("post-crash").map_err(|e| anyhow::anyhow!("{e}"))?;
+    let mut f = fe.create_file(dir, "alive").map_err(|e| anyhow::anyhow!("{e}"))?;
+    let group = fe.create_poll().map_err(|e| anyhow::anyhow!("{e}"))?;
+    fe.poll_add(&mut f, &group);
+    let payload: Vec<u8> = (0..2048u32).map(|i| (i % 241) as u8).collect();
+    let wid = fe.write_file(&f, 0, &payload).map_err(|e| anyhow::anyhow!("{e}"))?;
+    anyhow::ensure!(wait_event(&group, wid)?.ok, "post-recovery durable write failed");
+    let rid = fe.read_file(&f, 0, payload.len() as u32).map_err(|e| anyhow::anyhow!("{e}"))?;
+    let ev = wait_event(&group, rid)?;
+    anyhow::ensure!(ev.ok && ev.data == payload, "post-recovery read not byte-exact");
+
+    Ok(DataCrashReport {
+        seed,
+        cut_write,
+        cut_bytes,
+        writes_acked: ops.acked,
+        writes_failed: ops.failed,
+        ambiguous_tenant: ops.ambiguous.as_ref().map(|(t, _)| *t),
+        recovered_sizes: sizes,
+        recovery,
+        outcomes: ops.outcomes,
+        schedule: plane.schedule(),
+        elapsed: started.elapsed(),
+    })
+}
+
 /// Compare a recovered file system against the committed model; also
 /// check the allocation invariants (segment uniqueness/range, bitmap
 /// accounting, file-mapping lengths, id-counter safety). Returns the

@@ -345,6 +345,14 @@ impl DdsClient {
         Ok(ctrl_call!(self, SyncMetadata {})?)
     }
 
+    /// What mount-time crash recovery observed and repaired (`None`
+    /// when the server was freshly formatted rather than remounted).
+    pub fn recovery_report(
+        &self,
+    ) -> Result<Option<crate::dpufs::RecoveryReport>, LibError> {
+        Ok(ctrl_call!(self, RecoveryReport {}))
+    }
+
     /// Per-poll-group service counters (requests drained, responses
     /// delivered, outstanding), indexed by registration order. Lets
     /// multi-group deployments (one group per shard/thread) verify the

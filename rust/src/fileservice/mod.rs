@@ -26,6 +26,7 @@ mod staging;
 
 pub use staging::{OrderedStaging, StagedStatus};
 
+use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex, RwLock};
@@ -35,7 +36,7 @@ use std::time::Instant;
 use crate::buf::{BufPool, BufView};
 use crate::cache::CuckooCache;
 use crate::dma::DmaChannel;
-use crate::dpufs::{DirId, DpuFs, FileId, FsError};
+use crate::dpufs::{DirId, DpuFs, FileId, FsError, RecoveryReport, RedirectPlan};
 use crate::idle::IdleGovernor;
 use crate::metrics::{
     merge_tenant_tables, CpuLedger, CpuStats, LatencyHistogram, LatencyStats, TenantCounters,
@@ -86,6 +87,10 @@ pub enum ControlMsg {
     /// responses while stalled). Replies whether the group exists.
     InjectGroupStall { group: usize, iterations: u32, reply: mpsc::Sender<bool> },
     SyncMetadata { reply: mpsc::Sender<Result<(), FsError>> },
+    /// Operator surface for mount-time crash recovery: what the last
+    /// mount rolled forward/back, replayed, and quarantined. `None`
+    /// after a fresh format (no recovery ran).
+    RecoveryReport { reply: mpsc::Sender<Option<RecoveryReport>> },
     Shutdown,
 }
 
@@ -168,6 +173,15 @@ pub struct FileServiceConfig {
     /// syncs: growth from writes becomes durable at the next
     /// control-plane op or an explicit `SyncMetadata`.
     pub durable_metadata: bool,
+    /// Data-path durability (redirect-on-write): WRITEs stage their
+    /// payload into freshly allocated shadow extents and the response
+    /// is acked only after the extent-remap record is durably
+    /// journaled — the ack point moves from "payload landed" to
+    /// "commit record appended". A power cut before the ack leaves the
+    /// old bytes fully intact (the un-acked WRITE surfaces as a clean
+    /// bounded ERR, never a torn extent). Off by default: the in-place
+    /// path acks on payload completion, like a volatile write cache.
+    pub durable_data: bool,
     /// What the service pump does when an iteration finds no work:
     /// busy-poll (`Poll`, the SPDK discipline — one core even when
     /// idle) or the spin→yield→park ladder (`Adaptive`, the default).
@@ -201,6 +215,7 @@ impl Default for FileServiceConfig {
             read_pool_slots: 256,
             read_pool_slot_size: 64 << 10,
             durable_metadata: true,
+            durable_data: false,
             idle: IdlePolicy::default(),
         }
     }
@@ -290,6 +305,14 @@ pub struct FileService {
     submit_buf: Vec<(u64, SsdOp)>,
     comp_buf: Vec<Completion>,
     deliver_buf: Vec<([u8; FileResponse::HEADER_LEN], BufView)>,
+    /// In-flight durable-WRITE redirect plans, keyed by (group, slot).
+    /// Inserted when the shadow writes are submitted; removed at commit
+    /// (last completion), or at abort (error completion / stalled-slot
+    /// timeout — the shadows go back to the allocator, no ack is sent).
+    pending_plans: HashMap<(usize, u64), RedirectPlan>,
+    /// Mount-time recovery report, surfaced via
+    /// [`ControlMsg::RecoveryReport`]. `None` on a fresh format.
+    recovery: Option<RecoveryReport>,
 }
 
 impl FileService {
@@ -348,9 +371,17 @@ impl FileService {
                 submit_buf: Vec::new(),
                 comp_buf: Vec::new(),
                 deliver_buf: Vec::new(),
+                pending_plans: HashMap::new(),
+                recovery: None,
             },
             tx,
         )
+    }
+
+    /// Attach the mount-time [`RecoveryReport`] (call before `spawn`;
+    /// the coordinator plumbs it from `StorageServer::remount`).
+    pub fn set_recovery_report(&mut self, report: RecoveryReport) {
+        self.recovery = Some(report);
     }
 
     /// Spawn the service thread (pump discipline set by
@@ -511,6 +542,9 @@ impl FileService {
                     let r = self.dpufs.write().unwrap().sync_metadata();
                     let _ = reply.send(r);
                 }
+                ControlMsg::RecoveryReport { reply } => {
+                    let _ = reply.send(self.recovery.clone());
+                }
                 ControlMsg::Shutdown => {}
             }
         }
@@ -663,6 +697,45 @@ impl FileService {
                         self.cache.insert(key, item);
                     }
                 }
+                if self.cfg.durable_data {
+                    // Redirect-on-write durable path: the payload goes
+                    // to shadow extents and the response is gated on
+                    // the remap commit (run by `absorb_completions`
+                    // when the last shadow write lands). Growth is the
+                    // plan's job, so no `ensure_size` here.
+                    let plan = {
+                        let mut fs = self.dpufs.write().unwrap();
+                        fs.redirect_prepare(file, req.offset, req.data.len() as u64)
+                    };
+                    match plan {
+                        Ok(plan) if plan.extents.is_empty() => {
+                            // Zero-length WRITE: nothing to stage —
+                            // commit the (trivial) plan synchronously,
+                            // then let the empty extent list complete
+                            // the slot.
+                            let r = self.dpufs.write().unwrap().redirect_commit(plan);
+                            match r {
+                                Ok(()) => self.groups[gi].staging.set_extents(slot, &[]),
+                                Err(_) => self.groups[gi].staging.fail(slot),
+                            }
+                        }
+                        Ok(plan) => {
+                            self.groups[gi].staging.set_extents(slot, &plan.extents);
+                            self.groups[gi].staging.set_gated(slot);
+                            let mut at = 0usize;
+                            for (ei, e) in plan.extents.iter().enumerate() {
+                                let tag = pack_tag(gi, slot, ei);
+                                let chunk = req.data.slice(at..at + e.len as usize);
+                                at += e.len as usize;
+                                self.submit_buf
+                                    .push((tag, SsdOp::Write { addr: e.addr, data: chunk }));
+                            }
+                            self.pending_plans.insert((gi, slot), plan);
+                        }
+                        Err(_) => self.groups[gi].staging.fail(slot),
+                    }
+                    return;
+                }
                 // Allocation may be needed: take the write lock briefly.
                 let extents = {
                     let mut fs = self.dpufs.write().unwrap();
@@ -704,11 +777,33 @@ impl FileService {
             if gi >= self.groups.len() {
                 continue;
             }
-            let staging = &mut self.groups[gi].staging;
             if c.result.is_err() {
-                staging.fail(slot);
+                self.groups[gi].staging.fail(slot);
+                // A failed shadow write aborts the gated WRITE's plan:
+                // the shadows go back to the allocator, no commit runs,
+                // and the client gets ERR with the old bytes intact.
+                if let Some(plan) = self.pending_plans.remove(&(gi, slot)) {
+                    self.dpufs.write().unwrap().redirect_abort(&plan);
+                }
             } else {
+                let staging = &mut self.groups[gi].staging;
                 staging.complete_extent(slot, extent, &c.data, self.cfg.extra_copy);
+                if staging.commit_ready(slot) {
+                    // Last shadow write landed: run the commit — the
+                    // remap journal append IS the ack point. Failure
+                    // surfaces as a clean ERR (the plan's shadows are
+                    // already rolled back by `redirect_commit`).
+                    let plan = self
+                        .pending_plans
+                        .remove(&(gi, slot))
+                        .expect("commit-ready slot has a stashed plan");
+                    let r = self.dpufs.write().unwrap().redirect_commit(plan);
+                    let staging = &mut self.groups[gi].staging;
+                    match r {
+                        Ok(()) => staging.commit_done(slot),
+                        Err(_) => staging.fail(slot),
+                    }
+                }
             }
         }
         self.comp_buf = completions;
@@ -736,7 +831,8 @@ impl FileService {
         let mut burst = std::mem::take(&mut self.deliver_buf);
         let mut any = false;
         for k in 0..n {
-            let g = &mut self.groups[(start + k) % n];
+            let gi = (start + k) % n;
+            let g = &mut self.groups[gi];
             if g.stall > 0 {
                 // Last pass of this service iteration: consume one
                 // stall tick (intake already skipped on the same tick).
@@ -751,8 +847,17 @@ impl FileService {
             }
             // Lost-completion recovery: abort slots stuck pending past
             // the timeout so one lost interrupt can't wedge the group's
-            // in-order delivery forever.
-            g.timed_out += g.staging.fail_stalled(pending_timeout) as u64;
+            // in-order delivery forever. Aborted durable WRITEs also
+            // roll back their redirect plans — the un-acked shadows go
+            // home and the ERR response carries no durability claim.
+            let stalled = g.staging.fail_stalled(pending_timeout);
+            g.timed_out += stalled.len() as u64;
+            for slot in stalled {
+                if let Some(plan) = self.pending_plans.remove(&(gi, slot)) {
+                    self.dpufs.write().unwrap().redirect_abort(&plan);
+                }
+            }
+            let g = &mut self.groups[gi];
             g.staging.advance_buffered();
             // Deliver on the batch threshold — OR as soon as the group
             // has nothing in flight that could still grow the batch. A

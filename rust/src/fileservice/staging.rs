@@ -46,6 +46,12 @@ struct Slot {
     extents_remaining: usize,
     /// Byte offset where each extent's bytes land in the payload.
     extent_offsets: Vec<usize>,
+    /// Durable-WRITE gate: when set, the last extent completion leaves
+    /// the slot *commit-ready* (still Pending) instead of Done — only
+    /// [`OrderedStaging::commit_done`], called once the remap record is
+    /// durably journaled, makes it deliverable. The ack point moves
+    /// from "payload landed" to "commit record appended".
+    gated: bool,
     /// Allocation time — reference point for [`OrderedStaging::fail_stalled`].
     issued: Instant,
 }
@@ -111,6 +117,7 @@ impl OrderedStaging {
             expected_payload: payload,
             extents_remaining: usize::MAX, // until set_extents
             extent_offsets: Vec::new(),
+            gated: false,
             issued: Instant::now(),
         });
         self.tail_a += 1;
@@ -175,11 +182,56 @@ impl OrderedStaging {
             }
         }
         s.extents_remaining = s.extents_remaining.saturating_sub(1);
-        if s.extents_remaining == 0 {
+        if s.extents_remaining == 0 && !s.gated {
             s.status = StagedStatus::Done;
             if let Some(assembly) = s.assembly.take() {
                 s.view = Some(assembly.freeze());
             }
+        }
+    }
+
+    /// Gate a slot's completion on an explicit durability commit (call
+    /// after [`Self::set_extents`]): when the last extent lands the
+    /// slot becomes *commit-ready* instead of Done, and only
+    /// [`Self::commit_done`] delivers it. Failure paths ([`Self::fail`],
+    /// [`Self::fail_stalled`]) abort a gated slot like any other.
+    pub fn set_gated(&mut self, slot: u64) {
+        if slot < self.tail_c || slot >= self.tail_a {
+            return;
+        }
+        let pos = (slot % self.capacity() as u64) as usize;
+        if let Some(s) = self.slots[pos].as_mut() {
+            s.gated = true;
+        }
+    }
+
+    /// Is `slot` a gated slot whose every extent has completed, now
+    /// waiting on its durability commit?
+    pub fn commit_ready(&self, slot: u64) -> bool {
+        if slot < self.tail_c || slot >= self.tail_a {
+            return false;
+        }
+        let pos = (slot % self.capacity() as u64) as usize;
+        matches!(
+            self.slots[pos].as_ref(),
+            Some(s) if s.gated
+                && s.status == StagedStatus::Pending
+                && s.extents_remaining == 0
+        )
+    }
+
+    /// Commit acknowledgement for a commit-ready slot: the remap record
+    /// is durably journaled, so the response may be delivered. Stale or
+    /// non-ready slots are ignored (same contract as completions).
+    pub fn commit_done(&mut self, slot: u64) {
+        if !self.commit_ready(slot) {
+            return;
+        }
+        let pos = (slot % self.capacity() as u64) as usize;
+        let s = self.slots[pos].as_mut().expect("commit_ready slot occupied");
+        s.status = StagedStatus::Done;
+        if let Some(assembly) = s.assembly.take() {
+            s.view = Some(assembly.freeze());
         }
     }
 
@@ -206,9 +258,10 @@ impl OrderedStaging {
     /// one lost SSD completion can't block in-order delivery forever.
     /// Only the window head needs checking — a stuck slot behind a
     /// stuck head becomes the head once the first is failed. Returns
-    /// how many slots were aborted.
-    pub fn fail_stalled(&mut self, timeout: Duration) -> usize {
-        let mut failed = 0;
+    /// the aborted slot indices so the caller can roll back any
+    /// resources keyed to them (e.g. a gated WRITE's redirect plan).
+    pub fn fail_stalled(&mut self, timeout: Duration) -> Vec<u64> {
+        let mut failed = Vec::new();
         loop {
             self.advance_buffered();
             if self.tail_b >= self.tail_a {
@@ -222,7 +275,7 @@ impl OrderedStaging {
                     s.status = StagedStatus::Failed;
                     s.view = None;
                     s.assembly = None;
-                    failed += 1;
+                    failed.push(self.tail_b);
                 }
                 _ => return failed,
             }
@@ -438,12 +491,13 @@ mod tests {
         st.set_extents(b, &[ext(4, 4)]);
         // b completes; a's completion is lost. Nothing deliverable yet.
         st.complete_extent(b, 0, &view(&[2, 2, 2, 2]), false);
-        assert_eq!(st.fail_stalled(Duration::from_secs(60)), 0, "not stalled yet");
+        assert!(st.fail_stalled(Duration::from_secs(60)).is_empty(), "not stalled yet");
         st.advance_buffered();
         assert!(st.peek_deliverable().is_none());
         // Timeout elapses (zero budget): a is aborted, both deliver in
-        // order — a as Failed, b as Done.
-        assert_eq!(st.fail_stalled(Duration::ZERO), 1);
+        // order — a as Failed, b as Done — and the aborted slot's index
+        // comes back so the caller can roll back keyed resources.
+        assert_eq!(st.fail_stalled(Duration::ZERO), vec![a]);
         st.advance_buffered();
         let (id, status, data) = st.peek_deliverable().unwrap();
         assert_eq!((id, status), (1, StagedStatus::Failed));
@@ -456,7 +510,45 @@ mod tests {
         let c = st.allocate(3, crate::proto::FileResponse::HEADER_LEN).unwrap();
         st.set_extents(c, &[ext(8, 4)]);
         st.complete_extent(c, 0, &view(&[]), false);
-        assert_eq!(st.fail_stalled(Duration::ZERO), 0);
+        assert!(st.fail_stalled(Duration::ZERO).is_empty());
+    }
+
+    /// The durable-WRITE gate: a gated slot whose extents all complete
+    /// stays Pending (commit-ready) and only `commit_done` — the remap
+    /// ack point — delivers it; failure aborts it like any other slot.
+    #[test]
+    fn gated_slot_delivers_only_after_commit() {
+        let mut st = staging(8);
+        let a = st.allocate(1, crate::proto::FileResponse::HEADER_LEN).unwrap();
+        st.set_extents(a, &[ext(0, 4), ext(512, 4)]);
+        st.set_gated(a);
+        st.complete_extent(a, 0, &view(&[]), false);
+        assert!(!st.commit_ready(a), "one extent still in flight");
+        st.complete_extent(a, 1, &view(&[]), false);
+        assert!(st.commit_ready(a));
+        st.advance_buffered();
+        assert!(st.peek_deliverable().is_none(), "no ack before commit");
+        st.commit_done(a);
+        assert!(!st.commit_ready(a), "commit consumed the gate");
+        st.advance_buffered();
+        let (id, status, _) = st.peek_deliverable().unwrap();
+        assert_eq!((id, status), (1, StagedStatus::Done));
+        st.pop_delivered();
+        // commit_done on a stale (recycled) index is a no-op.
+        st.commit_done(a);
+        // A gated slot that fails pre-commit delivers Failed: the ack
+        // was never sent, so the client sees a clean bounded ERR.
+        let b = st.allocate(2, crate::proto::FileResponse::HEADER_LEN).unwrap();
+        st.set_extents(b, &[ext(0, 4)]);
+        st.set_gated(b);
+        st.complete_extent(b, 0, &view(&[]), false);
+        assert!(st.commit_ready(b));
+        st.fail(b);
+        assert!(!st.commit_ready(b));
+        st.commit_done(b); // late commit after failure: ignored
+        st.advance_buffered();
+        let (id, status, _) = st.peek_deliverable().unwrap();
+        assert_eq!((id, status), (2, StagedStatus::Failed));
     }
 
     #[test]

@@ -27,6 +27,7 @@ USAGE:
     dds serve [--requests N] [--batch B] [--io BYTES] [--no-offload]
               [--shards N] [--idle-policy poll|adaptive|adaptive:S:US]
               [--burst N] [--tenants T] [--rate R] [--max-flows F]
+              [--durable-data]
         run the full functional server (client → director → offload
         engine / host app → SSD) in-process and report throughput;
         --shards > 1 runs the RSS-sharded data plane (one shard
@@ -43,7 +44,12 @@ USAGE:
         bucket, 0 = unlimited); --max-flows caps open flows per
         tenant per shard (0 = unlimited). Limits only apply on the
         sharded path; a per-tenant report prints at exit.
+        --durable-data acks a WRITE only after its redirect-on-
+        write remap record is journaled: a power cut never tears
+        an acked WRITE (crash-atomic data path, slower acks).
         A CPU report (busy fraction, parks, wakes) prints at exit.
+        The mount-time recovery summary (what crash recovery
+        observed and repaired) prints at startup.
     dds kernels
         load artifacts/*.hlo.txt into the PJRT runtime and smoke-test
     dds stack <1..10> [--io BYTES] [--window W] [--write]
@@ -75,6 +81,7 @@ fn serve(args: &[String]) -> anyhow::Result<()> {
     let batch: usize = arg_val(args, "--batch").map_or(8, |v| v.parse().unwrap_or(8));
     let io: u32 = arg_val(args, "--io").map_or(1024, |v| v.parse().unwrap_or(1024));
     let offload = !args.iter().any(|a| a == "--no-offload");
+    let durable_data = args.iter().any(|a| a == "--durable-data");
     let shards: usize = arg_val(args, "--shards").map_or(1, |v| v.parse().unwrap_or(1));
     let burst: usize =
         arg_val(args, "--burst").map_or(64, |v| v.parse().unwrap_or(64)).max(1);
@@ -91,13 +98,15 @@ fn serve(args: &[String]) -> anyhow::Result<()> {
     };
 
     println!(
-        "building storage server (offload={offload}, io={io}B, batch={batch}, shards={shards}, burst={burst}, idle={})…",
+        "building storage server (offload={offload}, io={io}B, batch={batch}, shards={shards}, burst={burst}, idle={}, durable_data={durable_data})…",
         idle.label()
     );
     let logic = Arc::new(RawFileOffload);
     let mut storage_cfg = StorageServerConfig::default();
     storage_cfg.service.idle = idle;
+    storage_cfg.service.durable_data = durable_data;
     let storage = StorageServer::build(storage_cfg, Some(logic.clone()))?;
+    print_recovery(&storage.front_end());
 
     // Host application with a pre-filled data file.
     let file_bytes: u64 = 32 << 20;
@@ -144,6 +153,32 @@ fn serve(args: &[String]) -> anyhow::Result<()> {
     print_cpu("file-service", &server.storage.cpu_stats());
     print_latency(&server.storage.latency_stats());
     Ok(())
+}
+
+/// Operator-facing mount summary: what crash recovery observed and
+/// repaired, fetched over the control plane the same way an external
+/// operator tool would (`DdsClient::recovery_report`).
+fn print_recovery(fe: &dds::filelib::DdsClient) {
+    match fe.recovery_report() {
+        Ok(Some(r)) => println!(
+            "recovery: mounted at seq {} (slots valid {:?}, superblock seq {:?}); \
+             journal: {} records / {} commits{}; data path: {} remaps replayed, \
+             {} torn extents quarantined{}{}{}",
+            r.recovered_seq,
+            r.valid_slots,
+            r.superblock_seq,
+            r.journal_records,
+            r.journal_commits,
+            if r.torn_tail { ", torn tail" } else { "" },
+            r.remaps_applied,
+            r.quarantined_extents,
+            if r.rolled_forward { "; rolled forward" } else { "" },
+            if r.repaired_superblock { "; superblock repaired" } else { "" },
+            if r.counters_clamped { "; id counters clamped" } else { "" },
+        ),
+        Ok(None) => println!("recovery: freshly formatted volume (no crash recovery ran)"),
+        Err(e) => println!("recovery: report unavailable ({e})"),
+    }
 }
 
 /// The tracked tail-latency trajectory (p50/p99/p99.9) at exit.

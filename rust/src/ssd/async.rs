@@ -831,6 +831,76 @@ mod tests {
         assert_eq!(aio.in_flight(), 0);
     }
 
+    /// Satellite (crash-matrix accounting): the device write trace —
+    /// what `arm_power_cut` crash points are enumerated from — must see
+    /// every write of a `submit_batch` burst, in submission order. The
+    /// batched submit path postdates the original trace plumbing; a
+    /// burst write missing from the trace would be a crash point the
+    /// matrix silently never tests.
+    #[test]
+    fn batched_writes_all_appear_in_trace_in_submission_order() {
+        let ssd = Arc::new(Ssd::new(1 << 20, 512));
+        let aio = AsyncSsd::new_inline(ssd.clone());
+        ssd.start_write_trace();
+        // Mix a single submit between two bursts: the trace must be the
+        // exact submission-order concatenation.
+        let mut burst1: Vec<(u64, SsdOp)> = (0..4u64)
+            .map(|i| (i, SsdOp::Write { addr: i * 512, data: vec![1u8; 100].into() }))
+            .collect();
+        aio.submit_batch(&mut burst1);
+        aio.submit(99, SsdOp::Write { addr: 8192, data: vec![2u8; 7].into() });
+        // Reads must not pollute the write trace.
+        aio.submit(98, SsdOp::Read { addr: 0, len: 64 });
+        let mut burst2: Vec<(u64, SsdOp)> = (0..3u64)
+            .map(|i| (100 + i, SsdOp::Write { addr: 16384 + i * 512, data: vec![3u8; 50].into() }))
+            .collect();
+        aio.submit_batch(&mut burst2);
+        let trace = ssd.take_write_trace();
+        let expect: Vec<(u64, usize)> = vec![
+            (0, 100),
+            (512, 100),
+            (1024, 100),
+            (1536, 100),
+            (8192, 7),
+            (16384, 50),
+            (16896, 50),
+            (17408, 50),
+        ];
+        assert_eq!(trace, expect, "every batched write traced, in submission order");
+        while aio.poll(64).len() < 8 {}
+    }
+
+    /// Satellite: a cut index landing *inside* a batch tears exactly
+    /// that write — the crash matrix's (write index, byte prefix)
+    /// coordinates are valid inside bursts, not just between them.
+    #[test]
+    fn power_cut_inside_a_batch_tears_the_indexed_write() {
+        let ssd = Arc::new(Ssd::new(1 << 20, 512));
+        let aio = AsyncSsd::new_inline(ssd.clone());
+        // Burst of 4 writes; cut write index 2 at 5 bytes.
+        ssd.arm_power_cut(2, 5);
+        let mut ops: Vec<(u64, SsdOp)> = (0..4u64)
+            .map(|i| (i, SsdOp::Write { addr: i * 512, data: vec![(i + 1) as u8; 64].into() }))
+            .collect();
+        aio.submit_batch(&mut ops);
+        let mut done = aio.poll(16);
+        done.sort_by_key(|c| c.tag);
+        assert_eq!(done.len(), 4);
+        assert!(done[0].result.is_ok());
+        assert!(done[1].result.is_ok());
+        assert_eq!(done[2].result, Err(SsdError::PowerLost), "cut write errors");
+        assert_eq!(done[3].result, Err(SsdError::PowerLost), "device dead after the cut");
+        ssd.power_restore();
+        let mut buf = [0u8; 64];
+        ssd.read_into(512, &mut buf).unwrap();
+        assert_eq!(buf, [2u8; 64], "write before the cut fully landed");
+        ssd.read_into(1024, &mut buf).unwrap();
+        assert_eq!(&buf[..5], &[3u8; 5]);
+        assert!(buf[5..].iter().all(|&b| b == 0), "torn prefix only");
+        ssd.read_into(1536, &mut buf).unwrap();
+        assert!(buf.iter().all(|&b| b == 0), "write after the cut never landed");
+    }
+
     /// `poll_into` appends into the caller's buffer and reports the
     /// count — steady-state polling with a recycled Vec allocates
     /// nothing and drops nothing.

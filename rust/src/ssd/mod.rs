@@ -51,12 +51,36 @@ impl std::error::Error for SsdError {}
 /// Power-cut / write-trace state behind [`Ssd::arm_power_cut`].
 #[derive(Default)]
 struct PowerInner {
-    /// `(write index since arm, bytes that persist)` — the pending cut.
-    cut: Option<(u64, usize)>,
+    /// `(write index since arm, bytes that persist)` — the pending
+    /// cuts, possibly several. Every listed write tears; the
+    /// highest-indexed one also kills the device (the earlier ones
+    /// model a volatile write cache acking writes the medium never
+    /// fully absorbed before the same power loss).
+    cuts: Vec<(u64, usize)>,
+    /// Torn-sector mode: a torn write persists only down to a sector
+    /// boundary and the sector the cut landed in fills with
+    /// deterministic garbage instead of a clean prefix — the shape a
+    /// real NVMe device presents when a program operation dies
+    /// mid-sector. Checksums, not prefix structure, must catch it.
+    torn_sector: bool,
     /// Writes seen since the last arm / trace start.
     writes_seen: u64,
     /// `(addr, len)` per write while tracing (crash-point enumeration).
     trace: Option<Vec<(u64, usize)>>,
+}
+
+/// How [`Ssd::power_gate`] says a write must land.
+struct Tear {
+    /// Bytes of the write that persist.
+    persist: usize,
+    /// Fill the sector after the persisted prefix with deterministic
+    /// garbage (torn-sector mode).
+    garbage: bool,
+    /// This is the highest-indexed armed cut: the device dies and the
+    /// write errors with [`SsdError::PowerLost`]. Non-fatal tears
+    /// return `Ok` to the caller — the write-cache ack the crash later
+    /// betrays.
+    fatal: bool,
 }
 
 /// In-memory NVMe-like block device.
@@ -94,8 +118,24 @@ impl Ssd {
     /// [`Self::power_restore`]. `cut_bytes >=` the write's length
     /// means the write completes and power dies right after it.
     pub fn arm_power_cut(&self, cut_write: u64, cut_bytes: usize) {
+        self.arm_power_cuts(&[(cut_write, cut_bytes)], false);
+    }
+
+    /// Arm several interleaved tears from one power event: every
+    /// `(write index, persisted bytes)` listed tears, and the
+    /// highest-indexed one kills the device. The earlier tears return
+    /// `Ok` to their callers — a volatile write cache acked them, the
+    /// medium only kept a prefix — which is exactly the lie the
+    /// durability contract has to survive. With `torn_sector` set,
+    /// each tear persists only down to a sector boundary and fills the
+    /// cut sector with deterministic garbage (`0xA5 ^ offset`), so
+    /// recovery must rely on checksums rather than clean-prefix
+    /// structure.
+    pub fn arm_power_cuts(&self, cuts: &[(u64, usize)], torn_sector: bool) {
+        assert!(!cuts.is_empty(), "arming zero cuts is a no-op bug");
         let mut p = self.power.lock().unwrap();
-        p.cut = Some((cut_write, cut_bytes));
+        p.cuts = cuts.to_vec();
+        p.torn_sector = torn_sector;
         p.writes_seen = 0;
         self.dead.store(false, Ordering::SeqCst);
         self.power_hook.store(true, Ordering::SeqCst);
@@ -105,7 +145,8 @@ impl Ssd {
     /// bytes that survived the cut stay exactly as they landed.
     pub fn power_restore(&self) {
         let mut p = self.power.lock().unwrap();
-        p.cut = None;
+        p.cuts.clear();
+        p.torn_sector = false;
         self.dead.store(false, Ordering::SeqCst);
         self.power_hook.store(p.trace.is_some(), Ordering::SeqCst);
     }
@@ -128,26 +169,30 @@ impl Ssd {
     pub fn take_write_trace(&self) -> Vec<(u64, usize)> {
         let mut p = self.power.lock().unwrap();
         let t = p.trace.take().unwrap_or_default();
-        self.power_hook.store(p.cut.is_some(), Ordering::SeqCst);
+        self.power_hook.store(!p.cuts.is_empty(), Ordering::SeqCst);
         t
     }
 
-    /// Count/trace this write; `Some(n)` means it is the armed cut and
-    /// only its first `n` bytes persist.
-    fn power_gate(&self, addr: u64, len: usize) -> Option<usize> {
+    /// Count/trace this write; `Some(tear)` means it is an armed cut
+    /// and lands torn as the [`Tear`] describes.
+    fn power_gate(&self, addr: u64, len: usize) -> Option<Tear> {
         let mut p = self.power.lock().unwrap();
         let w = p.writes_seen;
         p.writes_seen += 1;
         if let Some(t) = p.trace.as_mut() {
             t.push((addr, len));
         }
-        if let Some((cut_w, cut_b)) = p.cut {
-            if w == cut_w {
-                self.dead.store(true, Ordering::SeqCst);
-                return Some(cut_b.min(len));
-            }
+        let cut_b = p.cuts.iter().find(|(cw, _)| *cw == w).map(|(_, cb)| *cb)?;
+        let fatal = p.cuts.iter().all(|(cw, _)| *cw <= w);
+        if fatal {
+            self.dead.store(true, Ordering::SeqCst);
         }
-        None
+        let mut persist = cut_b.min(len);
+        let garbage = p.torn_sector && persist < len;
+        if garbage {
+            persist -= persist % self.block_size;
+        }
+        Some(Tear { persist, garbage, fatal })
     }
 
     pub fn capacity(&self) -> u64 {
@@ -186,12 +231,28 @@ impl Ssd {
             return Err(SsdError::PowerLost);
         }
         if self.power_hook.load(Ordering::Relaxed) {
-            if let Some(n) = self.power_gate(addr, buf.len()) {
-                // Torn write: the first `n` bytes land, the rest never
-                // make it to the medium.
+            if let Some(t) = self.power_gate(addr, buf.len()) {
+                // Torn write: the persisted prefix lands, the rest
+                // never makes it to the medium.
                 let mut data = self.data.write().unwrap();
-                data[addr as usize..addr as usize + n].copy_from_slice(&buf[..n]);
-                return Err(SsdError::PowerLost);
+                data[addr as usize..addr as usize + t.persist]
+                    .copy_from_slice(&buf[..t.persist]);
+                if t.garbage {
+                    // Torn-sector mode: the sector the cut landed in
+                    // holds deterministic garbage, not old or new
+                    // bytes.
+                    let end = (t.persist + self.block_size).min(buf.len());
+                    for i in t.persist..end {
+                        data[addr as usize + i] = 0xA5 ^ (i as u8);
+                    }
+                }
+                drop(data);
+                if t.fatal {
+                    return Err(SsdError::PowerLost);
+                }
+                // Non-fatal tear: the volatile write cache acks it —
+                // the caller learns nothing until recovery.
+                return Ok(());
             }
         }
         let mut data = self.data.write().unwrap();
@@ -264,6 +325,55 @@ mod tests {
         let mut buf = [0u8; 16];
         ssd.read_into(0, &mut buf).unwrap();
         assert_eq!(buf, [7u8; 16]);
+    }
+
+    #[test]
+    fn multi_cut_tears_earlier_writes_silently_and_dies_on_the_last() {
+        let ssd = Ssd::new(1 << 16, 512);
+        // Writes 0 and 2 tear; write 2 is the highest-indexed cut and
+        // kills the device. Write 1 is untouched.
+        ssd.arm_power_cuts(&[(0, 4), (2, 8)], false);
+        assert_eq!(ssd.write_from(0, &[1u8; 16]), Ok(()), "cached ack despite the tear");
+        assert_eq!(ssd.write_from(512, &[2u8; 16]), Ok(()));
+        assert_eq!(ssd.write_from(1024, &[3u8; 16]), Err(SsdError::PowerLost));
+        assert!(ssd.is_dead());
+        ssd.power_restore();
+        let mut buf = [0u8; 16];
+        ssd.read_into(0, &mut buf).unwrap();
+        assert_eq!(&buf[..4], &[1u8; 4]);
+        assert!(buf[4..].iter().all(|&b| b == 0), "acked write silently lost its tail");
+        ssd.read_into(512, &mut buf).unwrap();
+        assert_eq!(buf, [2u8; 16], "unlisted write is intact");
+        ssd.read_into(1024, &mut buf).unwrap();
+        assert_eq!(&buf[..8], &[3u8; 8]);
+        assert!(buf[8..].iter().all(|&b| b == 0));
+    }
+
+    #[test]
+    fn torn_sector_mode_persists_to_sector_boundary_and_garbages_the_cut_sector() {
+        let ssd = Ssd::new(1 << 16, 512);
+        // Cut at byte 700 of a 1536-byte write: persists rounds down to
+        // 512, sector [512, 1024) fills with garbage, the rest never
+        // lands.
+        ssd.arm_power_cuts(&[(0, 700)], true);
+        assert_eq!(ssd.write_from(0, &vec![7u8; 1536]), Err(SsdError::PowerLost));
+        ssd.power_restore();
+        let mut buf = vec![0u8; 1536];
+        ssd.read_into(0, &mut buf).unwrap();
+        assert_eq!(&buf[..512], &vec![7u8; 512][..], "prefix lands sector-aligned");
+        for (i, &b) in buf[512..1024].iter().enumerate() {
+            let off = 512 + i;
+            assert_eq!(b, 0xA5 ^ (off as u8), "cut sector holds deterministic garbage");
+        }
+        assert!(buf[1024..].iter().all(|&b| b == 0), "sectors past the cut never landed");
+        // Same schedule, same garbage: the matrix replays byte-exact.
+        let ssd2 = Ssd::new(1 << 16, 512);
+        ssd2.arm_power_cuts(&[(0, 700)], true);
+        let _ = ssd2.write_from(0, &vec![7u8; 1536]);
+        ssd2.power_restore();
+        let mut buf2 = vec![0u8; 1536];
+        ssd2.read_into(0, &mut buf2).unwrap();
+        assert_eq!(buf, buf2);
     }
 
     #[test]

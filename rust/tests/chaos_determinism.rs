@@ -8,7 +8,7 @@
 //! one interleaving is meaningful — the SSD/engine/stall planes consume
 //! decisions in request order and replay exactly.
 
-use dds::fault::{run_scenario, Scenario};
+use dds::fault::{data_crash, run_scenario, Scenario};
 
 #[path = "chaos_common.rs"]
 mod chaos_common;
@@ -45,6 +45,38 @@ fn same_seed_replays_identical_schedule_and_outcomes() {
             a.outcomes.len()
         );
     }
+}
+
+/// The data-crash scenario's same-seed contract: identical fault
+/// schedule, identical per-WRITE outcome trace, identical recovered
+/// file sizes and recovery report, run after run. The WRITE driver is
+/// deliberately serialized so the device write schedule (and therefore
+/// the cut point's meaning) cannot drift between runs.
+#[test]
+fn data_crash_same_seed_replays_identical_outcome_trace() {
+    let seed = chaos_seed();
+    let a = data_crash(seed).expect("data_crash run 1");
+    let b = data_crash(seed).expect("data_crash run 2");
+    assert_eq!(a.schedule, b.schedule, "seed {seed}: fault schedule not reproducible");
+    assert_eq!(
+        (a.cut_write, a.cut_bytes),
+        (b.cut_write, b.cut_bytes),
+        "seed {seed}: cut point not seeded"
+    );
+    assert_eq!(a.outcomes, b.outcomes, "seed {seed}: WRITE outcome trace not reproducible");
+    assert_eq!(
+        (a.writes_acked, a.writes_failed, a.ambiguous_tenant),
+        (b.writes_acked, b.writes_failed, b.ambiguous_tenant),
+        "seed {seed}: outcome totals drifted"
+    );
+    assert_eq!(a.recovered_sizes, b.recovered_sizes, "seed {seed}: recovered state drifted");
+    assert_eq!(a.recovery, b.recovery, "seed {seed}: recovery report not deterministic");
+    println!(
+        "data_crash: replayed {} outcomes identically (cut write {} byte {})",
+        a.outcomes.len(),
+        a.cut_write,
+        a.cut_bytes
+    );
 }
 
 /// Different seeds must produce different schedules — the seed is the

@@ -19,9 +19,21 @@
 //! * a re-crash *during recovery's own repair writes* recovers to the
 //!   identical state (idempotent replay).
 //!
+//! The **WRITE crash matrix** applies the same discipline to the
+//! data path: a seeded mixed read/write/grow sequence of *durable*
+//! WRITEs (`write_durable`: redirect-on-write shadows + journaled
+//! remap commit) is traced, every byte prefix of every device write
+//! becomes a crash point, and the recovered image must equal the
+//! committed byte model **exactly** — every acked WRITE byte-exact,
+//! the in-flight WRITE visible iff its remap record (the ack point)
+//! fully persisted, never a mix of old and new bytes, and no shadow
+//! segment leaked.
+//!
 //! `DDS_CRASH_STRIDE` (default 1 = every byte) coarsens the byte
 //! enumeration for quick local runs; `DDS_CHAOS_SEED` picks the op
-//! sequence.
+//! sequence. On a matrix failure the failing crash point and the full
+//! device write schedule are written to `$DDS_CRASH_ARTIFACT` (when
+//! set) so CI can upload a reproducer.
 
 use std::sync::Arc;
 
@@ -401,4 +413,321 @@ fn recrash_during_recovery_replays_idempotently() {
     }
     assert!(outer > 0, "no superblock writes in the trace?");
     println!("re-crash enumeration: {outer} roll-forward points, {inner_points} recovery cuts");
+}
+
+// ---------------------------------------------------------------------
+// WRITE crash matrix: every byte prefix of the durable data path
+// ---------------------------------------------------------------------
+
+/// Tiny segments keep every shadow pre-image (and therefore every data
+/// crash point's byte enumeration) cheap while still forcing
+/// multi-extent redirects; 64 segments is exactly the trailer table's
+/// capacity at this segment size.
+const DSEG: u64 = 1 << 10;
+const DSSD_BYTES: u64 = 64 << 10;
+/// Durable WRITE attempts per run (the first two are the base fills).
+const DOPS: usize = 10;
+/// Base image per file — 1.5 segments, so in-place writes can straddle
+/// a segment boundary (two shadows, one commit record).
+const DFILL: usize = (DSEG + DSEG / 2) as usize;
+/// Ops in the journal-wrap run — enough small remap records to wrap
+/// the one-segment journal and force wrap-guard checkpoints.
+const WRAP_OPS: usize = 48;
+
+fn dcfg() -> FsConfig {
+    FsConfig { segment_size: DSEG }
+}
+
+fn splice(image: &mut Vec<u8>, offset: u64, data: &[u8]) {
+    let end = offset as usize + data.len();
+    if image.len() < end {
+        image.resize(end, 0); // growth holes read as zeros (prepare zero-fills)
+    }
+    image[offset as usize..end].copy_from_slice(data);
+}
+
+/// Byte-image model of a durable-WRITE run. `snapshots[j]` is every
+/// tracked file's contents after the first `j` WRITEs applied; entry
+/// `acked + 1` (always present when an op failed) is the image the
+/// in-flight op would have committed.
+struct DataRun {
+    snapshots: Vec<Vec<Vec<u8>>>,
+    acked: usize,
+}
+
+/// Deterministic payload for op `i` — recovery verification recomputes
+/// expected images from `(seed, op, offset)` alone.
+fn dpattern(seed: u64, i: usize, offset: u64, len: u64) -> Vec<u8> {
+    (0..len).map(|j| ((seed ^ (i as u64).wrapping_mul(31) ^ (offset + j)) % 253) as u8).collect()
+}
+
+/// Committed metadata bootstrap for the data matrix: one dir, the
+/// tracked files, a single sync. Crash points start after this, so
+/// every point's recovered namespace is fixed and only data moves.
+fn data_bootstrap(fs: &mut DpuFs, names: &[&str]) -> Vec<FileId> {
+    let d = fs.create_directory("d").expect("fresh fs");
+    let ids = names.iter().map(|n| fs.create_file(d, n).expect("fresh fs")).collect();
+    fs.sync_metadata().expect("bootstrap sync runs pre-cut");
+    ids
+}
+
+/// The seeded durable WRITE mix: base fills, in-place overwrites,
+/// segment-boundary straddles, and hole-leaving growth. Stops at the
+/// first device error — the armed cut firing.
+fn apply_data_ops(fs: &mut DpuFs, files: &[FileId], seed: u64) -> DataRun {
+    let mut rng = Rng::new(seed ^ 0xDA7A_4002);
+    let mut images: Vec<Vec<u8>> = vec![Vec::new(); files.len()];
+    let mut snapshots = vec![images.clone()];
+    let mut acked = 0usize;
+    for i in 0..DOPS {
+        let (f, offset, len) = if i < files.len() {
+            (i, 0u64, DFILL as u64)
+        } else {
+            let f = rng.next_range(files.len() as u64) as usize;
+            let len = 1 + rng.next_range(600);
+            let cur = images[f].len() as u64;
+            let offset = match rng.next_range(10) {
+                // In-place overwrite inside the committed image.
+                0..=5 => rng.next_range(cur.saturating_sub(len).max(1)),
+                // Straddle the first segment boundary.
+                6..=7 => DSEG.saturating_sub(len / 2),
+                // Growth past EOF, sometimes leaving a zero hole.
+                _ => cur + rng.next_range(DSEG / 2),
+            };
+            (f, offset, len)
+        };
+        let data = dpattern(seed, i, offset, len);
+        let mut w = images.clone();
+        splice(&mut w[f], offset, &data);
+        snapshots.push(w.clone());
+        if fs.write_durable(files[f], offset, &data).is_err() {
+            return DataRun { snapshots, acked };
+        }
+        images = w;
+        acked += 1;
+    }
+    DataRun { snapshots, acked }
+}
+
+/// A file's recovered bytes, straight off the device through its
+/// extent mapping.
+fn read_file_bytes(fs: &DpuFs, ssd: &Ssd, id: FileId, ctx: &str) -> Vec<u8> {
+    let size = fs.file_meta(id).unwrap_or_else(|e| panic!("{ctx}: file lost: {e:?}")).size;
+    let mut buf = vec![0u8; size as usize];
+    fs.read(id, 0, &mut buf).unwrap_or_else(|e| panic!("{ctx}: read failed: {e:?}"));
+    buf
+}
+
+/// Matrix failure: persist the failing crash point + the device write
+/// schedule for CI artifact upload (satellite of the randomized-seed
+/// job), then panic with the human-readable verdict.
+fn matrix_fail(seed: u64, k: u64, n: usize, trace: &[(u64, usize)], msg: &str) -> ! {
+    if let Ok(path) = std::env::var("DDS_CRASH_ARTIFACT") {
+        let mut s = format!(
+            "# failing WRITE crash point (reproduce: DDS_CHAOS_SEED={seed} \
+             DDS_CRASH_STRIDE=1 cargo test --test crash_recovery)\n\
+             seed={seed}\ncut_write={k}\ncut_bytes={n}\nreason={msg}\n\
+             # device write schedule: index addr len\n"
+        );
+        for (i, (addr, len)) in trace.iter().enumerate() {
+            s.push_str(&format!("{i} {addr} {len}\n"));
+        }
+        let _ = std::fs::write(&path, s);
+    }
+    panic!("{msg}");
+}
+
+/// One data crash point, with an **exact** expectation: the in-flight
+/// WRITE is visible iff the cut landed on its remap-record append
+/// (journal segment) and persisted every byte — the append IS the ack
+/// point, so any shorter prefix anywhere leaves the WRITE invisible.
+fn check_data_crash_point(seed: u64, k: u64, n: usize, trace: &[(u64, usize)]) {
+    let ssd = Arc::new(Ssd::new(DSSD_BYTES, 512));
+    let mut fs = DpuFs::format(ssd.clone(), dcfg()).unwrap();
+    let files = data_bootstrap(&mut fs, &["f0", "f1"]);
+    ssd.arm_power_cut(k, n);
+    let run = apply_data_ops(&mut fs, &files, seed);
+    drop(fs);
+    ssd.power_restore();
+
+    let ctx = format!("data matrix: seed {seed}, cut (write {k}, byte {n})");
+    if run.acked >= DOPS {
+        matrix_fail(seed, k, n, trace, &format!("{ctx}: armed cut never fired"));
+    }
+    let (addr, wlen) = trace[k as usize];
+    let append_persisted = addr >= DSEG && addr < 2 * DSEG && n == wlen;
+    let committed = run.acked + if append_persisted { 1 } else { 0 };
+    let want = &run.snapshots[committed];
+
+    let (fs, _report) = DpuFs::mount_with_report(ssd.clone(), dcfg())
+        .unwrap_or_else(|e| matrix_fail(seed, k, n, trace, &format!("{ctx}: mount failed: {e}")));
+    for (fi, id) in files.iter().enumerate() {
+        let got = read_file_bytes(&fs, &ssd, *id, &ctx);
+        if got != want[fi] {
+            let other = &run.snapshots[run.acked + 1 - (committed - run.acked)][fi];
+            matrix_fail(
+                seed,
+                k,
+                n,
+                trace,
+                &format!(
+                    "{ctx}: torn-write contract violated on f{fi}: recovered {} bytes, \
+                     expected the {} image ({} bytes{}) — acked WRITE lost, un-acked \
+                     WRITE surfaced, or a byte mix",
+                    got.len(),
+                    if append_persisted { "committed+in-flight" } else { "committed" },
+                    want[fi].len(),
+                    if got == *other { "; matches the OTHER side of the in-flight op" } else { "" },
+                ),
+            );
+        }
+    }
+    // Structural invariants: mapping lengths, segment uniqueness,
+    // bitmap accounting (no leaked shadow segments), id counters.
+    let model = MetaModel {
+        dirs: vec!["d".into()],
+        files: files
+            .iter()
+            .enumerate()
+            .map(|(fi, _)| ("d".to_string(), format!("f{fi}"), want[fi].len() as u64))
+            .collect(),
+    };
+    verify_recovered_fs(&fs, &model, &ctx)
+        .unwrap_or_else(|e| matrix_fail(seed, k, n, trace, &e.to_string()));
+}
+
+/// THE data-path acceptance test: every SSD-write prefix of the seeded
+/// durable WRITE sequence is a crash point, and every one recovers to
+/// the exact committed byte image.
+#[test]
+fn write_crash_matrix_recovers_every_byte_prefix() {
+    let seed = chaos_seed();
+    // Scout pass: learn the deterministic durable-write schedule, and
+    // read back every committed image (the "read" leg of the mix).
+    let ssd = Arc::new(Ssd::new(DSSD_BYTES, 512));
+    let mut fs = DpuFs::format(ssd.clone(), dcfg()).unwrap();
+    let files = data_bootstrap(&mut fs, &["f0", "f1"]);
+    ssd.start_write_trace();
+    let scout = apply_data_ops(&mut fs, &files, seed);
+    let trace = ssd.take_write_trace();
+    assert_eq!(scout.acked, DOPS, "scout pass must run fault-free");
+    for (fi, id) in files.iter().enumerate() {
+        let img = &scout.snapshots[DOPS][fi];
+        let mut buf = vec![0u8; img.len()];
+        fs.read(*id, 0, &mut buf).expect("clean-run read");
+        assert_eq!(&buf, img, "clean-run read-back mismatch on f{fi}");
+    }
+    drop(fs);
+    // Floor: every op writes at least a shadow pre-image, a trailer,
+    // and the remap append.
+    assert!(trace.len() >= 3 * DOPS, "durable path too quiet: {} writes", trace.len());
+
+    let stride = stride();
+    let (mut points, mut committed_flips) = (0u64, 0u64);
+    for (k, &(_, len)) in trace.iter().enumerate() {
+        let mut n = 0usize;
+        loop {
+            check_data_crash_point(seed, k as u64, n, &trace);
+            points += 1;
+            if n >= len {
+                break;
+            }
+            n = (n + stride).min(len);
+        }
+        let (addr, _) = trace[k];
+        committed_flips += (addr >= DSEG && addr < 2 * DSEG) as u64;
+    }
+    println!(
+        "WRITE crash matrix: {} writes, {points} crash points (stride {stride}), \
+         {committed_flips} ack-point writes",
+        trace.len()
+    );
+    assert!(committed_flips > 0, "no remap appends in the trace?");
+}
+
+/// Satellite regression: a power cut during a **journal wrap** while a
+/// data remap record is in flight. The wrap guard checkpoints the
+/// metadata image (a superblock-slot write) *before* burning the
+/// commit sequence, so a cut anywhere in that window — including mid-
+/// checkpoint — must roll the in-flight WRITE back cleanly: committed
+/// bytes intact, superseded shadows reclaimed, bitmap equal to the
+/// model.
+#[test]
+fn journal_wrap_crash_with_inflight_remap_rolls_back_cleanly() {
+    let seed = chaos_seed();
+
+    fn apply_wrap_ops(fs: &mut DpuFs, file: FileId, seed: u64) -> DataRun {
+        let mut rng = Rng::new(seed ^ 0xDA7A_4003);
+        let mut image: Vec<u8> = Vec::new();
+        let mut snapshots = vec![vec![image.clone()]];
+        let mut acked = 0usize;
+        for i in 0..WRAP_OPS {
+            let (offset, len) = if i == 0 {
+                (0u64, DFILL as u64)
+            } else {
+                let len = 1 + rng.next_range(96);
+                (rng.next_range(image.len() as u64 + 32), len)
+            };
+            let data = dpattern(seed, i, offset, len);
+            let mut w = image.clone();
+            splice(&mut w, offset, &data);
+            snapshots.push(vec![w.clone()]);
+            if fs.write_durable(file, offset, &data).is_err() {
+                return DataRun { snapshots, acked };
+            }
+            image = w;
+            acked += 1;
+        }
+        DataRun { snapshots, acked }
+    }
+
+    // Scout: find the wrap-guard checkpoint writes. Post-bootstrap the
+    // op mix never syncs metadata, so every superblock-segment write in
+    // the trace IS a wrap checkpoint with a remap record in flight.
+    let ssd = Arc::new(Ssd::new(DSSD_BYTES, 512));
+    let mut fs = DpuFs::format(ssd.clone(), dcfg()).unwrap();
+    let file = data_bootstrap(&mut fs, &["w"])[0];
+    ssd.start_write_trace();
+    let scout = apply_wrap_ops(&mut fs, file, seed);
+    let trace = ssd.take_write_trace();
+    drop(fs);
+    assert_eq!(scout.acked, WRAP_OPS, "scout pass must run fault-free");
+    let wraps: Vec<usize> = trace
+        .iter()
+        .enumerate()
+        .filter(|&(_, &(addr, _))| addr < DSEG)
+        .map(|(i, _)| i)
+        .collect();
+    assert!(!wraps.is_empty(), "{WRAP_OPS} remap records never wrapped the journal");
+
+    for &k in &wraps {
+        let len = trace[k].1;
+        for n in [0, len / 2, len] {
+            let ctx = format!("wrap crash: seed {seed}, checkpoint write {k}, byte {n}");
+            let ssd = Arc::new(Ssd::new(DSSD_BYTES, 512));
+            let mut fs = DpuFs::format(ssd.clone(), dcfg()).unwrap();
+            let file = data_bootstrap(&mut fs, &["w"])[0];
+            ssd.arm_power_cut(k as u64, n);
+            let run = apply_wrap_ops(&mut fs, file, seed);
+            drop(fs);
+            ssd.power_restore();
+            assert!(run.acked < WRAP_OPS, "{ctx}: cut never fired");
+
+            // The torn write is the checkpoint, never the remap append:
+            // the in-flight WRITE must be invisible at every prefix.
+            let (fs, _) = DpuFs::mount_with_report(ssd.clone(), dcfg())
+                .unwrap_or_else(|e| panic!("{ctx}: mount failed: {e}"));
+            let got = read_file_bytes(&fs, &ssd, file, &ctx);
+            assert_eq!(
+                got, run.snapshots[run.acked][0],
+                "{ctx}: in-flight WRITE not rolled back to the committed image"
+            );
+            let model = MetaModel {
+                dirs: vec!["d".into()],
+                files: vec![("d".into(), "w".into(), got.len() as u64)],
+            };
+            verify_recovered_fs(&fs, &model, &ctx).unwrap_or_else(|e| panic!("{e}"));
+        }
+    }
+    println!("journal-wrap crash: {} checkpoint writes × 3 prefixes recovered", wraps.len());
 }
