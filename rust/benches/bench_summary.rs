@@ -11,8 +11,11 @@
 //! `BENCH_latency.json`; and sweeps the fanout plane — ops/s, director
 //! p99 and post-workload idle busy fraction at 100 / 1k / 10k
 //! concurrent flows over a zipfian 8-tenant mix — into
-//! `BENCH_fanout.json`, so CI can archive the perf trajectory of all
-//! five planes per commit.
+//! `BENCH_fanout.json`; and sweeps the caching plane — steady-state
+//! zipfian hit ratio, ops/s and bytes served from the DPU read-cache
+//! tier at three tier sizes, with the copy ledger proving the hit path
+//! is zero-copy — into `BENCH_cache.json`, so CI can archive the perf
+//! trajectory of all six planes per commit.
 //!
 //! Smoke mode is the default (seconds, not minutes); tune with:
 //!   DDS_BENCH_READS   probe reads per mode        (default 2000)
@@ -29,6 +32,9 @@
 //!                       phases, µs (default 200000)
 //!   DDS_BENCH_FANOUT_FLOWS  comma list of flow counts (default "100,1000,10000")
 //!   DDS_BENCH_FANOUT_OUT    fanout output            (default target/BENCH_fanout.json)
+//!   DDS_BENCH_CACHE_MB    comma list of tier sizes, MiB (default "1,2,8")
+//!   DDS_BENCH_CACHE_READS measured reads per tier size  (default 6000)
+//!   DDS_BENCH_CACHE_OUT   cache output              (default target/BENCH_cache.json)
 //!   DDS_BENCH_STRICT=1  make the CPU-plane and latency shape checks
 //!                       fatal (idle busy fractions, 5% saturated
 //!                       parity, latency p99 ceiling); default is
@@ -60,7 +66,9 @@ use dds::director::{AppSignature, TenantPlaneConfig};
 use dds::dpufs::{DpuFs, FsConfig};
 use dds::fileservice::FileServiceConfig;
 use dds::idle::IdlePolicy;
-use dds::metrics::{probe_engine_read_path, CpuStats, ZeroCopyProbe};
+use dds::metrics::{
+    probe_cache_tier, probe_engine_read_path, CacheTierProbe, CpuStats, ZeroCopyProbe,
+};
 use dds::net::FiveTuple;
 use dds::offload::RawFileOffload;
 use dds::proto::{AppRequest, NetMsg, NetResp};
@@ -608,6 +616,25 @@ fn cpu_point_json(p: &CpuPoint) -> String {
     )
 }
 
+fn cache_point_json(p: &CacheTierProbe) -> String {
+    format!(
+        concat!(
+            "{{\"cache_mb\":{},\"reads\":{},\"read_size\":{},\"hit_ratio\":{:.4},",
+            "\"ops_per_sec\":{:.1},\"bytes_served\":{},\"warm_fraction\":{:.4},",
+            "\"bytes_copied\":{},\"heap_allocs\":{}}}"
+        ),
+        p.cache_bytes >> 20,
+        p.reads,
+        p.read_size,
+        p.hit_ratio,
+        p.ops_per_sec,
+        p.bytes_served,
+        p.warm_fraction,
+        p.delta.bytes_copied,
+        p.delta.heap_allocs
+    )
+}
+
 fn probe_json(p: &ZeroCopyProbe) -> String {
     format!(
         concat!(
@@ -800,6 +827,30 @@ fn main() {
     println!("{fanout_json}");
     eprintln!("bench_summary: wrote {fanout_out}");
 
+    // Caching plane: steady-state zipfian hit ratio × ops/s × bytes
+    // served from the DPU read-cache tier at three sizes over an
+    // 8 MiB working set (the largest holds all of it).
+    let cache_out = std::env::var("DDS_BENCH_CACHE_OUT")
+        .unwrap_or_else(|_| "target/BENCH_cache.json".into());
+    let cache_reads = env_u64("DDS_BENCH_CACHE_READS", 6000);
+    let cache_sizes: Vec<u64> = std::env::var("DDS_BENCH_CACHE_MB")
+        .unwrap_or_else(|_| "1,2,8".into())
+        .split(',')
+        .filter_map(|s| s.trim().parse().ok())
+        .collect();
+    let mut cache_points = Vec::new();
+    for &mb in &cache_sizes {
+        eprintln!("bench_summary: cache tier at {mb} MiB ({cache_reads} reads)...");
+        cache_points.push(probe_cache_tier(mb << 20, cache_reads, 4096, 32));
+    }
+    let cache_json = format!(
+        "{{\n  \"bench\": \"cache\",\n  \"smoke\": true,\n  \"points\": [\n    {}\n  ]\n}}\n",
+        cache_points.iter().map(cache_point_json).collect::<Vec<_>>().join(",\n    ")
+    );
+    std::fs::write(&cache_out, &cache_json).expect("write cache summary");
+    println!("{cache_json}");
+    eprintln!("bench_summary: wrote {cache_out}");
+
     // Shape checks: Poll burns the cores at idle, Adaptive gives them
     // back, and Adaptive's saturated throughput stays within 5% of
     // Poll's. All three are wall-clock measurements that scheduler
@@ -853,6 +904,31 @@ fn main() {
             );
         }
     }
+    // Cache-plane shape: bigger tiers must not hit less (zipf over a
+    // fixed working set — CLOCK noise can dent but not invert the
+    // curve), and the whole-working-set point must serve everything.
+    for w in cache_points.windows(2) {
+        check(
+            w[1].hit_ratio >= w[0].hit_ratio - 0.02,
+            format!(
+                "cache sweep not monotone: {} MiB hits {:.4} < {} MiB hits {:.4}",
+                w[1].cache_bytes >> 20,
+                w[1].hit_ratio,
+                w[0].cache_bytes >> 20,
+                w[0].hit_ratio
+            ),
+        );
+    }
+    if let Some(full) = cache_points.iter().find(|p| p.cache_bytes >= 8 << 20) {
+        check(
+            full.hit_ratio >= 0.999,
+            format!(
+                "whole-working-set tier should serve ~every read (hit ratio {:.4})",
+                full.hit_ratio
+            ),
+        );
+    }
+
     // Fanout-plane shape: every point served every tenant, and the
     // readiness plane keeps open-but-idle flows cheap — the busy
     // fraction with the full flow population open but quiet must stay
@@ -890,4 +966,23 @@ fn main() {
          is the ledger still wired?",
         copy.bytes_copied_per_req
     );
+    // And the caching plane's acceptance clause: a tier hit is a
+    // refcount bump, so the measured window must add zero copied bytes
+    // and zero heap allocations at EVERY sweep point (misses ride the
+    // pooled zero-copy path; hits must not even touch the pool).
+    for p in &cache_points {
+        assert_eq!(
+            p.delta.bytes_copied, 0,
+            "cache sweep at {} MiB copied bytes on the read path: {:?}",
+            p.cache_bytes >> 20,
+            p.delta
+        );
+        assert_eq!(
+            p.delta.heap_allocs, 0,
+            "cache sweep at {} MiB hit the heap: {:?}",
+            p.cache_bytes >> 20,
+            p.delta
+        );
+        assert!(p.hit_ratio > 0.0, "tier never hit at {} MiB", p.cache_bytes >> 20);
+    }
 }

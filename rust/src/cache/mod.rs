@@ -19,11 +19,13 @@
 //! (file service) usage.
 
 mod table;
+mod tier;
 
 pub use table::{
     CacheItem, CacheStats, CuckooCache, DenseTable, EMPTY, H1_MUL, H1_SHIFT, H2_MUL, H2_SHIFT,
     H2_XOR_SHIFT, SLOTS,
 };
+pub use tier::{FillTicket, Probe, ReadCacheTier, TierStats};
 
 #[cfg(test)]
 mod tests {
@@ -131,6 +133,135 @@ mod tests {
         writer.join().unwrap();
         for r in readers {
             assert!(r.join().unwrap() > 0);
+        }
+    }
+
+    /// Seeded churn against a near-capacity table: every insert of a
+    /// fresh key has a real chance of displacing a resident along its
+    /// cuckoo path. Readers hammer the residents the whole time — a
+    /// present key observed in *neither* bucket (the historical
+    /// victim-in-hand window, or the probe-order race the reader-side
+    /// restart covers) trips the assert.
+    #[test]
+    fn get_during_kick_never_false_misses() {
+        use std::collections::VecDeque;
+        use std::sync::atomic::{AtomicBool, Ordering};
+
+        let t = Arc::new(CuckooCache::new(256));
+        let resident: Vec<u64> = (1..=128).collect();
+        for &k in &resident {
+            assert!(t.insert(k, CacheItem::new(k, k, k, k)));
+        }
+        let stop = Arc::new(AtomicBool::new(false));
+        let writer = {
+            let t = t.clone();
+            let stop = stop.clone();
+            std::thread::spawn(move || {
+                // Deterministic key stream (LCG, fixed seed).
+                let mut s = 0x00C0_FFEE_u64;
+                let mut live: VecDeque<u64> = VecDeque::new();
+                let mut kicks_possible = 0u64;
+                while !stop.load(Ordering::Relaxed) {
+                    s = s
+                        .wrapping_mul(6364136223846793005)
+                        .wrapping_add(1442695040888963407);
+                    let k = 1_000 + (s >> 16) % 1_000_000;
+                    if t.insert(k, CacheItem::new(k, k, k, k)) {
+                        live.push_back(k);
+                        kicks_possible += 1;
+                    }
+                    // Churn window keeps the table near capacity (max
+                    // displacement pressure) without pinning it there.
+                    while live.len() > 100 {
+                        t.remove(live.pop_front().unwrap());
+                    }
+                }
+                kicks_possible
+            })
+        };
+        let mut readers = Vec::new();
+        for _ in 0..3 {
+            let t = t.clone();
+            let stop = stop.clone();
+            let resident = resident.clone();
+            readers.push(std::thread::spawn(move || {
+                let mut gets = 0u64;
+                while !stop.load(Ordering::Relaxed) {
+                    for &k in &resident {
+                        let got = t.get(k);
+                        assert!(
+                            got.is_some(),
+                            "false miss: resident key {k} vanished mid-displacement"
+                        );
+                        assert_eq!(got.unwrap().a, k, "wrong item for key {k}");
+                        gets += 1;
+                    }
+                }
+                gets
+            }));
+        }
+        std::thread::sleep(std::time::Duration::from_millis(300));
+        stop.store(true, Ordering::Relaxed);
+        assert!(writer.join().unwrap() > 0);
+        for r in readers {
+            assert!(r.join().unwrap() > 0);
+        }
+    }
+
+    /// Invalidate racing displacement-heavy churn: once `remove(k)`
+    /// returns, no later lookup may see k again (nothing reinserts
+    /// these keys). A resurrected mapping here is exactly the
+    /// stale-read bug the cache tier cannot tolerate.
+    #[test]
+    fn invalidate_during_kick_stays_removed() {
+        use std::collections::VecDeque;
+        use std::sync::atomic::{AtomicBool, Ordering};
+
+        let t = Arc::new(CuckooCache::new(256));
+        let stop = Arc::new(AtomicBool::new(false));
+        // Kick pressure: same churn recipe as above, disjoint key range.
+        let writer = {
+            let t = t.clone();
+            let stop = stop.clone();
+            std::thread::spawn(move || {
+                let mut s = 0xDEAD_BEEF_u64;
+                let mut live: VecDeque<u64> = VecDeque::new();
+                while !stop.load(Ordering::Relaxed) {
+                    s = s
+                        .wrapping_mul(6364136223846793005)
+                        .wrapping_add(1442695040888963407);
+                    let k = 1_000 + (s >> 16) % 1_000_000;
+                    if t.insert(k, CacheItem::new(k, k, k, k)) {
+                        live.push_back(k);
+                    }
+                    while live.len() > 100 {
+                        t.remove(live.pop_front().unwrap());
+                    }
+                }
+            })
+        };
+        // Invalidator: insert a key from a disjoint range, remove it,
+        // and verify it STAYS gone while displacements rage on.
+        let mut dead: Vec<u64> = Vec::new();
+        {
+            let base = 10_000_000u64;
+            for i in 0..2_000u64 {
+                let k = base + i;
+                assert!(t.insert(k, CacheItem::new(k, k, k, k)));
+                // Let the churn writer interleave a few ops.
+                std::thread::yield_now();
+                assert!(t.remove(k));
+                assert!(
+                    t.get(k).is_none(),
+                    "invalidated key {k} resurrected by a concurrent displacement"
+                );
+                dead.push(k);
+            }
+        }
+        stop.store(true, Ordering::Relaxed);
+        writer.join().unwrap();
+        for k in dead {
+            assert!(t.get(k).is_none(), "key {k} came back after the dust settled");
         }
     }
 

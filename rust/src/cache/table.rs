@@ -1,4 +1,20 @@
 //! Cuckoo hash table with per-bucket seqlocks and overflow chains.
+//!
+//! Concurrency contract (the displacement bugs of PR 9 live here):
+//!
+//! * Readers (`get`) are lock-free. A key that is present must be
+//!   observable at every instant — the kick path may *move* it between
+//!   its two buckets, but never through a window where it is in
+//!   neither. Displacements therefore execute as single moves that
+//!   hold BOTH bucket seqlocks (ordered by bucket index), and the
+//!   reader re-validates its first bucket after a double miss: a
+//!   displacement that ran h2→h1 between the two probes is the one
+//!   interleaving per-bucket validation cannot see.
+//! * Writers (`insert`, `remove`, `export_dense`) serialize on
+//!   `write_lock`. An invalidation can therefore never interleave with
+//!   an in-flight displacement of the same key; `remove` additionally
+//!   clears every occurrence in both buckets (slots and chains) so a
+//!   duplicate — however it arose — cannot resurrect a dead mapping.
 
 use std::cell::UnsafeCell;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
@@ -126,43 +142,70 @@ impl CuckooCache {
         (x.wrapping_mul(H2_MUL) >> H2_SHIFT & self.mask) as usize
     }
 
+    /// Seqlock-validated scan of one bucket. Returns the item (if the
+    /// key is present) and the version at which the consistent read
+    /// was taken.
+    fn probe_bucket(&self, bi: usize, key: u64) -> (Option<CacheItem>, u64) {
+        let b = &self.buckets[bi];
+        loop {
+            let v0 = b.version.load(Ordering::Acquire);
+            if v0 & 1 == 1 {
+                std::hint::spin_loop();
+                continue; // write in progress
+            }
+            let mut found: Option<CacheItem> = None;
+            for s in 0..SLOTS {
+                if b.keys[s].load(Ordering::Acquire) == key {
+                    // SAFETY: validated by the seqlock re-check below.
+                    found = Some(unsafe { (*b.items.get())[s] });
+                    break;
+                }
+            }
+            if found.is_none() {
+                // SAFETY: chain reads validated by the version
+                // re-check below; writers only mutate the chain
+                // while the version is odd.
+                let chain = unsafe { &*b.chain.get() };
+                found = chain.iter().find(|(k, _)| *k == key).map(|(_, v)| *v);
+            }
+            let v1 = b.version.load(Ordering::Acquire);
+            if v0 == v1 {
+                return (found, v0);
+            }
+            // Torn read; retry this bucket.
+        }
+    }
+
     /// Lock-free lookup with worst-case-constant bucket probes.
+    ///
+    /// A per-bucket seqlock alone does NOT make the two-bucket probe
+    /// atomic: a displacement that moves the key from its h2 bucket
+    /// into its h1 bucket between our two probes leaves both probes
+    /// individually consistent yet both missing (the probe order
+    /// opposes the move direction). Every displacement bumps both
+    /// bucket versions inside one critical section, so after a double
+    /// miss we re-check the first bucket's version — if it moved, a
+    /// displacement may have raced us and we restart the whole probe.
     pub fn get(&self, key: u64) -> Option<CacheItem> {
         debug_assert_ne!(key, EMPTY);
-        for &bi in &[self.h1(key), self.h2(key)] {
-            let b = &self.buckets[bi];
-            loop {
-                let v0 = b.version.load(Ordering::Acquire);
-                if v0 & 1 == 1 {
-                    std::hint::spin_loop();
-                    continue; // write in progress
-                }
-                let mut found: Option<CacheItem> = None;
-                for s in 0..SLOTS {
-                    if b.keys[s].load(Ordering::Acquire) == key {
-                        // SAFETY: validated by the seqlock re-check below.
-                        found = Some(unsafe { (*b.items.get())[s] });
-                        break;
-                    }
-                }
-                if found.is_none() {
-                    // SAFETY: chain reads validated by the version
-                    // re-check below; writers only mutate the chain
-                    // while the version is odd.
-                    let chain = unsafe { &*b.chain.get() };
-                    found = chain.iter().find(|(k, _)| *k == key).map(|(_, v)| *v);
-                }
-                let v1 = b.version.load(Ordering::Acquire);
-                if v0 == v1 {
-                    if found.is_some() {
-                        return found;
-                    }
-                    break; // consistent miss in this bucket
-                }
-                // Torn read; retry this bucket.
+        let b1 = self.h1(key);
+        let b2 = self.h2(key);
+        loop {
+            let (found, v1) = self.probe_bucket(b1, key);
+            if found.is_some() {
+                return found;
             }
+            if b2 != b1 {
+                let (found, _) = self.probe_bucket(b2, key);
+                if found.is_some() {
+                    return found;
+                }
+            }
+            if self.buckets[b1].version.load(Ordering::Acquire) == v1 {
+                return None; // no displacement raced the probe pair
+            }
+            // b1 changed since we scanned it — restart both probes.
         }
-        None
     }
 
     fn begin_write(b: &Bucket) -> u64 {
@@ -173,6 +216,70 @@ impl CuckooCache {
 
     fn end_write(b: &Bucket) {
         b.version.fetch_add(1, Ordering::AcqRel);
+    }
+
+    /// First free slot of bucket `bi`, if any. Writer-mutex holders
+    /// only (the answer is stable while the mutex is held).
+    fn free_slot(&self, bi: usize) -> Option<usize> {
+        let b = &self.buckets[bi];
+        (0..SLOTS).find(|&s| b.keys[s].load(Ordering::Relaxed) == EMPTY)
+    }
+
+    /// Plan a displacement path for `key` without touching the table:
+    /// a sequence of `(bucket, slot)` where the occupant of `path[i]`
+    /// moves to `path[i+1]` and the final slot is free. Returns None
+    /// when the walk exceeds MAX_KICKS or revisits a slot (a cycle —
+    /// executing it move-by-move would overwrite a live entry).
+    ///
+    /// Read-only simulation is sound because the caller holds
+    /// `write_lock`: nothing can mutate the table mid-plan.
+    fn plan_path(&self, key: u64) -> Option<Vec<(usize, usize)>> {
+        let mut path: Vec<(usize, usize)> = Vec::with_capacity(8);
+        let mut bi = self.h1(key);
+        for kick in 0..MAX_KICKS {
+            if let Some(s) = self.free_slot(bi) {
+                path.push((bi, s));
+                return Some(path);
+            }
+            let victim = kick % SLOTS;
+            if path.contains(&(bi, victim)) {
+                return None; // cycle
+            }
+            let vk = self.buckets[bi].keys[victim].load(Ordering::Relaxed);
+            debug_assert_ne!(vk, EMPTY);
+            path.push((bi, victim));
+            bi = if self.h1(vk) == bi { self.h2(vk) } else { self.h1(vk) };
+        }
+        None
+    }
+
+    /// Move the occupant of `from` into the (free) slot `to`, holding
+    /// BOTH bucket seqlocks for the whole move, acquired in bucket
+    /// index order (one lock when the buckets coincide — `begin_write`
+    /// asserts non-nesting). Readers spinning on either version see
+    /// the key in exactly one bucket before the move and exactly one
+    /// after; there is no in-neither window.
+    fn move_slot(&self, from: (usize, usize), to: (usize, usize)) {
+        let (fb, fs) = from;
+        let (tb, ts) = to;
+        // Stable reads: write_lock is held by the caller.
+        let k = self.buckets[fb].keys[fs].load(Ordering::Relaxed);
+        debug_assert_ne!(k, EMPTY);
+        // SAFETY: serialized writer.
+        let it = unsafe { (*self.buckets[fb].items.get())[fs] };
+        let (lo, hi) = (fb.min(tb), fb.max(tb));
+        Self::begin_write(&self.buckets[lo]);
+        if hi != lo {
+            Self::begin_write(&self.buckets[hi]);
+        }
+        // SAFETY: serialized writer, both seqlocks held (odd).
+        unsafe { (*self.buckets[tb].items.get())[ts] = it };
+        self.buckets[tb].keys[ts].store(k, Ordering::Release);
+        self.buckets[fb].keys[fs].store(EMPTY, Ordering::Release);
+        if hi != lo {
+            Self::end_write(&self.buckets[hi]);
+        }
+        Self::end_write(&self.buckets[lo]);
     }
 
     /// Insert or update. Returns false only when the table is at
@@ -215,37 +322,35 @@ impl CuckooCache {
             }
         }
 
-        // Cuckoo displacement: kick a victim along its alternate bucket.
-        let mut cur_key = key;
-        let mut cur_item = item;
-        let mut bi = self.h1(key);
-        for kick in 0..MAX_KICKS {
-            let b = &self.buckets[bi];
-            let victim = kick % SLOTS;
-            Self::begin_write(b);
-            let vk = b.keys[victim].load(Ordering::Relaxed);
-            // SAFETY: serialized writer, seqlock held.
-            let vi = unsafe { (*b.items.get())[victim] };
-            unsafe { (*b.items.get())[victim] = cur_item };
-            b.keys[victim].store(cur_key, Ordering::Release);
-            Self::end_write(b);
-            debug_assert_ne!(vk, EMPTY);
-            cur_key = vk;
-            cur_item = vi;
-            // Victim goes to its alternate bucket.
-            let alt = if self.h1(cur_key) == bi { self.h2(cur_key) } else { self.h1(cur_key) };
-            if self.try_place(alt, cur_key, cur_item) {
-                self.len.fetch_add(1, Ordering::Relaxed);
-                return true;
+        // Cuckoo displacement, two-phase. The historical single-phase
+        // loop swapped the victim OUT of its bucket and carried it in
+        // hand to its alternate bucket under a separate seqlock — a
+        // concurrent `get` that had already passed the destination
+        // bucket saw the victim in neither (false miss). Phase 1 plans
+        // the whole path read-only; phase 2 executes it BACKWARD from
+        // the free slot, every hop a both-buckets-locked `move_slot`,
+        // so each displaced key stays continuously reachable.
+        if let Some(path) = self.plan_path(key) {
+            for w in path.windows(2).rev() {
+                self.move_slot(w[0], w[1]);
             }
-            bi = alt;
+            let (b0, s0) = path[0];
+            let b = &self.buckets[b0];
+            Self::begin_write(b);
+            // SAFETY: serialized writer, seqlock held.
+            unsafe { (*b.items.get())[s0] = item };
+            b.keys[s0].store(key, Ordering::Release);
+            Self::end_write(b);
+            self.len.fetch_add(1, Ordering::Relaxed);
+            return true;
         }
 
-        // Chain fallback (§6.1): append to the displaced key's bucket.
-        let b = &self.buckets[bi];
+        // Chain fallback (§6.1): no displacement was executed — the
+        // NEW key chains into its h1 bucket, where `get` scans for it.
+        let b = &self.buckets[self.h1(key)];
         Self::begin_write(b);
         // SAFETY: serialized writer, seqlock held.
-        unsafe { (*b.chain.get()).push((cur_key, cur_item)) };
+        unsafe { (*b.chain.get()).push((key, item)) };
         Self::end_write(b);
         self.chain_len.fetch_add(1, Ordering::Relaxed);
         self.len.fetch_add(1, Ordering::Relaxed);
@@ -268,33 +373,46 @@ impl CuckooCache {
         false
     }
 
-    /// Remove a key (invalidate-on-read). Returns whether it existed.
+    /// Remove a key (invalidate). Returns whether it existed.
+    ///
+    /// Taken under the writer mutex, so a removal can never interleave
+    /// with an in-flight displacement of the same key — the
+    /// remove-after-copy-landed resurrection is structurally excluded.
+    /// Defensively, EVERY occurrence across both candidate buckets
+    /// (slots and chains) is cleared rather than the first match: a
+    /// duplicate, however introduced, must not outlive an invalidation
+    /// — once the read-cache tier maps keys to cached bytes, a
+    /// resurrected mapping is a stale read.
     pub fn remove(&self, key: u64) -> bool {
         debug_assert_ne!(key, EMPTY);
         let _g = self.write_lock.lock().unwrap();
-        for &bi in &[self.h1(key), self.h2(key)] {
+        let b1 = self.h1(key);
+        let b2 = self.h2(key);
+        let n = if b2 == b1 { 1 } else { 2 };
+        let mut slot_removed = 0usize;
+        let mut chain_removed = 0usize;
+        for &bi in &[b1, b2][..n] {
             let b = &self.buckets[bi];
+            Self::begin_write(b);
             for s in 0..SLOTS {
                 if b.keys[s].load(Ordering::Relaxed) == key {
-                    Self::begin_write(b);
                     b.keys[s].store(EMPTY, Ordering::Release);
-                    Self::end_write(b);
-                    self.len.fetch_sub(1, Ordering::Relaxed);
-                    return true;
+                    slot_removed += 1;
                 }
             }
-            // SAFETY: serialized writer.
+            // SAFETY: serialized writer, seqlock held.
             let chain = unsafe { &mut *b.chain.get() };
-            if let Some(pos) = chain.iter().position(|(k, _)| *k == key) {
-                Self::begin_write(b);
-                chain.swap_remove(pos);
-                Self::end_write(b);
-                self.chain_len.fetch_sub(1, Ordering::Relaxed);
-                self.len.fetch_sub(1, Ordering::Relaxed);
-                return true;
-            }
+            let before = chain.len();
+            chain.retain(|(k, _)| *k != key);
+            chain_removed += before - chain.len();
+            Self::end_write(b);
         }
-        false
+        let removed = slot_removed + chain_removed;
+        if removed > 0 {
+            self.chain_len.fetch_sub(chain_removed, Ordering::Relaxed);
+            self.len.fetch_sub(removed, Ordering::Relaxed);
+        }
+        removed > 0
     }
 
     pub fn len(&self) -> usize {

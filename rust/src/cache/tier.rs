@@ -1,0 +1,562 @@
+//! The DPU-side read cache **tier**: cached bytes, not just a lookup
+//! table.
+//!
+//! `CuckooCache` maps keys to 32-byte items; this module puts a sized
+//! byte cache behind it. Entries are pooled [`BufView`]s keyed by
+//! `(file_id, offset, len)` — the logical extent a READ was split
+//! into — so a hit is served by a refcount bump on the already-pooled
+//! view: zero copies, zero allocations, no `AsyncSsd` round trip.
+//!
+//! Layout:
+//!
+//! * the **index** is a `CuckooCache` (lock-free probes, serialized
+//!   writers): item = `(file, offset, slot_idx, generation)`;
+//! * the **arena** is a fixed array of slots, each a small mutex over
+//!   an optional entry holding the cached view. The generation stamp
+//!   makes an index hit self-verifying: if the slot was recycled, the
+//!   generations disagree and the probe is a miss;
+//! * **invalidation** is epoch-based: a fixed array of per-`(file,
+//!   64 KiB region)` epoch counters. A WRITE bumps every region it
+//!   overlaps; entries remember the epoch *sum* over their byte range
+//!   at fill time and every probe re-sums — a bumped region makes the
+//!   sums disagree, so stale bytes are unreachable the instant the
+//!   invalidation lands. Region cells are hash-indexed, so two hot
+//!   files can collide on a cell; a collision only widens
+//!   invalidation (spurious misses), never narrows it.
+//!
+//! The fill path is guarded against the invalidate-before-fill race:
+//! a probe miss captures the epoch sum in a [`FillTicket`], and
+//! `fill` re-checks it under the fill lock — if a WRITE invalidated
+//! the range while the SSD read was in flight, the fill is dropped
+//! instead of pinning pre-overwrite bytes until eviction.
+//!
+//! Eviction is CLOCK under a byte budget: hits set a reference bit,
+//! the hand clears one bit per pass and reclaims the first unset
+//! entry, so a warm working set survives a zipfian scan.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::buf::BufView;
+use crate::cache::{CacheItem, CuckooCache, EMPTY, H1_MUL, H2_MUL};
+
+/// Epoch granularity: one epoch cell covers a 64 KiB file region.
+const EPOCH_SHIFT: u32 = 16;
+/// Epoch cells (hash-indexed by `(file, region)`); power of two.
+const EPOCH_CELLS: usize = 4096;
+/// Arena sizing: one slot per this many budget bytes.
+const BYTES_PER_SLOT: u64 = 4096;
+const MIN_SLOTS: usize = 8;
+const MAX_SLOTS: usize = 8192;
+
+/// Per-tier counters (the `hits/misses/...` row of the control plane).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct TierStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub fills: u64,
+    /// Fills dropped because an invalidation intervened between the
+    /// probe and the SSD completion (the invalidate-before-fill race).
+    pub fill_drops: u64,
+    pub invalidations: u64,
+    pub evictions: u64,
+    /// Bytes handed out by hits (each a zero-copy refcount bump).
+    pub bytes_served: u64,
+    /// Bytes currently pinned by cached views (warm-up gauge).
+    pub bytes_cached: u64,
+    /// Configured byte budget.
+    pub budget_bytes: u64,
+    /// Live entries.
+    pub entries: u64,
+}
+
+/// Result of a probe: a zero-copy view, or a ticket that arms the
+/// epoch guard for the eventual fill.
+pub enum Probe {
+    Hit(BufView),
+    Miss(FillTicket),
+}
+
+/// Captured at probe time; `fill` drops the bytes if the epoch sum
+/// moved (an invalidation ran) since the ticket was issued.
+#[derive(Debug, Clone, Copy)]
+pub struct FillTicket {
+    file: u64,
+    offset: u64,
+    len: u64,
+    esum: u64,
+}
+
+impl FillTicket {
+    pub fn file(&self) -> u64 {
+        self.file
+    }
+    pub fn offset(&self) -> u64 {
+        self.offset
+    }
+    pub fn len(&self) -> u64 {
+        self.len
+    }
+}
+
+struct SlotEntry {
+    key: u64,
+    file: u64,
+    offset: u64,
+    /// Epoch sum over the entry's byte range at fill time.
+    esum: u64,
+    /// Generation stamp; must match the index item's `d` word.
+    gen: u64,
+    /// CLOCK reference bit: set on hit, cleared by the hand.
+    ref_bit: bool,
+    view: BufView,
+}
+
+/// Fill/eviction state, serialized by one mutex (the miss path; hits
+/// never take it).
+struct FillState {
+    free: Vec<usize>,
+    hand: usize,
+    gen: u64,
+}
+
+/// A sized DPU-side read cache serving pooled views in front of the
+/// SSD.
+pub struct ReadCacheTier {
+    index: CuckooCache,
+    slots: Box<[Mutex<Option<SlotEntry>>]>,
+    epochs: Box<[AtomicU64]>,
+    fill_state: Mutex<FillState>,
+    budget: u64,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    fills: AtomicU64,
+    fill_drops: AtomicU64,
+    invalidations: AtomicU64,
+    evictions: AtomicU64,
+    bytes_served: AtomicU64,
+    bytes_cached: AtomicU64,
+}
+
+impl ReadCacheTier {
+    /// A tier holding at most `budget_bytes` of cached views.
+    pub fn new(budget_bytes: u64) -> Self {
+        let nslots =
+            ((budget_bytes / BYTES_PER_SLOT) as usize).clamp(MIN_SLOTS, MAX_SLOTS);
+        let slots = (0..nslots)
+            .map(|_| Mutex::new(None))
+            .collect::<Vec<_>>()
+            .into_boxed_slice();
+        let epochs = (0..EPOCH_CELLS)
+            .map(|_| AtomicU64::new(0))
+            .collect::<Vec<_>>()
+            .into_boxed_slice();
+        ReadCacheTier {
+            // 2x headroom: the index should never be the reason a
+            // fill fails before the byte budget is.
+            index: CuckooCache::new(nslots * 2),
+            slots,
+            epochs,
+            fill_state: Mutex::new(FillState {
+                // Reversed so pop() hands out slot 0 first (the CLOCK
+                // hand also starts at 0 — keeps eviction order
+                // deterministic for the tests).
+                free: (0..nslots).rev().collect(),
+                hand: 0,
+                gen: 0,
+            }),
+            budget: budget_bytes,
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            fills: AtomicU64::new(0),
+            fill_drops: AtomicU64::new(0),
+            invalidations: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+            bytes_served: AtomicU64::new(0),
+            bytes_cached: AtomicU64::new(0),
+        }
+    }
+
+    pub fn budget_bytes(&self) -> u64 {
+        self.budget
+    }
+
+    fn key_hash(file: u64, offset: u64, len: u64) -> u64 {
+        // splitmix64 finalizer over the mixed triple.
+        let mut x =
+            file.wrapping_mul(H1_MUL) ^ offset.rotate_left(21) ^ len.rotate_left(42);
+        x ^= x >> 30;
+        x = x.wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        x ^= x >> 27;
+        x = x.wrapping_mul(0x94D0_49BB_1331_11EB);
+        x ^= x >> 31;
+        if x == EMPTY {
+            0x1EA7_CAFE_F00D_D00D
+        } else {
+            x
+        }
+    }
+
+    #[inline]
+    fn epoch_cell(file: u64, region: u64) -> usize {
+        let x = file.wrapping_mul(H1_MUL) ^ region.wrapping_mul(H2_MUL);
+        (x >> 17) as usize & (EPOCH_CELLS - 1)
+    }
+
+    /// Sum of the epoch counters covering `[offset, offset+len)` of
+    /// `file`. Counters only grow, so equal sums ⇔ no region in the
+    /// range was invalidated in between.
+    fn epoch_sum(&self, file: u64, offset: u64, len: u64) -> u64 {
+        let lo = offset >> EPOCH_SHIFT;
+        let hi = if len == 0 {
+            lo
+        } else {
+            (offset + len - 1) >> EPOCH_SHIFT
+        };
+        let mut sum = 0u64;
+        for region in lo..=hi {
+            sum = sum.wrapping_add(
+                self.epochs[Self::epoch_cell(file, region)].load(Ordering::SeqCst),
+            );
+        }
+        sum
+    }
+
+    /// Look up the cached view for `(file, offset, len)`. A hit is a
+    /// refcount bump on the stored view — zero copies, zero
+    /// allocations. A miss returns the ticket that a later `fill`
+    /// must present.
+    pub fn probe(&self, file: u64, offset: u64, len: u64) -> Probe {
+        let key = Self::key_hash(file, offset, len);
+        let esum = self.epoch_sum(file, offset, len);
+        if let Some(item) = self.index.get(key) {
+            let si = item.c as usize;
+            if si < self.slots.len() {
+                let mut g = self.slots[si].lock().unwrap();
+                if let Some(e) = g.as_mut() {
+                    if e.gen == item.d
+                        && e.key == key
+                        && e.file == file
+                        && e.offset == offset
+                        && e.view.len() as u64 == len
+                        && e.esum == esum
+                    {
+                        e.ref_bit = true;
+                        let view = e.view.clone();
+                        drop(g);
+                        self.hits.fetch_add(1, Ordering::Relaxed);
+                        self.bytes_served.fetch_add(len, Ordering::Relaxed);
+                        return Probe::Hit(view);
+                    }
+                }
+                // Generation/epoch mismatch: a recycled slot or stale
+                // bytes. Fall through to a miss; the stale entry stays
+                // unreachable and the CLOCK hand reclaims it.
+            }
+        }
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        Probe::Miss(FillTicket { file, offset, len, esum })
+    }
+
+    /// Install the SSD completion's view under the ticket taken at
+    /// probe time. Returns false when the fill was dropped: an
+    /// invalidation intervened (the stale-fill guard), the view
+    /// doesn't span the ticketed range, or no room could be made.
+    pub fn fill(&self, ticket: &FillTicket, view: &BufView) -> bool {
+        let len = view.len() as u64;
+        if len != ticket.len || len == 0 || len > self.budget {
+            return false;
+        }
+        let mut st = self.fill_state.lock().unwrap();
+        // The invalidate-before-fill guard: if a WRITE bumped any
+        // epoch in the range after the probe, these bytes predate the
+        // overwrite — installing them would pin a stale read.
+        if self.epoch_sum(ticket.file, ticket.offset, ticket.len) != ticket.esum {
+            self.fill_drops.fetch_add(1, Ordering::Relaxed);
+            return false;
+        }
+        let key = Self::key_hash(ticket.file, ticket.offset, ticket.len);
+        // Re-fill of a key whose old entry went stale: reclaim the old
+        // slot first so one key never pins two views.
+        if let Some(item) = self.index.get(key) {
+            let si = item.c as usize;
+            if si < self.slots.len() {
+                let mut g = self.slots[si].lock().unwrap();
+                if let Some(e) = g.as_ref() {
+                    if e.gen == item.d && e.key == key {
+                        let old = g.take().unwrap();
+                        self.bytes_cached
+                            .fetch_sub(old.view.len() as u64, Ordering::Relaxed);
+                        st.free.push(si);
+                    }
+                }
+            }
+            self.index.remove(key);
+        }
+        // Make room: a free arena slot AND headroom under the budget.
+        while st.free.is_empty()
+            || self.bytes_cached.load(Ordering::Relaxed) + len > self.budget
+        {
+            if !self.evict_one(&mut st) {
+                return false; // arena empty yet no room — oversized view
+            }
+        }
+        let si = st.free.pop().unwrap();
+        st.gen += 1;
+        let gen = st.gen;
+        *self.slots[si].lock().unwrap() = Some(SlotEntry {
+            key,
+            file: ticket.file,
+            offset: ticket.offset,
+            esum: ticket.esum,
+            gen,
+            ref_bit: false,
+            view: view.clone(),
+        });
+        if !self.index.insert(key, CacheItem::new(ticket.file, ticket.offset, si as u64, gen)) {
+            // Index at capacity (2x arena — effectively unreachable).
+            *self.slots[si].lock().unwrap() = None;
+            st.free.push(si);
+            return false;
+        }
+        self.bytes_cached.fetch_add(len, Ordering::Relaxed);
+        self.fills.fetch_add(1, Ordering::Relaxed);
+        true
+    }
+
+    /// CLOCK sweep: clear one reference bit per occupied slot, evict
+    /// the first entry found with the bit unset. Caller holds the fill
+    /// lock, so the index check-then-remove below is atomic with
+    /// respect to every index writer.
+    fn evict_one(&self, st: &mut FillState) -> bool {
+        let n = self.slots.len();
+        for _ in 0..2 * n {
+            let si = st.hand;
+            st.hand = (st.hand + 1) % n;
+            let mut g = self.slots[si].lock().unwrap();
+            match g.as_mut() {
+                None => continue,
+                Some(e) if e.ref_bit => {
+                    e.ref_bit = false; // second chance
+                }
+                Some(_) => {
+                    let e = g.take().unwrap();
+                    drop(g);
+                    self.index.remove(e.key);
+                    self.bytes_cached
+                        .fetch_sub(e.view.len() as u64, Ordering::Relaxed);
+                    self.evictions.fetch_add(1, Ordering::Relaxed);
+                    st.free.push(si);
+                    return true;
+                }
+            }
+        }
+        false
+    }
+
+    /// Invalidate every cached byte overlapping `[offset, offset+len)`
+    /// of `file`. Called at the WRITE apply point (non-durable) and
+    /// the remap commit point (durable) — after this returns, no probe
+    /// can serve pre-overwrite bytes and no in-flight fill ticketed
+    /// before it can install them.
+    pub fn invalidate(&self, file: u64, offset: u64, len: u64) {
+        let lo = offset >> EPOCH_SHIFT;
+        let hi = if len == 0 {
+            lo
+        } else {
+            (offset + len - 1) >> EPOCH_SHIFT
+        };
+        for region in lo..=hi {
+            self.epochs[Self::epoch_cell(file, region)].fetch_add(1, Ordering::SeqCst);
+        }
+        self.invalidations.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Drop every cached view (remount/shutdown path; also lets leak
+    /// checks assert the pools drain once intentional pins are gone).
+    pub fn clear(&self) {
+        let mut st = self.fill_state.lock().unwrap();
+        for slot in self.slots.iter() {
+            let mut g = slot.lock().unwrap();
+            if let Some(e) = g.take() {
+                self.index.remove(e.key);
+                self.bytes_cached
+                    .fetch_sub(e.view.len() as u64, Ordering::Relaxed);
+            }
+        }
+        st.free = (0..self.slots.len()).rev().collect();
+        st.hand = 0;
+    }
+
+    /// Fraction of the byte budget currently warm (0.0 cold → 1.0).
+    pub fn warm_fraction(&self) -> f64 {
+        if self.budget == 0 {
+            return 0.0;
+        }
+        self.bytes_cached.load(Ordering::Relaxed) as f64 / self.budget as f64
+    }
+
+    pub fn stats(&self) -> TierStats {
+        TierStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            fills: self.fills.load(Ordering::Relaxed),
+            fill_drops: self.fill_drops.load(Ordering::Relaxed),
+            invalidations: self.invalidations.load(Ordering::Relaxed),
+            evictions: self.evictions.load(Ordering::Relaxed),
+            bytes_served: self.bytes_served.load(Ordering::Relaxed),
+            bytes_cached: self.bytes_cached.load(Ordering::Relaxed),
+            budget_bytes: self.budget,
+            entries: self.index.len() as u64,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::buf::BufPool;
+
+    fn pooled_view(pool: &BufPool, len: usize, fill: u8) -> BufView {
+        let mut b = pool.allocate(len);
+        b.as_mut_slice().fill(fill);
+        b.freeze()
+    }
+
+    #[test]
+    fn fill_then_hit_is_zero_copy() {
+        let pool = BufPool::new(8, 4096);
+        let tier = ReadCacheTier::new(64 * 1024);
+        let view = pooled_view(&pool, 512, 7);
+        let ticket = match tier.probe(1, 0, 512) {
+            Probe::Miss(t) => t,
+            Probe::Hit(_) => panic!("cold tier cannot hit"),
+        };
+        assert!(tier.fill(&ticket, &view));
+        let before = pool.stats();
+        let hit = match tier.probe(1, 0, 512) {
+            Probe::Hit(v) => v,
+            Probe::Miss(_) => panic!("filled key must hit"),
+        };
+        let after = pool.stats();
+        // The hit is a refcount bump on the pooled storage: no new
+        // allocations, no copies.
+        assert!(hit.shares_storage(&view));
+        assert_eq!(hit.as_slice(), &[7u8; 512][..]);
+        assert_eq!(after.allocs, before.allocs);
+        assert_eq!(after.copies, before.copies);
+        assert_eq!(after.bytes_copied, before.bytes_copied);
+        let s = tier.stats();
+        assert_eq!(s.hits, 1);
+        assert_eq!(s.fills, 1);
+        assert_eq!(s.bytes_served, 512);
+    }
+
+    #[test]
+    fn invalidation_blocks_stale_hit() {
+        let pool = BufPool::new(8, 4096);
+        let tier = ReadCacheTier::new(64 * 1024);
+        let view = pooled_view(&pool, 256, 1);
+        let t = match tier.probe(3, 1024, 256) {
+            Probe::Miss(t) => t,
+            _ => panic!(),
+        };
+        assert!(tier.fill(&t, &view));
+        assert!(matches!(tier.probe(3, 1024, 256), Probe::Hit(_)));
+        // Overlapping WRITE invalidates; the next probe must miss.
+        tier.invalidate(3, 1100, 64);
+        assert!(matches!(tier.probe(3, 1024, 256), Probe::Miss(_)));
+        assert_eq!(tier.stats().invalidations, 1);
+    }
+
+    /// Satellite regression: the invalidate-before-fill interleaving.
+    /// probe(miss) → WRITE invalidates → SSD read completes → fill.
+    /// The fill must be dropped, and the subsequent probe must miss.
+    #[test]
+    fn invalidate_between_probe_and_fill_drops_the_fill() {
+        let pool = BufPool::new(8, 4096);
+        let tier = ReadCacheTier::new(64 * 1024);
+        let stale = pooled_view(&pool, 128, 0xAA);
+        let t = match tier.probe(9, 0, 128) {
+            Probe::Miss(t) => t,
+            _ => panic!(),
+        };
+        tier.invalidate(9, 0, 128); // WRITE landed while the read was in flight
+        assert!(!tier.fill(&t, &stale), "stale fill must be dropped");
+        assert_eq!(tier.stats().fill_drops, 1);
+        assert_eq!(tier.stats().fills, 0);
+        assert!(matches!(tier.probe(9, 0, 128), Probe::Miss(_)));
+        // A fresh probe→fill cycle (post-invalidate epoch) installs fine.
+        let fresh = pooled_view(&pool, 128, 0xBB);
+        let t2 = match tier.probe(9, 0, 128) {
+            Probe::Miss(t) => t,
+            _ => panic!(),
+        };
+        assert!(tier.fill(&t2, &fresh));
+        match tier.probe(9, 0, 128) {
+            Probe::Hit(v) => assert_eq!(v.as_slice(), &[0xBBu8; 128][..]),
+            Probe::Miss(_) => panic!("fresh fill must hit"),
+        }
+    }
+
+    #[test]
+    fn eviction_keeps_bytes_under_budget() {
+        let pool = BufPool::new(64, 4096);
+        // Budget fits exactly 4 one-KiB views.
+        let tier = ReadCacheTier::new(4 * 1024);
+        for i in 0..16u64 {
+            let v = pooled_view(&pool, 1024, i as u8);
+            let t = match tier.probe(1, i * 1024, 1024) {
+                Probe::Miss(t) => t,
+                _ => panic!(),
+            };
+            assert!(tier.fill(&t, &v));
+            assert!(tier.stats().bytes_cached <= 4 * 1024);
+        }
+        let s = tier.stats();
+        assert_eq!(s.fills, 16);
+        assert_eq!(s.evictions, 12);
+        assert_eq!(s.entries, 4);
+        assert!((tier.warm_fraction() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn clock_gives_hit_entries_a_second_chance() {
+        let pool = BufPool::new(64, 4096);
+        // Budget fits exactly two entries; arena floor is 8 slots.
+        let tier = ReadCacheTier::new(2 * 1024);
+        let fill_at = |off: u64, pat: u8| {
+            let v = pooled_view(&pool, 1024, pat);
+            match tier.probe(1, off, 1024) {
+                Probe::Miss(t) => assert!(tier.fill(&t, &v)),
+                _ => panic!("expected cold miss at {off}"),
+            }
+        };
+        fill_at(0, 1); // slot 0
+        fill_at(1024, 2); // slot 1
+        // Touch entry A: its ref bit shields it from the next sweep.
+        assert!(matches!(tier.probe(1, 0, 1024), Probe::Hit(_)));
+        fill_at(2048, 3); // forces one eviction: B (no ref bit) goes
+        assert!(matches!(tier.probe(1, 0, 1024), Probe::Hit(_)), "A survives");
+        assert!(matches!(tier.probe(1, 1024, 1024), Probe::Miss(_)), "B evicted");
+    }
+
+    #[test]
+    fn clear_drops_all_views_and_releases_pool_slots() {
+        let pool = BufPool::new(8, 4096);
+        let tier = ReadCacheTier::new(64 * 1024);
+        for i in 0..4u64 {
+            let v = pooled_view(&pool, 512, i as u8);
+            match tier.probe(2, i * 512, 512) {
+                Probe::Miss(t) => assert!(tier.fill(&t, &v)),
+                _ => panic!(),
+            }
+        }
+        assert!(pool.in_use() > 0);
+        tier.clear();
+        assert_eq!(tier.stats().entries, 0);
+        assert_eq!(tier.stats().bytes_cached, 0);
+        assert_eq!(pool.in_use(), 0, "cleared tier must release every pooled view");
+        assert!(matches!(tier.probe(2, 0, 512), Probe::Miss(_)));
+    }
+}

@@ -28,7 +28,7 @@ pub use sharded::{
 use std::sync::{mpsc, Arc, RwLock};
 
 use crate::apps::HostApp;
-use crate::cache::CuckooCache;
+use crate::cache::{CuckooCache, ReadCacheTier};
 use crate::director::{AppSignature, TrafficDirector};
 use crate::dpufs::{DpuFs, FsConfig};
 use crate::filelib::DdsClient;
@@ -45,6 +45,13 @@ pub struct StorageServerConfig {
     pub ssd_bytes: u64,
     pub segment_size: u64,
     pub cache_items: usize,
+    /// DPU read-cache tier byte budget. `0` (the default) disables the
+    /// tier — READs always go to the SSD, exactly the pre-tier
+    /// behavior. When set, one tier is built per server and shared by
+    /// the file service and every offload engine (DPU memory is one
+    /// resource), with write-through invalidation from both WRITE
+    /// paths.
+    pub cache_bytes: u64,
     pub service: FileServiceConfig,
 }
 
@@ -54,6 +61,7 @@ impl Default for StorageServerConfig {
             ssd_bytes: 256 << 20,
             segment_size: 1 << 20,
             cache_items: 1 << 16,
+            cache_bytes: 0,
             service: FileServiceConfig::default(),
         }
     }
@@ -65,6 +73,9 @@ pub struct StorageServer {
     pub ssd: Arc<Ssd>,
     pub dpufs: Arc<RwLock<DpuFs>>,
     pub cache: Arc<CuckooCache>,
+    /// The DPU read-cache tier (`cfg.cache_bytes > 0`), shared by the
+    /// file service and every engine built over this server.
+    pub tier: Option<Arc<ReadCacheTier>>,
     pub handle: FileServiceHandle,
     /// Handle on the file service's batch/assembly pool (occupancy +
     /// the plane-wide copy ledger, observable from outside the service
@@ -147,6 +158,22 @@ impl StorageServer {
         if let Some(report) = recovery {
             service.set_recovery_report(report);
         }
+        let tier = if cfg.cache_bytes > 0 {
+            let tier = Arc::new(ReadCacheTier::new(cfg.cache_bytes));
+            service.attach_tier(tier.clone());
+            // Durable-path invalidation: the remap COMMIT (mapping
+            // flip) is the ack point of a durable write — the hook
+            // fires per redirected segment, after the flip, under the
+            // fs write lock, so no probe can land between new bytes
+            // becoming readable and the old cached view dying.
+            let hook_tier = tier.clone();
+            dpufs.write().unwrap().set_remap_commit_hook(Arc::new(move |file, off, len| {
+                hook_tier.invalidate(file.0 as u64, off, len);
+            }));
+            Some(tier)
+        } else {
+            None
+        };
         let buf_pool = service.buf_pool().clone();
         let read_buf_pool = service.read_buf_pool().clone();
         let service_wake = service.waker();
@@ -159,6 +186,7 @@ impl StorageServer {
             ssd,
             dpufs,
             cache,
+            tier,
             handle,
             buf_pool,
             read_buf_pool,
@@ -404,13 +432,16 @@ impl<A: HostApp> DisaggregatedServer<A> {
         engine_cfg: OffloadEngineConfig,
         app: A,
     ) -> Self {
-        let engine = OffloadEngine::new(
+        let mut engine = OffloadEngine::new(
             logic.clone(),
             storage.cache.clone(),
             storage.dpufs.clone(),
             storage.engine_aio(),
             engine_cfg,
         );
+        if let Some(tier) = &storage.tier {
+            engine.attach_tier(tier.clone());
+        }
         let director = TrafficDirector::new(signature, logic, storage.cache.clone());
         DisaggregatedServer {
             storage,

@@ -502,13 +502,20 @@ impl ShardedServer {
             if let Some(plane) = &cfg.faults {
                 aio.attach_faults(plane.ssd_injector(FaultSite::SsdQueue(i)));
             }
-            let engine = OffloadEngine::new(
+            let mut engine = OffloadEngine::new(
                 logic.clone(),
                 storage.cache.clone(),
                 storage.dpufs.clone(),
                 aio,
                 engine_cfg.clone(),
             );
+            if let Some(tier) = &storage.tier {
+                // One tier per server, shared by every shard's engine:
+                // the tier models one pool of DPU memory, and its
+                // internal locking is per-slot/per-bucket, so shards
+                // don't serialize on it.
+                engine.attach_tier(tier.clone());
+            }
             engine_pools.push(engine.pool().clone());
             let mut director =
                 DirectorShard::new(i, signature, logic.clone(), storage.cache.clone(), engine);

@@ -167,6 +167,12 @@ pub struct DpuFs {
     /// the checkpoint picks a sequence of the *other* parity so a torn
     /// checkpoint write can never destroy the only committed image.
     last_slot_seq: u64,
+    /// Invoked immediately after a remap record commits (the mapping
+    /// flip), with the `(file, offset, len)` byte range the WRITE
+    /// replaced. The read-cache tier registers here: the flip is the
+    /// exact instant pre-overwrite bytes become stale, for both the
+    /// file-service durable path and [`DpuFs::write_durable`].
+    remap_commit_hook: Option<Arc<dyn Fn(FileId, u64, u64) + Send + Sync>>,
 }
 
 /// A prepared redirect-on-write: shadow segments are allocated and
@@ -222,6 +228,7 @@ impl DpuFs {
             journal_off: 0,
             live_remaps: 0,
             last_slot_seq: 0,
+            remap_commit_hook: None,
         };
         fs.sync_metadata()?;
         Ok(fs)
@@ -415,6 +422,7 @@ impl DpuFs {
             // base).
             live_remaps: remaps_applied,
             last_slot_seq: super_best.as_ref().map(|(s, _)| *s).unwrap_or(0),
+            remap_commit_hook: None,
         };
 
         let mut repaired_superblock = false;
@@ -959,7 +967,23 @@ impl DpuFs {
         }
         meta.size = meta.size.max(plan.new_size);
         self.live_remaps += 1;
+        // The mapping just flipped: every cached view of the replaced
+        // segments is now pre-overwrite. Invalidate per whole segment
+        // (wider than the exact write range — safe, never narrower).
+        if let Some(hook) = self.remap_commit_hook.clone() {
+            for e in &plan.entries {
+                hook(plan.file, e.seg_idx as u64 * seg, seg);
+            }
+        }
         Ok(())
+    }
+
+    /// Register the remap-commit invalidation hook (see the field doc).
+    pub fn set_remap_commit_hook(
+        &mut self,
+        hook: Arc<dyn Fn(FileId, u64, u64) + Send + Sync>,
+    ) {
+        self.remap_commit_hook = Some(hook);
     }
 
     /// Abandon a prepared redirect: return its shadow segments to the

@@ -39,8 +39,8 @@
 pub mod scenario;
 
 pub use scenario::{
-    crash_recovery, data_crash, run_scenario, CrashRecoveryReport, DataCrashReport, Scenario,
-    ScenarioReport,
+    cache_chaos, crash_recovery, data_crash, run_scenario, CacheChaosReport,
+    CrashRecoveryReport, DataCrashReport, Scenario, ScenarioReport,
 };
 
 use std::sync::{Arc, Mutex};

@@ -33,6 +33,7 @@ use std::time::{Duration, Instant};
 use super::{FaultAction, FaultConfig, FaultEvent, FaultPlane, FaultSite, SsdFaultConfig,
             WireChaos, WireFaultConfig};
 use crate::apps::RawFileApp;
+use crate::cache::TierStats;
 use crate::coordinator::{
     tuple_for_shard, ClientConn, ShardedServer, ShardedServerConfig, StorageServer,
     StorageServerConfig,
@@ -84,6 +85,15 @@ pub struct Scenario {
     /// `(round, iterations)`: stall every shard poll group before the
     /// round.
     pub stall_groups: Option<(usize, u32)>,
+    /// Read-cache tier byte budget for the storage path (0 = no tier).
+    /// Scenarios whose fault recipe draws from per-SSD-queue decision
+    /// streams must run WITHOUT the tier: a cache hit skips an SSD op,
+    /// and whether a cross-shard probe hits depends on fill timing, so
+    /// the per-queue fault draws would shift run to run and break the
+    /// same-seed outcome-trace replay (`chaos_determinism`). Cache ×
+    /// SSD-fault coherence is covered by [`cache_chaos`] instead,
+    /// which asserts byte-exactness, not trace equality.
+    pub cache_bytes: u64,
     /// Wall-clock bound for one round of batches to fully resolve.
     pub round_timeout: Duration,
     /// Engine-context and service-staging pending timeout (how fast a
@@ -116,6 +126,7 @@ impl Scenario {
             fail_engines: Vec::new(),
             restore_engines: Vec::new(),
             stall_groups: None,
+            cache_bytes: 2 << 20,
             round_timeout: Duration::from_secs(30),
             // Lost-completion recovery latency. Deliberately ~1000x the
             // shard poll cadence (~1ms): a completion merely *delayed*
@@ -167,6 +178,7 @@ impl Scenario {
                 },
                 ..Default::default()
             },
+            cache_bytes: 0, // SSD fault streams: see `Scenario::cache_bytes`
             ..Scenario::base("ssd_chaos", seed)
         }
     }
@@ -229,6 +241,7 @@ impl Scenario {
             },
             fail_engines: vec![(1, 0)],
             stall_groups: Some((3, 400)),
+            cache_bytes: 0, // SSD fault streams: see `Scenario::cache_bytes`
             ..base
         }
     }
@@ -257,6 +270,7 @@ impl Scenario {
             },
             fail_engines: vec![(2, 1)],
             stall_groups: Some((3, 1500)),
+            cache_bytes: 0, // SSD fault streams: see `Scenario::cache_bytes`
             ..base
         }
     }
@@ -361,7 +375,12 @@ pub fn run_scenario(sc: &Scenario) -> anyhow::Result<ScenarioReport> {
     if !sc.faults.host_ssd.is_off() {
         service.ssd_faults = Some(plane.ssd_injector(FaultSite::HostSsdQueue));
     }
-    let storage_cfg = StorageServerConfig { ssd_bytes: 32 << 20, service, ..Default::default() };
+    let storage_cfg = StorageServerConfig {
+        ssd_bytes: 32 << 20,
+        cache_bytes: sc.cache_bytes,
+        service,
+        ..Default::default()
+    };
     let storage = StorageServer::build(storage_cfg, Some(logic.clone()))?;
     let file = storage.create_filled_file("chaos", "data", sc.file_bytes)?;
     let fid = file.id.0;
@@ -1469,4 +1488,287 @@ pub fn verify_recovered_fs(
         "{ctx}: next_dir {next_dir} could reuse live id {max_dir_id}"
     );
     Ok(got_files.len())
+}
+
+/// Block size the cache-chaos workload reads and writes at.
+const CACHE_BLOCK: u64 = 1 << 10;
+/// Blocks in the hot file (a 64 KiB image — all of it fits the tier,
+/// so a stale entry would really be SERVED, not masked by eviction).
+const CACHE_FILE_BLOCKS: u64 = 64;
+/// Seeded READ/WRITE ops after the base fill.
+const CACHE_OPS: usize = 160;
+/// Tier byte budget for the cache-chaos server.
+const CACHE_TIER_BYTES: u64 = 1 << 20;
+
+/// What the cache-chaos scenario observed.
+#[derive(Debug)]
+pub struct CacheChaosReport {
+    pub seed: u64,
+    /// The `cut_write`-th device write after arming tore the power.
+    pub cut_write: u64,
+    /// Durable WRITEs acked (and folded into the byte model).
+    pub writes_acked: u64,
+    /// OK READs byte-checked against the model (tier hits and SSD
+    /// reads alike — the check cannot tell them apart, by design).
+    pub reads_ok: u64,
+    /// Ops that surfaced as clean bounded ERRs (injected SSD failures
+    /// plus everything at/after the cut).
+    pub ops_failed: u64,
+    /// Tier counters at the instant of the crash.
+    pub pre_cut: TierStats,
+    /// What mount-time recovery found, replayed and quarantined.
+    pub recovery: RecoveryReport,
+    /// Tier counters after the post-remount exercise (fresh tier).
+    pub post_remount: TierStats,
+    /// Canonical fault schedule (the power-cut injection).
+    pub schedule: Vec<FaultEvent>,
+    pub elapsed: Duration,
+}
+
+/// Shared by the chaos mount and the remount — the tier must be
+/// configured on BOTH so the scenario proves remount cold-starts it.
+fn cache_chaos_cfg() -> StorageServerConfig {
+    StorageServerConfig {
+        ssd_bytes: CRASH_SSD_BYTES,
+        segment_size: CRASH_SEG,
+        cache_bytes: CACHE_TIER_BYTES,
+        service: FileServiceConfig { durable_data: true, ..Default::default() },
+        ..Default::default()
+    }
+}
+
+/// The cache-coherence crash scenario: a durable-data server with the
+/// read-cache tier on runs a seeded READ/WRITE mix under host-SSD
+/// faults (fail + delay — never drop: a dropped journal completion
+/// means the record LANDED and recovery replays it, which would make
+/// every faulted WRITE ambiguous instead of exactly the torn one) with
+/// a power cut armed at a seed-chosen device write. The property under
+/// test the whole way: an OK READ byte-equals the last *acked* WRITE's
+/// image for that block — a tier serving bytes from before an acked
+/// overwrite, or surviving the remap-commit invalidation, fails here.
+/// After the cut: the crash must leak no pooled buffers through the
+/// tier, and a remount must cold-start the tier (empty-but-consistent)
+/// while the device carries exactly the committed image, modulo the
+/// one torn op (all-old or all-new, never a mix).
+pub fn cache_chaos(seed: u64) -> anyhow::Result<CacheChaosReport> {
+    let started = Instant::now();
+    let plane = FaultPlane::new(FaultConfig {
+        seed,
+        host_ssd: SsdFaultConfig { fail_p: 0.08, drop_p: 0.0, delay_p: 0.25, delay_polls: 3 },
+        ..Default::default()
+    });
+
+    let mut cfg = cache_chaos_cfg();
+    cfg.service.ssd_faults = Some(plane.ssd_injector(FaultSite::HostSsdQueue));
+    let storage = StorageServer::build(cfg, None)?;
+    let ssd = storage.ssd.clone();
+    let tier = storage.tier.clone().expect("cache_chaos runs with the tier on");
+
+    // Setup (injector disarmed, cut unarmed): one hot file, durably
+    // base-filled block by block; `image` mirrors every acked byte
+    // from here on — it is the model OK READs are checked against.
+    let fe = storage.front_end();
+    let dir = fe.create_directory("cache").map_err(|e| anyhow::anyhow!("{e}"))?;
+    let mut f = fe.create_file(dir, "hot").map_err(|e| anyhow::anyhow!("{e}"))?;
+    let group = fe.create_poll().map_err(|e| anyhow::anyhow!("{e}"))?;
+    fe.poll_add(&mut f, &group);
+    let mut image = vec![0u8; (CACHE_FILE_BLOCKS * CACHE_BLOCK) as usize];
+    for b in 0..CACHE_FILE_BLOCKS {
+        let data = data_pattern(seed, 0, b as usize, CACHE_BLOCK as usize);
+        let wid =
+            fe.write_file(&f, b * CACHE_BLOCK, &data).map_err(|e| anyhow::anyhow!("{e}"))?;
+        anyhow::ensure!(wait_event(&group, wid)?.ok, "base fill write failed (block {b})");
+        image[(b * CACHE_BLOCK) as usize..((b + 1) * CACHE_BLOCK) as usize]
+            .copy_from_slice(&data);
+    }
+    // Sanity: the tier actually participates (first read fills it,
+    // second is served from it) before any fault can mask a dead tier.
+    for pass in 0..2 {
+        let rid = fe.read_file(&f, 0, CACHE_BLOCK as u32).map_err(|e| anyhow::anyhow!("{e}"))?;
+        let ev = wait_event(&group, rid)?;
+        anyhow::ensure!(
+            ev.ok && ev.data[..] == image[..CACHE_BLOCK as usize],
+            "warm-up read wrong (pass {pass})"
+        );
+    }
+    anyhow::ensure!(tier.stats().hits >= 1, "warm-up reads never hit the tier");
+
+    // Arm the chaos: probabilistic SSD faults plus a power cut a
+    // seed-chosen number of device writes out. The torn-byte count is
+    // arbitrary — `power_gate` clamps it per write.
+    let mut prng = plane.site_rng(FaultSite::PowerCut);
+    let cut_write = 10 + prng.next_range(50);
+    let cut_bytes = prng.next_range(CRASH_SEG) as usize;
+    plane.record(
+        FaultSite::PowerCut,
+        FaultAction::PowerCut { write: cut_write, cut: cut_bytes as u32 },
+    );
+    plane.arm_ssd();
+    ssd.arm_power_cut(cut_write, cut_bytes);
+
+    // Seeded mix: 40% durable block WRITEs, 60% block READs, each op
+    // round-tripping before the next. OK READs must byte-equal the
+    // model whether the tier or the SSD served them (post-cut tier
+    // hits returning committed bytes are legal OKs; post-cut SSD ops
+    // fail clean). An injected Fail never reaches the medium, so an
+    // ERR WRITE commits nothing — except the ONE op the cut tears,
+    // whose journal record may have fully persisted before the ack
+    // path died; recovery may surface either side of that op only.
+    let mut rng = Rng::new(seed ^ 0xCAC4_E001);
+    let (mut acked, mut reads_ok, mut failed) = (0u64, 0u64, 0u64);
+    let mut ambiguous: Option<Vec<u8>> = None;
+    for op in 0..CACHE_OPS {
+        let b = rng.next_range(CACHE_FILE_BLOCKS);
+        let (lo, hi) = ((b * CACHE_BLOCK) as usize, ((b + 1) * CACHE_BLOCK) as usize);
+        let was_dead = ssd.is_dead();
+        if rng.next_range(10) < 4 {
+            let data =
+                data_pattern(seed, 1, CACHE_FILE_BLOCKS as usize + op, CACHE_BLOCK as usize);
+            let ok = match fe.write_file(&f, b * CACHE_BLOCK, &data) {
+                Ok(id) => wait_event(&group, id)?.ok,
+                Err(_) => false,
+            };
+            if ok {
+                anyhow::ensure!(
+                    !was_dead,
+                    "WRITE acked on a dead device (seed {seed}, op {op})"
+                );
+                image[lo..hi].copy_from_slice(&data);
+                acked += 1;
+            } else {
+                failed += 1;
+                if !was_dead && ssd.is_dead() {
+                    // The torn op — the either-or candidate.
+                    let mut alt = image.clone();
+                    alt[lo..hi].copy_from_slice(&data);
+                    ambiguous = Some(alt);
+                }
+            }
+        } else {
+            let (ok, data) = match fe.read_file(&f, b * CACHE_BLOCK, CACHE_BLOCK as u32) {
+                Ok(id) => {
+                    let ev = wait_event(&group, id)?;
+                    (ev.ok, ev.data)
+                }
+                Err(_) => (false, Vec::new()),
+            };
+            if ok {
+                anyhow::ensure!(
+                    data[..] == image[lo..hi],
+                    "stale READ: block {b} returned bytes older than the last acked \
+                     WRITE (seed {seed}, op {op}, tier {:?})",
+                    tier.stats()
+                );
+                reads_ok += 1;
+            } else {
+                failed += 1;
+            }
+        }
+    }
+    anyhow::ensure!(ssd.is_dead(), "the armed cut must have fired (seed {seed})");
+    anyhow::ensure!(reads_ok > 0, "no READ completed OK before the cut (seed {seed})");
+    let pre_cut = tier.stats();
+    anyhow::ensure!(pre_cut.invalidations > 0, "acked WRITEs never invalidated the tier");
+
+    // The crash. Joining the service drops its tier handle and staging
+    // slots; clearing ours must return every cached view to its pool —
+    // a leak here means the tier pins completion buffers past death.
+    let pools = [storage.buf_pool.clone(), storage.read_buf_pool.clone()];
+    drop(storage);
+    tier.clear();
+    for (i, p) in pools.iter().enumerate() {
+        anyhow::ensure!(
+            p.in_use() == 0,
+            "pool {i} leaks {} buffers across the crash (seed {seed})",
+            p.in_use()
+        );
+    }
+
+    // Reboot + remount through the coordinator restart path, tier
+    // configured on: it must cold-start empty, never rehydrate.
+    ssd.power_restore();
+    let (storage, recovery) = StorageServer::remount(ssd.clone(), cache_chaos_cfg(), None)?;
+    let tier2 = storage.tier.clone().expect("remount config keeps the tier on");
+    let cold = tier2.stats();
+    anyhow::ensure!(
+        cold.entries == 0 && cold.bytes_cached == 0,
+        "remounted tier must cold-start empty (found {} entries / {} bytes)",
+        cold.entries,
+        cold.bytes_cached
+    );
+
+    // Device truth: the recovered bytes equal the committed image — or
+    // the torn op's fully-applied target, never a mix. Plus the usual
+    // structural invariants.
+    let ctx = format!("cache_chaos seed {seed} cut {cut_write}");
+    {
+        let fs = storage.dpufs.read().unwrap();
+        let id = crate::dpufs::FileId(1);
+        let size = fs.file_meta(id).map_err(|e| anyhow::anyhow!("{ctx}: {e:?}"))?.size;
+        anyhow::ensure!(size == image.len() as u64, "{ctx}: recovered size {size}");
+        let got = read_device_file(&fs, &ssd, id, size)?;
+        let mut candidates: Vec<&Vec<u8>> = vec![&image];
+        if let Some(alt) = ambiguous.as_ref() {
+            candidates.push(alt);
+        }
+        anyhow::ensure!(
+            candidates.iter().any(|c| got == **c),
+            "{ctx}: recovered bytes match neither the committed image nor the torn \
+             op's target — torn-write atomicity violated"
+        );
+        let model = MetaModel {
+            dirs: vec!["cache".into()],
+            files: vec![("cache".into(), "hot".into(), size)],
+        };
+        verify_recovered_fs(&fs, &model, &ctx)?;
+    }
+
+    // The fresh tier must fill and serve again, byte-exact.
+    let fe = storage.front_end();
+    let dir = fe.create_directory("post-crash").map_err(|e| anyhow::anyhow!("{e}"))?;
+    let mut f2 = fe.create_file(dir, "alive").map_err(|e| anyhow::anyhow!("{e}"))?;
+    let group = fe.create_poll().map_err(|e| anyhow::anyhow!("{e}"))?;
+    fe.poll_add(&mut f2, &group);
+    let payload = data_pattern(seed, 2, 0, 2 * CACHE_BLOCK as usize);
+    let wid = fe.write_file(&f2, 0, &payload).map_err(|e| anyhow::anyhow!("{e}"))?;
+    anyhow::ensure!(wait_event(&group, wid)?.ok, "{ctx}: post-recovery write failed");
+    for pass in 0..2 {
+        let rid =
+            fe.read_file(&f2, 0, payload.len() as u32).map_err(|e| anyhow::anyhow!("{e}"))?;
+        let ev = wait_event(&group, rid)?;
+        anyhow::ensure!(
+            ev.ok && ev.data == payload,
+            "{ctx}: post-recovery read not byte-exact (pass {pass})"
+        );
+    }
+    let post_remount = tier2.stats();
+    anyhow::ensure!(
+        post_remount.fills >= 1 && post_remount.hits >= 1,
+        "{ctx}: the remounted tier never filled/served"
+    );
+
+    // Final leak check: quiesce, then every pool slot accounted for.
+    let pools = [storage.buf_pool.clone(), storage.read_buf_pool.clone()];
+    drop(storage);
+    tier2.clear();
+    for (i, p) in pools.iter().enumerate() {
+        anyhow::ensure!(
+            p.in_use() == 0,
+            "{ctx}: pool {i} leaks {} buffers after recovery",
+            p.in_use()
+        );
+    }
+
+    Ok(CacheChaosReport {
+        seed,
+        cut_write,
+        writes_acked: acked,
+        reads_ok,
+        ops_failed: failed,
+        pre_cut,
+        recovery,
+        post_remount,
+        schedule: plane.schedule(),
+        elapsed: started.elapsed(),
+    })
 }

@@ -18,6 +18,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::time::Duration;
 
+use crate::cache::TierStats;
 use crate::dpufs::{DirId, FileId, FsError};
 use crate::fileservice::{ControlMsg, Doorbell, GroupChannel, GroupCounters};
 use crate::metrics::{CpuStats, LatencyStats, TenantCounters};
@@ -388,6 +389,14 @@ impl DdsClient {
     /// picture in one control round trip.
     pub fn tenant_stats(&self) -> Result<Vec<TenantCounters>, LibError> {
         Ok(ctrl_call!(self, TenantStats {}))
+    }
+
+    /// Read-cache tier counters (hits / misses / fills / dropped
+    /// fills / invalidations / evictions / bytes served, plus
+    /// occupancy). All-zero when the server runs without a tier
+    /// (`cache_bytes == 0`).
+    pub fn cache_stats(&self) -> Result<TierStats, LibError> {
+        Ok(ctrl_call!(self, CacheStats {}))
     }
 
     /// `CreatePoll` (§4.2): allocate request/response rings for the

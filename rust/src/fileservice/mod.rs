@@ -34,7 +34,7 @@ use std::thread::JoinHandle;
 use std::time::Instant;
 
 use crate::buf::{BufPool, BufView};
-use crate::cache::CuckooCache;
+use crate::cache::{CuckooCache, FillTicket, Probe, ReadCacheTier, TierStats};
 use crate::dma::DmaChannel;
 use crate::dpufs::{DirId, DpuFs, FileId, FsError, RecoveryReport, RedirectPlan};
 use crate::idle::IdleGovernor;
@@ -91,6 +91,10 @@ pub enum ControlMsg {
     /// mount rolled forward/back, replayed, and quarantined. `None`
     /// after a fresh format (no recovery ran).
     RecoveryReport { reply: mpsc::Sender<Option<RecoveryReport>> },
+    /// Read-cache tier counters (hits/misses/fills/invalidations/
+    /// evictions/bytes_served). All-zero (budget 0) when no tier is
+    /// attached.
+    CacheStats { reply: mpsc::Sender<TierStats> },
     Shutdown,
 }
 
@@ -263,6 +267,19 @@ impl Drop for FileServiceHandle {
     }
 }
 
+/// Deferred work bound to one extent's SSD completion (see
+/// [`FileService::completion_actions`]).
+enum CompletionAction {
+    /// READ miss in flight: fill the tier from the completion's pooled
+    /// view under the ticket taken at probe time (the epoch guard
+    /// drops the fill if a WRITE invalidated the range in between).
+    Fill(FillTicket),
+    /// Non-durable WRITE extent: invalidate `(file, offset, len)` when
+    /// the payload lands — the completion is the ack point, so cached
+    /// pre-overwrite bytes become unreachable no later than the ack.
+    Invalidate { file: u64, offset: u64, len: u64 },
+}
+
 /// The file service state machine (runs on the service thread; also
 /// drivable step-by-step in tests via [`FileService::run_once`]).
 pub struct FileService {
@@ -310,6 +327,19 @@ pub struct FileService {
     /// (last completion), or at abort (error completion / stalled-slot
     /// timeout — the shadows go back to the allocator, no ack is sent).
     pending_plans: HashMap<(usize, u64), RedirectPlan>,
+    /// The DPU-side read cache tier, if attached (see
+    /// [`Self::attach_tier`]). READs probe it before staging SSD ops;
+    /// hits complete the staging slot immediately with the cached view
+    /// (zero-copy — a refcount bump, no `AsyncSsd` round trip).
+    tier: Option<Arc<ReadCacheTier>>,
+    /// What to do when an extent's SSD completion lands, keyed by the
+    /// completion tag's (group, slot, extent): install a READ's view
+    /// under its probe-time ticket, or invalidate a non-durable
+    /// WRITE's byte range at its ack point. Purged when a slot fails
+    /// or times out (pending WRITE invalidations still run then —
+    /// the bytes may have landed without a completion, and a spurious
+    /// invalidation is safe where a missed one is a stale read).
+    completion_actions: HashMap<(usize, u64, usize), CompletionAction>,
     /// Mount-time recovery report, surfaced via
     /// [`ControlMsg::RecoveryReport`]. `None` on a fresh format.
     recovery: Option<RecoveryReport>,
@@ -373,6 +403,8 @@ impl FileService {
                 deliver_buf: Vec::new(),
                 pending_plans: HashMap::new(),
                 recovery: None,
+                tier: None,
+                completion_actions: HashMap::new(),
             },
             tx,
         )
@@ -382,6 +414,14 @@ impl FileService {
     /// the coordinator plumbs it from `StorageServer::remount`).
     pub fn set_recovery_report(&mut self, report: RecoveryReport) {
         self.recovery = Some(report);
+    }
+
+    /// Attach the DPU-side read cache tier (call before `spawn`). The
+    /// same `Arc` should be attached to every colocated offload engine
+    /// and registered as the DpuFs remap-commit hook — DPU memory is
+    /// one resource, so there is one tier per server.
+    pub fn attach_tier(&mut self, tier: Arc<ReadCacheTier>) {
+        self.tier = Some(tier);
     }
 
     /// Spawn the service thread (pump discipline set by
@@ -545,6 +585,11 @@ impl FileService {
                 ControlMsg::RecoveryReport { reply } => {
                     let _ = reply.send(self.recovery.clone());
                 }
+                ControlMsg::CacheStats { reply } => {
+                    let stats =
+                        self.tier.as_ref().map(|t| t.stats()).unwrap_or_default();
+                    let _ = reply.send(stats);
+                }
                 ControlMsg::Shutdown => {}
             }
         }
@@ -680,7 +725,35 @@ impl FileService {
                 match extents {
                     Ok(extents) => {
                         self.groups[gi].staging.set_extents(slot, &extents);
+                        // Probe the read-cache tier per logical extent
+                        // BEFORE staging an SSD op: a hit completes the
+                        // staging slot with the cached view right here
+                        // (a refcount bump — no copy, no alloc, no SSD
+                        // round trip); a miss arms a fill ticket so the
+                        // eventual completion warms the tier.
+                        let mut log_off = req.offset;
                         for (ei, e) in extents.iter().enumerate() {
+                            let ext_off = log_off;
+                            log_off += e.len;
+                            if let Some(tier) = &self.tier {
+                                match tier.probe(req.file_id as u64, ext_off, e.len) {
+                                    Probe::Hit(view) => {
+                                        self.groups[gi].staging.complete_extent(
+                                            slot,
+                                            ei,
+                                            &view,
+                                            self.cfg.extra_copy,
+                                        );
+                                        continue;
+                                    }
+                                    Probe::Miss(ticket) => {
+                                        self.completion_actions.insert(
+                                            (gi, slot, ei),
+                                            CompletionAction::Fill(ticket),
+                                        );
+                                    }
+                                }
+                            }
                             let tag = pack_tag(gi, slot, ei);
                             self.submit_buf
                                 .push((tag, SsdOp::Read { addr: e.addr, len: e.len as usize }));
@@ -746,6 +819,7 @@ impl FileService {
                     Ok(extents) => {
                         self.groups[gi].staging.set_extents(slot, &extents);
                         let mut at = 0usize;
+                        let mut log_off = req.offset;
                         for (ei, e) in extents.iter().enumerate() {
                             let tag = pack_tag(gi, slot, ei);
                             // Zero-copy contract: each per-extent chunk
@@ -756,6 +830,24 @@ impl FileService {
                             // intake.
                             let chunk = req.data.slice(at..at + e.len as usize);
                             at += e.len as usize;
+                            // Cache coherence: invalidate at the ack
+                            // point (this extent's completion), not at
+                            // submit — invalidating now would let a
+                            // racing READ that the SSD reorders ahead
+                            // of this write re-fill the tier with
+                            // pre-overwrite bytes under a post-
+                            // invalidation ticket.
+                            if self.tier.is_some() {
+                                self.completion_actions.insert(
+                                    (gi, slot, ei),
+                                    CompletionAction::Invalidate {
+                                        file: req.file_id as u64,
+                                        offset: log_off,
+                                        len: e.len,
+                                    },
+                                );
+                            }
+                            log_off += e.len;
                             self.submit_buf
                                 .push((tag, SsdOp::Write { addr: e.addr, data: chunk }));
                         }
@@ -785,7 +877,29 @@ impl FileService {
                 if let Some(plan) = self.pending_plans.remove(&(gi, slot)) {
                     self.dpufs.write().unwrap().redirect_abort(&plan);
                 }
+                self.purge_actions(gi, slot);
             } else {
+                match self.completion_actions.remove(&(gi, slot, extent)) {
+                    Some(CompletionAction::Fill(ticket)) => {
+                        // Warm the tier from the already-pooled read
+                        // view; the ticket's epoch guard drops the
+                        // fill if a WRITE invalidated the range while
+                        // this read was in flight.
+                        if let Some(tier) = &self.tier {
+                            tier.fill(&ticket, &c.data);
+                        }
+                    }
+                    Some(CompletionAction::Invalidate { file, offset, len }) => {
+                        // Non-durable WRITE ack point: the payload is
+                        // on the device, cached pre-overwrite bytes
+                        // must become unreachable before the client
+                        // sees the ack.
+                        if let Some(tier) = &self.tier {
+                            tier.invalidate(file, offset, len);
+                        }
+                    }
+                    None => {}
+                }
                 let staging = &mut self.groups[gi].staging;
                 staging.complete_extent(slot, extent, &c.data, self.cfg.extra_copy);
                 if staging.commit_ready(slot) {
@@ -808,6 +922,27 @@ impl FileService {
         }
         self.comp_buf = completions;
         any
+    }
+
+    /// Drop a failed/timed-out slot's pending completion actions. Fill
+    /// tickets are simply discarded (a late completion then finds no
+    /// ticket and cannot fill), but pending WRITE invalidations RUN:
+    /// a lost completion doesn't mean the payload missed the device,
+    /// and over-invalidating is safe where under-invalidating is a
+    /// stale read.
+    fn purge_actions(&mut self, gi: usize, slot: u64) {
+        let tier = self.tier.clone();
+        self.completion_actions.retain(|&(g, s, _), action| {
+            if g != gi || s != slot {
+                return true;
+            }
+            if let (Some(t), CompletionAction::Invalidate { file, offset, len }) =
+                (&tier, &*action)
+            {
+                t.invalidate(*file, *offset, *len);
+            }
+            false
+        });
     }
 
     /// Advance TailB over completed slots; once the batch threshold is
@@ -856,6 +991,7 @@ impl FileService {
                 if let Some(plan) = self.pending_plans.remove(&(gi, slot)) {
                     self.dpufs.write().unwrap().redirect_abort(&plan);
                 }
+                self.purge_actions(gi, slot);
             }
             let g = &mut self.groups[gi];
             g.staging.advance_buffered();

@@ -27,7 +27,7 @@ USAGE:
     dds serve [--requests N] [--batch B] [--io BYTES] [--no-offload]
               [--shards N] [--idle-policy poll|adaptive|adaptive:S:US]
               [--burst N] [--tenants T] [--rate R] [--max-flows F]
-              [--durable-data]
+              [--durable-data] [--cache-mb N]
         run the full functional server (client → director → offload
         engine / host app → SSD) in-process and report throughput;
         --shards > 1 runs the RSS-sharded data plane (one shard
@@ -47,6 +47,11 @@ USAGE:
         --durable-data acks a WRITE only after its redirect-on-
         write remap record is journaled: a power cut never tears
         an acked WRITE (crash-atomic data path, slower acks).
+        --cache-mb sizes the DPU read-cache tier in MiB (0 =
+        disabled, the default): READ hits are served from DPU
+        memory without touching the SSD, write-through
+        invalidated on every WRITE ack; a per-tier counter
+        report (hits, misses, fills, evictions) prints at exit.
         A CPU report (busy fraction, parks, wakes) prints at exit.
         The mount-time recovery summary (what crash recovery
         observed and repaired) prints at startup.
@@ -82,6 +87,7 @@ fn serve(args: &[String]) -> anyhow::Result<()> {
     let io: u32 = arg_val(args, "--io").map_or(1024, |v| v.parse().unwrap_or(1024));
     let offload = !args.iter().any(|a| a == "--no-offload");
     let durable_data = args.iter().any(|a| a == "--durable-data");
+    let cache_mb: u64 = arg_val(args, "--cache-mb").map_or(0, |v| v.parse().unwrap_or(0));
     let shards: usize = arg_val(args, "--shards").map_or(1, |v| v.parse().unwrap_or(1));
     let burst: usize =
         arg_val(args, "--burst").map_or(64, |v| v.parse().unwrap_or(64)).max(1);
@@ -98,13 +104,14 @@ fn serve(args: &[String]) -> anyhow::Result<()> {
     };
 
     println!(
-        "building storage server (offload={offload}, io={io}B, batch={batch}, shards={shards}, burst={burst}, idle={}, durable_data={durable_data})…",
+        "building storage server (offload={offload}, io={io}B, batch={batch}, shards={shards}, burst={burst}, idle={}, durable_data={durable_data}, cache={cache_mb}MiB)…",
         idle.label()
     );
     let logic = Arc::new(RawFileOffload);
     let mut storage_cfg = StorageServerConfig::default();
     storage_cfg.service.idle = idle;
     storage_cfg.service.durable_data = durable_data;
+    storage_cfg.cache_bytes = cache_mb << 20;
     let storage = StorageServer::build(storage_cfg, Some(logic.clone()))?;
     print_recovery(&storage.front_end());
 
@@ -152,7 +159,31 @@ fn serve(args: &[String]) -> anyhow::Result<()> {
     );
     print_cpu("file-service", &server.storage.cpu_stats());
     print_latency(&server.storage.latency_stats());
+    print_cache(server.storage.tier.as_deref());
     Ok(())
+}
+
+/// Read-cache tier exit report (only printed when a tier is attached).
+fn print_cache(tier: Option<&dds::cache::ReadCacheTier>) {
+    let Some(tier) = tier else { return };
+    let s = tier.stats();
+    let lookups = s.hits + s.misses;
+    let ratio = if lookups > 0 { s.hits as f64 / lookups as f64 } else { 0.0 };
+    println!(
+        "cache: hit {:.1}% ({}/{} lookups)  fills={} (dropped={})  inval={} evict={}  \
+         served={}B  resident={}B/{}B ({} entries)",
+        ratio * 100.0,
+        s.hits,
+        lookups,
+        s.fills,
+        s.fill_drops,
+        s.invalidations,
+        s.evictions,
+        s.bytes_served,
+        s.bytes_cached,
+        s.budget_bytes,
+        s.entries
+    );
 }
 
 /// Operator-facing mount summary: what crash recovery observed and
@@ -307,6 +338,7 @@ fn serve_sharded(
         print_cpu(&name, c);
     }
     print_latency(&server.latency_stats());
+    print_cache(server.storage.tier.as_deref());
     for t in server.tenant_stats() {
         println!(
             "tenant {}: admitted={} completed={} rejected={} throttled={} flows={} (rejected={})",

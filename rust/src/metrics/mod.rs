@@ -10,8 +10,11 @@ mod tenant;
 pub mod zerocopy;
 
 pub use cpu::{CpuLedger, CpuStats};
+// Observability types defined next to their subsystem but part of the
+// stats surface (the `ControlMsg` stats pattern).
+pub use crate::cache::TierStats;
 pub use histogram::Histogram;
 pub use latency::{LatencyHistogram, LatencySnapshot, LatencyStats};
 pub use tenant::{merge_tenant_tables, TenantCounters};
 pub use series::{fmt_ns, fmt_ops, Row, Table};
-pub use zerocopy::{probe_engine_read_path, ZeroCopyProbe};
+pub use zerocopy::{probe_cache_tier, probe_engine_read_path, CacheTierProbe, ZeroCopyProbe};

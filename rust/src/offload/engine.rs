@@ -24,7 +24,7 @@ use std::time::{Duration, Instant};
 
 use super::api::{OffloadLogic, RoutedReq};
 use crate::buf::{BufPool, BufView, PooledBuf};
-use crate::cache::CuckooCache;
+use crate::cache::{CuckooCache, FillTicket, Probe, ReadCacheTier};
 use crate::dpufs::DpuFs;
 use crate::proto::NetResp;
 use crate::ssd::{AsyncSsd, Completion, SsdOp};
@@ -53,6 +53,10 @@ struct Context {
     extents_remaining: usize,
     /// Start position of each extent's bytes within `buf`.
     extent_offsets: Vec<usize>,
+    /// Armed on a read-cache-tier miss (single-extent reads): the
+    /// completion's pooled view fills the tier under this probe-time
+    /// ticket (dropped if a WRITE invalidated the range in between).
+    fill: Option<FillTicket>,
     /// When the context was booked — the reference point of the
     /// pending-timeout recovery (a lost SSD completion must surface as
     /// ERR, never as a stuck ring head).
@@ -123,6 +127,11 @@ pub struct OffloadEngine {
     ring: Vec<Option<Context>>,
     head: u64,
     tail: u64,
+    /// The colocated read-cache tier, if attached (shared with the
+    /// file service — one tier per server). Single-extent offloaded
+    /// reads probe it before touching the SSD; a hit books a context
+    /// that is Complete on arrival, payload = the cached view.
+    tier: Option<Arc<ReadCacheTier>>,
     copy_mode: bool,
     pending_timeout: Duration,
     /// Failure-injected state: a failed engine accepts nothing — every
@@ -168,6 +177,7 @@ impl OffloadEngine {
             ring,
             head: 0,
             tail: 0,
+            tier: None,
             copy_mode: cfg.copy_mode,
             pending_timeout: cfg.pending_timeout,
             failed: false,
@@ -179,6 +189,19 @@ impl OffloadEngine {
             submit_buf: Vec::new(),
             comp_buf: Vec::new(),
         }
+    }
+
+    /// Attach the server's read-cache tier (shared with the file
+    /// service — DPU memory is one resource). Opt-in: an engine with
+    /// no tier behaves exactly as before, so the steady-state
+    /// zero-copy contract of the pool path is unchanged.
+    pub fn attach_tier(&mut self, tier: Arc<ReadCacheTier>) {
+        self.tier = Some(tier);
+    }
+
+    /// The attached read-cache tier, if any.
+    pub fn tier(&self) -> Option<&Arc<ReadCacheTier>> {
+        self.tier.as_ref()
     }
 
     /// Inject or clear engine failure. Failing aborts every in-flight
@@ -264,13 +287,33 @@ impl OffloadEngine {
                 bounced.push(routed);
                 continue;
             }
+            // Colocated read-cache tier probe (single-extent reads —
+            // the common case; multi-extent payloads are gathered
+            // copies, not cacheable views). A hit books a context that
+            // is Complete on arrival: the cached view IS the payload
+            // and the SSD is never touched. A miss arms a probe-time
+            // fill ticket; the completion's pooled view fills the tier
+            // unless an invalidation intervened.
+            let mut tier_hit = None;
+            let mut tier_fill = None;
+            if extents.len() == 1 {
+                if let Some(tier) = &self.tier {
+                    match tier.probe(op.file_id.0 as u64, op.offset, op.size as u64) {
+                        Probe::Hit(view) => tier_hit = Some(view),
+                        Probe::Miss(ticket) => tier_fill = Some(ticket),
+                    }
+                }
+            }
             // Line 9: pre-allocated read buffer — only needed for
             // multi-extent assembly; single-extent reads use the
             // completion buffer directly (see Context docs). Under pool
             // exhaustion the allocation falls back to owned heap memory
             // (counted on the ledger) instead of bouncing.
-            let buf =
-                if extents.len() > 1 { Some(self.pool.allocate(op.size as usize)) } else { None };
+            let buf = if extents.len() > 1 && tier_hit.is_none() {
+                Some(self.pool.allocate(op.size as usize))
+            } else {
+                None
+            };
             // Lines 10-13: bookkeep in the context at tail, mark
             // pending, advance tail.
             let slot = (self.tail % self.cap()) as usize;
@@ -281,18 +324,25 @@ impl OffloadEngine {
                 extent_offsets.push(acc);
                 acc += e.len as usize;
             }
+            let hit = tier_hit.is_some();
             self.ring[slot] = Some(Context {
                 msg_id: routed.msg_id,
                 idx: routed.idx,
                 buf,
-                payload: None,
-                status: ContextStatus::Pending,
-                extents_remaining: extents.len(),
+                payload: tier_hit,
+                status: if hit { ContextStatus::Complete } else { ContextStatus::Pending },
+                extents_remaining: if hit { 0 } else { extents.len() },
                 extent_offsets,
+                fill: tier_fill,
                 issued_at: Instant::now(),
             });
             self.tail += 1;
             self.offloaded += 1;
+            if hit {
+                // Cache hit: nothing to submit — the context is already
+                // Complete and emits (in order) on the next drain.
+                continue;
+            }
             // Line 14: submit to the file service (extent reads) — all
             // of a request's extents go down as one batch: one fault
             // decide pass, one channel send, one doorbell.
@@ -343,6 +393,14 @@ impl OffloadEngine {
                     self.pool.ledger().count_copy(end - start);
                 }
             } else {
+                // Single-extent miss with a tier attached: fill the tier
+                // from the same pooled view that becomes the payload —
+                // a refcount, not a copy. The probe-time ticket makes
+                // the fill epoch-guarded: if a WRITE invalidated the
+                // range since the probe, the fill is dropped.
+                if let (Some(ticket), Some(tier)) = (ctx.fill.take(), self.tier.as_ref()) {
+                    tier.fill(&ticket, &c.data);
+                }
                 ctx.payload = Some(c.data);
             }
             if ctx.status != ContextStatus::Failed {
@@ -762,6 +820,43 @@ mod tests {
         let bounced = engine.execute(reqs, &mut responses);
         assert_eq!(bounced.len(), 1);
         assert_eq!(engine.bounced_untranslatable, 1);
+    }
+
+    /// The colocated cache path: the first read of an extent fills the
+    /// tier from its completion view; the second is served straight
+    /// from DPU memory — no SSD round trip, no pool traffic, no copy.
+    #[test]
+    fn tier_hit_skips_the_ssd_and_allocates_nothing() {
+        let (mut engine, f) = setup(64);
+        let tier = Arc::new(ReadCacheTier::new(1 << 20));
+        engine.attach_tier(tier.clone());
+        let req = |i: u16| RoutedReq {
+            msg_id: 1,
+            idx: i,
+            req: AppRequest::Read { file_id: f, offset: 4096, size: 512 },
+        };
+        let mut responses = Vec::new();
+        let bounced = engine.execute(vec![req(0)], &mut responses);
+        assert!(bounced.is_empty());
+        wait_responses(&mut engine, &mut responses, 1);
+        assert_eq!(responses[0].status, NetResp::OK);
+        assert_eq!(tier.stats().misses, 1);
+        assert_eq!(tier.stats().fills, 1, "completion view filled the tier");
+        drop(responses);
+        let before = engine.pool().stats();
+        let mut responses = Vec::new();
+        let bounced = engine.execute(vec![req(1)], &mut responses);
+        assert!(bounced.is_empty());
+        assert_eq!(responses.len(), 1, "hit completes without an SSD round trip");
+        assert_eq!(responses[0].status, NetResp::OK);
+        let expect: Vec<u8> = (4096..4608u64).map(|i| (i % 253) as u8).collect();
+        assert_eq!(responses[0].payload, expect);
+        let d = engine.pool().stats() - before;
+        assert_eq!(d.allocs, 0, "hit path books no buffers");
+        assert_eq!(d.bytes_copied, 0, "hit path copies nothing");
+        let s = tier.stats();
+        assert_eq!(s.hits, 1);
+        assert_eq!(s.bytes_served, 512);
     }
 
     #[test]

@@ -4,7 +4,7 @@
 //! Every scenario is fully seeded. To reproduce a CI run, set
 //! `DDS_CHAOS_SEED=<seed>` (each test prints the seed it used).
 
-use dds::fault::{crash_recovery, data_crash, run_scenario, FaultAction, Scenario};
+use dds::fault::{cache_chaos, crash_recovery, data_crash, run_scenario, FaultAction, Scenario};
 
 #[path = "chaos_common.rs"]
 mod chaos_common;
@@ -180,6 +180,41 @@ fn data_crash_scenario_keeps_acked_writes_byte_exact() {
         r.recovery.remaps_applied,
         r.recovery.quarantined_extents,
         r.recovered_sizes,
+        r.elapsed
+    );
+}
+
+/// The cache-coherence crash scenario: the read-cache tier in the loop
+/// under host-SSD faults plus a power cut, under `durable_data`.
+/// (`cache_chaos` itself enforces the coherence contract — every OK
+/// READ byte-equals the last acked WRITE whether the tier or the SSD
+/// served it, the crash leaks no pooled buffers through the tier, the
+/// remount cold-starts the tier empty, and the device carries the
+/// committed image modulo the one torn op — a returned report means
+/// they all held.)
+#[test]
+fn cache_chaos_tier_stays_coherent_across_faults_and_power_cut() {
+    let seed = chaos_seed();
+    let r = cache_chaos(seed).expect("cache_chaos scenario");
+    assert!(
+        r.schedule.iter().any(|e| matches!(e.action, FaultAction::PowerCut { .. })),
+        "the power cut must appear in the canonical schedule"
+    );
+    assert!(r.ops_failed > 0, "the cut must fail at least the op it tears");
+    assert!(r.pre_cut.hits > 0, "the tier never served a read before the cut");
+    assert!(r.pre_cut.invalidations > 0, "acked WRITEs never invalidated the tier");
+    assert_eq!(r.post_remount.entries, 1, "post-crash exercise caches its read");
+    println!(
+        "cache_chaos(seed={}): cut at write {}, {} acked / {} reads OK / {} failed, \
+         pre-cut tier {:?}, {} remaps replayed, post-remount tier {:?} in {:?}",
+        r.seed,
+        r.cut_write,
+        r.writes_acked,
+        r.reads_ok,
+        r.ops_failed,
+        r.pre_cut,
+        r.recovery.remaps_applied,
+        r.post_remount,
         r.elapsed
     );
 }

@@ -1,0 +1,207 @@
+//! Property suite for the DPU read-cache tier: seeded concurrent
+//! READ/WRITE/invalidate traffic against a versioned-block model.
+//!
+//! The coherence property under test is the tier's one contract:
+//! **no probe ever returns bytes older than the last acked WRITE to
+//! that extent**. Writers model the durable-WRITE pipeline in the
+//! order the real one runs it — commit the new bytes, invalidate the
+//! tier, then ack — and readers assert every hit decodes to a version
+//! at least as new as the last ack they observed before probing.
+//! Payloads are self-describing (key + version + derived body), so a
+//! cross-key mixup or torn payload is also caught byte-for-byte.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::thread;
+
+use dds::buf::{BufPool, BufView};
+use dds::cache::{Probe, ReadCacheTier};
+use dds::sim::Rng;
+
+#[path = "chaos_common.rs"]
+mod chaos_common;
+use chaos_common::chaos_seed;
+
+/// Bytes per cached block.
+const BLK: u64 = 512;
+
+/// Self-describing payload: `[key | version | body(version)]`. The
+/// "SSD" in these tests is the model — a read materializes whatever
+/// version the model says is committed right now.
+fn encode(pool: &BufPool, key: u64, ver: u64, len: usize) -> BufView {
+    let mut buf = pool.allocate(len);
+    let s = buf.as_mut_slice();
+    s[..8].copy_from_slice(&key.to_le_bytes());
+    s[8..16].copy_from_slice(&ver.to_le_bytes());
+    for (i, x) in s[16..].iter_mut().enumerate() {
+        *x = (ver as usize).wrapping_add(i) as u8;
+    }
+    buf.freeze()
+}
+
+fn decode(s: &[u8]) -> (u64, u64) {
+    let key = u64::from_le_bytes(s[..8].try_into().unwrap());
+    let ver = u64::from_le_bytes(s[8..16].try_into().unwrap());
+    (key, ver)
+}
+
+/// Concurrent half: 2 writers + 1 spurious invalidator + 4 readers
+/// over 32 one-block keys, with a tier budget that only holds half of
+/// them (CLOCK eviction churns the whole run). Readers assert the
+/// coherence property against the `acked` floor they sampled before
+/// each probe; any hit older than that floor is a stale read the
+/// epoch guard failed to block.
+#[test]
+fn concurrent_reads_never_observe_pre_ack_bytes() {
+    const KEYS: u64 = 32;
+    const WRITER_OPS: usize = 4000;
+    const READER_OPS: usize = 8000;
+
+    let seed = chaos_seed();
+    let pool = BufPool::new(64, 1024);
+    // Half the keyspace fits: hits, misses and evictions all happen.
+    let tier = Arc::new(ReadCacheTier::new((KEYS / 2) * BLK));
+    let committed: Arc<Vec<AtomicU64>> =
+        Arc::new((0..KEYS).map(|_| AtomicU64::new(0)).collect());
+    let acked: Arc<Vec<AtomicU64>> =
+        Arc::new((0..KEYS).map(|_| AtomicU64::new(0)).collect());
+
+    let mut writers = Vec::new();
+    for w in 0..2u64 {
+        let (tier, committed, acked) = (tier.clone(), committed.clone(), acked.clone());
+        writers.push(thread::spawn(move || {
+            let mut rng = Rng::new(seed ^ 0xA11C_E000 ^ (w << 40));
+            for _ in 0..WRITER_OPS {
+                let k = rng.next_range(KEYS);
+                // The durable-WRITE order: commit, invalidate, ack.
+                let v = committed[k as usize].fetch_add(1, Ordering::SeqCst) + 1;
+                tier.invalidate(k + 1, 0, BLK);
+                acked[k as usize].fetch_max(v, Ordering::SeqCst);
+            }
+        }));
+    }
+    // Spurious invalidations (no data change) are legal noise: they
+    // may only cost hits, never correctness.
+    {
+        let tier = tier.clone();
+        writers.push(thread::spawn(move || {
+            let mut rng = Rng::new(seed ^ 0x1274_0000);
+            for _ in 0..2000 {
+                let k = rng.next_range(KEYS);
+                tier.invalidate(k + 1, 0, BLK);
+            }
+        }));
+    }
+
+    let mut readers = Vec::new();
+    for r in 0..4u64 {
+        let (tier, committed, acked, pool) =
+            (tier.clone(), committed.clone(), acked.clone(), pool.clone());
+        readers.push(thread::spawn(move || {
+            let mut rng = Rng::new(seed ^ 0xBEEF_0000 ^ (r << 40));
+            let mut hits = 0u64;
+            for _ in 0..READER_OPS {
+                let k = rng.next_range(KEYS);
+                // The last ack observed BEFORE the probe is the floor
+                // no returned payload may be older than.
+                let floor = acked[k as usize].load(Ordering::SeqCst);
+                match tier.probe(k + 1, 0, BLK) {
+                    Probe::Hit(view) => {
+                        let s = view.as_slice();
+                        let (ek, ever) = decode(s);
+                        assert_eq!(ek, k + 1, "hit served another key's payload");
+                        assert!(
+                            ever >= floor,
+                            "stale read: key {k} served version {ever} < last \
+                             acked {floor} (seed {seed})"
+                        );
+                        for (i, x) in s[16..].iter().enumerate() {
+                            assert_eq!(
+                                *x,
+                                (ever as usize).wrapping_add(i) as u8,
+                                "torn payload at byte {i} (key {k}, seed {seed})"
+                            );
+                        }
+                        hits += 1;
+                    }
+                    Probe::Miss(t) => {
+                        // The model SSD: whatever is committed now.
+                        let dv = committed[k as usize].load(Ordering::SeqCst);
+                        let view = encode(&pool, k + 1, dv, BLK as usize);
+                        let _ = tier.fill(&t, &view); // dropped fills are legal
+                    }
+                }
+            }
+            hits
+        }));
+    }
+
+    for w in writers {
+        w.join().expect("writer panicked");
+    }
+    let hits: u64 = readers.into_iter().map(|r| r.join().expect("reader panicked")).sum();
+
+    let s = tier.stats();
+    assert!(hits > 0, "the run never hit the tier — the property went untested: {s:?}");
+    assert!(s.fills > 0, "no fill installed: {s:?}");
+    assert!(
+        s.invalidations >= (2 * WRITER_OPS as u64) + 2000,
+        "every invalidate call must be counted: {s:?}"
+    );
+    assert!(s.bytes_cached <= s.budget_bytes, "budget overrun: {s:?}");
+    // Every pooled view is either transient (dropped above) or pinned
+    // by the tier; clearing it must drain the pool completely.
+    tier.clear();
+    assert_eq!(pool.in_use(), 0, "cleared tier leaks pooled views");
+}
+
+/// Deterministic half: one thread, a seeded WRITE/READ/invalidate mix
+/// over 16 keys with an 8-entry budget. Single-threaded there is no
+/// legal lag: a hit must decode to EXACTLY the model's current
+/// version, across eviction churn and spurious invalidations.
+#[test]
+fn seeded_single_thread_hits_match_the_model_exactly() {
+    const KEYS: u64 = 16;
+
+    let seed = chaos_seed();
+    let pool = BufPool::new(64, 1024);
+    let tier = ReadCacheTier::new((KEYS / 2) * BLK);
+    let mut rng = Rng::new(seed ^ 0x51D3_0000);
+    let mut model = vec![0u64; KEYS as usize];
+    for op in 0..20_000 {
+        let k = rng.next_range(KEYS);
+        match rng.next_range(10) {
+            // WRITE: commit + invalidate (the ack is implicit — same
+            // thread).
+            0..=3 => {
+                model[k as usize] += 1;
+                tier.invalidate(k + 1, 0, BLK);
+            }
+            // Spurious invalidation: no data change, no model change.
+            4 => tier.invalidate(k + 1, 0, BLK),
+            // READ.
+            _ => match tier.probe(k + 1, 0, BLK) {
+                Probe::Hit(view) => {
+                    let (ek, ever) = decode(view.as_slice());
+                    assert_eq!(ek, k + 1, "hit served another key's payload (op {op})");
+                    assert_eq!(
+                        ever, model[k as usize],
+                        "hit serves a non-current version (key {k}, op {op}, seed {seed})"
+                    );
+                }
+                Probe::Miss(t) => {
+                    let view = encode(&pool, k + 1, model[k as usize], BLK as usize);
+                    let _ = tier.fill(&t, &view);
+                }
+            },
+        }
+    }
+    let s = tier.stats();
+    assert!(
+        s.hits > 0 && s.fills > 0 && s.evictions > 0,
+        "the mix must exercise hit, fill and evict: {s:?}"
+    );
+    assert!(s.bytes_cached <= s.budget_bytes, "budget overrun: {s:?}");
+    tier.clear();
+    assert_eq!(pool.in_use(), 0, "cleared tier leaks pooled views");
+}
