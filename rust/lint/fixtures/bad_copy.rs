@@ -1,0 +1,31 @@
+//! Fixture: unmetered data-path copies must be flagged (rule
+//! `copy-smell`). Scanned as `ring/bad_copy.rs`, i.e. inside a
+//! registered data-path module. Expected violations: 3
+//! (`to_vec`, `extend_from_slice`, `data.clone()`); the handle clone
+//! is a refcount bump and stays legal.
+
+use std::sync::Arc;
+
+pub struct Frame {
+    data: Vec<u8>,
+    pool: Arc<String>,
+}
+
+impl Frame {
+    pub fn copy_out(&self) -> Vec<u8> {
+        self.data.to_vec()
+    }
+
+    pub fn append_to(&self, out: &mut Vec<u8>) {
+        out.extend_from_slice(&self.data);
+    }
+
+    pub fn duplicate(&self) -> Vec<u8> {
+        self.data.clone()
+    }
+
+    pub fn share_pool(&self) -> Arc<String> {
+        // Refcount bump, not a byte copy: not flagged.
+        self.pool.clone()
+    }
+}

@@ -1,0 +1,28 @@
+//! Fixture: `unsafe` without `// SAFETY:` must be flagged
+//! (rule `unsafe-safety`). Expected violations: 3.
+
+pub struct Slot {
+    ptr: *mut u8,
+    len: usize,
+}
+
+impl Slot {
+    pub fn read_first(&self) -> u8 {
+        // A comment that is not a safety argument.
+        unsafe { *self.ptr }
+    }
+
+    pub unsafe fn set_len(&mut self, len: usize) {
+        self.len = len;
+    }
+}
+
+unsafe impl Send for Slot {}
+
+#[cfg(test)]
+mod tests {
+    // Exempt scope: unsafe in tests is not flagged.
+    pub fn touch(p: *mut u8) -> u8 {
+        unsafe { *p }
+    }
+}

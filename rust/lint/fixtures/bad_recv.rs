@@ -1,0 +1,18 @@
+//! Fixture: a pump-loop file blocking on unbounded `recv()` without
+//! `// LINT: recv-ok(reason)` must be flagged (rule
+//! `pump-discipline`). Expected violations: 1 (the `try_recv` is the
+//! sanctioned shape and stays legal).
+
+use std::sync::mpsc::Receiver;
+
+pub fn drain(rx: &Receiver<u64>) -> u64 {
+    let mut sum = 0;
+    while let Ok(v) = rx.try_recv() {
+        sum += v;
+    }
+    sum
+}
+
+pub fn block_forever(rx: &Receiver<u64>) -> u64 {
+    rx.recv().unwrap_or(0)
+}

@@ -1,0 +1,31 @@
+//! Fixture: `Ordering::Relaxed` on a registered atomic without a
+//! `// LINT: relaxed-ok(reason)` annotation must be flagged (rule
+//! `relaxed-ordering`). Expected violations: 2 (the annotated SeqCst
+//! and unregistered-counter uses are fine).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+pub struct Bell {
+    seq: AtomicU64,
+    stat_wakes: AtomicU64,
+}
+
+impl Bell {
+    pub fn ring(&self) {
+        // Lost-wakeup edge: must not be Relaxed.
+        self.seq.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn peek(&self) -> u64 {
+        self.seq.load(Ordering::Relaxed)
+    }
+
+    pub fn seq_ok(&self) -> u64 {
+        self.seq.load(Ordering::SeqCst)
+    }
+
+    pub fn count(&self) -> u64 {
+        // Unregistered stats counter: Relaxed is fine without notes.
+        self.stat_wakes.load(Ordering::Relaxed)
+    }
+}

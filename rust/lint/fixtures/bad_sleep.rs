@@ -1,0 +1,14 @@
+//! Fixture: a pump-loop file calling `thread::sleep` without
+//! `// LINT: sleep-ok(reason)` must be flagged (rule
+//! `pump-discipline`). Expected violations: 1.
+
+use std::time::Duration;
+
+pub fn pump_once(budget: &mut u32) {
+    if *budget == 0 {
+        // Parks the pump without telling the governor.
+        std::thread::sleep(Duration::from_millis(1));
+        *budget = 8;
+    }
+    *budget -= 1;
+}

@@ -1,0 +1,9 @@
+//! Fixture: client side of the `control-coverage` rule. Covers
+//! `CreateFile` and `CpuStats`; deliberately lacks `orphaned()`.
+
+pub struct DdsClient;
+
+impl DdsClient {
+    pub fn create_file(&self) {}
+    pub fn cpu_stats(&self) {}
+}

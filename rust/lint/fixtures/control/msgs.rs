@@ -1,0 +1,10 @@
+//! Fixture: control-plane enum for the `control-coverage` rule.
+//! `Orphaned` has no client accessor and must be flagged;
+//! `Shutdown` is exempt by registry; the rest are covered.
+
+pub enum ControlMsg {
+    CreateFile,
+    CpuStats,
+    Orphaned,
+    Shutdown,
+}

@@ -1,0 +1,49 @@
+//! Fixture: every pattern the linter hunts, each with its
+//! justification in place. Scanned as both a data-path file
+//! (`ring/good.rs`) and a pump file. Expected violations: 0.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::Receiver;
+use std::time::Duration;
+
+pub struct Bell {
+    seq: AtomicU64,
+    ptr: *mut u8,
+}
+
+impl Bell {
+    pub fn ring(&self) {
+        self.seq.fetch_add(1, Ordering::SeqCst);
+    }
+
+    pub fn fast_peek(&self) -> u64 {
+        // LINT: relaxed-ok(hint only; callers re-check with SeqCst before parking)
+        self.seq.load(Ordering::Relaxed)
+    }
+
+    pub fn first_byte(&self) -> u8 {
+        // SAFETY: `ptr` is non-null and points into a live, pinned
+        // allocation for the lifetime of `self` (set by the ctor).
+        unsafe { *self.ptr }
+    }
+
+    /// # Safety
+    /// Caller must guarantee `ptr` outlives `self`.
+    // SAFETY: documented contract above; no derefs happen here.
+    pub unsafe fn adopt(&mut self, ptr: *mut u8) {
+        self.ptr = ptr;
+    }
+}
+
+pub fn snapshot(data: &[u8]) -> Vec<u8> {
+    // LINT: copy-ok(ledger-metered snapshot at the API boundary)
+    data.to_vec()
+}
+
+pub fn shutdown_drain(rx: &Receiver<u64>) -> u64 {
+    // LINT: recv-ok(shutdown path; sender drop unblocks it)
+    let last = rx.recv().unwrap_or(0);
+    // LINT: sleep-ok(bounded settle before exit; off the hot path)
+    std::thread::sleep(Duration::from_millis(1));
+    last
+}

@@ -1,0 +1,398 @@
+#!/usr/bin/env python3
+"""Line-level Python mirror of ddslint (rust/lint/src/lib.rs).
+
+The authoritative checker is the Rust crate: a syn AST walk with real
+spans, run blocking in CI. This mirror approximates the same rules with
+line scanning so the invariant registry can be exercised in
+environments without a Rust toolchain (it is how the repo's annotation
+audit was driven). Divergences are possible in pathological code (raw
+strings containing `//`, braces in string literals); when the two
+disagree, the Rust crate wins.
+
+Usage:
+    python3 rust/lint/mirror.py                 # real registry over rust/src
+    python3 rust/lint/mirror.py --fixtures      # fixture expectations
+"""
+
+import argparse
+import os
+import re
+import sys
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+REPO_ROOT = os.path.normpath(os.path.join(HERE, "..", ".."))
+
+
+# ── registry (same TOML subset as the Rust parser) ───────────────────
+
+def parse_value(raw, line_no):
+    raw = raw.strip()
+    if raw.startswith('"'):
+        end = raw.index('"', 1)
+        return raw[1:end]
+    if raw.startswith("["):
+        if not raw.endswith("]"):
+            raise ValueError(f"line {line_no}: arrays must be single-line")
+        items = []
+        rest = raw[1:-1].strip()
+        while rest:
+            if not rest.startswith('"'):
+                raise ValueError(f"line {line_no}: array items must be strings")
+            end = rest.index('"', 1)
+            items.append(rest[1:end])
+            rest = rest[end + 1:].strip()
+            if rest.startswith(","):
+                rest = rest[1:].strip()
+        return items
+    return int(raw)
+
+
+def parse_registry(text):
+    reg = {
+        "safety_lookback": 6,
+        "annotation_lookback": 4,
+        "atomics": [],
+        "copy_modules": [],
+        "copy_methods": [],
+        "clone_receiver_idents": [],
+        "clone_receiver_suffixes": [],
+        "pump_files": [],
+        "control": None,
+    }
+    section = ""
+    for idx, raw_line in enumerate(text.splitlines()):
+        line_no = idx + 1
+        line = raw_line
+        hash_at = raw_line.find("#")
+        if hash_at >= 0 and '"' not in raw_line[:hash_at]:
+            line = raw_line[:hash_at]
+        line = line.strip()
+        if not line:
+            continue
+        if line.startswith("[[") and line.endswith("]]"):
+            section = line[2:-2]
+            if section == "atomics":
+                reg["atomics"].append({"name": "", "patterns": [], "why": ""})
+            else:
+                raise ValueError(f"line {line_no}: unknown array section `{section}`")
+            continue
+        if line.startswith("[") and line.endswith("]"):
+            section = line[1:-1]
+            if section == "control_rule" and reg["control"] is None:
+                reg["control"] = {
+                    "enum_file": "", "enum_name": "", "impl_file": "",
+                    "impl_type": "", "exempt": [], "rename": [],
+                }
+            continue
+        key, _, raw_val = line.partition("=")
+        key = key.strip()
+        val = parse_value(raw_val, line_no)
+        if section == "unsafe_rule" and key == "lookback":
+            reg["safety_lookback"] = int(val)
+        elif section == "annotations" and key == "lookback":
+            reg["annotation_lookback"] = int(val)
+        elif section == "atomics":
+            reg["atomics"][-1][key] = val
+        elif section == "copy_rule":
+            if key == "modules":
+                reg["copy_modules"] = val
+            elif key == "methods":
+                reg["copy_methods"] = val
+            elif key == "clone_receiver_idents":
+                reg["clone_receiver_idents"] = val
+            elif key == "clone_receiver_suffixes":
+                reg["clone_receiver_suffixes"] = val
+        elif section == "pump_rule" and key == "files":
+            reg["pump_files"] = val
+        elif section == "control_rule":
+            if key == "rename":
+                reg["control"][key] = [tuple(x.split("=", 1)) for x in val]
+            else:
+                reg["control"][key] = val
+    return reg
+
+
+# ── scanning helpers ─────────────────────────────────────────────────
+
+def code_part(line):
+    """Best-effort strip of a trailing // comment (quote-parity check)."""
+    i = line.find("//")
+    while i >= 0:
+        if line[:i].count('"') % 2 == 0:
+            return line[:i]
+        i = line.find("//", i + 1)
+    return line
+
+
+def comment_has(line, marker):
+    i = line.find("//")
+    return i >= 0 and marker in line[i:]
+
+
+def annotated(lines, line, marker, lookback):
+    idx = min(line - 1, len(lines) - 1)
+    lo = max(0, idx - lookback)
+    return any(comment_has(l, marker) for l in lines[lo:idx + 1])
+
+
+def exempt_spans(lines):
+    """(start, end) 0-based inclusive line ranges of #[cfg(test/loom/miri)]
+    items, matched by brace counting."""
+    spans = []
+    i, n = 0, len(lines)
+    cfg_re = re.compile(r"^\s*#\[cfg\(")
+    word_re = re.compile(r"\b(test|loom|miri)\b")
+    while i < n:
+        if cfg_re.match(lines[i]) and word_re.search(lines[i]):
+            j = i
+            while j < n and "{" not in code_part(lines[j]):
+                if code_part(lines[j]).rstrip().endswith(";"):
+                    break  # gated `use`/item without a body
+                j += 1
+            if j < n and "{" in code_part(lines[j]):
+                depth, k = 0, j
+                while k < n:
+                    c = code_part(lines[k])
+                    depth += c.count("{") - c.count("}")
+                    if depth <= 0 and k >= j:
+                        break
+                    k += 1
+                spans.append((i, k))
+                i = k + 1
+                continue
+        i += 1
+    return spans
+
+
+def in_spans(spans, idx):
+    return any(a <= idx <= b for a, b in spans)
+
+
+def normalize(s):
+    return re.sub(r"\s+", "", s)
+
+
+def scan_file(rel, text, reg):
+    lines = text.splitlines()
+    out = []
+    spans = exempt_spans(lines)
+    module = rel.split("/", 1)[0].removesuffix(".rs")
+    in_data_path = module in reg["copy_modules"]
+    is_pump = rel in reg["pump_files"]
+
+    unsafe_re = re.compile(r"\bunsafe\s*(\{|fn\b|impl\b)")
+    clone_ident_re = None
+    if reg["clone_receiver_idents"]:
+        idents = "|".join(map(re.escape, reg["clone_receiver_idents"]))
+        clone_ident_re = re.compile(
+            r"(?:^|[^A-Za-z0-9_])(?:" + idents + r")\.clone\(\)")
+
+    def push(i, rule, msg):
+        out.append((rel, i + 1, rule, msg))
+
+    for i, raw in enumerate(lines):
+        if in_spans(spans, i):
+            continue
+        code = code_part(raw)
+        if not code.strip():
+            continue
+        norm = normalize(code)
+
+        for m in unsafe_re.finditer(code):
+            if not annotated(lines, i + 1, "SAFETY:", reg["safety_lookback"]):
+                push(i, "unsafe-safety", f"`unsafe {m.group(1)}` without // SAFETY:")
+
+        if "Ordering::Relaxed" in norm:
+            window = norm
+            if code.strip().startswith("."):
+                window = "".join(
+                    normalize(code_part(lines[k])) for k in range(max(0, i - 2), i + 1))
+            for rule in reg["atomics"]:
+                if any(p in window for p in rule["patterns"]):
+                    if not annotated(lines, i + 1, "LINT: relaxed-ok",
+                                     reg["annotation_lookback"]):
+                        push(i, "relaxed-ordering",
+                             f"Relaxed on registered `{rule['name']}` without relaxed-ok")
+                    break
+
+        if in_data_path:
+            for meth in reg["copy_methods"]:
+                if f".{meth}(" in norm and not annotated(
+                        lines, i + 1, "LINT: copy-ok", reg["annotation_lookback"]):
+                    push(i, "copy-smell", f"data-path `{meth}` without copy-ok")
+            hit_clone = (clone_ident_re and clone_ident_re.search(norm)) or any(
+                (s + ".clone()") in norm for s in reg["clone_receiver_suffixes"])
+            if hit_clone and not annotated(
+                    lines, i + 1, "LINT: copy-ok", reg["annotation_lookback"]):
+                push(i, "copy-smell", "data-path byte-buffer clone without copy-ok")
+
+        if is_pump:
+            if "thread::sleep(" in norm and not annotated(
+                    lines, i + 1, "LINT: sleep-ok", reg["annotation_lookback"]):
+                push(i, "pump-discipline", "pump file thread::sleep without sleep-ok")
+            if ".recv()" in norm and not annotated(
+                    lines, i + 1, "LINT: recv-ok", reg["annotation_lookback"]):
+                push(i, "pump-discipline", "pump file unbounded recv() without recv-ok")
+
+    return out
+
+
+def snake_case(name):
+    return re.sub(r"(?<!^)([A-Z])", r"_\1", name).lower()
+
+
+def check_control(reg, repo_root):
+    ctl = reg["control"]
+    if not ctl:
+        return []
+    with open(os.path.join(repo_root, ctl["enum_file"])) as f:
+        enum_lines = f.read().splitlines()
+    with open(os.path.join(repo_root, ctl["impl_file"])) as f:
+        impl_text = f.read()
+
+    variants = []
+    depth, inside = 0, False
+    head_re = re.compile(r"\benum\s+" + re.escape(ctl["enum_name"]) + r"\b")
+    var_re = re.compile(r"^\s*([A-Z][A-Za-z0-9]*)\s*[\({,]?")
+    for i, raw in enumerate(enum_lines):
+        code = code_part(raw)
+        if not inside and head_re.search(code):
+            inside = True
+            depth = 0
+        if inside:
+            if depth == 1:
+                m = var_re.match(code)
+                if m:
+                    variants.append((m.group(1), i + 1))
+            depth += code.count("{") - code.count("}")
+            if depth <= 0 and "{" in "".join(enum_lines[:i + 1]):
+                if "}" in code:
+                    break
+
+    impl_m = re.search(r"impl\s+" + re.escape(ctl["impl_type"]) + r"\s*\{", impl_text)
+    methods = set()
+    if impl_m:
+        depth, j = 0, impl_m.end() - 1
+        body_start = j
+        for j in range(body_start, len(impl_text)):
+            if impl_text[j] == "{":
+                depth += 1
+            elif impl_text[j] == "}":
+                depth -= 1
+                if depth == 0:
+                    break
+        body = impl_text[body_start:j]
+        methods = set(re.findall(r"\bfn\s+([a-z_][a-z0-9_]*)", body))
+
+    out = []
+    renames = dict(ctl["rename"])
+    for variant, line in variants:
+        if variant in ctl["exempt"]:
+            continue
+        want = renames.get(variant, snake_case(variant))
+        if want not in methods:
+            out.append((ctl["enum_file"], line, "control-coverage",
+                        f"{ctl['enum_name']}::{variant} has no "
+                        f"{ctl['impl_type']}::{want} accessor"))
+    return out
+
+
+def run(repo_root, scan_root, reg):
+    out = []
+    for dirpath, dirnames, filenames in os.walk(scan_root):
+        dirnames.sort()
+        for fn in sorted(filenames):
+            if not fn.endswith(".rs"):
+                continue
+            path = os.path.join(dirpath, fn)
+            rel = os.path.relpath(path, scan_root).replace(os.sep, "/")
+            with open(path) as f:
+                out.extend(scan_file(rel, f.read(), reg))
+    out.extend(check_control(reg, repo_root))
+    return out
+
+
+# ── fixture self-test (mirrors rust/lint/tests/fixtures.rs) ──────────
+
+FIXTURE_REGISTRY = """
+[[atomics]]
+name = "bell.seq"
+patterns = [".seq.load(", ".seq.store(", ".seq.fetch_add("]
+why = "fixture doorbell sequence"
+
+[copy_rule]
+modules = ["ring"]
+methods = ["to_vec", "to_owned", "extend_from_slice"]
+clone_receiver_idents = ["data", "bytes", "payload"]
+clone_receiver_suffixes = ["as_slice()"]
+
+[pump_rule]
+files = ["pump/bad_sleep.rs", "pump/bad_recv.rs", "ring/good.rs"]
+
+[control_rule]
+enum_file = "fixtures/control/msgs.rs"
+enum_name = "ControlMsg"
+impl_file = "fixtures/control/client.rs"
+impl_type = "DdsClient"
+exempt = ["Shutdown"]
+rename = []
+"""
+
+FIXTURE_EXPECT = [
+    ("buf/bad_missing_safety.rs", "bad_missing_safety.rs", "unsafe-safety", 3),
+    ("idle.rs", "bad_relaxed.rs", "relaxed-ordering", 2),
+    ("ring/bad_copy.rs", "bad_copy.rs", "copy-smell", 3),
+    ("metrics/bad_copy.rs", "bad_copy.rs", "copy-smell", 0),
+    ("pump/bad_sleep.rs", "bad_sleep.rs", "pump-discipline", 1),
+    ("pump/bad_recv.rs", "bad_recv.rs", "pump-discipline", 1),
+    ("fault/bad_sleep.rs", "bad_sleep.rs", "pump-discipline", 0),
+    ("ring/good.rs", "good.rs", None, 0),
+]
+
+
+def fixtures_main():
+    reg = parse_registry(FIXTURE_REGISTRY)
+    failures = 0
+    for rel, fname, rule, want in FIXTURE_EXPECT:
+        with open(os.path.join(HERE, "fixtures", fname)) as f:
+            vs = scan_file(rel, f.read(), reg)
+        got = len([v for v in vs if rule is None or v[2] == rule])
+        status = "ok" if got == want else "FAIL"
+        if got != want:
+            failures += 1
+            for v in vs:
+                print("   ", f"{v[0]}:{v[1]}: [{v[2]}] {v[3]}")
+        print(f"{status:4} {rel:28} {rule or '(any)':18} want={want} got={got}")
+    vs = check_control(reg, HERE)
+    ok = len(vs) == 1 and "Orphaned" in vs[0][3]
+    print(f"{'ok' if ok else 'FAIL':4} control-coverage fixture     want=1 got={len(vs)}")
+    failures += 0 if ok else 1
+    return 1 if failures else 0
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fixtures", action="store_true",
+                    help="run the fixture expectations instead of the tree scan")
+    ap.add_argument("--repo-root", default=REPO_ROOT)
+    ap.add_argument("--scan-root", default=None)
+    ap.add_argument("--registry", default=os.path.join(HERE, "invariants.toml"))
+    args = ap.parse_args()
+
+    if args.fixtures:
+        sys.exit(fixtures_main())
+
+    scan_root = args.scan_root or os.path.join(args.repo_root, "rust", "src")
+    with open(args.registry) as f:
+        reg = parse_registry(f.read())
+    vs = run(args.repo_root, scan_root, reg)
+    for rel, line, rule, msg in vs:
+        print(f"{rel}:{line}: [{rule}] {msg}")
+    if vs:
+        print(f"mirror: {len(vs)} violation(s)")
+        sys.exit(1)
+    print(f"mirror: clean ({scan_root})")
+
+
+if __name__ == "__main__":
+    main()

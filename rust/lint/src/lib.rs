@@ -1,0 +1,726 @@
+//! `ddslint` — the DDS repo's project-specific invariant checker.
+//!
+//! A syn-based AST walk over `rust/src/` enforcing the concurrency and
+//! zero-copy contracts the code comments assert, from a checked-in
+//! registry (`rust/lint/invariants.toml`):
+//!
+//! * **unsafe-safety** — every `unsafe` block / fn / impl carries a
+//!   `// SAFETY:` comment within a few lines above it.
+//! * **relaxed-ordering** — atomics registered as lost-wakeup- or
+//!   coherence-critical (doorbell sequence, ring head/tail words, tier
+//!   epoch cells, the SSD queue's emptiness mirrors) may not be
+//!   accessed with `Ordering::Relaxed` unless the site is annotated
+//!   `// LINT: relaxed-ok(reason)`.
+//! * **copy-smell** — data-path modules may not call `to_vec`,
+//!   `to_owned`, `extend_from_slice`, or clone a byte buffer without a
+//!   `// LINT: copy-ok(reason)` justification, so the `CopyLedger`
+//!   guarantee ("every data-path memcpy is deliberate and metered") is
+//!   enforced at the AST, not just at runtime.
+//! * **pump-discipline** — pump-loop files may not call
+//!   `std::thread::sleep` or unbounded `recv()` without a
+//!   `// LINT: sleep-ok(...)` / `// LINT: recv-ok(...)` annotation
+//!   (parks must go through the doorbell/governor machinery).
+//! * **control-coverage** — every `ControlMsg` variant has a matching
+//!   `DdsClient` accessor (snake_case of the variant name), so the
+//!   control plane cannot grow service-side verbs the host library
+//!   cannot reach.
+//!
+//! `#[cfg(test)]` and `#[cfg(loom)]` modules are exempt: tests copy
+//! freely, and the loom mutation self-tests *deliberately* contain the
+//! orderings this linter forbids.
+//!
+//! syn discards comments, so the AST walk anchors each finding to a
+//! source line and the annotation/SAFETY checks re-read the raw lines
+//! around that anchor — AST precision for *what* is called, raw text
+//! for *how it is justified*.
+
+use std::fmt;
+use std::path::{Path, PathBuf};
+
+use quote::ToTokens;
+use syn::spanned::Spanned;
+use syn::visit::Visit;
+
+/// Atomic method names whose argument list can carry an `Ordering`.
+const ATOMIC_METHODS: &[&str] = &[
+    "load",
+    "store",
+    "swap",
+    "fetch_add",
+    "fetch_sub",
+    "fetch_and",
+    "fetch_or",
+    "fetch_xor",
+    "fetch_max",
+    "fetch_min",
+    "fetch_update",
+    "compare_exchange",
+    "compare_exchange_weak",
+];
+
+/// One finding. `line` is 1-based.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Violation {
+    pub file: String,
+    pub line: usize,
+    pub rule: &'static str,
+    pub msg: String,
+}
+
+impl fmt::Display for Violation {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}: [{}] {}", self.file, self.line, self.rule, self.msg)
+    }
+}
+
+/// A registered lost-wakeup-/coherence-critical atomic.
+#[derive(Debug, Clone, Default)]
+pub struct AtomicRule {
+    pub name: String,
+    /// Whitespace-free substrings matched against the normalized call
+    /// expression, e.g. `.tail.0.` or `comp_len.`.
+    pub patterns: Vec<String>,
+    pub why: String,
+}
+
+/// The `ControlMsg` ↔ `DdsClient` completeness rule.
+#[derive(Debug, Clone, Default)]
+pub struct ControlRule {
+    pub enum_file: String,
+    pub enum_name: String,
+    pub impl_file: String,
+    pub impl_type: String,
+    /// Variants with no accessor by design (e.g. `Shutdown`, which is
+    /// sent by the service handle's `Drop`).
+    pub exempt: Vec<String>,
+    /// `"Variant=accessor"` overrides for names that are not plain
+    /// snake_case of the variant.
+    pub rename: Vec<(String, String)>,
+}
+
+/// The parsed `invariants.toml`.
+#[derive(Debug, Clone)]
+pub struct Registry {
+    /// How many lines above an `unsafe` token a `// SAFETY:` comment
+    /// may sit.
+    pub safety_lookback: usize,
+    /// How many lines above a flagged call a `// LINT: ...-ok`
+    /// annotation may sit.
+    pub annotation_lookback: usize,
+    pub atomics: Vec<AtomicRule>,
+    /// Top-level `rust/src` modules under the copy-smell rule.
+    pub copy_modules: Vec<String>,
+    /// Flagged method names (`to_vec`, ...).
+    pub copy_methods: Vec<String>,
+    /// `x.clone()` is flagged when the receiver's last path segment is
+    /// one of these identifiers...
+    pub clone_receiver_idents: Vec<String>,
+    /// ...or when the normalized receiver ends with one of these
+    /// suffixes (e.g. `as_slice()`).
+    pub clone_receiver_suffixes: Vec<String>,
+    /// Files (relative to the scan root) under the pump-discipline
+    /// rule.
+    pub pump_files: Vec<String>,
+    pub control: Option<ControlRule>,
+}
+
+impl Default for Registry {
+    fn default() -> Self {
+        Registry {
+            safety_lookback: 6,
+            annotation_lookback: 4,
+            atomics: Vec::new(),
+            copy_modules: Vec::new(),
+            copy_methods: Vec::new(),
+            clone_receiver_idents: Vec::new(),
+            clone_receiver_suffixes: Vec::new(),
+            pump_files: Vec::new(),
+            control: None,
+        }
+    }
+}
+
+/// Minimal TOML value for the subset the registry uses.
+#[derive(Debug, Clone)]
+enum Value {
+    Str(String),
+    Int(i64),
+    List(Vec<String>),
+}
+
+fn parse_value(raw: &str, line_no: usize) -> Result<Value, String> {
+    let raw = raw.trim();
+    if let Some(rest) = raw.strip_prefix('"') {
+        let end = rest.find('"').ok_or_else(|| format!("line {line_no}: unterminated string"))?;
+        return Ok(Value::Str(rest[..end].to_string()));
+    }
+    if raw.starts_with('[') {
+        if !raw.ends_with(']') {
+            return Err(format!("line {line_no}: arrays must be single-line"));
+        }
+        let body = &raw[1..raw.len() - 1];
+        let mut items = Vec::new();
+        let mut rest = body.trim();
+        while !rest.is_empty() {
+            let inner = rest
+                .strip_prefix('"')
+                .ok_or_else(|| format!("line {line_no}: array items must be strings"))?;
+            let end =
+                inner.find('"').ok_or_else(|| format!("line {line_no}: unterminated string"))?;
+            items.push(inner[..end].to_string());
+            rest = inner[end + 1..].trim();
+            rest = rest.strip_prefix(',').unwrap_or(rest).trim();
+        }
+        return Ok(Value::List(items));
+    }
+    raw.parse::<i64>()
+        .map(Value::Int)
+        .map_err(|_| format!("line {line_no}: unsupported value `{raw}`"))
+}
+
+impl Registry {
+    /// Parse the registry from the TOML subset it is written in:
+    /// `[section]` / `[[section]]` headers, `key = "str" | int |
+    /// ["a", "b"]` pairs, `#` comments. No external TOML crate — the
+    /// grammar is small enough to own, and the Python mirror
+    /// (`rust/lint/mirror.py`) implements the identical subset.
+    pub fn from_toml(text: &str) -> Result<Registry, String> {
+        let mut reg = Registry::default();
+        let mut section = String::new();
+        for (idx, raw_line) in text.lines().enumerate() {
+            let line_no = idx + 1;
+            let line = match raw_line.find('#') {
+                // `#` inside a quoted value does not occur in this
+                // registry; the subset forbids it.
+                Some(i) if !raw_line[..i].contains('"') => &raw_line[..i],
+                _ => raw_line,
+            };
+            let line = line.trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(h) = line.strip_prefix("[[").and_then(|l| l.strip_suffix("]]")) {
+                section = h.to_string();
+                if section == "atomics" {
+                    reg.atomics.push(AtomicRule::default());
+                } else {
+                    return Err(format!("line {line_no}: unknown array section `{section}`"));
+                }
+                continue;
+            }
+            if let Some(h) = line.strip_prefix('[').and_then(|l| l.strip_suffix(']')) {
+                section = h.to_string();
+                if section == "control_rule" && reg.control.is_none() {
+                    reg.control = Some(ControlRule::default());
+                }
+                continue;
+            }
+            let (key, raw_val) = line
+                .split_once('=')
+                .ok_or_else(|| format!("line {line_no}: expected `key = value`"))?;
+            let key = key.trim();
+            let val = parse_value(raw_val, line_no)?;
+            reg.apply(&section, key, val, line_no)?;
+        }
+        Ok(reg)
+    }
+
+    fn apply(&mut self, section: &str, key: &str, val: Value, line_no: usize) -> Result<(), String> {
+        let bad = || format!("line {line_no}: bad type for `{section}.{key}`");
+        match (section, key) {
+            ("unsafe_rule", "lookback") => match val {
+                Value::Int(n) => self.safety_lookback = n.max(0) as usize,
+                _ => return Err(bad()),
+            },
+            ("annotations", "lookback") => match val {
+                Value::Int(n) => self.annotation_lookback = n.max(0) as usize,
+                _ => return Err(bad()),
+            },
+            ("atomics", _) => {
+                let rule = self
+                    .atomics
+                    .last_mut()
+                    .ok_or_else(|| format!("line {line_no}: key outside [[atomics]]"))?;
+                match (key, val) {
+                    ("name", Value::Str(s)) => rule.name = s,
+                    ("why", Value::Str(s)) => rule.why = s,
+                    ("patterns", Value::List(l)) => rule.patterns = l,
+                    _ => return Err(bad()),
+                }
+            }
+            ("copy_rule", "modules") => match val {
+                Value::List(l) => self.copy_modules = l,
+                _ => return Err(bad()),
+            },
+            ("copy_rule", "methods") => match val {
+                Value::List(l) => self.copy_methods = l,
+                _ => return Err(bad()),
+            },
+            ("copy_rule", "clone_receiver_idents") => match val {
+                Value::List(l) => self.clone_receiver_idents = l,
+                _ => return Err(bad()),
+            },
+            ("copy_rule", "clone_receiver_suffixes") => match val {
+                Value::List(l) => self.clone_receiver_suffixes = l,
+                _ => return Err(bad()),
+            },
+            ("pump_rule", "files") => match val {
+                Value::List(l) => self.pump_files = l,
+                _ => return Err(bad()),
+            },
+            ("control_rule", _) => {
+                let ctl = self.control.as_mut().expect("control_rule section initialized");
+                match (key, val) {
+                    ("enum_file", Value::Str(s)) => ctl.enum_file = s,
+                    ("enum_name", Value::Str(s)) => ctl.enum_name = s,
+                    ("impl_file", Value::Str(s)) => ctl.impl_file = s,
+                    ("impl_type", Value::Str(s)) => ctl.impl_type = s,
+                    ("exempt", Value::List(l)) => ctl.exempt = l,
+                    ("rename", Value::List(l)) => {
+                        ctl.rename = l
+                            .iter()
+                            .map(|item| {
+                                item.split_once('=')
+                                    .map(|(a, b)| (a.trim().to_string(), b.trim().to_string()))
+                                    .ok_or_else(|| {
+                                        format!("line {line_no}: rename items are `Variant=fn`")
+                                    })
+                            })
+                            .collect::<Result<_, _>>()?;
+                    }
+                    _ => return Err(bad()),
+                }
+            }
+            // Unknown keys in known sections (and whole unknown
+            // sections) are ignored so the registry can grow without
+            // lock-stepping the binary.
+            _ => {}
+        }
+        Ok(())
+    }
+}
+
+/// Strip all whitespace — token streams print with spaces between
+/// every token, the registry patterns are written without them.
+fn normalize(tokens: &str) -> String {
+    tokens.chars().filter(|c| !c.is_whitespace()).collect()
+}
+
+/// Does `line` carry `marker` inside a `//` comment?
+fn comment_has(line: &str, marker: &str) -> bool {
+    match line.find("//") {
+        Some(i) => line[i..].contains(marker),
+        None => false,
+    }
+}
+
+/// Is `marker` present in a comment on `line` (1-based) or within
+/// `lookback` lines above it?
+fn annotated(lines: &[&str], line: usize, marker: &str, lookback: usize) -> bool {
+    if line == 0 || lines.is_empty() {
+        return false;
+    }
+    let idx = (line - 1).min(lines.len() - 1);
+    let lo = idx.saturating_sub(lookback);
+    lines[lo..=idx].iter().any(|l| comment_has(l, marker))
+}
+
+/// CamelCase → snake_case (`CpuStats` → `cpu_stats`).
+fn snake_case(name: &str) -> String {
+    let mut out = String::with_capacity(name.len() + 4);
+    for (i, c) in name.chars().enumerate() {
+        if c.is_ascii_uppercase() {
+            if i > 0 {
+                out.push('_');
+            }
+            out.push(c.to_ascii_lowercase());
+        } else {
+            out.push(c);
+        }
+    }
+    out
+}
+
+/// Is this item gated out of the lint's scope (`#[cfg(test)]` /
+/// `#[cfg(loom)]` and combinations)? The loom mutation self-tests
+/// *deliberately* contain forbidden orderings.
+fn attrs_exempt(attrs: &[syn::Attribute]) -> bool {
+    attrs.iter().any(|a| {
+        let s = a.to_token_stream().to_string();
+        s.contains("cfg") && (s.contains("test") || s.contains("loom") || s.contains("miri"))
+    })
+}
+
+struct Checker<'a> {
+    reg: &'a Registry,
+    rel: &'a str,
+    lines: Vec<&'a str>,
+    in_data_path: bool,
+    is_pump: bool,
+    out: Vec<Violation>,
+}
+
+impl Checker<'_> {
+    fn push(&mut self, line: usize, rule: &'static str, msg: String) {
+        self.out.push(Violation { file: self.rel.to_string(), line, rule, msg });
+    }
+
+    fn require_safety(&mut self, line: usize, what: &str) {
+        if !annotated(&self.lines, line, "SAFETY:", self.reg.safety_lookback) {
+            self.push(
+                line,
+                "unsafe-safety",
+                format!("{what} without a `// SAFETY:` comment within reach"),
+            );
+        }
+    }
+
+    fn require_annotation(&mut self, line: usize, rule: &'static str, marker: &str, msg: String) {
+        if !annotated(&self.lines, line, marker, self.reg.annotation_lookback) {
+            self.push(line, rule, msg);
+        }
+    }
+}
+
+impl<'a, 'ast> Visit<'ast> for Checker<'a> {
+    fn visit_item_mod(&mut self, node: &'ast syn::ItemMod) {
+        if attrs_exempt(&node.attrs) {
+            return; // do not descend into test/loom modules
+        }
+        syn::visit::visit_item_mod(self, node);
+    }
+
+    fn visit_item_fn(&mut self, node: &'ast syn::ItemFn) {
+        if attrs_exempt(&node.attrs) {
+            return;
+        }
+        if let Some(tok) = &node.sig.unsafety {
+            let line = tok.span.start().line;
+            self.require_safety(line, "`unsafe fn`");
+        }
+        syn::visit::visit_item_fn(self, node);
+    }
+
+    fn visit_impl_item_fn(&mut self, node: &'ast syn::ImplItemFn) {
+        if attrs_exempt(&node.attrs) {
+            return;
+        }
+        if let Some(tok) = &node.sig.unsafety {
+            let line = tok.span.start().line;
+            self.require_safety(line, "`unsafe fn`");
+        }
+        syn::visit::visit_impl_item_fn(self, node);
+    }
+
+    fn visit_item_impl(&mut self, node: &'ast syn::ItemImpl) {
+        if attrs_exempt(&node.attrs) {
+            return;
+        }
+        if let Some(tok) = &node.unsafety {
+            let line = tok.span.start().line;
+            self.require_safety(line, "`unsafe impl`");
+        }
+        syn::visit::visit_item_impl(self, node);
+    }
+
+    fn visit_expr_unsafe(&mut self, node: &'ast syn::ExprUnsafe) {
+        let line = node.unsafe_token.span.start().line;
+        self.require_safety(line, "`unsafe` block");
+        syn::visit::visit_expr_unsafe(self, node);
+    }
+
+    fn visit_expr_call(&mut self, node: &'ast syn::ExprCall) {
+        if self.is_pump {
+            let callee = normalize(&node.func.to_token_stream().to_string());
+            if callee.ends_with("thread::sleep") || callee == "sleep" {
+                let line = node.func.span().start().line;
+                self.require_annotation(
+                    line,
+                    "pump-discipline",
+                    "LINT: sleep-ok",
+                    "pump-loop file calls thread::sleep without `// LINT: sleep-ok(reason)` \
+                     (parks must go through the doorbell/governor)"
+                        .to_string(),
+                );
+            }
+        }
+        syn::visit::visit_expr_call(self, node);
+    }
+
+    fn visit_expr_method_call(&mut self, node: &'ast syn::ExprMethodCall) {
+        let method = node.method.to_string();
+        let line = node.method.span().start().line;
+
+        if self.in_data_path && self.reg.copy_methods.iter().any(|m| *m == method) {
+            self.require_annotation(
+                line,
+                "copy-smell",
+                "LINT: copy-ok",
+                format!(
+                    "data-path call to `{method}` without `// LINT: copy-ok(reason)` \
+                     (the CopyLedger contract: every data-path memcpy is deliberate)"
+                ),
+            );
+        }
+
+        if self.in_data_path && method == "clone" && node.args.is_empty() {
+            let recv = normalize(&node.receiver.to_token_stream().to_string());
+            let last = recv.rsplit('.').next().unwrap_or(&recv);
+            let by_ident = self.reg.clone_receiver_idents.iter().any(|id| last == *id);
+            let by_suffix = self.reg.clone_receiver_suffixes.iter().any(|s| recv.ends_with(s));
+            if by_ident || by_suffix {
+                self.require_annotation(
+                    line,
+                    "copy-smell",
+                    "LINT: copy-ok",
+                    format!(
+                        "data-path `.clone()` of a byte buffer (`{recv}`) without \
+                         `// LINT: copy-ok(reason)`"
+                    ),
+                );
+            }
+        }
+
+        if self.is_pump && method == "recv" && node.args.is_empty() {
+            self.require_annotation(
+                line,
+                "pump-discipline",
+                "LINT: recv-ok",
+                "pump-loop file calls unbounded `recv()` without `// LINT: recv-ok(reason)` \
+                 (use try_recv / recv_timeout via the governor)"
+                    .to_string(),
+            );
+        }
+
+        if ATOMIC_METHODS.contains(&method.as_str()) {
+            let call = normalize(&node.to_token_stream().to_string());
+            if call.contains("Ordering::Relaxed") {
+                let hits: Vec<&AtomicRule> = self
+                    .reg
+                    .atomics
+                    .iter()
+                    .filter(|rule| rule.patterns.iter().any(|p| call.contains(p.as_str())))
+                    .collect();
+                if let Some(rule) = hits.first() {
+                    self.require_annotation(
+                        line,
+                        "relaxed-ordering",
+                        "LINT: relaxed-ok",
+                        format!(
+                            "`Ordering::Relaxed` on registered atomic `{}` ({}) without \
+                             `// LINT: relaxed-ok(reason)`",
+                            rule.name, rule.why
+                        ),
+                    );
+                }
+            }
+        }
+
+        syn::visit::visit_expr_method_call(self, node);
+    }
+}
+
+/// Scan one source file (already read) under its scan-root-relative
+/// path, e.g. `ring/response.rs`.
+pub fn scan_source(rel: &str, src: &str, reg: &Registry) -> Vec<Violation> {
+    let ast = match syn::parse_file(src) {
+        Ok(ast) => ast,
+        Err(e) => {
+            return vec![Violation {
+                file: rel.to_string(),
+                line: e.span().start().line.max(1),
+                rule: "parse",
+                msg: format!("not parseable as Rust: {e}"),
+            }];
+        }
+    };
+    let module = rel.split('/').next().unwrap_or(rel).trim_end_matches(".rs");
+    let mut checker = Checker {
+        reg,
+        rel,
+        lines: src.lines().collect(),
+        in_data_path: reg.copy_modules.iter().any(|m| m == module),
+        is_pump: reg.pump_files.iter().any(|f| f == rel),
+        out: Vec::new(),
+    };
+    checker.visit_file(&ast);
+    checker.out
+}
+
+/// Enum-variant ↔ client-accessor completeness (`control-coverage`).
+/// Paths in the rule are repo-root-relative; `repo_root` anchors them.
+pub fn check_control(reg: &Registry, repo_root: &Path) -> Result<Vec<Violation>, String> {
+    let Some(ctl) = &reg.control else {
+        return Ok(Vec::new());
+    };
+    let read = |rel: &str| -> Result<String, String> {
+        std::fs::read_to_string(repo_root.join(rel)).map_err(|e| format!("{rel}: {e}"))
+    };
+    let enum_src = read(&ctl.enum_file)?;
+    let enum_ast = syn::parse_file(&enum_src).map_err(|e| format!("{}: {e}", ctl.enum_file))?;
+    let impl_src = read(&ctl.impl_file)?;
+    let impl_ast = syn::parse_file(&impl_src).map_err(|e| format!("{}: {e}", ctl.impl_file))?;
+
+    let mut variants: Vec<(String, usize)> = Vec::new();
+    for item in &enum_ast.items {
+        if let syn::Item::Enum(e) = item {
+            if e.ident == ctl.enum_name {
+                for v in &e.variants {
+                    variants.push((v.ident.to_string(), v.ident.span().start().line));
+                }
+            }
+        }
+    }
+    if variants.is_empty() {
+        return Err(format!("{}: enum `{}` not found", ctl.enum_file, ctl.enum_name));
+    }
+
+    let mut methods: Vec<String> = Vec::new();
+    for item in &impl_ast.items {
+        if let syn::Item::Impl(imp) = item {
+            if imp.trait_.is_none()
+                && normalize(&imp.self_ty.to_token_stream().to_string()) == ctl.impl_type
+            {
+                for ii in &imp.items {
+                    if let syn::ImplItem::Fn(f) = ii {
+                        methods.push(f.sig.ident.to_string());
+                    }
+                }
+            }
+        }
+    }
+    if methods.is_empty() {
+        return Err(format!("{}: no inherent impl of `{}` found", ctl.impl_file, ctl.impl_type));
+    }
+
+    let mut out = Vec::new();
+    for (variant, line) in variants {
+        if ctl.exempt.iter().any(|e| *e == variant) {
+            continue;
+        }
+        let want = ctl
+            .rename
+            .iter()
+            .find(|(v, _)| *v == variant)
+            .map(|(_, f)| f.clone())
+            .unwrap_or_else(|| snake_case(&variant));
+        if !methods.iter().any(|m| *m == want) {
+            out.push(Violation {
+                file: ctl.enum_file.clone(),
+                line,
+                rule: "control-coverage",
+                msg: format!(
+                    "`{}::{variant}` has no `{}::{want}` accessor (add one or register an \
+                     exemption/rename in invariants.toml)",
+                    ctl.enum_name, ctl.impl_type
+                ),
+            });
+        }
+    }
+    Ok(out)
+}
+
+/// All `.rs` files under `root`, sorted for deterministic output.
+pub fn collect_rs_files(root: &Path) -> std::io::Result<Vec<PathBuf>> {
+    fn rec(dir: &Path, out: &mut Vec<PathBuf>) -> std::io::Result<()> {
+        let mut entries: Vec<_> =
+            std::fs::read_dir(dir)?.collect::<Result<Vec<_>, std::io::Error>>()?;
+        entries.sort_by_key(|e| e.path());
+        for e in entries {
+            let p = e.path();
+            if p.is_dir() {
+                rec(&p, out)?;
+            } else if p.extension().is_some_and(|x| x == "rs") {
+                out.push(p);
+            }
+        }
+        Ok(())
+    }
+    let mut out = Vec::new();
+    rec(root, &mut out)?;
+    Ok(out)
+}
+
+/// Run every check: the per-file scans over `scan_root` plus the
+/// control-coverage pass (anchored at `repo_root`).
+pub fn run(repo_root: &Path, scan_root: &Path, reg: &Registry) -> Result<Vec<Violation>, String> {
+    let mut out = Vec::new();
+    let files = collect_rs_files(scan_root).map_err(|e| format!("{}: {e}", scan_root.display()))?;
+    for path in files {
+        let src = std::fs::read_to_string(&path).map_err(|e| format!("{}: {e}", path.display()))?;
+        let rel = path
+            .strip_prefix(scan_root)
+            .unwrap_or(&path)
+            .to_string_lossy()
+            .replace(std::path::MAIN_SEPARATOR, "/");
+        out.extend(scan_source(&rel, &src, reg));
+    }
+    out.extend(check_control(reg, repo_root)?);
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn snake_case_matches_accessor_convention() {
+        assert_eq!(snake_case("CreateDirectory"), "create_directory");
+        assert_eq!(snake_case("CpuStats"), "cpu_stats");
+        assert_eq!(snake_case("Shutdown"), "shutdown");
+    }
+
+    #[test]
+    fn registry_subset_parses() {
+        let reg = Registry::from_toml(
+            r#"
+# comment
+[unsafe_rule]
+lookback = 3
+
+[[atomics]]
+name = "doorbell.seq"
+patterns = [".seq.load(", ".seq.fetch_add("]
+why = "Dekker pair"
+
+[copy_rule]
+modules = ["ring", "buf"]
+methods = ["to_vec"]
+
+[pump_rule]
+files = ["idle.rs"]
+
+[control_rule]
+enum_file = "a.rs"
+enum_name = "E"
+impl_file = "b.rs"
+impl_type = "C"
+exempt = ["Shutdown"]
+rename = ["CreatePoll=create_poll"]
+"#,
+        )
+        .unwrap();
+        assert_eq!(reg.safety_lookback, 3);
+        assert_eq!(reg.atomics.len(), 1);
+        assert_eq!(reg.atomics[0].patterns.len(), 2);
+        assert_eq!(reg.copy_modules, vec!["ring", "buf"]);
+        let ctl = reg.control.unwrap();
+        assert_eq!(ctl.exempt, vec!["Shutdown"]);
+        assert_eq!(ctl.rename, vec![("CreatePoll".to_string(), "create_poll".to_string())]);
+    }
+
+    #[test]
+    fn annotation_lookback_is_bounded() {
+        let lines = vec!["// LINT: copy-ok(x)", "", "", "", "", "let v = b.to_vec();"];
+        assert!(annotated(&lines, 6, "LINT: copy-ok", 5));
+        assert!(!annotated(&lines, 6, "LINT: copy-ok", 2));
+    }
+
+    #[test]
+    fn comment_marker_must_be_in_comment() {
+        // The marker inside a string literal on a code line does not
+        // count; after `//` it does.
+        assert!(!comment_has("let s = \"SAFETY: nope\";", "SAFETY:"));
+        assert!(comment_has("foo(); // SAFETY: fine", "SAFETY:"));
+    }
+}

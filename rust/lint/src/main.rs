@@ -1,0 +1,92 @@
+//! `ddslint` CLI.
+//!
+//! ```text
+//! ddslint [--repo-root DIR] [--scan-root DIR] [--registry FILE]
+//! ```
+//!
+//! Defaults assume invocation from the repo root (what CI does):
+//! repo-root `.`, scan-root `rust/src`, registry
+//! `rust/lint/invariants.toml`. Prints one `file:line: [rule] msg`
+//! line per violation and exits non-zero if any were found.
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+fn main() -> ExitCode {
+    let mut repo_root = PathBuf::from(".");
+    let mut scan_root: Option<PathBuf> = None;
+    let mut registry: Option<PathBuf> = None;
+
+    let mut args = std::env::args().skip(1);
+    while let Some(arg) = args.next() {
+        let mut take = |name: &str| match args.next() {
+            Some(v) => Some(PathBuf::from(v)),
+            None => {
+                eprintln!("ddslint: {name} requires a value");
+                None
+            }
+        };
+        match arg.as_str() {
+            "--repo-root" => match take("--repo-root") {
+                Some(v) => repo_root = v,
+                None => return ExitCode::from(2),
+            },
+            "--scan-root" => match take("--scan-root") {
+                Some(v) => scan_root = Some(v),
+                None => return ExitCode::from(2),
+            },
+            "--registry" => match take("--registry") {
+                Some(v) => registry = Some(v),
+                None => return ExitCode::from(2),
+            },
+            "--help" | "-h" => {
+                println!(
+                    "ddslint [--repo-root DIR] [--scan-root DIR] [--registry FILE]\n\
+                     defaults: --repo-root . --scan-root <root>/rust/src \
+                     --registry <root>/rust/lint/invariants.toml"
+                );
+                return ExitCode::SUCCESS;
+            }
+            other => {
+                eprintln!("ddslint: unknown argument `{other}`");
+                return ExitCode::from(2);
+            }
+        }
+    }
+
+    let scan_root = scan_root.unwrap_or_else(|| repo_root.join("rust/src"));
+    let registry = registry.unwrap_or_else(|| repo_root.join("rust/lint/invariants.toml"));
+
+    let text = match std::fs::read_to_string(&registry) {
+        Ok(t) => t,
+        Err(e) => {
+            eprintln!("ddslint: cannot read registry {}: {e}", registry.display());
+            return ExitCode::from(2);
+        }
+    };
+    let reg = match ddslint::Registry::from_toml(&text) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("ddslint: registry {}: {e}", registry.display());
+            return ExitCode::from(2);
+        }
+    };
+
+    match ddslint::run(&repo_root, &scan_root, &reg) {
+        Ok(violations) if violations.is_empty() => {
+            println!("ddslint: clean ({} ok)", scan_root.display());
+            ExitCode::SUCCESS
+        }
+        Ok(violations) => {
+            for v in &violations {
+                println!("{v}");
+            }
+            println!("ddslint: {} violation(s)", violations.len());
+            ExitCode::FAILURE
+        }
+        Err(e) => {
+            eprintln!("ddslint: {e}");
+            ExitCode::from(2)
+        }
+    }
+}

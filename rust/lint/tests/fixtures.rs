@@ -1,0 +1,226 @@
+//! The linter's own test bed: every known-bad fixture must be caught
+//! (with the exact rule and count), the known-good fixture must pass,
+//! and — the self-enforcing part — the real `invariants.toml` must run
+//! clean over the real `rust/src/` tree, so `cargo test -p ddslint`
+//! fails the moment an unannotated violation lands anywhere.
+
+use std::path::PathBuf;
+
+use ddslint::{check_control, run, scan_source, Registry, Violation};
+
+/// Registry used for the fixture scans. Exercises the TOML-subset
+/// parser on the same shapes the real registry uses; the pseudo
+/// rel-paths below put fixtures inside data-path modules / the pump
+/// file list.
+const FIXTURE_REGISTRY: &str = r#"
+[unsafe_rule]
+lookback = 6
+
+[annotations]
+lookback = 4
+
+[[atomics]]
+name = "bell.seq"
+patterns = [".seq.load(", ".seq.store(", ".seq.fetch_add("]
+why = "fixture doorbell sequence"
+
+[copy_rule]
+modules = ["ring"]
+methods = ["to_vec", "to_owned", "extend_from_slice"]
+clone_receiver_idents = ["data", "bytes", "payload"]
+clone_receiver_suffixes = ["as_slice()"]
+
+[pump_rule]
+files = ["pump/bad_sleep.rs", "pump/bad_recv.rs", "ring/good.rs"]
+
+[control_rule]
+enum_file = "fixtures/control/msgs.rs"
+enum_name = "ControlMsg"
+impl_file = "fixtures/control/client.rs"
+impl_type = "DdsClient"
+exempt = ["Shutdown"]
+rename = []
+"#;
+
+fn manifest_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+}
+
+fn fixture_registry() -> Registry {
+    Registry::from_toml(FIXTURE_REGISTRY).expect("fixture registry parses")
+}
+
+/// Scan one fixture file under a pseudo scan-root-relative path.
+fn scan_fixture(rel: &str, file: &str, reg: &Registry) -> Vec<Violation> {
+    let path = manifest_dir().join("fixtures").join(file);
+    let src = std::fs::read_to_string(&path)
+        .unwrap_or_else(|e| panic!("read {}: {e}", path.display()));
+    scan_source(rel, &src, reg)
+}
+
+fn count_rule(vs: &[Violation], rule: &str) -> usize {
+    vs.iter().filter(|v| v.rule == rule).count()
+}
+
+#[test]
+fn missing_safety_is_caught() {
+    let reg = fixture_registry();
+    let vs = scan_fixture("buf/bad_missing_safety.rs", "bad_missing_safety.rs", &reg);
+    // unsafe block + unsafe fn + unsafe impl; the unsafe block inside
+    // #[cfg(test)] is exempt.
+    assert_eq!(count_rule(&vs, "unsafe-safety"), 3, "violations: {vs:#?}");
+    assert_eq!(vs.len(), 3, "violations: {vs:#?}");
+}
+
+#[test]
+fn relaxed_on_registered_atomic_is_caught() {
+    let reg = fixture_registry();
+    let vs = scan_fixture("idle.rs", "bad_relaxed.rs", &reg);
+    // fetch_add + load on `seq`; the SeqCst load and the unregistered
+    // stats counter are legal.
+    assert_eq!(count_rule(&vs, "relaxed-ordering"), 2, "violations: {vs:#?}");
+    assert_eq!(vs.len(), 2, "violations: {vs:#?}");
+}
+
+#[test]
+fn unmetered_copies_are_caught() {
+    let reg = fixture_registry();
+    let vs = scan_fixture("ring/bad_copy.rs", "bad_copy.rs", &reg);
+    // to_vec + extend_from_slice + data.clone(); the Arc handle clone
+    // (refcount bump) is legal.
+    assert_eq!(count_rule(&vs, "copy-smell"), 3, "violations: {vs:#?}");
+    assert_eq!(vs.len(), 3, "violations: {vs:#?}");
+}
+
+#[test]
+fn copies_outside_data_path_modules_are_not_flagged() {
+    let reg = fixture_registry();
+    // Same source, scanned as a module that is not in the copy rule.
+    let vs = scan_fixture("metrics/bad_copy.rs", "bad_copy.rs", &reg);
+    assert_eq!(count_rule(&vs, "copy-smell"), 0, "violations: {vs:#?}");
+}
+
+#[test]
+fn sleeping_pump_is_caught() {
+    let reg = fixture_registry();
+    let vs = scan_fixture("pump/bad_sleep.rs", "bad_sleep.rs", &reg);
+    assert_eq!(count_rule(&vs, "pump-discipline"), 1, "violations: {vs:#?}");
+    assert_eq!(vs.len(), 1, "violations: {vs:#?}");
+}
+
+#[test]
+fn unbounded_recv_in_pump_is_caught() {
+    let reg = fixture_registry();
+    let vs = scan_fixture("pump/bad_recv.rs", "bad_recv.rs", &reg);
+    // try_recv is the sanctioned shape; only the bare recv() trips.
+    assert_eq!(count_rule(&vs, "pump-discipline"), 1, "violations: {vs:#?}");
+    assert_eq!(vs.len(), 1, "violations: {vs:#?}");
+}
+
+#[test]
+fn pump_rules_only_apply_to_listed_files() {
+    let reg = fixture_registry();
+    let vs = scan_fixture("fault/bad_sleep.rs", "bad_sleep.rs", &reg);
+    assert!(vs.is_empty(), "violations: {vs:#?}");
+}
+
+#[test]
+fn uncovered_control_variant_is_caught() {
+    let reg = fixture_registry();
+    let vs = check_control(&reg, &manifest_dir()).expect("control check runs");
+    assert_eq!(vs.len(), 1, "violations: {vs:#?}");
+    assert_eq!(vs[0].rule, "control-coverage");
+    assert!(vs[0].msg.contains("Orphaned"), "msg: {}", vs[0].msg);
+    assert!(vs[0].msg.contains("orphaned"), "msg: {}", vs[0].msg);
+}
+
+#[test]
+fn good_fixture_is_clean_under_every_rule() {
+    let reg = fixture_registry();
+    // Scanned as a data-path module AND listed as a pump file, so all
+    // annotation paths are exercised at once.
+    let vs = scan_fixture("ring/good.rs", "good.rs", &reg);
+    assert!(vs.is_empty(), "violations: {vs:#?}");
+}
+
+#[test]
+fn annotations_expire_outside_the_lookback_window() {
+    let reg = fixture_registry();
+    // The annotation sits too far above the flagged call: still bad.
+    let src = r#"
+pub fn f(data: &[u8]) -> Vec<u8> {
+    // LINT: copy-ok(too far away to count)
+    let _a = 1;
+    let _b = 2;
+    let _c = 3;
+    let _d = 4;
+    data.to_vec()
+}
+"#;
+    let vs = scan_source("ring/far.rs", src, &reg);
+    assert_eq!(count_rule(&vs, "copy-smell"), 1, "violations: {vs:#?}");
+}
+
+#[test]
+fn marker_inside_string_literal_does_not_satisfy_the_rule() {
+    let reg = fixture_registry();
+    let src = r#"
+pub fn f(data: &[u8]) -> Vec<u8> {
+    let _s = "LINT: copy-ok(not a comment)";
+    data.to_vec()
+}
+"#;
+    let vs = scan_source("ring/strlit.rs", src, &reg);
+    assert_eq!(count_rule(&vs, "copy-smell"), 1, "violations: {vs:#?}");
+}
+
+/// The self-enforcing check: the real registry over the real tree.
+/// This is the satellite "the lint's first clean run is the audit",
+/// kept green forever after.
+#[test]
+fn real_tree_is_clean() {
+    let repo_root = manifest_dir().join("../..");
+    let scan_root = repo_root.join("rust/src");
+    if !scan_root.is_dir() {
+        // Packaged/vendored builds may not ship the main tree.
+        eprintln!("skipping: {} not present", scan_root.display());
+        return;
+    }
+    let text = std::fs::read_to_string(manifest_dir().join("invariants.toml"))
+        .expect("read invariants.toml");
+    let reg = Registry::from_toml(&text).expect("real registry parses");
+    let vs = run(&repo_root, &scan_root, &reg).expect("scan runs");
+    assert!(
+        vs.is_empty(),
+        "ddslint violations in rust/src:\n{}",
+        vs.iter().map(|v| v.to_string()).collect::<Vec<_>>().join("\n")
+    );
+}
+
+/// Guard the registry itself: rules that name concrete files/modules
+/// must keep pointing at things that exist, or the rule silently
+/// stops applying.
+#[test]
+fn registry_targets_exist() {
+    let repo_root = manifest_dir().join("../..");
+    let scan_root = repo_root.join("rust/src");
+    if !scan_root.is_dir() {
+        eprintln!("skipping: {} not present", scan_root.display());
+        return;
+    }
+    let text = std::fs::read_to_string(manifest_dir().join("invariants.toml"))
+        .expect("read invariants.toml");
+    let reg = Registry::from_toml(&text).expect("real registry parses");
+    for f in &reg.pump_files {
+        assert!(scan_root.join(f).is_file(), "pump_rule.files entry `{f}` does not exist");
+    }
+    for m in &reg.copy_modules {
+        let dir = scan_root.join(m);
+        let file = scan_root.join(format!("{m}.rs"));
+        assert!(dir.is_dir() || file.is_file(), "copy_rule.modules entry `{m}` does not exist");
+    }
+    let ctl = reg.control.as_ref().expect("control rule present");
+    for f in [&ctl.enum_file, &ctl.impl_file] {
+        assert!(repo_root.join(f).is_file(), "control_rule file `{f}` does not exist");
+    }
+}

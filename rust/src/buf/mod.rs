@@ -300,6 +300,7 @@ impl BufView {
 
     /// Materialize an owned copy (the explicit opposite of zero-copy).
     pub fn to_vec(&self) -> Vec<u8> {
+        // LINT: copy-ok(the explicit materialization API; callers meter)
         self.as_slice().to_vec()
     }
 
@@ -418,6 +419,7 @@ impl ByteRope {
     pub fn to_vec(&self) -> Vec<u8> {
         let mut v = Vec::with_capacity(self.len);
         for p in &self.parts {
+            // LINT: copy-ok(the explicit materialization API; callers meter)
             v.extend_from_slice(p.as_slice());
         }
         v
@@ -430,6 +432,101 @@ impl std::fmt::Debug for ByteRope {
             .field("parts", &self.parts.len())
             .field("len", &self.len)
             .finish()
+    }
+}
+
+/// Exhaustive model check of view-clone/drop vs slab reclaim
+/// (correctness plane; see DESIGN.md). `MiniSlab` is a colocated
+/// SKELETON of the [`BufView`]/[`BufPool`] lifecycle: the production
+/// refcount is `Arc`'s (the `fetch_sub(Release)` + `fence(Acquire)`
+/// drop protocol this model reproduces by hand), and the slot payload
+/// lives in a `loom::cell::UnsafeCell` so loom's cell checker can
+/// catch a recycle racing a surviving reader — untrackable on the real
+/// slab's plain byte buffers. Registered in invariants.toml as
+/// `bufview.refs`. Run with
+/// `RUSTFLAGS="--cfg loom" cargo test --release --lib loom_`.
+#[cfg(all(loom, test))]
+mod loom_models {
+    use loom::cell::UnsafeCell;
+    use loom::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::Arc;
+
+    struct MiniSlab {
+        refs: AtomicUsize,
+        slot: UnsafeCell<u64>,
+    }
+
+    // SAFETY: readers access `slot` only while holding a ref; the
+    // recycling write runs only after the last ref is released, ordered
+    // by the Release drop + Acquire fence below. loom's cell checker
+    // verifies exactly this on every interleaving.
+    unsafe impl Send for MiniSlab {}
+    unsafe impl Sync for MiniSlab {}
+
+    impl MiniSlab {
+        /// One slot, `refs` views outstanding.
+        fn new(refs: usize, v: u64) -> Arc<Self> {
+            Arc::new(MiniSlab { refs: AtomicUsize::new(refs), slot: UnsafeCell::new(v) })
+        }
+
+        fn read(&self) -> u64 {
+            self.slot.with(|p| unsafe { *p })
+        }
+
+        /// Drop one view; the last drop reclaims and scrubs the slot
+        /// (the pool's recycle). Arc's drop protocol: Release on the
+        /// decrement so every holder's reads are ordered before the
+        /// reclaim, Acquire fence so the reclaimer sees all of them.
+        fn drop_view(&self, dec_order: Ordering) {
+            if self.refs.fetch_sub(1, dec_order) == 1 {
+                loom::sync::atomic::fence(Ordering::Acquire);
+                self.slot.with_mut(|p| unsafe { *p = 0xDEAD });
+            }
+        }
+    }
+
+    /// Protocol 4 — two views dropping concurrently: exactly one
+    /// observes the final decrement and recycles, and no interleaving
+    /// lets the recycle write race a reader's access.
+    #[test]
+    fn loom_bufview_last_drop_reclaims_safely() {
+        loom::model(|| {
+            let slab = MiniSlab::new(2, 42);
+            let other = {
+                let slab = slab.clone();
+                loom::thread::spawn(move || {
+                    assert_eq!(slab.read(), 42, "live view must never see a scrubbed slot");
+                    slab.drop_view(Ordering::Release);
+                })
+            };
+            assert_eq!(slab.read(), 42, "live view must never see a scrubbed slot");
+            slab.drop_view(Ordering::Release);
+            other.join().unwrap();
+            // Whoever dropped last has scrubbed by now (join ordered).
+            assert_eq!(slab.refs.load(Ordering::Acquire), 0);
+        });
+    }
+
+    /// Mutation self-test: demote the drop decrement to Relaxed and
+    /// the loser's slot reads are no longer ordered before the
+    /// winner's recycle — loom's cell checker must flag the race and
+    /// panic. If this stops panicking, the model has gone vacuous.
+    #[test]
+    #[should_panic]
+    fn loom_bufview_mutation_relaxed_drop_races_reclaim() {
+        loom::model(|| {
+            let slab = MiniSlab::new(2, 42);
+            let other = {
+                let slab = slab.clone();
+                loom::thread::spawn(move || {
+                    let _ = slab.read();
+                    slab.drop_view(Ordering::Relaxed);
+                })
+            };
+            let _ = slab.read();
+            slab.drop_view(Ordering::Relaxed);
+            other.join().unwrap();
+        });
     }
 }
 

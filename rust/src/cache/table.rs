@@ -222,6 +222,8 @@ impl CuckooCache {
     /// only (the answer is stable while the mutex is held).
     fn free_slot(&self, bi: usize) -> Option<usize> {
         let b = &self.buckets[bi];
+        // LINT: relaxed-ok(stable read under the writer mutex; publication
+        // to readers goes through the seqlock version word)
         (0..SLOTS).find(|&s| b.keys[s].load(Ordering::Relaxed) == EMPTY)
     }
 
@@ -245,6 +247,7 @@ impl CuckooCache {
             if path.contains(&(bi, victim)) {
                 return None; // cycle
             }
+            // LINT: relaxed-ok(stable read under the writer mutex; see fn doc)
             let vk = self.buckets[bi].keys[victim].load(Ordering::Relaxed);
             debug_assert_ne!(vk, EMPTY);
             path.push((bi, victim));
@@ -263,6 +266,8 @@ impl CuckooCache {
         let (fb, fs) = from;
         let (tb, ts) = to;
         // Stable reads: write_lock is held by the caller.
+        // LINT: relaxed-ok(writer-mutex-serialized read; readers never see
+        // this value except through the Release stores below)
         let k = self.buckets[fb].keys[fs].load(Ordering::Relaxed);
         debug_assert_ne!(k, EMPTY);
         // SAFETY: serialized writer.
@@ -292,6 +297,7 @@ impl CuckooCache {
         for &bi in &[self.h1(key), self.h2(key)] {
             let b = &self.buckets[bi];
             for s in 0..SLOTS {
+                // LINT: relaxed-ok(stable read under the writer mutex)
                 if b.keys[s].load(Ordering::Relaxed) == key {
                     Self::begin_write(b);
                     // SAFETY: serialized writer, seqlock held (odd).
@@ -361,6 +367,7 @@ impl CuckooCache {
     fn try_place(&self, bi: usize, key: u64, item: CacheItem) -> bool {
         let b = &self.buckets[bi];
         for s in 0..SLOTS {
+            // LINT: relaxed-ok(stable read under the writer mutex)
             if b.keys[s].load(Ordering::Relaxed) == EMPTY {
                 Self::begin_write(b);
                 // SAFETY: serialized writer, seqlock held.
@@ -395,6 +402,7 @@ impl CuckooCache {
             let b = &self.buckets[bi];
             Self::begin_write(b);
             for s in 0..SLOTS {
+                // LINT: relaxed-ok(stable read under the writer mutex)
                 if b.keys[s].load(Ordering::Relaxed) == key {
                     b.keys[s].store(EMPTY, Ordering::Release);
                     slot_removed += 1;

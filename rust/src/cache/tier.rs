@@ -412,6 +412,122 @@ impl ReadCacheTier {
     }
 }
 
+/// Exhaustive model check of the probe/fill/invalidate epoch ticket
+/// (correctness plane; see DESIGN.md). `MiniTier` is a colocated
+/// SKELETON of [`CacheTier`]'s coherence protocol: a SeqCst epoch
+/// counter, a mutex-guarded device, and one mutex-guarded slot — the
+/// hash index, CLOCK arena, and budget machinery are orthogonal to the
+/// ordering claim and elided. The claim: because the writer commits
+/// device bytes STRICTLY BEFORE bumping the epoch, a fill whose ticket
+/// still matches at install time can only carry fresh bytes, so a hit
+/// (entry esum == current esum) never serves pre-overwrite data. Run
+/// with `RUSTFLAGS="--cfg loom" cargo test --release --lib loom_`.
+#[cfg(all(loom, test))]
+mod loom_models {
+    use loom::sync::atomic::{AtomicU64, Ordering};
+    use loom::sync::Mutex;
+    use std::sync::Arc;
+
+    const OLD: u64 = 1;
+    const NEW: u64 = 7;
+
+    struct MiniTier {
+        /// The invalidation epoch (`CacheTier::epochs`, one cell).
+        epoch: AtomicU64,
+        /// The device — `Ssd` serializes access internally, so a
+        /// mutex is the faithful model.
+        device: Mutex<u64>,
+        /// One cache slot: `(esum, bytes)` — slots are mutex-guarded
+        /// in the real tier too.
+        slot: Mutex<Option<(u64, u64)>>,
+    }
+
+    impl MiniTier {
+        fn new() -> Arc<Self> {
+            Arc::new(MiniTier {
+                epoch: AtomicU64::new(0),
+                device: Mutex::new(OLD),
+                slot: Mutex::new(None),
+            })
+        }
+
+        /// WRITE apply: commit to the device, THEN invalidate. The
+        /// order is the protocol — `invalidate`'s contract is "after
+        /// this returns ... no in-flight fill ticketed before it can
+        /// install" pre-overwrite bytes.
+        fn write_commit_then_bump(&self) {
+            *self.device.lock().unwrap() = NEW;
+            self.epoch.fetch_add(1, Ordering::SeqCst);
+        }
+
+        /// MUTATION: bump first, commit after — opens the window where
+        /// a fill ticketed AFTER the bump reads pre-overwrite bytes
+        /// yet passes the staleness re-check.
+        fn write_bump_then_commit(&self) {
+            self.epoch.fetch_add(1, Ordering::SeqCst);
+            *self.device.lock().unwrap() = NEW;
+        }
+
+        /// Miss path: take a ticket, read the device, install iff the
+        /// epoch is unchanged (`CacheTier::fill`'s stale-fill guard).
+        fn probe_miss_and_fill(&self) {
+            let esum = self.epoch.load(Ordering::SeqCst);
+            let bytes = *self.device.lock().unwrap();
+            let mut s = self.slot.lock().unwrap();
+            if self.epoch.load(Ordering::SeqCst) == esum {
+                *s = Some((esum, bytes));
+            }
+        }
+
+        /// Probe: a hit requires the entry's esum to match the CURRENT
+        /// epoch sum — stale entries fall through to a miss.
+        fn probe(&self) -> Option<u64> {
+            let esum = self.epoch.load(Ordering::SeqCst);
+            (*self.slot.lock().unwrap())
+                .and_then(|(e, b)| if e == esum { Some(b) } else { None })
+        }
+    }
+
+    fn race_fill_against(write: fn(&MiniTier)) {
+        loom::model(move || {
+            let tier = MiniTier::new();
+            let filler = {
+                let tier = tier.clone();
+                loom::thread::spawn(move || tier.probe_miss_and_fill())
+            };
+            let writer = {
+                let tier = tier.clone();
+                loom::thread::spawn(move || write(&tier))
+            };
+            filler.join().unwrap();
+            writer.join().unwrap();
+            // The coherence claim, checked on every interleaving: a
+            // post-write hit may only serve the overwrite's bytes.
+            if let Some(bytes) = tier.probe() {
+                assert_eq!(bytes, NEW, "hit served pre-overwrite bytes");
+            }
+        });
+    }
+
+    /// Protocol 5 — commit-then-bump is coherent under every
+    /// fill/invalidate interleaving.
+    #[test]
+    fn loom_tier_hit_implies_fresh_bytes() {
+        race_fill_against(MiniTier::write_commit_then_bump);
+    }
+
+    /// Mutation self-test: flip the writer's program order and there
+    /// is an interleaving where the filler tickets AFTER the bump,
+    /// reads the device BEFORE the commit, passes the re-check, and
+    /// installs stale bytes that then hit. loom must find it and
+    /// panic; if this stops panicking, the model has gone vacuous.
+    #[test]
+    #[should_panic]
+    fn loom_tier_mutation_bump_before_commit_serves_stale() {
+        race_fill_against(MiniTier::write_bump_then_commit);
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

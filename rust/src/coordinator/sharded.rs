@@ -414,6 +414,8 @@ fn drain_on_exit<A: HostApp>(
         if shard.in_flight() == 0 || Instant::now() >= deadline {
             return;
         }
+        // LINT: sleep-ok(bounded shutdown drain off the hot path; the loop
+        // is deadline-capped just above)
         std::thread::sleep(Duration::from_micros(100));
     }
 }

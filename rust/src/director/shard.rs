@@ -567,6 +567,7 @@ impl DirectorShard {
 
     /// Per-tenant counter table (indexed by tenant id).
     pub fn tenant_counters(&self) -> Vec<TenantCounters> {
+        // LINT: copy-ok(stats snapshot of u64 counter structs, not payload)
         self.plane.counters().to_vec()
     }
 
@@ -574,6 +575,7 @@ impl DirectorShard {
     /// `out` and copies the current table into it.
     pub fn publish_tenant_counters(&self, out: &mut Vec<TenantCounters>) {
         out.clear();
+        // LINT: copy-ok(stats snapshot of u64 counter structs, not payload)
         out.extend_from_slice(self.plane.counters());
     }
 

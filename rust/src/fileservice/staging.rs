@@ -163,6 +163,7 @@ impl OrderedStaging {
         let src: BufView = if extra_copy && !data.is_empty() {
             BufView::copy_of(&self.pool, data.as_slice())
         } else {
+            // LINT: copy-ok(BufView clone is a refcount bump, not a byte copy)
             data.clone()
         };
         if !src.is_empty() && s.expected_payload > 0 {

@@ -25,8 +25,21 @@
 //! iteration-denominated machinery (pending timeouts, delayed
 //! completions) keeps aging while the pump naps.
 
+// Under `--cfg loom` the doorbell's synchronization primitives come
+// from loom so the Dekker protocol below can be model-checked
+// exhaustively (see `loom_models`). `Arc` stays std either way: loom
+// does not model the refcount, and keeping the handle type stable
+// means every `Arc<Doorbell>` field across the crate compiles
+// unchanged under both cfgs.
+#[cfg(loom)]
+use loom::sync::atomic::{AtomicU64, Ordering};
+#[cfg(loom)]
+use loom::sync::{Condvar, Mutex};
+#[cfg(not(loom))]
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{mpsc, Arc, Condvar, Mutex};
+#[cfg(not(loom))]
+use std::sync::{Condvar, Mutex};
+use std::sync::{mpsc, Arc};
 use std::time::{Duration, Instant};
 
 use crate::metrics::CpuLedger;
@@ -38,7 +51,7 @@ use crate::metrics::CpuLedger;
 /// The sequence lives in an atomic so the producer-side `ring` is a
 /// single `fetch_add` on the data path; the mutex + condvar are only
 /// touched when a waiter is actually registered.
-#[derive(Default)]
+#[cfg_attr(not(loom), derive(Default))]
 pub struct Doorbell {
     seq: AtomicU64,
     /// Registered waiters; a producer only takes the lock to notify
@@ -46,6 +59,20 @@ pub struct Doorbell {
     sleepers: AtomicU64,
     lock: Mutex<()>,
     cv: Condvar,
+}
+
+// loom's primitives do not all derive Default; build the zero state by
+// hand under the model cfg.
+#[cfg(loom)]
+impl Default for Doorbell {
+    fn default() -> Self {
+        Doorbell {
+            seq: AtomicU64::new(0),
+            sleepers: AtomicU64::new(0),
+            lock: Mutex::new(()),
+            cv: Condvar::new(),
+        }
+    }
 }
 
 impl Doorbell {
@@ -85,6 +112,7 @@ impl Doorbell {
     /// wakeup has us near the timeout boundary must still report as a
     /// wake, and a spurious wakeup alone must never report one. The
     /// sequence is the ground truth; the timeout flag is not.
+    #[cfg(not(loom))]
     pub fn wait(&self, seen: u64, timeout: Duration) -> bool {
         if self.seq.load(Ordering::SeqCst) > seen {
             return true;
@@ -110,6 +138,117 @@ impl Doorbell {
         self.sleepers.fetch_sub(1, Ordering::SeqCst);
         drop(g);
         woke
+    }
+
+    /// Model-checked `wait`: same registration protocol, but the park
+    /// is UNBOUNDED — under loom, wall-clock timeouts are meaningless
+    /// and, crucially, removing the timeout escape hatch turns a lost
+    /// wakeup into a deadlock that loom's scheduler detects and
+    /// reports. The signature stays identical so every caller compiles
+    /// under both cfgs.
+    #[cfg(loom)]
+    pub fn wait(&self, seen: u64, _timeout: Duration) -> bool {
+        if self.seq.load(Ordering::SeqCst) > seen {
+            return true;
+        }
+        let mut g = self.lock.lock().unwrap();
+        self.sleepers.fetch_add(1, Ordering::SeqCst);
+        // Re-check AFTER registering — the load the Dekker pair exists
+        // to make correct (see the non-loom body).
+        while self.seq.load(Ordering::SeqCst) <= seen {
+            g = self.cv.wait(g).unwrap();
+        }
+        self.sleepers.fetch_sub(1, Ordering::SeqCst);
+        drop(g);
+        true
+    }
+
+    /// MUTATION SELF-TEST HOOK: `ring` with the Dekker pair demoted to
+    /// Relaxed. Exists only under loom so
+    /// `loom_doorbell_mutation_relaxed_ring_hangs` can prove the model
+    /// is non-vacuous — this ordering loses wakeups, and loom catches
+    /// it. Never compiled into production builds.
+    #[cfg(loom)]
+    pub(crate) fn ring_relaxed(&self) {
+        self.seq.fetch_add(1, Ordering::Relaxed);
+        if self.sleepers.load(Ordering::Relaxed) > 0 {
+            let _g = self.lock.lock().unwrap();
+            self.cv.notify_all();
+        }
+    }
+}
+
+/// Exhaustive model checks of the doorbell's producer-races-park
+/// protocol (correctness plane; see DESIGN.md). Run with
+/// `RUSTFLAGS="--cfg loom" cargo test --release --lib loom_`.
+#[cfg(all(loom, test))]
+mod loom_models {
+    use super::Doorbell;
+    use std::time::Duration;
+
+    /// Protocol 1 — producer-races-park. The consumer snapshots the
+    /// sequence, finds no work, and parks; the producer publishes and
+    /// rings concurrently. Every interleaving must wake the consumer:
+    /// under loom the park is unbounded, so a lost wakeup is a
+    /// deadlock, and loom reports it.
+    #[test]
+    fn loom_doorbell_no_lost_wakeup() {
+        loom::model(|| {
+            let bell = Doorbell::new();
+            let seen = bell.seq();
+            let producer = {
+                let bell = bell.clone();
+                loom::thread::spawn(move || bell.ring())
+            };
+            // Snapshot-then-park: the ring may land before, during, or
+            // after registration — all three windows are explored.
+            let woke = bell.wait(seen, Duration::from_millis(1));
+            assert!(woke, "wait must observe the ring");
+            assert!(bell.seq() > seen);
+            producer.join().unwrap();
+        });
+    }
+
+    /// Two producers, one parked consumer: the batched notify (one
+    /// lock + notify_all per ring) must still never strand the waiter.
+    #[test]
+    fn loom_doorbell_two_producers() {
+        loom::model(|| {
+            let bell = Doorbell::new();
+            let seen = bell.seq();
+            let p1 = {
+                let bell = bell.clone();
+                loom::thread::spawn(move || bell.ring())
+            };
+            let p2 = {
+                let bell = bell.clone();
+                loom::thread::spawn(move || bell.ring())
+            };
+            assert!(bell.wait(seen, Duration::from_millis(1)));
+            p1.join().unwrap();
+            p2.join().unwrap();
+        });
+    }
+
+    /// Mutation self-test: with the ring's Dekker pair demoted to
+    /// Relaxed (`ring_relaxed`), there is an interleaving where the
+    /// producer reads `sleepers == 0` (skips the notify) while the
+    /// consumer's post-registration re-check reads the stale sequence
+    /// (parks forever) — the lost wakeup. loom must find it and panic;
+    /// if this test ever stops panicking, the model has gone vacuous.
+    #[test]
+    #[should_panic]
+    fn loom_doorbell_mutation_relaxed_ring_hangs() {
+        loom::model(|| {
+            let bell = Doorbell::new();
+            let seen = bell.seq();
+            let producer = {
+                let bell = bell.clone();
+                loom::thread::spawn(move || bell.ring_relaxed())
+            };
+            bell.wait(seen, Duration::from_millis(1));
+            producer.join().unwrap();
+        });
     }
 }
 
@@ -392,6 +531,9 @@ impl IdleGovernor {
                     Rung::Park(timeout) => {
                         self.flush_busy();
                         let t0 = Instant::now();
+                        // LINT: sleep-ok(bounded nap capped at NAP_CAP —
+                        // completions have no doorbell into this pump, and
+                        // the park is accounted to the governor below)
                         std::thread::sleep(timeout.min(NAP_CAP));
                         self.account_park(t0.elapsed(), false);
                     }
@@ -401,7 +543,9 @@ impl IdleGovernor {
     }
 }
 
-#[cfg(test)]
+// Wall-clock tests are meaningless (and these would hang) under the
+// model scheduler; loom builds run only the `loom_models` mod above.
+#[cfg(all(test, not(loom)))]
 mod tests {
     use super::*;
 

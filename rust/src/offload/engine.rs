@@ -449,6 +449,7 @@ impl OffloadEngine {
                         // (metered — this is what Fig 23 measures).
                         self.pool.ledger().count_heap_alloc();
                         self.pool.ledger().count_copy(base.len());
+                        // LINT: copy-ok(deliberate ablation copy, metered above)
                         BufView::from_vec(base.to_vec())
                     } else {
                         base

@@ -81,6 +81,8 @@ impl FileRequest {
     /// Owned-copy decode (host-local paths, tests): stages `buf` and
     /// delegates to [`Self::decode_view`] — one parser, one layout.
     pub fn decode(buf: &[u8]) -> Option<Self> {
+        // LINT: copy-ok(owned-copy decode is the host-local/test
+        // convenience; the zero-copy parser is decode_view below)
         Self::decode_view(&BufView::from_vec(buf.to_vec()))
     }
 
@@ -152,6 +154,8 @@ impl FileResponse {
     /// the vectored delivery path uses — one layout) + payload.
     pub fn encode(&self) -> Vec<u8> {
         let mut v = Vec::with_capacity(Self::HEADER_LEN + self.data.len());
+        // LINT: copy-ok(contiguous owned encode for host-local paths; the
+        // DPU delivery path is vectored — encode_header + payload view)
         v.extend_from_slice(&Self::encode_header(self.req_id, self.status, self.data.len()));
         v.extend_from_slice(&self.data);
         v
@@ -167,6 +171,8 @@ impl FileResponse {
             _ => return None,
         };
         let dlen = r.u32()? as usize;
+        // LINT: copy-ok(owned decode at the host API boundary; the payload
+        // leaves the ring here by design)
         let data = r.take(dlen)?.to_vec();
         Some(FileResponse { req_id, status, data })
     }
@@ -255,6 +261,8 @@ impl AppRequest {
                 let file_id = r.u32()?;
                 let offset = r.u64()?;
                 let n = r.u32()? as usize;
+                // LINT: copy-ok(owned decode into the AppRequest value; the
+                // request payload leaves the stream buffer here by design)
                 AppRequest::Write { file_id, offset, data: r.take(n)?.to_vec() }
             }
             2 => AppRequest::GetPage { page_id: r.u64()?, lsn: r.u64()? },
@@ -262,6 +270,7 @@ impl AppRequest {
             4 => {
                 let key = r.u64()?;
                 let n = r.u32()? as usize;
+                // LINT: copy-ok(owned decode, as for Write above)
                 AppRequest::KvUpsert { key, value: r.take(n)?.to_vec() }
             }
             _ => return None,
@@ -340,6 +349,8 @@ impl NetResp {
     pub fn encode(&self) -> Vec<u8> {
         let h = self.frame_header();
         let mut v = Vec::with_capacity(Self::HEADER_LEN + self.payload.len());
+        // LINT: copy-ok(contiguous owned encode for host-local/test paths;
+        // the wire path is frame_into_rope, which never copies the payload)
         v.extend_from_slice(&h[4..]);
         v.extend_from_slice(&self.payload);
         v
@@ -349,6 +360,8 @@ impl NetResp {
     /// without copying the payload — byte-identical to
     /// `framing::write_frame(out, &self.encode())`.
     pub fn frame_into_rope(self, rope: &mut ByteRope) {
+        // LINT: copy-ok(19-byte fixed header materialized once; the payload
+        // itself rides as a refcounted view)
         rope.push(BufView::from_vec(self.frame_header().to_vec()));
         rope.push(self.payload);
     }
@@ -363,6 +376,7 @@ impl NetResp {
             msg_id,
             idx,
             status,
+            // LINT: copy-ok(owned decode at the client API boundary)
             payload: BufView::from_vec(r.take(n)?.to_vec()),
         })
     }
@@ -372,6 +386,8 @@ impl NetResp {
 pub mod framing {
     /// Append one frame to `out`.
     pub fn write_frame(out: &mut Vec<u8>, frame: &[u8]) {
+        // LINT: copy-ok(owned framing helper for host-local/test paths; the
+        // zero-copy send path frames via NetResp::frame_into_rope)
         out.extend_from_slice(&(frame.len() as u32).to_le_bytes());
         out.extend_from_slice(frame);
     }
@@ -386,6 +402,7 @@ pub mod framing {
         if buf.len() < 4 + len {
             return None;
         }
+        // LINT: copy-ok(owned framing helper; see write_frame)
         let frame = buf[4..4 + len].to_vec();
         buf.drain(..4 + len);
         Some(frame)
@@ -406,6 +423,8 @@ pub mod framing {
         }
 
         pub fn extend(&mut self, bytes: &[u8]) {
+            // LINT: copy-ok(receive-side reassembly ingest from a borrowed
+            // socket buffer; the metered path is extend_rope below)
             self.buf.extend_from_slice(bytes);
         }
 
@@ -420,6 +439,8 @@ pub mod framing {
             }
             ledger.count_copy(rope.len());
             for part in rope.parts() {
+                // LINT: copy-ok(THE metered materialization point — counted
+                // on the ledger just above)
                 self.buf.extend_from_slice(part.as_slice());
             }
         }
@@ -444,6 +465,9 @@ pub mod framing {
                 self.maybe_compact();
                 return None;
             }
+            // LINT: copy-ok(frame extraction from the reassembly buffer —
+            // the cursor-based StreamBuf already avoids the memmove; the
+            // extracted frame must own its bytes past the next extend)
             let frame = avail[4..4 + len].to_vec();
             self.pos += 4 + len;
             self.maybe_compact();

@@ -32,21 +32,26 @@ impl Writer {
 
     #[inline]
     pub fn u16(&mut self, v: u16) {
+        // LINT: copy-ok(fixed-width header field serialization)
         self.0.extend_from_slice(&v.to_le_bytes());
     }
 
     #[inline]
     pub fn u32(&mut self, v: u32) {
+        // LINT: copy-ok(fixed-width header field serialization)
         self.0.extend_from_slice(&v.to_le_bytes());
     }
 
     #[inline]
     pub fn u64(&mut self, v: u64) {
+        // LINT: copy-ok(fixed-width header field serialization)
         self.0.extend_from_slice(&v.to_le_bytes());
     }
 
     #[inline]
     pub fn bytes(&mut self, b: &[u8]) {
+        // LINT: copy-ok(owned-Vec Writer IS the copying codec family; the
+        // zero-copy encode path is PooledWriter — see module doc)
         self.0.extend_from_slice(b);
     }
 

@@ -59,6 +59,8 @@ impl FarmRing {
     /// Consume up to one message through the DMA channel (poll → read →
     /// release). Returns messages consumed (0 or 1).
     pub fn pop_one_dma(&self, dma: &DmaChannel, f: &mut dyn FnMut(&[u8])) -> usize {
+        // LINT: relaxed-ok(single consumer owns head; payload visibility
+        // comes from the hdr Acquire load below, not from head)
         let head = self.head.0.load(Ordering::Relaxed);
         let slot = &self.slots[(head & self.mask()) as usize];
         // Poll the flag: costs a DMA read whether or not it is set.
@@ -75,6 +77,8 @@ impl FarmRing {
         // Release: clear the flag with a DMA write.
         dma.op(DmaDir::Write, 8);
         slot.hdr.store(0, Ordering::Release);
+        // LINT: relaxed-ok(single consumer owns head; producers gate on the
+        // hdr Release clear above, head is only a cursor)
         self.head.0.store(head + 1, Ordering::Relaxed);
         1
     }
@@ -96,6 +100,7 @@ impl RequestRing for FarmRing {
                 // Slot not yet released by the consumer.
                 return RingStatus::Retry;
             }
+            // LINT: relaxed-ok(CAS failure ordering; the retry re-loads with Acquire)
             if self
                 .tail
                 .0
@@ -157,11 +162,14 @@ mod tests {
     #[test]
     fn mpsc_roundtrip() {
         let r = Arc::new(FarmRing::new(256, 16));
+        // Shrunk under Miri: the 4-producer claim race over a tiny
+        // (256-slot) farm is the shape; volume just repeats it.
+        let per = if cfg!(miri) { 50u64 } else { 1000u64 };
         let mut handles = Vec::new();
         for p in 0..4u64 {
             let r = r.clone();
             handles.push(std::thread::spawn(move || {
-                for i in 0..1000u64 {
+                for i in 0..per {
                     let v = p << 32 | i;
                     while r.try_push(&v.to_le_bytes()) != RingStatus::Ok {
                         std::hint::spin_loop();
@@ -174,7 +182,7 @@ mod tests {
             std::thread::spawn(move || {
                 let mut total = 0;
                 let mut seen = [0u64; 4];
-                while total < 4000 {
+                while (total as u64) < 4 * per {
                     total += r.pop_batch(&mut |m| {
                         let v = u64::from_le_bytes(m.try_into().unwrap());
                         let p = (v >> 32) as usize;
@@ -182,12 +190,12 @@ mod tests {
                         seen[p] += 1;
                     });
                 }
-                total
+                total as u64
             })
         };
         for h in handles {
             h.join().unwrap();
         }
-        assert_eq!(consumer.join().unwrap(), 4000);
+        assert_eq!(consumer.join().unwrap(), 4 * per);
     }
 }

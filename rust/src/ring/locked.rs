@@ -28,6 +28,8 @@ impl RequestRing for LockedRing {
         if q.len() >= self.capacity {
             return RingStatus::Retry;
         }
+        // LINT: copy-ok(lock-based BASELINE ring — the copy is the point of
+        // the §8.5 comparison; the zero-copy path is ProgressRing)
         q.push_back(msg.to_vec());
         RingStatus::Ok
     }
@@ -75,11 +77,13 @@ mod tests {
     #[test]
     fn concurrent_producers() {
         let r = Arc::new(LockedRing::new(1 << 14));
+        // Shrunk under Miri — lock-contention shape over volume.
+        let per = if cfg!(miri) { 50u32 } else { 1000u32 };
         let mut handles = Vec::new();
         for _ in 0..8 {
             let r = r.clone();
             handles.push(std::thread::spawn(move || {
-                for i in 0..1000u32 {
+                for i in 0..per {
                     while r.try_push(&i.to_le_bytes()) != RingStatus::Ok {}
                 }
             }));
@@ -87,8 +91,8 @@ mod tests {
         let consumer = {
             let r = r.clone();
             std::thread::spawn(move || {
-                let mut total = 0;
-                while total < 8000 {
+                let mut total = 0usize;
+                while total < 8 * per as usize {
                     total += r.pop_batch(&mut |_| {});
                 }
                 total
@@ -97,6 +101,6 @@ mod tests {
         for h in handles {
             h.join().unwrap();
         }
-        assert_eq!(consumer.join().unwrap(), 8000);
+        assert_eq!(consumer.join().unwrap(), 8 * per as usize);
     }
 }

@@ -128,6 +128,7 @@ impl ProgressRing {
                 return RingStatus::Retry;
             }
             // Fig 8a line 4: IncTail(N) — reserve.
+            // LINT: relaxed-ok(CAS failure ordering; the retry re-loads with Acquire)
             if self
                 .tail
                 .0
@@ -142,6 +143,7 @@ impl ProgressRing {
             self.write_bytes(tail + 4, msg);
             // Fig 8a line 6: IncProg(N) — publish in order. CAS spins
             // until progress reaches our start.
+            // LINT: relaxed-ok(CAS failure ordering on the publish spin — failures only spin)
             while self
                 .progress
                 .0
@@ -365,7 +367,10 @@ mod tests {
     fn mpsc_no_loss_no_dup() {
         let r = Arc::new(ProgressRing::new(1 << 16, 1 << 12));
         let producers = 8;
-        let per = 5_000u64;
+        // Miri's interpreter pays ~1000x per instruction; keep the
+        // interleaving shape (8 producers racing one batch consumer)
+        // but shrink the volume so the aliasing/UB check stays tractable.
+        let per = if cfg!(miri) { 50u64 } else { 5_000u64 };
         let stop = Arc::new(AtomicBool::new(false));
         let mut handles = Vec::new();
         for p in 0..producers {

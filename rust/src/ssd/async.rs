@@ -122,12 +122,17 @@ fn publish_burst(
 ) {
     if !held.is_empty() {
         let mut d = delayed.lock().unwrap();
+        // LINT: relaxed-ok(bump under the delayed mutex, before the ring;
+        // proven by ssd::async loom_models — see loom_ssd_fastpath_sound)
         delayed_len.fetch_add(held.len(), Ordering::Relaxed);
         d.extend(held);
     }
     if !ready.is_empty() {
         {
             let mut q = completions.lock().unwrap();
+            // LINT: relaxed-ok(bump under the queue mutex, strictly before
+            // the SeqCst doorbell ring below: a woken consumer's Relaxed
+            // read is ordered by the ring edge — loom_ssd_fastpath_sound)
             comp_len.fetch_add(ready.len(), Ordering::Relaxed);
             q.extend(ready);
         }
@@ -277,6 +282,8 @@ impl AsyncSsd {
                 // blocking recv — that is fine because shutdown wakes
                 // it through the channel itself (sender drop), never
                 // by trying to take the mutex.
+                // LINT: recv-ok(worker thread, not a pump loop; unblocked by
+                // sender drop on shutdown)
                 let job = { rx.lock().unwrap().recv() };
                 match job {
                     Ok(Job::One(JobEntry { tag, op, fault })) => {
@@ -365,10 +372,13 @@ impl AsyncSsd {
             if let Some(completion) = run_op(ssd, self.read_pool.get(), tag, op, fault) {
                 if let Some(SsdFault::Delay(polls)) = fault {
                     let mut d = self.delayed.lock().unwrap();
+                    // LINT: relaxed-ok(inline mode: submitter IS the poller,
+                    // same-thread program order suffices)
                     self.delayed_len.fetch_add(1, Ordering::Relaxed);
                     d.push((polls, completion));
                 } else {
                     let mut q = self.completions.lock().unwrap();
+                    // LINT: relaxed-ok(inline mode: submitter IS the poller)
                     self.comp_len.fetch_add(1, Ordering::Relaxed);
                     q.push_back(completion);
                 }
@@ -454,6 +464,8 @@ impl AsyncSsd {
             }
         });
         if released > 0 {
+            // LINT: relaxed-ok(both mutexes held; only the polling thread
+            // calls age_delayed, and its own later reads are program-ordered)
             self.comp_len.fetch_add(released, Ordering::Relaxed);
             self.delayed_len.fetch_sub(released, Ordering::Relaxed);
         }
@@ -477,9 +489,20 @@ impl AsyncSsd {
     /// counter before ringing the doorbell, and the woken consumer's
     /// next poll sees it.
     pub fn poll_into(&self, out: &mut Vec<Completion>, max: usize) -> usize {
+        // Emptiness FAST PATH. Sound under the snapshot-seq-before-scan
+        // discipline: a pump snapshots the SeqCst doorbell seq BEFORE
+        // these loads, so if a producer's bump (made under the mutex,
+        // before its SeqCst ring) is missed here, the ring bumps seq and
+        // the pump's wait() returns immediately; the re-poll then sees
+        // the counter. Model-checked exhaustively in this file's
+        // loom_models: loom_ssd_fastpath_sound proves it,
+        // loom_ssd_fastpath_mutation_hangs shows bump-after-ring loses
+        // the wakeup.
+        // LINT: relaxed-ok(fast path; see soundness argument above)
         if self.delayed_len.load(Ordering::Relaxed) > 0 {
             self.age_delayed();
         }
+        // LINT: relaxed-ok(fast path; see soundness argument above)
         if self.comp_len.load(Ordering::Relaxed) == 0 {
             return 0;
         }
@@ -488,6 +511,7 @@ impl AsyncSsd {
         let n = q.len().min(max);
         if n > 0 {
             self.polled.fetch_add(n as u64, Ordering::Relaxed);
+            // LINT: relaxed-ok(drain-side decrement under the queue mutex)
             self.comp_len.fetch_sub(n, Ordering::Relaxed);
             out.extend(q.drain(..n));
         }
@@ -541,7 +565,93 @@ impl Drop for AsyncSsd {
     }
 }
 
-#[cfg(test)]
+/// Exhaustive model check of the emptiness fast path (correctness
+/// plane; see DESIGN.md). This is a colocated protocol SKELETON, not
+/// the full `AsyncSsd`: it reproduces exactly the ordering that makes
+/// the fast path sound — Relaxed counter bump strictly before the
+/// SeqCst doorbell ring on the producer side, doorbell-seq snapshot
+/// strictly before the Relaxed counter scan on the consumer side —
+/// with the real [`Doorbell`] in the middle. Run with
+/// `RUSTFLAGS="--cfg loom" cargo test --release --lib loom_`.
+#[cfg(all(loom, test))]
+mod loom_models {
+    use crate::idle::Doorbell;
+    use loom::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::Arc;
+    use std::time::Duration;
+
+    /// Protocol 2 — snapshot-seq-before-scan. The producer publishes
+    /// (Relaxed bump) then rings (SeqCst); the consumer snapshots the
+    /// doorbell sequence, scans the Relaxed counter, and parks on a
+    /// miss. The claim `poll_into` relies on: a missed bump implies the
+    /// ring lands after the snapshot, so the park returns immediately
+    /// and the re-scan — ordered after a SeqCst read of the advanced
+    /// sequence — must see the bump. Every interleaving terminates with
+    /// the completion observed; a lost wakeup would deadlock the
+    /// unbounded loom park.
+    #[test]
+    fn loom_ssd_fastpath_sound() {
+        loom::model(|| {
+            let counter = Arc::new(AtomicUsize::new(0));
+            let bell = Doorbell::new();
+            let producer = {
+                let counter = counter.clone();
+                let bell = bell.clone();
+                loom::thread::spawn(move || {
+                    // publish_burst's order: bump under the (elided)
+                    // queue lock, THEN ring.
+                    counter.fetch_add(1, Ordering::Relaxed);
+                    bell.ring();
+                })
+            };
+            // The consumer pump: snapshot seq BEFORE the scan.
+            let mut polls = 0;
+            loop {
+                let seen = bell.seq();
+                if counter.load(Ordering::Relaxed) > 0 {
+                    break;
+                }
+                polls += 1;
+                assert!(polls <= 2, "woken pump must see the bump on its re-poll");
+                bell.wait(seen, Duration::from_millis(1));
+            }
+            producer.join().unwrap();
+        });
+    }
+
+    /// Mutation self-test: flip the producer's program order — ring
+    /// BEFORE bump — and the discipline collapses: the consumer can
+    /// snapshot the already-rung sequence, scan the not-yet-bumped
+    /// counter, and park with no further ring coming. loom must find
+    /// that interleaving and report the deadlock; if this stops
+    /// panicking, `loom_ssd_fastpath_sound` has gone vacuous.
+    #[test]
+    #[should_panic]
+    fn loom_ssd_fastpath_mutation_hangs() {
+        loom::model(|| {
+            let counter = Arc::new(AtomicUsize::new(0));
+            let bell = Doorbell::new();
+            let producer = {
+                let counter = counter.clone();
+                let bell = bell.clone();
+                loom::thread::spawn(move || {
+                    bell.ring(); // MUTATION: ring before the bump
+                    counter.fetch_add(1, Ordering::Relaxed);
+                })
+            };
+            loop {
+                let seen = bell.seq();
+                if counter.load(Ordering::Relaxed) > 0 {
+                    break;
+                }
+                bell.wait(seen, Duration::from_millis(1));
+            }
+            producer.join().unwrap();
+        });
+    }
+}
+
+#[cfg(all(test, not(loom)))]
 mod tests {
     use super::*;
 
@@ -991,6 +1101,38 @@ mod tests {
             locks_after_drain,
             "idle polls must not acquire the completion mutex"
         );
+    }
+
+    /// Regression (correctness plane): the Relaxed emptiness fast path
+    /// must never make a woken pump poll-and-miss. A pump that
+    /// snapshots the doorbell seq before scanning and is then woken by
+    /// the ring must observe the completion on its VERY NEXT
+    /// `poll_into` — the producer bumps `comp_len` before its SeqCst
+    /// ring, and the pump's SeqCst read of the advanced sequence orders
+    /// the Relaxed counter read after the bump
+    /// (`loom_ssd_fastpath_sound` proves this exhaustively; this test
+    /// pins the real `AsyncSsd` to the modeled discipline).
+    #[test]
+    fn woken_poll_sees_completion_without_retry() {
+        let ssd = Arc::new(Ssd::new(1 << 20, 512));
+        let aio = AsyncSsd::new(ssd, 2);
+        let bell = Doorbell::new();
+        aio.attach_waker(bell.clone());
+        let mut out = Vec::new();
+        for round in 0..200u64 {
+            // Pump discipline: snapshot, scan (empty), park, re-poll.
+            let seen = bell.seq();
+            out.clear();
+            assert_eq!(aio.poll_into(&mut out, 16), 0, "round {round}: queue not drained");
+            aio.submit(round, SsdOp::Write { addr: 0, data: vec![1u8; 512].into() });
+            assert!(bell.wait(seen, std::time::Duration::from_secs(5)));
+            assert_eq!(
+                aio.poll_into(&mut out, 16),
+                1,
+                "round {round}: woken pump fast-pathed past its completion"
+            );
+            assert_eq!(out[0].tag, round);
+        }
     }
 
     /// Regression: an error completion must never expose a recycled
